@@ -1,0 +1,73 @@
+//! End-to-end driver (the repo's E2E validation workload).
+//!
+//! Simulates an HPC output pipeline: a climate simulation produces
+//! CESM-like files; the L3 coordinator stream-compresses them with
+//! bounded memory on one "device" (the XLA/PJRT pipeline — the paper's
+//! GPU analogue), they are decompressed on the *other* device (native
+//! rust — the CPU), and every file is verified against the bound.
+//! Cross-device compression/decompression is exactly the scenario the
+//! paper's parity fixes exist for.
+//!
+//! Run: make artifacts && cargo run --release --example climate_pipeline
+
+use lc::coordinator::{compress_stream, decompress, EngineConfig, DEFAULT_QUEUE_DEPTH};
+use lc::data::Suite;
+use lc::runtime::{default_artifact_dir, PjrtService};
+use lc::types::{Device, ErrorBound};
+
+fn main() -> anyhow::Result<()> {
+    let eb = 1e-3f32;
+    let n_per_file = 1 << 21; // 8 MiB per file
+    let files = 4;
+
+    let svc = PjrtService::start(&default_artifact_dir())?;
+    println!("PJRT platform: {}", svc.handle().platform()?);
+
+    // Compressor runs on the PJRT pipeline (the "GPU").
+    let mut comp_cfg = EngineConfig::pjrt(ErrorBound::Abs(eb), svc.handle());
+    comp_cfg.workers = 4;
+    // Decompressor runs natively (the "CPU").
+    let decomp_cfg = EngineConfig::native(ErrorBound::Abs(eb));
+
+    let mut total_in = 0usize;
+    let mut total_out = 0usize;
+    let t0 = std::time::Instant::now();
+    for f in 0..files {
+        let data = Suite::Cesm.generate(f, n_per_file);
+        let bytes: Vec<u8> = data.iter().flat_map(|v| v.to_le_bytes()).collect();
+
+        // Stream-compress with bounded in-flight memory (backpressure).
+        let mut compressed = Vec::new();
+        let stats = compress_stream(
+            &comp_cfg,
+            DEFAULT_QUEUE_DEPTH,
+            bytes.as_slice(),
+            &mut compressed,
+        )?;
+        total_in += stats.input_bytes;
+        total_out += stats.output_bytes;
+
+        // Cross-device decompress + verify.
+        let container = lc::container::Container::from_bytes(&compressed)
+            .map_err(anyhow::Error::msg)?;
+        let (recon, _) = decompress(&decomp_cfg, &container)?;
+        let violations = lc::verify::metrics::abs_violations(&data, &recon, eb);
+        assert_eq!(violations, 0, "file {f}: bound violated");
+        println!(
+            "file {f}: ratio {:.2}x  outliers {:.3}%  compress {:.3} GB/s  bound OK",
+            stats.ratio(),
+            stats.outlier_fraction() * 100.0,
+            stats.throughput_gbs()
+        );
+    }
+    let wall = t0.elapsed();
+    println!(
+        "pipeline done: {} files, {:.1} MiB -> {:.1} MiB (ratio {:.2}x) in {:.2}s",
+        files,
+        total_in as f64 / (1 << 20) as f64,
+        total_out as f64 / (1 << 20) as f64,
+        total_in as f64 / total_out as f64,
+        wall.as_secs_f64()
+    );
+    Ok(())
+}

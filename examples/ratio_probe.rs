@@ -1,0 +1,35 @@
+//! Calibration probe: per-suite geomean ratios (ABS/REL, eb=1e-3 as in
+//! the paper) plus Table 9 rounding-affected avg/max over the suite's
+//! file count. Not part of the published example set.
+use lc::coordinator::{compress, EngineConfig};
+use lc::data::Suite;
+use lc::quantizer::abs::{rounding_affected, AbsParams};
+use lc::types::ErrorBound;
+
+fn main() {
+    let n = 1 << 19;
+    println!("{:8} {:>8} {:>8} {:>8} {:>8}", "suite", "ABS", "REL", "aff-avg%", "aff-max%");
+    for s in Suite::ALL {
+        let files = s.file_count().min(8);
+        let (mut la, mut lr) = (0.0f64, 0.0f64);
+        let (mut aa, mut am) = (0.0f64, 0.0f64);
+        for f in 0..files {
+            let x = s.generate(f, n);
+            let (_, st_a) = compress(&EngineConfig::native(ErrorBound::Abs(1e-3)), &x).unwrap();
+            let (_, st_r) = compress(&EngineConfig::native(ErrorBound::Rel(1e-3)), &x).unwrap();
+            la += st_a.ratio().ln();
+            lr += st_r.ratio().ln();
+            let a = rounding_affected(&x, AbsParams::new(1e-3)) as f64 / n as f64 * 100.0;
+            aa += a;
+            am = am.max(a);
+        }
+        println!(
+            "{:8} {:8.2} {:8.2} {:8.3} {:8.3}",
+            s.name(),
+            (la / files as f64).exp(),
+            (lr / files as f64).exp(),
+            aa / files as f64,
+            am
+        );
+    }
+}

@@ -1,0 +1,75 @@
+//! Special values and the double check: a tour of Section 2/3.
+//!
+//! Shows (1) INF/NaN/denormals surviving compression losslessly,
+//! (2) the unprotected quantizer genuinely violating the bound on
+//! bin-boundary values, and (3) the std::abs(INT_MIN) class of edge
+//! case handled by the two-comparison range check.
+//!
+//! Run: cargo run --release --example special_values
+
+use lc::quantizer::abs::{dequantize, quantize, rounding_affected, AbsParams};
+use lc::types::Protection::{Protected, Unprotected};
+
+fn main() {
+    let eb = 1e-3f32;
+    let p = AbsParams::new(eb);
+
+    // 1. Specials are preserved exactly.
+    let specials = [
+        f32::INFINITY,
+        f32::NEG_INFINITY,
+        f32::NAN,
+        -0.0,
+        f32::from_bits(1),
+        f32::MAX,
+    ];
+    let q = quantize(&specials, p, Protected);
+    let y = dequantize(&q, p);
+    for (a, b) in specials.iter().zip(&y) {
+        let ok = if a.is_nan() {
+            b.is_nan()
+        } else if !a.is_finite() || a.abs() > 1e30 {
+            a.to_bits() == b.to_bits()
+        } else {
+            ((*a as f64) - (*b as f64)).abs() <= eb as f64
+        };
+        println!("{a:>12e} -> {b:>12e}  {}", if ok { "OK" } else { "BROKEN" });
+        assert!(ok);
+    }
+
+    // 2. The double check at work: values parked at bin boundaries.
+    let bait: Vec<f32> = (1..2_000_000u32)
+        .map(|k| ((k as f64 + 0.5) * 2.0 * eb as f64) as f32)
+        .collect();
+    let affected = rounding_affected(&bait, p);
+    println!(
+        "\n{} of {} boundary values ({:.2}%) fail the double check and are stored losslessly",
+        affected,
+        bait.len(),
+        affected as f64 / bait.len() as f64 * 100.0
+    );
+
+    let qp = quantize(&bait, p, Protected);
+    let yp = dequantize(&qp, p);
+    let viol_p = lc::verify::metrics::abs_violations(&bait, &yp, eb);
+
+    let qu = quantize(&bait, p, Unprotected);
+    let yu = dequantize(&qu, p);
+    let viol_u = lc::verify::metrics::abs_violations(&bait, &yu, eb);
+    println!(
+        "protected violations: {viol_p}   unprotected violations: {viol_u} \
+         <- why the double check exists"
+    );
+    assert_eq!(viol_p, 0);
+    assert!(viol_u > 0);
+
+    // 3. The INT_MIN edge case: a value whose bin would be i32::MIN
+    //    must fall out through the two-comparison range check, not
+    //    through std::abs() (which is UB on INT_MIN in C++).
+    let evil = -(i32::MIN as f64 * 2.0 * eb as f64) as f32; // bin ~ -2^31
+    let qe = quantize(&[evil], p, Protected);
+    assert!(qe.outliers.get(0), "out-of-range bin must be lossless");
+    let ye = dequantize(&qe, p);
+    assert_eq!(ye[0].to_bits(), evil.to_bits());
+    println!("\nINT_MIN-class bin handled losslessly: {evil:e} survives bit-exactly");
+}

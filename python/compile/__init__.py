@@ -1,0 +1,10 @@
+"""Build-time compile package (L1 Pallas kernels + L2 JAX graphs + AOT).
+
+x64 must be enabled before any kernel module is imported: the
+parity-hardened double check computes in f64 (see kernels/qmath.py) and
+would silently degrade to f32 otherwise.
+"""
+
+import jax
+
+jax.config.update("jax_enable_x64", True)

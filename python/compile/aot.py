@@ -1,0 +1,96 @@
+"""AOT lowering: JAX/Pallas quantizer graphs -> HLO text artifacts.
+
+Emits HLO *text* (NOT `.serialize()`): jax >= 0.5 serializes
+HloModuleProto with 64-bit instruction ids, which the xla crate's
+xla_extension 0.5.1 rejects (`proto.id() <= INT_MAX`). The text parser
+reassigns ids, so text round-trips cleanly (see /opt/xla-example).
+
+Run as: cd python && python -m compile.aot --out-dir ../artifacts
+Produces one `<name>.hlo.txt` per entry in model.ARTIFACTS plus a
+`manifest.json` describing shapes for the rust loader.
+"""
+
+import argparse
+import hashlib
+import json
+import os
+
+import jax
+import jax.numpy as jnp
+from jax._src.lib import xla_client as xc
+
+from . import model
+
+CHUNK = (model.CHUNK_ROWS, model.CHUNK_COLS)
+
+SPEC_KINDS = {
+    "x": ("f32", CHUNK),
+    "w": ("i32", CHUNK),
+    "o": ("i32", CHUNK),
+    "s": ("f32", (1, 4)),
+}
+
+_DTYPES = {"f32": jnp.float32, "i32": jnp.int32}
+
+
+def specs_for(kinds):
+    return [
+        jax.ShapeDtypeStruct(SPEC_KINDS[k][1], _DTYPES[SPEC_KINDS[k][0]])
+        for k in kinds
+    ]
+
+
+def to_hlo_text(lowered):
+    """StableHLO -> XlaComputation -> HLO text (return_tuple=True so the
+    rust side always unwraps a tuple, even for single outputs)."""
+    mlir_mod = lowered.compiler_ir("stablehlo")
+    comp = xc._xla.mlir.mlir_module_to_xla_computation(
+        str(mlir_mod), use_tuple_args=False, return_tuple=True
+    )
+    return comp.as_hlo_text()
+
+
+def lower_artifact(name):
+    fn, kinds = model.ARTIFACTS[name]
+    lowered = jax.jit(fn).lower(*specs_for(kinds))
+    return to_hlo_text(lowered)
+
+
+def main():
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--out-dir", default="../artifacts")
+    ap.add_argument("--only", nargs="*", help="subset of artifact names")
+    args = ap.parse_args()
+
+    os.makedirs(args.out_dir, exist_ok=True)
+    names = args.only or list(model.ARTIFACTS)
+    manifest = {
+        "chunk_rows": model.CHUNK_ROWS,
+        "chunk_cols": model.CHUNK_COLS,
+        "chunk_elems": model.CHUNK_ELEMS,
+        "artifacts": {},
+    }
+    for name in names:
+        fn, kinds = model.ARTIFACTS[name]
+        text = lower_artifact(name)
+        path = os.path.join(args.out_dir, f"{name}.hlo.txt")
+        with open(path, "w") as f:
+            f.write(text)
+        n_out = 2 if kinds == "xs" else 1
+        manifest["artifacts"][name] = {
+            "file": f"{name}.hlo.txt",
+            "inputs": [
+                {"kind": k, "dtype": SPEC_KINDS[k][0], "shape": list(SPEC_KINDS[k][1])}
+                for k in kinds
+            ],
+            "num_outputs": n_out,
+            "sha256": hashlib.sha256(text.encode()).hexdigest(),
+        }
+        print(f"wrote {path} ({len(text)} chars)")
+    with open(os.path.join(args.out_dir, "manifest.json"), "w") as f:
+        json.dump(manifest, f, indent=2)
+    print(f"wrote {os.path.join(args.out_dir, 'manifest.json')}")
+
+
+if __name__ == "__main__":
+    main()

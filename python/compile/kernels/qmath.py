@@ -1,0 +1,209 @@
+"""Bit-exact quantizer math shared by the Pallas kernel bodies (L1).
+
+Parity strategy (the paper's Section 3.2, adapted): the paper disables
+FMA contraction with `-mno-fma` / `-fmad=false`. XLA CPU offers no such
+artifact-level switch — we measured LLVM contracting `bin*eb2` into the
+double-check subtraction regardless of `--xla_cpu_enable_fast_math`
+(and `lax.optimization_barrier` does not survive into the fused LLVM
+codegen). Our fix is stronger than a flag: every floating-point
+operation on the correctness path is EXACT (its result exactly
+representable), so FMA contraction and reassociation are numerically
+the identity. Concretely:
+
+  * bins are capped at 2^28 (ABS) / 2^27 (REL) so f64(bin) * f64(eb2)
+    has <= 53 significant bits and is exact;
+  * the reconstruction used by the double check is the f32 rounding of
+    that exact product — bit-identical to what any decoder computes
+    with a plain f32 multiply;
+  * the double check compares |x - recon| against the bound in f64,
+    where the subtraction is exact in the regime where the comparison
+    is close (see DESIGN.md section 8 for the exactness argument);
+  * pow2approx's float steps are single operations on exact inputs.
+
+The remaining f32 operations (x*inv_eb2 -> round; log2approx's one add)
+are single correctly-rounded IEEE operations with no mul+add pairs to
+contract, hence deterministic across compilers.
+
+Mirrored bit-for-bit by python/compile/kernels/ref.py (numpy) and
+rust/src/quantizer/ (native rust). Constants must match
+rust/src/types.rs.
+
+Requires jax x64 mode (enabled in compile/__init__.py).
+"""
+
+import jax.numpy as jnp
+from jax import lax
+
+MANTISSA_BITS = 23
+MANTISSA_MASK = (1 << MANTISSA_BITS) - 1  # 0x007FFFFF
+EXPO_BIAS_BITS = 127 << MANTISSA_BITS
+
+# Bin-range limits, chosen so f64(bin) * f64(scale) is exact:
+# 29-bit signed bin x 24-bit significand = 53 bits (ABS);
+# REL additionally packs a sign bit into the word.
+MAXBIN_ABS = 1 << 28
+MAXBIN_REL = 1 << 27
+
+# REL magnitude cutoff: below this, FTZ/DAZ differences between devices
+# could make the denormal arithmetic diverge (observed between XLA CPU
+# and numpy), and the reconstruction could itself be denormal. Values
+# with |x| < REL_MIN_MAG are stored losslessly. Comparing a denormal
+# against this *normal* constant yields the same verdict with or
+# without DAZ, so the cutoff itself is parity-safe.
+REL_MIN_MAG = 2.0**-124
+
+
+def bitcast_i32(x):
+    """f32 -> i32 bit pattern (no value conversion)."""
+    return lax.bitcast_convert_type(x, jnp.int32)
+
+
+def bitcast_f32(i):
+    """i32 bit pattern -> f32."""
+    return lax.bitcast_convert_type(i, jnp.float32)
+
+
+def log2approx(x):
+    """Paper's log2approxf: exponent extraction + linear mantissa term.
+
+    frac_f + (expo-128) is a single f32 add of exact inputs at normal
+    magnitudes — deterministic on every compiler.
+    """
+    i = bitcast_i32(x)
+    expo = (i >> MANTISSA_BITS) & 0xFF
+    frac_i = jnp.int32(EXPO_BIAS_BITS) | (i & jnp.int32(MANTISSA_MASK))
+    frac_f = bitcast_f32(frac_i)
+    return frac_f + (expo - 128).astype(jnp.float32)
+
+
+def pow2approx_from_bins(bins, l2eb):
+    """Parity-hardened pow2approx evaluated at arg = bin * log2(1+eb).
+
+    All f64 steps are either exact or single correctly-rounded
+    operations on exact inputs (see module docstring), so the result is
+    bit-identical across XLA / numpy / rust regardless of FMA or
+    reassociation:
+
+      arg    = f64(bin) * f64(l2eb)          exact (<= 52 bits)
+      biased = arg + 127.0                   single RTN; fma(exact)+c safe
+      expo   = trunc(biased) as i32          deterministic
+      frac   = f32(arg + f64(128 - expo))    single RTN + convert
+      recon  = compose(expo, mantissa(frac)) integer ops
+
+    Used identically by the encoder's double check and the decoder, so
+    encode-side verification speaks for the decode-side value.
+    """
+    arg = bins.astype(jnp.float64) * l2eb.astype(jnp.float64)
+    biased = arg + jnp.float64(127.0)
+    expo = biased.astype(jnp.int32)  # float->int converts toward zero
+    frac64 = arg + (128 - expo).astype(jnp.float64)
+    frac_f = frac64.astype(jnp.float32)
+    frac_i = bitcast_i32(frac_f)
+    exp_i = (expo << MANTISSA_BITS) | (frac_i & jnp.int32(MANTISSA_MASK))
+    return bitcast_f32(exp_i)
+
+
+def zigzag(b):
+    """Signed bin -> non-negative code (kept in i32; bit pattern matters)."""
+    return (b << 1) ^ (b >> 31)
+
+
+def unzigzag(z):
+    """Inverse of zigzag (logical shift right, then conditional negate)."""
+    return lax.shift_right_logical(z, jnp.int32(1)) ^ -(z & 1)
+
+
+def abs_quantize_math(x, eb, eb2, inv_eb2, protected):
+    """Core ABS quantizer (Section 3.1). Returns (words i32, outlier i32).
+
+    bin   = rint(x / (2*eb))           (round-half-even on both devices)
+    recon = f32(f64(bin) * f64(2*eb))  == the decoder's f32 multiply
+    outlier iff bin out of range (two comparisons, no abs: the paper's
+    INT_MIN fix) or — in protected mode — the reconstruction fails the
+    exact double check |x - recon| <= eb.  NaN fails every comparison,
+    so NaN and INF fall out losslessly without explicit checks
+    ("implicit" per Section 3.1).
+    """
+    maxbin_f = jnp.float32(MAXBIN_ABS)
+    binf = jnp.round(x * inv_eb2)
+    # Two comparisons rather than abs(): Section 3.3. NaN compares False.
+    in_range = (binf < maxbin_f) & (binf > -maxbin_f)
+    binc = jnp.where(in_range, binf, jnp.float32(0.0))
+    bins = binc.astype(jnp.int32)
+    # Exact product in f64, rounded once to f32: bit-identical to the
+    # decoder's `f32(bin) * eb2` and immune to FMA contraction.
+    prod = binc.astype(jnp.float64) * eb2.astype(jnp.float64)
+    recon = prod.astype(jnp.float32)
+    if protected:
+        err = jnp.abs(x.astype(jnp.float64) - recon.astype(jnp.float64))
+        ok = err <= eb.astype(jnp.float64)  # the double check, exact
+        quant = in_range & ok
+    else:
+        quant = in_range
+    words = jnp.where(quant, zigzag(bins), bitcast_i32(x))
+    return words, (~quant).astype(jnp.int32)
+
+
+def abs_dequantize_math(words, outlier, eb2):
+    """Inverse of abs_quantize_math (plain f32 multiply — see above)."""
+    bins = unzigzag(words)
+    vals = bins.astype(jnp.float32) * eb2
+    return jnp.where(outlier != 0, bitcast_f32(words), vals)
+
+
+def rel_quantize_math(x, eb, l2eb, inv_l2eb, use_approx, protected=True):
+    """Core REL quantizer. Returns (words i32, outlier i32).
+
+    Log-domain binning: bin = rint(log2(|x|) / log2(1+eb)), reconstruct
+    recon = sign * 2^(bin * log2(1+eb)). `use_approx=True` uses the
+    parity-safe approximations; False uses the library log2/exp2 (the
+    "original functions" baseline of Figures 1-2, which is NOT
+    parity-safe — that is the point).
+
+    Zero, INF, NaN and |x| < REL_MIN_MAG are excluded up front (Section
+    3.1: REL checks infinity explicitly, NaN explicitly; zero cannot be
+    relatively bounded by a log bin; tiny values hit FTZ/DAZ parity
+    hazards) and stored losslessly, which is exact.
+
+    l2eb/inv_l2eb are computed ONCE by the coordinator and passed in so
+    both devices use bit-identical scale factors.
+    """
+    maxbin_f = jnp.float32(MAXBIN_REL)
+    sign = (x < 0).astype(jnp.int32)
+    ax = jnp.abs(x)
+    finite = ax < jnp.float32(jnp.inf)  # False for INF and NaN
+    big_enough = ax >= jnp.float32(REL_MIN_MAG)  # False for 0, denormals
+    if use_approx:
+        lg = log2approx(ax)
+    else:
+        lg = jnp.log2(ax)
+    binf = jnp.round(lg * inv_l2eb)
+    in_range = (binf < maxbin_f) & (binf > -maxbin_f)
+    usable = in_range & finite & big_enough
+    binc = jnp.where(usable, binf, jnp.float32(0.0))
+    bins = binc.astype(jnp.int32)
+    if use_approx:
+        recon = pow2approx_from_bins(bins, l2eb)
+    else:
+        recon = jnp.exp2(binc * l2eb)
+    if protected:
+        err = jnp.abs(ax.astype(jnp.float64) - recon.astype(jnp.float64))
+        lim = eb.astype(jnp.float64) * ax.astype(jnp.float64)  # exact
+        quant = usable & (err <= lim)  # the double check
+    else:
+        quant = usable
+    packed = (zigzag(bins) << 1) | sign
+    words = jnp.where(quant, packed, bitcast_i32(x))
+    return words, (~quant).astype(jnp.int32)
+
+
+def rel_dequantize_math(words, outlier, l2eb, use_approx):
+    """Inverse of rel_quantize_math."""
+    sign = words & 1
+    bins = unzigzag(lax.shift_right_logical(words, jnp.int32(1)))
+    if use_approx:
+        mag = pow2approx_from_bins(bins, l2eb)
+    else:
+        mag = jnp.exp2(bins.astype(jnp.float32) * l2eb)
+    vals = jnp.where(sign != 0, -mag, mag)
+    return jnp.where(outlier != 0, bitcast_f32(words), vals)

@@ -1,0 +1,125 @@
+"""L1 Pallas quantizer kernels.
+
+The quantization hot loop of the paper (bin, reconstruct, double-check,
+outlier flag) as Pallas kernels. One grid step per (BLOCK_ROWS x 128)
+VMEM tile; the double check is fused into the same tile pass so the
+reconstructed value never round-trips to HBM (DESIGN.md
+section Hardware-Adaptation).
+
+interpret=True everywhere: real-TPU lowering emits a Mosaic custom-call
+the CPU PJRT plugin cannot run. Structure (BlockSpec tiling, fused
+check) is still authored for the TPU VPU.
+
+Scalars travel as a (1, 4) f32 operand mapped to every tile:
+  ABS: [eb, eb2, inv_eb2, 0]    REL: [eb, log2(1+eb), 1/log2(1+eb), 0]
+so the artifact is reusable for any error bound without recompilation,
+and the REL scale factors are computed exactly once by the coordinator
+(bit-identical on both "devices").
+"""
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+from . import qmath
+
+# Chunk geometry: 65,536 f32 = 256 KiB per input tile stream. Tiles are
+# multiples of the TPU's (8, 128) f32 VPU lane layout.
+CHUNK_ROWS = 512
+CHUNK_COLS = 128
+CHUNK_ELEMS = CHUNK_ROWS * CHUNK_COLS
+BLOCK_ROWS = 64
+
+
+def _tile_specs(rows, cols, n_inputs):
+    grid = (rows // BLOCK_ROWS,)
+    data = pl.BlockSpec((BLOCK_ROWS, cols), lambda i: (i, 0))
+    scal = pl.BlockSpec((1, 4), lambda i: (0, 0))
+    return grid, [data] * n_inputs + [scal], [data, data]
+
+
+def _abs_quant_kernel(protected, x_ref, s_ref, w_ref, o_ref):
+    x = x_ref[...]
+    eb, eb2, inv_eb2 = s_ref[0, 0], s_ref[0, 1], s_ref[0, 2]
+    words, outlier = qmath.abs_quantize_math(x, eb, eb2, inv_eb2, protected)
+    w_ref[...] = words
+    o_ref[...] = outlier
+
+
+def _abs_dequant_kernel(w_ref, o_ref, s_ref, x_ref):
+    eb2 = s_ref[0, 1]
+    x_ref[...] = qmath.abs_dequantize_math(w_ref[...], o_ref[...], eb2)
+
+
+def _rel_quant_kernel(use_approx, protected, x_ref, s_ref, w_ref, o_ref):
+    x = x_ref[...]
+    eb, l2eb, inv_l2eb = s_ref[0, 0], s_ref[0, 1], s_ref[0, 2]
+    words, outlier = qmath.rel_quantize_math(
+        x, eb, l2eb, inv_l2eb, use_approx, protected
+    )
+    w_ref[...] = words
+    o_ref[...] = outlier
+
+
+def _rel_dequant_kernel(use_approx, w_ref, o_ref, s_ref, x_ref):
+    l2eb = s_ref[0, 1]
+    x_ref[...] = qmath.rel_dequantize_math(
+        w_ref[...], o_ref[...], l2eb, use_approx
+    )
+
+
+def _quant_call(kernel, x, scalars):
+    rows, cols = x.shape
+    grid, in_specs, out_specs = _tile_specs(rows, cols, 1)
+    return pl.pallas_call(
+        kernel,
+        grid=grid,
+        in_specs=in_specs,
+        out_specs=out_specs,
+        out_shape=[
+            jax.ShapeDtypeStruct(x.shape, jnp.int32),
+            jax.ShapeDtypeStruct(x.shape, jnp.int32),
+        ],
+        interpret=True,
+    )(x, scalars)
+
+
+def _dequant_call(kernel, words, outlier, scalars):
+    rows, cols = words.shape
+    grid, in_specs, out_specs = _tile_specs(rows, cols, 2)
+    return pl.pallas_call(
+        kernel,
+        grid=grid,
+        in_specs=in_specs,
+        out_specs=[out_specs[0]],
+        out_shape=[jax.ShapeDtypeStruct(words.shape, jnp.float32)],
+        interpret=True,
+    )(words, outlier, scalars)[0]
+
+
+def abs_quantize(x, scalars, protected=True):
+    """Pallas ABS quantizer. x: f32[R,C], scalars: f32[1,4].
+
+    Returns (words i32[R,C], outlier i32[R,C])."""
+    return tuple(
+        _quant_call(functools.partial(_abs_quant_kernel, protected), x, scalars)
+    )
+
+
+def abs_dequantize(words, outlier, scalars):
+    """Pallas ABS dequantizer -> f32[R,C]."""
+    return _dequant_call(_abs_dequant_kernel, words, outlier, scalars)
+
+
+def rel_quantize(x, scalars, use_approx=True, protected=True):
+    """Pallas REL quantizer (approx or library log2/exp2)."""
+    kern = functools.partial(_rel_quant_kernel, use_approx, protected)
+    return tuple(_quant_call(kern, x, scalars))
+
+
+def rel_dequantize(words, outlier, scalars, use_approx=True):
+    """Pallas REL dequantizer -> f32[R,C]."""
+    kern = functools.partial(_rel_dequant_kernel, use_approx)
+    return _dequant_call(kern, words, outlier, scalars)

@@ -1,0 +1,143 @@
+"""Pure-numpy oracle for the quantizer kernels.
+
+Written independently from qmath.py (numpy, not jnp; explicit masking
+instead of where-chains) so the pytest comparison is a genuine check and
+not a tautology. Also mirrors exactly what rust/src/quantizer/ does, so
+any pallas-vs-ref mismatch is also a CPU/GPU-parity bug in the paper's
+sense.
+
+The correctness path follows the exact-arithmetic scheme documented in
+qmath.py: bins capped so f64 products are exact, double check in f64.
+"""
+
+import numpy as np
+
+MANTISSA_BITS = 23
+MANTISSA_MASK = np.int32((1 << MANTISSA_BITS) - 1)
+MAXBIN_ABS = float(1 << 28)
+MAXBIN_REL = float(1 << 27)
+REL_MIN_MAG = np.float32(2.0**-124)
+
+
+def log2approx_ref(x):
+    x = np.asarray(x, np.float32)
+    i = x.view(np.int32)
+    expo = (i >> MANTISSA_BITS) & np.int32(0xFF)
+    frac_i = np.int32(127 << MANTISSA_BITS) | (i & MANTISSA_MASK)
+    frac_f = frac_i.view(np.float32)
+    return (frac_f + (expo - np.int32(128)).astype(np.float32)).astype(np.float32)
+
+
+def pow2approx_from_bins_ref(bins, l2eb):
+    """Mirror of qmath.pow2approx_from_bins (see its docstring)."""
+    bins = np.asarray(bins, np.int32)
+    arg = bins.astype(np.float64) * np.float64(np.float32(l2eb))
+    biased = arg + np.float64(127.0)
+    expo = np.trunc(biased).astype(np.int32)
+    frac64 = arg + (np.int32(128) - expo).astype(np.float64)
+    frac_f = frac64.astype(np.float32)
+    frac_i = frac_f.view(np.int32)
+    exp_i = (expo << MANTISSA_BITS) | (frac_i & MANTISSA_MASK)
+    return exp_i.view(np.float32)
+
+
+def _zigzag(b):
+    return (b << np.int32(1)) ^ (b >> np.int32(31))
+
+
+def _unzigzag(z):
+    u = z.view(np.uint32) >> np.uint32(1)
+    return u.view(np.int32) ^ -(z & np.int32(1))
+
+
+def abs_quantize_ref(x, eb, protected=True):
+    """Oracle ABS quantizer -> (words i32, outlier i32)."""
+    x = np.asarray(x, np.float32)
+    eb = np.float32(eb)
+    eb2 = np.float32(eb * np.float32(2.0))
+    inv_eb2 = np.float32(np.float32(1.0) / eb2)
+    with np.errstate(invalid="ignore", over="ignore"):
+        binf = np.round(x * inv_eb2).astype(np.float32)  # half-even
+        in_range = np.zeros(x.shape, bool)
+        np.less(binf, MAXBIN_ABS, out=in_range, where=~np.isnan(binf))
+        in_range &= binf > -np.float32(MAXBIN_ABS)
+        binc = np.where(in_range, binf, np.float32(0.0))
+        bins = binc.astype(np.int32)
+        # exact f64 product, rounded once to f32 == decoder's f32 multiply
+        recon = (binc.astype(np.float64) * np.float64(eb2)).astype(np.float32)
+        if protected:
+            err = np.abs(x.astype(np.float64) - recon.astype(np.float64))
+            ok = np.zeros(x.shape, bool)
+            np.less_equal(err, np.float64(eb), out=ok, where=~np.isnan(err))
+            quant = in_range & ok
+        else:
+            quant = in_range
+    words = np.where(quant, _zigzag(bins), x.view(np.int32))
+    return words.astype(np.int32), (~quant).astype(np.int32)
+
+
+def abs_dequantize_ref(words, outlier, eb):
+    words = np.asarray(words, np.int32)
+    eb2 = np.float32(np.float32(eb) * np.float32(2.0))
+    vals = (_unzigzag(words).astype(np.float32) * eb2).astype(np.float32)
+    return np.where(outlier != 0, words.view(np.float32), vals)
+
+
+def rel_scalars(eb):
+    """The coordinator-side scale factors, computed once (f32)."""
+    l2eb = np.float32(np.log2(np.float64(1.0) + np.float64(eb)))
+    inv = np.float32(np.float32(1.0) / l2eb)
+    return l2eb, inv
+
+
+def rel_quantize_ref(x, eb, use_approx=True, protected=True):
+    """Oracle REL quantizer -> (words i32, outlier i32)."""
+    x = np.asarray(x, np.float32)
+    eb = np.float32(eb)
+    l2eb, inv_l2eb = rel_scalars(eb)
+    sign = (x < 0).astype(np.int32)
+    ax = np.abs(x)
+    finite = np.isfinite(x)
+    big_enough = ax >= REL_MIN_MAG
+    with np.errstate(invalid="ignore", over="ignore", divide="ignore"):
+        if use_approx:
+            lg = log2approx_ref(ax)
+        else:
+            lg = np.log2(ax, dtype=np.float32)
+        binf = np.round(lg * inv_l2eb).astype(np.float32)
+        in_range = np.zeros(x.shape, bool)
+        np.less(binf, MAXBIN_REL, out=in_range, where=~np.isnan(binf))
+        in_range &= binf > -np.float32(MAXBIN_REL)
+        usable = in_range & finite & big_enough
+        binc = np.where(usable, binf, np.float32(0.0))
+        bins = binc.astype(np.int32)
+        if use_approx:
+            recon = pow2approx_from_bins_ref(bins, l2eb)
+        else:
+            recon = np.exp2((binc * l2eb).astype(np.float32), dtype=np.float32)
+        if protected:
+            err = np.abs(ax.astype(np.float64) - recon.astype(np.float64))
+            lim = np.float64(eb) * ax.astype(np.float64)
+            ok = np.zeros(x.shape, bool)
+            np.less_equal(err, lim, out=ok, where=~np.isnan(err))
+            quant = usable & ok
+        else:
+            quant = usable
+    packed = (_zigzag(bins) << np.int32(1)) | sign
+    words = np.where(quant, packed, x.view(np.int32))
+    return words.astype(np.int32), (~quant).astype(np.int32)
+
+
+def rel_dequantize_ref(words, outlier, eb, use_approx=True):
+    words = np.asarray(words, np.int32)
+    l2eb, _ = rel_scalars(eb)
+    sign = words & np.int32(1)
+    shifted = (words.view(np.uint32) >> np.uint32(1)).view(np.int32)
+    bins = _unzigzag(shifted)
+    if use_approx:
+        mag = pow2approx_from_bins_ref(bins, l2eb)
+    else:
+        arg = (bins.astype(np.float32) * l2eb).astype(np.float32)
+        mag = np.exp2(arg, dtype=np.float32)
+    vals = np.where(sign != 0, -mag, mag)
+    return np.where(outlier != 0, words.view(np.float32), vals)

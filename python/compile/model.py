@@ -1,0 +1,88 @@
+"""L2: chunk-level quantizer graphs (build-time JAX, calls L1 kernels).
+
+Each public function operates on one fixed-shape chunk
+(CHUNK_ROWS x CHUNK_COLS f32 = 65,536 values) plus a (1,4) f32 scalar
+operand carrying the error bound and its derived factors, so one AOT
+artifact serves every error bound.
+
+The functions here are the units `aot.py` lowers to HLO text; the rust
+runtime (rust/src/runtime/) loads and executes them on the PJRT CPU
+client at compression time. Python never runs on that path.
+"""
+
+import jax.numpy as jnp
+
+from .kernels import quantizers as q
+
+CHUNK_ROWS = q.CHUNK_ROWS
+CHUNK_COLS = q.CHUNK_COLS
+CHUNK_ELEMS = q.CHUNK_ELEMS
+
+
+def abs_scalars(eb):
+    """Scalar operand for the ABS artifacts: [eb, 2eb, 1/(2eb), 0]."""
+    eb = jnp.float32(eb)
+    eb2 = eb * jnp.float32(2.0)
+    return jnp.stack([eb, eb2, jnp.float32(1.0) / eb2, jnp.float32(0.0)]).reshape(1, 4)
+
+
+def rel_scalars(l2eb, inv_l2eb, eb):
+    """Scalar operand for the REL artifacts: [eb, log2(1+eb), 1/log2(1+eb), 0].
+
+    l2eb/inv_l2eb are computed once by the coordinator (see
+    kernels/ref.py::rel_scalars) so both devices share bit-identical
+    factors — the paper's fix for divergent log()/pow() libraries.
+    """
+    return jnp.stack(
+        [jnp.float32(eb), jnp.float32(l2eb), jnp.float32(inv_l2eb), jnp.float32(0.0)]
+    ).reshape(1, 4)
+
+
+# --- quantize: f32 chunk -> (words i32, outlier i32) ---------------------
+
+
+def abs_quantize_chunk(x, scalars):
+    """Guaranteed-error-bound ABS quantizer (double-checked)."""
+    return q.abs_quantize(x, scalars, protected=True)
+
+
+def abs_quantize_unprotected_chunk(x, scalars):
+    """ABS quantizer without the double check — the Fig. 3/4 baseline."""
+    return q.abs_quantize(x, scalars, protected=False)
+
+
+def rel_quantize_chunk(x, scalars):
+    """REL quantizer with parity-safe log2approx/pow2approx."""
+    return q.rel_quantize(x, scalars, use_approx=True, protected=True)
+
+
+def rel_quantize_native_chunk(x, scalars):
+    """REL quantizer with library log2/exp2 — the Fig. 1/2 baseline."""
+    return q.rel_quantize(x, scalars, use_approx=False, protected=True)
+
+
+# --- dequantize: (words, outlier) -> f32 chunk ---------------------------
+
+
+def abs_dequantize_chunk(words, outlier, scalars):
+    return q.abs_dequantize(words, outlier, scalars)
+
+
+def rel_dequantize_chunk(words, outlier, scalars):
+    return q.rel_dequantize(words, outlier, scalars, use_approx=True)
+
+
+def rel_dequantize_native_chunk(words, outlier, scalars):
+    return q.rel_dequantize(words, outlier, scalars, use_approx=False)
+
+
+# name -> (fn, input kinds); "x" f32 chunk, "w"/"o" i32 chunks, "s" scalars
+ARTIFACTS = {
+    "abs_quant": (abs_quantize_chunk, "xs"),
+    "abs_quant_unprot": (abs_quantize_unprotected_chunk, "xs"),
+    "abs_dequant": (abs_dequantize_chunk, "wos"),
+    "rel_quant": (rel_quantize_chunk, "xs"),
+    "rel_quant_native": (rel_quantize_native_chunk, "xs"),
+    "rel_dequant": (rel_dequantize_chunk, "wos"),
+    "rel_dequant_native": (rel_dequantize_native_chunk, "wos"),
+}

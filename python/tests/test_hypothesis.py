@@ -1,0 +1,77 @@
+"""Hypothesis property tests: the Pallas kernels agree with the numpy
+oracle bit-for-bit over generated shapes, error bounds and value mixes
+(including NaN/INF/denormals), and the protected quantizers never
+violate their bound."""
+
+import numpy as np
+from hypothesis import given, settings, strategies as st
+
+from compile import model
+from compile.kernels import quantizers as q
+from compile.kernels import ref
+
+# Shapes must be multiples of the BLOCK_ROWS tiling in rows.
+shapes = st.sampled_from([(64, 128), (128, 128), (256, 64), (512, 128)])
+ebs = st.sampled_from([1e-1, 1e-2, 1e-3, 1e-5])
+
+
+def gen_values(shape, seed, specials):
+    rng = np.random.default_rng(seed)
+    x = (rng.normal(0, 1, shape) * 10.0 ** rng.integers(-3, 4, shape)).astype(
+        np.float32
+    )
+    if specials:
+        flat = x.reshape(-1)
+        k = max(1, flat.size // 50)
+        idx = rng.permutation(flat.size)
+        flat[idx[:k]] = np.inf
+        flat[idx[k : 2 * k]] = -np.inf
+        flat[idx[2 * k : 3 * k]] = np.nan
+        flat[idx[3 * k : 4 * k]] = 0.0
+        flat[idx[4 * k : 5 * k]] = np.frombuffer(
+            rng.integers(1, 2**23, k, dtype=np.uint32).astype("<u4").tobytes(),
+            dtype=np.float32,
+        )
+    return x
+
+
+@settings(max_examples=20, deadline=None)
+@given(shape=shapes, eb=ebs, seed=st.integers(0, 2**31), specials=st.booleans())
+def test_abs_kernel_matches_oracle(shape, eb, seed, specials):
+    rows, cols = shape
+    x = gen_values(shape, seed, specials)
+    s = np.array(model.abs_scalars(eb))
+    w, o = q.abs_quantize(x, s, protected=True)
+    rw, ro = ref.abs_quantize_ref(x, eb, protected=True)
+    np.testing.assert_array_equal(np.array(w), rw)
+    np.testing.assert_array_equal(np.array(o), ro)
+    # and the bound holds through the pallas decoder
+    y = np.array(q.abs_dequantize(np.array(w), np.array(o), s))
+    fin = np.isfinite(x)
+    assert np.all(
+        np.abs(x[fin].astype(np.float64) - y[fin].astype(np.float64))
+        <= np.float64(np.float32(eb))
+    )
+
+
+@settings(max_examples=20, deadline=None)
+@given(shape=shapes, eb=ebs, seed=st.integers(0, 2**31), specials=st.booleans())
+def test_rel_kernel_matches_oracle(shape, eb, seed, specials):
+    x = gen_values(shape, seed, specials)
+    l2eb, inv = ref.rel_scalars(eb)
+    s = np.array(model.rel_scalars(l2eb, inv, eb))
+    w, o = q.rel_quantize(x, s, use_approx=True)
+    rw, ro = ref.rel_quantize_ref(x, eb, use_approx=True)
+    np.testing.assert_array_equal(np.array(w), rw)
+    np.testing.assert_array_equal(np.array(o), ro)
+
+
+@settings(max_examples=15, deadline=None)
+@given(eb=ebs, seed=st.integers(0, 2**31))
+def test_unprotected_never_beats_protected_on_outliers(eb, seed):
+    """Protected's outlier set is a superset of unprotected's."""
+    x = gen_values((128, 128), seed, True)
+    s = np.array(model.abs_scalars(eb))
+    _, op = q.abs_quantize(x, s, protected=True)
+    _, ou = q.abs_quantize(x, s, protected=False)
+    assert np.all(np.array(ou) <= np.array(op))

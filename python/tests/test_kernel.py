@@ -1,0 +1,200 @@
+"""Pallas kernels vs the independent numpy oracle — the core L1 signal.
+
+Equality is BIT-EXACT (words/outlier flags/reconstructions compared as
+integers), because bit-for-bit parity between independently compiled
+pipelines is the paper's central claim.
+"""
+
+import numpy as np
+import pytest
+
+from compile import model
+from compile.kernels import quantizers as q
+from compile.kernels import ref
+
+CHUNK = (q.CHUNK_ROWS, q.CHUNK_COLS)
+EBS = [1e-1, 1e-2, 1e-3, 1e-4, 1e-6]
+
+
+def _special_chunk(seed=0):
+    """Chunk mixing normals, denormals, INF, NaN, zeros, bin edges."""
+    rng = np.random.default_rng(seed)
+    x = rng.normal(0.0, 1.0, CHUNK).astype(np.float32)
+    flat = x.reshape(-1)
+    n = flat.size
+    idx = rng.permutation(n)
+    flat[idx[0:50]] = np.inf
+    flat[idx[50:100]] = -np.inf
+    flat[idx[100:150]] = np.nan
+    flat[idx[150:200]] = 0.0
+    flat[idx[200:250]] = -0.0
+    # denormals: tiny bit patterns
+    flat[idx[250:300]] = np.frombuffer(
+        rng.integers(1, 0x007FFFFF, 50, dtype=np.uint32).astype("<u4").tobytes(),
+        dtype=np.float32,
+    )
+    # values parked exactly on bin boundaries (rounding-error bait)
+    eb2 = np.float32(2e-3)
+    flat[idx[300:400]] = (np.arange(100, dtype=np.float32) + np.float32(0.5)) * eb2
+    # huge magnitudes that overflow the bin range
+    flat[idx[400:450]] = rng.normal(0, 1, 50).astype(np.float32) * np.float32(1e30)
+    return flat.reshape(CHUNK)
+
+
+def _random_chunk(seed, scale=1.0):
+    rng = np.random.default_rng(seed)
+    return (rng.normal(0.0, scale, CHUNK)).astype(np.float32)
+
+
+def _rel_scal(eb):
+    l2eb, inv = ref.rel_scalars(eb)
+    return np.array(model.rel_scalars(l2eb, inv, eb))
+
+
+@pytest.mark.parametrize("eb", EBS)
+@pytest.mark.parametrize("protected", [True, False])
+def test_abs_quantize_matches_ref(eb, protected):
+    for seed in range(3):
+        x = _special_chunk(seed) if seed == 0 else _random_chunk(seed)
+        s = np.array(model.abs_scalars(eb))
+        w, o = q.abs_quantize(x, s, protected=protected)
+        rw, ro = ref.abs_quantize_ref(x, eb, protected=protected)
+        np.testing.assert_array_equal(np.array(w), rw)
+        np.testing.assert_array_equal(np.array(o), ro)
+
+
+@pytest.mark.parametrize("eb", EBS)
+def test_abs_roundtrip_within_bound(eb):
+    x = _random_chunk(7)
+    s = np.array(model.abs_scalars(eb))
+    w, o = q.abs_quantize(x, s, protected=True)
+    y = np.array(q.abs_dequantize(np.array(w), np.array(o), s))
+    assert np.all(np.abs(x - y) <= np.float32(eb))
+
+
+def test_abs_protected_specials_lossless():
+    """INF/NaN/out-of-range must come back bit-identical (outlier path)."""
+    x = _special_chunk(0)
+    eb = 1e-3
+    s = np.array(model.abs_scalars(eb))
+    w, o = q.abs_quantize(x, s, protected=True)
+    y = np.array(q.abs_dequantize(np.array(w), np.array(o), s))
+    bad = ~np.isfinite(x)
+    np.testing.assert_array_equal(
+        y[bad].view(np.int32), x[bad].view(np.int32)
+    )
+    fin = np.isfinite(x)
+    assert np.all(np.abs(x[fin] - y[fin]) <= np.float32(eb))
+
+
+@pytest.mark.parametrize("eb", EBS)
+def test_rel_quantize_matches_ref(eb):
+    """Bit-exact XLA<->numpy parity holds for the APPROX variant only —
+    that is the paper's claim (Section 3.2)."""
+    for seed in range(3):
+        x = _special_chunk(seed) if seed == 0 else _random_chunk(seed, scale=100.0)
+        s = _rel_scal(eb)
+        w, o = q.rel_quantize(x, s, use_approx=True)
+        rw, ro = ref.rel_quantize_ref(x, eb, use_approx=True)
+        np.testing.assert_array_equal(np.array(w), rw)
+        np.testing.assert_array_equal(np.array(o), ro)
+
+
+def test_native_log_divergence_breaks_parity():
+    """Paper Section 2.3: library log()/pow() differ between independently
+    compiled pipelines (their CPU vs GPU; here numpy vs XLA), producing
+    different bins for the same input — the reason LC replaced them.
+    The approx variant must show ZERO mismatches on the same inputs."""
+    total_native = 0
+    for eb in EBS:
+        s = _rel_scal(eb)
+        for seed in range(1, 4):
+            x = _random_chunk(seed, scale=100.0)
+            w, _ = q.rel_quantize(x, s, use_approx=False)
+            rw, _ = ref.rel_quantize_ref(x, eb, use_approx=False)
+            total_native += int((np.array(w) != rw).sum())
+            wa, _ = q.rel_quantize(x, s, use_approx=True)
+            rwa, _ = ref.rel_quantize_ref(x, eb, use_approx=True)
+            assert int((np.array(wa) != rwa).sum()) == 0
+    assert total_native > 0, (
+        "expected XLA log2/exp2 to diverge from numpy somewhere; if this "
+        "fails the native-variant baseline no longer demonstrates the "
+        "paper's parity problem on this platform"
+    )
+
+
+@pytest.mark.parametrize("eb", [1e-1, 1e-2, 1e-3])
+@pytest.mark.parametrize("use_approx", [True, False])
+def test_rel_roundtrip_within_bound(eb, use_approx):
+    x = _special_chunk(3)
+    s = _rel_scal(eb)
+    w, o = q.rel_quantize(x, s, use_approx=use_approx)
+    y = np.array(q.rel_dequantize(np.array(w), np.array(o), s, use_approx=use_approx))
+    fin = np.isfinite(x) & (x != 0)
+    rel = np.abs((x[fin] - y[fin]) / x[fin])
+    assert np.all(rel <= np.float32(eb) * (1 + 1e-6))
+    # sign preserved (REL definition requires it)
+    assert np.all(np.signbit(x[fin]) == np.signbit(y[fin]))
+    # specials + zeros bit-exact
+    spec = ~fin
+    np.testing.assert_array_equal(
+        y[spec & ~np.isnan(x)].view(np.int32), x[spec & ~np.isnan(x)].view(np.int32)
+    )
+    assert np.all(np.isnan(y[np.isnan(x)]))
+
+
+def test_rel_dequantize_matches_ref():
+    eb = 1e-3
+    x = _random_chunk(11, scale=10.0)
+    s = _rel_scal(eb)
+    w, o = ref.rel_quantize_ref(x, eb, use_approx=True)
+    y_pl = np.array(q.rel_dequantize(w, o, s, use_approx=True))
+    y_rf = ref.rel_dequantize_ref(w, o, eb, use_approx=True)
+    np.testing.assert_array_equal(y_pl.view(np.int32), y_rf.view(np.int32))
+
+
+def test_rel_dequantize_native_close_but_not_exact():
+    """Native exp2 decode agrees in value but not (necessarily) in bits
+    across engines; mismatching lanes must still be within the bound of
+    the encoder that double-checked with its own exp2 (1-ulp slack)."""
+    eb = 1e-3
+    x = _random_chunk(11, scale=10.0)
+    s = _rel_scal(eb)
+    w, o = ref.rel_quantize_ref(x, eb, use_approx=False)
+    y_pl = np.array(q.rel_dequantize(w, o, s, use_approx=False))
+    y_rf = ref.rel_dequantize_ref(w, o, eb, use_approx=False)
+    ulp = np.abs(y_pl.view(np.int32) - y_rf.view(np.int32))
+    assert ulp.max() <= 8, "native exp2 should be close across engines"
+    assert (ulp > 0).any(), (
+        "expected divergence: if XLA and numpy exp2 now agree bit-for-bit, "
+        "the native baseline no longer demonstrates the paper's problem"
+    )
+
+
+def test_abs_dequantize_matches_ref():
+    eb = 1e-3
+    x = _special_chunk(5)
+    s = np.array(model.abs_scalars(eb))
+    w, o = ref.abs_quantize_ref(x, eb)
+    y_pl = np.array(q.abs_dequantize(w, o, s))
+    y_rf = ref.abs_dequantize_ref(w, o, eb)
+    np.testing.assert_array_equal(y_pl.view(np.int32), y_rf.view(np.int32))
+
+
+def test_unprotected_abs_can_violate():
+    """The whole point of the paper: without the double check, rounding
+    can push a reconstruction past the bound. Construct boundary bait
+    and confirm the unprotected variant violates on at least one value
+    while the protected variant never does."""
+    eb = np.float32(1e-3)
+    # Values very close to bin boundaries at many magnitudes.
+    k = np.arange(1, q.CHUNK_ELEMS + 1, dtype=np.float64)
+    x = ((k + 0.5) * 2.0 * float(eb)).astype(np.float32).reshape(CHUNK)
+    s = np.array(model.abs_scalars(float(eb)))
+    wp, op = q.abs_quantize(x, s, protected=True)
+    yp = np.array(q.abs_dequantize(np.array(wp), np.array(op), s))
+    assert np.all(np.abs(x - yp) <= eb), "protected must never violate"
+    wu, ou = q.abs_quantize(x, s, protected=False)
+    yu = np.array(q.abs_dequantize(np.array(wu), np.array(ou), s))
+    viol = np.abs(x.astype(np.float64) - yu.astype(np.float64)) > float(eb)
+    assert viol.any(), "expected at least one unprotected violation"

@@ -1,0 +1,126 @@
+//! Microbenchmarks of the lossless backend stages (harness = false).
+//!
+//! Prints per-stage encode/decode throughput over representative word
+//! streams — the profiling substrate for the L3 performance pass.
+
+use lc::bench_util::{measure, Table};
+use lc::codec::{bitshuffle, delta, huffman, rle, Pipeline, Stage};
+use lc::coordinator::EngineConfig;
+use lc::data::Suite;
+use lc::types::ErrorBound;
+
+fn quantized_words(suite: Suite, n: usize) -> Vec<u32> {
+    let x = suite.generate(0, n);
+    let cfg = EngineConfig::native(ErrorBound::Abs(1e-3));
+    let qc = lc::quantizer::QuantizerConfig::resolve(
+        cfg.bound,
+        cfg.variant,
+        cfg.protection,
+        &x,
+    );
+    qc.quantize_native(&x).words
+}
+
+fn main() {
+    let n = if std::env::var("LC_BENCH_QUICK").is_ok() {
+        1 << 18
+    } else {
+        1 << 23
+    };
+    let reps = 7;
+    let mut t = Table::new(vec!["stage", "input", "enc GB/s", "dec GB/s", "out/in"]);
+
+    for suite in [Suite::Cesm, Suite::Hacc] {
+        let words = quantized_words(suite, n);
+        let bytes = n * 4;
+
+        // delta
+        let m_enc = measure(1, reps, || {
+            let mut w = words.clone();
+            delta::encode(&mut w);
+            std::hint::black_box(w.len());
+        });
+        let mut encd = words.clone();
+        delta::encode(&mut encd);
+        let m_dec = measure(1, reps, || {
+            let mut w = encd.clone();
+            delta::decode(&mut w);
+            std::hint::black_box(w.len());
+        });
+        t.row(vec![
+            "delta".to_string(),
+            suite.name().to_string(),
+            format!("{:.2}", m_enc.gbs(bytes)),
+            format!("{:.2}", m_dec.gbs(bytes)),
+            "1.00".to_string(),
+        ]);
+
+        // bitshuffle
+        let m_enc = measure(1, reps, || {
+            std::hint::black_box(bitshuffle::encode(&words).len());
+        });
+        let shuf = bitshuffle::encode(&words);
+        let m_dec = measure(1, reps, || {
+            std::hint::black_box(bitshuffle::decode(&shuf, n).unwrap().len());
+        });
+        t.row(vec![
+            "bitshuffle".to_string(),
+            suite.name().to_string(),
+            format!("{:.2}", m_enc.gbs(bytes)),
+            format!("{:.2}", m_dec.gbs(bytes)),
+            "1.00".to_string(),
+        ]);
+
+        // rle over shuffled bytes
+        let shuf_bytes = lc::codec::words_to_bytes(&shuf);
+        let m_enc = measure(1, reps, || {
+            std::hint::black_box(rle::encode(&shuf_bytes).len());
+        });
+        let rled = rle::encode(&shuf_bytes);
+        let m_dec = measure(1, reps, || {
+            std::hint::black_box(rle::decode(&rled, shuf_bytes.len()).unwrap().len());
+        });
+        t.row(vec![
+            "rle0".to_string(),
+            suite.name().to_string(),
+            format!("{:.2}", m_enc.gbs(shuf_bytes.len())),
+            format!("{:.2}", m_dec.gbs(shuf_bytes.len())),
+            format!("{:.2}", rled.len() as f64 / shuf_bytes.len() as f64),
+        ]);
+
+        // huffman over the rle output
+        let m_enc = measure(1, reps, || {
+            std::hint::black_box(huffman::encode(&rled).len());
+        });
+        let huffed = huffman::encode(&rled);
+        let m_dec = measure(1, reps, || {
+            std::hint::black_box(huffman::decode(&huffed, rled.len()).unwrap().len());
+        });
+        t.row(vec![
+            "huffman".to_string(),
+            suite.name().to_string(),
+            format!("{:.2}", m_enc.gbs(rled.len())),
+            format!("{:.2}", m_dec.gbs(rled.len())),
+            format!("{:.2}", huffed.len() as f64 / rled.len() as f64),
+        ]);
+
+        // full default chain
+        let p = Pipeline::default_chain();
+        let m_enc = measure(1, reps, || {
+            std::hint::black_box(p.encode(&words).len());
+        });
+        let enc = p.encode(&words);
+        let m_dec = measure(1, reps, || {
+            std::hint::black_box(p.decode(&enc, n).unwrap().len());
+        });
+        t.row(vec![
+            "full chain".to_string(),
+            suite.name().to_string(),
+            format!("{:.2}", m_enc.gbs(bytes)),
+            format!("{:.2}", m_dec.gbs(bytes)),
+            format!("{:.3}", enc.len() as f64 / bytes as f64),
+        ]);
+        let _ = Stage::Delta;
+    }
+    print!("{}", t.render());
+}

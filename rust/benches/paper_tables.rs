@@ -1,0 +1,69 @@
+//! `cargo bench` entry: regenerate every table and figure of the
+//! paper's evaluation (Tables 3-9, Figures 1-4 as normalized columns).
+//!
+//! criterion is unavailable offline; this is a plain harness = false
+//! bench binary using lc::bench_util (9 reps, medians, like the paper).
+//!
+//! Environment knobs:
+//!   LC_BENCH_QUICK=1   small sizes (CI smoke)
+//!   LC_BENCH_PJRT=1    run the engine tables on the PJRT pipeline too
+
+use lc::runtime::{default_artifact_dir, PjrtService};
+use lc::tables::{self, EvalConfig};
+
+fn main() {
+    let quick = std::env::var("LC_BENCH_QUICK").is_ok();
+    let with_pjrt = std::env::var("LC_BENCH_PJRT").is_ok();
+    let ec = if quick {
+        EvalConfig::quick()
+    } else {
+        EvalConfig::default()
+    };
+
+    println!("=== Table 1: supported error-bound types ===");
+    print!("{}", tables::table1());
+
+    println!("\n=== Table 3: value handling (observed outcomes) ===");
+    print!("{}", tables::table3(if quick { 100_000 } else { 1_000_000 }));
+
+    println!("\n=== Table 4 / Figure 1: REL ratios, original vs replaced log/pow ===");
+    print!("{}", tables::table4(ec, None));
+
+    println!("\n=== Table 5 / Figure 2 (blue): REL compression throughput ===");
+    print!("{}", tables::table5_6(ec, None, false));
+
+    println!("\n=== Table 6 / Figure 2 (red): REL decompression throughput ===");
+    print!("{}", tables::table5_6(ec, None, true));
+
+    println!("\n=== Table 7 / Figure 3: ABS compression throughput, protected vs not ===");
+    print!("{}", tables::table7(ec, None));
+
+    println!("\n=== Table 8 / Figure 4: ABS ratios, protected vs not ===");
+    print!("{}", tables::table8(ec, None));
+
+    println!("\n=== Table 9: % values affected by rounding errors ===");
+    print!("{}", tables::table9(ec));
+
+    if with_pjrt {
+        let svc = PjrtService::start(&default_artifact_dir()).expect("make artifacts first");
+        let h = svc.handle();
+        let pec = if quick {
+            EvalConfig::quick()
+        } else {
+            // PJRT executions are chunk-serialized; keep sizes sane.
+            EvalConfig {
+                ratio_n: 1 << 19,
+                throughput_n: 1 << 21,
+                reps: 5,
+                max_files: 3,
+            }
+        };
+        println!("\n=== PJRT pipeline (the paper's 'GPU' side) ===");
+        println!("\n--- Table 4 on PJRT ---");
+        print!("{}", tables::table4(pec, Some(h.clone())));
+        println!("\n--- Table 7 on PJRT ---");
+        print!("{}", tables::table7(pec, Some(h.clone())));
+        println!("\n--- Table 8 on PJRT ---");
+        print!("{}", tables::table8(pec, Some(h)));
+    }
+}

@@ -1,0 +1,83 @@
+//! Quantizer hot-loop microbenchmarks (harness = false).
+//!
+//! Native scalar throughput per quantizer variant, plus the PJRT chunk
+//! execution latency when artifacts are present. The ABS quantize loop
+//! is the L3 hot path the performance pass optimizes.
+
+use lc::bench_util::{measure, Table};
+use lc::data::Suite;
+use lc::quantizer::{abs, rel};
+use lc::types::Protection::{Protected, Unprotected};
+use lc::types::{FnVariant, CHUNK_ELEMS};
+
+fn main() {
+    let n = if std::env::var("LC_BENCH_QUICK").is_ok() {
+        1 << 18
+    } else {
+        1 << 23
+    };
+    let reps = 7;
+    let x = Suite::Isabel.generate(0, n);
+    let bytes = n * 4;
+    let mut t = Table::new(vec!["quantizer", "enc GB/s", "dec GB/s"]);
+
+    let pa = abs::AbsParams::new(1e-3);
+    for (name, prot) in [("abs protected", Protected), ("abs unprotected", Unprotected)] {
+        let m = measure(1, reps, || {
+            std::hint::black_box(abs::quantize(&x, pa, prot).words.len());
+        });
+        let q = abs::quantize(&x, pa, prot);
+        let md = measure(1, reps, || {
+            std::hint::black_box(abs::dequantize(&q, pa).len());
+        });
+        t.row(vec![
+            name.to_string(),
+            format!("{:.3}", m.gbs(bytes)),
+            format!("{:.3}", md.gbs(bytes)),
+        ]);
+    }
+
+    let pr = rel::RelParams::new(1e-3);
+    for (name, variant) in [
+        ("rel approx", FnVariant::Approx),
+        ("rel native-libm", FnVariant::Native),
+    ] {
+        let m = measure(1, reps, || {
+            std::hint::black_box(rel::quantize(&x, pr, variant, Protected).words.len());
+        });
+        let q = rel::quantize(&x, pr, variant, Protected);
+        let md = measure(1, reps, || {
+            std::hint::black_box(rel::dequantize(&q, pr, variant).len());
+        });
+        t.row(vec![
+            name.to_string(),
+            format!("{:.3}", m.gbs(bytes)),
+            format!("{:.3}", md.gbs(bytes)),
+        ]);
+    }
+    print!("{}", t.render());
+
+    // PJRT chunk path, if artifacts are available.
+    match lc::runtime::PjrtService::start(&lc::runtime::default_artifact_dir()) {
+        Err(e) => println!("\n(PJRT bench skipped: {e})"),
+        Ok(svc) => {
+            let h = svc.handle();
+            let chunk = lc::runtime::pad_chunk(&x[..CHUNK_ELEMS.min(x.len())]);
+            let scal = pa.scalar_operand();
+            let m = measure(2, reps, || {
+                std::hint::black_box(
+                    h.quantize_chunk("abs_quant", chunk.clone(), scal)
+                        .unwrap()
+                        .words
+                        .len(),
+                );
+            });
+            println!(
+                "\nPJRT abs_quant chunk ({} values): {:?} median -> {:.3} GB/s",
+                CHUNK_ELEMS,
+                m.median,
+                m.gbs(CHUNK_ELEMS * 4)
+            );
+        }
+    }
+}

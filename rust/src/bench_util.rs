@@ -1,0 +1,161 @@
+//! Hand-rolled benchmark harness (criterion is unavailable in the
+//! offline build environment): warmup + N timed repetitions, median and
+//! MAD reporting, GB/s accounting, and the paper-style table printer.
+
+use std::time::{Duration, Instant};
+
+/// Result of one benchmark measurement.
+#[derive(Debug, Clone, Copy)]
+pub struct Measurement {
+    pub median: Duration,
+    pub mad: Duration,
+    pub reps: usize,
+}
+
+impl Measurement {
+    /// Throughput for `bytes` of uncompressed data per repetition.
+    pub fn gbs(&self, bytes: usize) -> f64 {
+        let s = self.median.as_secs_f64();
+        if s == 0.0 {
+            0.0
+        } else {
+            bytes as f64 / s / 1e9
+        }
+    }
+}
+
+/// Run `f` `reps` times after `warmup` runs; report median + MAD.
+/// The paper runs each experiment 9 times and reports medians.
+pub fn measure<F: FnMut()>(warmup: usize, reps: usize, mut f: F) -> Measurement {
+    for _ in 0..warmup {
+        f();
+    }
+    let mut times: Vec<Duration> = Vec::with_capacity(reps);
+    for _ in 0..reps {
+        let t0 = Instant::now();
+        f();
+        times.push(t0.elapsed());
+    }
+    times.sort();
+    let median = times[times.len() / 2];
+    let mut devs: Vec<Duration> = times
+        .iter()
+        .map(|t| {
+            if *t > median {
+                *t - median
+            } else {
+                median - *t
+            }
+        })
+        .collect();
+    devs.sort();
+    Measurement {
+        median,
+        mad: devs[devs.len() / 2],
+        reps,
+    }
+}
+
+/// Geometric mean (for per-suite compression ratios, as in the paper).
+pub fn geomean(values: &[f64]) -> f64 {
+    if values.is_empty() {
+        return 0.0;
+    }
+    (values.iter().map(|v| v.ln()).sum::<f64>() / values.len() as f64).exp()
+}
+
+/// Simple aligned table printer for the paper-style outputs.
+pub struct Table {
+    header: Vec<String>,
+    rows: Vec<Vec<String>>,
+}
+
+impl Table {
+    pub fn new<S: Into<String>>(header: Vec<S>) -> Table {
+        Table {
+            header: header.into_iter().map(Into::into).collect(),
+            rows: Vec::new(),
+        }
+    }
+
+    pub fn row<S: Into<String>>(&mut self, cells: Vec<S>) {
+        let cells: Vec<String> = cells.into_iter().map(Into::into).collect();
+        assert_eq!(cells.len(), self.header.len(), "ragged table row");
+        self.rows.push(cells);
+    }
+
+    pub fn render(&self) -> String {
+        let ncol = self.header.len();
+        let mut widths: Vec<usize> = self.header.iter().map(|h| h.chars().count()).collect();
+        for row in &self.rows {
+            for c in 0..ncol {
+                widths[c] = widths[c].max(row[c].chars().count());
+            }
+        }
+        let mut out = String::new();
+        let fmt_row = |cells: &[String], widths: &[usize]| -> String {
+            let mut line = String::new();
+            for (c, cell) in cells.iter().enumerate() {
+                if c > 0 {
+                    line.push_str("  ");
+                }
+                let pad = widths[c] - cell.chars().count();
+                if c == 0 {
+                    line.push_str(cell);
+                    line.push_str(&" ".repeat(pad));
+                } else {
+                    line.push_str(&" ".repeat(pad));
+                    line.push_str(cell);
+                }
+            }
+            line
+        };
+        out.push_str(&fmt_row(&self.header, &widths));
+        out.push('\n');
+        out.push_str(&"-".repeat(widths.iter().sum::<usize>() + 2 * (ncol - 1)));
+        out.push('\n');
+        for row in &self.rows {
+            out.push_str(&fmt_row(row, &widths));
+            out.push('\n');
+        }
+        out
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn measure_reports_plausible_times() {
+        let m = measure(1, 5, || {
+            std::hint::black_box((0..10_000).sum::<u64>());
+        });
+        assert_eq!(m.reps, 5);
+        assert!(m.median < Duration::from_millis(100));
+    }
+
+    #[test]
+    fn geomean_basics() {
+        assert!((geomean(&[2.0, 8.0]) - 4.0).abs() < 1e-12);
+        assert_eq!(geomean(&[]), 0.0);
+        assert!((geomean(&[5.0]) - 5.0).abs() < 1e-12);
+    }
+
+    #[test]
+    fn table_renders_aligned() {
+        let mut t = Table::new(vec!["name", "x"]);
+        t.row(vec!["a", "1.0"]);
+        t.row(vec!["longer", "22.5"]);
+        let s = t.render();
+        assert!(s.contains("longer"));
+        assert_eq!(s.lines().count(), 4);
+    }
+
+    #[test]
+    #[should_panic(expected = "ragged")]
+    fn table_rejects_ragged_rows() {
+        let mut t = Table::new(vec!["a", "b"]);
+        t.row(vec!["only-one"]);
+    }
+}

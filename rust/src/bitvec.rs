@@ -1,0 +1,185 @@
+//! Compact bit vector used for the in-line outlier bitmaps.
+//!
+//! One bit per value; set bits mark losslessly stored outliers. Stored
+//! with the chunk in the container so outliers stay "commingled" with
+//! the bin stream (Section 3.1), unlike SZ3's separate outlier list.
+
+/// A growable bit vector backed by u64 words.
+#[derive(Debug, Clone, PartialEq, Eq, Default)]
+pub struct BitVec {
+    words: Vec<u64>,
+    len: usize,
+}
+
+impl BitVec {
+    pub fn new() -> Self {
+        BitVec::default()
+    }
+
+    /// All-zero bitvec of the given length.
+    pub fn zeros(len: usize) -> Self {
+        BitVec {
+            words: vec![0; len.div_ceil(64)],
+            len,
+        }
+    }
+
+    pub fn with_capacity(bits: usize) -> Self {
+        BitVec {
+            words: Vec::with_capacity(bits.div_ceil(64)),
+            len: 0,
+        }
+    }
+
+    pub fn len(&self) -> usize {
+        self.len
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.len == 0
+    }
+
+    /// Append one bit.
+    #[inline]
+    pub fn push(&mut self, bit: bool) {
+        let w = self.len / 64;
+        if w == self.words.len() {
+            self.words.push(0);
+        }
+        if bit {
+            self.words[w] |= 1u64 << (self.len % 64);
+        }
+        self.len += 1;
+    }
+
+    #[inline]
+    pub fn get(&self, i: usize) -> bool {
+        assert!(i < self.len, "bit index {i} out of range {}", self.len);
+        (self.words[i / 64] >> (i % 64)) & 1 == 1
+    }
+
+    #[inline]
+    pub fn set(&mut self, i: usize, bit: bool) {
+        assert!(i < self.len, "bit index {i} out of range {}", self.len);
+        let mask = 1u64 << (i % 64);
+        if bit {
+            self.words[i / 64] |= mask;
+        } else {
+            self.words[i / 64] &= !mask;
+        }
+    }
+
+    pub fn count_ones(&self) -> usize {
+        self.words.iter().map(|w| w.count_ones() as usize).sum()
+    }
+
+    /// Serialize to little-endian bytes (length NOT included).
+    pub fn to_bytes(&self) -> Vec<u8> {
+        let nbytes = self.len.div_ceil(8);
+        let mut out = Vec::with_capacity(nbytes);
+        for i in 0..nbytes {
+            let w = self.words[i / 8];
+            out.push((w >> ((i % 8) * 8)) as u8);
+        }
+        out
+    }
+
+    /// Rebuild from `to_bytes` output plus the bit length.
+    pub fn from_bytes(bytes: &[u8], len: usize) -> Result<Self, String> {
+        if bytes.len() != len.div_ceil(8) {
+            return Err(format!(
+                "bitmap byte length {} does not match bit length {len}",
+                bytes.len()
+            ));
+        }
+        let mut words = vec![0u64; len.div_ceil(64)];
+        for (i, &b) in bytes.iter().enumerate() {
+            words[i / 8] |= (b as u64) << ((i % 8) * 8);
+        }
+        // Reject set bits past `len` (corrupt container).
+        if len % 64 != 0 {
+            if let Some(last) = words.last() {
+                if last >> (len % 64) != 0 {
+                    return Err("bitmap has bits set past its length".into());
+                }
+            }
+        }
+        Ok(BitVec { words, len })
+    }
+
+    /// Iterate over all bits.
+    pub fn iter(&self) -> impl Iterator<Item = bool> + '_ {
+        (0..self.len).map(move |i| self.get(i))
+    }
+
+    /// Bulk constructor from pre-packed u64 words (hot-path friendly;
+    /// bits past `len` must be zero).
+    pub fn from_raw(words: Vec<u64>, len: usize) -> Self {
+        debug_assert_eq!(words.len(), len.div_ceil(64));
+        BitVec { words, len }
+    }
+
+    /// Build from an iterator of bools.
+    pub fn from_iter<I: IntoIterator<Item = bool>>(it: I) -> Self {
+        let mut bv = BitVec::new();
+        for b in it {
+            bv.push(b);
+        }
+        bv
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn push_get_roundtrip() {
+        let mut bv = BitVec::new();
+        let pattern: Vec<bool> = (0..1000).map(|i| i % 3 == 0 || i % 7 == 0).collect();
+        for &b in &pattern {
+            bv.push(b);
+        }
+        assert_eq!(bv.len(), 1000);
+        for (i, &b) in pattern.iter().enumerate() {
+            assert_eq!(bv.get(i), b, "bit {i}");
+        }
+        assert_eq!(bv.count_ones(), pattern.iter().filter(|&&b| b).count());
+    }
+
+    #[test]
+    fn set_flips_bits() {
+        let mut bv = BitVec::zeros(130);
+        assert_eq!(bv.count_ones(), 0);
+        bv.set(0, true);
+        bv.set(64, true);
+        bv.set(129, true);
+        assert!(bv.get(0) && bv.get(64) && bv.get(129));
+        assert_eq!(bv.count_ones(), 3);
+        bv.set(64, false);
+        assert_eq!(bv.count_ones(), 2);
+    }
+
+    #[test]
+    fn bytes_roundtrip_all_lengths() {
+        for len in [0usize, 1, 7, 8, 9, 63, 64, 65, 127, 128, 1000] {
+            let bv = BitVec::from_iter((0..len).map(|i| i % 5 == 1));
+            let bytes = bv.to_bytes();
+            let back = BitVec::from_bytes(&bytes, len).unwrap();
+            assert_eq!(back, bv, "len {len}");
+        }
+    }
+
+    #[test]
+    fn from_bytes_rejects_bad_input() {
+        assert!(BitVec::from_bytes(&[0xFF], 4).is_err()); // bits past len
+        assert!(BitVec::from_bytes(&[0x0F], 4).is_ok());
+        assert!(BitVec::from_bytes(&[0, 0], 4).is_err()); // wrong byte count
+    }
+
+    #[test]
+    #[should_panic(expected = "out of range")]
+    fn get_out_of_range_panics() {
+        BitVec::zeros(8).get(8);
+    }
+}

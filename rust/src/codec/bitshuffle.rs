@@ -1,0 +1,130 @@
+//! Bit-plane shuffle (LC's BIT component analogue).
+//!
+//! Transposes blocks of 32 u32 words into 32 bit-planes so that the
+//! mostly-zero high bits of small zigzag codes form long zero runs for
+//! the RLE/entropy stages. The transform is a bijection on any word
+//! content; a trailing partial block is handled by zero-padding on
+//! encode and truncating on decode (the true length travels in the
+//! container header).
+
+/// Transpose one 32x32 bit matrix (words[i] bit j -> out[j] bit i).
+#[inline]
+fn transpose32(block: &[u32; 32]) -> [u32; 32] {
+    // Hacker's Delight 7-3: recursive block swap.
+    let mut a = *block;
+    let mut j = 16;
+    let mut m = 0x0000FFFFu32;
+    while j != 0 {
+        let mut k = 0;
+        while k < 32 {
+            let t = (a[k] ^ (a[k + j] >> j)) & m;
+            a[k] ^= t;
+            a[k + j] ^= t << j;
+            k = (k + j + 1) & !j;
+        }
+        j >>= 1;
+        m ^= m << j;
+    }
+    a
+}
+
+/// Shuffle: returns ceil(n/32)*32 words (padded).
+pub fn encode(words: &[u32]) -> Vec<u32> {
+    let nblocks = words.len().div_ceil(32);
+    let mut out = Vec::with_capacity(nblocks * 32);
+    let mut buf = [0u32; 32];
+    for b in 0..nblocks {
+        buf.fill(0);
+        let start = b * 32;
+        let take = (words.len() - start).min(32);
+        buf[..take].copy_from_slice(&words[start..start + take]);
+        // Transpose maps word-index to bit-index; reverse bit order so
+        // plane 0 holds bit 31 etc. (cosmetic, keeps planes contiguous).
+        out.extend_from_slice(&transpose32(&buf));
+    }
+    out
+}
+
+/// Inverse shuffle; `n` is the original word count.
+pub fn decode(shuffled: &[u32], n: usize) -> Result<Vec<u32>, String> {
+    if shuffled.len() != n.div_ceil(32) * 32 {
+        return Err(format!(
+            "bitshuffle payload {} words does not match count {n}",
+            shuffled.len()
+        ));
+    }
+    let mut out = Vec::with_capacity(n);
+    let mut buf = [0u32; 32];
+    for (b, block) in shuffled.chunks_exact(32).enumerate() {
+        buf.copy_from_slice(block);
+        let t = transpose32(&buf); // transpose is involutive
+        let start = b * 32;
+        let take = (n - start).min(32);
+        out.extend_from_slice(&t[..take]);
+    }
+    Ok(out)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn xorshift(seed: u64, n: usize) -> Vec<u32> {
+        let mut s = seed | 1;
+        (0..n)
+            .map(|_| {
+                s ^= s << 13;
+                s ^= s >> 7;
+                s ^= s << 17;
+                s as u32
+            })
+            .collect()
+    }
+
+    #[test]
+    fn transpose_is_involutive() {
+        let block: Vec<u32> = xorshift(7, 32);
+        let mut a = [0u32; 32];
+        a.copy_from_slice(&block);
+        assert_eq!(transpose32(&transpose32(&a)), a);
+    }
+
+    #[test]
+    fn roundtrip_exact_multiple() {
+        let w = xorshift(3, 320);
+        let enc = encode(&w);
+        assert_eq!(decode(&enc, 320).unwrap(), w);
+    }
+
+    #[test]
+    fn roundtrip_partial_block() {
+        for n in [1usize, 5, 31, 33, 63, 100] {
+            let w = xorshift(n as u64, n);
+            let enc = encode(&w);
+            assert_eq!(enc.len(), n.div_ceil(32) * 32);
+            assert_eq!(decode(&enc, n).unwrap(), w, "n={n}");
+        }
+    }
+
+    #[test]
+    fn small_codes_give_zero_planes() {
+        // Words < 256: bits 8..31 are zero -> 24 of 32 plane words per
+        // block are zero.
+        let w: Vec<u32> = (0..32u32).map(|i| i % 256).collect();
+        let enc = encode(&w);
+        let zeros = enc.iter().filter(|&&x| x == 0).count();
+        assert!(zeros >= 24, "zeros {zeros}");
+    }
+
+    #[test]
+    fn decode_rejects_bad_length() {
+        assert!(decode(&[0u32; 31], 31).is_err());
+        assert!(decode(&[0u32; 32], 33).is_err());
+    }
+
+    #[test]
+    fn empty() {
+        assert!(encode(&[]).is_empty());
+        assert!(decode(&[], 0).unwrap().is_empty());
+    }
+}

@@ -1,0 +1,85 @@
+//! Delta (1D Lorenzo) predictor over the quantized word stream.
+//!
+//! Neighbouring scientific-data values land in neighbouring bins; after
+//! zigzag the words are small non-negative integers, and wrapping
+//! deltas concentrate them near zero, which feeds the downstream RLE /
+//! entropy stages. Wrapping arithmetic makes the transform a bijection
+//! on u32 regardless of content (outlier raw-bit words included).
+
+/// In-place delta encode: out[i] = zigzag(w[i] - w[i-1]) (wrapping).
+/// The zigzag keeps small negative deltas small as u32 — without it a
+/// -1 delta becomes 0xFFFFFFFF and ruins the bit-shuffle's zero planes.
+pub fn encode(words: &mut [u32]) {
+    let mut prev = 0u32;
+    for w in words.iter_mut() {
+        let cur = *w;
+        let d = cur.wrapping_sub(prev) as i32;
+        *w = ((d << 1) ^ (d >> 31)) as u32;
+        prev = cur;
+    }
+}
+
+/// In-place inverse (unzigzag, then prefix sum, wrapping).
+pub fn decode(words: &mut [u32]) {
+    let mut acc = 0u32;
+    for w in words.iter_mut() {
+        let d = ((*w >> 1) as i32) ^ -((*w & 1) as i32);
+        acc = acc.wrapping_add(d as u32);
+        *w = acc;
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn roundtrip_random() {
+        let mut rng = 0x12345u64;
+        let orig: Vec<u32> = (0..10_000)
+            .map(|_| {
+                rng ^= rng << 13;
+                rng ^= rng >> 7;
+                rng ^= rng << 17;
+                rng as u32
+            })
+            .collect();
+        let mut w = orig.clone();
+        encode(&mut w);
+        decode(&mut w);
+        assert_eq!(w, orig);
+    }
+
+    #[test]
+    fn smooth_data_becomes_small() {
+        let mut w: Vec<u32> = (0..1000u32).map(|i| 1000 + i * 2).collect();
+        encode(&mut w);
+        assert_eq!(w[0], 2000); // zigzag(1000)
+        assert!(w[1..].iter().all(|&d| d == 4)); // zigzag(+2)
+        let mut down: Vec<u32> = (0..100u32).map(|i| 1000 - i).collect();
+        encode(&mut down);
+        assert!(down[1..].iter().all(|&d| d == 1)); // zigzag(-1) stays tiny
+    }
+
+    #[test]
+    fn wrapping_at_extremes() {
+        let orig = vec![0u32, u32::MAX, 0, 1, u32::MAX];
+        let mut w = orig.clone();
+        encode(&mut w);
+        decode(&mut w);
+        assert_eq!(w, orig);
+    }
+
+    #[test]
+    fn empty_and_single() {
+        let mut w: Vec<u32> = vec![];
+        encode(&mut w);
+        decode(&mut w);
+        assert!(w.is_empty());
+        let mut w = vec![42u32];
+        encode(&mut w);
+        assert_eq!(w, [84]); // zigzag(42)
+        decode(&mut w);
+        assert_eq!(w, [42]);
+    }
+}

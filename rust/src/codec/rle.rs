@@ -1,0 +1,167 @@
+//! Zero-run-length encoding (LC's RZE/RRE component analogue).
+//!
+//! After delta + bit-shuffle the byte stream is dominated by zero runs.
+//! Format: a literal 0x00 never appears bare — every zero byte starts a
+//! run token `0x00 <varint run_len>`; all other bytes are copied.
+
+/// LEB128 varint append.
+fn push_varint(out: &mut Vec<u8>, mut v: u64) {
+    loop {
+        let b = (v & 0x7F) as u8;
+        v >>= 7;
+        if v == 0 {
+            out.push(b);
+            break;
+        }
+        out.push(b | 0x80);
+    }
+}
+
+/// LEB128 varint read; returns (value, bytes consumed).
+fn read_varint(data: &[u8]) -> Result<(u64, usize), String> {
+    let mut v = 0u64;
+    let mut shift = 0u32;
+    for (i, &b) in data.iter().enumerate() {
+        if shift >= 64 {
+            return Err("varint overflow".into());
+        }
+        v |= ((b & 0x7F) as u64) << shift;
+        if b & 0x80 == 0 {
+            return Ok((v, i + 1));
+        }
+        shift += 7;
+    }
+    Err("truncated varint".into())
+}
+
+/// Encode zero runs (u64-at-a-time zero scanning on the hot path).
+pub fn encode(data: &[u8]) -> Vec<u8> {
+    let mut out = Vec::with_capacity(data.len() / 2 + 16);
+    let mut i = 0;
+    let n = data.len();
+    while i < n {
+        if data[i] == 0 {
+            let start = i;
+            i += 1;
+            // Skip 8 zero bytes at a time.
+            while i + 8 <= n {
+                let w = u64::from_le_bytes(data[i..i + 8].try_into().unwrap());
+                if w == 0 {
+                    i += 8;
+                } else {
+                    i += (w.trailing_zeros() / 8) as usize;
+                    break;
+                }
+            }
+            while i < n && data[i] == 0 {
+                i += 1;
+            }
+            out.push(0);
+            push_varint(&mut out, (i - start) as u64);
+        } else {
+            // Copy a literal run in one memcpy: find the next zero.
+            let start = i;
+            i += 1;
+            while i + 8 <= n {
+                let w = u64::from_le_bytes(data[i..i + 8].try_into().unwrap());
+                let has_zero = w.wrapping_sub(0x0101_0101_0101_0101) & !w & 0x8080_8080_8080_8080;
+                if has_zero == 0 {
+                    i += 8;
+                } else {
+                    i += (has_zero.trailing_zeros() / 8) as usize;
+                    break;
+                }
+            }
+            while i < n && data[i] != 0 {
+                i += 1;
+            }
+            out.extend_from_slice(&data[start..i]);
+        }
+    }
+    out
+}
+
+/// Decode; fails on truncated or oversized payloads.
+pub fn decode(data: &[u8], expected_len: usize) -> Result<Vec<u8>, String> {
+    let mut out = Vec::with_capacity(expected_len);
+    let mut i = 0;
+    while i < data.len() {
+        if data[i] == 0 {
+            let (run, used) = read_varint(&data[i + 1..])?;
+            i += 1 + used;
+            if run == 0 {
+                return Err("zero-length run".into());
+            }
+            if out.len() + run as usize > expected_len {
+                return Err("run overflows expected length".into());
+            }
+            out.resize(out.len() + run as usize, 0);
+        } else {
+            out.push(data[i]);
+            i += 1;
+        }
+    }
+    if out.len() != expected_len {
+        return Err(format!(
+            "rle decoded {} bytes, expected {expected_len}",
+            out.len()
+        ));
+    }
+    Ok(out)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn roundtrip(data: &[u8]) {
+        let enc = encode(data);
+        assert_eq!(decode(&enc, data.len()).unwrap(), data);
+    }
+
+    #[test]
+    fn roundtrips() {
+        roundtrip(&[]);
+        roundtrip(&[0]);
+        roundtrip(&[1, 2, 3]);
+        roundtrip(&[0, 0, 0, 0]);
+        roundtrip(&[1, 0, 2, 0, 0, 3, 0, 0, 0]);
+        roundtrip(&vec![0u8; 100_000]);
+        let mixed: Vec<u8> = (0..50_000)
+            .map(|i| if i % 7 < 5 { 0 } else { (i % 251) as u8 + 1 })
+            .collect();
+        roundtrip(&mixed);
+    }
+
+    #[test]
+    fn long_runs_compress() {
+        let data = vec![0u8; 1_000_000];
+        let enc = encode(&data);
+        assert!(enc.len() < 8, "1M zeros -> {} bytes", enc.len());
+    }
+
+    #[test]
+    fn incompressible_overhead_is_zero() {
+        let data: Vec<u8> = (0..1000).map(|i| (i % 255) as u8 + 1).collect();
+        assert_eq!(encode(&data).len(), data.len());
+    }
+
+    #[test]
+    fn decode_rejects_corruption() {
+        assert!(decode(&[0], 5).is_err()); // truncated varint
+        assert!(decode(&[0, 0], 5).is_err()); // zero-length run
+        assert!(decode(&[0, 10], 5).is_err()); // overflows expected
+        assert!(decode(&[1, 2], 5).is_err()); // short output
+    }
+
+    #[test]
+    fn varint_boundaries() {
+        for v in [0u64, 1, 127, 128, 16383, 16384, u32::MAX as u64] {
+            let mut buf = vec![];
+            push_varint(&mut buf, v);
+            let (got, used) = read_varint(&buf).unwrap();
+            assert_eq!(got, v);
+            assert_eq!(used, buf.len());
+        }
+    }
+}

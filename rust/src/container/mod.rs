@@ -1,0 +1,322 @@
+//! The `.lcz` container format.
+//!
+//! Layout (all integers little-endian):
+//!
+//! ```text
+//! [magic "LCZ1" (4)] [flags u8] [eb_kind u8] [variant u8] [protection u8]
+//! [epsilon f32] [effective_epsilon f32] [n_values u64] [chunk_size u32]
+//! [n_stages u8] [stage tags ...] [n_chunks u32]
+//! then per chunk:
+//!   [n_values u32] [outlier_bytes u32] [payload_bytes u32] [crc32 u32]
+//!   [outlier bitmap bytes] [payload bytes]
+//! [file crc32 u32 over everything before it]
+//! ```
+//!
+//! The outlier bitmap travels with each chunk ("in-line", Section 3.1),
+//! compressed as part of the integrity-checked chunk record. The
+//! effective epsilon records the NOA->ABS resolution so the decoder
+//! needs no second pass over the data.
+
+pub mod crc;
+
+use crate::bitvec::BitVec;
+use crate::codec::{Pipeline, Stage};
+use crate::types::{ErrorBound, FnVariant, Protection};
+
+use crc::{crc32, Crc32};
+
+pub const MAGIC: &[u8; 4] = b"LCZ1";
+
+/// Parsed container header.
+#[derive(Debug, Clone, PartialEq)]
+pub struct Header {
+    pub bound: ErrorBound,
+    /// ABS epsilon actually used for binning (NOA resolves to this).
+    pub effective_epsilon: f32,
+    pub variant: FnVariant,
+    pub protection: Protection,
+    pub n_values: u64,
+    pub chunk_size: u32,
+    pub stages: Vec<Stage>,
+    pub n_chunks: u32,
+}
+
+/// One encoded chunk record.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct ChunkRecord {
+    pub n_values: u32,
+    pub outlier_bytes: Vec<u8>,
+    pub payload: Vec<u8>,
+}
+
+/// A fully assembled compressed file (in memory).
+#[derive(Debug, Clone, PartialEq)]
+pub struct Container {
+    pub header: Header,
+    pub chunks: Vec<ChunkRecord>,
+}
+
+fn variant_tag(v: FnVariant) -> u8 {
+    match v {
+        FnVariant::Approx => 0,
+        FnVariant::Native => 1,
+    }
+}
+
+fn protection_tag(p: Protection) -> u8 {
+    match p {
+        Protection::Protected => 0,
+        Protection::Unprotected => 1,
+    }
+}
+
+impl Container {
+    /// Serialize to bytes.
+    pub fn to_bytes(&self) -> Vec<u8> {
+        let h = &self.header;
+        let mut out = Vec::new();
+        out.extend_from_slice(MAGIC);
+        out.push(0); // flags, reserved
+        out.push(h.bound.kind_tag());
+        out.push(variant_tag(h.variant));
+        out.push(protection_tag(h.protection));
+        out.extend_from_slice(&h.bound.epsilon().to_le_bytes());
+        out.extend_from_slice(&h.effective_epsilon.to_le_bytes());
+        out.extend_from_slice(&h.n_values.to_le_bytes());
+        out.extend_from_slice(&h.chunk_size.to_le_bytes());
+        out.push(h.stages.len() as u8);
+        for s in &h.stages {
+            out.push(s.tag());
+        }
+        out.extend_from_slice(&(self.chunks.len() as u32).to_le_bytes());
+        for c in &self.chunks {
+            let mut crc = Crc32::new();
+            crc.update(&c.outlier_bytes);
+            crc.update(&c.payload);
+            out.extend_from_slice(&c.n_values.to_le_bytes());
+            out.extend_from_slice(&(c.outlier_bytes.len() as u32).to_le_bytes());
+            out.extend_from_slice(&(c.payload.len() as u32).to_le_bytes());
+            out.extend_from_slice(&crc.finalize().to_le_bytes());
+            out.extend_from_slice(&c.outlier_bytes);
+            out.extend_from_slice(&c.payload);
+        }
+        let file_crc = crc32(&out);
+        out.extend_from_slice(&file_crc.to_le_bytes());
+        out
+    }
+
+    /// Parse and fully validate a container.
+    pub fn from_bytes(data: &[u8]) -> Result<Container, String> {
+        let mut r = Reader { data, pos: 0 };
+        if r.take(4)? != MAGIC {
+            return Err("bad magic (not an LCZ1 file)".into());
+        }
+        let _flags = r.u8()?;
+        let eb_kind = r.u8()?;
+        let variant = match r.u8()? {
+            0 => FnVariant::Approx,
+            1 => FnVariant::Native,
+            t => return Err(format!("bad variant tag {t}")),
+        };
+        let protection = match r.u8()? {
+            0 => Protection::Protected,
+            1 => Protection::Unprotected,
+            t => return Err(format!("bad protection tag {t}")),
+        };
+        let epsilon = f32::from_le_bytes(r.take(4)?.try_into().unwrap());
+        let effective = f32::from_le_bytes(r.take(4)?.try_into().unwrap());
+        let bound =
+            ErrorBound::from_tag(eb_kind, epsilon).ok_or(format!("bad bound tag {eb_kind}"))?;
+        let n_values = u64::from_le_bytes(r.take(8)?.try_into().unwrap());
+        let chunk_size = r.u32()?;
+        if chunk_size == 0 {
+            return Err("zero chunk size".into());
+        }
+        let n_stages = r.u8()? as usize;
+        let mut stages = Vec::with_capacity(n_stages);
+        for _ in 0..n_stages {
+            let t = r.u8()?;
+            stages.push(Stage::from_tag(t).ok_or(format!("bad stage tag {t}"))?);
+        }
+        let n_chunks = r.u32()?;
+        let mut chunks = Vec::with_capacity(n_chunks as usize);
+        for i in 0..n_chunks {
+            let n = r.u32()?;
+            let ob = r.u32()? as usize;
+            let pb = r.u32()? as usize;
+            let want_crc = r.u32()?;
+            let outlier_bytes = r.take(ob)?.to_vec();
+            let payload = r.take(pb)?.to_vec();
+            let mut crc = Crc32::new();
+            crc.update(&outlier_bytes);
+            crc.update(&payload);
+            if crc.finalize() != want_crc {
+                return Err(format!("chunk {i} CRC mismatch"));
+            }
+            chunks.push(ChunkRecord {
+                n_values: n,
+                outlier_bytes,
+                payload,
+            });
+        }
+        let body_end = r.pos;
+        let file_crc = r.u32()?;
+        if crc32(&data[..body_end]) != file_crc {
+            return Err("file CRC mismatch".into());
+        }
+        if r.pos != data.len() {
+            return Err("trailing garbage after container".into());
+        }
+        let total: u64 = chunks.iter().map(|c| c.n_values as u64).sum();
+        if total != n_values {
+            return Err(format!("chunk values {total} != header {n_values}"));
+        }
+        Ok(Container {
+            header: Header {
+                bound,
+                effective_epsilon: effective,
+                variant,
+                protection,
+                n_values,
+                chunk_size,
+                stages,
+                n_chunks,
+            },
+            chunks,
+        })
+    }
+
+    /// Reconstruct the stage pipeline recorded in the header.
+    pub fn pipeline(&self) -> Result<Pipeline, String> {
+        Pipeline::new(self.header.stages.clone())
+    }
+
+    /// Total serialized size (for compression-ratio accounting).
+    pub fn compressed_size(&self) -> usize {
+        self.to_bytes().len()
+    }
+}
+
+/// Decode one chunk record back to words + outlier map. The outlier
+/// bitmap is RLE-compressed in the record (an uncompressed bitmap
+/// would cap the achievable ratio at 32x).
+pub fn decode_chunk(
+    rec: &ChunkRecord,
+    pipeline: &Pipeline,
+) -> Result<(Vec<u32>, BitVec), String> {
+    let words = pipeline.decode(&rec.payload, rec.n_values as usize)?;
+    let n = rec.n_values as usize;
+    let bitmap = crate::codec::rle::decode(&rec.outlier_bytes, n.div_ceil(8))?;
+    let outliers = BitVec::from_bytes(&bitmap, n)?;
+    Ok((words, outliers))
+}
+
+struct Reader<'a> {
+    data: &'a [u8],
+    pos: usize,
+}
+
+impl<'a> Reader<'a> {
+    fn take(&mut self, n: usize) -> Result<&'a [u8], String> {
+        if self.pos + n > self.data.len() {
+            return Err("truncated container".into());
+        }
+        let s = &self.data[self.pos..self.pos + n];
+        self.pos += n;
+        Ok(s)
+    }
+
+    fn u8(&mut self) -> Result<u8, String> {
+        Ok(self.take(1)?[0])
+    }
+
+    fn u32(&mut self) -> Result<u32, String> {
+        Ok(u32::from_le_bytes(self.take(4)?.try_into().unwrap()))
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn sample() -> Container {
+        Container {
+            header: Header {
+                bound: ErrorBound::Abs(1e-3),
+                effective_epsilon: 1e-3,
+                variant: FnVariant::Approx,
+                protection: Protection::Protected,
+                n_values: 150,
+                chunk_size: 100,
+                stages: vec![Stage::Delta, Stage::BitShuffle, Stage::Rle0, Stage::Huffman],
+                n_chunks: 2,
+            },
+            chunks: vec![
+                ChunkRecord {
+                    n_values: 100,
+                    outlier_bytes: vec![0xAA; 13],
+                    payload: vec![1, 2, 3, 4, 5],
+                },
+                ChunkRecord {
+                    n_values: 50,
+                    outlier_bytes: vec![0x00; 7],
+                    payload: vec![9; 40],
+                },
+            ],
+        }
+    }
+
+    #[test]
+    fn roundtrip() {
+        let c = sample();
+        let bytes = c.to_bytes();
+        let back = Container::from_bytes(&bytes).unwrap();
+        assert_eq!(back, c);
+    }
+
+    #[test]
+    fn detects_bit_flips_anywhere() {
+        let bytes = sample().to_bytes();
+        // Flip every 13th byte and confirm *some* check fires; payload
+        // flips must fire the chunk CRC, header flips the file CRC or a
+        // parse error.
+        for i in (0..bytes.len()).step_by(13) {
+            let mut bad = bytes.clone();
+            bad[i] ^= 0x10;
+            assert!(
+                Container::from_bytes(&bad).is_err(),
+                "flip at {i} went undetected"
+            );
+        }
+    }
+
+    #[test]
+    fn rejects_truncation() {
+        let bytes = sample().to_bytes();
+        for cut in [0usize, 3, 10, bytes.len() - 1] {
+            assert!(Container::from_bytes(&bytes[..cut]).is_err(), "cut {cut}");
+        }
+    }
+
+    #[test]
+    fn rejects_trailing_garbage() {
+        let mut bytes = sample().to_bytes();
+        bytes.push(0);
+        assert!(Container::from_bytes(&bytes).is_err());
+    }
+
+    #[test]
+    fn rejects_wrong_magic() {
+        let mut bytes = sample().to_bytes();
+        bytes[0] = b'X';
+        assert!(Container::from_bytes(&bytes).is_err());
+    }
+
+    #[test]
+    fn header_value_mismatch_detected() {
+        let mut c = sample();
+        c.header.n_values = 151; // header lies about total values
+        let bytes = c.to_bytes();
+        assert!(Container::from_bytes(&bytes).is_err());
+    }
+}

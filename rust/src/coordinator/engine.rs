@@ -1,0 +1,388 @@
+//! The compression engine: chunking, worker pool, assembly.
+//!
+//! This is the LC-framework analogue and the L3 "coordination"
+//! contribution: the quantizer (native or PJRT) plus the lossless stage
+//! chain run per chunk across a worker pool; chunk records are
+//! assembled in order into the container. Parallelism is work-stealing
+//! over a shared atomic chunk cursor — chunk outputs are independent,
+//! so no inter-worker synchronization is needed beyond the cursor.
+
+use std::sync::atomic::{AtomicUsize, Ordering};
+use std::sync::Mutex;
+use std::time::Instant;
+
+use anyhow::{anyhow, Result};
+
+use crate::codec::Pipeline;
+use crate::container::{ChunkRecord, Container, Header};
+use crate::quantizer::QuantizerConfig;
+use crate::runtime::PjrtHandle;
+use crate::types::{Device, ErrorBound, FnVariant, Protection, QuantizedChunk, CHUNK_ELEMS};
+
+use super::metrics::RunStats;
+
+/// Engine configuration.
+#[derive(Clone)]
+pub struct EngineConfig {
+    pub bound: ErrorBound,
+    pub variant: FnVariant,
+    pub protection: Protection,
+    pub device: Device,
+    pub pipeline: Pipeline,
+    /// Worker threads (0 = available parallelism).
+    pub workers: usize,
+    /// Values per chunk. Must equal CHUNK_ELEMS when device == Pjrt
+    /// (the AOT artifacts have a fixed shape).
+    pub chunk_size: usize,
+    /// PJRT handle, required when device == Pjrt.
+    pub pjrt: Option<PjrtHandle>,
+}
+
+impl EngineConfig {
+    pub fn native(bound: ErrorBound) -> EngineConfig {
+        EngineConfig {
+            bound,
+            variant: FnVariant::Approx,
+            protection: Protection::Protected,
+            device: Device::Native,
+            pipeline: Pipeline::default_chain(),
+            workers: 0,
+            chunk_size: CHUNK_ELEMS,
+            pjrt: None,
+        }
+    }
+
+    pub fn pjrt(bound: ErrorBound, handle: PjrtHandle) -> EngineConfig {
+        EngineConfig {
+            pjrt: Some(handle),
+            device: Device::Pjrt,
+            ..EngineConfig::native(bound)
+        }
+    }
+
+    fn effective_workers(&self) -> usize {
+        if self.workers > 0 {
+            self.workers
+        } else {
+            std::thread::available_parallelism()
+                .map(|n| n.get())
+                .unwrap_or(1)
+        }
+    }
+
+    fn validate(&self) -> Result<()> {
+        self.bound.validate().map_err(|e| anyhow!(e))?;
+        if self.chunk_size == 0 {
+            return Err(anyhow!("chunk_size must be positive"));
+        }
+        if self.device == Device::Pjrt {
+            if self.chunk_size != CHUNK_ELEMS {
+                return Err(anyhow!(
+                    "PJRT device requires chunk_size == {CHUNK_ELEMS} (AOT shape)"
+                ));
+            }
+            if self.pjrt.is_none() {
+                return Err(anyhow!("PJRT device requires a PjrtHandle"));
+            }
+        }
+        Ok(())
+    }
+}
+
+/// Quantize one (possibly short) chunk on the configured device.
+pub(crate) fn quantize_on(
+    cfg: &EngineConfig,
+    qc: &QuantizerConfig,
+    chunk: &[f32],
+) -> Result<QuantizedChunk> {
+    match cfg.device {
+        Device::Native => Ok(qc.quantize_native(chunk)),
+        Device::Pjrt => {
+            let handle = cfg.pjrt.as_ref().expect("validated");
+            let padded = crate::runtime::pad_chunk(chunk);
+            let mut q =
+                handle.quantize_chunk(qc.quant_artifact(), padded, qc.scalar_operand())?;
+            // Trim padding lanes.
+            q.words.truncate(chunk.len());
+            let trimmed = crate::bitvec::BitVec::from_iter(
+                (0..chunk.len()).map(|i| q.outliers.get(i)),
+            );
+            Ok(QuantizedChunk {
+                words: q.words,
+                outliers: trimmed,
+            })
+        }
+    }
+}
+
+/// Dequantize one chunk record's words on the configured device.
+fn dequantize_chunk(
+    cfg: &EngineConfig,
+    qc: &QuantizerConfig,
+    chunk: &QuantizedChunk,
+) -> Result<Vec<f32>> {
+    match cfg.device {
+        Device::Native => Ok(qc.dequantize_native(chunk)),
+        Device::Pjrt => {
+            let handle = cfg.pjrt.as_ref().expect("validated");
+            let n = chunk.words.len();
+            let mut words = chunk.words.clone();
+            words.resize(CHUNK_ELEMS, 0);
+            let mut flags = crate::bitvec::BitVec::zeros(CHUNK_ELEMS);
+            for i in 0..n {
+                flags.set(i, chunk.outliers.get(i));
+            }
+            let padded = QuantizedChunk {
+                words,
+                outliers: flags,
+            };
+            let mut y =
+                handle.dequantize_chunk(qc.dequant_artifact(), padded, qc.scalar_operand())?;
+            y.truncate(n);
+            Ok(y)
+        }
+    }
+}
+
+/// Compress a full in-memory buffer. Returns the container + stats.
+pub fn compress(cfg: &EngineConfig, data: &[f32]) -> Result<(Container, RunStats)> {
+    cfg.validate()?;
+    let t0 = Instant::now();
+    let qc = QuantizerConfig::resolve(cfg.bound, cfg.variant, cfg.protection, data);
+    let chunks: Vec<&[f32]> = data.chunks(cfg.chunk_size).collect();
+    let n_chunks = chunks.len();
+    let records: Mutex<Vec<Option<(ChunkRecord, usize)>>> = Mutex::new(vec![None; n_chunks]);
+    let cursor = AtomicUsize::new(0);
+    let workers = cfg.effective_workers().min(n_chunks.max(1));
+    let err: Mutex<Option<anyhow::Error>> = Mutex::new(None);
+
+    std::thread::scope(|s| {
+        for _ in 0..workers {
+            s.spawn(|| loop {
+                let i = cursor.fetch_add(1, Ordering::Relaxed);
+                if i >= n_chunks {
+                    break;
+                }
+                match quantize_on(cfg, &qc, chunks[i]) {
+                    Ok(q) => {
+                        let payload = cfg.pipeline.encode(&q.words);
+                        let rec = ChunkRecord {
+                            n_values: chunks[i].len() as u32,
+                            // RLE keeps the (almost always zero) bitmap
+                            // from capping the ratio at 32x.
+                            outlier_bytes: crate::codec::rle::encode(&q.outliers.to_bytes()),
+                            payload,
+                        };
+                        let outliers = q.outlier_count();
+                        records.lock().unwrap()[i] = Some((rec, outliers));
+                    }
+                    Err(e) => {
+                        *err.lock().unwrap() = Some(e);
+                        break;
+                    }
+                }
+            });
+        }
+    });
+    if let Some(e) = err.into_inner().unwrap() {
+        return Err(e);
+    }
+
+    let mut chunk_records = Vec::with_capacity(n_chunks);
+    let mut total_outliers = 0usize;
+    for slot in records.into_inner().unwrap() {
+        let (rec, outliers) = slot.ok_or_else(|| anyhow!("worker died mid-chunk"))?;
+        total_outliers += outliers;
+        chunk_records.push(rec);
+    }
+
+    let container = Container {
+        header: Header {
+            bound: cfg.bound,
+            effective_epsilon: qc.effective_epsilon(),
+            variant: cfg.variant,
+            protection: cfg.protection,
+            n_values: data.len() as u64,
+            chunk_size: cfg.chunk_size as u32,
+            stages: cfg.pipeline.stages().to_vec(),
+            n_chunks: n_chunks as u32,
+        },
+        chunks: chunk_records,
+    };
+    let out_bytes = container.compressed_size();
+    let stats = RunStats {
+        n_values: data.len(),
+        input_bytes: data.len() * 4,
+        output_bytes: out_bytes,
+        outliers: total_outliers,
+        wall: t0.elapsed(),
+    };
+    Ok((container, stats))
+}
+
+/// Decompress a container back to values.
+pub fn decompress(cfg: &EngineConfig, container: &Container) -> Result<(Vec<f32>, RunStats)> {
+    cfg.validate()?;
+    let t0 = Instant::now();
+    let h = &container.header;
+    // Rebuild quantizer params from the header (NOA was resolved to an
+    // effective ABS epsilon at compression time).
+    let qc = match h.bound {
+        ErrorBound::Abs(_) | ErrorBound::Noa(_) => QuantizerConfig::Abs(
+            crate::quantizer::abs::AbsParams::new(h.effective_epsilon),
+            h.protection,
+        ),
+        ErrorBound::Rel(e) => QuantizerConfig::Rel(
+            crate::quantizer::rel::RelParams::new(e),
+            h.variant,
+            h.protection,
+        ),
+    };
+    let pipeline = container.pipeline().map_err(|e| anyhow!(e))?;
+    let n_chunks = container.chunks.len();
+    let outputs: Mutex<Vec<Option<Vec<f32>>>> = Mutex::new(vec![None; n_chunks]);
+    let cursor = AtomicUsize::new(0);
+    let workers = cfg.effective_workers().min(n_chunks.max(1));
+    let err: Mutex<Option<anyhow::Error>> = Mutex::new(None);
+
+    std::thread::scope(|s| {
+        for _ in 0..workers {
+            s.spawn(|| loop {
+                let i = cursor.fetch_add(1, Ordering::Relaxed);
+                if i >= n_chunks {
+                    break;
+                }
+                let rec = &container.chunks[i];
+                let decoded = crate::container::decode_chunk(rec, &pipeline)
+                    .map_err(|e| anyhow!(e))
+                    .and_then(|(words, outliers)| {
+                        dequantize_chunk(cfg, &qc, &QuantizedChunk { words, outliers })
+                    });
+                match decoded {
+                    Ok(v) => outputs.lock().unwrap()[i] = Some(v),
+                    Err(e) => {
+                        *err.lock().unwrap() = Some(e);
+                        break;
+                    }
+                }
+            });
+        }
+    });
+    if let Some(e) = err.into_inner().unwrap() {
+        return Err(e);
+    }
+
+    let mut out = Vec::with_capacity(h.n_values as usize);
+    for slot in outputs.into_inner().unwrap() {
+        out.extend(slot.ok_or_else(|| anyhow!("worker died mid-chunk"))?);
+    }
+    if out.len() != h.n_values as usize {
+        return Err(anyhow!(
+            "decompressed {} values, header says {}",
+            out.len(),
+            h.n_values
+        ));
+    }
+    let stats = RunStats {
+        n_values: out.len(),
+        input_bytes: out.len() * 4,
+        output_bytes: container.compressed_size(),
+        outliers: 0,
+        wall: t0.elapsed(),
+    };
+    Ok((out, stats))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::data::Suite;
+
+    fn roundtrip_cfg(cfg: &EngineConfig, x: &[f32]) -> Vec<f32> {
+        let (container, stats) = compress(cfg, x).unwrap();
+        assert_eq!(stats.n_values, x.len());
+        // serialize + reparse to exercise the container
+        let bytes = container.to_bytes();
+        let parsed = Container::from_bytes(&bytes).unwrap();
+        let (y, _) = decompress(cfg, &parsed).unwrap();
+        y
+    }
+
+    #[test]
+    fn native_abs_roundtrip_multi_chunk() {
+        let x = Suite::Cesm.generate(0, CHUNK_ELEMS * 3 + 777);
+        let cfg = EngineConfig::native(ErrorBound::Abs(1e-3));
+        let y = roundtrip_cfg(&cfg, &x);
+        assert_eq!(crate::verify::metrics::abs_violations(&x, &y, 1e-3), 0);
+    }
+
+    #[test]
+    fn native_rel_roundtrip() {
+        let x = Suite::Nyx.generate(0, CHUNK_ELEMS + 13);
+        let cfg = EngineConfig::native(ErrorBound::Rel(1e-3));
+        let y = roundtrip_cfg(&cfg, &x);
+        assert_eq!(crate::verify::metrics::rel_violations(&x, &y, 1e-3), 0);
+    }
+
+    #[test]
+    fn native_noa_roundtrip() {
+        let x = Suite::Scale.generate(1, 100_000);
+        let cfg = EngineConfig::native(ErrorBound::Noa(1e-4));
+        let (container, _) = compress(&cfg, &x).unwrap();
+        let eff = container.header.effective_epsilon;
+        let (y, _) = decompress(&cfg, &container).unwrap();
+        assert_eq!(crate::verify::metrics::abs_violations(&x, &y, eff), 0);
+    }
+
+    #[test]
+    fn specials_roundtrip_through_engine() {
+        let mut x = Suite::Cesm.generate(0, 10_000);
+        x[5] = f32::NAN;
+        x[100] = f32::INFINITY;
+        x[200] = f32::NEG_INFINITY;
+        x[300] = f32::from_bits(7); // denormal
+        let cfg = EngineConfig::native(ErrorBound::Abs(1e-2));
+        let y = roundtrip_cfg(&cfg, &x);
+        assert!(y[5].is_nan());
+        assert_eq!(y[100], f32::INFINITY);
+        assert_eq!(y[200], f32::NEG_INFINITY);
+        assert_eq!(crate::verify::metrics::abs_violations(&x, &y, 1e-2), 0);
+    }
+
+    #[test]
+    fn worker_counts_agree() {
+        let x = Suite::Exaalt.generate(0, CHUNK_ELEMS * 4);
+        let mut c1 = EngineConfig::native(ErrorBound::Abs(1e-3));
+        c1.workers = 1;
+        let mut c8 = c1.clone();
+        c8.workers = 8;
+        let (a, _) = compress(&c1, &x).unwrap();
+        let (b, _) = compress(&c8, &x).unwrap();
+        assert_eq!(a.to_bytes(), b.to_bytes(), "parallelism must not change output");
+    }
+
+    #[test]
+    fn empty_input() {
+        let cfg = EngineConfig::native(ErrorBound::Abs(1e-3));
+        let y = roundtrip_cfg(&cfg, &[]);
+        assert!(y.is_empty());
+    }
+
+    #[test]
+    fn invalid_config_rejected() {
+        let mut cfg = EngineConfig::native(ErrorBound::Abs(-1.0));
+        assert!(compress(&cfg, &[1.0]).is_err());
+        cfg = EngineConfig::native(ErrorBound::Abs(1e-3));
+        cfg.device = Device::Pjrt; // no handle
+        assert!(compress(&cfg, &[1.0]).is_err());
+    }
+
+    #[test]
+    fn ratio_reported_sensibly() {
+        let x = Suite::Cesm.generate(2, 1 << 18);
+        let cfg = EngineConfig::native(ErrorBound::Noa(1e-3));
+        let (_, stats) = compress(&cfg, &x).unwrap();
+        assert!(stats.ratio() > 2.0, "ratio {}", stats.ratio());
+        assert!(stats.outlier_fraction() < 0.5);
+    }
+}

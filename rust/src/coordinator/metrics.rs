@@ -1,0 +1,70 @@
+//! Compression statistics and throughput accounting.
+
+use std::time::Duration;
+
+/// Statistics from one compress or decompress run.
+#[derive(Debug, Clone, Copy, Default)]
+pub struct RunStats {
+    pub n_values: usize,
+    pub input_bytes: usize,
+    pub output_bytes: usize,
+    pub outliers: usize,
+    pub wall: Duration,
+}
+
+impl RunStats {
+    /// Compression ratio (input/output).
+    pub fn ratio(&self) -> f64 {
+        if self.output_bytes == 0 {
+            0.0
+        } else {
+            self.input_bytes as f64 / self.output_bytes as f64
+        }
+    }
+
+    /// Uncompressed-side throughput in GB/s (the paper's metric).
+    pub fn throughput_gbs(&self) -> f64 {
+        let secs = self.wall.as_secs_f64();
+        if secs == 0.0 {
+            0.0
+        } else {
+            self.input_bytes as f64 / secs / 1e9
+        }
+    }
+
+    /// Fraction of values stored losslessly.
+    pub fn outlier_fraction(&self) -> f64 {
+        if self.n_values == 0 {
+            0.0
+        } else {
+            self.outliers as f64 / self.n_values as f64
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn ratio_and_throughput() {
+        let s = RunStats {
+            n_values: 1000,
+            input_bytes: 4000,
+            output_bytes: 1000,
+            outliers: 10,
+            wall: Duration::from_micros(4),
+        };
+        assert_eq!(s.ratio(), 4.0);
+        assert!((s.throughput_gbs() - 1.0).abs() < 1e-9);
+        assert!((s.outlier_fraction() - 0.01).abs() < 1e-12);
+    }
+
+    #[test]
+    fn zero_division_safe() {
+        let s = RunStats::default();
+        assert_eq!(s.ratio(), 0.0);
+        assert_eq!(s.throughput_gbs(), 0.0);
+        assert_eq!(s.outlier_fraction(), 0.0);
+    }
+}

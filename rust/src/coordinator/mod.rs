@@ -1,0 +1,15 @@
+//! L3 coordinator: the streaming compression orchestrator.
+//!
+//! * [`engine`]  — in-memory compress/decompress over a work-stealing
+//!   worker pool (chunk-parallel, deterministic output);
+//! * [`stream`]  — bounded-memory streaming pipeline with backpressure
+//!   (reader -> workers -> reordering collector);
+//! * [`metrics`] — ratio / throughput / outlier accounting.
+
+pub mod engine;
+pub mod metrics;
+pub mod stream;
+
+pub use engine::{compress, decompress, EngineConfig};
+pub use metrics::RunStats;
+pub use stream::{compress_stream, DEFAULT_QUEUE_DEPTH};

@@ -1,0 +1,300 @@
+//! Streaming compression with bounded in-flight memory (backpressure).
+//!
+//! Topology: one reader (chunks the input), N workers (quantize +
+//! encode), one writer (reorders and appends). All queues are bounded
+//! `sync_channel`s, so a slow writer stalls the workers and a slow
+//! worker pool stalls the reader — memory stays O(queue_depth *
+//! chunk_size) no matter how large the stream is. This is the
+//! data-pipeline-orchestrator shape of the L3 coordinator.
+//!
+//! NOA cannot be streamed in one pass (it needs the global range); the
+//! engine rejects it here and callers use the in-memory path instead.
+
+use std::collections::BTreeMap;
+use std::io::{Read, Write};
+use std::sync::mpsc::{sync_channel, Receiver};
+use std::sync::Mutex;
+use std::time::Instant;
+
+use anyhow::{anyhow, bail, Result};
+
+use crate::container::ChunkRecord;
+use crate::quantizer::QuantizerConfig;
+use crate::types::ErrorBound;
+
+use super::engine::EngineConfig;
+use super::metrics::RunStats;
+
+/// How many chunks may be in flight per stage queue.
+pub const DEFAULT_QUEUE_DEPTH: usize = 8;
+
+struct WorkItem {
+    index: usize,
+    values: Vec<f32>,
+}
+
+struct DoneItem {
+    index: usize,
+    record: ChunkRecord,
+    outliers: usize,
+}
+
+/// Compress a byte stream of little-endian f32 values into a container
+/// written to `out`. Returns run statistics.
+pub fn compress_stream<R: Read, W: Write>(
+    cfg: &EngineConfig,
+    queue_depth: usize,
+    mut input: R,
+    out: &mut W,
+) -> Result<RunStats> {
+    if matches!(cfg.bound, ErrorBound::Noa(_)) {
+        bail!("NOA needs a two-pass range scan; use coordinator::engine::compress");
+    }
+    cfg.bound.validate().map_err(|e| anyhow!(e))?;
+    let t0 = Instant::now();
+    let qc = QuantizerConfig::resolve(cfg.bound, cfg.variant, cfg.protection, &[]);
+    let depth = queue_depth.max(1);
+    let workers = if cfg.workers > 0 {
+        cfg.workers
+    } else {
+        std::thread::available_parallelism().map(|n| n.get()).unwrap_or(1)
+    };
+
+    let (work_tx, work_rx) = sync_channel::<WorkItem>(depth);
+    let (done_tx, done_rx) = sync_channel::<DoneItem>(depth);
+    let work_rx = SharedReceiver::new(work_rx);
+
+    let mut n_values = 0u64;
+    let mut total_outliers = 0usize;
+    let mut records: Vec<ChunkRecord> = Vec::new();
+    let err: Mutex<Option<anyhow::Error>> = Mutex::new(None);
+
+    std::thread::scope(|s| -> Result<()> {
+        // Workers.
+        for _ in 0..workers {
+            let work_rx = work_rx.clone();
+            let done_tx = done_tx.clone();
+            let qc = &qc;
+            let err = &err;
+            s.spawn(move || {
+                while let Some(item) = work_rx.recv() {
+                    let result = super::engine::quantize_on(cfg, qc, &item.values);
+                    match result {
+                        Ok(q) => {
+                            let payload = cfg.pipeline.encode(&q.words);
+                            let done = DoneItem {
+                                index: item.index,
+                                outliers: q.outlier_count(),
+                                record: ChunkRecord {
+                                    n_values: item.values.len() as u32,
+                                    outlier_bytes: crate::codec::rle::encode(
+                                        &q.outliers.to_bytes(),
+                                    ),
+                                    payload,
+                                },
+                            };
+                            if done_tx.send(done).is_err() {
+                                break;
+                            }
+                        }
+                        Err(e) => {
+                            *err.lock().unwrap() = Some(e);
+                            break;
+                        }
+                    }
+                }
+            });
+        }
+        drop(done_tx);
+
+        // Reader (this thread): chunk the stream, apply backpressure
+        // through the bounded work queue; collector runs on a spawned
+        // thread so reader + writer cannot deadlock.
+        let collector = s.spawn(move || {
+            // Writer side: reorder by index.
+            let mut pending: BTreeMap<usize, (ChunkRecord, usize)> = BTreeMap::new();
+            let mut next = 0usize;
+            let mut ordered: Vec<(ChunkRecord, usize)> = Vec::new();
+            for d in done_rx.iter() {
+                pending.insert(d.index, (d.record, d.outliers));
+                while let Some(v) = pending.remove(&next) {
+                    ordered.push(v);
+                    next += 1;
+                }
+            }
+            ordered
+        });
+
+        let mut index = 0usize;
+        let bytes_per_chunk = cfg.chunk_size * 4;
+        loop {
+            let mut buf = vec![0u8; bytes_per_chunk];
+            let got = read_full(&mut input, &mut buf)?;
+            if got == 0 {
+                break;
+            }
+            if got % 4 != 0 {
+                bail!("input stream length is not a multiple of 4 bytes");
+            }
+            let values: Vec<f32> = buf[..got]
+                .chunks_exact(4)
+                .map(|c| f32::from_le_bytes(c.try_into().unwrap()))
+                .collect();
+            n_values += values.len() as u64;
+            if work_tx.send(WorkItem { index, values }).is_err() {
+                break; // workers died; error captured below
+            }
+            index += 1;
+            if got < bytes_per_chunk {
+                break;
+            }
+        }
+        drop(work_tx);
+        let ordered = collector.join().expect("collector panicked");
+        if let Some(e) = err.lock().unwrap().take() {
+            return Err(e);
+        }
+        if ordered.len() != index {
+            bail!("lost chunks: sent {index}, collected {}", ordered.len());
+        }
+        for (rec, o) in ordered {
+            total_outliers += o;
+            records.push(rec);
+        }
+        Ok(())
+    })?;
+
+    let container = crate::container::Container {
+        header: crate::container::Header {
+            bound: cfg.bound,
+            effective_epsilon: qc.effective_epsilon(),
+            variant: cfg.variant,
+            protection: cfg.protection,
+            n_values,
+            chunk_size: cfg.chunk_size as u32,
+            stages: cfg.pipeline.stages().to_vec(),
+            n_chunks: records.len() as u32,
+        },
+        chunks: records,
+    };
+    let bytes = container.to_bytes();
+    out.write_all(&bytes)?;
+    Ok(RunStats {
+        n_values: n_values as usize,
+        input_bytes: n_values as usize * 4,
+        output_bytes: bytes.len(),
+        outliers: total_outliers,
+        wall: t0.elapsed(),
+    })
+}
+
+/// Read until the buffer is full or EOF; returns bytes read.
+fn read_full<R: Read>(r: &mut R, buf: &mut [u8]) -> Result<usize> {
+    let mut filled = 0;
+    while filled < buf.len() {
+        let n = r.read(&mut buf[filled..])?;
+        if n == 0 {
+            break;
+        }
+        filled += n;
+    }
+    Ok(filled)
+}
+
+/// mpsc::Receiver is !Sync; share it across workers behind a mutex.
+struct SharedReceiver<T> {
+    inner: std::sync::Arc<Mutex<Receiver<T>>>,
+}
+
+impl<T> Clone for SharedReceiver<T> {
+    fn clone(&self) -> Self {
+        SharedReceiver {
+            inner: self.inner.clone(),
+        }
+    }
+}
+
+impl<T> SharedReceiver<T> {
+    fn new(rx: Receiver<T>) -> Self {
+        SharedReceiver {
+            inner: std::sync::Arc::new(Mutex::new(rx)),
+        }
+    }
+
+    fn recv(&self) -> Option<T> {
+        self.inner.lock().unwrap().recv().ok()
+    }
+}
+
+/// Convenience: round-trip a stream through compress + in-memory
+/// decompress (used by tests and the CLI `verify` command).
+pub fn compress_slice_streaming(cfg: &EngineConfig, data: &[f32]) -> Result<(Vec<u8>, RunStats)> {
+    let bytes: Vec<u8> = data.iter().flat_map(|v| v.to_le_bytes()).collect();
+    let mut out = Vec::new();
+    let stats = compress_stream(cfg, DEFAULT_QUEUE_DEPTH, bytes.as_slice(), &mut out)?;
+    Ok((out, stats))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::container::Container;
+    use crate::data::Suite;
+    use crate::types::CHUNK_ELEMS;
+
+    #[test]
+    fn streaming_matches_in_memory_output() {
+        let x = Suite::Isabel.generate(0, CHUNK_ELEMS * 2 + 999);
+        let cfg = EngineConfig::native(ErrorBound::Abs(1e-3));
+        let (streamed, stats) = compress_slice_streaming(&cfg, &x).unwrap();
+        let (mem, _) = super::super::engine::compress(&cfg, &x).unwrap();
+        assert_eq!(streamed, mem.to_bytes());
+        assert_eq!(stats.n_values, x.len());
+    }
+
+    #[test]
+    fn streaming_decompresses_correctly() {
+        let x = Suite::Qmcpack.generate(0, 200_000);
+        let cfg = EngineConfig::native(ErrorBound::Rel(1e-2));
+        let (bytes, _) = compress_slice_streaming(&cfg, &x).unwrap();
+        let container = Container::from_bytes(&bytes).unwrap();
+        let (y, _) = super::super::engine::decompress(&cfg, &container).unwrap();
+        assert_eq!(crate::verify::metrics::rel_violations(&x, &y, 1e-2), 0);
+    }
+
+    #[test]
+    fn rejects_noa() {
+        let cfg = EngineConfig::native(ErrorBound::Noa(1e-3));
+        assert!(compress_slice_streaming(&cfg, &[1.0, 2.0]).is_err());
+    }
+
+    #[test]
+    fn rejects_ragged_stream() {
+        let cfg = EngineConfig::native(ErrorBound::Abs(1e-3));
+        let mut out = Vec::new();
+        let bad = [0u8; 7];
+        assert!(compress_stream(&cfg, 2, bad.as_slice(), &mut out).is_err());
+    }
+
+    #[test]
+    fn tiny_queue_depth_still_correct() {
+        let x = Suite::Hacc.generate(0, CHUNK_ELEMS * 5 + 3);
+        let mut cfg = EngineConfig::native(ErrorBound::Abs(1e-2));
+        cfg.workers = 4;
+        let bytes: Vec<u8> = x.iter().flat_map(|v| v.to_le_bytes()).collect();
+        let mut out = Vec::new();
+        compress_stream(&cfg, 1, bytes.as_slice(), &mut out).unwrap();
+        let container = Container::from_bytes(&out).unwrap();
+        let (y, _) = super::super::engine::decompress(&cfg, &container).unwrap();
+        assert_eq!(crate::verify::metrics::abs_violations(&x, &y, 1e-2), 0);
+    }
+
+    #[test]
+    fn empty_stream() {
+        let cfg = EngineConfig::native(ErrorBound::Abs(1e-3));
+        let (bytes, stats) = compress_slice_streaming(&cfg, &[]).unwrap();
+        assert_eq!(stats.n_values, 0);
+        let container = Container::from_bytes(&bytes).unwrap();
+        assert_eq!(container.header.n_values, 0);
+    }
+}

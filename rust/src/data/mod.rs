@@ -1,0 +1,8 @@
+//! Synthetic dataset substrate: deterministic PRNG + SDRBench-like
+//! suite generators + special-value suites (see DESIGN.md section 5).
+
+pub mod prng;
+pub mod suites;
+
+pub use prng::Rng;
+pub use suites::{SpecialKind, Suite};

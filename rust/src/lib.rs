@@ -1,0 +1,31 @@
+//! # lc-repro — guaranteed-error-bound lossy quantizers
+//!
+//! A reproduction of "Lessons Learned on the Path to Guaranteeing the
+//! Error Bound in Lossy Quantizers" (Fallin & Burtscher, 2024) as a
+//! three-layer rust + JAX + Pallas stack:
+//!
+//! * **L3 (this crate)** — the LC-framework analogue: a streaming
+//!   chunked compression engine ([`coordinator`]), the container format
+//!   ([`container`]), the lossless backend ([`codec`]), native
+//!   bit-exact quantizers ([`quantizer`]), evaluation harnesses
+//!   ([`verify`], [`data`], [`baselines`]).
+//! * **L2/L1 (python/, build-time only)** — the same quantizers as JAX
+//!   graphs wrapping Pallas kernels, AOT-lowered to HLO text and
+//!   executed from rust through PJRT ([`runtime`]).
+//!
+//! The paper's CPU/GPU parity problem maps to rust-native vs XLA/PJRT
+//! parity here; the parity-safe quantizer variants produce bit-for-bit
+//! identical compressed streams on both.
+
+pub mod baselines;
+pub mod bench_util;
+pub mod bitvec;
+pub mod codec;
+pub mod container;
+pub mod coordinator;
+pub mod data;
+pub mod runtime;
+pub mod quantizer;
+pub mod tables;
+pub mod types;
+pub mod verify;

@@ -1,0 +1,359 @@
+//! `lc` — guaranteed-error-bound lossy compressor CLI (L3 entrypoint).
+//!
+//! Subcommands:
+//!   compress / decompress / verify     file operations (.f32 <-> .lcz)
+//!   gendata                            synthetic suite generation
+//!   table1 table3 table4 table5 table6 table7 table8 table9
+//!                                      regenerate the paper's tables
+//!   sweep                              exhaustive/strided f32 sweep
+//!   parity                             native vs PJRT parity audit
+//!
+//! Hand-rolled argument parsing (no clap in the offline environment).
+
+use std::collections::HashMap;
+use std::process::ExitCode;
+
+use anyhow::{anyhow, bail, Context, Result};
+
+use lc::coordinator::{compress_stream, decompress, EngineConfig, DEFAULT_QUEUE_DEPTH};
+use lc::data::Suite;
+use lc::runtime::{default_artifact_dir, PjrtService};
+use lc::tables::{self, EvalConfig};
+use lc::types::{Device, ErrorBound, FnVariant, Protection};
+
+fn main() -> ExitCode {
+    let args: Vec<String> = std::env::args().skip(1).collect();
+    match run(args) {
+        Ok(()) => ExitCode::SUCCESS,
+        Err(e) => {
+            eprintln!("error: {e:#}");
+            ExitCode::FAILURE
+        }
+    }
+}
+
+const USAGE: &str = "\
+lc — guaranteed-error-bound lossy compressor (paper reproduction)
+
+USAGE:
+  lc compress   <in.f32> <out.lcz> [--eb-type abs|rel|noa] [--eb EPS]
+                [--variant approx|native] [--unprotected]
+                [--device native|pjrt] [--workers N]
+  lc decompress <in.lcz> <out.f32> [--device native|pjrt] [--workers N]
+  lc verify     <orig.f32> <file.lcz>
+  lc gendata    <suite> <file-idx> <n-values> <out.f32>
+  lc table1 | table3 | table4 | table5 | table6 | table7 | table8 | table9
+                [--quick] [--device pjrt] [--files N] [--n N]
+  lc sweep      [--eb EPS] [--stride K] [--rel] [--variant native] [--threads N]
+  lc parity     [--eb EPS] [--n N]
+
+Suites: CESM EXAALT HACC NYX QMCPACK SCALE ISABEL
+Artifacts are loaded from $LC_ARTIFACT_DIR or ./artifacts (PJRT device).
+";
+
+struct Opts {
+    positional: Vec<String>,
+    flags: HashMap<String, String>,
+}
+
+fn parse_opts(args: &[String]) -> Opts {
+    let mut positional = Vec::new();
+    let mut flags = HashMap::new();
+    let mut i = 0;
+    while i < args.len() {
+        let a = &args[i];
+        if let Some(name) = a.strip_prefix("--") {
+            let boolean = matches!(name, "unprotected" | "rel" | "quick" | "help");
+            if boolean || i + 1 >= args.len() {
+                flags.insert(name.to_string(), "true".to_string());
+            } else {
+                flags.insert(name.to_string(), args[i + 1].clone());
+                i += 1;
+            }
+        } else {
+            positional.push(a.clone());
+        }
+        i += 1;
+    }
+    Opts { positional, flags }
+}
+
+impl Opts {
+    fn flag(&self, name: &str) -> Option<&str> {
+        self.flags.get(name).map(|s| s.as_str())
+    }
+
+    fn f32_flag(&self, name: &str, default: f32) -> Result<f32> {
+        match self.flag(name) {
+            None => Ok(default),
+            Some(v) => v.parse().with_context(|| format!("bad --{name} {v}")),
+        }
+    }
+
+    fn usize_flag(&self, name: &str, default: usize) -> Result<usize> {
+        match self.flag(name) {
+            None => Ok(default),
+            Some(v) => v.parse().with_context(|| format!("bad --{name} {v}")),
+        }
+    }
+}
+
+fn engine_config(o: &Opts, service: &mut Option<PjrtService>) -> Result<EngineConfig> {
+    let eb = o.f32_flag("eb", tables::PAPER_EB)?;
+    let bound = match o.flag("eb-type").unwrap_or("abs") {
+        "abs" => ErrorBound::Abs(eb),
+        "rel" => ErrorBound::Rel(eb),
+        "noa" => ErrorBound::Noa(eb),
+        t => bail!("unknown --eb-type {t}"),
+    };
+    let mut cfg = EngineConfig::native(bound);
+    cfg.variant = match o.flag("variant").unwrap_or("approx") {
+        "approx" => FnVariant::Approx,
+        "native" => FnVariant::Native,
+        v => bail!("unknown --variant {v}"),
+    };
+    if o.flag("unprotected").is_some() {
+        cfg.protection = Protection::Unprotected;
+    }
+    cfg.workers = o.usize_flag("workers", 0)?;
+    if o.flag("device") == Some("pjrt") {
+        let svc = PjrtService::start(&default_artifact_dir())?;
+        cfg.device = Device::Pjrt;
+        cfg.pjrt = Some(svc.handle());
+        *service = Some(svc);
+    }
+    Ok(cfg)
+}
+
+fn pjrt_handle_if_requested(
+    o: &Opts,
+    service: &mut Option<PjrtService>,
+) -> Result<Option<lc::runtime::PjrtHandle>> {
+    if o.flag("device") == Some("pjrt") {
+        let svc = PjrtService::start(&default_artifact_dir())?;
+        let h = svc.handle();
+        *service = Some(svc);
+        Ok(Some(h))
+    } else {
+        Ok(None)
+    }
+}
+
+fn eval_config(o: &Opts) -> Result<EvalConfig> {
+    let mut ec = if o.flag("quick").is_some() {
+        EvalConfig::quick()
+    } else {
+        EvalConfig::default()
+    };
+    if let Some(n) = o.flag("n") {
+        ec.ratio_n = n.parse().context("bad --n")?;
+        ec.throughput_n = ec.ratio_n;
+    }
+    ec.max_files = o.usize_flag("files", ec.max_files)?;
+    Ok(ec)
+}
+
+fn read_f32_file(path: &str) -> Result<Vec<f32>> {
+    let bytes = std::fs::read(path).with_context(|| format!("reading {path}"))?;
+    if bytes.len() % 4 != 0 {
+        bail!("{path} length is not a multiple of 4");
+    }
+    Ok(bytes
+        .chunks_exact(4)
+        .map(|c| f32::from_le_bytes(c.try_into().unwrap()))
+        .collect())
+}
+
+fn write_f32_file(path: &str, data: &[f32]) -> Result<()> {
+    let bytes: Vec<u8> = data.iter().flat_map(|v| v.to_le_bytes()).collect();
+    std::fs::write(path, bytes).with_context(|| format!("writing {path}"))
+}
+
+fn run(args: Vec<String>) -> Result<()> {
+    let Some(cmd) = args.first().cloned() else {
+        print!("{USAGE}");
+        return Ok(());
+    };
+    let o = parse_opts(&args[1..]);
+    if o.flag("help").is_some() {
+        print!("{USAGE}");
+        return Ok(());
+    }
+    let mut service: Option<PjrtService> = None;
+    match cmd.as_str() {
+        "compress" => {
+            let [inp, outp] = o.positional.as_slice() else {
+                bail!("compress wants <in.f32> <out.lcz>");
+            };
+            let cfg = engine_config(&o, &mut service)?;
+            let stats = if matches!(cfg.bound, ErrorBound::Noa(_)) {
+                // NOA needs the global range: in-memory path.
+                let data = read_f32_file(inp)?;
+                let (container, stats) = lc::coordinator::compress(&cfg, &data)?;
+                std::fs::write(outp, container.to_bytes())?;
+                stats
+            } else {
+                let f = std::fs::File::open(inp).with_context(|| format!("opening {inp}"))?;
+                let mut out = std::io::BufWriter::new(std::fs::File::create(outp)?);
+                let stats = compress_stream(
+                    &cfg,
+                    DEFAULT_QUEUE_DEPTH,
+                    std::io::BufReader::new(f),
+                    &mut out,
+                )?;
+                use std::io::Write;
+                out.flush()?;
+                stats
+            };
+            println!(
+                "{} values -> {} bytes  ratio {:.3}  outliers {:.4}%  {:.3} GB/s",
+                stats.n_values,
+                stats.output_bytes,
+                stats.ratio(),
+                stats.outlier_fraction() * 100.0,
+                stats.throughput_gbs()
+            );
+        }
+        "decompress" => {
+            let [inp, outp] = o.positional.as_slice() else {
+                bail!("decompress wants <in.lcz> <out.f32>");
+            };
+            let bytes = std::fs::read(inp)?;
+            let container =
+                lc::container::Container::from_bytes(&bytes).map_err(|e| anyhow!(e))?;
+            let mut cfg = engine_config(&o, &mut service)?;
+            cfg.bound = container.header.bound; // decode per header
+            cfg.variant = container.header.variant;
+            cfg.protection = container.header.protection;
+            let (data, stats) = decompress(&cfg, &container)?;
+            write_f32_file(outp, &data)?;
+            println!(
+                "{} values  {:.3} GB/s",
+                stats.n_values,
+                stats.throughput_gbs()
+            );
+        }
+        "verify" => {
+            let [origp, lczp] = o.positional.as_slice() else {
+                bail!("verify wants <orig.f32> <file.lcz>");
+            };
+            let orig = read_f32_file(origp)?;
+            let bytes = std::fs::read(lczp)?;
+            let container =
+                lc::container::Container::from_bytes(&bytes).map_err(|e| anyhow!(e))?;
+            let mut cfg = EngineConfig::native(container.header.bound);
+            cfg.variant = container.header.variant;
+            cfg.protection = container.header.protection;
+            let (recon, _) = decompress(&cfg, &container)?;
+            let eb = container.header.effective_epsilon;
+            let violations = match container.header.bound {
+                ErrorBound::Rel(e) => lc::verify::metrics::rel_violations(&orig, &recon, e),
+                _ => lc::verify::metrics::abs_violations(&orig, &recon, eb),
+            };
+            let report = lc::verify::metrics::compare(&orig, &recon);
+            println!(
+                "bound {}  effective eps {eb:e}  violations {violations}  max_abs {:.3e}",
+                container.header.bound, report.max_abs
+            );
+            if violations > 0 {
+                bail!("{violations} bound violations");
+            }
+            println!("error bound verified");
+        }
+        "gendata" => {
+            let [suite, idx, n, outp] = o.positional.as_slice() else {
+                bail!("gendata wants <suite> <file-idx> <n-values> <out.f32>");
+            };
+            let s = Suite::from_name(suite).ok_or_else(|| anyhow!("unknown suite {suite}"))?;
+            let data = s.generate(idx.parse()?, n.parse()?);
+            write_f32_file(outp, &data)?;
+            println!("wrote {} values of {} to {outp}", data.len(), s.name());
+        }
+        "table1" => print!("{}", tables::table1()),
+        "table3" => {
+            let n = o.usize_flag("n", 1_000_000)?;
+            print!("{}", tables::table3(n));
+        }
+        "table4" => {
+            let ec = eval_config(&o)?;
+            let h = pjrt_handle_if_requested(&o, &mut service)?;
+            print!("{}", tables::table4(ec, h));
+        }
+        "table5" | "table6" => {
+            let ec = eval_config(&o)?;
+            let h = pjrt_handle_if_requested(&o, &mut service)?;
+            print!("{}", tables::table5_6(ec, h, cmd == "table6"));
+        }
+        "table7" => {
+            let ec = eval_config(&o)?;
+            let h = pjrt_handle_if_requested(&o, &mut service)?;
+            print!("{}", tables::table7(ec, h));
+        }
+        "table8" => {
+            let ec = eval_config(&o)?;
+            let h = pjrt_handle_if_requested(&o, &mut service)?;
+            print!("{}", tables::table8(ec, h));
+        }
+        "table9" => {
+            let ec = eval_config(&o)?;
+            print!("{}", tables::table9(ec));
+        }
+        "sweep" => {
+            let eb = o.f32_flag("eb", tables::PAPER_EB)?;
+            let stride = o.usize_flag("stride", 1)? as u32;
+            let threads = o.usize_flag(
+                "threads",
+                std::thread::available_parallelism()
+                    .map(|n| n.get())
+                    .unwrap_or(4),
+            )?;
+            let variant = match o.flag("variant").unwrap_or("approx") {
+                "native" => FnVariant::Native,
+                _ => FnVariant::Approx,
+            };
+            let r = if o.flag("rel").is_some() {
+                lc::verify::sweep::sweep_rel(eb, variant, stride, threads)
+            } else {
+                lc::verify::sweep::sweep_abs(eb, stride, threads)
+            };
+            println!(
+                "tested {} bit patterns  violations {}  lossless {}",
+                r.tested, r.violations, r.lossless
+            );
+            match r.first_violation {
+                None => println!("error bound GUARANTEED over the swept space"),
+                Some(bits) => bail!("violation at bit pattern {bits:#010x}"),
+            }
+        }
+        "parity" => {
+            let eb = o.f32_flag("eb", tables::PAPER_EB)?;
+            let n = o.usize_flag("n", 1 << 20)?;
+            let svc = PjrtService::start(&default_artifact_dir())?;
+            let h = svc.handle();
+            println!("PJRT platform: {}", h.platform()?);
+            for s in Suite::ALL {
+                let x = s.generate(0, n);
+                let a = lc::verify::parity::audit_abs(&h, &x, eb)?;
+                let r = lc::verify::parity::audit_rel(&h, &x, eb, FnVariant::Approx)?;
+                let nat = lc::verify::parity::audit_rel(&h, &x, eb, FnVariant::Native)?;
+                println!(
+                    "{:8}  ABS mismatches {}  REL(approx) {}  REL(native-libm) {}",
+                    s.name(),
+                    a.word_mismatches + a.flag_mismatches,
+                    r.word_mismatches + r.flag_mismatches,
+                    nat.word_mismatches + nat.flag_mismatches,
+                );
+                if !a.is_bit_identical() || !r.is_bit_identical() {
+                    bail!("parity-safe variant diverged on {}", s.name());
+                }
+            }
+            println!("parity-safe variants are bit-identical across pipelines");
+            drop(svc);
+        }
+        other => {
+            print!("{USAGE}");
+            bail!("unknown command {other}");
+        }
+    }
+    Ok(())
+}

@@ -1,0 +1,245 @@
+//! Guaranteed-error-bound ABS quantizer (native rust pipeline).
+//!
+//! Bit-exact mirror of the XLA artifact `abs_quant` /
+//! `python/compile/kernels/qmath.py::abs_quantize_math`. The comments
+//! there explain the exact-arithmetic parity scheme; briefly:
+//!
+//!   bin   = rint(x / (2*eb))                  round-half-even
+//!   recon = f32(f64(bin) * f64(2*eb))         == decoder's f32 multiply
+//!   keep iff bin in (-2^28, 2^28)  (two comparisons — no abs(): the
+//!            paper's INT_MIN edge case, Section 3.3)
+//!        and |x - recon| <= eb      computed exactly in f64
+//!
+//! NaN fails every comparison and INF overflows the bin range, so both
+//! fall to the lossless outlier path without explicit checks.
+
+use crate::bitvec::BitVec;
+use crate::types::{Protection, QuantizedChunk, MAXBIN_ABS};
+
+use super::zigzag;
+
+/// Derived ABS factors, computed once per stream.
+#[derive(Debug, Clone, Copy)]
+pub struct AbsParams {
+    pub eb: f32,
+    pub eb2: f32,
+    pub inv_eb2: f32,
+}
+
+impl AbsParams {
+    pub fn new(eb: f32) -> Self {
+        let eb2 = eb * 2.0;
+        AbsParams {
+            eb,
+            eb2,
+            inv_eb2: 1.0 / eb2,
+        }
+    }
+
+    /// The (1,4) scalar operand fed to the AOT artifacts.
+    pub fn scalar_operand(&self) -> [f32; 4] {
+        [self.eb, self.eb2, self.inv_eb2, 0.0]
+    }
+}
+
+/// Quantize one slice. Protected mode double-checks every value.
+pub fn quantize(x: &[f32], p: AbsParams, protection: Protection) -> QuantizedChunk {
+    let n = x.len();
+    let mut words: Vec<u32> = Vec::with_capacity(n);
+    // Bitmap packed directly into u64 words (BitVec::push per value was
+    // a measured hot spot — see EXPERIMENTS.md section Perf).
+    let mut bits = vec![0u64; n.div_ceil(64)];
+    let protected = protection == Protection::Protected;
+    let maxbin = MAXBIN_ABS as f32;
+    let eb2_64 = p.eb2 as f64;
+    let eb_64 = p.eb as f64;
+    for (i, &v) in x.iter().enumerate() {
+        let binf = (v * p.inv_eb2).round_ties_even();
+        // Two comparisons, not abs() — Section 3.3. NaN compares false.
+        let in_range = binf < maxbin && binf > -maxbin;
+        let binc = if in_range { binf } else { 0.0 };
+        let bin = binc as i32;
+        // Exact f64 product rounded once to f32: identical to the
+        // decoder's plain f32 multiply, FMA-proof.
+        let recon = ((binc as f64) * eb2_64) as f32;
+        let quant = if protected {
+            let err = ((v as f64) - (recon as f64)).abs();
+            in_range && err <= eb_64
+        } else {
+            in_range
+        };
+        if quant {
+            words.push(zigzag(bin) as u32);
+        } else {
+            words.push(v.to_bits());
+            bits[i >> 6] |= 1u64 << (i & 63);
+        }
+    }
+    QuantizedChunk {
+        words,
+        outliers: BitVec::from_raw(bits, n),
+    }
+}
+
+/// Decode one chunk back to values. The multiply must stay a single f32
+/// operation: it defines the reconstruction the encoder verified.
+pub fn dequantize(chunk: &QuantizedChunk, p: AbsParams) -> Vec<f32> {
+    chunk
+        .words
+        .iter()
+        .enumerate()
+        .map(|(i, &w)| {
+            if chunk.outliers.get(i) {
+                f32::from_bits(w)
+            } else {
+                super::unzigzag(w) as f32 * p.eb2
+            }
+        })
+        .collect()
+}
+
+/// Count values that fail ONLY the double check (i.e. in-range bins
+/// whose reconstruction misses the bound) — the paper's Table 9 metric.
+pub fn rounding_affected(x: &[f32], p: AbsParams) -> usize {
+    let maxbin = MAXBIN_ABS as f32;
+    x.iter()
+        .filter(|&&v| {
+            let binf = (v * p.inv_eb2).round_ties_even();
+            let in_range = binf < maxbin && binf > -maxbin;
+            if !in_range {
+                return false;
+            }
+            let recon = ((binf as f64) * (p.eb2 as f64)) as f32;
+            ((v as f64) - (recon as f64)).abs() > p.eb as f64
+        })
+        .count()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::types::Protection::{Protected, Unprotected};
+
+    fn roundtrip(x: &[f32], eb: f32) -> Vec<f32> {
+        let p = AbsParams::new(eb);
+        let c = quantize(x, p, Protected);
+        dequantize(&c, p)
+    }
+
+    #[test]
+    fn bound_holds_on_normals() {
+        let eb = 1e-3f32;
+        let x: Vec<f32> = (0..10_000).map(|i| (i as f32 * 0.37).sin() * 5.0).collect();
+        let y = roundtrip(&x, eb);
+        for (a, b) in x.iter().zip(&y) {
+            let err = ((*a as f64) - (*b as f64)).abs();
+            assert!(err <= eb as f64, "{a} -> {b} err {err}");
+        }
+    }
+
+    #[test]
+    fn specials_survive_losslessly() {
+        let eb = 1e-2f32;
+        let x = [
+            f32::INFINITY,
+            f32::NEG_INFINITY,
+            f32::NAN,
+            -f32::NAN,
+            0.0,
+            -0.0,
+            f32::MIN_POSITIVE / 2.0, // denormal
+            f32::MAX,
+            f32::MIN,
+            1.0,
+        ];
+        let p = AbsParams::new(eb);
+        let c = quantize(&x, p, Protected);
+        let y = dequantize(&c, p);
+        for (a, b) in x.iter().zip(&y) {
+            if a.is_nan() || a.is_infinite() || a.abs() >= 1e30 {
+                assert_eq!(a.to_bits(), b.to_bits(), "{a} must be lossless");
+            } else {
+                assert!(((*a as f64) - (*b as f64)).abs() <= eb as f64);
+            }
+        }
+    }
+
+    #[test]
+    fn denormals_treated_like_normals() {
+        // Paper Section 3.1: ABS treats denormals as normal values —
+        // they land in bin 0 for any reasonable eb.
+        let p = AbsParams::new(1e-3);
+        let denorms: Vec<f32> = (1..100u32).map(f32::from_bits).collect();
+        let c = quantize(&denorms, p, Protected);
+        assert_eq!(c.outlier_count(), 0);
+        let y = dequantize(&c, p);
+        assert!(y.iter().all(|&v| v == 0.0));
+    }
+
+    #[test]
+    fn boundary_bait_never_violates_protected() {
+        // Values parked at bin boundaries: the rounding-error bait from
+        // the paper's Section 2.2. Protected must hold the bound.
+        let eb = 1e-3f32;
+        let p = AbsParams::new(eb);
+        let x: Vec<f32> = (1..100_000u32)
+            .map(|k| ((k as f64 + 0.5) * 2.0 * eb as f64) as f32)
+            .collect();
+        let c = quantize(&x, p, Protected);
+        let y = dequantize(&c, p);
+        for (a, b) in x.iter().zip(&y) {
+            let err = ((*a as f64) - (*b as f64)).abs();
+            assert!(err <= eb as f64, "{a} -> {b} err {err}");
+        }
+        // ... and the bait does force some lossless fallbacks:
+        assert!(c.outlier_count() > 0, "expected rounding-affected values");
+    }
+
+    #[test]
+    fn unprotected_violates_on_boundary_bait() {
+        // The reason the double check exists (Figures 3/4 baseline).
+        let eb = 1e-3f32;
+        let p = AbsParams::new(eb);
+        let x: Vec<f32> = (1..100_000u32)
+            .map(|k| ((k as f64 + 0.5) * 2.0 * eb as f64) as f32)
+            .collect();
+        let c = quantize(&x, p, Unprotected);
+        let y = dequantize(&c, p);
+        let violations = x
+            .iter()
+            .zip(&y)
+            .filter(|(a, b)| ((**a as f64) - (**b as f64)).abs() > eb as f64)
+            .count();
+        assert!(violations > 0, "unprotected should violate somewhere");
+    }
+
+    #[test]
+    fn huge_values_out_of_bin_range_stored_losslessly() {
+        let p = AbsParams::new(1e-6);
+        let x = [1e30f32, -1e30, 5e5];
+        let c = quantize(&x, p, Protected);
+        assert!(c.outliers.get(0) && c.outliers.get(1) && c.outliers.get(2));
+        let y = dequantize(&c, p);
+        assert_eq!(x.to_vec(), y);
+    }
+
+    #[test]
+    fn rounding_affected_counts_double_check_failures() {
+        let eb = 1e-3f32;
+        let p = AbsParams::new(eb);
+        let bait: Vec<f32> = (1..10_000u32)
+            .map(|k| ((k as f64 + 0.5) * 2.0 * eb as f64) as f32)
+            .collect();
+        let n = rounding_affected(&bait, p);
+        let c = quantize(&bait, p, Protection::Protected);
+        assert_eq!(n, c.outlier_count());
+    }
+
+    #[test]
+    fn empty_input() {
+        let p = AbsParams::new(1e-3);
+        let c = quantize(&[], p, Protected);
+        assert!(c.is_empty());
+        assert!(dequantize(&c, p).is_empty());
+    }
+}

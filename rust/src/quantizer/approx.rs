@@ -1,0 +1,148 @@
+//! Parity-safe log2/pow2 approximations (paper Section 3.2).
+//!
+//! Every operation is an integer operation or a single correctly-rounded
+//! IEEE-754 operation on exact inputs, so the results are bit-identical
+//! across compilers and devices. Mirrors
+//! `python/compile/kernels/qmath.py` (the XLA side) bit for bit — the
+//! pytest/`verify::parity` suites enforce this.
+
+use crate::types::{
+    MANTISSA_BITS_F32, MANTISSA_BITS_F64, MANTISSA_MASK_F32, MANTISSA_MASK_F64,
+};
+
+/// Paper's `log2approxf`: isolate the exponent, add a linear mantissa
+/// term. Accurate to ~0.086 absolute (the worst case of `1+m vs 2^m` on
+/// [0,1]); the double check absorbs the inaccuracy by storing values it
+/// cannot bound losslessly.
+#[inline]
+pub fn log2approxf(x: f32) -> f32 {
+    let i = x.to_bits() as i32;
+    let expo = (i >> MANTISSA_BITS_F32) & 0xFF;
+    let frac_i = (127 << MANTISSA_BITS_F32) | (i & MANTISSA_MASK_F32);
+    let frac_f = f32::from_bits(frac_i as u32);
+    frac_f + (expo - 128) as f32
+}
+
+/// Parity-hardened `pow2approxf` evaluated at `arg = bin * log2(1+eb)`.
+///
+/// The f64 steps are exact or single correctly-rounded operations on
+/// exact inputs (|bin| < 2^27 and l2eb has 24 significant bits, so the
+/// product has <= 52 bits and is exact in f64), making the result
+/// immune to FMA contraction / reassociation on any backend. See
+/// qmath.py::pow2approx_from_bins for the step-by-step argument.
+#[inline]
+pub fn pow2approx_from_bins(bin: i32, l2eb: f32) -> f32 {
+    let arg = (bin as f64) * (l2eb as f64); // exact
+    let biased = arg + 127.0; // single RTN; fma(exact,..) identical
+    let expo = biased as i32; // trunc toward zero
+    let frac64 = arg + (128 - expo) as f64; // single RTN
+    let frac_f = frac64 as f32; // correctly-rounded convert
+    let frac_i = frac_f.to_bits() as i32;
+    let exp_i = expo.wrapping_shl(MANTISSA_BITS_F32) | (frac_i & MANTISSA_MASK_F32);
+    f32::from_bits(exp_i as u32)
+}
+
+/// f64-data version of log2approx (52-bit mantissa). Only the native
+/// rust pipeline handles f64 data (the AOT artifacts are f32), so this
+/// needs bound-correctness, not cross-device parity.
+#[inline]
+pub fn log2approxd(x: f64) -> f64 {
+    let i = x.to_bits() as i64;
+    let expo = (i >> MANTISSA_BITS_F64) & 0x7FF;
+    let frac_i = (1023i64 << MANTISSA_BITS_F64) | (i & MANTISSA_MASK_F64);
+    let frac_f = f64::from_bits(frac_i as u64);
+    frac_f + (expo - 1024) as f64
+}
+
+/// f64-data version of pow2approx evaluated at `arg = bin * l2eb`.
+#[inline]
+pub fn pow2approxd_from_bins(bin: i64, l2eb: f64) -> f64 {
+    let arg = (bin as f64) * l2eb;
+    let biased = arg + 1023.0;
+    let expo = biased as i64; // trunc
+    let frac_f = arg + (1024 - expo) as f64;
+    let frac_i = frac_f.to_bits() as i64;
+    let exp_i = expo.wrapping_shl(MANTISSA_BITS_F64) | (frac_i & MANTISSA_MASK_F64);
+    f64::from_bits(exp_i as u64)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn log2approx_exact_on_powers_of_two() {
+        for e in -126..=127 {
+            let x = 2.0f32.powi(e);
+            assert_eq!(log2approxf(x), e as f32, "2^{e}");
+        }
+    }
+
+    #[test]
+    fn log2approx_close_to_true_log2() {
+        // max error of (1+m) - log2-mantissa term is ~0.0861
+        let mut worst = 0.0f32;
+        for i in 0..10_000 {
+            let x = 0.001f32 + i as f32 * 37.127;
+            let d = (log2approxf(x) - x.log2()).abs();
+            worst = worst.max(d);
+        }
+        assert!(worst < 0.09, "worst {worst}");
+    }
+
+    #[test]
+    fn pow2_inverts_log2_within_tolerance() {
+        // pow2approx(log2approx(x)) should be within a few percent of x;
+        // evaluated through the bin interface with l2eb=1 (bin == arg).
+        for i in 1..1000 {
+            let want = i as f32 * 0.37;
+            let lg = log2approxf(want);
+            // emulate binning with very fine l2eb
+            let l2eb = 1.0f32 / 1024.0;
+            let bin = (lg / l2eb).round_ties_even() as i32;
+            let got = pow2approx_from_bins(bin, l2eb);
+            let rel = ((got - want) / want).abs();
+            assert!(rel < 0.01, "x={want} got={got} rel={rel}");
+        }
+    }
+
+    #[test]
+    fn pow2approx_deterministic_on_extremes() {
+        // Out-of-range exponents must not panic; garbage is fine (the
+        // double check rejects it), crashes are not.
+        for bin in [i32::MIN / 4, -(1 << 27), 0, 1 << 27, i32::MAX / 4] {
+            let _ = pow2approx_from_bins(bin, 0.5);
+            let _ = pow2approx_from_bins(bin, 1.4e-3);
+        }
+    }
+
+    #[test]
+    fn log2approxd_exact_on_powers_of_two() {
+        for e in -1022..=1023 {
+            let x = 2.0f64.powi(e);
+            assert_eq!(log2approxd(x), e as f64, "2^{e}");
+        }
+    }
+
+    #[test]
+    fn pow2approxd_roundtrips() {
+        for i in 1..1000 {
+            let want = i as f64 * 1.7e3;
+            let l2eb = 1.0f64 / 4096.0;
+            let bin = (log2approxd(want) / l2eb).round_ties_even() as i64;
+            let got = pow2approxd_from_bins(bin, l2eb);
+            let rel = ((got - want) / want).abs();
+            assert!(rel < 0.01, "x={want} got={got}");
+        }
+    }
+
+    #[test]
+    fn matches_paper_code_shape_on_known_values() {
+        // log2approx(1.0) = 1.0 + (127-128) = 0.0
+        assert_eq!(log2approxf(1.0), 0.0);
+        // log2approx(1.5) = 1.5 - 1 = 0.5 (the linear mantissa term)
+        assert_eq!(log2approxf(1.5), 0.5);
+        // log2approx(3.0) = 1.5 + 1 ... = 1.5
+        assert_eq!(log2approxf(3.0), 1.5);
+    }
+}

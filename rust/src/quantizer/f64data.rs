@@ -1,0 +1,269 @@
+//! Double-precision (f64 data) ABS/REL quantizers.
+//!
+//! The paper evaluates compressors on double-precision special values
+//! too (Table 3, right half). Only the native rust pipeline handles f64
+//! data — the AOT artifacts are single-precision — so these need the
+//! bound guarantee but not cross-device bit parity. The double check
+//! subtraction `x - recon` is exact by Sterbenz's lemma whenever the
+//! reconstruction is within a factor of two of x, which quantizable
+//! values always satisfy; rustc performs no FMA contraction of its own,
+//! so the two-step check is sound here.
+
+use crate::bitvec::BitVec;
+use crate::types::{FnVariant, Protection, QuantizedChunk64};
+
+use super::approx::{log2approxd, pow2approxd_from_bins};
+
+/// Bin cap for f64 data (61-bit word budget: zigzag + sign fit u64).
+pub const MAXBIN_ABS64: i64 = 1 << 52;
+pub const MAXBIN_REL64: i64 = 1 << 51;
+/// REL magnitude cutoff for f64 (mirrors REL_MIN_MAG's rationale).
+pub const REL_MIN_MAG64: f64 = f64::from_bits(0x0290_0000_0000_0000);
+
+#[inline]
+fn zigzag64(b: i64) -> i64 {
+    (b << 1) ^ (b >> 63)
+}
+
+#[inline]
+fn unzigzag64(z: u64) -> i64 {
+    ((z >> 1) as i64) ^ -((z & 1) as i64)
+}
+
+/// Derived ABS factors for f64 data.
+#[derive(Debug, Clone, Copy)]
+pub struct Abs64Params {
+    pub eb: f64,
+    pub eb2: f64,
+    pub inv_eb2: f64,
+}
+
+impl Abs64Params {
+    pub fn new(eb: f64) -> Self {
+        let eb2 = eb * 2.0;
+        Abs64Params {
+            eb,
+            eb2,
+            inv_eb2: 1.0 / eb2,
+        }
+    }
+}
+
+/// ABS quantizer over f64 data.
+pub fn abs_quantize(x: &[f64], p: Abs64Params, protection: Protection) -> QuantizedChunk64 {
+    let mut words = Vec::with_capacity(x.len());
+    let mut outliers = BitVec::with_capacity(x.len());
+    let protected = protection == Protection::Protected;
+    let maxbin = MAXBIN_ABS64 as f64;
+    for &v in x {
+        let binf = (v * p.inv_eb2).round_ties_even();
+        let in_range = binf < maxbin && binf > -maxbin; // NaN false
+        let binc = if in_range { binf } else { 0.0 };
+        let bin = binc as i64;
+        let recon = binc * p.eb2;
+        let quant = if protected {
+            // Sterbenz-exact subtraction (see module docs).
+            in_range && (v - recon).abs() <= p.eb
+        } else {
+            in_range
+        };
+        if quant {
+            words.push(zigzag64(bin) as u64);
+            outliers.push(false);
+        } else {
+            words.push(v.to_bits());
+            outliers.push(true);
+        }
+    }
+    QuantizedChunk64 { words, outliers }
+}
+
+pub fn abs_dequantize(chunk: &QuantizedChunk64, p: Abs64Params) -> Vec<f64> {
+    chunk
+        .words
+        .iter()
+        .enumerate()
+        .map(|(i, &w)| {
+            if chunk.outliers.get(i) {
+                f64::from_bits(w)
+            } else {
+                unzigzag64(w) as f64 * p.eb2
+            }
+        })
+        .collect()
+}
+
+/// Derived REL factors for f64 data.
+#[derive(Debug, Clone, Copy)]
+pub struct Rel64Params {
+    pub eb: f64,
+    pub l2eb: f64,
+    pub inv_l2eb: f64,
+}
+
+impl Rel64Params {
+    pub fn new(eb: f64) -> Self {
+        let l2eb = (1.0 + eb).log2();
+        Rel64Params {
+            eb,
+            l2eb,
+            inv_l2eb: 1.0 / l2eb,
+        }
+    }
+}
+
+/// REL quantizer over f64 data.
+pub fn rel_quantize(
+    x: &[f64],
+    p: Rel64Params,
+    variant: FnVariant,
+    protection: Protection,
+) -> QuantizedChunk64 {
+    let mut words = Vec::with_capacity(x.len());
+    let mut outliers = BitVec::with_capacity(x.len());
+    let protected = protection == Protection::Protected;
+    let maxbin = MAXBIN_REL64 as f64;
+    for &v in x {
+        let sign = (v < 0.0) as i64;
+        let ax = v.abs();
+        let finite = ax < f64::INFINITY;
+        let big_enough = ax >= REL_MIN_MAG64;
+        let lg = match variant {
+            FnVariant::Approx => log2approxd(ax),
+            FnVariant::Native => ax.log2(),
+        };
+        let binf = (lg * p.inv_l2eb).round_ties_even();
+        let in_range = binf < maxbin && binf > -maxbin;
+        let usable = in_range && finite && big_enough;
+        let binc = if usable { binf } else { 0.0 };
+        let bin = binc as i64;
+        let recon = match variant {
+            FnVariant::Approx => pow2approxd_from_bins(bin, p.l2eb),
+            FnVariant::Native => (binc * p.l2eb).exp2(),
+        };
+        let quant = if protected {
+            usable && (ax - recon).abs() <= p.eb * ax
+        } else {
+            usable
+        };
+        if quant {
+            words.push(((zigzag64(bin) << 1) | sign) as u64);
+            outliers.push(false);
+        } else {
+            words.push(v.to_bits());
+            outliers.push(true);
+        }
+    }
+    QuantizedChunk64 { words, outliers }
+}
+
+pub fn rel_dequantize(chunk: &QuantizedChunk64, p: Rel64Params, variant: FnVariant) -> Vec<f64> {
+    chunk
+        .words
+        .iter()
+        .enumerate()
+        .map(|(i, &w)| {
+            if chunk.outliers.get(i) {
+                f64::from_bits(w)
+            } else {
+                let sign = (w & 1) != 0;
+                let bin = unzigzag64(w >> 1);
+                let mag = match variant {
+                    FnVariant::Approx => pow2approxd_from_bins(bin, p.l2eb),
+                    FnVariant::Native => (bin as f64 * p.l2eb).exp2(),
+                };
+                if sign {
+                    -mag
+                } else {
+                    mag
+                }
+            }
+        })
+        .collect()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::types::FnVariant::{Approx, Native};
+    use crate::types::Protection::Protected;
+
+    #[test]
+    fn abs64_bound_holds() {
+        let eb = 1e-6f64;
+        let p = Abs64Params::new(eb);
+        let x: Vec<f64> = (0..50_000).map(|i| (i as f64 * 0.123).sin() * 1e3).collect();
+        let c = abs_quantize(&x, p, Protected);
+        let y = abs_dequantize(&c, p);
+        for (a, b) in x.iter().zip(&y) {
+            assert!((a - b).abs() <= eb, "{a} -> {b}");
+        }
+    }
+
+    #[test]
+    fn abs64_specials_lossless() {
+        let p = Abs64Params::new(1e-3);
+        let x = [
+            f64::INFINITY,
+            f64::NEG_INFINITY,
+            f64::NAN,
+            f64::MAX,
+            5e-324, // smallest denormal
+            0.0,
+        ];
+        let c = abs_quantize(&x, p, Protected);
+        let y = abs_dequantize(&c, p);
+        for (a, b) in x.iter().zip(&y) {
+            if a.is_nan() {
+                assert!(b.is_nan());
+            } else if !a.is_finite() || a.abs() > 1e300 {
+                assert_eq!(a.to_bits(), b.to_bits());
+            } else {
+                assert!((a - b).abs() <= 1e-3);
+            }
+        }
+    }
+
+    #[test]
+    fn rel64_bound_and_sign_hold() {
+        let eb = 1e-5f64;
+        let p = Rel64Params::new(eb);
+        let x: Vec<f64> = (1..50_000)
+            .map(|i| {
+                let m = (i as f64 * 0.37).cos() * 10.0 + 10.5;
+                m * 2.0f64.powi(((i % 400) as i32) - 200)
+                    * if i % 3 == 0 { -1.0 } else { 1.0 }
+            })
+            .collect();
+        for variant in [Approx, Native] {
+            let c = rel_quantize(&x, p, variant, Protected);
+            let y = rel_dequantize(&c, p, variant);
+            for (a, b) in x.iter().zip(&y) {
+                let rel = ((a - b) / a).abs();
+                assert!(rel <= eb, "{a} -> {b} rel {rel} ({variant:?})");
+                assert_eq!(a.is_sign_negative(), b.is_sign_negative());
+            }
+        }
+    }
+
+    #[test]
+    fn rel64_denormals_lossless() {
+        // Paper: "for a REL error bound, even denormals may require
+        // special handling" — we store them losslessly.
+        let p = Rel64Params::new(1e-3);
+        let x = [5e-324f64, f64::from_bits(0x000F_FFFF_FFFF_FFFF), -1e-320];
+        let c = rel_quantize(&x, p, Approx, Protected);
+        assert_eq!(c.outlier_count(), 3);
+        let y = rel_dequantize(&c, p, Approx);
+        for (a, b) in x.iter().zip(&y) {
+            assert_eq!(a.to_bits(), b.to_bits());
+        }
+    }
+
+    #[test]
+    fn zigzag64_roundtrips() {
+        for b in [0i64, 1, -1, i64::MAX / 4, i64::MIN / 4, 12345, -98765] {
+            assert_eq!(unzigzag64(zigzag64(b) as u64), b);
+        }
+    }
+}

@@ -1,0 +1,180 @@
+//! The paper's contribution: guaranteed-error-bound quantizers.
+//!
+//! Layout:
+//!   - [`approx`]  — parity-safe log2/pow2 bit-manipulation functions;
+//!   - [`abs`]     — point-wise absolute bound (f32);
+//!   - [`rel`]     — point-wise relative bound (f32), approx + native;
+//!   - [`noa`]     — normalized absolute bound (ABS over the range);
+//!   - [`f64data`] — double-precision variants (native pipeline only).
+//!
+//! All f32 quantizers exist twice in this repo: here (native rust, the
+//! paper's "CPU") and as AOT-compiled XLA artifacts (the paper's
+//! "GPU"), with bit-for-bit identical outputs for the parity-safe
+//! variants — enforced by `verify::parity` and the pytest suite.
+
+pub mod abs;
+pub mod approx;
+pub mod f64data;
+pub mod noa;
+pub mod rel;
+
+use crate::types::{ErrorBound, FnVariant, Protection, QuantizedChunk};
+
+/// Signed bin -> non-negative code. The shift is defined bitwise in
+/// rust (no UB on value overflow), matching XLA/numpy semantics.
+#[inline]
+pub fn zigzag(b: i32) -> i32 {
+    (b << 1) ^ (b >> 31)
+}
+
+/// Inverse of [`zigzag`]; takes the raw u32 word.
+#[inline]
+pub fn unzigzag(z: u32) -> i32 {
+    ((z >> 1) as i32) ^ -((z & 1) as i32)
+}
+
+/// Fully resolved quantizer configuration for one stream.
+#[derive(Debug, Clone, Copy)]
+pub enum QuantizerConfig {
+    Abs(abs::AbsParams, Protection),
+    Rel(rel::RelParams, FnVariant, Protection),
+}
+
+impl QuantizerConfig {
+    /// Resolve an [`ErrorBound`] against the data (NOA needs the range).
+    pub fn resolve(
+        bound: ErrorBound,
+        variant: FnVariant,
+        protection: Protection,
+        data_for_range: &[f32],
+    ) -> QuantizerConfig {
+        match bound {
+            ErrorBound::Abs(e) => QuantizerConfig::Abs(abs::AbsParams::new(e), protection),
+            ErrorBound::Noa(e) => {
+                let stats = noa::RangeStats::scan(data_for_range);
+                QuantizerConfig::Abs(noa::to_abs_params(e, stats), protection)
+            }
+            ErrorBound::Rel(e) => {
+                QuantizerConfig::Rel(rel::RelParams::new(e), variant, protection)
+            }
+        }
+    }
+
+    /// The effective epsilon after NOA resolution.
+    pub fn effective_epsilon(&self) -> f32 {
+        match self {
+            QuantizerConfig::Abs(p, _) => p.eb,
+            QuantizerConfig::Rel(p, _, _) => p.eb,
+        }
+    }
+
+    /// The (1,4) scalar operand for the matching AOT artifact.
+    pub fn scalar_operand(&self) -> [f32; 4] {
+        match self {
+            QuantizerConfig::Abs(p, _) => p.scalar_operand(),
+            QuantizerConfig::Rel(p, _, _) => p.scalar_operand(),
+        }
+    }
+
+    /// Artifact name for the quantize direction (runtime lookup key).
+    pub fn quant_artifact(&self) -> &'static str {
+        match self {
+            QuantizerConfig::Abs(_, Protection::Protected) => "abs_quant",
+            QuantizerConfig::Abs(_, Protection::Unprotected) => "abs_quant_unprot",
+            QuantizerConfig::Rel(_, FnVariant::Approx, _) => "rel_quant",
+            QuantizerConfig::Rel(_, FnVariant::Native, _) => "rel_quant_native",
+        }
+    }
+
+    /// Artifact name for the dequantize direction.
+    pub fn dequant_artifact(&self) -> &'static str {
+        match self {
+            QuantizerConfig::Abs(..) => "abs_dequant",
+            QuantizerConfig::Rel(_, FnVariant::Approx, _) => "rel_dequant",
+            QuantizerConfig::Rel(_, FnVariant::Native, _) => "rel_dequant_native",
+        }
+    }
+
+    /// Quantize on the native (rust) pipeline.
+    pub fn quantize_native(&self, x: &[f32]) -> QuantizedChunk {
+        match *self {
+            QuantizerConfig::Abs(p, prot) => abs::quantize(x, p, prot),
+            QuantizerConfig::Rel(p, v, prot) => rel::quantize(x, p, v, prot),
+        }
+    }
+
+    /// Dequantize on the native (rust) pipeline.
+    pub fn dequantize_native(&self, chunk: &QuantizedChunk) -> Vec<f32> {
+        match *self {
+            QuantizerConfig::Abs(p, _) => abs::dequantize(chunk, p),
+            QuantizerConfig::Rel(p, v, _) => rel::dequantize(chunk, p, v),
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::types::Protection::Protected;
+
+    #[test]
+    fn zigzag_roundtrips_across_range() {
+        for b in [
+            0i32,
+            1,
+            -1,
+            2,
+            -2,
+            1 << 28,
+            -(1 << 28),
+            i32::MAX / 2,
+            i32::MIN / 2,
+        ] {
+            assert_eq!(unzigzag(zigzag(b) as u32), b, "bin {b}");
+        }
+    }
+
+    #[test]
+    fn zigzag_maps_small_bins_to_small_codes() {
+        assert_eq!(zigzag(0), 0);
+        assert_eq!(zigzag(-1), 1);
+        assert_eq!(zigzag(1), 2);
+        assert_eq!(zigzag(-2), 3);
+        assert_eq!(zigzag(2), 4);
+    }
+
+    #[test]
+    fn config_resolves_noa_to_abs() {
+        let x: Vec<f32> = (0..100).map(|i| i as f32).collect(); // R=99
+        let c = QuantizerConfig::resolve(
+            ErrorBound::Noa(1e-2),
+            FnVariant::Approx,
+            Protected,
+            &x,
+        );
+        let eff = c.effective_epsilon();
+        assert!((eff - 0.99).abs() < 1e-5, "eff {eff}");
+    }
+
+    #[test]
+    fn artifact_names_match_manifest() {
+        let x = [1.0f32];
+        let abs = QuantizerConfig::resolve(ErrorBound::Abs(1e-3), FnVariant::Approx, Protected, &x);
+        assert_eq!(abs.quant_artifact(), "abs_quant");
+        assert_eq!(abs.dequant_artifact(), "abs_dequant");
+        let rel = QuantizerConfig::resolve(ErrorBound::Rel(1e-3), FnVariant::Native, Protected, &x);
+        assert_eq!(rel.quant_artifact(), "rel_quant_native");
+        assert_eq!(rel.dequant_artifact(), "rel_dequant_native");
+    }
+
+    #[test]
+    fn native_roundtrip_through_config() {
+        let x: Vec<f32> = (0..1000).map(|i| (i as f32).sqrt()).collect();
+        for bound in [ErrorBound::Abs(1e-3), ErrorBound::Rel(1e-3), ErrorBound::Noa(1e-3)] {
+            let c = QuantizerConfig::resolve(bound, FnVariant::Approx, Protected, &x);
+            let q = c.quantize_native(&x);
+            let y = c.dequantize_native(&q);
+            assert_eq!(y.len(), x.len());
+        }
+    }
+}

@@ -1,0 +1,125 @@
+//! Point-wise normalized absolute (NOA) quantizer.
+//!
+//! NOA is ABS with the bound scaled by the input's value range
+//! R = max - min (Section 2.1.3): eps_abs = eps_noa * R. The range scan
+//! ignores non-finite values (an INF would make R infinite and disable
+//! quantization entirely, which is not what users mean).
+
+use crate::types::{Protection, QuantizedChunk};
+
+use super::abs::{self, AbsParams};
+
+/// Value range statistics for a stream.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct RangeStats {
+    pub min: f32,
+    pub max: f32,
+    /// Number of finite values the range was computed over.
+    pub finite_count: usize,
+}
+
+impl RangeStats {
+    /// Scan a slice for its finite min/max.
+    pub fn scan(x: &[f32]) -> RangeStats {
+        let mut min = f32::INFINITY;
+        let mut max = f32::NEG_INFINITY;
+        let mut n = 0usize;
+        for &v in x {
+            if v.is_finite() {
+                min = min.min(v);
+                max = max.max(v);
+                n += 1;
+            }
+        }
+        RangeStats {
+            min,
+            max,
+            finite_count: n,
+        }
+    }
+
+    /// R = max - min, in f64 to avoid overflow on extreme ranges.
+    pub fn range(&self) -> f64 {
+        if self.finite_count == 0 {
+            0.0
+        } else {
+            self.max as f64 - self.min as f64
+        }
+    }
+}
+
+/// Derive the effective ABS params for a NOA bound over a given range.
+/// A zero range (constant or empty input) degrades to the raw epsilon,
+/// which quantizes everything into bin 0 exactly.
+pub fn to_abs_params(eb_noa: f32, stats: RangeStats) -> AbsParams {
+    let r = stats.range();
+    let eff = if r > 0.0 {
+        ((eb_noa as f64) * r) as f32
+    } else {
+        eb_noa
+    };
+    AbsParams::new(eff)
+}
+
+/// One-shot NOA quantization of a full buffer.
+pub fn quantize(x: &[f32], eb_noa: f32, protection: Protection) -> (QuantizedChunk, AbsParams) {
+    let p = to_abs_params(eb_noa, RangeStats::scan(x));
+    (abs::quantize(x, p, protection), p)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::types::Protection::Protected;
+
+    #[test]
+    fn range_ignores_specials() {
+        let x = [1.0f32, f32::NAN, 5.0, f32::INFINITY, -3.0, f32::NEG_INFINITY];
+        let s = RangeStats::scan(&x);
+        assert_eq!(s.min, -3.0);
+        assert_eq!(s.max, 5.0);
+        assert_eq!(s.finite_count, 3);
+        assert_eq!(s.range(), 8.0);
+    }
+
+    #[test]
+    fn noa_bound_scales_with_range() {
+        let x: Vec<f32> = (0..1000).map(|i| i as f32).collect(); // R = 999
+        let eb = 1e-3f32;
+        let (chunk, p) = quantize(&x, eb, Protected);
+        let y = abs::dequantize(&chunk, p);
+        let r = 999.0f64;
+        for (a, b) in x.iter().zip(&y) {
+            let err = ((*a as f64) - (*b as f64)).abs();
+            assert!(err <= eb as f64 * r, "{a} -> {b}");
+        }
+    }
+
+    #[test]
+    fn constant_input_roundtrips_exactly() {
+        let x = vec![4.25f32; 100];
+        let (chunk, p) = quantize(&x, 1e-2, Protected);
+        let y = abs::dequantize(&chunk, p);
+        for (a, b) in x.iter().zip(&y) {
+            assert!((a - b).abs() <= 1e-2);
+        }
+    }
+
+    #[test]
+    fn empty_input_safe() {
+        let s = RangeStats::scan(&[]);
+        assert_eq!(s.finite_count, 0);
+        assert_eq!(s.range(), 0.0);
+        let (c, _) = quantize(&[], 1e-3, Protected);
+        assert!(c.is_empty());
+    }
+
+    #[test]
+    fn extreme_range_does_not_overflow() {
+        let x = [f32::MAX, f32::MIN];
+        let s = RangeStats::scan(&x);
+        assert!(s.range().is_finite());
+        let (c, _) = quantize(&x, 1e-3, Protected);
+        assert_eq!(c.len(), 2);
+    }
+}

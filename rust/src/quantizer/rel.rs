@@ -1,0 +1,247 @@
+//! Guaranteed-error-bound REL quantizer (native rust pipeline).
+//!
+//! Bit-exact mirror of the XLA artifacts `rel_quant`/`rel_dequant`
+//! (approx variant) — see `python/compile/kernels/qmath.py`. The
+//! `Native` variant uses libm `log2`/`exp2` and reproduces the paper's
+//! "original functions" baseline, which is NOT parity-safe across
+//! independently compiled pipelines (Section 2.3's log() example).
+
+use crate::bitvec::BitVec;
+use crate::types::{FnVariant, Protection, QuantizedChunk, MAXBIN_REL, REL_MIN_MAG};
+
+use super::approx::{log2approxf, pow2approx_from_bins};
+use super::{unzigzag, zigzag};
+
+/// Derived REL factors, computed ONCE per stream so every device uses
+/// bit-identical values (the paper's fix for divergent log()/pow()).
+#[derive(Debug, Clone, Copy)]
+pub struct RelParams {
+    pub eb: f32,
+    /// log2(1 + eb), rounded to f32 from an f64 computation.
+    pub l2eb: f32,
+    /// 1 / l2eb (f32).
+    pub inv_l2eb: f32,
+}
+
+impl RelParams {
+    pub fn new(eb: f32) -> Self {
+        let l2eb = ((1.0f64 + eb as f64).log2()) as f32;
+        RelParams {
+            eb,
+            l2eb,
+            inv_l2eb: 1.0f32 / l2eb,
+        }
+    }
+
+    /// The (1,4) scalar operand fed to the AOT artifacts.
+    pub fn scalar_operand(&self) -> [f32; 4] {
+        [self.eb, self.l2eb, self.inv_l2eb, 0.0]
+    }
+}
+
+#[inline]
+fn encode_one(v: f32, p: RelParams, variant: FnVariant, protected: bool) -> (u32, bool) {
+    let sign = (v < 0.0) as i32;
+    let ax = v.abs();
+    let finite = ax < f32::INFINITY; // false for INF and NaN
+    let big_enough = ax >= REL_MIN_MAG; // false for 0 and denormals
+    let lg = match variant {
+        FnVariant::Approx => log2approxf(ax),
+        FnVariant::Native => ax.log2(),
+    };
+    let binf = (lg * p.inv_l2eb).round_ties_even();
+    let maxbin = MAXBIN_REL as f32;
+    let in_range = binf < maxbin && binf > -maxbin;
+    let usable = in_range && finite && big_enough;
+    let binc = if usable { binf } else { 0.0 };
+    let bin = binc as i32;
+    let recon = match variant {
+        FnVariant::Approx => pow2approx_from_bins(bin, p.l2eb),
+        FnVariant::Native => (binc * p.l2eb).exp2(),
+    };
+    let quant = if protected {
+        let err = ((ax as f64) - (recon as f64)).abs();
+        usable && err <= (p.eb as f64) * (ax as f64)
+    } else {
+        usable
+    };
+    if quant {
+        (((zigzag(bin) << 1) | sign) as u32, false)
+    } else {
+        (v.to_bits(), true)
+    }
+}
+
+/// Quantize one slice under a point-wise relative bound.
+pub fn quantize(
+    x: &[f32],
+    p: RelParams,
+    variant: FnVariant,
+    protection: Protection,
+) -> QuantizedChunk {
+    let n = x.len();
+    let mut words = Vec::with_capacity(n);
+    let mut bits = vec![0u64; n.div_ceil(64)];
+    let protected = protection == Protection::Protected;
+    for (i, &v) in x.iter().enumerate() {
+        let (w, o) = encode_one(v, p, variant, protected);
+        words.push(w);
+        bits[i >> 6] |= (o as u64) << (i & 63);
+    }
+    QuantizedChunk {
+        words,
+        outliers: BitVec::from_raw(bits, n),
+    }
+}
+
+/// Decode one chunk. Must use the same pow2 the encoder verified with.
+pub fn dequantize(chunk: &QuantizedChunk, p: RelParams, variant: FnVariant) -> Vec<f32> {
+    let mut out = Vec::with_capacity(chunk.words.len());
+    for (i, &w) in chunk.words.iter().enumerate() {
+        if chunk.outliers.get(i) {
+            out.push(f32::from_bits(w));
+        } else {
+            let sign = (w & 1) != 0;
+            let bin = unzigzag(w >> 1);
+            let mag = match variant {
+                FnVariant::Approx => pow2approx_from_bins(bin, p.l2eb),
+                FnVariant::Native => (bin as f32 * p.l2eb).exp2(),
+            };
+            out.push(if sign { -mag } else { mag });
+        }
+    }
+    out
+}
+
+/// Table 9 analogue for REL: values whose double check fails even
+/// though their bin was in range (outliers due to fn inaccuracy or
+/// rounding, not due to being special).
+pub fn rounding_affected(x: &[f32], p: RelParams, variant: FnVariant) -> usize {
+    x.iter()
+        .filter(|&&v| {
+            let (_, out_prot) = encode_one(v, p, variant, true);
+            let (_, out_unprot) = encode_one(v, p, variant, false);
+            out_prot && !out_unprot
+        })
+        .count()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::types::FnVariant::{Approx, Native};
+    use crate::types::Protection::Protected;
+
+    fn roundtrip(x: &[f32], eb: f32, variant: FnVariant) -> Vec<f32> {
+        let p = RelParams::new(eb);
+        let c = quantize(x, p, variant, Protected);
+        dequantize(&c, p, variant)
+    }
+
+    fn assert_rel_bound(x: &[f32], y: &[f32], eb: f32) {
+        for (a, b) in x.iter().zip(y) {
+            if a.is_nan() {
+                assert!(b.is_nan());
+                continue;
+            }
+            if !a.is_finite() || *a == 0.0 || a.abs() < REL_MIN_MAG {
+                assert_eq!(a.to_bits(), b.to_bits(), "{a} must be lossless");
+                continue;
+            }
+            let rel = (((*a as f64) - (*b as f64)) / (*a as f64)).abs();
+            assert!(rel <= eb as f64, "{a} -> {b} rel {rel}");
+            assert_eq!(
+                a.is_sign_negative(),
+                b.is_sign_negative(),
+                "REL must preserve sign: {a} -> {b}"
+            );
+        }
+    }
+
+    #[test]
+    fn bound_holds_both_variants() {
+        let x: Vec<f32> = (1..50_000)
+            .map(|i| {
+                let m = (i as f32 * 0.7).sin() * 10.0 + 11.0;
+                let e = ((i % 60) as i32) - 30;
+                m * 2.0f32.powi(e) * if i % 2 == 0 { -1.0 } else { 1.0 }
+            })
+            .collect();
+        for eb in [1e-1f32, 1e-2, 1e-3, 1e-4] {
+            assert_rel_bound(&x, &roundtrip(&x, eb, Approx), eb);
+            assert_rel_bound(&x, &roundtrip(&x, eb, Native), eb);
+        }
+    }
+
+    #[test]
+    fn specials_lossless() {
+        let eb = 1e-3;
+        let x = [
+            f32::INFINITY,
+            f32::NEG_INFINITY,
+            f32::NAN,
+            0.0,
+            -0.0,
+            f32::from_bits(1),        // smallest denormal
+            f32::from_bits(0x007F_FFFF), // largest denormal
+            REL_MIN_MAG / 2.0,
+            f32::MAX,
+            f32::MIN_POSITIVE,
+        ];
+        let y = roundtrip(&x, eb, Approx);
+        assert_rel_bound(&x, &y, eb);
+    }
+
+    #[test]
+    fn sign_packed_correctly() {
+        let eb = 1e-2;
+        let p = RelParams::new(eb);
+        let x = [3.7f32, -3.7];
+        let c = quantize(&x, p, Approx, Protected);
+        assert_eq!(c.outlier_count(), 0);
+        assert_eq!(c.words[0] & 1, 0);
+        assert_eq!(c.words[1] & 1, 1);
+        assert_eq!(c.words[0] >> 1, c.words[1] >> 1, "same magnitude bin");
+    }
+
+    #[test]
+    fn approx_costs_more_outliers_than_native() {
+        // The compression-ratio price of parity (Figure 1 / Table 4):
+        // the approximation is less accurate, so more values fail the
+        // double check at tight bounds.
+        let x: Vec<f32> = (1..200_000)
+            .map(|i| ((i as f64) * 0.001).exp() as f32 % 9.7e3 + 1.0)
+            .collect();
+        let eb = 1e-4f32;
+        let p = RelParams::new(eb);
+        let a = quantize(&x, p, Approx, Protected).outlier_count();
+        let n = quantize(&x, p, Native, Protected).outlier_count();
+        assert!(a >= n, "approx {a} vs native {n}");
+    }
+
+    #[test]
+    fn tiny_magnitudes_fall_to_lossless() {
+        let p = RelParams::new(1e-3);
+        let x = [REL_MIN_MAG / 4.0, -REL_MIN_MAG / 4.0, f32::from_bits(123)];
+        let c = quantize(&x, p, Approx, Protected);
+        assert_eq!(c.outlier_count(), 3);
+    }
+
+    #[test]
+    fn rounding_affected_is_consistent() {
+        let x: Vec<f32> = (1..10_000).map(|i| 1.0 + i as f32 * 1e-4).collect();
+        let p = RelParams::new(1e-5);
+        let n = rounding_affected(&x, p, Approx);
+        let prot = quantize(&x, p, Approx, Protected).outlier_count();
+        let unprot =
+            quantize(&x, p, Approx, crate::types::Protection::Unprotected).outlier_count();
+        assert_eq!(n, prot - unprot);
+    }
+
+    #[test]
+    fn dequantize_empty() {
+        let p = RelParams::new(1e-3);
+        let c = quantize(&[], p, Approx, Protected);
+        assert!(dequantize(&c, p, Approx).is_empty());
+    }
+}

@@ -1,0 +1,134 @@
+//! PJRT engine: loads AOT artifacts (HLO text) and executes them.
+//!
+//! This is the paper's "GPU pipeline" analogue: an independently
+//! compiled implementation of the same quantizers (JAX/Pallas ->
+//! StableHLO -> HLO text -> xla_extension 0.5.1 CPU codegen), which is
+//! exactly the setting in which parity bugs appear.
+//!
+//! HLO *text* is the interchange format: jax >= 0.5 serializes protos
+//! with 64-bit instruction ids that xla_extension 0.5.1 rejects; the
+//! text parser reassigns ids (see python/compile/aot.py).
+//!
+//! NOT thread-safe (PjRtClient is Rc-based) — see [`super::service`]
+//! for the multi-threaded handle.
+
+use std::collections::HashMap;
+use std::path::{Path, PathBuf};
+
+use anyhow::{bail, Context, Result};
+
+use crate::bitvec::BitVec;
+use crate::types::{QuantizedChunk, CHUNK_COLS, CHUNK_ELEMS, CHUNK_ROWS};
+
+/// All artifact names produced by `python -m compile.aot`.
+pub const ARTIFACT_NAMES: [&str; 7] = [
+    "abs_quant",
+    "abs_quant_unprot",
+    "abs_dequant",
+    "rel_quant",
+    "rel_quant_native",
+    "rel_dequant",
+    "rel_dequant_native",
+];
+
+/// Owns the PJRT client and the compiled executables.
+pub struct PjrtEngine {
+    client: xla::PjRtClient,
+    executables: HashMap<&'static str, xla::PjRtLoadedExecutable>,
+    artifact_dir: PathBuf,
+}
+
+impl PjrtEngine {
+    /// Create a CPU PJRT client and compile every artifact found in
+    /// `artifact_dir`. Fails if any expected artifact is missing.
+    pub fn load(artifact_dir: &Path) -> Result<PjrtEngine> {
+        let client = xla::PjRtClient::cpu().context("creating PJRT CPU client")?;
+        let mut executables = HashMap::new();
+        for name in ARTIFACT_NAMES {
+            let path = artifact_dir.join(format!("{name}.hlo.txt"));
+            if !path.exists() {
+                bail!(
+                    "artifact {} not found — run `make artifacts` first",
+                    path.display()
+                );
+            }
+            let proto = xla::HloModuleProto::from_text_file(
+                path.to_str().context("non-utf8 artifact path")?,
+            )
+            .with_context(|| format!("parsing HLO text {name}"))?;
+            let comp = xla::XlaComputation::from_proto(&proto);
+            let exe = client
+                .compile(&comp)
+                .with_context(|| format!("PJRT-compiling {name}"))?;
+            executables.insert(name, exe);
+        }
+        Ok(PjrtEngine {
+            client,
+            executables,
+            artifact_dir: artifact_dir.to_path_buf(),
+        })
+    }
+
+    pub fn platform(&self) -> String {
+        self.client.platform_name()
+    }
+
+    pub fn artifact_dir(&self) -> &Path {
+        &self.artifact_dir
+    }
+
+    fn exe(&self, name: &str) -> Result<&xla::PjRtLoadedExecutable> {
+        self.executables
+            .get(name)
+            .with_context(|| format!("unknown artifact {name}"))
+    }
+
+    /// Run a quantize artifact over exactly one chunk (padded by the
+    /// caller to CHUNK_ELEMS). Returns the LC word stream + outlier map.
+    pub fn quantize_chunk(
+        &self,
+        artifact: &str,
+        x: &[f32],
+        scalars: [f32; 4],
+    ) -> Result<QuantizedChunk> {
+        if x.len() != CHUNK_ELEMS {
+            bail!("quantize_chunk wants {CHUNK_ELEMS} values, got {}", x.len());
+        }
+        let xin = xla::Literal::vec1(x).reshape(&[CHUNK_ROWS as i64, CHUNK_COLS as i64])?;
+        let sin = xla::Literal::vec1(&scalars).reshape(&[1, 4])?;
+        let result = self.exe(artifact)?.execute::<xla::Literal>(&[xin, sin])?[0][0]
+            .to_literal_sync()?;
+        // Lowered with return_tuple=True: two outputs form a 2-tuple.
+        let (words_l, outliers_l) = result.to_tuple2()?;
+        let words_i: Vec<i32> = words_l.to_vec()?;
+        let outliers_i: Vec<i32> = outliers_l.to_vec()?;
+        let words: Vec<u32> = words_i.into_iter().map(|w| w as u32).collect();
+        let outliers = BitVec::from_iter(outliers_i.into_iter().map(|o| o != 0));
+        Ok(QuantizedChunk { words, outliers })
+    }
+
+    /// Run a dequantize artifact over one chunk of words + outlier map.
+    pub fn dequantize_chunk(
+        &self,
+        artifact: &str,
+        chunk: &QuantizedChunk,
+        scalars: [f32; 4],
+    ) -> Result<Vec<f32>> {
+        if chunk.words.len() != CHUNK_ELEMS {
+            bail!(
+                "dequantize_chunk wants {CHUNK_ELEMS} words, got {}",
+                chunk.words.len()
+            );
+        }
+        let words_i: Vec<i32> = chunk.words.iter().map(|&w| w as i32).collect();
+        let outlier_i: Vec<i32> = chunk.outliers.iter().map(|b| b as i32).collect();
+        let dims = [CHUNK_ROWS as i64, CHUNK_COLS as i64];
+        let win = xla::Literal::vec1(&words_i).reshape(&dims)?;
+        let oin = xla::Literal::vec1(&outlier_i).reshape(&dims)?;
+        let sin = xla::Literal::vec1(&scalars).reshape(&[1, 4])?;
+        let result = self.exe(artifact)?.execute::<xla::Literal>(&[win, oin, sin])?[0][0]
+            .to_literal_sync()?;
+        let out = result.to_tuple1()?;
+        Ok(out.to_vec()?)
+    }
+}

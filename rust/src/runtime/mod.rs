@@ -1,0 +1,47 @@
+//! PJRT runtime: load AOT artifacts, execute them from the L3 hot path.
+//!
+//! `PjRtClient::cpu()` -> `HloModuleProto::from_text_file` ->
+//! `client.compile` -> `execute` (pattern from /opt/xla-example).
+//! Python never runs here — the artifacts are self-contained HLO.
+
+pub mod engine;
+pub mod service;
+
+use std::path::PathBuf;
+
+pub use engine::{PjrtEngine, ARTIFACT_NAMES};
+pub use service::{PjrtHandle, PjrtService};
+
+/// Default artifact directory: `$LC_ARTIFACT_DIR` or `<repo>/artifacts`.
+pub fn default_artifact_dir() -> PathBuf {
+    if let Ok(d) = std::env::var("LC_ARTIFACT_DIR") {
+        return PathBuf::from(d);
+    }
+    // CARGO_MANIFEST_DIR points at the repo root (workspace layout).
+    PathBuf::from(env!("CARGO_MANIFEST_DIR")).join("artifacts")
+}
+
+/// Pad a slice to CHUNK_ELEMS with zeros (for the fixed-shape artifacts).
+pub fn pad_chunk(x: &[f32]) -> Vec<f32> {
+    let mut v = x.to_vec();
+    v.resize(crate::types::CHUNK_ELEMS, 0.0);
+    v
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn pad_chunk_pads_with_zeros() {
+        let v = pad_chunk(&[1.0, 2.0]);
+        assert_eq!(v.len(), crate::types::CHUNK_ELEMS);
+        assert_eq!(v[0], 1.0);
+        assert_eq!(v[2], 0.0);
+    }
+
+    #[test]
+    fn default_dir_ends_with_artifacts() {
+        assert!(default_artifact_dir().ends_with("artifacts"));
+    }
+}

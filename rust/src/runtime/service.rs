@@ -1,0 +1,166 @@
+//! Thread-safe handle over the single-threaded PJRT engine.
+//!
+//! PjRtClient is Rc-based, so all PJRT work lives on one dedicated
+//! service thread; coordinator workers talk to it through a cloneable
+//! [`PjrtHandle`] (mpsc request channel + per-request reply channel).
+//! This mirrors the leader/worker split of GPU serving stacks: one
+//! device owner, many CPU-side producers.
+
+use std::path::Path;
+use std::sync::mpsc;
+use std::thread::JoinHandle;
+
+use anyhow::{anyhow, Context, Result};
+
+use crate::types::QuantizedChunk;
+
+use super::engine::PjrtEngine;
+
+enum Request {
+    Quantize {
+        artifact: &'static str,
+        x: Vec<f32>,
+        scalars: [f32; 4],
+        reply: mpsc::Sender<Result<QuantizedChunk>>,
+    },
+    Dequantize {
+        artifact: &'static str,
+        chunk: QuantizedChunk,
+        scalars: [f32; 4],
+        reply: mpsc::Sender<Result<Vec<f32>>>,
+    },
+    Platform {
+        reply: mpsc::Sender<String>,
+    },
+}
+
+/// Cloneable, Send handle to the PJRT service thread.
+#[derive(Clone)]
+pub struct PjrtHandle {
+    tx: mpsc::Sender<Request>,
+}
+
+/// The running service; dropping it (after all handles) stops the thread.
+pub struct PjrtService {
+    handle: PjrtHandle,
+    join: Option<JoinHandle<()>>,
+}
+
+impl PjrtService {
+    /// Spawn the service thread and load all artifacts on it.
+    /// Returns once loading finished (or failed).
+    pub fn start(artifact_dir: &Path) -> Result<PjrtService> {
+        let (tx, rx) = mpsc::channel::<Request>();
+        let (ready_tx, ready_rx) = mpsc::channel::<Result<()>>();
+        let dir = artifact_dir.to_path_buf();
+        let join = std::thread::Builder::new()
+            .name("pjrt-service".into())
+            .spawn(move || {
+                let engine = match PjrtEngine::load(&dir) {
+                    Ok(e) => {
+                        let _ = ready_tx.send(Ok(()));
+                        e
+                    }
+                    Err(e) => {
+                        let _ = ready_tx.send(Err(e));
+                        return;
+                    }
+                };
+                while let Ok(req) = rx.recv() {
+                    match req {
+                        Request::Quantize {
+                            artifact,
+                            x,
+                            scalars,
+                            reply,
+                        } => {
+                            let _ = reply.send(engine.quantize_chunk(artifact, &x, scalars));
+                        }
+                        Request::Dequantize {
+                            artifact,
+                            chunk,
+                            scalars,
+                            reply,
+                        } => {
+                            let _ =
+                                reply.send(engine.dequantize_chunk(artifact, &chunk, scalars));
+                        }
+                        Request::Platform { reply } => {
+                            let _ = reply.send(engine.platform());
+                        }
+                    }
+                }
+            })
+            .context("spawning pjrt-service thread")?;
+        ready_rx
+            .recv()
+            .context("pjrt-service thread died during startup")??;
+        Ok(PjrtService {
+            handle: PjrtHandle { tx },
+            join: Some(join),
+        })
+    }
+
+    pub fn handle(&self) -> PjrtHandle {
+        self.handle.clone()
+    }
+}
+
+impl Drop for PjrtService {
+    fn drop(&mut self) {
+        // Close our channel end; thread exits when all handles drop.
+        let (tx, _) = mpsc::channel();
+        self.handle = PjrtHandle { tx };
+        if let Some(j) = self.join.take() {
+            let _ = j.join();
+        }
+    }
+}
+
+impl PjrtHandle {
+    /// Quantize one padded chunk on the PJRT pipeline (blocking).
+    pub fn quantize_chunk(
+        &self,
+        artifact: &'static str,
+        x: Vec<f32>,
+        scalars: [f32; 4],
+    ) -> Result<QuantizedChunk> {
+        let (reply, rx) = mpsc::channel();
+        self.tx
+            .send(Request::Quantize {
+                artifact,
+                x,
+                scalars,
+                reply,
+            })
+            .map_err(|_| anyhow!("pjrt service stopped"))?;
+        rx.recv().map_err(|_| anyhow!("pjrt service dropped reply"))?
+    }
+
+    /// Dequantize one padded chunk on the PJRT pipeline (blocking).
+    pub fn dequantize_chunk(
+        &self,
+        artifact: &'static str,
+        chunk: QuantizedChunk,
+        scalars: [f32; 4],
+    ) -> Result<Vec<f32>> {
+        let (reply, rx) = mpsc::channel();
+        self.tx
+            .send(Request::Dequantize {
+                artifact,
+                chunk,
+                scalars,
+                reply,
+            })
+            .map_err(|_| anyhow!("pjrt service stopped"))?;
+        rx.recv().map_err(|_| anyhow!("pjrt service dropped reply"))?
+    }
+
+    pub fn platform(&self) -> Result<String> {
+        let (reply, rx) = mpsc::channel();
+        self.tx
+            .send(Request::Platform { reply })
+            .map_err(|_| anyhow!("pjrt service stopped"))?;
+        rx.recv().map_err(|_| anyhow!("pjrt service dropped reply"))
+    }
+}

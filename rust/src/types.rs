@@ -1,0 +1,219 @@
+//! Core types shared across the LC-repro stack.
+//!
+//! Constants here MUST match `python/compile/kernels/qmath.py` — they are
+//! part of the cross-device parity contract.
+
+use std::fmt;
+
+/// Number of mantissa bits in an IEEE-754 single.
+pub const MANTISSA_BITS_F32: u32 = 23;
+/// Mantissa mask for f32 bit manipulation.
+pub const MANTISSA_MASK_F32: i32 = 0x007F_FFFF;
+/// Number of mantissa bits in an IEEE-754 double.
+pub const MANTISSA_BITS_F64: u32 = 52;
+/// Mantissa mask for f64 bit manipulation.
+pub const MANTISSA_MASK_F64: i64 = 0x000F_FFFF_FFFF_FFFF;
+
+/// ABS bin-range limit: 29-bit signed bins keep `f64(bin) * f64(2eb)`
+/// exact (<= 53 significant bits), which makes the double check immune
+/// to FMA contraction (see DESIGN.md section 8).
+pub const MAXBIN_ABS: i32 = 1 << 28;
+/// REL bin-range limit (one bit narrower: the word also packs a sign).
+pub const MAXBIN_REL: i32 = 1 << 27;
+
+/// REL magnitude cutoff (= 2^-124): values below this hit FTZ/DAZ parity
+/// hazards and possibly-denormal reconstructions, so they are stored
+/// losslessly. Bit pattern 0x0180_0000.
+pub const REL_MIN_MAG: f32 = f32::from_bits(0x0180_0000);
+
+/// Fixed chunk geometry, matching the AOT artifacts.
+pub const CHUNK_ROWS: usize = 512;
+pub const CHUNK_COLS: usize = 128;
+pub const CHUNK_ELEMS: usize = CHUNK_ROWS * CHUNK_COLS;
+
+/// The three point-wise error-bound types of Section 2.1.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub enum ErrorBound {
+    /// Point-wise absolute: |x - x'| <= eps.
+    Abs(f32),
+    /// Point-wise relative: |x - x'| <= eps * |x| and sign(x') == sign(x).
+    Rel(f32),
+    /// Point-wise normalized absolute: |x - x'| <= eps * (max - min).
+    Noa(f32),
+}
+
+impl ErrorBound {
+    /// The raw epsilon the user asked for.
+    pub fn epsilon(&self) -> f32 {
+        match *self {
+            ErrorBound::Abs(e) | ErrorBound::Rel(e) | ErrorBound::Noa(e) => e,
+        }
+    }
+
+    /// Stable tag used in the container header.
+    pub fn kind_tag(&self) -> u8 {
+        match self {
+            ErrorBound::Abs(_) => 0,
+            ErrorBound::Rel(_) => 1,
+            ErrorBound::Noa(_) => 2,
+        }
+    }
+
+    pub fn from_tag(tag: u8, eps: f32) -> Option<ErrorBound> {
+        match tag {
+            0 => Some(ErrorBound::Abs(eps)),
+            1 => Some(ErrorBound::Rel(eps)),
+            2 => Some(ErrorBound::Noa(eps)),
+            _ => None,
+        }
+    }
+
+    /// Validate the bound for f32 data. REL bounds below ~2^-28 would
+    /// bin nothing (f32 has 24-bit precision); bounds >= 1 would allow
+    /// sign flips under REL semantics.
+    pub fn validate(&self) -> Result<(), String> {
+        let e = self.epsilon();
+        if !e.is_finite() || e <= 0.0 {
+            return Err(format!("error bound must be positive and finite, got {e}"));
+        }
+        if let ErrorBound::Rel(_) = self {
+            if !(1e-8..1.0).contains(&e) {
+                return Err(format!("REL bound must be in [1e-8, 1), got {e}"));
+            }
+        }
+        Ok(())
+    }
+}
+
+impl fmt::Display for ErrorBound {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        match self {
+            ErrorBound::Abs(e) => write!(f, "ABS({e})"),
+            ErrorBound::Rel(e) => write!(f, "REL({e})"),
+            ErrorBound::Noa(e) => write!(f, "NOA({e})"),
+        }
+    }
+}
+
+/// Whether the quantizer double-checks each reconstruction (the paper's
+/// Section 3.1 fix). `Unprotected` exists solely as the evaluation
+/// baseline for Figures 3/4 and Tables 7-9.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum Protection {
+    Protected,
+    Unprotected,
+}
+
+/// Which log2/pow2 implementation the REL quantizer uses. `Native`
+/// (libm) is the "original functions" baseline of Figures 1/2 and is
+/// NOT parity-safe across independently compiled pipelines.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum FnVariant {
+    Approx,
+    Native,
+}
+
+/// Which execution substrate runs the quantizer hot loop. The paper's
+/// CPU/GPU pair maps to rust-native scalar code vs the AOT-compiled
+/// XLA artifact run through PJRT.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum Device {
+    Native,
+    Pjrt,
+}
+
+/// Result of quantizing one chunk: one 32-bit word per value plus the
+/// in-line outlier bitmap ("commingled" storage, unlike SZ3's separate
+/// outlier list — Section 3.1).
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct QuantizedChunk {
+    /// zigzag(bin) (ABS) / (zigzag(bin)<<1)|sign (REL) for quantizable
+    /// values; raw IEEE-754 bits for outliers.
+    pub words: Vec<u32>,
+    /// One bit per value; set = outlier (stored losslessly).
+    pub outliers: crate::bitvec::BitVec,
+}
+
+impl QuantizedChunk {
+    pub fn outlier_count(&self) -> usize {
+        self.outliers.count_ones()
+    }
+
+    pub fn len(&self) -> usize {
+        self.words.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.words.is_empty()
+    }
+}
+
+/// Quantized chunk for f64 data (64-bit words; native pipeline only).
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct QuantizedChunk64 {
+    pub words: Vec<u64>,
+    pub outliers: crate::bitvec::BitVec,
+}
+
+impl QuantizedChunk64 {
+    pub fn outlier_count(&self) -> usize {
+        self.outliers.count_ones()
+    }
+
+    pub fn len(&self) -> usize {
+        self.words.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.words.is_empty()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn rel_min_mag_is_2_pow_minus_124() {
+        assert_eq!(REL_MIN_MAG, 2.0f32.powi(-124));
+        assert!(REL_MIN_MAG > 0.0 && REL_MIN_MAG.is_normal());
+    }
+
+    #[test]
+    fn maxbin_products_fit_53_bits() {
+        // The exactness precondition of the parity scheme.
+        assert!((MAXBIN_ABS as i64).unsigned_abs().leading_zeros() + 24 >= 64 - 53 + 24);
+        assert_eq!(MAXBIN_ABS, 1 << 28);
+        assert_eq!(MAXBIN_REL, 1 << 27);
+    }
+
+    #[test]
+    fn error_bound_tags_roundtrip() {
+        for eb in [
+            ErrorBound::Abs(1e-3),
+            ErrorBound::Rel(1e-3),
+            ErrorBound::Noa(1e-2),
+        ] {
+            let back = ErrorBound::from_tag(eb.kind_tag(), eb.epsilon()).unwrap();
+            assert_eq!(back, eb);
+        }
+        assert!(ErrorBound::from_tag(9, 1.0).is_none());
+    }
+
+    #[test]
+    fn validate_rejects_bad_bounds() {
+        assert!(ErrorBound::Abs(0.0).validate().is_err());
+        assert!(ErrorBound::Abs(f32::NAN).validate().is_err());
+        assert!(ErrorBound::Abs(-1.0).validate().is_err());
+        assert!(ErrorBound::Rel(1.5).validate().is_err());
+        assert!(ErrorBound::Rel(1e-12).validate().is_err());
+        assert!(ErrorBound::Abs(1e-3).validate().is_ok());
+        assert!(ErrorBound::Rel(1e-3).validate().is_ok());
+    }
+
+    #[test]
+    fn display_formats() {
+        assert_eq!(ErrorBound::Abs(0.001).to_string(), "ABS(0.001)");
+        assert_eq!(ErrorBound::Rel(0.5).to_string(), "REL(0.5)");
+    }
+}

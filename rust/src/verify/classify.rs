@@ -1,0 +1,192 @@
+//! Table 3 outcome classification: does a compressor (a) meet the
+//! bound, (b) violate it, or (c) crash, on a given input class?
+//!
+//! Crashes are modelled as `Err` returns (rust has no segfaults to
+//! observe; the baseline models return errors exactly where the real
+//! compressors crash — e.g. integer overflow on INF block ranges).
+
+use std::fmt;
+
+/// One cell of Table 3.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum Outcome {
+    /// '✓' — every value within the bound, specials preserved.
+    BoundMet,
+    /// '○' — ran to completion but violated the bound somewhere.
+    Violated { count: usize },
+    /// '×' — compressor crashed / returned an error.
+    Crashed,
+    /// 'n/a' — input type unsupported.
+    Unsupported,
+}
+
+impl fmt::Display for Outcome {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        match self {
+            Outcome::BoundMet => write!(f, "OK"),
+            Outcome::Violated { .. } => write!(f, "viol"),
+            Outcome::Crashed => write!(f, "CRASH"),
+            Outcome::Unsupported => write!(f, "n/a"),
+        }
+    }
+}
+
+impl Outcome {
+    /// The paper's glyph.
+    pub fn glyph(&self) -> &'static str {
+        match self {
+            Outcome::BoundMet => "✓",
+            Outcome::Violated { .. } => "○",
+            Outcome::Crashed => "×",
+            Outcome::Unsupported => "n/a",
+        }
+    }
+}
+
+/// Classify an ABS-bounded f32 roundtrip.
+pub fn classify_f32(orig: &[f32], result: Result<Vec<f32>, String>, eb: f32) -> Outcome {
+    match result {
+        Err(_) => Outcome::Crashed,
+        Ok(recon) => {
+            if recon.len() != orig.len() {
+                return Outcome::Crashed;
+            }
+            let count = super::metrics::abs_violations(orig, &recon, eb);
+            if count == 0 {
+                Outcome::BoundMet
+            } else {
+                Outcome::Violated { count }
+            }
+        }
+    }
+}
+
+/// Classify a REL-bounded f32 roundtrip.
+pub fn classify_rel_f32(orig: &[f32], result: Result<Vec<f32>, String>, eb: f32) -> Outcome {
+    match result {
+        Err(_) => Outcome::Crashed,
+        Ok(recon) => {
+            if recon.len() != orig.len() {
+                return Outcome::Crashed;
+            }
+            let count = super::metrics::rel_violations(orig, &recon, eb);
+            if count == 0 {
+                Outcome::BoundMet
+            } else {
+                Outcome::Violated { count }
+            }
+        }
+    }
+}
+
+/// Classify an ABS-bounded f64 roundtrip.
+pub fn classify_f64(orig: &[f64], result: Result<Vec<f64>, String>, eb: f64) -> Outcome {
+    match result {
+        Err(_) => Outcome::Crashed,
+        Ok(recon) => {
+            if recon.len() != orig.len() {
+                return Outcome::Crashed;
+            }
+            let mut count = 0usize;
+            for (&a, &b) in orig.iter().zip(&recon) {
+                let bad = if a.is_nan() {
+                    !b.is_nan()
+                } else if a.is_infinite() {
+                    a.to_bits() != b.to_bits()
+                } else if !b.is_finite() {
+                    true
+                } else {
+                    // f64 data: compare via exact rational reasoning is
+                    // overkill; a - b in f64 is exact by Sterbenz in the
+                    // near-bound regime (see quantizer::f64data docs).
+                    (a - b).abs() > eb
+                };
+                if bad {
+                    count += 1;
+                }
+            }
+            if count == 0 {
+                Outcome::BoundMet
+            } else {
+                Outcome::Violated { count }
+            }
+        }
+    }
+}
+
+/// Classify a REL-bounded f64 roundtrip.
+pub fn classify_rel_f64(orig: &[f64], result: Result<Vec<f64>, String>, eb: f64) -> Outcome {
+    match result {
+        Err(_) => Outcome::Crashed,
+        Ok(recon) => {
+            if recon.len() != orig.len() {
+                return Outcome::Crashed;
+            }
+            let mut count = 0usize;
+            for (&a, &b) in orig.iter().zip(&recon) {
+                let bad = if a.is_nan() {
+                    !b.is_nan()
+                } else if !a.is_finite() || a == 0.0 {
+                    a.to_bits() != b.to_bits()
+                } else if !b.is_finite() {
+                    true
+                } else {
+                    ((a - b) / a).abs() > eb
+                        || (b != 0.0 && a.is_sign_negative() != b.is_sign_negative())
+                };
+                if bad {
+                    count += 1;
+                }
+            }
+            if count == 0 {
+                Outcome::BoundMet
+            } else {
+                Outcome::Violated { count }
+            }
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn classifies_ok() {
+        let x = [1.0f32, 2.0];
+        assert_eq!(classify_f32(&x, Ok(vec![1.0, 2.0]), 1e-3), Outcome::BoundMet);
+    }
+
+    #[test]
+    fn classifies_violation_with_count() {
+        let x = [1.0f32, 2.0, 3.0];
+        let r = classify_f32(&x, Ok(vec![1.1, 2.0, 3.1]), 1e-2);
+        assert_eq!(r, Outcome::Violated { count: 2 });
+        assert_eq!(r.glyph(), "○");
+    }
+
+    #[test]
+    fn classifies_crash() {
+        let x = [1.0f32];
+        assert_eq!(classify_f32(&x, Err("boom".into()), 1e-3), Outcome::Crashed);
+        // wrong output length is as good as a crash
+        assert_eq!(classify_f32(&x, Ok(vec![]), 1e-3), Outcome::Crashed);
+    }
+
+    #[test]
+    fn rel_classification_catches_sign_flip() {
+        let x = [2.0f32];
+        let r = classify_rel_f32(&x, Ok(vec![-2.0]), 0.5);
+        assert!(matches!(r, Outcome::Violated { .. }));
+    }
+
+    #[test]
+    fn f64_classification() {
+        let x = [1.0f64, f64::NAN];
+        assert_eq!(classify_f64(&x, Ok(vec![1.0, f64::NAN]), 1e-6), Outcome::BoundMet);
+        assert!(matches!(
+            classify_f64(&x, Ok(vec![1.0, 0.0]), 1e-6),
+            Outcome::Violated { .. }
+        ));
+    }
+}

@@ -1,0 +1,178 @@
+//! Point-wise error metrics (Section 2.1 definitions).
+//!
+//! All differences are computed in f64: a metric that itself rounds
+//! would under-report violations — the exact trap the paper describes
+//! in the compressors' own checks.
+
+/// Summary of reconstruction error over a buffer.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct ErrorReport {
+    pub max_abs: f64,
+    pub max_rel: f64,
+    /// Values whose special-ness was not preserved (NaN -> non-NaN,
+    /// INF sign flips, etc.).
+    pub special_mismatches: usize,
+    /// Sign flips on finite nonzero values (REL violation regardless of
+    /// magnitude).
+    pub sign_flips: usize,
+    pub n: usize,
+}
+
+/// Compare original and reconstruction.
+pub fn compare(orig: &[f32], recon: &[f32]) -> ErrorReport {
+    assert_eq!(orig.len(), recon.len());
+    let mut r = ErrorReport {
+        max_abs: 0.0,
+        max_rel: 0.0,
+        special_mismatches: 0,
+        sign_flips: 0,
+        n: orig.len(),
+    };
+    for (&a, &b) in orig.iter().zip(recon) {
+        if a.is_nan() {
+            if !b.is_nan() {
+                r.special_mismatches += 1;
+            }
+            continue;
+        }
+        if a.is_infinite() {
+            if a.to_bits() != b.to_bits() {
+                r.special_mismatches += 1;
+            }
+            continue;
+        }
+        if b.is_nan() || b.is_infinite() {
+            r.special_mismatches += 1;
+            continue;
+        }
+        let err = ((a as f64) - (b as f64)).abs();
+        r.max_abs = r.max_abs.max(err);
+        if a != 0.0 {
+            r.max_rel = r.max_rel.max(err / (a as f64).abs());
+            if b != 0.0 && a.is_sign_negative() != b.is_sign_negative() {
+                r.sign_flips += 1;
+            }
+        }
+    }
+    r
+}
+
+/// Max absolute error (NaN/INF lanes must match bit-wise or count as
+/// infinite error).
+pub fn max_abs_error(orig: &[f32], recon: &[f32]) -> f64 {
+    let r = compare(orig, recon);
+    if r.special_mismatches > 0 {
+        f64::INFINITY
+    } else {
+        r.max_abs
+    }
+}
+
+/// Max relative error over finite nonzero originals.
+pub fn max_rel_error(orig: &[f32], recon: &[f32]) -> f64 {
+    let r = compare(orig, recon);
+    if r.special_mismatches > 0 || r.sign_flips > 0 {
+        f64::INFINITY
+    } else {
+        r.max_rel
+    }
+}
+
+/// Count of values violating an ABS bound (exact f64 comparison).
+pub fn abs_violations(orig: &[f32], recon: &[f32], eb: f32) -> usize {
+    orig.iter()
+        .zip(recon)
+        .filter(|(&a, &b)| {
+            if a.is_nan() {
+                return !b.is_nan();
+            }
+            if a.is_infinite() {
+                return a.to_bits() != b.to_bits();
+            }
+            if !b.is_finite() {
+                return true;
+            }
+            ((a as f64) - (b as f64)).abs() > eb as f64
+        })
+        .count()
+}
+
+/// Count of values violating a REL bound (includes sign flips).
+pub fn rel_violations(orig: &[f32], recon: &[f32], eb: f32) -> usize {
+    orig.iter()
+        .zip(recon)
+        .filter(|(&a, &b)| {
+            if a.is_nan() {
+                return !b.is_nan();
+            }
+            if !a.is_finite() || a == 0.0 {
+                return a.to_bits() != b.to_bits();
+            }
+            if !b.is_finite() {
+                return true;
+            }
+            let rel = (((a as f64) - (b as f64)) / a as f64).abs();
+            rel > eb as f64 || (b != 0.0 && a.is_sign_negative() != b.is_sign_negative())
+        })
+        .count()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn perfect_reconstruction_reports_zero() {
+        let x = [1.0f32, -2.5, 0.0, f32::NAN, f32::INFINITY];
+        let r = compare(&x, &x);
+        assert_eq!(r.max_abs, 0.0);
+        assert_eq!(r.special_mismatches, 0);
+        assert_eq!(r.sign_flips, 0);
+    }
+
+    #[test]
+    fn detects_abs_error() {
+        let a = [1.0f32, 2.0];
+        let b = [1.5f32, 2.0];
+        assert_eq!(max_abs_error(&a, &b), 0.5);
+        assert_eq!(abs_violations(&a, &b, 0.4), 1);
+        assert_eq!(abs_violations(&a, &b, 0.6), 0);
+    }
+
+    #[test]
+    fn lost_nan_is_a_special_mismatch() {
+        let a = [f32::NAN];
+        let b = [0.0f32];
+        assert_eq!(max_abs_error(&a, &b), f64::INFINITY);
+        assert_eq!(abs_violations(&a, &b, 1e9), 1);
+    }
+
+    #[test]
+    fn inf_sign_flip_detected() {
+        let a = [f32::INFINITY];
+        let b = [f32::NEG_INFINITY];
+        assert_eq!(compare(&a, &b).special_mismatches, 1);
+    }
+
+    #[test]
+    fn sign_flip_is_rel_violation() {
+        let a = [1e-10f32];
+        let b = [-1e-10f32];
+        assert_eq!(rel_violations(&a, &b, 0.5), 1);
+        assert_eq!(max_rel_error(&a, &b), f64::INFINITY);
+    }
+
+    #[test]
+    fn sub_ulp_violation_not_masked_by_f32_rounding() {
+        // The paper's trap: err computed in f32 rounds down to exactly
+        // eb and passes; f64 sees the violation. 0.013 vs bin 6*0.002.
+        let a = [f32::from_bits(0x3C54_FDF4)]; // 0.013000000268...
+        let b = [6i32 as f32 * 0.002f32];
+        let eb = 1e-3f32;
+        assert_eq!(
+            abs_violations(&a, &b, eb),
+            1,
+            "f64 comparison must catch the sub-ulp violation"
+        );
+    }
+}

@@ -1,0 +1,12 @@
+//! Verification harnesses: error metrics, bound-violation
+//! classification (Table 3), exhaustive f32 sweeps (the paper's "all
+//! roughly 4 billion possible values" test) and cross-pipeline parity
+//! audits.
+
+pub mod classify;
+pub mod metrics;
+pub mod parity;
+pub mod sweep;
+
+pub use classify::{classify_f32, classify_f64, Outcome};
+pub use metrics::{max_abs_error, max_rel_error, ErrorReport};

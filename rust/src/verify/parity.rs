@@ -1,0 +1,76 @@
+//! Cross-pipeline parity audit (the paper's CPU/GPU parity guarantee).
+//!
+//! Compares the native rust quantizers against the PJRT-executed AOT
+//! artifacts word-for-word and reports mismatches. The parity-safe
+//! variants must report zero; the native-libm REL variant is expected
+//! to diverge (that is the paper's Section 2.3 finding).
+
+use anyhow::Result;
+
+use crate::quantizer::{abs, rel};
+use crate::runtime::PjrtHandle;
+use crate::types::{FnVariant, Protection, CHUNK_ELEMS};
+
+/// Outcome of auditing one configuration.
+#[derive(Debug, Clone, Copy, Default)]
+pub struct ParityReport {
+    pub values: usize,
+    pub word_mismatches: usize,
+    pub flag_mismatches: usize,
+}
+
+impl ParityReport {
+    pub fn is_bit_identical(&self) -> bool {
+        self.word_mismatches == 0 && self.flag_mismatches == 0
+    }
+}
+
+/// Audit ABS parity over the given data (padded internally).
+pub fn audit_abs(handle: &PjrtHandle, data: &[f32], eb: f32) -> Result<ParityReport> {
+    let p = abs::AbsParams::new(eb);
+    audit_chunks(data, |chunk| {
+        let native = abs::quantize(chunk, p, Protection::Protected);
+        let pjrt = handle.quantize_chunk("abs_quant", chunk.to_vec(), p.scalar_operand())?;
+        Ok((native, pjrt))
+    })
+}
+
+/// Audit REL parity (either fn variant) over the given data.
+pub fn audit_rel(
+    handle: &PjrtHandle,
+    data: &[f32],
+    eb: f32,
+    variant: FnVariant,
+) -> Result<ParityReport> {
+    let p = rel::RelParams::new(eb);
+    let artifact = match variant {
+        FnVariant::Approx => "rel_quant",
+        FnVariant::Native => "rel_quant_native",
+    };
+    audit_chunks(data, |chunk| {
+        let native = rel::quantize(chunk, p, variant, Protection::Protected);
+        let pjrt = handle.quantize_chunk(artifact, chunk.to_vec(), p.scalar_operand())?;
+        Ok((native, pjrt))
+    })
+}
+
+fn audit_chunks<F>(data: &[f32], run: F) -> Result<ParityReport>
+where
+    F: Fn(&[f32]) -> Result<(crate::types::QuantizedChunk, crate::types::QuantizedChunk)>,
+{
+    let mut report = ParityReport::default();
+    for chunk in data.chunks(CHUNK_ELEMS) {
+        let padded = crate::runtime::pad_chunk(chunk);
+        let (native, pjrt) = run(&padded)?;
+        report.values += chunk.len();
+        for i in 0..chunk.len() {
+            if native.words[i] != pjrt.words[i] {
+                report.word_mismatches += 1;
+            }
+            if native.outliers.get(i) != pjrt.outliers.get(i) {
+                report.flag_mismatches += 1;
+            }
+        }
+    }
+    Ok(report)
+}

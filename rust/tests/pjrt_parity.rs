@@ -1,0 +1,203 @@
+//! THE parity test: the native rust quantizers and the AOT-compiled
+//! XLA artifacts (two independently compiled pipelines — the paper's
+//! CPU and GPU) must produce bit-for-bit identical compressed words,
+//! outlier maps and reconstructions for the parity-safe variants.
+//!
+//! Requires `make artifacts`; tests panic with a clear message if the
+//! artifacts are missing.
+
+use lc::quantizer::{abs, rel};
+use lc::runtime::{default_artifact_dir, PjrtEngine};
+use lc::types::Protection::{Protected, Unprotected};
+use lc::types::{FnVariant, QuantizedChunk, CHUNK_ELEMS};
+
+fn engine() -> PjrtEngine {
+    let dir = default_artifact_dir();
+    PjrtEngine::load(&dir).expect("run `make artifacts` before cargo test")
+}
+
+/// Deterministic chunk mixing normals across magnitudes, specials,
+/// denormals, zeros and bin-boundary bait.
+fn adversarial_chunk(seed: u64) -> Vec<f32> {
+    let mut rng = seed.wrapping_mul(0x9E3779B97F4A7C15).wrapping_add(1);
+    let mut next = move || {
+        rng ^= rng << 13;
+        rng ^= rng >> 7;
+        rng ^= rng << 17;
+        rng
+    };
+    let mut v = Vec::with_capacity(CHUNK_ELEMS);
+    for i in 0..CHUNK_ELEMS {
+        let r = next();
+        let x = match i % 97 {
+            0 => f32::INFINITY,
+            1 => f32::NEG_INFINITY,
+            2 => f32::NAN,
+            3 => 0.0,
+            4 => -0.0,
+            5 => f32::from_bits((r as u32) & 0x007F_FFFF), // denormal
+            6 => f32::from_bits((r as u32) | 0x7F80_0001), // NaN payloads
+            7 => ((i as f64 + 0.5) * 2e-3) as f32,         // boundary bait
+            8 => f32::MAX,
+            9 => f32::MIN_POSITIVE,
+            _ => {
+                // normals across the full exponent range
+                let m = (r as u32 >> 9) | 0x3F80_0000;
+                let e = ((r >> 33) % 160) as i32 - 80;
+                f32::from_bits(m) * 2.0f32.powi(e) * if r & 1 == 0 { -1.0 } else { 1.0 }
+            }
+        };
+        v.push(x);
+    }
+    v
+}
+
+fn assert_chunks_equal(native: &QuantizedChunk, pjrt: &QuantizedChunk, what: &str) {
+    assert_eq!(native.words.len(), pjrt.words.len());
+    for i in 0..native.words.len() {
+        assert_eq!(
+            native.outliers.get(i),
+            pjrt.outliers.get(i),
+            "{what}: outlier flag diverges at {i}"
+        );
+        assert_eq!(
+            native.words[i], pjrt.words[i],
+            "{what}: word diverges at {i} (outlier={})",
+            native.outliers.get(i)
+        );
+    }
+}
+
+#[test]
+fn abs_quantize_bit_parity() {
+    let eng = engine();
+    for eb in [1e-1f32, 1e-3, 1e-5] {
+        let p = abs::AbsParams::new(eb);
+        for seed in 0..3u64 {
+            let x = adversarial_chunk(seed);
+            let native = abs::quantize(&x, p, Protected);
+            let pjrt = eng
+                .quantize_chunk("abs_quant", &x, p.scalar_operand())
+                .unwrap();
+            assert_chunks_equal(&native, &pjrt, &format!("abs eb={eb} seed={seed}"));
+        }
+    }
+}
+
+#[test]
+fn abs_unprotected_bit_parity() {
+    let eng = engine();
+    let p = abs::AbsParams::new(1e-3);
+    let x = adversarial_chunk(7);
+    let native = abs::quantize(&x, p, Unprotected);
+    let pjrt = eng
+        .quantize_chunk("abs_quant_unprot", &x, p.scalar_operand())
+        .unwrap();
+    assert_chunks_equal(&native, &pjrt, "abs unprotected");
+}
+
+#[test]
+fn rel_approx_bit_parity() {
+    let eng = engine();
+    for eb in [1e-2f32, 1e-3, 1e-4] {
+        let p = rel::RelParams::new(eb);
+        for seed in 0..3u64 {
+            let x = adversarial_chunk(seed + 100);
+            let native = rel::quantize(&x, p, FnVariant::Approx, Protected);
+            let pjrt = eng
+                .quantize_chunk("rel_quant", &x, p.scalar_operand())
+                .unwrap();
+            assert_chunks_equal(&native, &pjrt, &format!("rel eb={eb} seed={seed}"));
+        }
+    }
+}
+
+#[test]
+fn rel_native_parity_diverges() {
+    // Paper Section 2.3: library log() differs between independently
+    // compiled pipelines. If this ever stops diverging, the native
+    // baseline no longer demonstrates the problem (not a correctness
+    // issue, but worth knowing).
+    let eng = engine();
+    let p = rel::RelParams::new(1e-3);
+    let mut mismatches = 0usize;
+    for seed in 0..3u64 {
+        let x = adversarial_chunk(seed + 500);
+        let native = rel::quantize(&x, p, FnVariant::Native, Protected);
+        let pjrt = eng
+            .quantize_chunk("rel_quant_native", &x, p.scalar_operand())
+            .unwrap();
+        mismatches += native
+            .words
+            .iter()
+            .zip(&pjrt.words)
+            .filter(|(a, b)| a != b)
+            .count();
+    }
+    println!("native-variant word mismatches: {mismatches}");
+    assert!(
+        mismatches > 0,
+        "expected rust libm vs XLA log2/exp2 divergence"
+    );
+}
+
+#[test]
+fn abs_dequantize_bit_parity() {
+    let eng = engine();
+    let p = abs::AbsParams::new(1e-3);
+    let x = adversarial_chunk(11);
+    let q = abs::quantize(&x, p, Protected);
+    let native = abs::dequantize(&q, p);
+    let pjrt = eng
+        .dequantize_chunk("abs_dequant", &q, p.scalar_operand())
+        .unwrap();
+    for i in 0..native.len() {
+        assert_eq!(
+            native[i].to_bits(),
+            pjrt[i].to_bits(),
+            "abs dequant diverges at {i}"
+        );
+    }
+}
+
+#[test]
+fn rel_dequantize_bit_parity() {
+    let eng = engine();
+    let p = rel::RelParams::new(1e-3);
+    let x = adversarial_chunk(13);
+    let q = rel::quantize(&x, p, FnVariant::Approx, Protected);
+    let native = rel::dequantize(&q, p, FnVariant::Approx);
+    let pjrt = eng
+        .dequantize_chunk("rel_dequant", &q, p.scalar_operand())
+        .unwrap();
+    for i in 0..native.len() {
+        assert_eq!(
+            native[i].to_bits(),
+            pjrt[i].to_bits(),
+            "rel dequant diverges at {i}"
+        );
+    }
+}
+
+#[test]
+fn cross_pipeline_roundtrip_bound_holds() {
+    // Compress on one "device", decompress on the other — the paper's
+    // cross-device scenario — and verify the bound end to end.
+    let eng = engine();
+    let eb = 1e-3f32;
+    let p = abs::AbsParams::new(eb);
+    let x = adversarial_chunk(17);
+    // PJRT-quantized, native-dequantized:
+    let q = eng.quantize_chunk("abs_quant", &x, p.scalar_operand()).unwrap();
+    let y = abs::dequantize(&q, p);
+    for (i, (a, b)) in x.iter().zip(&y).enumerate() {
+        if a.is_nan() {
+            assert!(b.is_nan(), "lane {i}");
+        } else if a.is_infinite() || q.outliers.get(i) {
+            assert_eq!(a.to_bits(), b.to_bits(), "lane {i}");
+        } else {
+            let err = ((*a as f64) - (*b as f64)).abs();
+            assert!(err <= eb as f64, "lane {i}: {a} -> {b}");
+        }
+    }
+}

@@ -1,0 +1,250 @@
+//! Randomized property tests (hand-rolled; proptest is unavailable in
+//! the offline environment). Each property runs against many seeded
+//! random cases; failures print the seed for reproduction.
+
+use lc::bitvec::BitVec;
+use lc::codec::{Pipeline, Stage};
+use lc::container::Container;
+use lc::coordinator::{compress, decompress, EngineConfig};
+use lc::data::Rng;
+use lc::quantizer::{abs, rel};
+use lc::types::Protection::Protected;
+use lc::types::{ErrorBound, FnVariant};
+
+/// Random f32 including specials, denormals, full exponent range.
+fn arb_f32(rng: &mut Rng) -> f32 {
+    match rng.below(20) {
+        0 => f32::NAN,
+        1 => f32::INFINITY,
+        2 => f32::NEG_INFINITY,
+        3 => 0.0,
+        4 => -0.0,
+        5 => f32::from_bits(rng.next_u32() & 0x007F_FFFF), // denormal
+        _ => {
+            let v = f32::from_bits(rng.next_u32());
+            if v.is_nan() {
+                1.0
+            } else {
+                v
+            }
+        }
+    }
+}
+
+fn arb_vec(rng: &mut Rng, max_len: usize) -> Vec<f32> {
+    let n = rng.below(max_len + 1);
+    (0..n).map(|_| arb_f32(rng)).collect()
+}
+
+/// PROPERTY: every codec pipeline is the identity on every word stream.
+#[test]
+fn prop_codec_roundtrip_identity() {
+    let chains: Vec<Vec<Stage>> = vec![
+        vec![],
+        vec![Stage::Delta],
+        vec![Stage::BitShuffle],
+        vec![Stage::Rle0],
+        vec![Stage::Huffman],
+        vec![Stage::Delta, Stage::BitShuffle],
+        vec![Stage::Delta, Stage::Rle0],
+        vec![Stage::BitShuffle, Stage::Huffman],
+        vec![Stage::Delta, Stage::BitShuffle, Stage::Rle0, Stage::Huffman],
+    ];
+    for seed in 0..30u64 {
+        let mut rng = Rng::new(seed);
+        let n = rng.below(5000);
+        let words: Vec<u32> = (0..n).map(|_| rng.next_u32()).collect();
+        for chain in &chains {
+            let p = Pipeline::new(chain.clone()).unwrap();
+            let enc = p.encode(&words);
+            let dec = p.decode(&enc, n).unwrap();
+            assert_eq!(dec, words, "seed {seed} chain {chain:?}");
+        }
+    }
+}
+
+/// PROPERTY: the ABS bound holds for EVERY input, including specials,
+/// and specials are preserved.
+#[test]
+fn prop_abs_bound_always_holds() {
+    for seed in 0..50u64 {
+        let mut rng = Rng::new(seed);
+        let x = arb_vec(&mut rng, 3000);
+        let eb = [1e-1f32, 1e-3, 1e-6][rng.below(3)];
+        let p = abs::AbsParams::new(eb);
+        let q = abs::quantize(&x, p, Protected);
+        let y = abs::dequantize(&q, p);
+        assert_eq!(
+            lc::verify::metrics::abs_violations(&x, &y, eb),
+            0,
+            "seed {seed} eb {eb}"
+        );
+    }
+}
+
+/// PROPERTY: REL holds its bound, preserves signs, keeps specials.
+#[test]
+fn prop_rel_bound_always_holds() {
+    for seed in 0..50u64 {
+        let mut rng = Rng::new(seed);
+        let x = arb_vec(&mut rng, 3000);
+        let eb = [1e-1f32, 1e-2, 1e-4][rng.below(3)];
+        let p = rel::RelParams::new(eb);
+        for variant in [FnVariant::Approx, FnVariant::Native] {
+            let q = rel::quantize(&x, p, variant, Protected);
+            let y = rel::dequantize(&q, p, variant);
+            assert_eq!(
+                lc::verify::metrics::rel_violations(&x, &y, eb),
+                0,
+                "seed {seed} eb {eb} {variant:?}"
+            );
+        }
+    }
+}
+
+/// PROPERTY: engine output is invariant under worker count and chunk
+/// boundaries never corrupt values (coordinator invariant).
+#[test]
+fn prop_engine_worker_and_chunk_invariance() {
+    for seed in 0..10u64 {
+        let mut rng = Rng::new(seed ^ 0xC0FFEE);
+        let x = arb_vec(&mut rng, 40_000);
+        let mut base = EngineConfig::native(ErrorBound::Abs(1e-3));
+        base.chunk_size = 1000 + rng.below(5000);
+        let mut golden: Option<Vec<f32>> = None;
+        for workers in [1usize, 2, 7] {
+            let mut cfg = base.clone();
+            cfg.workers = workers;
+            let (container, _) = compress(&cfg, &x).unwrap();
+            let bytes = container.to_bytes();
+            let parsed = Container::from_bytes(&bytes).unwrap();
+            let (y, _) = decompress(&cfg, &parsed).unwrap();
+            match &golden {
+                None => golden = Some(y),
+                Some(g) => {
+                    assert_eq!(
+                        g.len(),
+                        y.len(),
+                        "seed {seed} workers {workers} length changed"
+                    );
+                    for (a, b) in g.iter().zip(&y) {
+                        assert_eq!(a.to_bits(), b.to_bits(), "seed {seed} w{workers}");
+                    }
+                }
+            }
+        }
+    }
+}
+
+/// PROPERTY: chunk size never changes the reconstruction (only the
+/// container layout).
+#[test]
+fn prop_chunk_size_only_changes_layout() {
+    for seed in 0..10u64 {
+        let mut rng = Rng::new(seed ^ 0xBEEF);
+        let x = arb_vec(&mut rng, 30_000);
+        let mut recons: Vec<Vec<f32>> = Vec::new();
+        for cs in [777usize, 4096, 65_536] {
+            let mut cfg = EngineConfig::native(ErrorBound::Abs(1e-2));
+            cfg.chunk_size = cs;
+            let (container, _) = compress(&cfg, &x).unwrap();
+            let (y, _) = decompress(&cfg, &container).unwrap();
+            recons.push(y);
+        }
+        for pair in recons.windows(2) {
+            let bits_a: Vec<u32> = pair[0].iter().map(|v| v.to_bits()).collect();
+            let bits_b: Vec<u32> = pair[1].iter().map(|v| v.to_bits()).collect();
+            assert_eq!(bits_a, bits_b, "seed {seed}");
+        }
+    }
+}
+
+/// PROPERTY: any single-byte corruption of a container is either
+/// detected (Err) or — never — silently decoded to different values.
+#[test]
+fn prop_container_corruption_never_silent() {
+    let mut rng = Rng::new(42);
+    let x = arb_vec(&mut rng, 5000);
+    let cfg = EngineConfig::native(ErrorBound::Abs(1e-3));
+    let (container, _) = compress(&cfg, &x).unwrap();
+    let bytes = container.to_bytes();
+    let (golden, _) = decompress(&cfg, &container).unwrap();
+    for trial in 0..200 {
+        let mut bad = bytes.clone();
+        let pos = rng.below(bad.len());
+        let bit = 1u8 << rng.below(8);
+        bad[pos] ^= bit;
+        match Container::from_bytes(&bad) {
+            Err(_) => {} // detected — good
+            Ok(c) => {
+                // CRC collision is ~2^-32; a parse that still succeeds
+                // must decode to the same values (e.g. the flip was in
+                // a redundant header byte it rejects elsewhere).
+                if let Ok((y, _)) = decompress(&cfg, &c) {
+                    let same = y.len() == golden.len()
+                        && y.iter()
+                            .zip(&golden)
+                            .all(|(a, b)| a.to_bits() == b.to_bits());
+                    assert!(same, "trial {trial}: silent corruption at byte {pos}");
+                }
+            }
+        }
+    }
+}
+
+/// PROPERTY: BitVec byte serialization round-trips at every length.
+#[test]
+fn prop_bitvec_roundtrip() {
+    for seed in 0..40u64 {
+        let mut rng = Rng::new(seed);
+        let n = rng.below(2000);
+        let bv = BitVec::from_iter((0..n).map(|_| rng.below(2) == 1));
+        let back = BitVec::from_bytes(&bv.to_bytes(), n).unwrap();
+        assert_eq!(back, bv, "seed {seed} n {n}");
+    }
+}
+
+/// PROPERTY: quantize outputs exactly one word per input and the
+/// outlier map length matches (QuantizedChunk invariant).
+#[test]
+fn prop_quantize_shape_invariants() {
+    for seed in 0..30u64 {
+        let mut rng = Rng::new(seed ^ 0x51DE);
+        let x = arb_vec(&mut rng, 4000);
+        let q = abs::quantize(&x, abs::AbsParams::new(1e-3), Protected);
+        assert_eq!(q.words.len(), x.len());
+        assert_eq!(q.outliers.len(), x.len());
+        assert!(q.outlier_count() <= x.len());
+        let qr = rel::quantize(
+            &x,
+            rel::RelParams::new(1e-3),
+            FnVariant::Approx,
+            Protected,
+        );
+        assert_eq!(qr.words.len(), x.len());
+        assert_eq!(qr.outliers.len(), x.len());
+    }
+}
+
+/// PROPERTY: NOA with range R equals ABS with eps*R (definition 2.1.3).
+#[test]
+fn prop_noa_equals_scaled_abs() {
+    for seed in 0..20u64 {
+        let mut rng = Rng::new(seed);
+        // finite-only data so the range is well-defined
+        let x: Vec<f32> = (0..2000)
+            .map(|_| (rng.normal() * 50.0) as f32)
+            .collect();
+        let eb = 1e-3f32;
+        let cfg_noa = EngineConfig::native(ErrorBound::Noa(eb));
+        let (c_noa, _) = compress(&cfg_noa, &x).unwrap();
+        let eff = c_noa.header.effective_epsilon;
+        let cfg_abs = EngineConfig::native(ErrorBound::Abs(eff));
+        let (c_abs, _) = compress(&cfg_abs, &x).unwrap();
+        // same words, chunk for chunk
+        assert_eq!(c_noa.chunks.len(), c_abs.chunks.len(), "seed {seed}");
+        for (a, b) in c_noa.chunks.iter().zip(&c_abs.chunks) {
+            assert_eq!(a.payload, b.payload, "seed {seed}");
+        }
+    }
+}
