@@ -2,12 +2,22 @@
 //!
 //! Prints per-stage encode/decode throughput over representative word
 //! streams — the profiling substrate for the L3 performance pass.
+//!
+//! Also emits `codec` and `hotpath` sections into `BENCH_hotpath.json`
+//! (override with `LC_BENCH_JSON`): elements/sec per stage for the
+//! retained naive path ("before", `lc::reference` — the seed's
+//! allocating implementations) vs the scratch-arena path ("after").
+//! The `hotpath` section carries the headline number: the full
+//! single-thread encode path (quantize + bitmap + default chain),
+//! seed vs scratch.
 
-use lc::bench_util::{measure, Table};
-use lc::codec::{bitshuffle, delta, huffman, rle, Pipeline, Stage};
-use lc::coordinator::EngineConfig;
+use lc::bench_util::{measure, update_bench_json, Table};
+use lc::codec::{bitshuffle, delta, huffman, rle, CodecScratch, Pipeline, Stage};
+use lc::coordinator::{encode_chunk_record, EngineConfig};
 use lc::data::Suite;
-use lc::types::ErrorBound;
+use lc::quantizer::QuantizerConfig;
+use lc::scratch::Scratch;
+use lc::types::{ErrorBound, CHUNK_ELEMS};
 
 fn quantized_words(suite: Suite, n: usize) -> Vec<u32> {
     let x = suite.generate(0, n);
@@ -19,6 +29,20 @@ fn quantized_words(suite: Suite, n: usize) -> Vec<u32> {
         &x,
     );
     qc.quantize_native(&x).words
+}
+
+/// The seed's default-chain encode, reproduced perf-faithfully: one
+/// fresh `Vec` per stage, the seed's transpose/rle inner loops, and the
+/// seed's heap-built Huffman with the per-symbol bit writer. (The
+/// `lc::reference` stage oracles are deliberately naive for
+/// independence; they would overstate the speedup here.)
+fn seed_chain_encode(words: &[u32]) -> Vec<u8> {
+    let mut w = words.to_vec();
+    delta::encode(&mut w);
+    let shuf = bitshuffle::encode(&w);
+    let bytes = lc::codec::words_to_bytes(&shuf);
+    let rled = rle::encode(&bytes);
+    lc::reference::huffman_encode(&rled)
 }
 
 fn main() {
@@ -123,4 +147,117 @@ fn main() {
         let _ = Stage::Delta;
     }
     print!("{}", t.render());
+
+    // ---- BENCH_hotpath.json: seed (naive) vs scratch-arena path -----
+    let json_path =
+        std::env::var("LC_BENCH_JSON").unwrap_or_else(|_| "BENCH_hotpath.json".into());
+    let words = quantized_words(Suite::Cesm, n);
+    let mut entries: Vec<(String, f64)> = Vec::new();
+    let push = |entries: &mut Vec<(String, f64)>, key: &str, before: f64, after: f64| {
+        entries.push((format!("{key}_before_eps"), before));
+        entries.push((format!("{key}_after_eps"), after));
+        println!("json {key}: {before:.0} -> {after:.0} elem/s ({:.2}x)", after / before.max(1.0));
+    };
+
+    // bitshuffle: allocating wrapper (seed) vs reused out-buffer.
+    let m_before = measure(1, reps, || {
+        std::hint::black_box(bitshuffle::encode(&words).len());
+    });
+    let mut shuf = Vec::new();
+    let m_after = measure(1, reps, || {
+        bitshuffle::encode_into(&words, &mut shuf);
+        std::hint::black_box(shuf.len());
+    });
+    push(&mut entries, "bitshuffle_enc", m_before.eps(n), m_after.eps(n));
+
+    // rle over the shuffled bytes.
+    let shuf_bytes = lc::codec::words_to_bytes(&shuf);
+    let m_before = measure(1, reps, || {
+        std::hint::black_box(rle::encode(&shuf_bytes).len());
+    });
+    let mut rled = Vec::new();
+    let m_after = measure(1, reps, || {
+        rle::encode_into(&shuf_bytes, &mut rled);
+        std::hint::black_box(rled.len());
+    });
+    push(&mut entries, "rle0_enc", m_before.eps(n), m_after.eps(n));
+
+    // huffman: seed BinaryHeap builder + per-symbol writer vs the
+    // flat-array builder + table-driven 64-bit writer.
+    let m_before = measure(1, reps, || {
+        std::hint::black_box(lc::reference::huffman_encode(&rled).len());
+    });
+    let mut huffed = Vec::new();
+    let m_after = measure(1, reps, || {
+        huffman::encode_into(&rled, &mut huffed);
+        std::hint::black_box(huffed.len());
+    });
+    push(&mut entries, "huffman_enc", m_before.eps(n), m_after.eps(n));
+
+    // full default chain: seed per-stage Vec passes vs ping-pong arena.
+    let p = Pipeline::default_chain();
+    let m_before = measure(1, reps, || {
+        std::hint::black_box(seed_chain_encode(&words).len());
+    });
+    let mut cs = CodecScratch::new();
+    let mut payload = Vec::new();
+    let m_after = measure(1, reps, || {
+        p.encode_into(&words, &mut cs, &mut payload);
+        std::hint::black_box(payload.len());
+    });
+    push(&mut entries, "full_chain_enc", m_before.eps(n), m_after.eps(n));
+
+    if let Err(e) = update_bench_json(&json_path, "codec", &entries) {
+        eprintln!("failed to write {json_path}: {e}");
+    }
+
+    // ---- hotpath: quantize + bitmap + default chain, seed vs scratch.
+    // This is the acceptance metric for the zero-allocation refactor:
+    // the engine's single-thread steady-state encode loop.
+    let x = Suite::Cesm.generate(0, n);
+    let cfg = EngineConfig::native(ErrorBound::Abs(1e-3));
+    let qc = QuantizerConfig::resolve(cfg.bound, cfg.variant, cfg.protection, &x);
+    let m_before = measure(1, reps, || {
+        let mut total = 0usize;
+        for chunk in x.chunks(CHUNK_ELEMS) {
+            // The seed per-chunk path: naive quantize, allocating
+            // bitmap serialization + RLE, per-stage Vec pipeline.
+            let q = match qc {
+                QuantizerConfig::Abs(pp, prot) => lc::reference::quantize_abs(chunk, pp, prot),
+                QuantizerConfig::Rel(pp, v, prot) => {
+                    lc::reference::quantize_rel(chunk, pp, v, prot)
+                }
+            };
+            let outlier_bytes = rle::encode(&q.outliers.to_bytes());
+            let payload = seed_chain_encode(&q.words);
+            total += outlier_bytes.len() + payload.len();
+        }
+        std::hint::black_box(total);
+    });
+    let mut scratch = Scratch::new();
+    let m_after = measure(1, reps, || {
+        let mut total = 0usize;
+        for chunk in x.chunks(CHUNK_ELEMS) {
+            let (rec, _) = encode_chunk_record(&cfg, &qc, chunk, &mut scratch).unwrap();
+            total += rec.outlier_bytes.len() + rec.payload.len();
+        }
+        std::hint::black_box(total);
+    });
+    let hot = vec![
+        ("encode_before_eps".to_string(), m_before.eps(n)),
+        ("encode_after_eps".to_string(), m_after.eps(n)),
+        (
+            "encode_speedup".to_string(),
+            m_after.eps(n) / m_before.eps(n).max(1.0),
+        ),
+    ];
+    println!(
+        "json hotpath encode: {:.0} -> {:.0} elem/s ({:.2}x)",
+        m_before.eps(n),
+        m_after.eps(n),
+        m_after.eps(n) / m_before.eps(n).max(1.0)
+    );
+    if let Err(e) = update_bench_json(&json_path, "hotpath", &hot) {
+        eprintln!("failed to write {json_path}: {e}");
+    }
 }

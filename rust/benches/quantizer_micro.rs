@@ -3,8 +3,13 @@
 //! Native scalar throughput per quantizer variant, plus the PJRT chunk
 //! execution latency when artifacts are present. The ABS quantize loop
 //! is the L3 hot path the performance pass optimizes.
+//!
+//! Also emits a `quantizer` section into `BENCH_hotpath.json`
+//! (override the path with `LC_BENCH_JSON`): elements/sec for the
+//! retained naive path ("before", `lc::reference`) vs the blocked
+//! buffer-reusing kernels ("after") — the repo's perf trajectory.
 
-use lc::bench_util::{measure, Table};
+use lc::bench_util::{measure, update_bench_json, Table};
 use lc::data::Suite;
 use lc::quantizer::{abs, rel};
 use lc::types::Protection::{Protected, Unprotected};
@@ -56,6 +61,65 @@ fn main() {
         ]);
     }
     print!("{}", t.render());
+
+    // ---- BENCH_hotpath.json: naive (seed) vs blocked kernels --------
+    let mut entries: Vec<(String, f64)> = Vec::new();
+    for (name, prot) in [("abs_protected", Protected), ("abs_unprotected", Unprotected)] {
+        let m_before = measure(1, reps, || {
+            std::hint::black_box(lc::reference::quantize_abs(&x, pa, prot).words.len());
+        });
+        let mut words = Vec::new();
+        let mut obits = Vec::new();
+        let m_after = measure(1, reps, || {
+            abs::quantize_into(&x, pa, prot, &mut words, &mut obits);
+            std::hint::black_box(words.len());
+        });
+        entries.push((format!("{name}_quant_before_eps"), m_before.eps(n)));
+        entries.push((format!("{name}_quant_after_eps"), m_after.eps(n)));
+        println!(
+            "json {name}_quant: {:.0} -> {:.0} elem/s ({:.2}x)",
+            m_before.eps(n),
+            m_after.eps(n),
+            m_after.eps(n) / m_before.eps(n).max(1.0)
+        );
+    }
+    {
+        let q = abs::quantize(&x, pa, Protected);
+        let m_before = measure(1, reps, || {
+            std::hint::black_box(lc::reference::dequantize_abs(&q, pa).len());
+        });
+        let mut out = Vec::new();
+        let m_after = measure(1, reps, || {
+            abs::dequantize_into(&q.words, q.outliers.raw_words(), pa, &mut out);
+            std::hint::black_box(out.len());
+        });
+        entries.push(("abs_dequant_before_eps".into(), m_before.eps(n)));
+        entries.push(("abs_dequant_after_eps".into(), m_after.eps(n)));
+    }
+    for (name, variant) in [
+        ("rel_approx", FnVariant::Approx),
+        ("rel_native", FnVariant::Native),
+    ] {
+        let m_before = measure(1, reps, || {
+            std::hint::black_box(
+                lc::reference::quantize_rel(&x, pr, variant, Protected).words.len(),
+            );
+        });
+        let mut words = Vec::new();
+        let mut obits = Vec::new();
+        let m_after = measure(1, reps, || {
+            rel::quantize_into(&x, pr, variant, Protected, &mut words, &mut obits);
+            std::hint::black_box(words.len());
+        });
+        entries.push((format!("{name}_quant_before_eps"), m_before.eps(n)));
+        entries.push((format!("{name}_quant_after_eps"), m_after.eps(n)));
+    }
+    let json_path =
+        std::env::var("LC_BENCH_JSON").unwrap_or_else(|_| "BENCH_hotpath.json".into());
+    match update_bench_json(&json_path, "quantizer", &entries) {
+        Ok(()) => println!("wrote {} quantizer entries to {json_path}", entries.len()),
+        Err(e) => eprintln!("failed to write {json_path}: {e}"),
+    }
 
     // PJRT chunk path, if artifacts are available.
     match lc::runtime::PjrtService::start(&lc::runtime::default_artifact_dir()) {

@@ -71,16 +71,27 @@ impl Baseline for LcModel {
 
     fn roundtrip_f32(&self, x: &[f32], eb: f32) -> Result<Vec<f32>, String> {
         use crate::quantizer::abs::{self, AbsParams};
+        // The blocked, buffer-reusing kernels (the engine's hot path).
         let p = AbsParams::new(eb);
-        let q = abs::quantize(x, p, crate::types::Protection::Protected);
-        Ok(abs::dequantize(&q, p))
+        let mut words = Vec::new();
+        let mut obits = Vec::new();
+        abs::quantize_into(x, p, crate::types::Protection::Protected, &mut words, &mut obits);
+        let mut out = Vec::new();
+        abs::dequantize_into(&words, &obits, p, &mut out);
+        Ok(out)
     }
 
     fn roundtrip_f64(&self, x: &[f64], eb: f64) -> Option<Result<Vec<f64>, String>> {
-        use crate::quantizer::f64data::{abs_dequantize, abs_quantize, Abs64Params};
+        use crate::quantizer::f64data::{
+            abs_dequantize_into, abs_quantize_into, Abs64Params,
+        };
         let p = Abs64Params::new(eb);
-        let q = abs_quantize(x, p, crate::types::Protection::Protected);
-        Some(Ok(abs_dequantize(&q, p)))
+        let mut words = Vec::new();
+        let mut obits = Vec::new();
+        abs_quantize_into(x, p, crate::types::Protection::Protected, &mut words, &mut obits);
+        let mut out = Vec::new();
+        abs_dequantize_into(&words, &obits, p, &mut out);
+        Some(Ok(out))
     }
 }
 

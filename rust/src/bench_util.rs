@@ -22,6 +22,16 @@ impl Measurement {
             bytes as f64 / s / 1e9
         }
     }
+
+    /// Throughput in elements per second (the BENCH_*.json unit).
+    pub fn eps(&self, elements: usize) -> f64 {
+        let s = self.median.as_secs_f64();
+        if s == 0.0 {
+            0.0
+        } else {
+            elements as f64 / s
+        }
+    }
 }
 
 /// Run `f` `reps` times after `warmup` runs; report median + MAD.
@@ -54,6 +64,150 @@ pub fn measure<F: FnMut()>(warmup: usize, reps: usize, mut f: F) -> Measurement 
         mad: devs[devs.len() / 2],
         reps,
     }
+}
+
+/// Merge one section of benchmark numbers into a BENCH_*.json file.
+///
+/// The file is a two-level JSON object `{section: {key: number}}`;
+/// separate bench binaries (quantizer_micro, codec_micro) each own a
+/// section and merge into the same file, so the repo's perf trajectory
+/// accumulates in one place. The reader below parses exactly (and
+/// only) this shape — serde is unavailable offline, and we never need
+/// more than it emits. An unreadable/foreign file is replaced.
+pub fn update_bench_json(
+    path: &str,
+    section: &str,
+    entries: &[(String, f64)],
+) -> std::io::Result<()> {
+    use std::collections::BTreeMap;
+    let mut sections: BTreeMap<String, BTreeMap<String, f64>> = std::fs::read_to_string(path)
+        .ok()
+        .and_then(|s| parse_bench_json(&s))
+        .unwrap_or_default();
+    let sec = sections.entry(section.to_string()).or_default();
+    for (k, v) in entries {
+        sec.insert(k.clone(), *v);
+    }
+    std::fs::write(path, render_bench_json(&sections))
+}
+
+/// Render the two-level map as pretty-printed JSON.
+pub fn render_bench_json(
+    sections: &std::collections::BTreeMap<String, std::collections::BTreeMap<String, f64>>,
+) -> String {
+    let mut out = String::from("{\n");
+    let ns = sections.len();
+    for (si, (name, sec)) in sections.iter().enumerate() {
+        out.push_str(&format!("  \"{name}\": {{\n"));
+        let nk = sec.len();
+        for (ki, (k, v)) in sec.iter().enumerate() {
+            let comma = if ki + 1 < nk { "," } else { "" };
+            out.push_str(&format!("    \"{k}\": {v}{comma}\n"));
+        }
+        let comma = if si + 1 < ns { "," } else { "" };
+        out.push_str(&format!("  }}{comma}\n"));
+    }
+    out.push_str("}\n");
+    out
+}
+
+/// Parse the subset of JSON emitted by [`render_bench_json`]:
+/// `{string: {string: number}}`, no escapes inside keys. Returns None
+/// on anything else.
+pub fn parse_bench_json(
+    s: &str,
+) -> Option<std::collections::BTreeMap<String, std::collections::BTreeMap<String, f64>>> {
+    struct P<'a> {
+        b: &'a [u8],
+        i: usize,
+    }
+    impl P<'_> {
+        fn ws(&mut self) {
+            while self.i < self.b.len() && (self.b[self.i] as char).is_whitespace() {
+                self.i += 1;
+            }
+        }
+        fn eat(&mut self, c: u8) -> Option<()> {
+            self.ws();
+            if self.i < self.b.len() && self.b[self.i] == c {
+                self.i += 1;
+                Some(())
+            } else {
+                None
+            }
+        }
+        fn peek(&mut self) -> Option<u8> {
+            self.ws();
+            self.b.get(self.i).copied()
+        }
+        fn string(&mut self) -> Option<String> {
+            self.eat(b'"')?;
+            let start = self.i;
+            while self.i < self.b.len() && self.b[self.i] != b'"' {
+                if self.b[self.i] == b'\\' {
+                    return None; // escapes never emitted, never accepted
+                }
+                self.i += 1;
+            }
+            let s = std::str::from_utf8(&self.b[start..self.i]).ok()?.to_string();
+            self.eat(b'"')?;
+            Some(s)
+        }
+        fn number(&mut self) -> Option<f64> {
+            self.ws();
+            let start = self.i;
+            while self.i < self.b.len()
+                && matches!(self.b[self.i], b'0'..=b'9' | b'-' | b'+' | b'.' | b'e' | b'E')
+            {
+                self.i += 1;
+            }
+            std::str::from_utf8(&self.b[start..self.i]).ok()?.parse().ok()
+        }
+    }
+    let mut p = P {
+        b: s.as_bytes(),
+        i: 0,
+    };
+    let mut sections = std::collections::BTreeMap::new();
+    p.eat(b'{')?;
+    if p.peek() == Some(b'}') {
+        p.eat(b'}')?;
+        return Some(sections);
+    }
+    loop {
+        let name = p.string()?;
+        p.eat(b':')?;
+        p.eat(b'{')?;
+        let mut sec = std::collections::BTreeMap::new();
+        if p.peek() == Some(b'}') {
+            p.eat(b'}')?;
+        } else {
+            loop {
+                let k = p.string()?;
+                p.eat(b':')?;
+                let v = p.number()?;
+                sec.insert(k, v);
+                if p.peek() == Some(b',') {
+                    p.eat(b',')?;
+                } else {
+                    break;
+                }
+            }
+            p.eat(b'}')?;
+        }
+        sections.insert(name, sec);
+        if p.peek() == Some(b',') {
+            p.eat(b',')?;
+        } else {
+            break;
+        }
+    }
+    p.eat(b'}')?;
+    p.ws();
+    if p.i != p.b.len() {
+        return None;
+    }
+    Some(sections)
 }
 
 /// Geometric mean (for per-suite compression ratios, as in the paper).
@@ -133,6 +287,41 @@ mod tests {
         });
         assert_eq!(m.reps, 5);
         assert!(m.median < Duration::from_millis(100));
+    }
+
+    #[test]
+    fn bench_json_roundtrips_and_merges() {
+        use std::collections::BTreeMap;
+        let mut sections: BTreeMap<String, BTreeMap<String, f64>> = BTreeMap::new();
+        sections
+            .entry("quantizer".into())
+            .or_default()
+            .insert("abs_enc_after".into(), 1.25e9);
+        sections
+            .entry("codec".into())
+            .or_default()
+            .insert("huffman_enc_before".into(), 3.5e8);
+        let rendered = render_bench_json(&sections);
+        assert_eq!(parse_bench_json(&rendered).unwrap(), sections);
+        assert_eq!(parse_bench_json("{}").unwrap(), BTreeMap::new());
+        assert!(parse_bench_json("not json").is_none());
+        assert!(parse_bench_json("{\"a\": 3}").is_none()); // wrong shape
+        assert!(parse_bench_json(&(rendered + "x")).is_none()); // trailing
+
+        // Merge through a temp file: sections accumulate, keys update.
+        let path = std::env::temp_dir().join(format!(
+            "lc_bench_json_test_{}.json",
+            std::process::id()
+        ));
+        let path = path.to_str().unwrap();
+        let _ = std::fs::remove_file(path);
+        update_bench_json(path, "quantizer", &[("a".into(), 1.0)]).unwrap();
+        update_bench_json(path, "codec", &[("b".into(), 2.0)]).unwrap();
+        update_bench_json(path, "quantizer", &[("a".into(), 3.0)]).unwrap();
+        let got = parse_bench_json(&std::fs::read_to_string(path).unwrap()).unwrap();
+        assert_eq!(got["quantizer"]["a"], 3.0);
+        assert_eq!(got["codec"]["b"], 2.0);
+        let _ = std::fs::remove_file(path);
     }
 
     #[test]

@@ -75,35 +75,15 @@ impl BitVec {
 
     /// Serialize to little-endian bytes (length NOT included).
     pub fn to_bytes(&self) -> Vec<u8> {
-        let nbytes = self.len.div_ceil(8);
-        let mut out = Vec::with_capacity(nbytes);
-        for i in 0..nbytes {
-            let w = self.words[i / 8];
-            out.push((w >> ((i % 8) * 8)) as u8);
-        }
+        let mut out = Vec::new();
+        bits_to_bytes_into(&self.words, self.len, &mut out);
         out
     }
 
     /// Rebuild from `to_bytes` output plus the bit length.
     pub fn from_bytes(bytes: &[u8], len: usize) -> Result<Self, String> {
-        if bytes.len() != len.div_ceil(8) {
-            return Err(format!(
-                "bitmap byte length {} does not match bit length {len}",
-                bytes.len()
-            ));
-        }
-        let mut words = vec![0u64; len.div_ceil(64)];
-        for (i, &b) in bytes.iter().enumerate() {
-            words[i / 8] |= (b as u64) << ((i % 8) * 8);
-        }
-        // Reject set bits past `len` (corrupt container).
-        if len % 64 != 0 {
-            if let Some(last) = words.last() {
-                if last >> (len % 64) != 0 {
-                    return Err("bitmap has bits set past its length".into());
-                }
-            }
-        }
+        let mut words = Vec::new();
+        bytes_to_bits_into(bytes, len, &mut words)?;
         Ok(BitVec { words, len })
     }
 
@@ -119,6 +99,13 @@ impl BitVec {
         BitVec { words, len }
     }
 
+    /// The packed u64 word backing store (bit `i` lives at
+    /// `words[i / 64] >> (i % 64)`); the layout the blocked quantizer
+    /// kernels and `dequantize_into` operate on directly.
+    pub fn raw_words(&self) -> &[u64] {
+        &self.words
+    }
+
     /// Build from an iterator of bools.
     pub fn from_iter<I: IntoIterator<Item = bool>>(it: I) -> Self {
         let mut bv = BitVec::new();
@@ -127,6 +114,45 @@ impl BitVec {
         }
         bv
     }
+}
+
+/// Serialize packed bitmap words (`len` bits) to little-endian bytes
+/// into a caller-provided buffer (cleared first; allocation-free once
+/// the buffer reached its high-water capacity).
+pub fn bits_to_bytes_into(words: &[u64], len: usize, out: &mut Vec<u8>) {
+    let nbytes = len.div_ceil(8);
+    out.clear();
+    out.reserve(nbytes);
+    for i in 0..nbytes {
+        let w = words[i / 8];
+        out.push((w >> ((i % 8) * 8)) as u8);
+    }
+}
+
+/// Inverse of [`bits_to_bytes_into`]: unpack `len` bits from bytes into
+/// packed u64 words, validating length and zero padding (corrupt
+/// containers are rejected, same rules as [`BitVec::from_bytes`]).
+pub fn bytes_to_bits_into(bytes: &[u8], len: usize, words: &mut Vec<u64>) -> Result<(), String> {
+    if bytes.len() != len.div_ceil(8) {
+        return Err(format!(
+            "bitmap byte length {} does not match bit length {len}",
+            bytes.len()
+        ));
+    }
+    words.clear();
+    words.resize(len.div_ceil(64), 0);
+    for (i, &b) in bytes.iter().enumerate() {
+        words[i / 8] |= (b as u64) << ((i % 8) * 8);
+    }
+    // Reject set bits past `len` (corrupt container).
+    if len % 64 != 0 {
+        if let Some(last) = words.last() {
+            if last >> (len % 64) != 0 {
+                return Err("bitmap has bits set past its length".into());
+            }
+        }
+    }
+    Ok(())
 }
 
 #[cfg(test)]
@@ -181,5 +207,31 @@ mod tests {
     #[should_panic(expected = "out of range")]
     fn get_out_of_range_panics() {
         BitVec::zeros(8).get(8);
+    }
+
+    #[test]
+    fn raw_words_expose_packed_layout() {
+        let bv = BitVec::from_iter((0..130).map(|i| i == 0 || i == 64 || i == 129));
+        let w = bv.raw_words();
+        assert_eq!(w.len(), 3);
+        assert_eq!(w[0], 1);
+        assert_eq!(w[1], 1);
+        assert_eq!(w[2], 1u64 << 1);
+    }
+
+    #[test]
+    fn into_helpers_match_owned_apis() {
+        for len in [0usize, 1, 7, 8, 63, 64, 65, 200] {
+            let bv = BitVec::from_iter((0..len).map(|i| i % 3 == 1));
+            let mut bytes = vec![0xFFu8; 3]; // stale content must be cleared
+            bits_to_bytes_into(bv.raw_words(), len, &mut bytes);
+            assert_eq!(bytes, bv.to_bytes(), "len {len}");
+            let mut words = vec![0xDEADu64; 2];
+            bytes_to_bits_into(&bytes, len, &mut words).unwrap();
+            assert_eq!(words, bv.raw_words(), "len {len}");
+        }
+        let mut words = Vec::new();
+        assert!(bytes_to_bits_into(&[0xFF], 4, &mut words).is_err());
+        assert!(bytes_to_bits_into(&[0, 0], 4, &mut words).is_err());
     }
 }

@@ -28,32 +28,44 @@ fn transpose32(block: &[u32; 32]) -> [u32; 32] {
     a
 }
 
-/// Shuffle: returns ceil(n/32)*32 words (padded).
-pub fn encode(words: &[u32]) -> Vec<u32> {
+/// Shuffle into a caller-provided buffer (cleared first): writes
+/// ceil(n/32)*32 words (padded).
+pub fn encode_into(words: &[u32], out: &mut Vec<u32>) {
     let nblocks = words.len().div_ceil(32);
-    let mut out = Vec::with_capacity(nblocks * 32);
+    out.clear();
+    out.reserve(nblocks * 32);
     let mut buf = [0u32; 32];
-    for b in 0..nblocks {
-        buf.fill(0);
-        let start = b * 32;
-        let take = (words.len() - start).min(32);
-        buf[..take].copy_from_slice(&words[start..start + take]);
+    for block in words.chunks(32) {
         // Transpose maps word-index to bit-index; reverse bit order so
         // plane 0 holds bit 31 etc. (cosmetic, keeps planes contiguous).
+        if block.len() == 32 {
+            buf.copy_from_slice(block);
+        } else {
+            buf.fill(0);
+            buf[..block.len()].copy_from_slice(block);
+        }
         out.extend_from_slice(&transpose32(&buf));
     }
+}
+
+/// Shuffle: returns ceil(n/32)*32 words (padded).
+pub fn encode(words: &[u32]) -> Vec<u32> {
+    let mut out = Vec::new();
+    encode_into(words, &mut out);
     out
 }
 
-/// Inverse shuffle; `n` is the original word count.
-pub fn decode(shuffled: &[u32], n: usize) -> Result<Vec<u32>, String> {
+/// Inverse shuffle into a caller-provided buffer (cleared first); `n`
+/// is the original word count.
+pub fn decode_into(shuffled: &[u32], n: usize, out: &mut Vec<u32>) -> Result<(), String> {
     if shuffled.len() != n.div_ceil(32) * 32 {
         return Err(format!(
             "bitshuffle payload {} words does not match count {n}",
             shuffled.len()
         ));
     }
-    let mut out = Vec::with_capacity(n);
+    out.clear();
+    out.reserve(n);
     let mut buf = [0u32; 32];
     for (b, block) in shuffled.chunks_exact(32).enumerate() {
         buf.copy_from_slice(block);
@@ -62,6 +74,13 @@ pub fn decode(shuffled: &[u32], n: usize) -> Result<Vec<u32>, String> {
         let take = (n - start).min(32);
         out.extend_from_slice(&t[..take]);
     }
+    Ok(())
+}
+
+/// Inverse shuffle; `n` is the original word count.
+pub fn decode(shuffled: &[u32], n: usize) -> Result<Vec<u32>, String> {
+    let mut out = Vec::new();
+    decode_into(shuffled, n, &mut out)?;
     Ok(out)
 }
 
@@ -126,5 +145,18 @@ mod tests {
     fn empty() {
         assert!(encode(&[]).is_empty());
         assert!(decode(&[], 0).unwrap().is_empty());
+    }
+
+    #[test]
+    fn into_buffers_are_cleared_and_reused() {
+        let mut enc = vec![0xFFFF_FFFFu32; 7]; // stale content
+        let mut dec = vec![3u32; 3];
+        for n in [100usize, 5, 64] {
+            let w = xorshift(n as u64, n);
+            encode_into(&w, &mut enc);
+            assert_eq!(enc, encode(&w), "n={n}");
+            decode_into(&enc, n, &mut dec).unwrap();
+            assert_eq!(dec, w, "n={n}");
+        }
     }
 }

@@ -9,6 +9,18 @@
 //! original length][MSB-first bitstream]; mode 1: stored (raw bytes) —
 //! chosen when entropy coding cannot beat the input size, which both
 //! speeds up and shrinks incompressible streams.
+//!
+//! The tree construction is a flat-array two-queue merge (no
+//! `BinaryHeap`, no per-build allocation): leaves sorted by
+//! (frequency, symbol) in one fixed array, internal nodes appended to a
+//! second in creation order. Because merged-node frequencies are
+//! non-decreasing and node ids grow with creation, the two queue fronts
+//! are always the global (frequency, id) minima, so the merge order —
+//! and therefore every code length — is bit-identical to the seed's
+//! heap-based builder (pinned by `crate::reference` differential
+//! tests). The encoder is table-driven: one packed (code, len) entry
+//! per symbol feeding a 64-bit MSB-first bit buffer flushed 32 bits at
+//! a time.
 
 // 12 bits keeps a single-level 4096-entry decode table (the decode hot
 // path is one lookup per symbol); the ratio cost vs deeper trees is
@@ -18,7 +30,8 @@ const HEADER_LEN: usize = 1 + 256 + 8;
 const MODE_HUFFMAN: u8 = 0;
 const MODE_STORED: u8 = 1;
 
-/// Build code lengths for the given frequencies (heap-based Huffman).
+/// Build code lengths for the given frequencies, damping until the
+/// depth limit holds.
 fn code_lengths(freqs: &[u64; 256]) -> [u8; 256] {
     let mut f = *freqs;
     loop {
@@ -36,68 +49,120 @@ fn code_lengths(freqs: &[u64; 256]) -> [u8; 256] {
     }
 }
 
+/// Flat-array Huffman construction (two-queue merge, zero allocation).
+/// Node ids: 0..256 = leaf symbol, 256+k = internal node k — the same
+/// id space the seed's heap used, so tie-breaking is identical.
 fn try_code_lengths(freqs: &[u64; 256]) -> [u8; 256] {
-    use std::cmp::Reverse;
-    use std::collections::BinaryHeap;
-    let mut heap: BinaryHeap<Reverse<(u64, usize)>> = BinaryHeap::new();
-    let mut children: Vec<(usize, usize)> = Vec::new(); // internal nodes, ids 256+
+    let mut lens = [0u8; 256];
+    // Leaf queue: (freq, symbol), sorted ascending. Symbols are unique,
+    // so the order equals the heap's (freq, id) pop order for leaves.
+    let mut leaves = [(0u64, 0u16); 256];
     let mut active = 0usize;
-    for (sym, &fr) in freqs.iter().enumerate() {
-        if fr > 0 {
-            heap.push(Reverse((fr, sym)));
+    for (sym, &f) in freqs.iter().enumerate() {
+        if f > 0 {
+            leaves[active] = (f, sym as u16);
             active += 1;
         }
     }
-    let mut lens = [0u8; 256];
     match active {
         0 => return lens,
         1 => {
-            let sym = heap.pop().unwrap().0 .1;
-            lens[sym] = 1;
+            lens[leaves[0].1 as usize] = 1;
             return lens;
         }
         _ => {}
     }
-    while heap.len() >= 2 {
-        let Reverse((fa, a)) = heap.pop().unwrap();
-        let Reverse((fb, b)) = heap.pop().unwrap();
-        let id = 256 + children.len();
-        children.push((a, b));
-        heap.push(Reverse((fa + fb, id)));
-    }
-    let root = heap.pop().unwrap().0 .1;
-    let mut stack = vec![(root, 0u8)];
-    while let Some((n, d)) = stack.pop() {
-        if n < 256 {
-            lens[n] = d;
+    leaves[..active].sort_unstable();
+    // Internal queue: creation order. Merge sums are non-decreasing and
+    // ids grow with creation, so the front is always the minimum.
+    // Pop the smallest node by (freq, id); a frequency tie prefers the
+    // leaf (leaf ids < 256 <= internal ids) — this single function is
+    // the tie-breaking rule the heap-equivalence proof rests on.
+    fn pop_min(
+        leaves: &[(u64, u16)],
+        active: usize,
+        ifreq: &[u64],
+        ni: usize,
+        li: &mut usize,
+        ii: &mut usize,
+    ) -> (u64, u16) {
+        if *li < active && (*ii >= ni || leaves[*li].0 <= ifreq[*ii]) {
+            let t = leaves[*li];
+            *li += 1;
+            t
         } else {
-            let (l, r) = children[n - 256];
-            stack.push((l, d + 1));
-            stack.push((r, d + 1));
+            let f = ifreq[*ii];
+            let id = (256 + *ii) as u16;
+            *ii += 1;
+            (f, id)
+        }
+    }
+    let mut ifreq = [0u64; 256];
+    let mut child = [(0u16, 0u16); 256];
+    let mut li = 0usize; // leaf queue front
+    let mut ii = 0usize; // internal queue front
+    let mut ni = 0usize; // internal nodes created
+    while (active - li) + (ni - ii) >= 2 {
+        let (fa, a) = pop_min(&leaves, active, &ifreq, ni, &mut li, &mut ii);
+        let (fb, b) = pop_min(&leaves, active, &ifreq, ni, &mut li, &mut ii);
+        ifreq[ni] = fa + fb;
+        child[ni] = (a, b);
+        ni += 1;
+    }
+    // Depth assignment: the root is the last internal node; walking ids
+    // downward visits every parent before its children (children are
+    // always created earlier than their parent).
+    let mut idepth = [0u8; 256];
+    for k in (0..ni).rev() {
+        let d = idepth[k]; // root stays 0
+        let (a, b) = child[k];
+        for c in [a, b] {
+            if (c as usize) < 256 {
+                lens[c as usize] = d + 1;
+            } else {
+                idepth[c as usize - 256] = d + 1;
+            }
         }
     }
     lens
 }
 
+/// Symbols with non-zero length, ordered by (length, symbol) — the
+/// canonical assignment order. Counting-sort, zero allocation.
+/// Precondition: all lengths <= MAX_CODE_LEN.
+fn symbols_by_length(lens: &[u8; 256]) -> ([u16; 256], usize) {
+    let mut syms = [0u16; 256];
+    let mut n = 0usize;
+    for l in 1..=MAX_CODE_LEN as u8 {
+        for (sym, &sl) in lens.iter().enumerate() {
+            if sl == l {
+                syms[n] = sym as u16;
+                n += 1;
+            }
+        }
+    }
+    (syms, n)
+}
+
 /// Canonical code assignment: shorter first, ties by symbol value.
 fn canonical_codes(lens: &[u8; 256]) -> [u32; 256] {
-    let mut symbols: Vec<usize> = (0..256).filter(|&s| lens[s] > 0).collect();
-    symbols.sort_by_key(|&s| (lens[s], s));
+    let (syms, n) = symbols_by_length(lens);
     let mut codes = [0u32; 256];
     let mut code = 0u32;
     let mut prev_len = 0u8;
-    for &s in &symbols {
-        let l = lens[s];
+    for &s in &syms[..n] {
+        let l = lens[s as usize];
         code <<= (l - prev_len) as u32;
-        codes[s] = code;
+        codes[s as usize] = code;
         code += 1;
         prev_len = l;
     }
     codes
 }
 
-/// Encode a byte slice.
-pub fn encode(data: &[u8]) -> Vec<u8> {
+/// Encode into a caller-provided buffer (cleared first).
+pub fn encode_into(data: &[u8], out: &mut Vec<u8>) {
+    out.clear();
     let mut freqs = [0u64; 256];
     for &b in data {
         freqs[b as usize] += 1;
@@ -111,30 +176,44 @@ pub fn encode(data: &[u8]) -> Vec<u8> {
         .map(|(&f, &l)| f * l as u64)
         .sum();
     if coded_bits / 8 + (HEADER_LEN as u64) >= data.len() as u64 + 1 {
-        let mut out = Vec::with_capacity(data.len() + 1);
+        out.reserve(data.len() + 1);
         out.push(MODE_STORED);
         out.extend_from_slice(data);
-        return out;
+        return;
     }
     let codes = canonical_codes(&lens);
     // Pack (code, len) into one table entry so the hot loop is a single
-    // load; flush the accumulator 32 bits at a time instead of per byte.
+    // load per symbol.
     let mut packed = [0u32; 256];
-    for i in 0..256 {
-        packed[i] = (codes[i] << 5) | lens[i] as u32;
+    for (p, (&c, &l)) in packed.iter_mut().zip(codes.iter().zip(&lens)) {
+        *p = (c << 5) | l as u32;
     }
-    let mut out = Vec::with_capacity(data.len() / 2 + HEADER_LEN);
+    out.reserve(coded_bits as usize / 8 + HEADER_LEN + 8);
     out.push(MODE_HUFFMAN);
     out.extend_from_slice(&lens);
     out.extend_from_slice(&(data.len() as u64).to_le_bytes());
-    // MSB-first bit accumulator (max 12 bits/symbol: flush at >= 32).
+    // 64-bit MSB-first bit buffer. Two symbols add at most 24 bits and
+    // a flush leaves at most 31 resident, so the accumulator never
+    // overflows; flushing 32 bits at a time emits the identical byte
+    // stream a per-symbol flush would.
     let mut acc = 0u64;
     let mut nbits = 0u32;
-    for &b in data {
+    let mut pairs = data.chunks_exact(2);
+    for pair in &mut pairs {
+        let e0 = packed[pair[0] as usize];
+        acc = (acc << (e0 & 31)) | (e0 >> 5) as u64;
+        let e1 = packed[pair[1] as usize];
+        acc = (acc << (e1 & 31)) | (e1 >> 5) as u64;
+        nbits += (e0 & 31) + (e1 & 31);
+        if nbits >= 32 {
+            nbits -= 32;
+            out.extend_from_slice(&u32::to_be_bytes((acc >> nbits) as u32));
+        }
+    }
+    for &b in pairs.remainder() {
         let e = packed[b as usize];
-        let l = e & 31;
-        acc = (acc << l) | (e >> 5) as u64;
-        nbits += l;
+        acc = (acc << (e & 31)) | (e >> 5) as u64;
+        nbits += e & 31;
         if nbits >= 32 {
             nbits -= 32;
             out.extend_from_slice(&u32::to_be_bytes((acc >> nbits) as u32));
@@ -147,6 +226,12 @@ pub fn encode(data: &[u8]) -> Vec<u8> {
     if nbits > 0 {
         out.push(((acc << (8 - nbits)) & 0xFF) as u8);
     }
+}
+
+/// Encode a byte slice, returning a fresh buffer.
+pub fn encode(data: &[u8]) -> Vec<u8> {
+    let mut out = Vec::new();
+    encode_into(data, &mut out);
     out
 }
 
@@ -159,31 +244,35 @@ struct DecodeTable {
 
 impl DecodeTable {
     fn build(lens: &[u8; 256]) -> Result<DecodeTable, String> {
-        let mut symbols: Vec<usize> = (0..256).filter(|&s| lens[s] > 0).collect();
-        symbols.sort_by_key(|&s| (lens[s], s));
-        // Kraft check guards corrupt headers.
+        // Kraft check guards corrupt headers (and symbols_by_length's
+        // precondition that no length exceeds the limit).
         let mut kraft = 0u64;
-        for &s in &symbols {
-            let l = lens[s] as u32;
-            if l > MAX_CODE_LEN {
+        let mut any = false;
+        for &l in lens.iter() {
+            if l == 0 {
+                continue;
+            }
+            if l as u32 > MAX_CODE_LEN {
                 return Err(format!("code length {l} exceeds limit"));
             }
-            kraft += 1u64 << (MAX_CODE_LEN - l);
+            kraft += 1u64 << (MAX_CODE_LEN - l as u32);
+            any = true;
         }
-        if !symbols.is_empty() && kraft > 1u64 << MAX_CODE_LEN {
+        if any && kraft > 1u64 << MAX_CODE_LEN {
             return Err("over-subscribed Huffman table".into());
         }
+        let (syms, n) = symbols_by_length(lens);
         let mut entries = vec![0u16; 1 << MAX_CODE_LEN];
         let mut code = 0u32;
         let mut prev_len = 0u8;
-        for &s in &symbols {
-            let l = lens[s];
+        for &s in &syms[..n] {
+            let l = lens[s as usize];
             code <<= (l - prev_len) as u32;
             prev_len = l;
             // All windows starting with this code decode to s.
             let shift = MAX_CODE_LEN - l as u32;
             let base = (code as usize) << shift;
-            let entry = ((s as u16) << 8) | l as u16;
+            let entry = (s << 8) | l as u16;
             entries[base..base + (1 << shift)].fill(entry);
             code += 1;
         }
@@ -191,9 +280,11 @@ impl DecodeTable {
     }
 }
 
-/// Decode a payload produced by [`encode`]. `expected_len` must match
-/// the embedded length (defense against container corruption).
-pub fn decode(payload: &[u8], expected_len: usize) -> Result<Vec<u8>, String> {
+/// Decode a payload produced by [`encode`] into a caller-provided
+/// buffer (cleared first). `expected_len` must match the embedded
+/// length (defense against container corruption).
+pub fn decode_into(payload: &[u8], expected_len: usize, out: &mut Vec<u8>) -> Result<(), String> {
+    out.clear();
     match payload.first() {
         Some(&MODE_STORED) => {
             let body = &payload[1..];
@@ -203,7 +294,8 @@ pub fn decode(payload: &[u8], expected_len: usize) -> Result<Vec<u8>, String> {
                     body.len()
                 ));
             }
-            return Ok(body.to_vec());
+            out.extend_from_slice(body);
+            return Ok(());
         }
         Some(&MODE_HUFFMAN) => {}
         _ => return Err("bad huffman mode byte".into()),
@@ -219,13 +311,13 @@ pub fn decode(payload: &[u8], expected_len: usize) -> Result<Vec<u8>, String> {
     }
     let table = DecodeTable::build(&lens)?;
     if n == 0 {
-        return Ok(Vec::new());
+        return Ok(());
     }
     if table.entries.iter().all(|&e| e == 0) {
         return Err("non-empty payload with empty table".into());
     }
     let bits = &payload[HEADER_LEN..];
-    let mut out = Vec::with_capacity(n);
+    out.reserve(n);
     let mut acc = 0u64;
     let mut acc_len = 0u32;
     let mut pos = 0usize;
@@ -246,7 +338,7 @@ pub fn decode(payload: &[u8], expected_len: usize) -> Result<Vec<u8>, String> {
             out.push((e >> 8) as u8);
             acc_len -= l;
             if out.len() == n {
-                return Ok(out);
+                return Ok(());
             }
         }
         acc &= (1u64 << acc_len) - 1;
@@ -297,6 +389,13 @@ pub fn decode(payload: &[u8], expected_len: usize) -> Result<Vec<u8>, String> {
         acc_len -= l;
         acc &= (1u64 << acc_len).wrapping_sub(1);
     }
+    Ok(())
+}
+
+/// Decode a payload produced by [`encode`], returning a fresh buffer.
+pub fn decode(payload: &[u8], expected_len: usize) -> Result<Vec<u8>, String> {
+    let mut out = Vec::new();
+    decode_into(payload, expected_len, &mut out)?;
     Ok(out)
 }
 
@@ -324,8 +423,8 @@ mod tests {
     #[test]
     fn skewed_data_compresses() {
         let mut data = vec![0u8; 100_000];
-        for i in 0..data.len() {
-            data[i] = if i % 17 == 0 { (i % 5) as u8 + 1 } else { 0 };
+        for (i, b) in data.iter_mut().enumerate() {
+            *b = if i % 17 == 0 { (i % 5) as u8 + 1 } else { 0 };
         }
         let size = roundtrip(&data);
         assert!(size < data.len() / 3, "got {size}");
@@ -366,6 +465,53 @@ mod tests {
             f = f.saturating_mul(2);
         }
         roundtrip(&data);
+    }
+
+    #[test]
+    fn flat_builder_matches_heap_reference() {
+        // The two-queue merge must reproduce the seed's heap-based code
+        // lengths exactly (byte-identical containers depend on it).
+        let mut s = 0x1234_5678_9ABC_DEF0u64;
+        for trial in 0..200 {
+            let mut freqs = [0u64; 256];
+            let nsyms = 1 + (trial % 256);
+            for f in freqs.iter_mut().take(nsyms) {
+                s ^= s << 13;
+                s ^= s >> 7;
+                s ^= s << 17;
+                // Many ties on purpose: tie-breaking is the risky part.
+                *f = match trial % 4 {
+                    0 => s % 4,
+                    1 => s % 2,
+                    2 => s % 1000,
+                    _ => s >> 32,
+                };
+            }
+            if freqs.iter().all(|&f| f == 0) {
+                freqs[7] = 1;
+            }
+            assert_eq!(
+                try_code_lengths(&freqs),
+                crate::reference::huffman_code_lengths_heap(&freqs),
+                "trial {trial}"
+            );
+        }
+    }
+
+    #[test]
+    fn encoder_matches_reference_bytes() {
+        let mut s = 5u64;
+        for n in [0usize, 1, 2, 3, 100, 4096, 50_000] {
+            let data: Vec<u8> = (0..n)
+                .map(|_| {
+                    s ^= s << 13;
+                    s ^= s >> 7;
+                    s ^= s << 17;
+                    (s % 37) as u8 // skewed alphabet -> huffman mode
+                })
+                .collect();
+            assert_eq!(encode(&data), crate::reference::huffman_encode(&data), "n={n}");
+        }
     }
 
     #[test]

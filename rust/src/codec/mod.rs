@@ -8,11 +8,25 @@
 //! LC's DIFF/BIT/RZE/entropy component order: deltas concentrate bins
 //! near zero, the shuffle turns the dead high bits into zero planes,
 //! RLE collapses them, Huffman squeezes the rest.
+//!
+//! # Scratch-arena hot path
+//!
+//! Every stage has an in-place (`delta`) or `*_into` out-parameter form
+//! that writes into caller-owned buffers. [`Pipeline::encode_into`] and
+//! [`Pipeline::decode_into`] chain a whole stage list through the two
+//! ping-pong buffer pairs of a [`CodecScratch`] instead of allocating
+//! one `Vec` per stage; a worker that reuses its scratch across chunks
+//! performs zero steady-state heap allocations in the codec (buffers
+//! only grow to the largest chunk's high-water mark — ownership rules
+//! in [`crate::scratch`]). The allocating [`Pipeline::encode`] /
+//! [`Pipeline::decode`] remain as thin compat wrappers.
 
 pub mod bitshuffle;
 pub mod delta;
 pub mod huffman;
 pub mod rle;
+
+pub use crate::scratch::CodecScratch;
 
 /// Identifier of one lossless stage (stored in the container header).
 #[derive(Debug, Clone, Copy, PartialEq, Eq)]
@@ -83,34 +97,75 @@ impl Pipeline {
         &self.stages
     }
 
-    /// Encode a word stream to bytes.
-    pub fn encode(&self, words: &[u32]) -> Vec<u8> {
-        
-        let mut w: Vec<u32> = words.to_vec();
-        let mut byte_phase: Option<Vec<u8>> = None;
-        for &s in &self.stages {
-            match s {
-                Stage::Delta => delta::encode(&mut w),
-                Stage::BitShuffle => w = bitshuffle::encode(&w),
-                Stage::Rle0 | Stage::Huffman => {
-                    let bytes = byte_phase.take().unwrap_or_else(|| words_to_bytes(&w));
-                    byte_phase = Some(match s {
-                        Stage::Rle0 => rle::encode(&bytes),
-                        Stage::Huffman => huffman::encode(&bytes),
-                        _ => unreachable!(),
-                    });
+    /// Index of the first byte stage (== stages.len() when none).
+    fn byte_phase_start(&self) -> usize {
+        self.stages
+            .iter()
+            .position(|s| matches!(s, Stage::Rle0 | Stage::Huffman))
+            .unwrap_or(self.stages.len())
+    }
+
+    /// Encode a word stream to bytes using the scratch arena's
+    /// ping-pong buffers; the result is written into `out` (cleared
+    /// first). Zero heap allocations once `s` and `out` reached their
+    /// high-water capacity.
+    pub fn encode_into(&self, words: &[u32], s: &mut CodecScratch, out: &mut Vec<u8>) {
+        out.clear();
+        let split = self.byte_phase_start();
+        let (word_stages, byte_stages) = self.stages.split_at(split);
+
+        s.words_a.clear();
+        s.words_a.extend_from_slice(words);
+        for &st in word_stages {
+            match st {
+                Stage::Delta => delta::encode(&mut s.words_a),
+                Stage::BitShuffle => {
+                    bitshuffle::encode_into(&s.words_a, &mut s.words_b);
+                    std::mem::swap(&mut s.words_a, &mut s.words_b);
                 }
+                _ => unreachable!(),
             }
         }
-        // If no byte stage ran, serialize the word phase directly.
-        match byte_phase {
-            Some(b) => b,
-            None => words_to_bytes(&w),
+
+        // If no byte stage runs, serialize the word phase directly.
+        if byte_stages.is_empty() {
+            words_to_bytes_into(&s.words_a, out);
+            return;
+        }
+        words_to_bytes_into(&s.words_a, &mut s.bytes_a);
+        let last = byte_stages.len() - 1;
+        for (i, &st) in byte_stages.iter().enumerate() {
+            if i == last {
+                match st {
+                    Stage::Rle0 => rle::encode_into(&s.bytes_a, out),
+                    Stage::Huffman => huffman::encode_into(&s.bytes_a, out),
+                    _ => unreachable!(),
+                }
+            } else {
+                match st {
+                    Stage::Rle0 => rle::encode_into(&s.bytes_a, &mut s.bytes_b),
+                    Stage::Huffman => huffman::encode_into(&s.bytes_a, &mut s.bytes_b),
+                    _ => unreachable!(),
+                }
+                std::mem::swap(&mut s.bytes_a, &mut s.bytes_b);
+            }
         }
     }
 
-    /// Decode bytes back to `n_words` words.
-    pub fn decode(&self, data: &[u8], n_words: usize) -> Result<Vec<u32>, String> {
+    /// Encode a word stream to bytes (allocating compat wrapper over
+    /// [`Pipeline::encode_into`]).
+    pub fn encode(&self, words: &[u32]) -> Vec<u8> {
+        let mut s = CodecScratch::new();
+        let mut out = Vec::new();
+        self.encode_into(words, &mut s, &mut out);
+        out
+    }
+
+    /// Decode bytes back to `n_words` words using the scratch arena.
+    /// On success the decoded words are left in `s.words_a` (part of
+    /// the API contract — see [`crate::scratch`]); this avoids one
+    /// memcpy per chunk on the decompress hot path.
+    pub fn decode_into(&self, data: &[u8], n_words: usize, s: &mut CodecScratch) -> Result<(), String> {
         // Reconstruct intermediate lengths forward, then undo backward.
         let shuffled_words = if self.stages.contains(&Stage::BitShuffle) {
             n_words.div_ceil(32) * 32
@@ -119,12 +174,7 @@ impl Pipeline {
         };
         let byte_len = shuffled_words * 4;
 
-        // Split stage list into word phase and byte phase.
-        let split = self
-            .stages
-            .iter()
-            .position(|s| matches!(s, Stage::Rle0 | Stage::Huffman))
-            .unwrap_or(self.stages.len());
+        let split = self.byte_phase_start();
         let (word_stages, byte_stages) = self.stages.split_at(split);
 
         // Undo byte stages in reverse. Intermediate expected lengths:
@@ -132,53 +182,70 @@ impl Pipeline {
         // after an RLE/huffman (whose input is the previous stage's
         // output, length unknown) — we only need expected lengths at
         // the points we validate, so walk backward carrying "expected
-        // output length of this stage".
-        let mut cur: Vec<u8> = data.to_vec();
-        for (i, &s) in byte_stages.iter().enumerate().rev() {
-            // expected decoded length of stage i = encoded length of
-            // stage i-1's output; for i == 0 that's byte_len. For i > 0
-            // we cannot know it a priori for RLE, so RLE/huffman embed
-            // or take expected lengths: huffman embeds, rle validates
-            // against the value we pass. For chained byte stages we
-            // pass huffman's embedded length through.
+        // output length of this stage". The first iteration reads from
+        // `data`, later ones from the ping buffer.
+        let mut first = true;
+        for (i, &st) in byte_stages.iter().enumerate().rev() {
             let expected = if i == 0 { byte_len } else { usize::MAX };
-            cur = match s {
-                Stage::Rle0 => {
-                    if expected == usize::MAX {
-                        return Err("rle0 cannot be preceded by another byte stage".into());
+            {
+                let src: &[u8] = if first { data } else { &s.bytes_a };
+                match st {
+                    Stage::Rle0 => {
+                        if expected == usize::MAX {
+                            return Err("rle0 cannot be preceded by another byte stage".into());
+                        }
+                        rle::decode_into(src, expected, &mut s.bytes_b)?;
                     }
-                    rle::decode(&cur, expected)?
-                }
-                Stage::Huffman => {
-                    // huffman embeds its length; validate when known.
-                    let n = embedded_huffman_len(&cur)?;
-                    if expected != usize::MAX && n != expected {
-                        return Err(format!("huffman length {n} != expected {expected}"));
+                    Stage::Huffman => {
+                        // huffman embeds its length; validate when known.
+                        let n = embedded_huffman_len(src)?;
+                        if expected != usize::MAX && n != expected {
+                            return Err(format!("huffman length {n} != expected {expected}"));
+                        }
+                        huffman::decode_into(src, n, &mut s.bytes_b)?;
                     }
-                    huffman::decode(&cur, n)?
+                    _ => unreachable!(),
                 }
-                _ => unreachable!(),
-            };
+            }
+            std::mem::swap(&mut s.bytes_a, &mut s.bytes_b);
+            first = false;
         }
-        if cur.len() != byte_len {
-            return Err(format!(
-                "byte phase produced {} bytes, expected {byte_len}",
-                cur.len()
-            ));
+        {
+            let cur: &[u8] = if first { data } else { &s.bytes_a };
+            if cur.len() != byte_len {
+                return Err(format!(
+                    "byte phase produced {} bytes, expected {byte_len}",
+                    cur.len()
+                ));
+            }
+            bytes_to_words_into(cur, &mut s.words_a);
         }
-        let mut w = bytes_to_words(&cur);
 
-        for &s in word_stages.iter().rev() {
-            match s {
-                Stage::Delta => delta::decode(&mut w),
-                Stage::BitShuffle => w = bitshuffle::decode(&w, n_words)?,
+        for &st in word_stages.iter().rev() {
+            match st {
+                Stage::Delta => delta::decode(&mut s.words_a),
+                Stage::BitShuffle => {
+                    bitshuffle::decode_into(&s.words_a, n_words, &mut s.words_b)?;
+                    std::mem::swap(&mut s.words_a, &mut s.words_b);
+                }
                 _ => unreachable!(),
             }
         }
-        if w.len() != n_words {
-            return Err(format!("decoded {} words, expected {n_words}", w.len()));
+        if s.words_a.len() != n_words {
+            return Err(format!(
+                "decoded {} words, expected {n_words}",
+                s.words_a.len()
+            ));
         }
-        Ok(w)
+        Ok(())
+    }
+
+    /// Decode bytes back to `n_words` words (allocating compat wrapper
+    /// over [`Pipeline::decode_into`]).
+    pub fn decode(&self, data: &[u8], n_words: usize) -> Result<Vec<u32>, String> {
+        let mut s = CodecScratch::new();
+        self.decode_into(data, n_words, &mut s)?;
+        Ok(s.words_a)
     }
 }
 
@@ -195,21 +262,38 @@ fn embedded_huffman_len(payload: &[u8]) -> Result<usize, String> {
     }
 }
 
-/// Serialize words little-endian.
-pub fn words_to_bytes(words: &[u32]) -> Vec<u8> {
-    let mut out = Vec::with_capacity(words.len() * 4);
+/// Serialize words little-endian into a caller-provided buffer
+/// (cleared first).
+pub fn words_to_bytes_into(words: &[u32], out: &mut Vec<u8>) {
+    out.clear();
+    out.reserve(words.len() * 4);
     for &w in words {
         out.extend_from_slice(&w.to_le_bytes());
     }
+}
+
+/// Serialize words little-endian.
+pub fn words_to_bytes(words: &[u32]) -> Vec<u8> {
+    let mut out = Vec::new();
+    words_to_bytes_into(words, &mut out);
     out
+}
+
+/// Inverse of [`words_to_bytes_into`]; input length must be a multiple
+/// of 4 (excess tail bytes are ignored, as with `chunks_exact`).
+pub fn bytes_to_words_into(bytes: &[u8], out: &mut Vec<u32>) {
+    out.clear();
+    out.reserve(bytes.len() / 4);
+    for c in bytes.chunks_exact(4) {
+        out.push(u32::from_le_bytes(c.try_into().unwrap()));
+    }
 }
 
 /// Inverse of [`words_to_bytes`]; input length must be a multiple of 4.
 pub fn bytes_to_words(bytes: &[u8]) -> Vec<u32> {
-    bytes
-        .chunks_exact(4)
-        .map(|c| u32::from_le_bytes(c.try_into().unwrap()))
-        .collect()
+    let mut out = Vec::new();
+    bytes_to_words_into(bytes, &mut out);
+    out
 }
 
 #[cfg(test)]
@@ -292,6 +376,44 @@ mod tests {
         // the container CRC catches instead.)
         assert!(p.decode(&enc, 129).is_err());
         assert!(p.decode(&enc, 32).is_err());
+    }
+
+    #[test]
+    fn scratch_reuse_matches_allocating_api() {
+        // One scratch across many chunks of varying size and chain:
+        // outputs must match the allocating wrappers bit for bit, and
+        // capacity must only ever grow (no per-chunk reallocation once
+        // the high-water mark is reached).
+        let mut s = CodecScratch::new();
+        let mut out = Vec::new();
+        let chains = [
+            Pipeline::raw(),
+            Pipeline::new(vec![Stage::Delta]).unwrap(),
+            Pipeline::new(vec![Stage::BitShuffle, Stage::Rle0]).unwrap(),
+            Pipeline::default_chain(),
+        ];
+        for n in [65_536usize, 100, 0, 33, 65_536, 4096] {
+            let w = sample_words(n);
+            for p in &chains {
+                p.encode_into(&w, &mut s, &mut out);
+                assert_eq!(out, p.encode(&w), "n={n} {:?}", p.stages());
+                p.decode_into(&out, n, &mut s).unwrap();
+                assert_eq!(s.words_a, w, "n={n} {:?}", p.stages());
+            }
+        }
+        // Warm to steady state, then confirm capacity stops moving.
+        let w = sample_words(65_536);
+        let p = Pipeline::default_chain();
+        for _ in 0..3 {
+            p.encode_into(&w, &mut s, &mut out);
+            p.decode_into(&out, w.len(), &mut s).unwrap();
+        }
+        let high_water = s.retained_bytes();
+        for _ in 0..3 {
+            p.encode_into(&w, &mut s, &mut out);
+            p.decode_into(&out, w.len(), &mut s).unwrap();
+        }
+        assert_eq!(s.retained_bytes(), high_water, "scratch must not regrow");
     }
 
     #[test]

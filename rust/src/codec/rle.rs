@@ -34,9 +34,11 @@ fn read_varint(data: &[u8]) -> Result<(u64, usize), String> {
     Err("truncated varint".into())
 }
 
-/// Encode zero runs (u64-at-a-time zero scanning on the hot path).
-pub fn encode(data: &[u8]) -> Vec<u8> {
-    let mut out = Vec::with_capacity(data.len() / 2 + 16);
+/// Encode zero runs into a caller-provided buffer (cleared first;
+/// u64-at-a-time zero scanning on the hot path).
+pub fn encode_into(data: &[u8], out: &mut Vec<u8>) {
+    out.clear();
+    out.reserve(data.len() / 8 + 16);
     let mut i = 0;
     let n = data.len();
     while i < n {
@@ -57,7 +59,7 @@ pub fn encode(data: &[u8]) -> Vec<u8> {
                 i += 1;
             }
             out.push(0);
-            push_varint(&mut out, (i - start) as u64);
+            push_varint(out, (i - start) as u64);
         } else {
             // Copy a literal run in one memcpy: find the next zero.
             let start = i;
@@ -78,12 +80,20 @@ pub fn encode(data: &[u8]) -> Vec<u8> {
             out.extend_from_slice(&data[start..i]);
         }
     }
+}
+
+/// Encode zero runs, returning a fresh buffer.
+pub fn encode(data: &[u8]) -> Vec<u8> {
+    let mut out = Vec::new();
+    encode_into(data, &mut out);
     out
 }
 
-/// Decode; fails on truncated or oversized payloads.
-pub fn decode(data: &[u8], expected_len: usize) -> Result<Vec<u8>, String> {
-    let mut out = Vec::with_capacity(expected_len);
+/// Decode into a caller-provided buffer (cleared first); fails on
+/// truncated or oversized payloads.
+pub fn decode_into(data: &[u8], expected_len: usize, out: &mut Vec<u8>) -> Result<(), String> {
+    out.clear();
+    out.reserve(expected_len);
     let mut i = 0;
     while i < data.len() {
         if data[i] == 0 {
@@ -107,6 +117,13 @@ pub fn decode(data: &[u8], expected_len: usize) -> Result<Vec<u8>, String> {
             out.len()
         ));
     }
+    Ok(())
+}
+
+/// Decode, returning a fresh buffer.
+pub fn decode(data: &[u8], expected_len: usize) -> Result<Vec<u8>, String> {
+    let mut out = Vec::new();
+    decode_into(data, expected_len, &mut out)?;
     Ok(out)
 }
 

@@ -6,6 +6,20 @@
 //! assembled in order into the container. Parallelism is work-stealing
 //! over a shared atomic chunk cursor — chunk outputs are independent,
 //! so no inter-worker synchronization is needed beyond the cursor.
+//!
+//! # Scratch-arena ownership
+//!
+//! Each worker owns exactly one [`Scratch`] for its whole
+//! work-stealing loop (created inside the worker closure, never
+//! shared). Every intermediate buffer of the per-chunk encode path —
+//! quantized words, outlier bitmap, bitmap bytes, codec ping-pong
+//! buffers — lives in that arena and is reused across chunks, so the
+//! steady-state loop performs **zero heap allocations per chunk**: only
+//! the produced [`ChunkRecord`]'s owned `payload`/`outlier_bytes` (the
+//! output itself, which outlives the worker) are freshly allocated.
+//! The decompress loop mirrors this: workers decode into their arena
+//! and memcpy into disjoint slices of one preallocated output buffer.
+//! See [`crate::scratch`] for the full ownership rules.
 
 use std::sync::atomic::{AtomicUsize, Ordering};
 use std::sync::Mutex;
@@ -17,6 +31,7 @@ use crate::codec::Pipeline;
 use crate::container::{ChunkRecord, Container, Header};
 use crate::quantizer::QuantizerConfig;
 use crate::runtime::PjrtHandle;
+use crate::scratch::Scratch;
 use crate::types::{Device, ErrorBound, FnVariant, Protection, QuantizedChunk, CHUNK_ELEMS};
 
 use super::metrics::RunStats;
@@ -115,6 +130,96 @@ pub(crate) fn quantize_on(
     }
 }
 
+/// Quantize one chunk into the worker's scratch arena (`s.qwords` +
+/// `s.obits`). Native is allocation-free; PJRT copies the device
+/// result into the arena (the transfer dominates there anyway).
+fn quantize_into_scratch(
+    cfg: &EngineConfig,
+    qc: &QuantizerConfig,
+    chunk: &[f32],
+    s: &mut Scratch,
+) -> Result<()> {
+    match cfg.device {
+        Device::Native => {
+            qc.quantize_native_into(chunk, &mut s.qwords, &mut s.obits);
+            Ok(())
+        }
+        Device::Pjrt => {
+            let q = quantize_on(cfg, qc, chunk)?;
+            s.qwords.clear();
+            s.qwords.extend_from_slice(&q.words);
+            s.obits.clear();
+            s.obits.extend_from_slice(q.outliers.raw_words());
+            Ok(())
+        }
+    }
+}
+
+/// Encode one chunk of values into a [`ChunkRecord`], using `s` for
+/// every intermediate buffer. Returns the record and its outlier
+/// count. This is the single per-chunk encode path shared by the
+/// in-memory engine and the streaming pipeline; the only allocations
+/// are the record's owned bytes.
+pub fn encode_chunk_record(
+    cfg: &EngineConfig,
+    qc: &QuantizerConfig,
+    values: &[f32],
+    s: &mut Scratch,
+) -> Result<(ChunkRecord, usize)> {
+    quantize_into_scratch(cfg, qc, values, s)?;
+    let outliers: usize = s.obits.iter().map(|w| w.count_ones() as usize).sum();
+    // RLE keeps the (almost always zero) bitmap from capping the ratio
+    // at 32x.
+    crate::bitvec::bits_to_bytes_into(&s.obits, values.len(), &mut s.bitmap);
+    let mut outlier_bytes = Vec::new();
+    crate::codec::rle::encode_into(&s.bitmap, &mut outlier_bytes);
+    let mut payload = Vec::new();
+    cfg.pipeline.encode_into(&s.qwords, &mut s.codec, &mut payload);
+    Ok((
+        ChunkRecord {
+            n_values: values.len() as u32,
+            outlier_bytes,
+            payload,
+        },
+        outliers,
+    ))
+}
+
+/// Decode one chunk record into the worker's scratch arena: words land
+/// in `s.codec.words_a`, the outlier bitmap in `s.obits`, and the
+/// reconstruction in `s.values`.
+fn decode_chunk_into_scratch(
+    cfg: &EngineConfig,
+    qc: &QuantizerConfig,
+    pipeline: &Pipeline,
+    rec: &ChunkRecord,
+    s: &mut Scratch,
+) -> Result<()> {
+    let n = rec.n_values as usize;
+    pipeline
+        .decode_into(&rec.payload, n, &mut s.codec)
+        .map_err(|e| anyhow!(e))?;
+    crate::codec::rle::decode_into(&rec.outlier_bytes, n.div_ceil(8), &mut s.bitmap)
+        .map_err(|e| anyhow!(e))?;
+    crate::bitvec::bytes_to_bits_into(&s.bitmap, n, &mut s.obits).map_err(|e| anyhow!(e))?;
+    match cfg.device {
+        Device::Native => {
+            qc.dequantize_native_into(&s.codec.words_a, &s.obits, &mut s.values);
+            Ok(())
+        }
+        Device::Pjrt => {
+            let chunk = QuantizedChunk {
+                words: s.codec.words_a.clone(),
+                outliers: crate::bitvec::BitVec::from_raw(s.obits.clone(), n),
+            };
+            let y = dequantize_chunk(cfg, qc, &chunk)?;
+            s.values.clear();
+            s.values.extend_from_slice(&y);
+            Ok(())
+        }
+    }
+}
+
 /// Dequantize one chunk record's words on the configured device.
 fn dequantize_chunk(
     cfg: &EngineConfig,
@@ -158,27 +263,22 @@ pub fn compress(cfg: &EngineConfig, data: &[f32]) -> Result<(Container, RunStats
 
     std::thread::scope(|s| {
         for _ in 0..workers {
-            s.spawn(|| loop {
-                let i = cursor.fetch_add(1, Ordering::Relaxed);
-                if i >= n_chunks {
-                    break;
-                }
-                match quantize_on(cfg, &qc, chunks[i]) {
-                    Ok(q) => {
-                        let payload = cfg.pipeline.encode(&q.words);
-                        let rec = ChunkRecord {
-                            n_values: chunks[i].len() as u32,
-                            // RLE keeps the (almost always zero) bitmap
-                            // from capping the ratio at 32x.
-                            outlier_bytes: crate::codec::rle::encode(&q.outliers.to_bytes()),
-                            payload,
-                        };
-                        let outliers = q.outlier_count();
-                        records.lock().unwrap()[i] = Some((rec, outliers));
-                    }
-                    Err(e) => {
-                        *err.lock().unwrap() = Some(e);
+            s.spawn(|| {
+                // One arena per worker, reused for every chunk it steals.
+                let mut scratch = Scratch::new();
+                loop {
+                    let i = cursor.fetch_add(1, Ordering::Relaxed);
+                    if i >= n_chunks {
                         break;
+                    }
+                    match encode_chunk_record(cfg, &qc, chunks[i], &mut scratch) {
+                        Ok(rec_outliers) => {
+                            records.lock().unwrap()[i] = Some(rec_outliers);
+                        }
+                        Err(e) => {
+                            *err.lock().unwrap() = Some(e);
+                            break;
+                        }
                     }
                 }
             });
@@ -240,48 +340,67 @@ pub fn decompress(cfg: &EngineConfig, container: &Container) -> Result<(Vec<f32>
     };
     let pipeline = container.pipeline().map_err(|e| anyhow!(e))?;
     let n_chunks = container.chunks.len();
-    let outputs: Mutex<Vec<Option<Vec<f32>>>> = Mutex::new(vec![None; n_chunks]);
+    if h.chunk_size == 0 {
+        return Err(anyhow!("container has zero chunk size"));
+    }
+    // Preallocate the full reconstruction once; workers decode into
+    // their scratch arena and memcpy into disjoint per-chunk slices
+    // (each behind its own uncontended Mutex), so the steady-state
+    // decode loop allocates nothing per chunk.
+    let mut out = vec![0f32; h.n_values as usize];
+    let slots: Vec<Mutex<&mut [f32]>> = out
+        .chunks_mut(h.chunk_size as usize)
+        .map(Mutex::new)
+        .collect();
+    if slots.len() != n_chunks {
+        return Err(anyhow!(
+            "container layout mismatch: {} chunks for {} values at chunk size {}",
+            n_chunks,
+            h.n_values,
+            h.chunk_size
+        ));
+    }
     let cursor = AtomicUsize::new(0);
     let workers = cfg.effective_workers().min(n_chunks.max(1));
     let err: Mutex<Option<anyhow::Error>> = Mutex::new(None);
 
     std::thread::scope(|s| {
         for _ in 0..workers {
-            s.spawn(|| loop {
-                let i = cursor.fetch_add(1, Ordering::Relaxed);
-                if i >= n_chunks {
-                    break;
-                }
-                let rec = &container.chunks[i];
-                let decoded = crate::container::decode_chunk(rec, &pipeline)
-                    .map_err(|e| anyhow!(e))
-                    .and_then(|(words, outliers)| {
-                        dequantize_chunk(cfg, &qc, &QuantizedChunk { words, outliers })
-                    });
-                match decoded {
-                    Ok(v) => outputs.lock().unwrap()[i] = Some(v),
-                    Err(e) => {
-                        *err.lock().unwrap() = Some(e);
+            s.spawn(|| {
+                let mut scratch = Scratch::new();
+                loop {
+                    let i = cursor.fetch_add(1, Ordering::Relaxed);
+                    if i >= n_chunks {
                         break;
+                    }
+                    let rec = &container.chunks[i];
+                    let decoded =
+                        decode_chunk_into_scratch(cfg, &qc, &pipeline, rec, &mut scratch);
+                    match decoded {
+                        Ok(()) => {
+                            let mut slot = slots[i].lock().unwrap();
+                            if slot.len() != scratch.values.len() {
+                                *err.lock().unwrap() = Some(anyhow!(
+                                    "chunk {i} decoded {} values, layout expects {}",
+                                    scratch.values.len(),
+                                    slot.len()
+                                ));
+                                break;
+                            }
+                            slot.copy_from_slice(&scratch.values);
+                        }
+                        Err(e) => {
+                            *err.lock().unwrap() = Some(e);
+                            break;
+                        }
                     }
                 }
             });
         }
     });
+    drop(slots);
     if let Some(e) = err.into_inner().unwrap() {
         return Err(e);
-    }
-
-    let mut out = Vec::with_capacity(h.n_values as usize);
-    for slot in outputs.into_inner().unwrap() {
-        out.extend(slot.ok_or_else(|| anyhow!("worker died mid-chunk"))?);
-    }
-    if out.len() != h.n_values as usize {
-        return Err(anyhow!(
-            "decompressed {} values, header says {}",
-            out.len(),
-            h.n_values
-        ));
     }
     let stats = RunStats {
         n_values: out.len(),

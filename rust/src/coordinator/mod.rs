@@ -5,11 +5,16 @@
 //! * [`stream`]  — bounded-memory streaming pipeline with backpressure
 //!   (reader -> workers -> reordering collector);
 //! * [`metrics`] — ratio / throughput / outlier accounting.
+//!
+//! Both execution modes share one per-chunk encode path,
+//! [`encode_chunk_record`], driven through a per-worker
+//! [`crate::scratch::Scratch`] arena (zero steady-state allocations —
+//! see the ownership rules there).
 
 pub mod engine;
 pub mod metrics;
 pub mod stream;
 
-pub use engine::{compress, decompress, EngineConfig};
+pub use engine::{compress, decompress, encode_chunk_record, EngineConfig};
 pub use metrics::RunStats;
 pub use stream::{compress_stream, DEFAULT_QUEUE_DEPTH};

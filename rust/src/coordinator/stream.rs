@@ -70,28 +70,24 @@ pub fn compress_stream<R: Read, W: Write>(
     let err: Mutex<Option<anyhow::Error>> = Mutex::new(None);
 
     std::thread::scope(|s| -> Result<()> {
-        // Workers.
+        // Workers: each owns one scratch arena for its whole loop (see
+        // crate::scratch for the ownership rules).
         for _ in 0..workers {
             let work_rx = work_rx.clone();
             let done_tx = done_tx.clone();
             let qc = &qc;
             let err = &err;
             s.spawn(move || {
+                let mut scratch = crate::scratch::Scratch::new();
                 while let Some(item) = work_rx.recv() {
-                    let result = super::engine::quantize_on(cfg, qc, &item.values);
+                    let result =
+                        super::engine::encode_chunk_record(cfg, qc, &item.values, &mut scratch);
                     match result {
-                        Ok(q) => {
-                            let payload = cfg.pipeline.encode(&q.words);
+                        Ok((record, outliers)) => {
                             let done = DoneItem {
                                 index: item.index,
-                                outliers: q.outlier_count(),
-                                record: ChunkRecord {
-                                    n_values: item.values.len() as u32,
-                                    outlier_bytes: crate::codec::rle::encode(
-                                        &q.outliers.to_bytes(),
-                                    ),
-                                    payload,
-                                },
+                                outliers,
+                                record,
                             };
                             if done_tx.send(done).is_err() {
                                 break;
@@ -127,8 +123,10 @@ pub fn compress_stream<R: Read, W: Write>(
 
         let mut index = 0usize;
         let bytes_per_chunk = cfg.chunk_size * 4;
+        // One read buffer for the whole stream (values are copied into
+        // the owned WorkItem before the next read).
+        let mut buf = vec![0u8; bytes_per_chunk];
         loop {
-            let mut buf = vec![0u8; bytes_per_chunk];
             let got = read_full(&mut input, &mut buf)?;
             if got == 0 {
                 break;

@@ -24,8 +24,10 @@ pub mod codec;
 pub mod container;
 pub mod coordinator;
 pub mod data;
-pub mod runtime;
 pub mod quantizer;
+pub mod reference;
+pub mod runtime;
+pub mod scratch;
 pub mod tables;
 pub mod types;
 pub mod verify;

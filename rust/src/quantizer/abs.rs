@@ -42,60 +42,102 @@ impl AbsParams {
     }
 }
 
-/// Quantize one slice. Protected mode double-checks every value.
-pub fn quantize(x: &[f32], p: AbsParams, protection: Protection) -> QuantizedChunk {
+/// Quantize one slice into caller-provided buffers (cleared first):
+/// one u32 word per value into `words`, the outlier bitmap as packed
+/// u64 words into `obits` (bit `i` at `obits[i/64] >> (i%64)`, the
+/// [`BitVec`] layout). Protected mode double-checks every value.
+///
+/// The loop is blocked 64 elements at a time — one block per bitmap
+/// word. The branch-light inner loop always pushes the quantized word
+/// and accumulates an outlier mask; a sparse fixup pass then overwrites
+/// the (rare) outlier lanes with raw IEEE-754 bits. Semantics are
+/// bit-identical to the seed's per-element loop (pinned by the
+/// `crate::reference` differential tests).
+pub fn quantize_into(
+    x: &[f32],
+    p: AbsParams,
+    protection: Protection,
+    words: &mut Vec<u32>,
+    obits: &mut Vec<u64>,
+) {
     let n = x.len();
-    let mut words: Vec<u32> = Vec::with_capacity(n);
-    // Bitmap packed directly into u64 words (BitVec::push per value was
-    // a measured hot spot — see EXPERIMENTS.md section Perf).
-    let mut bits = vec![0u64; n.div_ceil(64)];
+    words.clear();
+    words.reserve(n);
+    obits.clear();
+    obits.resize(n.div_ceil(64), 0);
     let protected = protection == Protection::Protected;
     let maxbin = MAXBIN_ABS as f32;
     let eb2_64 = p.eb2 as f64;
     let eb_64 = p.eb as f64;
-    for (i, &v) in x.iter().enumerate() {
-        let binf = (v * p.inv_eb2).round_ties_even();
-        // Two comparisons, not abs() — Section 3.3. NaN compares false.
-        let in_range = binf < maxbin && binf > -maxbin;
-        let binc = if in_range { binf } else { 0.0 };
-        let bin = binc as i32;
-        // Exact f64 product rounded once to f32: identical to the
-        // decoder's plain f32 multiply, FMA-proof.
-        let recon = ((binc as f64) * eb2_64) as f32;
-        let quant = if protected {
-            let err = ((v as f64) - (recon as f64)).abs();
-            in_range && err <= eb_64
-        } else {
-            in_range
-        };
-        if quant {
+    for (bi, blk) in x.chunks(64).enumerate() {
+        let base = words.len();
+        let mut mask = 0u64;
+        for (j, &v) in blk.iter().enumerate() {
+            let binf = (v * p.inv_eb2).round_ties_even();
+            // Two comparisons, not abs() — Section 3.3. NaN compares false.
+            let in_range = binf < maxbin && binf > -maxbin;
+            let binc = if in_range { binf } else { 0.0 };
+            let bin = binc as i32;
+            // Exact f64 product rounded once to f32: identical to the
+            // decoder's plain f32 multiply, FMA-proof.
+            let recon = ((binc as f64) * eb2_64) as f32;
+            let quant = if protected {
+                let err = ((v as f64) - (recon as f64)).abs();
+                in_range && err <= eb_64
+            } else {
+                in_range
+            };
             words.push(zigzag(bin) as u32);
-        } else {
-            words.push(v.to_bits());
-            bits[i >> 6] |= 1u64 << (i & 63);
+            mask |= (!quant as u64) << j;
         }
-    }
-    QuantizedChunk {
-        words,
-        outliers: BitVec::from_raw(bits, n),
+        // Fixup pass: outlier lanes keep their raw bits.
+        let mut m = mask;
+        while m != 0 {
+            let j = m.trailing_zeros() as usize;
+            words[base + j] = blk[j].to_bits();
+            m &= m - 1;
+        }
+        obits[bi] = mask;
     }
 }
 
-/// Decode one chunk back to values. The multiply must stay a single f32
-/// operation: it defines the reconstruction the encoder verified.
-pub fn dequantize(chunk: &QuantizedChunk, p: AbsParams) -> Vec<f32> {
-    chunk
-        .words
-        .iter()
-        .enumerate()
-        .map(|(i, &w)| {
-            if chunk.outliers.get(i) {
+/// Quantize one slice (allocating compat wrapper over
+/// [`quantize_into`]).
+pub fn quantize(x: &[f32], p: AbsParams, protection: Protection) -> QuantizedChunk {
+    let mut words = Vec::new();
+    let mut obits = Vec::new();
+    quantize_into(x, p, protection, &mut words, &mut obits);
+    QuantizedChunk {
+        words,
+        outliers: BitVec::from_raw(obits, x.len()),
+    }
+}
+
+/// Decode a word stream + packed outlier bitmap into a caller-provided
+/// buffer (cleared first). `obits` must cover `words.len()` bits. The
+/// multiply must stay a single f32 operation: it defines the
+/// reconstruction the encoder verified.
+pub fn dequantize_into(words: &[u32], obits: &[u64], p: AbsParams, out: &mut Vec<f32>) {
+    out.clear();
+    out.reserve(words.len());
+    for (bi, blk) in words.chunks(64).enumerate() {
+        let mask = obits[bi];
+        for (j, &w) in blk.iter().enumerate() {
+            let v = if (mask >> j) & 1 != 0 {
                 f32::from_bits(w)
             } else {
                 super::unzigzag(w) as f32 * p.eb2
-            }
-        })
-        .collect()
+            };
+            out.push(v);
+        }
+    }
+}
+
+/// Decode one chunk back to values (allocating compat wrapper).
+pub fn dequantize(chunk: &QuantizedChunk, p: AbsParams) -> Vec<f32> {
+    let mut out = Vec::new();
+    dequantize_into(&chunk.words, chunk.outliers.raw_words(), p, &mut out);
+    out
 }
 
 /// Count values that fail ONLY the double check (i.e. in-range bins
@@ -241,5 +283,70 @@ mod tests {
         let c = quantize(&[], p, Protected);
         assert!(c.is_empty());
         assert!(dequantize(&c, p).is_empty());
+    }
+
+    #[test]
+    fn blocked_kernel_matches_reference() {
+        // The 64-element blocked loop + fixup pass must reproduce the
+        // seed's per-element loop exactly, specials included.
+        let mut s = 0xABCDu64;
+        let x: Vec<f32> = (0..10_000)
+            .map(|i| {
+                s ^= s << 13;
+                s ^= s >> 7;
+                s ^= s << 17;
+                match i % 50 {
+                    0 => f32::NAN,
+                    1 => f32::INFINITY,
+                    2 => 1e30,
+                    3 => f32::from_bits((s as u32) & 0x007F_FFFF),
+                    _ => {
+                        let v = f32::from_bits(s as u32);
+                        if v.is_nan() {
+                            0.5
+                        } else {
+                            v
+                        }
+                    }
+                }
+            })
+            .collect();
+        for eb in [1e-1f32, 1e-3, 1e-6] {
+            let p = AbsParams::new(eb);
+            for prot in [Protected, Unprotected] {
+                let got = quantize(&x, p, prot);
+                let want = crate::reference::quantize_abs(&x, p, prot);
+                assert_eq!(got.words, want.words, "eb {eb} {prot:?}");
+                assert_eq!(got.outliers, want.outliers, "eb {eb} {prot:?}");
+                // Bit-compare: reconstructions contain NaN.
+                let a: Vec<u32> = dequantize(&got, p).iter().map(|v| v.to_bits()).collect();
+                let b: Vec<u32> = crate::reference::dequantize_abs(&got, p)
+                    .iter()
+                    .map(|v| v.to_bits())
+                    .collect();
+                assert_eq!(a, b, "eb {eb} {prot:?}");
+            }
+        }
+    }
+
+    #[test]
+    fn into_buffers_are_reused_not_regrown() {
+        let p = AbsParams::new(1e-3);
+        let x: Vec<f32> = (0..5000).map(|i| (i as f32).cos()).collect();
+        let mut words = Vec::new();
+        let mut obits = Vec::new();
+        let mut out = Vec::new();
+        quantize_into(&x, p, Protected, &mut words, &mut obits);
+        dequantize_into(&words, &obits, p, &mut out);
+        let (cw, cb, co) = (words.capacity(), obits.capacity(), out.capacity());
+        for _ in 0..3 {
+            quantize_into(&x, p, Protected, &mut words, &mut obits);
+            dequantize_into(&words, &obits, p, &mut out);
+        }
+        assert_eq!(
+            (words.capacity(), obits.capacity(), out.capacity()),
+            (cw, cb, co)
+        );
+        assert_eq!(out.len(), x.len());
     }
 }

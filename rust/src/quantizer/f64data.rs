@@ -49,48 +49,83 @@ impl Abs64Params {
     }
 }
 
-/// ABS quantizer over f64 data.
-pub fn abs_quantize(x: &[f64], p: Abs64Params, protection: Protection) -> QuantizedChunk64 {
-    let mut words = Vec::with_capacity(x.len());
-    let mut outliers = BitVec::with_capacity(x.len());
+/// ABS quantizer over f64 data into caller-provided buffers (cleared
+/// first; same blocked 64-element layout as the f32 kernels — one
+/// packed bitmap word per block, fixup pass for outlier lanes).
+pub fn abs_quantize_into(
+    x: &[f64],
+    p: Abs64Params,
+    protection: Protection,
+    words: &mut Vec<u64>,
+    obits: &mut Vec<u64>,
+) {
+    let n = x.len();
+    words.clear();
+    words.reserve(n);
+    obits.clear();
+    obits.resize(n.div_ceil(64), 0);
     let protected = protection == Protection::Protected;
     let maxbin = MAXBIN_ABS64 as f64;
-    for &v in x {
-        let binf = (v * p.inv_eb2).round_ties_even();
-        let in_range = binf < maxbin && binf > -maxbin; // NaN false
-        let binc = if in_range { binf } else { 0.0 };
-        let bin = binc as i64;
-        let recon = binc * p.eb2;
-        let quant = if protected {
-            // Sterbenz-exact subtraction (see module docs).
-            in_range && (v - recon).abs() <= p.eb
-        } else {
-            in_range
-        };
-        if quant {
+    for (bi, blk) in x.chunks(64).enumerate() {
+        let base = words.len();
+        let mut mask = 0u64;
+        for (j, &v) in blk.iter().enumerate() {
+            let binf = (v * p.inv_eb2).round_ties_even();
+            let in_range = binf < maxbin && binf > -maxbin; // NaN false
+            let binc = if in_range { binf } else { 0.0 };
+            let bin = binc as i64;
+            let recon = binc * p.eb2;
+            let quant = if protected {
+                // Sterbenz-exact subtraction (see module docs).
+                in_range && (v - recon).abs() <= p.eb
+            } else {
+                in_range
+            };
             words.push(zigzag64(bin) as u64);
-            outliers.push(false);
-        } else {
-            words.push(v.to_bits());
-            outliers.push(true);
+            mask |= (!quant as u64) << j;
         }
+        let mut m = mask;
+        while m != 0 {
+            let j = m.trailing_zeros() as usize;
+            words[base + j] = blk[j].to_bits();
+            m &= m - 1;
+        }
+        obits[bi] = mask;
     }
-    QuantizedChunk64 { words, outliers }
 }
 
-pub fn abs_dequantize(chunk: &QuantizedChunk64, p: Abs64Params) -> Vec<f64> {
-    chunk
-        .words
-        .iter()
-        .enumerate()
-        .map(|(i, &w)| {
-            if chunk.outliers.get(i) {
+/// ABS quantizer over f64 data (allocating compat wrapper).
+pub fn abs_quantize(x: &[f64], p: Abs64Params, protection: Protection) -> QuantizedChunk64 {
+    let mut words = Vec::new();
+    let mut obits = Vec::new();
+    abs_quantize_into(x, p, protection, &mut words, &mut obits);
+    QuantizedChunk64 {
+        words,
+        outliers: BitVec::from_raw(obits, x.len()),
+    }
+}
+
+/// ABS f64 decode into a caller-provided buffer (cleared first).
+pub fn abs_dequantize_into(words: &[u64], obits: &[u64], p: Abs64Params, out: &mut Vec<f64>) {
+    out.clear();
+    out.reserve(words.len());
+    for (bi, blk) in words.chunks(64).enumerate() {
+        let mask = obits[bi];
+        for (j, &w) in blk.iter().enumerate() {
+            let v = if (mask >> j) & 1 != 0 {
                 f64::from_bits(w)
             } else {
                 unzigzag64(w) as f64 * p.eb2
-            }
-        })
-        .collect()
+            };
+            out.push(v);
+        }
+    }
+}
+
+pub fn abs_dequantize(chunk: &QuantizedChunk64, p: Abs64Params) -> Vec<f64> {
+    let mut out = Vec::new();
+    abs_dequantize_into(&chunk.words, chunk.outliers.raw_words(), p, &mut out);
+    out
 }
 
 /// Derived REL factors for f64 data.
@@ -112,59 +147,98 @@ impl Rel64Params {
     }
 }
 
-/// REL quantizer over f64 data.
+/// One REL f64 value -> (word, is_outlier). Kept as the single source
+/// of truth for the REL semantics (the blocked loop must not drift).
+#[inline]
+fn rel_encode_one(v: f64, p: Rel64Params, variant: FnVariant, protected: bool) -> (u64, bool) {
+    let sign = (v < 0.0) as i64;
+    let ax = v.abs();
+    let finite = ax < f64::INFINITY;
+    let big_enough = ax >= REL_MIN_MAG64;
+    let lg = match variant {
+        FnVariant::Approx => log2approxd(ax),
+        FnVariant::Native => ax.log2(),
+    };
+    let binf = (lg * p.inv_l2eb).round_ties_even();
+    let maxbin = MAXBIN_REL64 as f64;
+    let in_range = binf < maxbin && binf > -maxbin;
+    let usable = in_range && finite && big_enough;
+    let binc = if usable { binf } else { 0.0 };
+    let bin = binc as i64;
+    let recon = match variant {
+        FnVariant::Approx => pow2approxd_from_bins(bin, p.l2eb),
+        FnVariant::Native => (binc * p.l2eb).exp2(),
+    };
+    let quant = if protected {
+        usable && (ax - recon).abs() <= p.eb * ax
+    } else {
+        usable
+    };
+    if quant {
+        (((zigzag64(bin) << 1) | sign) as u64, false)
+    } else {
+        (v.to_bits(), true)
+    }
+}
+
+/// REL quantizer over f64 data into caller-provided buffers (cleared
+/// first; blocked 64 elements per bitmap word).
+pub fn rel_quantize_into(
+    x: &[f64],
+    p: Rel64Params,
+    variant: FnVariant,
+    protection: Protection,
+    words: &mut Vec<u64>,
+    obits: &mut Vec<u64>,
+) {
+    let n = x.len();
+    words.clear();
+    words.reserve(n);
+    obits.clear();
+    obits.resize(n.div_ceil(64), 0);
+    let protected = protection == Protection::Protected;
+    for (bi, blk) in x.chunks(64).enumerate() {
+        let mut mask = 0u64;
+        for (j, &v) in blk.iter().enumerate() {
+            let (w, o) = rel_encode_one(v, p, variant, protected);
+            words.push(w);
+            mask |= (o as u64) << j;
+        }
+        obits[bi] = mask;
+    }
+}
+
+/// REL quantizer over f64 data (allocating compat wrapper).
 pub fn rel_quantize(
     x: &[f64],
     p: Rel64Params,
     variant: FnVariant,
     protection: Protection,
 ) -> QuantizedChunk64 {
-    let mut words = Vec::with_capacity(x.len());
-    let mut outliers = BitVec::with_capacity(x.len());
-    let protected = protection == Protection::Protected;
-    let maxbin = MAXBIN_REL64 as f64;
-    for &v in x {
-        let sign = (v < 0.0) as i64;
-        let ax = v.abs();
-        let finite = ax < f64::INFINITY;
-        let big_enough = ax >= REL_MIN_MAG64;
-        let lg = match variant {
-            FnVariant::Approx => log2approxd(ax),
-            FnVariant::Native => ax.log2(),
-        };
-        let binf = (lg * p.inv_l2eb).round_ties_even();
-        let in_range = binf < maxbin && binf > -maxbin;
-        let usable = in_range && finite && big_enough;
-        let binc = if usable { binf } else { 0.0 };
-        let bin = binc as i64;
-        let recon = match variant {
-            FnVariant::Approx => pow2approxd_from_bins(bin, p.l2eb),
-            FnVariant::Native => (binc * p.l2eb).exp2(),
-        };
-        let quant = if protected {
-            usable && (ax - recon).abs() <= p.eb * ax
-        } else {
-            usable
-        };
-        if quant {
-            words.push(((zigzag64(bin) << 1) | sign) as u64);
-            outliers.push(false);
-        } else {
-            words.push(v.to_bits());
-            outliers.push(true);
-        }
+    let mut words = Vec::new();
+    let mut obits = Vec::new();
+    rel_quantize_into(x, p, variant, protection, &mut words, &mut obits);
+    QuantizedChunk64 {
+        words,
+        outliers: BitVec::from_raw(obits, x.len()),
     }
-    QuantizedChunk64 { words, outliers }
 }
 
-pub fn rel_dequantize(chunk: &QuantizedChunk64, p: Rel64Params, variant: FnVariant) -> Vec<f64> {
-    chunk
-        .words
-        .iter()
-        .enumerate()
-        .map(|(i, &w)| {
-            if chunk.outliers.get(i) {
-                f64::from_bits(w)
+/// REL f64 decode into a caller-provided buffer (cleared first).
+pub fn rel_dequantize_into(
+    words: &[u64],
+    obits: &[u64],
+    p: Rel64Params,
+    variant: FnVariant,
+    out: &mut Vec<f64>,
+) {
+    out.clear();
+    out.reserve(words.len());
+    for (bi, blk) in words.chunks(64).enumerate() {
+        let mask = obits[bi];
+        for (j, &w) in blk.iter().enumerate() {
+            if (mask >> j) & 1 != 0 {
+                out.push(f64::from_bits(w));
             } else {
                 let sign = (w & 1) != 0;
                 let bin = unzigzag64(w >> 1);
@@ -172,14 +246,22 @@ pub fn rel_dequantize(chunk: &QuantizedChunk64, p: Rel64Params, variant: FnVaria
                     FnVariant::Approx => pow2approxd_from_bins(bin, p.l2eb),
                     FnVariant::Native => (bin as f64 * p.l2eb).exp2(),
                 };
-                if sign {
-                    -mag
-                } else {
-                    mag
-                }
+                out.push(if sign { -mag } else { mag });
             }
-        })
-        .collect()
+        }
+    }
+}
+
+pub fn rel_dequantize(chunk: &QuantizedChunk64, p: Rel64Params, variant: FnVariant) -> Vec<f64> {
+    let mut out = Vec::new();
+    rel_dequantize_into(
+        &chunk.words,
+        chunk.outliers.raw_words(),
+        p,
+        variant,
+        &mut out,
+    );
+    out
 }
 
 #[cfg(test)]

@@ -95,7 +95,27 @@ impl QuantizerConfig {
         }
     }
 
-    /// Quantize on the native (rust) pipeline.
+    /// Quantize on the native (rust) pipeline into caller-provided
+    /// buffers (cleared first) — the zero-allocation hot path. `obits`
+    /// receives the outlier bitmap as packed u64 words
+    /// ([`crate::bitvec::BitVec`] layout).
+    pub fn quantize_native_into(&self, x: &[f32], words: &mut Vec<u32>, obits: &mut Vec<u64>) {
+        match *self {
+            QuantizerConfig::Abs(p, prot) => abs::quantize_into(x, p, prot, words, obits),
+            QuantizerConfig::Rel(p, v, prot) => rel::quantize_into(x, p, v, prot, words, obits),
+        }
+    }
+
+    /// Dequantize on the native (rust) pipeline into a caller-provided
+    /// buffer (cleared first).
+    pub fn dequantize_native_into(&self, words: &[u32], obits: &[u64], out: &mut Vec<f32>) {
+        match *self {
+            QuantizerConfig::Abs(p, _) => abs::dequantize_into(words, obits, p, out),
+            QuantizerConfig::Rel(p, v, _) => rel::dequantize_into(words, obits, p, v, out),
+        }
+    }
+
+    /// Quantize on the native (rust) pipeline (allocating wrapper).
     pub fn quantize_native(&self, x: &[f32]) -> QuantizedChunk {
         match *self {
             QuantizerConfig::Abs(p, prot) => abs::quantize(x, p, prot),
@@ -103,7 +123,7 @@ impl QuantizerConfig {
         }
     }
 
-    /// Dequantize on the native (rust) pipeline.
+    /// Dequantize on the native (rust) pipeline (allocating wrapper).
     pub fn dequantize_native(&self, chunk: &QuantizedChunk) -> Vec<f32> {
         match *self {
             QuantizerConfig::Abs(p, _) => abs::dequantize(chunk, p),

@@ -67,6 +67,21 @@ pub fn quantize(x: &[f32], eb_noa: f32, protection: Protection) -> (QuantizedChu
     (abs::quantize(x, p, protection), p)
 }
 
+/// One-shot NOA quantization into caller-provided buffers (cleared
+/// first; same contract as [`abs::quantize_into`]). Returns the
+/// effective ABS params the range resolved to.
+pub fn quantize_into(
+    x: &[f32],
+    eb_noa: f32,
+    protection: Protection,
+    words: &mut Vec<u32>,
+    obits: &mut Vec<u64>,
+) -> AbsParams {
+    let p = to_abs_params(eb_noa, RangeStats::scan(x));
+    abs::quantize_into(x, p, protection, words, obits);
+    p
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -112,6 +127,18 @@ mod tests {
         assert_eq!(s.range(), 0.0);
         let (c, _) = quantize(&[], 1e-3, Protected);
         assert!(c.is_empty());
+    }
+
+    #[test]
+    fn quantize_into_matches_quantize() {
+        let x: Vec<f32> = (0..5000).map(|i| (i as f32 * 0.01).cos() * 7.0).collect();
+        let (chunk, p) = quantize(&x, 1e-3, Protected);
+        let mut words = Vec::new();
+        let mut obits = Vec::new();
+        let p2 = quantize_into(&x, 1e-3, Protected, &mut words, &mut obits);
+        assert_eq!(p.eb.to_bits(), p2.eb.to_bits());
+        assert_eq!(words, chunk.words);
+        assert_eq!(obits, chunk.outliers.raw_words());
     }
 
     #[test]

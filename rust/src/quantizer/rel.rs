@@ -72,44 +72,92 @@ fn encode_one(v: f32, p: RelParams, variant: FnVariant, protected: bool) -> (u32
     }
 }
 
-/// Quantize one slice under a point-wise relative bound.
+/// Quantize one slice under a point-wise relative bound into
+/// caller-provided buffers (cleared first; bitmap layout as in
+/// [`crate::quantizer::abs::quantize_into`]). Blocked 64 elements per
+/// bitmap word; semantics are pinned to [`encode_one`] exactly.
+pub fn quantize_into(
+    x: &[f32],
+    p: RelParams,
+    variant: FnVariant,
+    protection: Protection,
+    words: &mut Vec<u32>,
+    obits: &mut Vec<u64>,
+) {
+    let n = x.len();
+    words.clear();
+    words.reserve(n);
+    obits.clear();
+    obits.resize(n.div_ceil(64), 0);
+    let protected = protection == Protection::Protected;
+    for (bi, blk) in x.chunks(64).enumerate() {
+        let mut mask = 0u64;
+        for (j, &v) in blk.iter().enumerate() {
+            let (w, o) = encode_one(v, p, variant, protected);
+            words.push(w);
+            mask |= (o as u64) << j;
+        }
+        obits[bi] = mask;
+    }
+}
+
+/// Quantize one slice under a point-wise relative bound (allocating
+/// compat wrapper over [`quantize_into`]).
 pub fn quantize(
     x: &[f32],
     p: RelParams,
     variant: FnVariant,
     protection: Protection,
 ) -> QuantizedChunk {
-    let n = x.len();
-    let mut words = Vec::with_capacity(n);
-    let mut bits = vec![0u64; n.div_ceil(64)];
-    let protected = protection == Protection::Protected;
-    for (i, &v) in x.iter().enumerate() {
-        let (w, o) = encode_one(v, p, variant, protected);
-        words.push(w);
-        bits[i >> 6] |= (o as u64) << (i & 63);
-    }
+    let mut words = Vec::new();
+    let mut obits = Vec::new();
+    quantize_into(x, p, variant, protection, &mut words, &mut obits);
     QuantizedChunk {
         words,
-        outliers: BitVec::from_raw(bits, n),
+        outliers: BitVec::from_raw(obits, x.len()),
     }
 }
 
-/// Decode one chunk. Must use the same pow2 the encoder verified with.
-pub fn dequantize(chunk: &QuantizedChunk, p: RelParams, variant: FnVariant) -> Vec<f32> {
-    let mut out = Vec::with_capacity(chunk.words.len());
-    for (i, &w) in chunk.words.iter().enumerate() {
-        if chunk.outliers.get(i) {
-            out.push(f32::from_bits(w));
-        } else {
-            let sign = (w & 1) != 0;
-            let bin = unzigzag(w >> 1);
-            let mag = match variant {
-                FnVariant::Approx => pow2approx_from_bins(bin, p.l2eb),
-                FnVariant::Native => (bin as f32 * p.l2eb).exp2(),
-            };
-            out.push(if sign { -mag } else { mag });
+/// Decode a word stream + packed outlier bitmap into a caller-provided
+/// buffer (cleared first). Must use the same pow2 the encoder verified
+/// with.
+pub fn dequantize_into(
+    words: &[u32],
+    obits: &[u64],
+    p: RelParams,
+    variant: FnVariant,
+    out: &mut Vec<f32>,
+) {
+    out.clear();
+    out.reserve(words.len());
+    for (bi, blk) in words.chunks(64).enumerate() {
+        let mask = obits[bi];
+        for (j, &w) in blk.iter().enumerate() {
+            if (mask >> j) & 1 != 0 {
+                out.push(f32::from_bits(w));
+            } else {
+                let sign = (w & 1) != 0;
+                let bin = unzigzag(w >> 1);
+                let mag = match variant {
+                    FnVariant::Approx => pow2approx_from_bins(bin, p.l2eb),
+                    FnVariant::Native => (bin as f32 * p.l2eb).exp2(),
+                };
+                out.push(if sign { -mag } else { mag });
+            }
         }
     }
+}
+
+/// Decode one chunk (allocating compat wrapper).
+pub fn dequantize(chunk: &QuantizedChunk, p: RelParams, variant: FnVariant) -> Vec<f32> {
+    let mut out = Vec::new();
+    dequantize_into(
+        &chunk.words,
+        chunk.outliers.raw_words(),
+        p,
+        variant,
+        &mut out,
+    );
     out
 }
 
@@ -243,5 +291,51 @@ mod tests {
         let p = RelParams::new(1e-3);
         let c = quantize(&[], p, Approx, Protected);
         assert!(dequantize(&c, p, Approx).is_empty());
+    }
+
+    #[test]
+    fn blocked_kernel_matches_reference() {
+        let mut s = 0xFACEu64;
+        let x: Vec<f32> = (0..10_000)
+            .map(|i| {
+                s ^= s << 13;
+                s ^= s >> 7;
+                s ^= s << 17;
+                match i % 40 {
+                    0 => f32::NAN,
+                    1 => f32::NEG_INFINITY,
+                    2 => -0.0,
+                    3 => REL_MIN_MAG / 3.0,
+                    _ => {
+                        let v = f32::from_bits(s as u32);
+                        if v.is_nan() {
+                            -2.5
+                        } else {
+                            v
+                        }
+                    }
+                }
+            })
+            .collect();
+        let p = RelParams::new(1e-3);
+        for variant in [Approx, Native] {
+            for prot in [Protected, crate::types::Protection::Unprotected] {
+                let got = quantize(&x, p, variant, prot);
+                let want = crate::reference::quantize_rel(&x, p, variant, prot);
+                assert_eq!(got.words, want.words, "{variant:?} {prot:?}");
+                assert_eq!(got.outliers, want.outliers, "{variant:?} {prot:?}");
+            }
+            let q = quantize(&x, p, variant, Protected);
+            // Bit-compare: reconstructions contain NaN.
+            let a: Vec<u32> = dequantize(&q, p, variant)
+                .iter()
+                .map(|v| v.to_bits())
+                .collect();
+            let b: Vec<u32> = crate::reference::dequantize_rel(&q, p, variant)
+                .iter()
+                .map(|v| v.to_bits())
+                .collect();
+            assert_eq!(a, b, "{variant:?}");
+        }
     }
 }

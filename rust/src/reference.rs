@@ -1,0 +1,436 @@
+//! Retained reference (naive) implementations — the differential-
+//! testing oracle for the zero-allocation hot path.
+//!
+//! Everything here is a deliberately simple, allocation-happy,
+//! single-threaded re-statement of the seed pipeline's semantics:
+//! per-element quantizer loops, per-stage `Vec` codec passes, a
+//! `BinaryHeap`-based Huffman builder and a per-symbol bit writer.
+//! None of it is used on any production path; its sole purpose is to
+//! pin the optimized kernels (blocked quantizers, scratch-arena codec,
+//! flat-array Huffman) to the seed's exact bytes:
+//!
+//! * `rust/tests/properties.rs` asserts engine containers are
+//!   **byte-identical** to [`compress`] across suites/bounds/modes;
+//! * the codec and quantizer unit tests diff individual kernels.
+//!
+//! Do not "optimize" this module — its naivety is the point.
+
+use std::cmp::Reverse;
+use std::collections::BinaryHeap;
+
+use crate::bitvec::BitVec;
+use crate::codec::{Pipeline, Stage};
+use crate::container::{ChunkRecord, Container, Header};
+use crate::coordinator::EngineConfig;
+use crate::quantizer::abs::AbsParams;
+use crate::quantizer::approx::{log2approxf, pow2approx_from_bins};
+use crate::quantizer::rel::RelParams;
+use crate::quantizer::{unzigzag, zigzag, QuantizerConfig};
+use crate::types::{
+    Device, FnVariant, Protection, QuantizedChunk, MAXBIN_ABS, MAXBIN_REL, REL_MIN_MAG,
+};
+
+// ---------------------------------------------------------------------
+// Quantizers (seed per-element loops)
+// ---------------------------------------------------------------------
+
+/// Seed ABS quantizer: the exact per-element branchy loop of the seed
+/// (direct u64 bitmap packing) — both the correctness oracle for the
+/// blocked kernel and the perf-faithful "before" baseline.
+pub fn quantize_abs(x: &[f32], p: AbsParams, protection: Protection) -> QuantizedChunk {
+    let n = x.len();
+    let mut words: Vec<u32> = Vec::with_capacity(n);
+    let mut bits = vec![0u64; n.div_ceil(64)];
+    let protected = protection == Protection::Protected;
+    let maxbin = MAXBIN_ABS as f32;
+    for (i, &v) in x.iter().enumerate() {
+        let binf = (v * p.inv_eb2).round_ties_even();
+        let in_range = binf < maxbin && binf > -maxbin;
+        let binc = if in_range { binf } else { 0.0 };
+        let bin = binc as i32;
+        let recon = ((binc as f64) * (p.eb2 as f64)) as f32;
+        let quant = if protected {
+            let err = ((v as f64) - (recon as f64)).abs();
+            in_range && err <= p.eb as f64
+        } else {
+            in_range
+        };
+        if quant {
+            words.push(zigzag(bin) as u32);
+        } else {
+            words.push(v.to_bits());
+            bits[i >> 6] |= 1u64 << (i & 63);
+        }
+    }
+    QuantizedChunk {
+        words,
+        outliers: BitVec::from_raw(bits, n),
+    }
+}
+
+/// Seed ABS dequantizer (fresh `Vec` per call).
+pub fn dequantize_abs(chunk: &QuantizedChunk, p: AbsParams) -> Vec<f32> {
+    chunk
+        .words
+        .iter()
+        .enumerate()
+        .map(|(i, &w)| {
+            if chunk.outliers.get(i) {
+                f32::from_bits(w)
+            } else {
+                unzigzag(w) as f32 * p.eb2
+            }
+        })
+        .collect()
+}
+
+/// Seed REL quantizer (per-element loop, direct u64 bitmap packing).
+pub fn quantize_rel(
+    x: &[f32],
+    p: RelParams,
+    variant: FnVariant,
+    protection: Protection,
+) -> QuantizedChunk {
+    let n = x.len();
+    let mut words = Vec::with_capacity(n);
+    let mut bits = vec![0u64; n.div_ceil(64)];
+    let protected = protection == Protection::Protected;
+    let maxbin = MAXBIN_REL as f32;
+    for (i, &v) in x.iter().enumerate() {
+        let sign = (v < 0.0) as i32;
+        let ax = v.abs();
+        let finite = ax < f32::INFINITY;
+        let big_enough = ax >= REL_MIN_MAG;
+        let lg = match variant {
+            FnVariant::Approx => log2approxf(ax),
+            FnVariant::Native => ax.log2(),
+        };
+        let binf = (lg * p.inv_l2eb).round_ties_even();
+        let in_range = binf < maxbin && binf > -maxbin;
+        let usable = in_range && finite && big_enough;
+        let binc = if usable { binf } else { 0.0 };
+        let bin = binc as i32;
+        let recon = match variant {
+            FnVariant::Approx => pow2approx_from_bins(bin, p.l2eb),
+            FnVariant::Native => (binc * p.l2eb).exp2(),
+        };
+        let quant = if protected {
+            let err = ((ax as f64) - (recon as f64)).abs();
+            usable && err <= (p.eb as f64) * (ax as f64)
+        } else {
+            usable
+        };
+        if quant {
+            words.push(((zigzag(bin) << 1) | sign) as u32);
+        } else {
+            words.push(v.to_bits());
+            bits[i >> 6] |= 1u64 << (i & 63);
+        }
+    }
+    QuantizedChunk {
+        words,
+        outliers: BitVec::from_raw(bits, n),
+    }
+}
+
+/// Seed REL dequantizer.
+pub fn dequantize_rel(chunk: &QuantizedChunk, p: RelParams, variant: FnVariant) -> Vec<f32> {
+    let mut out = Vec::with_capacity(chunk.words.len());
+    for (i, &w) in chunk.words.iter().enumerate() {
+        if chunk.outliers.get(i) {
+            out.push(f32::from_bits(w));
+        } else {
+            let sign = (w & 1) != 0;
+            let bin = unzigzag(w >> 1);
+            let mag = match variant {
+                FnVariant::Approx => pow2approx_from_bins(bin, p.l2eb),
+                FnVariant::Native => (bin as f32 * p.l2eb).exp2(),
+            };
+            out.push(if sign { -mag } else { mag });
+        }
+    }
+    out
+}
+
+// ---------------------------------------------------------------------
+// Codec stages (seed per-stage Vec passes)
+// ---------------------------------------------------------------------
+
+/// Naive zigzag delta (copying; the production stage is in-place).
+pub fn delta_encode(words: &[u32]) -> Vec<u32> {
+    let mut out = Vec::with_capacity(words.len());
+    let mut prev = 0u32;
+    for &cur in words {
+        let d = cur.wrapping_sub(prev) as i32;
+        out.push(((d << 1) ^ (d >> 31)) as u32);
+        prev = cur;
+    }
+    out
+}
+
+/// Naive bit-plane shuffle: bit-by-bit transpose (out[j] bit i =
+/// words[i] bit j within each 32-word block; zero-padded).
+pub fn bitshuffle_encode(words: &[u32]) -> Vec<u32> {
+    let nblocks = words.len().div_ceil(32);
+    let mut out = Vec::with_capacity(nblocks * 32);
+    for b in 0..nblocks {
+        for j in 0..32usize {
+            let mut w = 0u32;
+            for i in 0..32usize {
+                let idx = b * 32 + i;
+                let bit = if idx < words.len() {
+                    (words[idx] >> j) & 1
+                } else {
+                    0
+                };
+                w |= bit << i;
+            }
+            out.push(w);
+        }
+    }
+    out
+}
+
+/// Naive zero-run-length encoding (per-byte scan, same format).
+pub fn rle_encode(data: &[u8]) -> Vec<u8> {
+    fn push_varint(out: &mut Vec<u8>, mut v: u64) {
+        loop {
+            let b = (v & 0x7F) as u8;
+            v >>= 7;
+            if v == 0 {
+                out.push(b);
+                break;
+            }
+            out.push(b | 0x80);
+        }
+    }
+    let mut out = Vec::new();
+    let mut i = 0;
+    while i < data.len() {
+        if data[i] == 0 {
+            let start = i;
+            while i < data.len() && data[i] == 0 {
+                i += 1;
+            }
+            out.push(0);
+            push_varint(&mut out, (i - start) as u64);
+        } else {
+            out.push(data[i]);
+            i += 1;
+        }
+    }
+    out
+}
+
+const HUFF_MAX_CODE_LEN: u32 = 12;
+const HUFF_HEADER_LEN: usize = 1 + 256 + 8;
+
+/// Seed Huffman code-length builder: `BinaryHeap` of (freq, node id),
+/// internal ids 256+, recursive-stack depth walk. The flat two-queue
+/// builder must reproduce these lengths exactly.
+pub fn huffman_code_lengths_heap(freqs: &[u64; 256]) -> [u8; 256] {
+    let mut heap: BinaryHeap<Reverse<(u64, usize)>> = BinaryHeap::new();
+    let mut children: Vec<(usize, usize)> = Vec::new();
+    let mut active = 0usize;
+    for (sym, &fr) in freqs.iter().enumerate() {
+        if fr > 0 {
+            heap.push(Reverse((fr, sym)));
+            active += 1;
+        }
+    }
+    let mut lens = [0u8; 256];
+    match active {
+        0 => return lens,
+        1 => {
+            let sym = heap.pop().unwrap().0 .1;
+            lens[sym] = 1;
+            return lens;
+        }
+        _ => {}
+    }
+    while heap.len() >= 2 {
+        let Reverse((fa, a)) = heap.pop().unwrap();
+        let Reverse((fb, b)) = heap.pop().unwrap();
+        let id = 256 + children.len();
+        children.push((a, b));
+        heap.push(Reverse((fa + fb, id)));
+    }
+    let root = heap.pop().unwrap().0 .1;
+    let mut stack = vec![(root, 0u8)];
+    while let Some((n, d)) = stack.pop() {
+        if n < 256 {
+            lens[n] = d;
+        } else {
+            let (l, r) = children[n - 256];
+            stack.push((l, d + 1));
+            stack.push((r, d + 1));
+        }
+    }
+    lens
+}
+
+/// Seed Huffman encoder: heap-built lengths with damping, canonical
+/// codes via a sorted `Vec`, per-symbol 32-bit-flush bit writer.
+pub fn huffman_encode(data: &[u8]) -> Vec<u8> {
+    let mut freqs = [0u64; 256];
+    for &b in data {
+        freqs[b as usize] += 1;
+    }
+    let mut f = freqs;
+    let lens = loop {
+        let lens = huffman_code_lengths_heap(&f);
+        if lens.iter().all(|&l| (l as u32) <= HUFF_MAX_CODE_LEN) {
+            break lens;
+        }
+        for x in f.iter_mut() {
+            if *x > 0 {
+                *x = *x / 2 + 1;
+            }
+        }
+    };
+    let coded_bits: u64 = freqs
+        .iter()
+        .zip(&lens)
+        .map(|(&fr, &l)| fr * l as u64)
+        .sum();
+    if coded_bits / 8 + (HUFF_HEADER_LEN as u64) >= data.len() as u64 + 1 {
+        let mut out = Vec::with_capacity(data.len() + 1);
+        out.push(1); // stored mode
+        out.extend_from_slice(data);
+        return out;
+    }
+    // Canonical codes: shorter first, ties by symbol value.
+    let mut symbols: Vec<usize> = (0..256).filter(|&s| lens[s] > 0).collect();
+    symbols.sort_by_key(|&s| (lens[s], s));
+    let mut codes = [0u32; 256];
+    let mut code = 0u32;
+    let mut prev_len = 0u8;
+    for &s in &symbols {
+        let l = lens[s];
+        code <<= (l - prev_len) as u32;
+        codes[s] = code;
+        code += 1;
+        prev_len = l;
+    }
+    let mut out = Vec::new();
+    out.push(0); // huffman mode
+    out.extend_from_slice(&lens);
+    out.extend_from_slice(&(data.len() as u64).to_le_bytes());
+    let mut acc = 0u64;
+    let mut nbits = 0u32;
+    for &b in data {
+        let l = lens[b as usize] as u32;
+        acc = (acc << l) | codes[b as usize] as u64;
+        nbits += l;
+        if nbits >= 32 {
+            nbits -= 32;
+            out.extend_from_slice(&u32::to_be_bytes((acc >> nbits) as u32));
+        }
+    }
+    while nbits >= 8 {
+        nbits -= 8;
+        out.push((acc >> nbits) as u8);
+    }
+    if nbits > 0 {
+        out.push(((acc << (8 - nbits)) & 0xFF) as u8);
+    }
+    out
+}
+
+/// Seed `Pipeline::encode`: one fresh `Vec` per stage, naive stages.
+pub fn encode_pipeline(p: &Pipeline, words: &[u32]) -> Vec<u8> {
+    let mut w: Vec<u32> = words.to_vec();
+    let mut byte_phase: Option<Vec<u8>> = None;
+    for &s in p.stages() {
+        match s {
+            Stage::Delta => w = delta_encode(&w),
+            Stage::BitShuffle => w = bitshuffle_encode(&w),
+            Stage::Rle0 | Stage::Huffman => {
+                let bytes = byte_phase
+                    .take()
+                    .unwrap_or_else(|| crate::codec::words_to_bytes(&w));
+                byte_phase = Some(match s {
+                    Stage::Rle0 => rle_encode(&bytes),
+                    Stage::Huffman => huffman_encode(&bytes),
+                    _ => unreachable!(),
+                });
+            }
+        }
+    }
+    match byte_phase {
+        Some(b) => b,
+        None => crate::codec::words_to_bytes(&w),
+    }
+}
+
+// ---------------------------------------------------------------------
+// Full compressor (seed engine assembly, single-threaded)
+// ---------------------------------------------------------------------
+
+/// Naive single-threaded mirror of `coordinator::engine::compress`:
+/// chunk, quantize (per-element), encode (per-stage Vecs), assemble.
+/// Containers must be byte-identical to the engine's.
+pub fn compress(cfg: &EngineConfig, data: &[f32]) -> Result<Container, String> {
+    if cfg.device != Device::Native {
+        return Err("reference::compress supports the native device only".into());
+    }
+    cfg.bound.validate()?;
+    if cfg.chunk_size == 0 {
+        return Err("chunk_size must be positive".into());
+    }
+    let qc = QuantizerConfig::resolve(cfg.bound, cfg.variant, cfg.protection, data);
+    let mut chunks = Vec::new();
+    for chunk in data.chunks(cfg.chunk_size) {
+        let q = match qc {
+            QuantizerConfig::Abs(p, prot) => quantize_abs(chunk, p, prot),
+            QuantizerConfig::Rel(p, v, prot) => quantize_rel(chunk, p, v, prot),
+        };
+        chunks.push(ChunkRecord {
+            n_values: chunk.len() as u32,
+            outlier_bytes: rle_encode(&q.outliers.to_bytes()),
+            payload: encode_pipeline(&cfg.pipeline, &q.words),
+        });
+    }
+    Ok(Container {
+        header: Header {
+            bound: cfg.bound,
+            effective_epsilon: qc.effective_epsilon(),
+            variant: cfg.variant,
+            protection: cfg.protection,
+            n_values: data.len() as u64,
+            chunk_size: cfg.chunk_size as u32,
+            stages: cfg.pipeline.stages().to_vec(),
+            n_chunks: chunks.len() as u32,
+        },
+        chunks,
+    })
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn naive_stages_agree_with_production_stages() {
+        let words: Vec<u32> = (0..1000u32).map(|i| i.wrapping_mul(2654435761) >> 20).collect();
+        let mut d = words.clone();
+        crate::codec::delta::encode(&mut d);
+        assert_eq!(delta_encode(&words), d);
+        assert_eq!(bitshuffle_encode(&words), crate::codec::bitshuffle::encode(&words));
+        let bytes = crate::codec::words_to_bytes(&words);
+        assert_eq!(rle_encode(&bytes), crate::codec::rle::encode(&bytes));
+        assert_eq!(huffman_encode(&bytes), crate::codec::huffman::encode(&bytes));
+        let p = Pipeline::default_chain();
+        assert_eq!(encode_pipeline(&p, &words), p.encode(&words));
+    }
+
+    #[test]
+    fn reference_compress_is_deterministic() {
+        let x: Vec<f32> = (0..5000).map(|i| (i as f32 * 0.01).sin()).collect();
+        let mut cfg = EngineConfig::native(crate::types::ErrorBound::Abs(1e-3));
+        cfg.chunk_size = 777;
+        let a = compress(&cfg, &x).unwrap().to_bytes();
+        let b = compress(&cfg, &x).unwrap().to_bytes();
+        assert_eq!(a, b);
+    }
+}

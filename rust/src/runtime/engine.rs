@@ -11,14 +11,33 @@
 //!
 //! NOT thread-safe (PjRtClient is Rc-based) — see [`super::service`]
 //! for the multi-threaded handle.
+//!
+//! # Feature gating
+//!
+//! The real engine needs the `xla` crate (xla-rs bindings over the
+//! native `libxla_extension`), which is not fetchable from crates.io.
+//! It is therefore compiled only with `--features pjrt` after vendoring
+//! that crate (see the note in `rust/Cargo.toml`). Default builds get a
+//! stub whose `load` fails with a clear message — every native-device
+//! path works unchanged, and callers already handle a failing load
+//! (missing artifacts produce the same error shape).
 
-use std::collections::HashMap;
 use std::path::{Path, PathBuf};
 
-use anyhow::{bail, Context, Result};
+use anyhow::{bail, Result};
 
+use crate::types::QuantizedChunk;
+
+#[cfg(feature = "pjrt")]
+use std::collections::HashMap;
+
+#[cfg(feature = "pjrt")]
+use anyhow::Context;
+
+#[cfg(feature = "pjrt")]
 use crate::bitvec::BitVec;
-use crate::types::{QuantizedChunk, CHUNK_COLS, CHUNK_ELEMS, CHUNK_ROWS};
+#[cfg(feature = "pjrt")]
+use crate::types::{CHUNK_COLS, CHUNK_ELEMS, CHUNK_ROWS};
 
 /// All artifact names produced by `python -m compile.aot`.
 pub const ARTIFACT_NAMES: [&str; 7] = [
@@ -32,12 +51,14 @@ pub const ARTIFACT_NAMES: [&str; 7] = [
 ];
 
 /// Owns the PJRT client and the compiled executables.
+#[cfg(feature = "pjrt")]
 pub struct PjrtEngine {
     client: xla::PjRtClient,
     executables: HashMap<&'static str, xla::PjRtLoadedExecutable>,
     artifact_dir: PathBuf,
 }
 
+#[cfg(feature = "pjrt")]
 impl PjrtEngine {
     /// Create a CPU PJRT client and compile every artifact found in
     /// `artifact_dir`. Fails if any expected artifact is missing.
@@ -130,5 +151,50 @@ impl PjrtEngine {
             .to_literal_sync()?;
         let out = result.to_tuple1()?;
         Ok(out.to_vec()?)
+    }
+}
+
+/// Stub engine for builds without the `pjrt` feature: `load` always
+/// fails (same error shape as missing artifacts), so the service /
+/// CLI / benches degrade gracefully to the native device.
+#[cfg(not(feature = "pjrt"))]
+pub struct PjrtEngine {
+    artifact_dir: PathBuf,
+}
+
+#[cfg(not(feature = "pjrt"))]
+impl PjrtEngine {
+    pub fn load(artifact_dir: &Path) -> Result<PjrtEngine> {
+        let _ = artifact_dir;
+        bail!(
+            "this build has no PJRT runtime (compile with --features pjrt \
+             and a vendored `xla` crate); the native device is unaffected"
+        )
+    }
+
+    pub fn platform(&self) -> String {
+        "pjrt-unavailable".into()
+    }
+
+    pub fn artifact_dir(&self) -> &Path {
+        &self.artifact_dir
+    }
+
+    pub fn quantize_chunk(
+        &self,
+        _artifact: &str,
+        _x: &[f32],
+        _scalars: [f32; 4],
+    ) -> Result<QuantizedChunk> {
+        bail!("PJRT runtime not built")
+    }
+
+    pub fn dequantize_chunk(
+        &self,
+        _artifact: &str,
+        _chunk: &QuantizedChunk,
+        _scalars: [f32; 4],
+    ) -> Result<Vec<f32>> {
+        bail!("PJRT runtime not built")
     }
 }

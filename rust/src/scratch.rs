@@ -1,0 +1,108 @@
+//! Per-worker scratch arenas for the allocation-free hot path.
+//!
+//! The seed pipeline allocated fresh `Vec`s at every stage of every
+//! chunk (quantize -> delta -> bitshuffle -> rle0 -> huffman, plus the
+//! outlier bitmap and the decode mirror). SZx (arXiv 2201.13020) and
+//! FZ-GPU (arXiv 2304.12557) both show that error-bounded compressors
+//! live or die on exactly this kind of memory-traffic discipline, so
+//! every intermediate buffer now lives in a [`Scratch`] arena that a
+//! worker owns for its whole work-stealing loop.
+//!
+//! # Ownership rules
+//!
+//! * **One `Scratch` per worker thread.** Arenas are never shared; the
+//!   coordinator creates one inside each worker closure and threads it
+//!   through every chunk that worker processes. No locking, no aliasing.
+//! * **Buffers only grow.** Every `*_into` API clears its output before
+//!   writing, so capacity reaches the high-water mark of the largest
+//!   chunk and then no further heap traffic occurs (steady state:
+//!   zero allocations per chunk; only the owned bytes of the produced
+//!   `ChunkRecord` / reconstruction are freshly allocated, because they
+//!   outlive the worker).
+//! * **The codec owns `codec`, the quantizer owns the rest.** The
+//!   [`CodecScratch`] sub-arena is passed to
+//!   [`crate::codec::Pipeline::encode_into`] /
+//!   [`crate::codec::Pipeline::decode_into`] while the caller retains
+//!   the sibling fields (`qwords`, `obits`, ...), which keeps the
+//!   borrows disjoint at field granularity.
+//! * **`decode_into` leaves its result in `codec.words_a`.** That is
+//!   part of the API contract (documented there too); it avoids one
+//!   full memcpy per decoded chunk.
+
+/// Ping-pong buffers for the lossless stage chain. A chunk's stages
+/// alternate between `words_a`/`words_b` (word phase) and
+/// `bytes_a`/`bytes_b` (byte phase) instead of allocating five vectors.
+#[derive(Debug, Default)]
+pub struct CodecScratch {
+    /// Word-phase ping buffer. After `Pipeline::decode_into` this holds
+    /// the decoded word stream.
+    pub words_a: Vec<u32>,
+    /// Word-phase pong buffer.
+    pub words_b: Vec<u32>,
+    /// Byte-phase ping buffer.
+    pub bytes_a: Vec<u8>,
+    /// Byte-phase pong buffer.
+    pub bytes_b: Vec<u8>,
+}
+
+impl CodecScratch {
+    pub fn new() -> CodecScratch {
+        CodecScratch::default()
+    }
+
+    /// Bytes of capacity currently retained (observability / tests).
+    pub fn retained_bytes(&self) -> usize {
+        self.words_a.capacity() * 4
+            + self.words_b.capacity() * 4
+            + self.bytes_a.capacity()
+            + self.bytes_b.capacity()
+    }
+}
+
+/// The full per-worker arena: codec ping-pong buffers plus the
+/// quantizer-side buffers shared by the encode and decode paths.
+#[derive(Debug, Default)]
+pub struct Scratch {
+    /// Lossless-stage ping-pong buffers (see [`CodecScratch`]).
+    pub codec: CodecScratch,
+    /// Quantized word stream (encode: quantizer output fed to the
+    /// pipeline).
+    pub qwords: Vec<u32>,
+    /// Outlier bitmap as packed u64 words (same layout as
+    /// [`crate::bitvec::BitVec`]), used on both encode and decode.
+    pub obits: Vec<u64>,
+    /// Outlier bitmap serialized to bytes (encode: pre-RLE; decode:
+    /// post-RLE).
+    pub bitmap: Vec<u8>,
+    /// Decode-side reconstruction buffer.
+    pub values: Vec<f32>,
+}
+
+impl Scratch {
+    pub fn new() -> Scratch {
+        Scratch::default()
+    }
+
+    /// Bytes of capacity currently retained (observability / tests).
+    pub fn retained_bytes(&self) -> usize {
+        self.codec.retained_bytes()
+            + self.qwords.capacity() * 4
+            + self.obits.capacity() * 8
+            + self.bitmap.capacity()
+            + self.values.capacity() * 4
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn starts_empty_and_reports_capacity() {
+        let s = Scratch::new();
+        assert_eq!(s.retained_bytes(), 0);
+        let mut s = Scratch::new();
+        s.qwords.reserve(100);
+        assert!(s.retained_bytes() >= 400);
+    }
+}

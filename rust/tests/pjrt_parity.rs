@@ -3,8 +3,11 @@
 //! CPU and GPU) must produce bit-for-bit identical compressed words,
 //! outlier maps and reconstructions for the parity-safe variants.
 //!
-//! Requires `make artifacts`; tests panic with a clear message if the
-//! artifacts are missing.
+//! Requires `make artifacts` AND a build with `--features pjrt` (the
+//! whole file is compiled out otherwise — the stub runtime could never
+//! pass); tests panic with a clear message if the artifacts are
+//! missing.
+#![cfg(feature = "pjrt")]
 
 use lc::quantizer::{abs, rel};
 use lc::runtime::{default_artifact_dir, PjrtEngine};

@@ -226,6 +226,48 @@ fn prop_quantize_shape_invariants() {
     }
 }
 
+/// PROPERTY: the scratch-arena engine produces containers BYTE-
+/// IDENTICAL to the retained naive reference path (`lc::reference` —
+/// the seed's per-element quantizers, per-stage Vec codec, heap-built
+/// Huffman) across PRNG suites, every quantizer variant, and both
+/// protection modes. This pins the blocked kernels, the ping-pong
+/// codec, and the flat-array Huffman builder to the seed's exact
+/// output.
+#[test]
+fn prop_scratch_engine_matches_reference_containers() {
+    use lc::data::Suite;
+    let suites = [Suite::Cesm, Suite::Hacc, Suite::Nyx];
+    let bounds = [
+        ErrorBound::Abs(1e-3),
+        ErrorBound::Rel(1e-3),
+        ErrorBound::Noa(1e-3),
+    ];
+    for (si, &suite) in suites.iter().enumerate() {
+        let x = suite.generate(si, 40_000 + si * 1111);
+        for bound in bounds {
+            for protection in [
+                lc::types::Protection::Protected,
+                lc::types::Protection::Unprotected,
+            ] {
+                for variant in [FnVariant::Approx, FnVariant::Native] {
+                    let mut cfg = EngineConfig::native(bound);
+                    cfg.protection = protection;
+                    cfg.variant = variant;
+                    cfg.chunk_size = 7777; // force multiple chunks + a short tail
+                    cfg.workers = 3;
+                    let (engine_c, _) = compress(&cfg, &x).unwrap();
+                    let reference_c = lc::reference::compress(&cfg, &x).unwrap();
+                    assert_eq!(
+                        engine_c.to_bytes(),
+                        reference_c.to_bytes(),
+                        "{suite:?} {bound:?} {protection:?} {variant:?}"
+                    );
+                }
+            }
+        }
+    }
+}
+
 /// PROPERTY: NOA with range R equals ABS with eps*R (definition 2.1.3).
 #[test]
 fn prop_noa_equals_scaled_abs() {
