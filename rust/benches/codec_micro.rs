@@ -13,11 +13,11 @@
 
 use lc::bench_util::{measure, update_bench_json, Table};
 use lc::codec::{bitshuffle, delta, huffman, rle, CodecScratch, Pipeline, Stage};
-use lc::coordinator::{encode_chunk_record, EngineConfig};
+use lc::coordinator::{decode_chunk_record_into, encode_chunk_record, EngineConfig};
 use lc::data::Suite;
 use lc::quantizer::QuantizerConfig;
 use lc::scratch::Scratch;
-use lc::types::{ErrorBound, CHUNK_ELEMS};
+use lc::types::{ErrorBound, QuantizedChunk, CHUNK_ELEMS};
 
 fn quantized_words(suite: Suite, n: usize) -> Vec<u32> {
     let x = suite.generate(0, n);
@@ -207,6 +207,43 @@ fn main() {
     });
     push(&mut entries, "full_chain_enc", m_before.eps(n), m_after.eps(n));
 
+    // ---- decode side: allocating wrappers + per-chunk decode-table
+    // rebuild (the pre-overhaul behavior) vs the cached-table scratch
+    // path.
+    let m_before = measure(1, reps, || {
+        std::hint::black_box(bitshuffle::decode(&shuf, n).unwrap().len());
+    });
+    let mut unshuf = Vec::new();
+    let m_after = measure(1, reps, || {
+        bitshuffle::decode_into(&shuf, n, &mut unshuf).unwrap();
+        std::hint::black_box(unshuf.len());
+    });
+    push(&mut entries, "bitshuffle_dec", m_before.eps(n), m_after.eps(n));
+
+    let huffed2 = huffman::encode(&rled);
+    let m_before = measure(1, reps, || {
+        // Rebuilds (and allocates) the 4096-entry table every call.
+        std::hint::black_box(huffman::decode(&huffed2, rled.len()).unwrap().len());
+    });
+    let mut cache = huffman::DecodeCache::new();
+    let mut dehuffed = Vec::new();
+    let m_after = measure(1, reps, || {
+        huffman::decode_into_cached(&huffed2, rled.len(), &mut cache, &mut dehuffed).unwrap();
+        std::hint::black_box(dehuffed.len());
+    });
+    push(&mut entries, "huffman_dec", m_before.eps(n), m_after.eps(n));
+
+    let chain_enc = p.encode(&words);
+    let m_before = measure(1, reps, || {
+        // Fresh scratch + table per call: the seed decode shape.
+        std::hint::black_box(p.decode(&chain_enc, n).unwrap().len());
+    });
+    let m_after = measure(1, reps, || {
+        p.decode_into(&chain_enc, n, &mut cs).unwrap();
+        std::hint::black_box(cs.words_a.len());
+    });
+    push(&mut entries, "full_chain_dec", m_before.eps(n), m_after.eps(n));
+
     if let Err(e) = update_bench_json(&json_path, "codec", &entries) {
         eprintln!("failed to write {json_path}: {e}");
     }
@@ -258,6 +295,62 @@ fn main() {
         m_after.eps(n) / m_before.eps(n).max(1.0)
     );
     if let Err(e) = update_bench_json(&json_path, "hotpath", &hot) {
+        eprintln!("failed to write {json_path}: {e}");
+    }
+
+    // ---- hotpath.decode: full container decode, seed shape vs the
+    // scratch path — per-chunk allocating decode + fresh decode table
+    // ("before") against the cached-table, preallocated-output decode
+    // ("after", the engine/stream workers' loop). The acceptance metric
+    // for the decode-side overhaul.
+    let (container, _) = lc::coordinator::compress(&cfg, &x).unwrap();
+    let pipeline = container.pipeline().unwrap();
+    let h = &container.header;
+    let qc_dec = QuantizerConfig::resolve(
+        ErrorBound::Abs(h.effective_epsilon),
+        h.variant,
+        h.protection,
+        &[],
+    );
+    let m_before = measure(1, reps, || {
+        let mut total = 0usize;
+        for rec in &container.chunks {
+            // The seed per-chunk decode path: allocating pipeline
+            // decode (rebuilds the Huffman table), allocating bitmap
+            // + dequantize.
+            let (words, outliers) = lc::container::decode_chunk(rec, &pipeline).unwrap();
+            let q = QuantizedChunk { words, outliers };
+            total += qc_dec.dequantize_native(&q).len();
+        }
+        std::hint::black_box(total);
+    });
+    let mut scratch = Scratch::new();
+    let mut out = vec![0f32; CHUNK_ELEMS];
+    let m_after = measure(1, reps, || {
+        let mut total = 0usize;
+        for rec in &container.chunks {
+            let nv = rec.n_values as usize;
+            decode_chunk_record_into(&cfg, &qc_dec, &pipeline, rec, &mut scratch, &mut out[..nv])
+                .unwrap();
+            total += nv;
+        }
+        std::hint::black_box(total);
+    });
+    let hot_dec = vec![
+        ("decode_before_eps".to_string(), m_before.eps(n)),
+        ("decode_after_eps".to_string(), m_after.eps(n)),
+        (
+            "decode_speedup".to_string(),
+            m_after.eps(n) / m_before.eps(n).max(1.0),
+        ),
+    ];
+    println!(
+        "json hotpath decode: {:.0} -> {:.0} elem/s ({:.2}x)",
+        m_before.eps(n),
+        m_after.eps(n),
+        m_after.eps(n) / m_before.eps(n).max(1.0)
+    );
+    if let Err(e) = update_bench_json(&json_path, "hotpath", &hot_dec) {
         eprintln!("failed to write {json_path}: {e}");
     }
 }

@@ -23,8 +23,9 @@
 //! a time.
 
 // 12 bits keeps a single-level 4096-entry decode table (the decode hot
-// path is one lookup per symbol); the ratio cost vs deeper trees is
-// <1% on the evaluation suites (measured in the perf pass).
+// path is one lookup per one-or-two symbols — see [`DecodeCache`]); the
+// ratio cost vs deeper trees is <1% on the evaluation suites (measured
+// in the perf pass).
 const MAX_CODE_LEN: u32 = 12;
 const HEADER_LEN: usize = 1 + 256 + 8;
 const MODE_HUFFMAN: u8 = 0;
@@ -235,15 +236,81 @@ pub fn encode(data: &[u8]) -> Vec<u8> {
     out
 }
 
-/// Flat decode table: every MAX_CODE_LEN-bit window maps directly to
-/// (symbol, code length) — one lookup per decoded symbol.
-struct DecodeTable {
-    /// entry = (symbol << 8) | len; len == 0 marks an invalid code.
-    entries: Vec<u16>,
+/// Cached multi-symbol decode table.
+///
+/// Every MAX_CODE_LEN-bit window maps to ONE OR TWO decoded symbols:
+/// when the first code leaves enough window bits for a complete second
+/// code, both are fused into one entry, so the hot loop emits up to two
+/// bytes per table lookup. Entry layout (u32, 0 = invalid window):
+///
+/// ```text
+/// bits  0..8   total bits consumed (len0, or len0+len1; <= MAX_CODE_LEN)
+/// bits  8..16  len0 (first symbol's code length)
+/// bits 16..24  sym0
+/// bits 24..32  sym1 (meaningful iff total != len0)
+/// ```
+///
+/// The table is keyed by the 256-byte `lens` header: repeated chunks
+/// with identical histograms (the common steady-state case — one
+/// quantizer, one suite) hit the cache and pay zero rebuild cost and
+/// zero allocations. A 64-bit FNV-1a hash rejects most mismatches in
+/// one compare; a full `lens` compare confirms a hit, so hash
+/// collisions can never decode with the wrong table.
+#[derive(Debug)]
+pub struct DecodeCache {
+    lens: [u8; 256],
+    hash: u64,
+    populated: bool,
+    /// Does the cached table contain any symbol at all?
+    any: bool,
+    entries: Vec<u32>,
 }
 
-impl DecodeTable {
-    fn build(lens: &[u8; 256]) -> Result<DecodeTable, String> {
+impl Default for DecodeCache {
+    fn default() -> Self {
+        DecodeCache {
+            lens: [0; 256],
+            hash: 0,
+            populated: false,
+            any: false,
+            entries: Vec::new(),
+        }
+    }
+}
+
+fn fnv1a(data: &[u8]) -> u64 {
+    let mut h = 0xcbf2_9ce4_8422_2325u64;
+    for &b in data {
+        h ^= b as u64;
+        h = h.wrapping_mul(0x0000_0100_0000_01b3);
+    }
+    h
+}
+
+impl DecodeCache {
+    pub fn new() -> DecodeCache {
+        DecodeCache::default()
+    }
+
+    /// Bytes of capacity currently retained (observability / tests).
+    pub fn retained_bytes(&self) -> usize {
+        self.entries.capacity() * 4
+    }
+
+    /// Make the table match `lens`, rebuilding only on a miss.
+    /// Returns whether the table has any symbol.
+    fn prepare(&mut self, lens: &[u8; 256]) -> Result<bool, String> {
+        let hash = fnv1a(lens);
+        if self.populated && self.hash == hash && self.lens == *lens {
+            return Ok(self.any);
+        }
+        self.rebuild(lens)?;
+        self.hash = hash;
+        Ok(self.any)
+    }
+
+    fn rebuild(&mut self, lens: &[u8; 256]) -> Result<(), String> {
+        self.populated = false;
         // Kraft check guards corrupt headers (and symbols_by_length's
         // precondition that no length exceeds the limit).
         let mut kraft = 0u64;
@@ -261,29 +328,69 @@ impl DecodeTable {
         if any && kraft > 1u64 << MAX_CODE_LEN {
             return Err("over-subscribed Huffman table".into());
         }
+        // Pass 1: single-symbol canonical fill (clear + resize reuses
+        // the allocation after the first build).
+        self.entries.clear();
+        self.entries.resize(1 << MAX_CODE_LEN, 0);
         let (syms, n) = symbols_by_length(lens);
-        let mut entries = vec![0u16; 1 << MAX_CODE_LEN];
         let mut code = 0u32;
         let mut prev_len = 0u8;
         for &s in &syms[..n] {
-            let l = lens[s as usize];
-            code <<= (l - prev_len) as u32;
-            prev_len = l;
+            let l = lens[s as usize] as u32;
+            code <<= l - prev_len as u32;
+            prev_len = l as u8;
             // All windows starting with this code decode to s.
-            let shift = MAX_CODE_LEN - l as u32;
+            let shift = MAX_CODE_LEN - l;
             let base = (code as usize) << shift;
-            let entry = (s << 8) | l as u16;
-            entries[base..base + (1 << shift)].fill(entry);
+            let entry = l | (l << 8) | ((s as u32) << 16);
+            self.entries[base..base + (1 << shift)].fill(entry);
             code += 1;
         }
-        Ok(DecodeTable { entries })
+        // Pass 2: fuse a second symbol into windows with spare bits.
+        // Reading already-fused entries is safe because fusion preserves
+        // the len0/sym0 fields this pass consumes.
+        for w in 0..self.entries.len() {
+            let e = self.entries[w];
+            if e == 0 {
+                continue;
+            }
+            let len0 = (e >> 8) & 0xFF;
+            if len0 >= MAX_CODE_LEN {
+                continue;
+            }
+            // After consuming len0 bits, the remaining window bits are
+            // the low bits of w; shifting them up (zero-padded) indexes
+            // the single-symbol info of the following code.
+            let idx2 = (w << len0) & ((1usize << MAX_CODE_LEN) - 1);
+            let e2 = self.entries[idx2];
+            if e2 == 0 {
+                continue;
+            }
+            let len1 = (e2 >> 8) & 0xFF;
+            if len0 + len1 > MAX_CODE_LEN {
+                continue; // second code spills past the window
+            }
+            let sym1 = (e2 >> 16) & 0xFF;
+            self.entries[w] = (len0 + len1) | (len0 << 8) | (e & 0x00FF_0000) | (sym1 << 24);
+        }
+        self.lens = *lens;
+        self.any = any;
+        self.populated = true;
+        Ok(())
     }
 }
 
 /// Decode a payload produced by [`encode`] into a caller-provided
-/// buffer (cleared first). `expected_len` must match the embedded
-/// length (defense against container corruption).
-pub fn decode_into(payload: &[u8], expected_len: usize, out: &mut Vec<u8>) -> Result<(), String> {
+/// buffer (cleared first), reusing `cache`'s decode table when the
+/// payload's code lengths match the cached ones. `expected_len` must
+/// match the embedded length (defense against container corruption).
+/// Steady state (cache hit) performs zero heap allocations.
+pub fn decode_into_cached(
+    payload: &[u8],
+    expected_len: usize,
+    cache: &mut DecodeCache,
+    out: &mut Vec<u8>,
+) -> Result<(), String> {
     out.clear();
     match payload.first() {
         Some(&MODE_STORED) => {
@@ -309,41 +416,44 @@ pub fn decode_into(payload: &[u8], expected_len: usize, out: &mut Vec<u8>) -> Re
     if n != expected_len {
         return Err(format!("huffman length {n} != expected {expected_len}"));
     }
-    let table = DecodeTable::build(&lens)?;
+    let any = cache.prepare(&lens)?;
     if n == 0 {
         return Ok(());
     }
-    if table.entries.iter().all(|&e| e == 0) {
+    if !any {
         return Err("non-empty payload with empty table".into());
     }
+    let entries = cache.entries.as_slice();
     let bits = &payload[HEADER_LEN..];
     out.reserve(n);
     let mut acc = 0u64;
     let mut acc_len = 0u32;
     let mut pos = 0usize;
     const MASK: u64 = (1u64 << MAX_CODE_LEN) - 1;
-    // Fast loop: refill 32 bits, then decode up to 3 symbols per refill
-    // (3 x 12 bits <= the 36+ bits available after a refill).
+    // Fast loop: refill 32 bits, then emit multi-symbol entries (up to
+    // two bytes per lookup) while a full window is resident. The inner
+    // guard keeps `out` at most `n` long, so the loop never over-reads
+    // symbols from trailing padding.
     while pos + 4 <= bits.len() && out.len() + 4 <= n {
         let w = u32::from_be_bytes(bits[pos..pos + 4].try_into().unwrap());
         acc = (acc << 32) | w as u64;
         acc_len += 32;
         pos += 4;
-        while acc_len >= MAX_CODE_LEN {
-            let e = table.entries[((acc >> (acc_len - MAX_CODE_LEN)) & MASK) as usize];
-            let l = (e & 0xFF) as u32;
-            if l == 0 {
+        while acc_len >= MAX_CODE_LEN && out.len() + 2 <= n {
+            let e = entries[((acc >> (acc_len - MAX_CODE_LEN)) & MASK) as usize];
+            let total = e & 0xFF;
+            if total == 0 {
                 return Err("invalid huffman code".into());
             }
-            out.push((e >> 8) as u8);
-            acc_len -= l;
-            if out.len() == n {
-                return Ok(());
+            out.push((e >> 16) as u8);
+            if total != (e >> 8) & 0xFF {
+                out.push((e >> 24) as u8);
             }
+            acc_len -= total;
         }
         acc &= (1u64 << acc_len) - 1;
     }
-    // Careful tail loop.
+    // Careful tail loop: single-symbol decode via the len0/sym0 fields.
     while out.len() < n {
         if acc_len < MAX_CODE_LEN {
             if pos + 4 <= bits.len() {
@@ -366,30 +476,38 @@ pub fn decode_into(payload: &[u8], expected_len: usize, out: &mut Vec<u8>) -> Re
             } else {
                 // Trailing partial window: pad with zeros on the right.
                 acc <<= MAX_CODE_LEN - acc_len;
-                let idx = (acc & ((1u64 << MAX_CODE_LEN) - 1)) as usize;
+                let idx = (acc & MASK) as usize;
                 acc >>= MAX_CODE_LEN - acc_len;
-                let e = table.entries[idx];
-                let l = (e & 0xFF) as u32;
-                if l == 0 || l > acc_len {
+                let e = entries[idx];
+                let l = (e >> 8) & 0xFF;
+                if e == 0 || l > acc_len {
                     return Err("invalid huffman code at tail".into());
                 }
-                out.push((e >> 8) as u8);
+                out.push((e >> 16) as u8);
                 acc_len -= l;
                 acc &= (1u64 << acc_len).wrapping_sub(1);
                 continue;
             }
         }
-        let idx = ((acc >> (acc_len - MAX_CODE_LEN)) & ((1u64 << MAX_CODE_LEN) - 1)) as usize;
-        let e = table.entries[idx];
-        let l = (e & 0xFF) as u32;
-        if l == 0 {
+        let idx = ((acc >> (acc_len - MAX_CODE_LEN)) & MASK) as usize;
+        let e = entries[idx];
+        if e == 0 {
             return Err("invalid huffman code".into());
         }
-        out.push((e >> 8) as u8);
+        let l = (e >> 8) & 0xFF;
+        out.push((e >> 16) as u8);
         acc_len -= l;
         acc &= (1u64 << acc_len).wrapping_sub(1);
     }
     Ok(())
+}
+
+/// Decode a payload produced by [`encode`] into a caller-provided
+/// buffer (cleared first) with a transient decode table (compat
+/// wrapper over [`decode_into_cached`]).
+pub fn decode_into(payload: &[u8], expected_len: usize, out: &mut Vec<u8>) -> Result<(), String> {
+    let mut cache = DecodeCache::new();
+    decode_into_cached(payload, expected_len, &mut cache, out)
 }
 
 /// Decode a payload produced by [`encode`], returning a fresh buffer.
@@ -533,6 +651,55 @@ mod tests {
         }
         assert!(decode(&evil, data.len()).is_err());
         assert!(decode(&[9, 1, 2], 2).is_err()); // bad mode byte
+    }
+
+    #[test]
+    fn cached_decode_matches_fresh_table_across_histograms() {
+        // One cache across payloads with DIFFERENT lens arrays (forced
+        // rebuilds) and repeated ones (hits): output must always match
+        // the transient-table path, and a hit must not regrow capacity.
+        let mut cache = DecodeCache::new();
+        let mut out = Vec::new();
+        let payloads: Vec<Vec<u8>> = (0..6u64)
+            .map(|trial| {
+                let mut s = trial * 7 + 1;
+                let data: Vec<u8> = (0..20_000)
+                    .map(|_| {
+                        s ^= s << 13;
+                        s ^= s >> 7;
+                        s ^= s << 17;
+                        (s % (3 + trial * 9)) as u8 // varying alphabet size
+                    })
+                    .collect();
+                encode(&data)
+            })
+            .collect();
+        let lens: Vec<usize> = (0..6usize).map(|_| 20_000).collect();
+        for (enc, &n) in payloads.iter().zip(&lens) {
+            decode_into_cached(enc, n, &mut cache, &mut out).unwrap();
+            assert_eq!(out, decode(enc, n).unwrap());
+        }
+        // Steady state: same payload repeatedly must not regrow.
+        let cap = cache.retained_bytes();
+        for _ in 0..3 {
+            decode_into_cached(&payloads[0], lens[0], &mut cache, &mut out).unwrap();
+        }
+        assert_eq!(cache.retained_bytes(), cap, "cache hit must not reallocate");
+    }
+
+    #[test]
+    fn multi_symbol_entries_cover_short_codes() {
+        // A two-symbol alphabet yields 1-bit codes, so every window
+        // fuses two symbols — the multi-symbol fast path dominates.
+        let data: Vec<u8> = (0..50_001).map(|i| (i % 2) as u8).collect();
+        let enc = encode(&data);
+        assert_eq!(decode(&enc, data.len()).unwrap(), data);
+        // Odd-length + every odd n exercises the out-limit guards.
+        for n in [1usize, 2, 3, 17, 255, 4095] {
+            let d = &data[..n];
+            let e = encode(d);
+            assert_eq!(decode(&e, n).unwrap(), d, "n={n}");
+        }
     }
 
     #[test]

@@ -202,7 +202,10 @@ impl Pipeline {
                         if expected != usize::MAX && n != expected {
                             return Err(format!("huffman length {n} != expected {expected}"));
                         }
-                        huffman::decode_into(src, n, &mut s.bytes_b)?;
+                        // The scratch-cached decode table: zero rebuild
+                        // cost when this chunk's histogram matches the
+                        // previous one's.
+                        huffman::decode_into_cached(src, n, &mut s.huffman, &mut s.bytes_b)?;
                     }
                     _ => unreachable!(),
                 }

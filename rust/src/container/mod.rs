@@ -70,35 +70,133 @@ fn protection_tag(p: Protection) -> u8 {
     }
 }
 
-impl Container {
-    /// Serialize to bytes.
+/// Serialized length of a chunk frame header
+/// (`n_values | outlier_bytes | payload_bytes | crc32`, u32 each).
+pub const CHUNK_FRAME_HEADER_LEN: usize = 16;
+
+impl Header {
+    /// Serialize the header — everything that precedes the chunk
+    /// records, `n_chunks` included.
     pub fn to_bytes(&self) -> Vec<u8> {
-        let h = &self.header;
         let mut out = Vec::new();
         out.extend_from_slice(MAGIC);
         out.push(0); // flags, reserved
-        out.push(h.bound.kind_tag());
-        out.push(variant_tag(h.variant));
-        out.push(protection_tag(h.protection));
-        out.extend_from_slice(&h.bound.epsilon().to_le_bytes());
-        out.extend_from_slice(&h.effective_epsilon.to_le_bytes());
-        out.extend_from_slice(&h.n_values.to_le_bytes());
-        out.extend_from_slice(&h.chunk_size.to_le_bytes());
-        out.push(h.stages.len() as u8);
-        for s in &h.stages {
+        out.push(self.bound.kind_tag());
+        out.push(variant_tag(self.variant));
+        out.push(protection_tag(self.protection));
+        out.extend_from_slice(&self.bound.epsilon().to_le_bytes());
+        out.extend_from_slice(&self.effective_epsilon.to_le_bytes());
+        out.extend_from_slice(&self.n_values.to_le_bytes());
+        out.extend_from_slice(&self.chunk_size.to_le_bytes());
+        out.push(self.stages.len() as u8);
+        for s in &self.stages {
             out.push(s.tag());
         }
-        out.extend_from_slice(&(self.chunks.len() as u32).to_le_bytes());
+        out.extend_from_slice(&self.n_chunks.to_le_bytes());
+        out
+    }
+
+    /// Parse a header from the front of `data`; returns the header and
+    /// the byte count consumed. The fixed-size prefix spans
+    /// [`HEADER_FIXED_LEN`] bytes (through the stage count at offset
+    /// `HEADER_FIXED_LEN - 1`), followed by one byte per stage and the
+    /// 4-byte chunk count — the framing the streaming decoder reads
+    /// incrementally.
+    pub fn parse_prefix(data: &[u8]) -> Result<(Header, usize), String> {
+        let mut r = Reader { data, pos: 0 };
+        let h = parse_header(&mut r)?;
+        Ok((h, r.pos))
+    }
+}
+
+/// Bytes before the per-stage tags in a serialized header (magic
+/// through the stage count byte).
+pub const HEADER_FIXED_LEN: usize = 29;
+
+fn parse_header(r: &mut Reader) -> Result<Header, String> {
+    if r.take(4)? != MAGIC {
+        return Err("bad magic (not an LCZ1 file)".into());
+    }
+    let _flags = r.u8()?;
+    let eb_kind = r.u8()?;
+    let variant = match r.u8()? {
+        0 => FnVariant::Approx,
+        1 => FnVariant::Native,
+        t => return Err(format!("bad variant tag {t}")),
+    };
+    let protection = match r.u8()? {
+        0 => Protection::Protected,
+        1 => Protection::Unprotected,
+        t => return Err(format!("bad protection tag {t}")),
+    };
+    let epsilon = f32::from_le_bytes(r.take(4)?.try_into().unwrap());
+    let effective = f32::from_le_bytes(r.take(4)?.try_into().unwrap());
+    let bound =
+        ErrorBound::from_tag(eb_kind, epsilon).ok_or(format!("bad bound tag {eb_kind}"))?;
+    let n_values = u64::from_le_bytes(r.take(8)?.try_into().unwrap());
+    let chunk_size = r.u32()?;
+    if chunk_size == 0 {
+        return Err("zero chunk size".into());
+    }
+    let n_stages = r.u8()? as usize;
+    let mut stages = Vec::with_capacity(n_stages);
+    for _ in 0..n_stages {
+        let t = r.u8()?;
+        stages.push(Stage::from_tag(t).ok_or(format!("bad stage tag {t}"))?);
+    }
+    let n_chunks = r.u32()?;
+    Ok(Header {
+        bound,
+        effective_epsilon: effective,
+        variant,
+        protection,
+        n_values,
+        chunk_size,
+        stages,
+        n_chunks,
+    })
+}
+
+impl ChunkRecord {
+    /// CRC over the record's owned bytes — the integrity word stored in
+    /// the chunk frame.
+    pub fn crc32(&self) -> u32 {
+        let mut crc = Crc32::new();
+        crc.update(&self.outlier_bytes);
+        crc.update(&self.payload);
+        crc.finalize()
+    }
+
+    /// Append the chunk frame (header + bytes) to `out`.
+    pub fn write_to(&self, out: &mut Vec<u8>) {
+        out.extend_from_slice(&self.n_values.to_le_bytes());
+        out.extend_from_slice(&(self.outlier_bytes.len() as u32).to_le_bytes());
+        out.extend_from_slice(&(self.payload.len() as u32).to_le_bytes());
+        out.extend_from_slice(&self.crc32().to_le_bytes());
+        out.extend_from_slice(&self.outlier_bytes);
+        out.extend_from_slice(&self.payload);
+    }
+}
+
+/// Parse one chunk frame header into
+/// `(n_values, outlier_len, payload_len, crc32)`.
+pub fn parse_chunk_frame_header(b: &[u8; CHUNK_FRAME_HEADER_LEN]) -> (u32, u32, u32, u32) {
+    (
+        u32::from_le_bytes(b[0..4].try_into().unwrap()),
+        u32::from_le_bytes(b[4..8].try_into().unwrap()),
+        u32::from_le_bytes(b[8..12].try_into().unwrap()),
+        u32::from_le_bytes(b[12..16].try_into().unwrap()),
+    )
+}
+
+impl Container {
+    /// Serialize to bytes.
+    pub fn to_bytes(&self) -> Vec<u8> {
+        let mut header = self.header.clone();
+        header.n_chunks = self.chunks.len() as u32;
+        let mut out = header.to_bytes();
         for c in &self.chunks {
-            let mut crc = Crc32::new();
-            crc.update(&c.outlier_bytes);
-            crc.update(&c.payload);
-            out.extend_from_slice(&c.n_values.to_le_bytes());
-            out.extend_from_slice(&(c.outlier_bytes.len() as u32).to_le_bytes());
-            out.extend_from_slice(&(c.payload.len() as u32).to_le_bytes());
-            out.extend_from_slice(&crc.finalize().to_le_bytes());
-            out.extend_from_slice(&c.outlier_bytes);
-            out.extend_from_slice(&c.payload);
+            c.write_to(&mut out);
         }
         let file_crc = crc32(&out);
         out.extend_from_slice(&file_crc.to_le_bytes());
@@ -108,38 +206,12 @@ impl Container {
     /// Parse and fully validate a container.
     pub fn from_bytes(data: &[u8]) -> Result<Container, String> {
         let mut r = Reader { data, pos: 0 };
-        if r.take(4)? != MAGIC {
-            return Err("bad magic (not an LCZ1 file)".into());
-        }
-        let _flags = r.u8()?;
-        let eb_kind = r.u8()?;
-        let variant = match r.u8()? {
-            0 => FnVariant::Approx,
-            1 => FnVariant::Native,
-            t => return Err(format!("bad variant tag {t}")),
-        };
-        let protection = match r.u8()? {
-            0 => Protection::Protected,
-            1 => Protection::Unprotected,
-            t => return Err(format!("bad protection tag {t}")),
-        };
-        let epsilon = f32::from_le_bytes(r.take(4)?.try_into().unwrap());
-        let effective = f32::from_le_bytes(r.take(4)?.try_into().unwrap());
-        let bound =
-            ErrorBound::from_tag(eb_kind, epsilon).ok_or(format!("bad bound tag {eb_kind}"))?;
-        let n_values = u64::from_le_bytes(r.take(8)?.try_into().unwrap());
-        let chunk_size = r.u32()?;
-        if chunk_size == 0 {
-            return Err("zero chunk size".into());
-        }
-        let n_stages = r.u8()? as usize;
-        let mut stages = Vec::with_capacity(n_stages);
-        for _ in 0..n_stages {
-            let t = r.u8()?;
-            stages.push(Stage::from_tag(t).ok_or(format!("bad stage tag {t}"))?);
-        }
-        let n_chunks = r.u32()?;
-        let mut chunks = Vec::with_capacity(n_chunks as usize);
+        let header = parse_header(&mut r)?;
+        let n_chunks = header.n_chunks;
+        // Cap the pre-reservation by what the data could possibly hold
+        // (a corrupt header claiming 4G chunks must not OOM).
+        let plausible = (data.len() - r.pos) / CHUNK_FRAME_HEADER_LEN;
+        let mut chunks = Vec::with_capacity((n_chunks as usize).min(plausible));
         for i in 0..n_chunks {
             let n = r.u32()?;
             let ob = r.u32()? as usize;
@@ -168,22 +240,10 @@ impl Container {
             return Err("trailing garbage after container".into());
         }
         let total: u64 = chunks.iter().map(|c| c.n_values as u64).sum();
-        if total != n_values {
-            return Err(format!("chunk values {total} != header {n_values}"));
+        if total != header.n_values {
+            return Err(format!("chunk values {total} != header {}", header.n_values));
         }
-        Ok(Container {
-            header: Header {
-                bound,
-                effective_epsilon: effective,
-                variant,
-                protection,
-                n_values,
-                chunk_size,
-                stages,
-                n_chunks,
-            },
-            chunks,
-        })
+        Ok(Container { header, chunks })
     }
 
     /// Reconstruct the stage pipeline recorded in the header.

@@ -17,9 +17,10 @@
 //! steady-state loop performs **zero heap allocations per chunk**: only
 //! the produced [`ChunkRecord`]'s owned `payload`/`outlier_bytes` (the
 //! output itself, which outlives the worker) are freshly allocated.
-//! The decompress loop mirrors this: workers decode into their arena
-//! and memcpy into disjoint slices of one preallocated output buffer.
-//! See [`crate::scratch`] for the full ownership rules.
+//! The decompress loop mirrors this: workers decode through their
+//! arena (cached Huffman decode table included) straight into disjoint
+//! slices of one preallocated output buffer — no staging copy. See
+//! [`crate::scratch`] for the full ownership rules.
 
 use std::sync::atomic::{AtomicUsize, Ordering};
 use std::sync::Mutex;
@@ -185,17 +186,28 @@ pub fn encode_chunk_record(
     ))
 }
 
-/// Decode one chunk record into the worker's scratch arena: words land
-/// in `s.codec.words_a`, the outlier bitmap in `s.obits`, and the
-/// reconstruction in `s.values`.
-fn decode_chunk_into_scratch(
+/// Decode one chunk record through the worker's scratch arena, writing
+/// the reconstruction directly into `out` (which must have exactly
+/// `rec.n_values` slots). This is the single per-chunk decode path
+/// shared by the in-memory engine and the streaming decompressor;
+/// steady state it performs zero heap allocations — the Huffman decode
+/// table is cached in the scratch, every intermediate buffer is
+/// reused, and the output is caller-preallocated.
+pub fn decode_chunk_record_into(
     cfg: &EngineConfig,
     qc: &QuantizerConfig,
     pipeline: &Pipeline,
     rec: &ChunkRecord,
     s: &mut Scratch,
+    out: &mut [f32],
 ) -> Result<()> {
     let n = rec.n_values as usize;
+    if out.len() != n {
+        return Err(anyhow!(
+            "chunk decodes {n} values, output slot has {}",
+            out.len()
+        ));
+    }
     pipeline
         .decode_into(&rec.payload, n, &mut s.codec)
         .map_err(|e| anyhow!(e))?;
@@ -204,7 +216,7 @@ fn decode_chunk_into_scratch(
     crate::bitvec::bytes_to_bits_into(&s.bitmap, n, &mut s.obits).map_err(|e| anyhow!(e))?;
     match cfg.device {
         Device::Native => {
-            qc.dequantize_native_into(&s.codec.words_a, &s.obits, &mut s.values);
+            qc.dequantize_native_slice(&s.codec.words_a, &s.obits, out);
             Ok(())
         }
         Device::Pjrt => {
@@ -213,10 +225,26 @@ fn decode_chunk_into_scratch(
                 outliers: crate::bitvec::BitVec::from_raw(s.obits.clone(), n),
             };
             let y = dequantize_chunk(cfg, qc, &chunk)?;
-            s.values.clear();
-            s.values.extend_from_slice(&y);
+            out.copy_from_slice(&y);
             Ok(())
         }
+    }
+}
+
+/// Rebuild the decode-side quantizer configuration from a container
+/// header (NOA was resolved to an effective ABS epsilon at compression
+/// time). Shared by the in-memory and streaming decompressors.
+pub(crate) fn quantizer_from_header(h: &Header) -> QuantizerConfig {
+    match h.bound {
+        ErrorBound::Abs(_) | ErrorBound::Noa(_) => QuantizerConfig::Abs(
+            crate::quantizer::abs::AbsParams::new(h.effective_epsilon),
+            h.protection,
+        ),
+        ErrorBound::Rel(e) => QuantizerConfig::Rel(
+            crate::quantizer::rel::RelParams::new(e),
+            h.variant,
+            h.protection,
+        ),
     }
 }
 
@@ -264,14 +292,18 @@ pub fn compress(cfg: &EngineConfig, data: &[f32]) -> Result<(Container, RunStats
     std::thread::scope(|s| {
         for _ in 0..workers {
             s.spawn(|| {
-                // One arena per worker, reused for every chunk it steals.
+                // One arena per worker, reused for every chunk it
+                // steals — and a per-worker config clone so each PJRT
+                // handle owns its own reply channel (callers sharing
+                // one handle serialize on its reply lock).
+                let wcfg = cfg.clone();
                 let mut scratch = Scratch::new();
                 loop {
                     let i = cursor.fetch_add(1, Ordering::Relaxed);
                     if i >= n_chunks {
                         break;
                     }
-                    match encode_chunk_record(cfg, &qc, chunks[i], &mut scratch) {
+                    match encode_chunk_record(&wcfg, &qc, chunks[i], &mut scratch) {
                         Ok(rec_outliers) => {
                             records.lock().unwrap()[i] = Some(rec_outliers);
                         }
@@ -325,26 +357,14 @@ pub fn decompress(cfg: &EngineConfig, container: &Container) -> Result<(Vec<f32>
     cfg.validate()?;
     let t0 = Instant::now();
     let h = &container.header;
-    // Rebuild quantizer params from the header (NOA was resolved to an
-    // effective ABS epsilon at compression time).
-    let qc = match h.bound {
-        ErrorBound::Abs(_) | ErrorBound::Noa(_) => QuantizerConfig::Abs(
-            crate::quantizer::abs::AbsParams::new(h.effective_epsilon),
-            h.protection,
-        ),
-        ErrorBound::Rel(e) => QuantizerConfig::Rel(
-            crate::quantizer::rel::RelParams::new(e),
-            h.variant,
-            h.protection,
-        ),
-    };
+    let qc = quantizer_from_header(h);
     let pipeline = container.pipeline().map_err(|e| anyhow!(e))?;
     let n_chunks = container.chunks.len();
     if h.chunk_size == 0 {
         return Err(anyhow!("container has zero chunk size"));
     }
-    // Preallocate the full reconstruction once; workers decode into
-    // their scratch arena and memcpy into disjoint per-chunk slices
+    // Preallocate the full reconstruction once; workers decode through
+    // their scratch arena directly into disjoint per-chunk slices
     // (each behind its own uncontended Mutex), so the steady-state
     // decode loop allocates nothing per chunk.
     let mut out = vec![0f32; h.n_values as usize];
@@ -367,6 +387,10 @@ pub fn decompress(cfg: &EngineConfig, container: &Container) -> Result<(Vec<f32>
     std::thread::scope(|s| {
         for _ in 0..workers {
             s.spawn(|| {
+                // Per-worker config clone: each PJRT handle owns its
+                // own reply channel, so workers pipeline requests
+                // instead of serializing on one reply lock.
+                let wcfg = cfg.clone();
                 let mut scratch = Scratch::new();
                 loop {
                     let i = cursor.fetch_add(1, Ordering::Relaxed);
@@ -374,25 +398,22 @@ pub fn decompress(cfg: &EngineConfig, container: &Container) -> Result<(Vec<f32>
                         break;
                     }
                     let rec = &container.chunks[i];
-                    let decoded =
-                        decode_chunk_into_scratch(cfg, &qc, &pipeline, rec, &mut scratch);
-                    match decoded {
-                        Ok(()) => {
-                            let mut slot = slots[i].lock().unwrap();
-                            if slot.len() != scratch.values.len() {
-                                *err.lock().unwrap() = Some(anyhow!(
-                                    "chunk {i} decoded {} values, layout expects {}",
-                                    scratch.values.len(),
-                                    slot.len()
-                                ));
-                                break;
-                            }
-                            slot.copy_from_slice(&scratch.values);
-                        }
-                        Err(e) => {
-                            *err.lock().unwrap() = Some(e);
-                            break;
-                        }
+                    // Decode straight into this chunk's disjoint slice
+                    // of the preallocated output — no staging buffer,
+                    // no per-chunk memcpy. The slot mutexes are
+                    // uncontended (one owner per chunk).
+                    let mut slot = slots[i].lock().unwrap();
+                    let decoded = decode_chunk_record_into(
+                        &wcfg,
+                        &qc,
+                        &pipeline,
+                        rec,
+                        &mut scratch,
+                        &mut slot,
+                    );
+                    if let Err(e) = decoded {
+                        *err.lock().unwrap() = Some(e);
+                        break;
                     }
                 }
             });

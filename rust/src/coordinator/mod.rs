@@ -2,19 +2,26 @@
 //!
 //! * [`engine`]  — in-memory compress/decompress over a work-stealing
 //!   worker pool (chunk-parallel, deterministic output);
-//! * [`stream`]  — bounded-memory streaming pipeline with backpressure
-//!   (reader -> workers -> reordering collector);
+//! * [`stream`]  — bounded-memory streaming pipelines with
+//!   backpressure, in both directions (reader -> workers -> reordering
+//!   collector);
 //! * [`metrics`] — ratio / throughput / outlier accounting.
 //!
-//! Both execution modes share one per-chunk encode path,
-//! [`encode_chunk_record`], driven through a per-worker
+//! All execution modes share one per-chunk encode path,
+//! [`encode_chunk_record`], and one per-chunk decode path,
+//! [`decode_chunk_record_into`], driven through a per-worker
 //! [`crate::scratch::Scratch`] arena (zero steady-state allocations —
-//! see the ownership rules there).
+//! see the ownership rules there; the decode side additionally caches
+//! the Huffman decode table in the arena).
 
 pub mod engine;
 pub mod metrics;
 pub mod stream;
 
-pub use engine::{compress, decompress, encode_chunk_record, EngineConfig};
+pub use engine::{
+    compress, decode_chunk_record_into, decompress, encode_chunk_record, EngineConfig,
+};
 pub use metrics::RunStats;
-pub use stream::{compress_stream, DEFAULT_QUEUE_DEPTH};
+pub use stream::{
+    compress_stream, decompress_slice_streaming, decompress_stream, DEFAULT_QUEUE_DEPTH,
+};

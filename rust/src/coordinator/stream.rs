@@ -1,14 +1,26 @@
-//! Streaming compression with bounded in-flight memory (backpressure).
+//! Streaming compression AND decompression with bounded in-flight
+//! memory (backpressure).
 //!
-//! Topology: one reader (chunks the input), N workers (quantize +
-//! encode), one writer (reorders and appends). All queues are bounded
+//! Topology (both directions): one reader (frames the input), N
+//! workers (quantize+encode / decode+dequantize), one collector
+//! (reorders by chunk index and writes). All queues are bounded
 //! `sync_channel`s, so a slow writer stalls the workers and a slow
 //! worker pool stalls the reader — memory stays O(queue_depth *
 //! chunk_size) no matter how large the stream is. This is the
 //! data-pipeline-orchestrator shape of the L3 coordinator.
 //!
+//! [`decompress_stream`] is the decode mirror of [`compress_stream`]:
+//! it parses the container framing incrementally (header, then one
+//! chunk frame at a time, then the trailing file CRC), keeps a bounded
+//! window of chunks in flight, and each worker decodes through its own
+//! [`crate::scratch::Scratch`] arena — cached Huffman decode table
+//! included — so steady-state per-chunk work allocates only the owned
+//! reconstruction that crosses the channel.
+//!
 //! NOA cannot be streamed in one pass (it needs the global range); the
 //! engine rejects it here and callers use the in-memory path instead.
+//! Decompression has no such restriction (NOA was resolved to an ABS
+//! epsilon at compression time).
 
 use std::collections::BTreeMap;
 use std::io::{Read, Write};
@@ -18,11 +30,15 @@ use std::time::Instant;
 
 use anyhow::{anyhow, bail, Result};
 
-use crate::container::ChunkRecord;
+use crate::container::{
+    crc::Crc32, parse_chunk_frame_header, ChunkRecord, Header, CHUNK_FRAME_HEADER_LEN,
+    HEADER_FIXED_LEN,
+};
 use crate::quantizer::QuantizerConfig;
-use crate::types::ErrorBound;
+use crate::scratch::Scratch;
+use crate::types::{Device, ErrorBound, CHUNK_ELEMS};
 
-use super::engine::EngineConfig;
+use super::engine::{decode_chunk_record_into, quantizer_from_header, EngineConfig};
 use super::metrics::RunStats;
 
 /// How many chunks may be in flight per stage queue.
@@ -78,10 +94,13 @@ pub fn compress_stream<R: Read, W: Write>(
             let qc = &qc;
             let err = &err;
             s.spawn(move || {
-                let mut scratch = crate::scratch::Scratch::new();
+                // Per-worker config clone: each PJRT handle owns its
+                // own reply channel (a shared handle serializes on it).
+                let wcfg = cfg.clone();
+                let mut scratch = Scratch::new();
                 while let Some(item) = work_rx.recv() {
                     let result =
-                        super::engine::encode_chunk_record(cfg, qc, &item.values, &mut scratch);
+                        super::engine::encode_chunk_record(&wcfg, qc, &item.values, &mut scratch);
                     match result {
                         Ok((record, outliers)) => {
                             let done = DoneItem {
@@ -102,6 +121,10 @@ pub fn compress_stream<R: Read, W: Write>(
             });
         }
         drop(done_tx);
+        // Release the reader's clone of the work receiver: if every
+        // worker dies early the channel must disconnect so the send
+        // below errors out instead of blocking forever.
+        drop(work_rx);
 
         // Reader (this thread): chunk the stream, apply backpressure
         // through the bounded work queue; collector runs on a spawned
@@ -127,6 +150,12 @@ pub fn compress_stream<R: Read, W: Write>(
         // the owned WorkItem before the next read).
         let mut buf = vec![0u8; bytes_per_chunk];
         loop {
+            // A failed worker never emits its chunk, so the collector
+            // can never drain past it — stop feeding work immediately
+            // or its reorder buffer would grow with every later chunk.
+            if err.lock().unwrap().is_some() {
+                break;
+            }
             let got = read_full(&mut input, &mut buf)?;
             if got == 0 {
                 break;
@@ -199,6 +228,284 @@ fn read_full<R: Read>(r: &mut R, buf: &mut [u8]) -> Result<usize> {
     Ok(filled)
 }
 
+/// `read_exact` that also feeds the running file CRC and byte counter.
+fn read_exact_tracked<R: Read>(
+    r: &mut R,
+    buf: &mut [u8],
+    crc: &mut Crc32,
+    count: &mut u64,
+) -> Result<()> {
+    r.read_exact(buf)
+        .map_err(|e| anyhow!("truncated container: {e}"))?;
+    crc.update(buf);
+    *count += buf.len() as u64;
+    Ok(())
+}
+
+struct DecodeItem {
+    index: usize,
+    record: ChunkRecord,
+    want_crc: u32,
+}
+
+struct DecodedItem {
+    index: usize,
+    values: Vec<f32>,
+}
+
+/// Decompress a container byte stream into little-endian f32 values
+/// written to `out` — the decode mirror of [`compress_stream`]:
+/// incremental container framing on the reader, a bounded window of
+/// chunks in flight, per-worker [`Scratch`] arenas (cached Huffman
+/// decode table included), and an in-order streaming writer. Returns
+/// run statistics.
+///
+/// The container's integrity checks all still fire: per-chunk CRCs are
+/// verified on the workers, the file CRC and the header/chunk layout
+/// invariants on the reader. Corrupt frames claiming absurd sizes are
+/// rejected before any allocation, so a hostile stream cannot OOM the
+/// decoder.
+pub fn decompress_stream<R: Read, W: Write + Send>(
+    cfg: &EngineConfig,
+    queue_depth: usize,
+    mut input: R,
+    out: &mut W,
+) -> Result<RunStats> {
+    let t0 = Instant::now();
+    let depth = queue_depth.max(1);
+
+    // Incremental header parse, tracking the running file CRC.
+    let mut crc = Crc32::new();
+    let mut compressed_bytes = 0u64;
+    let mut fixed = [0u8; HEADER_FIXED_LEN];
+    read_exact_tracked(&mut input, &mut fixed, &mut crc, &mut compressed_bytes)?;
+    let n_stages = fixed[HEADER_FIXED_LEN - 1] as usize;
+    let mut head = fixed.to_vec();
+    let mut tail = vec![0u8; n_stages + 4];
+    read_exact_tracked(&mut input, &mut tail, &mut crc, &mut compressed_bytes)?;
+    head.extend_from_slice(&tail);
+    let (header, consumed) = Header::parse_prefix(&head).map_err(|e| anyhow!(e))?;
+    if consumed != head.len() {
+        bail!("container header framing error");
+    }
+
+    if cfg.device == Device::Pjrt {
+        if cfg.pjrt.is_none() {
+            bail!("PJRT device requires a PjrtHandle");
+        }
+        if header.chunk_size as usize != CHUNK_ELEMS {
+            bail!("PJRT device requires chunk_size == {CHUNK_ELEMS} (AOT shape)");
+        }
+    }
+    let chunk_size = header.chunk_size as usize;
+    let n_chunks = header.n_chunks as usize;
+    if n_chunks != (header.n_values as usize).div_ceil(chunk_size) {
+        bail!(
+            "container layout mismatch: {n_chunks} chunks for {} values at chunk size {chunk_size}",
+            header.n_values
+        );
+    }
+    let qc = quantizer_from_header(&header);
+    let pipeline = crate::codec::Pipeline::new(header.stages.clone()).map_err(|e| anyhow!(e))?;
+    // Sanity cap on chunk frames: quantized words are 4 B/value and no
+    // stage chain expands beyond a small constant factor plus fixed
+    // headers, so anything past this is corruption — reject it before
+    // allocating.
+    let max_frame_bytes = 16 * chunk_size as u64 * 4 + 4096;
+
+    let workers = if cfg.workers > 0 {
+        cfg.workers
+    } else {
+        std::thread::available_parallelism().map(|n| n.get()).unwrap_or(1)
+    };
+    let workers = workers.min(n_chunks.max(1));
+
+    let (work_tx, work_rx) = sync_channel::<DecodeItem>(depth);
+    let (done_tx, done_rx) = sync_channel::<DecodedItem>(depth);
+    let work_rx = SharedReceiver::new(work_rx);
+    let err: Mutex<Option<anyhow::Error>> = Mutex::new(None);
+
+    let stats = std::thread::scope(|s| -> Result<RunStats> {
+        // Workers: each owns one scratch arena (and therefore one
+        // cached decode table) for its whole loop.
+        for _ in 0..workers {
+            let work_rx = work_rx.clone();
+            let done_tx = done_tx.clone();
+            let qc = &qc;
+            let pipeline = &pipeline;
+            let err = &err;
+            s.spawn(move || {
+                // Per-worker config clone: each PJRT handle owns its
+                // own reply channel (a shared handle serializes on it).
+                let wcfg = cfg.clone();
+                let mut scratch = Scratch::new();
+                while let Some(item) = work_rx.recv() {
+                    if item.record.crc32() != item.want_crc {
+                        *err.lock().unwrap() =
+                            Some(anyhow!("chunk {} CRC mismatch", item.index));
+                        break;
+                    }
+                    let n = item.record.n_values as usize;
+                    // The owned reconstruction is the one per-chunk
+                    // allocation (it crosses the channel), mirroring
+                    // the encode side's owned ChunkRecord.
+                    let mut values = vec![0f32; n];
+                    let decoded = decode_chunk_record_into(
+                        &wcfg,
+                        qc,
+                        pipeline,
+                        &item.record,
+                        &mut scratch,
+                        &mut values,
+                    );
+                    match decoded {
+                        Ok(()) => {
+                            let done = DecodedItem {
+                                index: item.index,
+                                values,
+                            };
+                            if done_tx.send(done).is_err() {
+                                break;
+                            }
+                        }
+                        Err(e) => {
+                            *err.lock().unwrap() = Some(e);
+                            break;
+                        }
+                    }
+                }
+            });
+        }
+        drop(done_tx);
+        // Release the reader's clone of the work receiver so a dead
+        // worker pool disconnects the channel instead of deadlocking
+        // the sends below.
+        drop(work_rx);
+
+        // Collector: reorder by index and write values as they become
+        // contiguous. Pending reconstructions are bounded by the queue
+        // depths, so memory stays O(depth * chunk_size).
+        let collector = s.spawn(move || -> (u64, Result<()>) {
+            let mut pending: BTreeMap<usize, Vec<f32>> = BTreeMap::new();
+            let mut next = 0usize;
+            let mut written = 0u64;
+            let mut byte_buf: Vec<u8> = Vec::new();
+            for d in done_rx.iter() {
+                pending.insert(d.index, d.values);
+                while let Some(v) = pending.remove(&next) {
+                    byte_buf.clear();
+                    byte_buf.reserve(v.len() * 4);
+                    for x in &v {
+                        byte_buf.extend_from_slice(&x.to_le_bytes());
+                    }
+                    if let Err(e) = out.write_all(&byte_buf) {
+                        return (written, Err(e.into()));
+                    }
+                    written += v.len() as u64;
+                    next += 1;
+                }
+            }
+            (written, Ok(()))
+        });
+
+        // Reader (this thread): frame one chunk at a time under
+        // backpressure from the bounded work queue.
+        let mut frame_head = [0u8; CHUNK_FRAME_HEADER_LEN];
+        let mut values_seen = 0u64;
+        for index in 0..n_chunks {
+            // A failed worker never emits its chunk, so the collector
+            // stalls at that index forever — stop framing immediately,
+            // or its reorder buffer would accumulate every later chunk
+            // and break the bounded-memory guarantee.
+            if err.lock().unwrap().is_some() {
+                break;
+            }
+            if read_exact_tracked(&mut input, &mut frame_head, &mut crc, &mut compressed_bytes)
+                .is_err()
+            {
+                drop(work_tx);
+                let _ = collector.join();
+                bail!("truncated container at chunk {index}");
+            }
+            let (n, ob, pb, want_crc) = parse_chunk_frame_header(&frame_head);
+            let n = n as usize;
+            let last = index + 1 == n_chunks;
+            if n == 0 || n > chunk_size || (!last && n != chunk_size) {
+                drop(work_tx);
+                let _ = collector.join();
+                bail!("chunk {index} claims {n} values against chunk size {chunk_size}");
+            }
+            if ob as u64 + pb as u64 > max_frame_bytes {
+                drop(work_tx);
+                let _ = collector.join();
+                bail!("chunk {index} frame exceeds the {max_frame_bytes}-byte sanity cap");
+            }
+            values_seen += n as u64;
+            let mut outlier_bytes = vec![0u8; ob as usize];
+            let mut payload = vec![0u8; pb as usize];
+            let body = read_exact_tracked(
+                &mut input,
+                &mut outlier_bytes,
+                &mut crc,
+                &mut compressed_bytes,
+            )
+            .and_then(|()| {
+                read_exact_tracked(&mut input, &mut payload, &mut crc, &mut compressed_bytes)
+            });
+            if body.is_err() {
+                drop(work_tx);
+                let _ = collector.join();
+                bail!("truncated container at chunk {index}");
+            }
+            let item = DecodeItem {
+                index,
+                record: ChunkRecord {
+                    n_values: n as u32,
+                    outlier_bytes,
+                    payload,
+                },
+                want_crc,
+            };
+            if work_tx.send(item).is_err() {
+                break; // workers died; error captured below
+            }
+        }
+        drop(work_tx);
+        let (written, write_result) = collector.join().expect("collector panicked");
+        if let Some(e) = err.lock().unwrap().take() {
+            return Err(e);
+        }
+        write_result?;
+        if values_seen != header.n_values {
+            bail!("chunk values {values_seen} != header {}", header.n_values);
+        }
+        if written != header.n_values {
+            bail!("lost chunks: wrote {written} of {} values", header.n_values);
+        }
+        // Trailing file CRC (not part of the running CRC), then EOF.
+        let mut trail = [0u8; 4];
+        input
+            .read_exact(&mut trail)
+            .map_err(|e| anyhow!("truncated container: {e}"))?;
+        compressed_bytes += 4;
+        if crc.finalize() != u32::from_le_bytes(trail) {
+            bail!("file CRC mismatch");
+        }
+        let mut probe = [0u8; 1];
+        if input.read(&mut probe)? != 0 {
+            bail!("trailing garbage after container");
+        }
+        Ok(RunStats {
+            n_values: header.n_values as usize,
+            input_bytes: header.n_values as usize * 4,
+            output_bytes: compressed_bytes as usize,
+            outliers: 0,
+            wall: t0.elapsed(),
+        })
+    })?;
+    Ok(stats)
+}
+
 /// mpsc::Receiver is !Sync; share it across workers behind a mutex.
 struct SharedReceiver<T> {
     inner: std::sync::Arc<Mutex<Receiver<T>>>,
@@ -231,6 +538,21 @@ pub fn compress_slice_streaming(cfg: &EngineConfig, data: &[f32]) -> Result<(Vec
     let mut out = Vec::new();
     let stats = compress_stream(cfg, DEFAULT_QUEUE_DEPTH, bytes.as_slice(), &mut out)?;
     Ok((out, stats))
+}
+
+/// Convenience: streaming-decompress a serialized container back to
+/// values (tests, examples, quick verification runs).
+pub fn decompress_slice_streaming(
+    cfg: &EngineConfig,
+    bytes: &[u8],
+) -> Result<(Vec<f32>, RunStats)> {
+    let mut out = Vec::new();
+    let stats = decompress_stream(cfg, DEFAULT_QUEUE_DEPTH, bytes, &mut out)?;
+    let values = out
+        .chunks_exact(4)
+        .map(|c| f32::from_le_bytes(c.try_into().unwrap()))
+        .collect();
+    Ok((values, stats))
 }
 
 #[cfg(test)]
@@ -294,5 +616,69 @@ mod tests {
         assert_eq!(stats.n_values, 0);
         let container = Container::from_bytes(&bytes).unwrap();
         assert_eq!(container.header.n_values, 0);
+        // ... and the streaming decoder accepts the empty container.
+        let (y, dstats) = decompress_slice_streaming(&cfg, &bytes).unwrap();
+        assert!(y.is_empty());
+        assert_eq!(dstats.output_bytes, bytes.len());
+    }
+
+    #[test]
+    fn streaming_decode_matches_in_memory_decode() {
+        // Mixed bounds, multi-chunk, short tail: streamed bytes out
+        // must equal the engine's reconstruction bit for bit.
+        for bound in [ErrorBound::Abs(1e-3), ErrorBound::Rel(1e-2)] {
+            let x = Suite::Cesm.generate(1, CHUNK_ELEMS * 3 + 123);
+            let cfg = EngineConfig::native(bound);
+            let (bytes, _) = compress_slice_streaming(&cfg, &x).unwrap();
+            let container = Container::from_bytes(&bytes).unwrap();
+            let (mem, _) = super::super::engine::decompress(&cfg, &container).unwrap();
+            let (streamed, stats) = decompress_slice_streaming(&cfg, &bytes).unwrap();
+            assert_eq!(streamed.len(), mem.len());
+            for (a, b) in streamed.iter().zip(&mem) {
+                assert_eq!(a.to_bits(), b.to_bits(), "{bound:?}");
+            }
+            assert_eq!(stats.n_values, x.len());
+            assert_eq!(stats.output_bytes, bytes.len());
+        }
+    }
+
+    #[test]
+    fn streaming_decode_bounded_queue_and_workers() {
+        let x = Suite::Hacc.generate(2, CHUNK_ELEMS * 5 + 3);
+        let mut cfg = EngineConfig::native(ErrorBound::Abs(1e-2));
+        cfg.workers = 4;
+        let (bytes, _) = compress_slice_streaming(&cfg, &x).unwrap();
+        let mut out = Vec::new();
+        decompress_stream(&cfg, 1, bytes.as_slice(), &mut out).unwrap();
+        let y: Vec<f32> = out
+            .chunks_exact(4)
+            .map(|c| f32::from_le_bytes(c.try_into().unwrap()))
+            .collect();
+        assert_eq!(crate::verify::metrics::abs_violations(&x, &y, 1e-2), 0);
+    }
+
+    #[test]
+    fn streaming_decode_rejects_corruption() {
+        let x = Suite::Nyx.generate(0, 30_000);
+        let cfg = EngineConfig::native(ErrorBound::Abs(1e-3));
+        let (bytes, _) = compress_slice_streaming(&cfg, &x).unwrap();
+        // Zero-length stream.
+        assert!(decompress_slice_streaming(&cfg, &[]).is_err());
+        // Truncations at the header, mid-chunk, and at the CRC.
+        for cut in [0usize, 10, 40, bytes.len() / 2, bytes.len() - 1] {
+            assert!(
+                decompress_slice_streaming(&cfg, &bytes[..cut]).is_err(),
+                "cut {cut}"
+            );
+        }
+        // Trailing garbage.
+        let mut long = bytes.clone();
+        long.push(7);
+        assert!(decompress_slice_streaming(&cfg, &long).is_err());
+        // A flipped payload byte must fail some CRC.
+        let mut bad = bytes.clone();
+        let mid = bytes.len() / 2;
+        bad[mid] ^= 0x40;
+        assert!(decompress_slice_streaming(&cfg, &bad).is_err());
     }
 }

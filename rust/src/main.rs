@@ -15,7 +15,9 @@ use std::process::ExitCode;
 
 use anyhow::{anyhow, bail, Context, Result};
 
-use lc::coordinator::{compress_stream, decompress, EngineConfig, DEFAULT_QUEUE_DEPTH};
+use lc::coordinator::{
+    compress_stream, decompress, decompress_stream, EngineConfig, DEFAULT_QUEUE_DEPTH,
+};
 use lc::data::Suite;
 use lc::runtime::{default_artifact_dir, PjrtService};
 use lc::tables::{self, EvalConfig};
@@ -218,15 +220,19 @@ fn run(args: Vec<String>) -> Result<()> {
             let [inp, outp] = o.positional.as_slice() else {
                 bail!("decompress wants <in.lcz> <out.f32>");
             };
-            let bytes = std::fs::read(inp)?;
-            let container =
-                lc::container::Container::from_bytes(&bytes).map_err(|e| anyhow!(e))?;
-            let mut cfg = engine_config(&o, &mut service)?;
-            cfg.bound = container.header.bound; // decode per header
-            cfg.variant = container.header.variant;
-            cfg.protection = container.header.protection;
-            let (data, stats) = decompress(&cfg, &container)?;
-            write_f32_file(outp, &data)?;
+            // Streaming decode: bounded memory no matter how large the
+            // container is; all decode parameters travel in its header.
+            let cfg = engine_config(&o, &mut service)?;
+            let f = std::fs::File::open(inp).with_context(|| format!("opening {inp}"))?;
+            let mut out = std::io::BufWriter::new(std::fs::File::create(outp)?);
+            let stats = decompress_stream(
+                &cfg,
+                DEFAULT_QUEUE_DEPTH,
+                std::io::BufReader::new(f),
+                &mut out,
+            )?;
+            use std::io::Write;
+            out.flush()?;
             println!(
                 "{} values  {:.3} GB/s",
                 stats.n_values,

@@ -113,24 +113,32 @@ pub fn quantize(x: &[f32], p: AbsParams, protection: Protection) -> QuantizedChu
     }
 }
 
-/// Decode a word stream + packed outlier bitmap into a caller-provided
-/// buffer (cleared first). `obits` must cover `words.len()` bits. The
-/// multiply must stay a single f32 operation: it defines the
-/// reconstruction the encoder verified.
-pub fn dequantize_into(words: &[u32], obits: &[u64], p: AbsParams, out: &mut Vec<f32>) {
-    out.clear();
-    out.reserve(words.len());
-    for (bi, blk) in words.chunks(64).enumerate() {
+/// Decode a word stream + packed outlier bitmap directly into a
+/// preallocated slice (`out.len()` must equal `words.len()`; `obits`
+/// must cover `words.len()` bits) — the shared blocked kernel behind
+/// both the engine's preallocated-output decode loop and the streaming
+/// decoder. The multiply must stay a single f32 operation: it defines
+/// the reconstruction the encoder verified.
+pub fn dequantize_slice(words: &[u32], obits: &[u64], p: AbsParams, out: &mut [f32]) {
+    assert_eq!(out.len(), words.len(), "output slice length mismatch");
+    for (bi, (blk, oblk)) in words.chunks(64).zip(out.chunks_mut(64)).enumerate() {
         let mask = obits[bi];
-        for (j, &w) in blk.iter().enumerate() {
-            let v = if (mask >> j) & 1 != 0 {
+        for (j, (&w, o)) in blk.iter().zip(oblk.iter_mut()).enumerate() {
+            *o = if (mask >> j) & 1 != 0 {
                 f32::from_bits(w)
             } else {
                 super::unzigzag(w) as f32 * p.eb2
             };
-            out.push(v);
         }
     }
+}
+
+/// Decode a word stream + packed outlier bitmap into a caller-provided
+/// buffer (cleared first; thin wrapper over [`dequantize_slice`]).
+pub fn dequantize_into(words: &[u32], obits: &[u64], p: AbsParams, out: &mut Vec<f32>) {
+    out.clear();
+    out.resize(words.len(), 0.0);
+    dequantize_slice(words, obits, p, out);
 }
 
 /// Decode one chunk back to values (allocating compat wrapper).

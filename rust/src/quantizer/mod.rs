@@ -115,6 +115,17 @@ impl QuantizerConfig {
         }
     }
 
+    /// Dequantize on the native (rust) pipeline directly into a
+    /// preallocated slice (`out.len()` must equal `words.len()`) — the
+    /// allocation-free decode path shared by the in-memory engine and
+    /// the streaming decompressor.
+    pub fn dequantize_native_slice(&self, words: &[u32], obits: &[u64], out: &mut [f32]) {
+        match *self {
+            QuantizerConfig::Abs(p, _) => abs::dequantize_slice(words, obits, p, out),
+            QuantizerConfig::Rel(p, v, _) => rel::dequantize_slice(words, obits, p, v, out),
+        }
+    }
+
     /// Quantize on the native (rust) pipeline (allocating wrapper).
     pub fn quantize_native(&self, x: &[f32]) -> QuantizedChunk {
         match *self {

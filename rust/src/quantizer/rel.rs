@@ -118,9 +118,42 @@ pub fn quantize(
     }
 }
 
+/// Decode a word stream + packed outlier bitmap directly into a
+/// preallocated slice (`out.len()` must equal `words.len()`) — the
+/// shared blocked kernel behind the engine and streaming decode loops.
+/// Must use the same pow2 the encoder verified with.
+pub fn dequantize_slice(
+    words: &[u32],
+    obits: &[u64],
+    p: RelParams,
+    variant: FnVariant,
+    out: &mut [f32],
+) {
+    assert_eq!(out.len(), words.len(), "output slice length mismatch");
+    for (bi, (blk, oblk)) in words.chunks(64).zip(out.chunks_mut(64)).enumerate() {
+        let mask = obits[bi];
+        for (j, (&w, o)) in blk.iter().zip(oblk.iter_mut()).enumerate() {
+            *o = if (mask >> j) & 1 != 0 {
+                f32::from_bits(w)
+            } else {
+                let sign = (w & 1) != 0;
+                let bin = unzigzag(w >> 1);
+                let mag = match variant {
+                    FnVariant::Approx => pow2approx_from_bins(bin, p.l2eb),
+                    FnVariant::Native => (bin as f32 * p.l2eb).exp2(),
+                };
+                if sign {
+                    -mag
+                } else {
+                    mag
+                }
+            };
+        }
+    }
+}
+
 /// Decode a word stream + packed outlier bitmap into a caller-provided
-/// buffer (cleared first). Must use the same pow2 the encoder verified
-/// with.
+/// buffer (cleared first; thin wrapper over [`dequantize_slice`]).
 pub fn dequantize_into(
     words: &[u32],
     obits: &[u64],
@@ -129,23 +162,8 @@ pub fn dequantize_into(
     out: &mut Vec<f32>,
 ) {
     out.clear();
-    out.reserve(words.len());
-    for (bi, blk) in words.chunks(64).enumerate() {
-        let mask = obits[bi];
-        for (j, &w) in blk.iter().enumerate() {
-            if (mask >> j) & 1 != 0 {
-                out.push(f32::from_bits(w));
-            } else {
-                let sign = (w & 1) != 0;
-                let bin = unzigzag(w >> 1);
-                let mag = match variant {
-                    FnVariant::Approx => pow2approx_from_bins(bin, p.l2eb),
-                    FnVariant::Native => (bin as f32 * p.l2eb).exp2(),
-                };
-                out.push(if sign { -mag } else { mag });
-            }
-        }
-    }
+    out.resize(words.len(), 0.0);
+    dequantize_slice(words, obits, p, variant, out);
 }
 
 /// Decode one chunk (allocating compat wrapper).

@@ -16,7 +16,7 @@
 //! Do not "optimize" this module — its naivety is the point.
 
 use std::cmp::Reverse;
-use std::collections::BinaryHeap;
+use std::collections::{BinaryHeap, HashMap};
 
 use crate::bitvec::BitVec;
 use crate::codec::{Pipeline, Stage};
@@ -27,7 +27,8 @@ use crate::quantizer::approx::{log2approxf, pow2approx_from_bins};
 use crate::quantizer::rel::RelParams;
 use crate::quantizer::{unzigzag, zigzag, QuantizerConfig};
 use crate::types::{
-    Device, FnVariant, Protection, QuantizedChunk, MAXBIN_ABS, MAXBIN_REL, REL_MIN_MAG,
+    Device, ErrorBound, FnVariant, Protection, QuantizedChunk, MAXBIN_ABS, MAXBIN_REL,
+    REL_MIN_MAG,
 };
 
 // ---------------------------------------------------------------------
@@ -168,8 +169,11 @@ pub fn delta_encode(words: &[u32]) -> Vec<u32> {
     out
 }
 
-/// Naive bit-plane shuffle: bit-by-bit transpose (out[j] bit i =
-/// words[i] bit j within each 32-word block; zero-padded).
+/// Naive bit-plane shuffle: bit-by-bit transpose in the orientation
+/// the seed's butterfly (and therefore every container) pins:
+/// `out[j] bit i = words[31-i] bit (31-j)` within each 32-word block
+/// (plane 0 holds bit 31, word order inside a plane reversed;
+/// zero-padded).
 pub fn bitshuffle_encode(words: &[u32]) -> Vec<u32> {
     let nblocks = words.len().div_ceil(32);
     let mut out = Vec::with_capacity(nblocks * 32);
@@ -177,9 +181,9 @@ pub fn bitshuffle_encode(words: &[u32]) -> Vec<u32> {
         for j in 0..32usize {
             let mut w = 0u32;
             for i in 0..32usize {
-                let idx = b * 32 + i;
+                let idx = b * 32 + (31 - i);
                 let bit = if idx < words.len() {
-                    (words[idx] >> j) & 1
+                    (words[idx] >> (31 - j)) & 1
                 } else {
                     0
                 };
@@ -189,6 +193,34 @@ pub fn bitshuffle_encode(words: &[u32]) -> Vec<u32> {
         }
     }
     out
+}
+
+/// Naive inverse bit-plane shuffle (same orientation as
+/// [`bitshuffle_encode`], truncating the zero padding).
+pub fn bitshuffle_decode(shuffled: &[u32], n: usize) -> Result<Vec<u32>, String> {
+    if shuffled.len() != n.div_ceil(32) * 32 {
+        return Err(format!(
+            "bitshuffle payload {} words does not match count {n}",
+            shuffled.len()
+        ));
+    }
+    let mut out = Vec::with_capacity(n);
+    for b in 0..shuffled.len() / 32 {
+        for i in 0..32usize {
+            if b * 32 + i >= n {
+                break;
+            }
+            // words[idx] bit (31-j) == out[b*32+j] bit (31-idx%32),
+            // inverted: value bit j = plane word (31-j) bit (31-i).
+            let mut v = 0u32;
+            for j in 0..32usize {
+                let bit = (shuffled[b * 32 + (31 - j)] >> (31 - i)) & 1;
+                v |= bit << j;
+            }
+            out.push(v);
+        }
+    }
+    Ok(out)
 }
 
 /// Naive zero-run-length encoding (per-byte scan, same format).
@@ -337,6 +369,188 @@ pub fn huffman_encode(data: &[u8]) -> Vec<u8> {
     out
 }
 
+/// Naive zero-run-length decoder (per-byte scan, same format).
+pub fn rle_decode(data: &[u8], expected_len: usize) -> Result<Vec<u8>, String> {
+    fn read_varint(data: &[u8]) -> Result<(u64, usize), String> {
+        let mut v = 0u64;
+        let mut shift = 0u32;
+        for (i, &b) in data.iter().enumerate() {
+            if shift >= 64 {
+                return Err("varint overflow".into());
+            }
+            v |= ((b & 0x7F) as u64) << shift;
+            if b & 0x80 == 0 {
+                return Ok((v, i + 1));
+            }
+            shift += 7;
+        }
+        Err("truncated varint".into())
+    }
+    let mut out = Vec::with_capacity(expected_len);
+    let mut i = 0;
+    while i < data.len() {
+        if data[i] == 0 {
+            let (run, used) = read_varint(&data[i + 1..])?;
+            i += 1 + used;
+            if run == 0 {
+                return Err("zero-length run".into());
+            }
+            if out.len() + run as usize > expected_len {
+                return Err("run overflows expected length".into());
+            }
+            out.resize(out.len() + run as usize, 0);
+        } else {
+            out.push(data[i]);
+            i += 1;
+        }
+    }
+    if out.len() != expected_len {
+        return Err(format!(
+            "rle decoded {} bytes, expected {expected_len}",
+            out.len()
+        ));
+    }
+    Ok(out)
+}
+
+/// Naive canonical Huffman decoder: bit-by-bit code matching through a
+/// `(len, code) -> symbol` map — the independent oracle for the
+/// table-driven multi-symbol decoder.
+pub fn huffman_decode(payload: &[u8], expected_len: usize) -> Result<Vec<u8>, String> {
+    match payload.first() {
+        Some(&1) => {
+            let body = &payload[1..];
+            if body.len() != expected_len {
+                return Err("stored block length mismatch".into());
+            }
+            return Ok(body.to_vec());
+        }
+        Some(&0) => {}
+        _ => return Err("bad huffman mode byte".into()),
+    }
+    if payload.len() < HUFF_HEADER_LEN {
+        return Err("huffman payload shorter than header".into());
+    }
+    let lens = &payload[1..257];
+    let n = u64::from_le_bytes(payload[257..265].try_into().unwrap()) as usize;
+    if n != expected_len {
+        return Err(format!("huffman length {n} != expected {expected_len}"));
+    }
+    if n == 0 {
+        return Ok(Vec::new());
+    }
+    // Canonical codes exactly as the encoder assigns them.
+    let mut symbols: Vec<usize> = (0..256).filter(|&s| lens[s] > 0).collect();
+    symbols.sort_by_key(|&s| (lens[s], s));
+    let mut map: HashMap<(u8, u32), u8> = HashMap::new();
+    let mut code = 0u32;
+    let mut prev_len = 0u8;
+    for &s in &symbols {
+        let l = lens[s];
+        if l as u32 > HUFF_MAX_CODE_LEN {
+            return Err(format!("code length {l} exceeds limit"));
+        }
+        code <<= (l - prev_len) as u32;
+        map.insert((l, code), s as u8);
+        code += 1;
+        prev_len = l;
+    }
+    let mut out = Vec::with_capacity(n);
+    let mut cur = 0u32;
+    let mut cur_len = 0u8;
+    for &byte in &payload[HUFF_HEADER_LEN..] {
+        for bit in (0..8).rev() {
+            cur = (cur << 1) | ((byte >> bit) & 1) as u32;
+            cur_len += 1;
+            if let Some(&s) = map.get(&(cur_len, cur)) {
+                out.push(s);
+                cur = 0;
+                cur_len = 0;
+                if out.len() == n {
+                    return Ok(out);
+                }
+            } else if cur_len as u32 > HUFF_MAX_CODE_LEN {
+                return Err("invalid huffman code".into());
+            }
+        }
+    }
+    Err("huffman bitstream exhausted early".into())
+}
+
+/// Naive delta decode (copying; the production stage is in-place).
+pub fn delta_decode(words: &[u32]) -> Vec<u32> {
+    let mut out = Vec::with_capacity(words.len());
+    let mut acc = 0u32;
+    for &w in words {
+        let d = ((w >> 1) as i32) ^ -((w & 1) as i32);
+        acc = acc.wrapping_add(d as u32);
+        out.push(acc);
+    }
+    out
+}
+
+/// Seed `Pipeline::decode`: undo the byte stages in reverse with fresh
+/// `Vec`s, then the word stages — the decode mirror of
+/// [`encode_pipeline`] built entirely from the naive stage oracles.
+pub fn decode_pipeline(p: &Pipeline, data: &[u8], n_words: usize) -> Result<Vec<u32>, String> {
+    let shuffled_words = if p.stages().contains(&Stage::BitShuffle) {
+        n_words.div_ceil(32) * 32
+    } else {
+        n_words
+    };
+    let byte_len = shuffled_words * 4;
+    let split = p
+        .stages()
+        .iter()
+        .position(|s| matches!(s, Stage::Rle0 | Stage::Huffman))
+        .unwrap_or(p.stages().len());
+    let (word_stages, byte_stages) = p.stages().split_at(split);
+
+    let mut cur: Vec<u8> = data.to_vec();
+    for (i, &st) in byte_stages.iter().enumerate().rev() {
+        cur = match st {
+            Stage::Rle0 => {
+                if i != 0 {
+                    return Err("rle0 cannot be preceded by another byte stage".into());
+                }
+                rle_decode(&cur, byte_len)?
+            }
+            Stage::Huffman => {
+                let emb = match cur.first() {
+                    Some(&1) => cur.len() - 1,
+                    Some(&0) if cur.len() >= HUFF_HEADER_LEN => {
+                        u64::from_le_bytes(cur[257..265].try_into().unwrap()) as usize
+                    }
+                    _ => return Err("bad huffman payload".into()),
+                };
+                if i == 0 && emb != byte_len {
+                    return Err(format!("huffman length {emb} != expected {byte_len}"));
+                }
+                huffman_decode(&cur, emb)?
+            }
+            _ => unreachable!(),
+        };
+    }
+    if cur.len() != byte_len {
+        return Err(format!(
+            "byte phase produced {} bytes, expected {byte_len}",
+            cur.len()
+        ));
+    }
+    let mut words = crate::codec::bytes_to_words(&cur);
+    for &st in word_stages.iter().rev() {
+        words = match st {
+            Stage::Delta => delta_decode(&words),
+            Stage::BitShuffle => bitshuffle_decode(&words, n_words)?,
+            _ => unreachable!(),
+        };
+    }
+    if words.len() != n_words {
+        return Err(format!("decoded {} words, expected {n_words}", words.len()));
+    }
+    Ok(words)
+}
+
 /// Seed `Pipeline::encode`: one fresh `Vec` per stage, naive stages.
 pub fn encode_pipeline(p: &Pipeline, words: &[u32]) -> Vec<u8> {
     let mut w: Vec<u32> = words.to_vec();
@@ -406,9 +620,72 @@ pub fn compress(cfg: &EngineConfig, data: &[f32]) -> Result<Container, String> {
     })
 }
 
+/// Naive single-threaded mirror of `coordinator::engine::decompress`:
+/// per-chunk naive pipeline decode, per-element dequantize, straight
+/// concatenation. Reconstructions must be bit-identical to the
+/// engine's (and the streaming decoder's).
+pub fn decompress(container: &Container) -> Result<Vec<f32>, String> {
+    let h = &container.header;
+    let qc = match h.bound {
+        ErrorBound::Abs(_) | ErrorBound::Noa(_) => {
+            QuantizerConfig::Abs(AbsParams::new(h.effective_epsilon), h.protection)
+        }
+        ErrorBound::Rel(e) => QuantizerConfig::Rel(RelParams::new(e), h.variant, h.protection),
+    };
+    let p = container.pipeline()?;
+    let mut out = Vec::with_capacity(h.n_values as usize);
+    for rec in &container.chunks {
+        let n = rec.n_values as usize;
+        let words = decode_pipeline(&p, &rec.payload, n)?;
+        let bitmap = rle_decode(&rec.outlier_bytes, n.div_ceil(8))?;
+        let outliers = BitVec::from_bytes(&bitmap, n)?;
+        let chunk = QuantizedChunk { words, outliers };
+        let y = match qc {
+            QuantizerConfig::Abs(pp, _) => dequantize_abs(&chunk, pp),
+            QuantizerConfig::Rel(pp, v, _) => dequantize_rel(&chunk, pp, v),
+        };
+        out.extend_from_slice(&y);
+    }
+    if out.len() as u64 != h.n_values {
+        return Err(format!(
+            "decoded {} values, header says {}",
+            out.len(),
+            h.n_values
+        ));
+    }
+    Ok(out)
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
+
+    #[test]
+    fn naive_decode_stages_invert_naive_encode_stages() {
+        let words: Vec<u32> = (0..2500u32)
+            .map(|i| i.wrapping_mul(2654435761) >> 18)
+            .collect();
+        assert_eq!(delta_decode(&delta_encode(&words)), words);
+        for n in [0usize, 1, 31, 32, 33, 2500] {
+            let w = &words[..n];
+            assert_eq!(
+                bitshuffle_decode(&bitshuffle_encode(w), n).unwrap(),
+                w,
+                "n={n}"
+            );
+        }
+        let bytes = crate::codec::words_to_bytes(&words);
+        assert_eq!(rle_decode(&rle_encode(&bytes), bytes.len()).unwrap(), bytes);
+        assert_eq!(
+            huffman_decode(&huffman_encode(&bytes), bytes.len()).unwrap(),
+            bytes
+        );
+        let p = Pipeline::default_chain();
+        assert_eq!(
+            decode_pipeline(&p, &encode_pipeline(&p, &words), words.len()).unwrap(),
+            words
+        );
+    }
 
     #[test]
     fn naive_stages_agree_with_production_stages() {

@@ -2,12 +2,20 @@
 //!
 //! PjRtClient is Rc-based, so all PJRT work lives on one dedicated
 //! service thread; coordinator workers talk to it through a cloneable
-//! [`PjrtHandle`] (mpsc request channel + per-request reply channel).
-//! This mirrors the leader/worker split of GPU serving stacks: one
-//! device owner, many CPU-side producers.
+//! [`PjrtHandle`] (mpsc request channel + a reusable per-handle reply
+//! channel). This mirrors the leader/worker split of GPU serving
+//! stacks: one device owner, many CPU-side producers.
+//!
+//! The reply channel is created once per handle (and once per clone),
+//! not once per request: the per-chunk quantize/dequantize hot paths —
+//! including the streaming decompressor's workers — stop paying a
+//! channel allocation per call. A handle shared by reference across
+//! threads serializes its callers on a mutex held across send+recv so
+//! replies can never interleave; cloned handles have independent reply
+//! channels and do not serialize against each other.
 
 use std::path::Path;
-use std::sync::mpsc;
+use std::sync::{mpsc, Arc, Mutex};
 use std::thread::JoinHandle;
 
 use anyhow::{anyhow, Context, Result};
@@ -21,23 +29,52 @@ enum Request {
         artifact: &'static str,
         x: Vec<f32>,
         scalars: [f32; 4],
-        reply: mpsc::Sender<Result<QuantizedChunk>>,
+        reply: mpsc::Sender<Reply>,
     },
     Dequantize {
         artifact: &'static str,
         chunk: QuantizedChunk,
         scalars: [f32; 4],
-        reply: mpsc::Sender<Result<Vec<f32>>>,
+        reply: mpsc::Sender<Reply>,
     },
     Platform {
-        reply: mpsc::Sender<String>,
+        reply: mpsc::Sender<Reply>,
     },
 }
 
+enum Reply {
+    Chunk(Result<QuantizedChunk>),
+    Values(Result<Vec<f32>>),
+    Platform(String),
+}
+
 /// Cloneable, Send handle to the PJRT service thread.
-#[derive(Clone)]
 pub struct PjrtHandle {
     tx: mpsc::Sender<Request>,
+    reply_tx: mpsc::Sender<Reply>,
+    reply_rx: Arc<Mutex<mpsc::Receiver<Reply>>>,
+}
+
+impl Clone for PjrtHandle {
+    fn clone(&self) -> Self {
+        // Fresh reply channel per clone: independent callers never
+        // serialize on each other's replies.
+        let (reply_tx, reply_rx) = mpsc::channel();
+        PjrtHandle {
+            tx: self.tx.clone(),
+            reply_tx,
+            reply_rx: Arc::new(Mutex::new(reply_rx)),
+        }
+    }
+}
+
+fn fresh_handle(tx: mpsc::Sender<Request>) -> PjrtHandle {
+    let (reply_tx, reply_rx) = mpsc::channel();
+    PjrtHandle {
+        tx,
+        reply_tx,
+        reply_rx: Arc::new(Mutex::new(reply_rx)),
+    }
 }
 
 /// The running service; dropping it (after all handles) stops the thread.
@@ -74,7 +111,8 @@ impl PjrtService {
                             scalars,
                             reply,
                         } => {
-                            let _ = reply.send(engine.quantize_chunk(artifact, &x, scalars));
+                            let _ = reply
+                                .send(Reply::Chunk(engine.quantize_chunk(artifact, &x, scalars)));
                         }
                         Request::Dequantize {
                             artifact,
@@ -82,11 +120,12 @@ impl PjrtService {
                             scalars,
                             reply,
                         } => {
-                            let _ =
-                                reply.send(engine.dequantize_chunk(artifact, &chunk, scalars));
+                            let _ = reply.send(Reply::Values(
+                                engine.dequantize_chunk(artifact, &chunk, scalars),
+                            ));
                         }
                         Request::Platform { reply } => {
-                            let _ = reply.send(engine.platform());
+                            let _ = reply.send(Reply::Platform(engine.platform()));
                         }
                     }
                 }
@@ -96,7 +135,7 @@ impl PjrtService {
             .recv()
             .context("pjrt-service thread died during startup")??;
         Ok(PjrtService {
-            handle: PjrtHandle { tx },
+            handle: fresh_handle(tx),
             join: Some(join),
         })
     }
@@ -110,7 +149,7 @@ impl Drop for PjrtService {
     fn drop(&mut self) {
         // Close our channel end; thread exits when all handles drop.
         let (tx, _) = mpsc::channel();
-        self.handle = PjrtHandle { tx };
+        self.handle = fresh_handle(tx);
         if let Some(j) = self.join.take() {
             let _ = j.join();
         }
@@ -118,6 +157,17 @@ impl Drop for PjrtService {
 }
 
 impl PjrtHandle {
+    /// Issue one request and wait for its reply. The reply-receiver
+    /// lock spans send + recv, so callers sharing this handle by
+    /// reference cannot interleave each other's replies.
+    fn call(&self, make: impl FnOnce(mpsc::Sender<Reply>) -> Request) -> Result<Reply> {
+        let rx = self.reply_rx.lock().unwrap();
+        self.tx
+            .send(make(self.reply_tx.clone()))
+            .map_err(|_| anyhow!("pjrt service stopped"))?;
+        rx.recv().map_err(|_| anyhow!("pjrt service dropped reply"))
+    }
+
     /// Quantize one padded chunk on the PJRT pipeline (blocking).
     pub fn quantize_chunk(
         &self,
@@ -125,16 +175,15 @@ impl PjrtHandle {
         x: Vec<f32>,
         scalars: [f32; 4],
     ) -> Result<QuantizedChunk> {
-        let (reply, rx) = mpsc::channel();
-        self.tx
-            .send(Request::Quantize {
-                artifact,
-                x,
-                scalars,
-                reply,
-            })
-            .map_err(|_| anyhow!("pjrt service stopped"))?;
-        rx.recv().map_err(|_| anyhow!("pjrt service dropped reply"))?
+        match self.call(|reply| Request::Quantize {
+            artifact,
+            x,
+            scalars,
+            reply,
+        })? {
+            Reply::Chunk(r) => r,
+            _ => Err(anyhow!("pjrt service sent a mismatched reply")),
+        }
     }
 
     /// Dequantize one padded chunk on the PJRT pipeline (blocking).
@@ -144,23 +193,21 @@ impl PjrtHandle {
         chunk: QuantizedChunk,
         scalars: [f32; 4],
     ) -> Result<Vec<f32>> {
-        let (reply, rx) = mpsc::channel();
-        self.tx
-            .send(Request::Dequantize {
-                artifact,
-                chunk,
-                scalars,
-                reply,
-            })
-            .map_err(|_| anyhow!("pjrt service stopped"))?;
-        rx.recv().map_err(|_| anyhow!("pjrt service dropped reply"))?
+        match self.call(|reply| Request::Dequantize {
+            artifact,
+            chunk,
+            scalars,
+            reply,
+        })? {
+            Reply::Values(r) => r,
+            _ => Err(anyhow!("pjrt service sent a mismatched reply")),
+        }
     }
 
     pub fn platform(&self) -> Result<String> {
-        let (reply, rx) = mpsc::channel();
-        self.tx
-            .send(Request::Platform { reply })
-            .map_err(|_| anyhow!("pjrt service stopped"))?;
-        rx.recv().map_err(|_| anyhow!("pjrt service dropped reply"))
+        match self.call(|reply| Request::Platform { reply })? {
+            Reply::Platform(p) => Ok(p),
+            _ => Err(anyhow!("pjrt service sent a mismatched reply")),
+        }
     }
 }

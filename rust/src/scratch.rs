@@ -43,6 +43,11 @@ pub struct CodecScratch {
     pub bytes_a: Vec<u8>,
     /// Byte-phase pong buffer.
     pub bytes_b: Vec<u8>,
+    /// Cached Huffman decode table, keyed by the payload's code-length
+    /// header: chunks with identical histograms (the steady-state case)
+    /// skip the per-chunk table rebuild and its 4096-entry allocation
+    /// entirely.
+    pub huffman: crate::codec::huffman::DecodeCache,
 }
 
 impl CodecScratch {
@@ -56,6 +61,7 @@ impl CodecScratch {
             + self.words_b.capacity() * 4
             + self.bytes_a.capacity()
             + self.bytes_b.capacity()
+            + self.huffman.retained_bytes()
     }
 }
 
@@ -74,7 +80,9 @@ pub struct Scratch {
     /// Outlier bitmap serialized to bytes (encode: pre-RLE; decode:
     /// post-RLE).
     pub bitmap: Vec<u8>,
-    /// Decode-side reconstruction buffer.
+    /// Decode-side staging buffer for callers that cannot provide a
+    /// preallocated output slice (the engine and streaming decoders
+    /// decode straight into their output instead).
     pub values: Vec<f32>,
 }
 

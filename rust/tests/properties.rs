@@ -268,6 +268,54 @@ fn prop_scratch_engine_matches_reference_containers() {
     }
 }
 
+/// PROPERTY: decoded output is BYTE-IDENTICAL across all three decode
+/// paths — the scratch-arena engine (cached multi-symbol Huffman
+/// table, SIMD bitshuffle, preallocated output), the streaming
+/// decompressor, and the naive `lc::reference` decoder (bit-by-bit
+/// Huffman walk, per-element dequantize) — for every quantizer variant
+/// and the default chain. The decode mirror of
+/// `prop_scratch_engine_matches_reference_containers`.
+#[test]
+fn prop_decode_paths_match_reference_bit_for_bit() {
+    use lc::data::Suite;
+    let suites = [Suite::Cesm, Suite::Hacc, Suite::Nyx];
+    let bounds = [
+        ErrorBound::Abs(1e-3),
+        ErrorBound::Rel(1e-3),
+        ErrorBound::Noa(1e-3),
+    ];
+    for (si, &suite) in suites.iter().enumerate() {
+        let x = suite.generate(si, 30_000 + si * 777);
+        for bound in bounds {
+            for variant in [FnVariant::Approx, FnVariant::Native] {
+                let mut cfg = EngineConfig::native(bound);
+                cfg.variant = variant;
+                cfg.chunk_size = 7777; // multiple chunks + short tail
+                cfg.workers = 3;
+                let (container, _) = compress(&cfg, &x).unwrap();
+                let bytes = container.to_bytes();
+                let (engine_y, _) = decompress(&cfg, &container).unwrap();
+                let reference_y = lc::reference::decompress(&container).unwrap();
+                let engine_bits: Vec<u32> = engine_y.iter().map(|v| v.to_bits()).collect();
+                let reference_bits: Vec<u32> =
+                    reference_y.iter().map(|v| v.to_bits()).collect();
+                assert_eq!(
+                    engine_bits, reference_bits,
+                    "{suite:?} {bound:?} {variant:?} engine != reference"
+                );
+                let (streamed_y, _) =
+                    lc::coordinator::decompress_slice_streaming(&cfg, &bytes).unwrap();
+                let streamed_bits: Vec<u32> =
+                    streamed_y.iter().map(|v| v.to_bits()).collect();
+                assert_eq!(
+                    streamed_bits, engine_bits,
+                    "{suite:?} {bound:?} {variant:?} stream != engine"
+                );
+            }
+        }
+    }
+}
+
 /// PROPERTY: NOA with range R equals ABS with eps*R (definition 2.1.3).
 #[test]
 fn prop_noa_equals_scaled_abs() {

@@ -1,0 +1,153 @@
+//! Decode-side robustness: hostile containers must produce `Err`,
+//! never a panic, hang, or unbounded allocation. Fuzz-style property
+//! tests (hand-rolled; proptest is unavailable offline) over
+//! `container::` parsing, `Pipeline::decode_into`, the in-memory
+//! engine, and the streaming decompressor.
+
+use lc::codec::{CodecScratch, Pipeline};
+use lc::container::Container;
+use lc::coordinator::{
+    compress, decompress, decompress_slice_streaming, EngineConfig,
+};
+use lc::data::Rng;
+use lc::types::ErrorBound;
+
+fn sample_container(n: usize) -> (EngineConfig, Vec<u8>, Vec<f32>) {
+    let mut rng = Rng::new(0xF00D);
+    let x: Vec<f32> = (0..n).map(|_| (rng.normal() * 10.0) as f32).collect();
+    let mut cfg = EngineConfig::native(ErrorBound::Abs(1e-3));
+    cfg.chunk_size = 2048; // several chunks
+    let (container, _) = compress(&cfg, &x).unwrap();
+    let (golden, _) = decompress(&cfg, &container).unwrap();
+    (cfg, container.to_bytes(), golden)
+}
+
+/// Zero-length and tiny inputs: clean errors everywhere.
+#[test]
+fn zero_length_and_tiny_containers_error_cleanly() {
+    let cfg = EngineConfig::native(ErrorBound::Abs(1e-3));
+    assert!(Container::from_bytes(&[]).is_err());
+    assert!(decompress_slice_streaming(&cfg, &[]).is_err());
+    for n in 1..64usize {
+        let junk = vec![0xA5u8; n];
+        assert!(Container::from_bytes(&junk).is_err(), "n={n}");
+        assert!(decompress_slice_streaming(&cfg, &junk).is_err(), "n={n}");
+    }
+}
+
+/// Every truncation point: `Err`, not panic — on both decode paths.
+#[test]
+fn truncated_containers_error_cleanly() {
+    let (cfg, bytes, _) = sample_container(10_000);
+    // Dense near the front (header framing), strided through the body.
+    let mut cuts: Vec<usize> = (0..64.min(bytes.len())).collect();
+    cuts.extend((64..bytes.len()).step_by(97));
+    cuts.push(bytes.len() - 1);
+    for cut in cuts {
+        assert!(Container::from_bytes(&bytes[..cut]).is_err(), "cut {cut}");
+        assert!(
+            decompress_slice_streaming(&cfg, &bytes[..cut]).is_err(),
+            "cut {cut}"
+        );
+    }
+}
+
+/// Random bit flips: either detected or decoded to the exact golden
+/// values (CRC collisions aside, corruption is never silent), and
+/// never a panic or OOM on either decode path.
+#[test]
+fn bit_flipped_containers_never_panic_or_go_silent() {
+    let (cfg, bytes, golden) = sample_container(20_000);
+    let mut rng = Rng::new(0xBEEF);
+    for trial in 0..300 {
+        let mut bad = bytes.clone();
+        let pos = rng.below(bad.len());
+        bad[pos] ^= 1u8 << rng.below(8);
+        // In-memory path.
+        if let Ok(c) = Container::from_bytes(&bad) {
+            if let Ok((y, _)) = decompress(&cfg, &c) {
+                let same = y.len() == golden.len()
+                    && y.iter().zip(&golden).all(|(a, b)| a.to_bits() == b.to_bits());
+                assert!(same, "trial {trial}: silent corruption at byte {pos}");
+            }
+        }
+        // Streaming path.
+        if let Ok((y, _)) = decompress_slice_streaming(&cfg, &bad) {
+            let same = y.len() == golden.len()
+                && y.iter().zip(&golden).all(|(a, b)| a.to_bits() == b.to_bits());
+            assert!(same, "trial {trial}: silent streaming corruption at {pos}");
+        }
+    }
+}
+
+/// A frame header claiming gigantic chunk lengths must be rejected
+/// before any allocation happens (no OOM on hostile streams).
+#[test]
+fn absurd_claimed_lengths_rejected_without_allocation() {
+    let (cfg, bytes, _) = sample_container(5_000);
+    let container = Container::from_bytes(&bytes).unwrap();
+    let header_len = container.header.to_bytes().len();
+    // Overwrite the first chunk frame's payload-length field (bytes
+    // 8..12 of the frame) with u32::MAX.
+    let mut bad = bytes.clone();
+    bad[header_len + 8..header_len + 12].copy_from_slice(&u32::MAX.to_le_bytes());
+    assert!(Container::from_bytes(&bad).is_err());
+    assert!(decompress_slice_streaming(&cfg, &bad).is_err());
+    // Same for the outlier-length field (bytes 4..8).
+    let mut bad = bytes.clone();
+    bad[header_len + 4..header_len + 8].copy_from_slice(&u32::MAX.to_le_bytes());
+    assert!(Container::from_bytes(&bad).is_err());
+    assert!(decompress_slice_streaming(&cfg, &bad).is_err());
+    // A header claiming 4G chunks must not pre-reserve for them.
+    let mut bad = bytes;
+    let n_chunks_off = header_len - 4;
+    bad[n_chunks_off..header_len].copy_from_slice(&u32::MAX.to_le_bytes());
+    assert!(Container::from_bytes(&bad).is_err());
+    assert!(decompress_slice_streaming(&cfg, &bad).is_err());
+}
+
+/// Raw garbage fed straight to the codec pipeline: `Err`, never panic,
+/// with one scratch reused across all trials (state poisoning from a
+/// failed decode must not corrupt later ones).
+#[test]
+fn pipeline_decode_survives_garbage_and_scratch_stays_usable() {
+    let p = Pipeline::default_chain();
+    let mut s = CodecScratch::new();
+    let mut rng = Rng::new(42);
+    for _ in 0..200 {
+        let len = rng.below(2000);
+        let garbage: Vec<u8> = (0..len).map(|_| rng.next_u32() as u8).collect();
+        let n = rng.below(4000);
+        let _ = p.decode_into(&garbage, n, &mut s); // must not panic
+    }
+    // The same scratch still decodes valid payloads correctly.
+    let words: Vec<u32> = (0..5000u32).map(|i| (i / 7) * 2).collect();
+    let enc = p.encode(&words);
+    p.decode_into(&enc, words.len(), &mut s).unwrap();
+    assert_eq!(s.words_a, words);
+}
+
+/// Huffman payloads with hostile headers (over-subscribed tables, bad
+/// lengths) through the cached decoder: `Err`, never panic, cache
+/// stays usable.
+#[test]
+fn hostile_huffman_headers_error_cleanly() {
+    use lc::codec::huffman;
+    let data: Vec<u8> = (0..10_000).map(|i| (i % 5) as u8).collect();
+    let good = huffman::encode(&data);
+    let mut cache = huffman::DecodeCache::new();
+    let mut out = Vec::new();
+    let mut rng = Rng::new(7);
+    for _ in 0..200 {
+        let mut bad = good.clone();
+        // Corrupt a handful of header bytes (mode, lens, length).
+        for _ in 0..1 + rng.below(4) {
+            let pos = rng.below(bad.len().min(300));
+            bad[pos] = rng.next_u32() as u8;
+        }
+        let _ = huffman::decode_into_cached(&bad, data.len(), &mut cache, &mut out);
+    }
+    // Cache still decodes the pristine payload.
+    huffman::decode_into_cached(&good, data.len(), &mut cache, &mut out).unwrap();
+    assert_eq!(out, data);
+}
