@@ -252,7 +252,10 @@ fn main() {
     // This is the acceptance metric for the zero-allocation refactor:
     // the engine's single-thread steady-state encode loop.
     let x = Suite::Cesm.generate(0, n);
-    let cfg = EngineConfig::native(ErrorBound::Abs(1e-3));
+    // Pin the container version: "before" is the seed's full-chain
+    // path, so the scratch side must encode the same (v1) format.
+    let mut cfg = EngineConfig::native(ErrorBound::Abs(1e-3));
+    cfg.container_version = lc::container::ContainerVersion::V1;
     let qc = QuantizerConfig::resolve(cfg.bound, cfg.variant, cfg.protection, &x);
     let m_before = measure(1, reps, || {
         let mut total = 0usize;
@@ -295,6 +298,77 @@ fn main() {
         m_after.eps(n) / m_before.eps(n).max(1.0)
     );
     if let Err(e) = update_bench_json(&json_path, "hotpath", &hot) {
+        eprintln!("failed to write {json_path}: {e}");
+    }
+
+    // ---- hotpath.encode_adaptive: the container-v2 adaptive plan path
+    // vs the v1 full-chain path on an INCOMPRESSIBLE-NOISE input — the
+    // workload where skipping stages (raw-stored chunks) pays. The
+    // acceptance metric for adaptive per-chunk stage selection; also
+    // emits the per-plan chunk counts so the plan mix is visible.
+    let mut seed = 0x5EEDu64;
+    let noise: Vec<f32> = (0..n)
+        .map(|_| {
+            seed ^= seed << 13;
+            seed ^= seed >> 7;
+            seed ^= seed << 17;
+            let v = f32::from_bits((seed >> 32) as u32);
+            if v.is_nan() {
+                1.0
+            } else {
+                v
+            }
+        })
+        .collect();
+    let mut cfg_full = EngineConfig::native(ErrorBound::Abs(1e-3));
+    cfg_full.container_version = lc::container::ContainerVersion::V1;
+    let mut cfg_adaptive = cfg_full.clone();
+    cfg_adaptive.container_version = lc::container::ContainerVersion::V2;
+    let qc_noise =
+        QuantizerConfig::resolve(cfg_full.bound, cfg_full.variant, cfg_full.protection, &noise);
+    let mut scratch = Scratch::new();
+    let m_full = measure(1, reps, || {
+        let mut total = 0usize;
+        for chunk in noise.chunks(CHUNK_ELEMS) {
+            let (rec, _) =
+                encode_chunk_record(&cfg_full, &qc_noise, chunk, &mut scratch).unwrap();
+            total += rec.payload.len();
+        }
+        std::hint::black_box(total);
+    });
+    let m_adaptive = measure(1, reps, || {
+        let mut total = 0usize;
+        for chunk in noise.chunks(CHUNK_ELEMS) {
+            let (rec, _) =
+                encode_chunk_record(&cfg_adaptive, &qc_noise, chunk, &mut scratch).unwrap();
+            total += rec.payload.len();
+        }
+        std::hint::black_box(total);
+    });
+    let mut hot_adaptive = vec![
+        ("encode_noise_full_eps".to_string(), m_full.eps(n)),
+        ("encode_adaptive_eps".to_string(), m_adaptive.eps(n)),
+        (
+            "encode_adaptive_speedup".to_string(),
+            m_adaptive.eps(n) / m_full.eps(n).max(1.0),
+        ),
+    ];
+    // Plan mix of the adaptive container (per-plan chunk counts). The
+    // full 16-mask key set for the 4-stage default chain is always
+    // emitted (zeros included) so the JSON merge can never leave a
+    // stale count from an earlier run behind.
+    let (adaptive_container, _) = lc::coordinator::compress(&cfg_adaptive, &noise).unwrap();
+    let hist = adaptive_container.plan_histogram();
+    for plan in 0..16usize {
+        hot_adaptive.push((format!("plan_{plan:04b}_chunks"), hist[plan] as f64));
+    }
+    println!(
+        "json hotpath encode_adaptive (noise): {:.0} -> {:.0} elem/s ({:.2}x)",
+        m_full.eps(n),
+        m_adaptive.eps(n),
+        m_adaptive.eps(n) / m_full.eps(n).max(1.0)
+    );
+    if let Err(e) = update_bench_json(&json_path, "hotpath", &hot_adaptive) {
         eprintln!("failed to write {json_path}: {e}");
     }
 

@@ -688,6 +688,47 @@ mod tests {
     }
 
     #[test]
+    fn hash_collision_with_different_lens_forces_rebuild() {
+        // The cache-hit test is `hash == && lens ==`; this forges the
+        // pathological half of it — two DISTINCT 256-byte lens headers
+        // whose stored hashes compare equal — and proves the full
+        // `lens` compare still forces a rebuild, so an FNV-1a collision
+        // can never decode a payload with the wrong table.
+        let data_a: Vec<u8> = (0..20_000).map(|i| (i % 3) as u8).collect();
+        let data_b: Vec<u8> = (0..20_000).map(|i| (i % 23) as u8).collect();
+        let enc_a = encode(&data_a);
+        let enc_b = encode(&data_b);
+        assert_eq!(enc_a[0], MODE_HUFFMAN);
+        assert_eq!(enc_b[0], MODE_HUFFMAN);
+        let lens_a: [u8; 256] = enc_a[1..257].try_into().unwrap();
+        let lens_b: [u8; 256] = enc_b[1..257].try_into().unwrap();
+        assert_ne!(lens_a, lens_b, "need two distinct lens headers");
+
+        let mut cache = DecodeCache::new();
+        let mut out = Vec::new();
+        decode_into_cached(&enc_a, data_a.len(), &mut cache, &mut out).unwrap();
+        assert_eq!(out, data_a);
+        assert_eq!(cache.lens, lens_a);
+
+        // Forge the collision: the cache still holds A's table + lens,
+        // but its stored hash now equals hash(lens_b) — exactly what
+        // prepare() would observe if fnv1a(lens_a) == fnv1a(lens_b).
+        cache.hash = fnv1a(&lens_b);
+
+        // A broken cache would take the hash shortcut and decode B with
+        // A's table (garbage or spurious errors); the full compare must
+        // rebuild instead.
+        decode_into_cached(&enc_b, data_b.len(), &mut cache, &mut out).unwrap();
+        assert_eq!(out, data_b, "collision decoded with the wrong table");
+        assert_eq!(cache.lens, lens_b, "cache must hold the rebuilt lens");
+        assert_eq!(cache.hash, fnv1a(&lens_b));
+
+        // And the rebuilt cache still hits + decodes correctly.
+        decode_into_cached(&enc_b, data_b.len(), &mut cache, &mut out).unwrap();
+        assert_eq!(out, data_b);
+    }
+
+    #[test]
     fn multi_symbol_entries_cover_short_codes() {
         // A two-symbol alphabet yields 1-bit codes, so every window
         // fuses two symbols — the multi-symbol fast path dominates.

@@ -24,9 +24,22 @@
 pub mod bitshuffle;
 pub mod delta;
 pub mod huffman;
+pub mod plan;
 pub mod rle;
 
 pub use crate::scratch::CodecScratch;
+
+/// Upper bound on stages per pipeline: a chunk's stage-selection plan
+/// is a one-byte mask over the header's stage list (container v2), so
+/// the list must fit in 8 bits.
+pub const MAX_STAGES: usize = 8;
+
+/// The plan mask that applies every stage of an `n_stages`-long chain.
+#[inline]
+pub fn full_mask_for(n_stages: usize) -> u8 {
+    debug_assert!(n_stages <= MAX_STAGES);
+    (((1u16) << n_stages) - 1) as u8
+}
 
 /// Identifier of one lossless stage (stored in the container header).
 #[derive(Debug, Clone, Copy, PartialEq, Eq)]
@@ -79,6 +92,11 @@ impl Pipeline {
     }
 
     pub fn new(stages: Vec<Stage>) -> Result<Pipeline, String> {
+        if stages.len() > MAX_STAGES {
+            return Err(format!(
+                "at most {MAX_STAGES} stages per pipeline (plan masks are one byte)"
+            ));
+        }
         let first_byte_stage = stages
             .iter()
             .position(|s| matches!(s, Stage::Rle0 | Stage::Huffman));
@@ -97,12 +115,26 @@ impl Pipeline {
         &self.stages
     }
 
-    /// Index of the first byte stage (== stages.len() when none).
-    fn byte_phase_start(&self) -> usize {
-        self.stages
-            .iter()
-            .position(|s| matches!(s, Stage::Rle0 | Stage::Huffman))
-            .unwrap_or(self.stages.len())
+    /// The plan mask that applies every stage of this chain (the only
+    /// plan a v1 container can express).
+    pub fn full_mask(&self) -> u8 {
+        full_mask_for(self.stages.len())
+    }
+
+    /// Select the stage subset a plan mask keeps (bit `i` set keeps
+    /// `stages[i]`; relative order — and therefore word-before-byte
+    /// validity — is preserved). Returns a fixed buffer + length so the
+    /// hot path never allocates a per-chunk `Vec<Stage>`.
+    fn masked(&self, mask: u8) -> ([Stage; MAX_STAGES], usize) {
+        let mut buf = [Stage::Delta; MAX_STAGES];
+        let mut n = 0usize;
+        for (i, &st) in self.stages.iter().enumerate() {
+            if mask & (1u8 << i) != 0 {
+                buf[n] = st;
+                n += 1;
+            }
+        }
+        (buf, n)
     }
 
     /// Encode a word stream to bytes using the scratch arena's
@@ -110,46 +142,22 @@ impl Pipeline {
     /// first). Zero heap allocations once `s` and `out` reached their
     /// high-water capacity.
     pub fn encode_into(&self, words: &[u32], s: &mut CodecScratch, out: &mut Vec<u8>) {
-        out.clear();
-        let split = self.byte_phase_start();
-        let (word_stages, byte_stages) = self.stages.split_at(split);
+        self.encode_masked_into(self.full_mask(), words, s, out);
+    }
 
-        s.words_a.clear();
-        s.words_a.extend_from_slice(words);
-        for &st in word_stages {
-            match st {
-                Stage::Delta => delta::encode(&mut s.words_a),
-                Stage::BitShuffle => {
-                    bitshuffle::encode_into(&s.words_a, &mut s.words_b);
-                    std::mem::swap(&mut s.words_a, &mut s.words_b);
-                }
-                _ => unreachable!(),
-            }
-        }
-
-        // If no byte stage runs, serialize the word phase directly.
-        if byte_stages.is_empty() {
-            words_to_bytes_into(&s.words_a, out);
-            return;
-        }
-        words_to_bytes_into(&s.words_a, &mut s.bytes_a);
-        let last = byte_stages.len() - 1;
-        for (i, &st) in byte_stages.iter().enumerate() {
-            if i == last {
-                match st {
-                    Stage::Rle0 => rle::encode_into(&s.bytes_a, out),
-                    Stage::Huffman => huffman::encode_into(&s.bytes_a, out),
-                    _ => unreachable!(),
-                }
-            } else {
-                match st {
-                    Stage::Rle0 => rle::encode_into(&s.bytes_a, &mut s.bytes_b),
-                    Stage::Huffman => huffman::encode_into(&s.bytes_a, &mut s.bytes_b),
-                    _ => unreachable!(),
-                }
-                std::mem::swap(&mut s.bytes_a, &mut s.bytes_b);
-            }
-        }
+    /// [`Pipeline::encode_into`] restricted to the stage subset a plan
+    /// mask keeps — the per-chunk adaptive encode entry point (container
+    /// v2). `mask == full_mask()` reproduces the unmasked behavior
+    /// exactly; `mask == 0` serializes the words raw.
+    pub fn encode_masked_into(
+        &self,
+        mask: u8,
+        words: &[u32],
+        s: &mut CodecScratch,
+        out: &mut Vec<u8>,
+    ) {
+        let (buf, n) = self.masked(mask);
+        encode_stages_into(&buf[..n], words, s, out);
     }
 
     /// Encode a word stream to bytes (allocating compat wrapper over
@@ -166,81 +174,22 @@ impl Pipeline {
     /// the API contract — see [`crate::scratch`]); this avoids one
     /// memcpy per chunk on the decompress hot path.
     pub fn decode_into(&self, data: &[u8], n_words: usize, s: &mut CodecScratch) -> Result<(), String> {
-        // Reconstruct intermediate lengths forward, then undo backward.
-        let shuffled_words = if self.stages.contains(&Stage::BitShuffle) {
-            n_words.div_ceil(32) * 32
-        } else {
-            n_words
-        };
-        let byte_len = shuffled_words * 4;
+        self.decode_masked_into(self.full_mask(), data, n_words, s)
+    }
 
-        let split = self.byte_phase_start();
-        let (word_stages, byte_stages) = self.stages.split_at(split);
-
-        // Undo byte stages in reverse. Intermediate expected lengths:
-        // every byte stage's input length equals byte_len except stages
-        // after an RLE/huffman (whose input is the previous stage's
-        // output, length unknown) — we only need expected lengths at
-        // the points we validate, so walk backward carrying "expected
-        // output length of this stage". The first iteration reads from
-        // `data`, later ones from the ping buffer.
-        let mut first = true;
-        for (i, &st) in byte_stages.iter().enumerate().rev() {
-            let expected = if i == 0 { byte_len } else { usize::MAX };
-            {
-                let src: &[u8] = if first { data } else { &s.bytes_a };
-                match st {
-                    Stage::Rle0 => {
-                        if expected == usize::MAX {
-                            return Err("rle0 cannot be preceded by another byte stage".into());
-                        }
-                        rle::decode_into(src, expected, &mut s.bytes_b)?;
-                    }
-                    Stage::Huffman => {
-                        // huffman embeds its length; validate when known.
-                        let n = embedded_huffman_len(src)?;
-                        if expected != usize::MAX && n != expected {
-                            return Err(format!("huffman length {n} != expected {expected}"));
-                        }
-                        // The scratch-cached decode table: zero rebuild
-                        // cost when this chunk's histogram matches the
-                        // previous one's.
-                        huffman::decode_into_cached(src, n, &mut s.huffman, &mut s.bytes_b)?;
-                    }
-                    _ => unreachable!(),
-                }
-            }
-            std::mem::swap(&mut s.bytes_a, &mut s.bytes_b);
-            first = false;
-        }
-        {
-            let cur: &[u8] = if first { data } else { &s.bytes_a };
-            if cur.len() != byte_len {
-                return Err(format!(
-                    "byte phase produced {} bytes, expected {byte_len}",
-                    cur.len()
-                ));
-            }
-            bytes_to_words_into(cur, &mut s.words_a);
-        }
-
-        for &st in word_stages.iter().rev() {
-            match st {
-                Stage::Delta => delta::decode(&mut s.words_a),
-                Stage::BitShuffle => {
-                    bitshuffle::decode_into(&s.words_a, n_words, &mut s.words_b)?;
-                    std::mem::swap(&mut s.words_a, &mut s.words_b);
-                }
-                _ => unreachable!(),
-            }
-        }
-        if s.words_a.len() != n_words {
-            return Err(format!(
-                "decoded {} words, expected {n_words}",
-                s.words_a.len()
-            ));
-        }
-        Ok(())
+    /// [`Pipeline::decode_into`] restricted to the stage subset a plan
+    /// mask keeps — the inverse of [`Pipeline::encode_masked_into`].
+    /// The mask must be the one recorded for the chunk (container v2's
+    /// per-chunk plan byte; v1 containers imply `full_mask()`).
+    pub fn decode_masked_into(
+        &self,
+        mask: u8,
+        data: &[u8],
+        n_words: usize,
+        s: &mut CodecScratch,
+    ) -> Result<(), String> {
+        let (buf, n) = self.masked(mask);
+        decode_stages_into(&buf[..n], data, n_words, s)
     }
 
     /// Decode bytes back to `n_words` words (allocating compat wrapper
@@ -250,6 +199,145 @@ impl Pipeline {
         self.decode_into(data, n_words, &mut s)?;
         Ok(s.words_a)
     }
+}
+
+/// Index of the first byte stage in a stage list (== len when none).
+fn byte_phase_start(stages: &[Stage]) -> usize {
+    stages
+        .iter()
+        .position(|s| matches!(s, Stage::Rle0 | Stage::Huffman))
+        .unwrap_or(stages.len())
+}
+
+/// The stage-list encode kernel behind [`Pipeline::encode_masked_into`]
+/// (operates on an explicit stage slice so masked subsets run without
+/// building a temporary `Pipeline`).
+fn encode_stages_into(stages: &[Stage], words: &[u32], s: &mut CodecScratch, out: &mut Vec<u8>) {
+    out.clear();
+    let split = byte_phase_start(stages);
+    let (word_stages, byte_stages) = stages.split_at(split);
+
+    s.words_a.clear();
+    s.words_a.extend_from_slice(words);
+    for &st in word_stages {
+        match st {
+            Stage::Delta => delta::encode(&mut s.words_a),
+            Stage::BitShuffle => {
+                bitshuffle::encode_into(&s.words_a, &mut s.words_b);
+                std::mem::swap(&mut s.words_a, &mut s.words_b);
+            }
+            _ => unreachable!(),
+        }
+    }
+
+    // If no byte stage runs, serialize the word phase directly.
+    if byte_stages.is_empty() {
+        words_to_bytes_into(&s.words_a, out);
+        return;
+    }
+    words_to_bytes_into(&s.words_a, &mut s.bytes_a);
+    let last = byte_stages.len() - 1;
+    for (i, &st) in byte_stages.iter().enumerate() {
+        if i == last {
+            match st {
+                Stage::Rle0 => rle::encode_into(&s.bytes_a, out),
+                Stage::Huffman => huffman::encode_into(&s.bytes_a, out),
+                _ => unreachable!(),
+            }
+        } else {
+            match st {
+                Stage::Rle0 => rle::encode_into(&s.bytes_a, &mut s.bytes_b),
+                Stage::Huffman => huffman::encode_into(&s.bytes_a, &mut s.bytes_b),
+                _ => unreachable!(),
+            }
+            std::mem::swap(&mut s.bytes_a, &mut s.bytes_b);
+        }
+    }
+}
+
+/// The stage-list decode kernel behind [`Pipeline::decode_masked_into`]
+/// (explicit stage slice, same reason as [`encode_stages_into`]).
+fn decode_stages_into(
+    stages: &[Stage],
+    data: &[u8],
+    n_words: usize,
+    s: &mut CodecScratch,
+) -> Result<(), String> {
+    // Reconstruct intermediate lengths forward, then undo backward.
+    let shuffled_words = if stages.contains(&Stage::BitShuffle) {
+        n_words.div_ceil(32) * 32
+    } else {
+        n_words
+    };
+    let byte_len = shuffled_words * 4;
+
+    let split = byte_phase_start(stages);
+    let (word_stages, byte_stages) = stages.split_at(split);
+
+    // Undo byte stages in reverse. Intermediate expected lengths:
+    // every byte stage's input length equals byte_len except stages
+    // after an RLE/huffman (whose input is the previous stage's
+    // output, length unknown) — we only need expected lengths at
+    // the points we validate, so walk backward carrying "expected
+    // output length of this stage". The first iteration reads from
+    // `data`, later ones from the ping buffer.
+    let mut first = true;
+    for (i, &st) in byte_stages.iter().enumerate().rev() {
+        let expected = if i == 0 { byte_len } else { usize::MAX };
+        {
+            let src: &[u8] = if first { data } else { &s.bytes_a };
+            match st {
+                Stage::Rle0 => {
+                    if expected == usize::MAX {
+                        return Err("rle0 cannot be preceded by another byte stage".into());
+                    }
+                    rle::decode_into(src, expected, &mut s.bytes_b)?;
+                }
+                Stage::Huffman => {
+                    // huffman embeds its length; validate when known.
+                    let n = embedded_huffman_len(src)?;
+                    if expected != usize::MAX && n != expected {
+                        return Err(format!("huffman length {n} != expected {expected}"));
+                    }
+                    // The scratch-cached decode table: zero rebuild
+                    // cost when this chunk's histogram matches the
+                    // previous one's.
+                    huffman::decode_into_cached(src, n, &mut s.huffman, &mut s.bytes_b)?;
+                }
+                _ => unreachable!(),
+            }
+        }
+        std::mem::swap(&mut s.bytes_a, &mut s.bytes_b);
+        first = false;
+    }
+    {
+        let cur: &[u8] = if first { data } else { &s.bytes_a };
+        if cur.len() != byte_len {
+            return Err(format!(
+                "byte phase produced {} bytes, expected {byte_len}",
+                cur.len()
+            ));
+        }
+        bytes_to_words_into(cur, &mut s.words_a);
+    }
+
+    for &st in word_stages.iter().rev() {
+        match st {
+            Stage::Delta => delta::decode(&mut s.words_a),
+            Stage::BitShuffle => {
+                bitshuffle::decode_into(&s.words_a, n_words, &mut s.words_b)?;
+                std::mem::swap(&mut s.words_a, &mut s.words_b);
+            }
+            _ => unreachable!(),
+        }
+    }
+    if s.words_a.len() != n_words {
+        return Err(format!(
+            "decoded {} words, expected {n_words}",
+            s.words_a.len()
+        ));
+    }
+    Ok(())
 }
 
 fn embedded_huffman_len(payload: &[u8]) -> Result<usize, String> {
@@ -417,6 +505,62 @@ mod tests {
             p.decode_into(&out, w.len(), &mut s).unwrap();
         }
         assert_eq!(s.retained_bytes(), high_water, "scratch must not regrow");
+    }
+
+    #[test]
+    fn masked_encode_equals_subset_pipeline() {
+        // Every mask over the default chain must behave exactly like a
+        // pipeline built from the kept stages — the invariant container
+        // v2's per-chunk plan bytes rely on.
+        let w = sample_words(10_000);
+        let p = Pipeline::default_chain();
+        let mut s = CodecScratch::new();
+        let mut out = Vec::new();
+        for mask in 0u8..=p.full_mask() {
+            let subset: Vec<Stage> = p
+                .stages()
+                .iter()
+                .enumerate()
+                .filter(|(i, _)| mask & (1 << i) != 0)
+                .map(|(_, &st)| st)
+                .collect();
+            let sub = Pipeline::new(subset).unwrap();
+            p.encode_masked_into(mask, &w, &mut s, &mut out);
+            assert_eq!(out, sub.encode(&w), "mask {mask:#06b}");
+            p.decode_masked_into(mask, &out, w.len(), &mut s).unwrap();
+            assert_eq!(s.words_a, w, "mask {mask:#06b}");
+        }
+    }
+
+    #[test]
+    fn full_mask_matches_unmasked_api() {
+        let w = sample_words(4096);
+        let p = Pipeline::default_chain();
+        assert_eq!(p.full_mask(), 0b1111);
+        let mut s = CodecScratch::new();
+        let mut out = Vec::new();
+        p.encode_masked_into(p.full_mask(), &w, &mut s, &mut out);
+        assert_eq!(out, p.encode(&w));
+        assert_eq!(full_mask_for(0), 0);
+        assert_eq!(full_mask_for(8), 0xFF);
+    }
+
+    #[test]
+    fn zero_mask_is_raw_words() {
+        let w = vec![1u32, 0x0102_0304];
+        let p = Pipeline::default_chain();
+        let mut s = CodecScratch::new();
+        let mut out = Vec::new();
+        p.encode_masked_into(0, &w, &mut s, &mut out);
+        assert_eq!(out, vec![1, 0, 0, 0, 4, 3, 2, 1]);
+        p.decode_masked_into(0, &out, 2, &mut s).unwrap();
+        assert_eq!(s.words_a, w);
+    }
+
+    #[test]
+    fn pipeline_rejects_too_many_stages() {
+        assert!(Pipeline::new(vec![Stage::Delta; 9]).is_err());
+        assert!(Pipeline::new(vec![Stage::Delta; 8]).is_ok());
     }
 
     #[test]

@@ -1,0 +1,308 @@
+//! Adaptive per-chunk stage selection (container v2's plan bytes).
+//!
+//! SZx (arXiv 2201.13020) shows that a cheap per-block compressibility
+//! estimate lets an error-bounded compressor skip its expensive stages
+//! on blocks that cannot profit from them, and cuSZ (arXiv 2007.09625)
+//! makes the per-chunk codec decision the difference between a
+//! framework that is fast on friendly data and one that is fast across
+//! diverse workloads. This module is that analyzer for the LC-style
+//! chain `delta -> bitshuffle -> rle0 -> huffman`:
+//!
+//! * **outlier density** (free — the quantizer already counted the
+//!   bitmap): a chunk dominated by lossless outliers carries raw
+//!   IEEE-754 bit patterns, which no stage of the chain compresses;
+//! * **byte-entropy estimate** over a sampled prefix of the
+//!   delta-transformed words: near 8 bits/byte means Huffman would at
+//!   best tie the stored-mode escape — after paying the full encode;
+//! * **two run-fraction proxies** over the same sample: the zero-byte
+//!   fraction (what an unshuffled RLE would see) and the fraction of
+//!   bit positions never set (those become the all-zero planes RLE
+//!   collapses after the shuffle). RLE is skipped only when both are
+//!   dry; a chunk without either gains nothing from RLE (and little
+//!   from the shuffle).
+//!
+//! The result is a one-byte **plan mask** over the header's stage list
+//! (bit `i` set applies `stages[i]`; see
+//! [`crate::codec::Pipeline::encode_masked_into`]). `0` means
+//! raw-stored words. The plan is recorded per chunk in the v2 container
+//! frame, so a wrong *estimate* can only cost ratio or speed — decode
+//! correctness never depends on the analyzer.
+
+use super::{full_mask_for, Stage};
+
+/// Analyzer sample budget: at most this many words of a chunk's prefix
+/// are examined (a 64 KiB chunk is judged from its first 16 KiB).
+pub const SAMPLE_WORDS: usize = 4096;
+
+/// Outlier density above which the whole chunk is raw-stored: most
+/// words are raw float bits, so every stage is wasted work.
+pub const RAW_OUTLIER_DENSITY: f32 = 0.5;
+
+/// Sampled byte entropy (bits/byte) above which Huffman is skipped —
+/// at 7.2 of 8 bits the best case is a ~10% ratio gain on the slowest
+/// stage, and in practice the stored-mode escape fires anyway.
+pub const HUFFMAN_ENTROPY_CUTOFF: f32 = 7.2;
+
+/// Run-fraction estimate below which RLE is skipped (a zero-run token
+/// stream longer than its input). RLE is only dropped when BOTH run
+/// proxies (pre-shuffle zero bytes AND guaranteed-zero post-shuffle
+/// bit-planes) fall below this — a deliberately conservative AND, so a
+/// mis-estimate costs a wasted cheap stage, not compression ratio.
+pub const RLE_ZERO_CUTOFF: f32 = 0.04;
+
+/// Cheap per-chunk statistics, computed from the quantized words before
+/// any lossless stage runs.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct ChunkAnalysis {
+    /// Fraction of values stored losslessly (from the quantizer
+    /// bitmap's popcount — no extra pass).
+    pub outlier_density: f32,
+    /// Shannon entropy (bits/byte) of the bytes of delta-transformed
+    /// sampled words.
+    pub entropy_bits: f32,
+    /// Fraction of zero bytes among the same sample — the run proxy
+    /// for an RLE that runs directly on delta bytes (no shuffle).
+    pub zero_byte_fraction: f32,
+    /// Fraction of the 32 bit positions never set across the sampled
+    /// delta words. After the bitshuffle those positions become
+    /// all-zero planes, which is exactly what Rle0 collapses — the run
+    /// proxy for the default (shuffled) chain. Low-cardinality chunks
+    /// with non-zero deltas score high here even when
+    /// `zero_byte_fraction` is low.
+    pub zero_plane_fraction: f32,
+}
+
+/// Analyze a chunk's quantized words: delta-transform a prefix sample
+/// on the fly (no buffer, no allocation), histogram its bytes, and
+/// derive the entropy / run estimates.
+pub fn analyze(words: &[u32], outlier_count: usize) -> ChunkAnalysis {
+    let n = words.len();
+    if n == 0 {
+        return ChunkAnalysis {
+            outlier_density: 0.0,
+            entropy_bits: 0.0,
+            zero_byte_fraction: 1.0,
+            zero_plane_fraction: 1.0,
+        };
+    }
+    let sample = n.min(SAMPLE_WORDS);
+    let mut hist = [0u32; 256];
+    let mut or_acc = 0u32;
+    let mut prev = 0u32;
+    for &w in &words[..sample] {
+        // The same zigzag delta the Delta stage applies, so the
+        // histogram sees the byte stream the byte stages would.
+        let d = w.wrapping_sub(prev) as i32;
+        let z = ((d << 1) ^ (d >> 31)) as u32;
+        prev = w;
+        or_acc |= z;
+        for b in z.to_le_bytes() {
+            hist[b as usize] += 1;
+        }
+    }
+    let total = (sample * 4) as f32;
+    let mut entropy = 0.0f32;
+    for &c in hist.iter() {
+        if c > 0 {
+            let p = c as f32 / total;
+            entropy -= p * p.log2();
+        }
+    }
+    ChunkAnalysis {
+        outlier_density: outlier_count as f32 / n as f32,
+        entropy_bits: entropy,
+        zero_byte_fraction: hist[0] as f32 / total,
+        zero_plane_fraction: (32 - or_acc.count_ones()) as f32 / 32.0,
+    }
+}
+
+impl ChunkAnalysis {
+    /// Map the analysis to a plan mask over `stages`. Stages are only
+    /// ever dropped, never added, so the mask is always a subset of the
+    /// header chain.
+    pub fn plan(&self, stages: &[Stage]) -> u8 {
+        let full = full_mask_for(stages.len());
+        let drop_huffman = self.entropy_bits > HUFFMAN_ENTROPY_CUTOFF;
+        // Drop RLE only when NEITHER run proxy sees material runs:
+        // zero bytes feed an unshuffled RLE, zero bit-planes feed the
+        // shuffled one (the default chain).
+        let drop_rle = self.zero_byte_fraction < RLE_ZERO_CUTOFF
+            && self.zero_plane_fraction < RLE_ZERO_CUTOFF;
+        if self.outlier_density > RAW_OUTLIER_DENSITY || (drop_huffman && drop_rle) {
+            // Outlier-saturated or incompressible on every estimate:
+            // raw-stored beats paying delta+shuffle for nothing.
+            return 0;
+        }
+        let mut mask = full;
+        for (i, st) in stages.iter().enumerate() {
+            let drop = match st {
+                Stage::Huffman => drop_huffman,
+                Stage::Rle0 => drop_rle,
+                Stage::Delta | Stage::BitShuffle => false,
+            };
+            if drop {
+                mask &= !(1u8 << i);
+            }
+        }
+        mask
+    }
+}
+
+/// Analyze a chunk and choose its plan mask in one call — the per-chunk
+/// entry point used by the v2 encode path.
+pub fn choose(stages: &[Stage], words: &[u32], outlier_count: usize) -> u8 {
+    if words.is_empty() {
+        return full_mask_for(stages.len());
+    }
+    analyze(words, outlier_count).plan(stages)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::codec::Pipeline;
+
+    fn default_stages() -> Vec<Stage> {
+        Pipeline::default_chain().stages().to_vec()
+    }
+
+    fn noise_words(n: usize) -> Vec<u32> {
+        let mut s = 0x9E37_79B9u64;
+        (0..n)
+            .map(|_| {
+                s ^= s << 13;
+                s ^= s >> 7;
+                s ^= s << 17;
+                s as u32
+            })
+            .collect()
+    }
+
+    #[test]
+    fn smooth_chunk_keeps_the_full_chain() {
+        // Small neighbouring bins: low entropy, plenty of zero bytes.
+        let words: Vec<u32> = (0..20_000u32).map(|i| (i / 64) * 2).collect();
+        let stages = default_stages();
+        let mask = choose(&stages, &words, 0);
+        assert_eq!(mask, full_mask_for(stages.len()), "smooth data must keep every stage");
+    }
+
+    #[test]
+    fn noise_chunk_goes_raw() {
+        let words = noise_words(20_000);
+        let a = analyze(&words, 0);
+        assert!(a.entropy_bits > 7.9, "entropy {}", a.entropy_bits);
+        assert!(a.zero_byte_fraction < 0.01, "zeros {}", a.zero_byte_fraction);
+        assert_eq!(choose(&default_stages(), &words, 0), 0);
+    }
+
+    #[test]
+    fn outlier_saturated_chunk_goes_raw() {
+        // Even smooth words go raw when most lanes are raw float bits.
+        let words: Vec<u32> = (0..1000u32).map(|i| i * 2).collect();
+        assert_eq!(choose(&default_stages(), &words, 600), 0);
+        assert_ne!(choose(&default_stages(), &words, 10), 0);
+    }
+
+    #[test]
+    fn low_cardinality_chunk_keeps_rle_for_its_zero_planes() {
+        // Words cycling over a small set of codes have few zero BYTES
+        // in their delta stream, but most of their 32 bit positions are
+        // never touched — after the shuffle those become the all-zero
+        // planes Rle0 collapses best. The plane proxy must keep RLE
+        // here even though the byte proxy alone would drop it.
+        let words: Vec<u32> = (0..20_000u32)
+            .map(|i| 0x0101_0101u32.wrapping_add((i % 7) * 0x0101_0101))
+            .collect();
+        let stages = default_stages();
+        let a = analyze(&words, 0);
+        assert!(a.zero_byte_fraction < RLE_ZERO_CUTOFF, "zeros {}", a.zero_byte_fraction);
+        assert!(
+            a.zero_plane_fraction > RLE_ZERO_CUTOFF,
+            "planes {}",
+            a.zero_plane_fraction
+        );
+        assert!(a.entropy_bits < HUFFMAN_ENTROPY_CUTOFF, "entropy {}", a.entropy_bits);
+        let mask = choose(&stages, &words, 0);
+        assert_eq!(mask, full_mask_for(stages.len()), "RLE must be kept: {mask:#06b}");
+    }
+
+    #[test]
+    fn decision_logic_drops_rle_only_when_both_run_proxies_are_dry() {
+        // The drop-RLE branch in isolation (constructing words whose
+        // delta bytes are simultaneously runless in both proxies yet
+        // low-entropy is contrived — the decision rule is what matters).
+        let stages = default_stages();
+        let base = ChunkAnalysis {
+            outlier_density: 0.0,
+            entropy_bits: 3.0,
+            zero_byte_fraction: 0.0,
+            zero_plane_fraction: 0.0,
+        };
+        // Both proxies dry -> RLE (stage index 2) dropped, rest kept.
+        assert_eq!(base.plan(&stages), 0b1011);
+        // Either proxy seeing runs -> RLE kept.
+        assert_eq!(
+            ChunkAnalysis { zero_plane_fraction: 0.5, ..base }.plan(&stages),
+            0b1111
+        );
+        assert_eq!(
+            ChunkAnalysis { zero_byte_fraction: 0.5, ..base }.plan(&stages),
+            0b1111
+        );
+        // High entropy on top of dry runs -> raw-stored.
+        assert_eq!(
+            ChunkAnalysis { entropy_bits: 7.9, ..base }.plan(&stages),
+            0
+        );
+        // High entropy but real runs -> Huffman dropped, RLE kept.
+        assert_eq!(
+            ChunkAnalysis {
+                entropy_bits: 7.9,
+                zero_plane_fraction: 0.5,
+                ..base
+            }
+            .plan(&stages),
+            0b0111
+        );
+        // Outlier saturation dominates everything.
+        assert_eq!(
+            ChunkAnalysis { outlier_density: 0.9, ..base }.plan(&stages),
+            0
+        );
+    }
+
+    #[test]
+    fn constant_chunk_keeps_full_chain() {
+        let words = vec![42u32; 10_000];
+        let stages = default_stages();
+        assert_eq!(choose(&stages, &words, 0), full_mask_for(stages.len()));
+    }
+
+    #[test]
+    fn empty_chunk_is_full_chain() {
+        let stages = default_stages();
+        assert_eq!(choose(&stages, &[], 0), full_mask_for(stages.len()));
+    }
+
+    #[test]
+    fn plans_never_add_stages() {
+        // For a shorter header chain the mask stays within its bits.
+        let stages = vec![Stage::Delta, Stage::Huffman];
+        for words in [noise_words(5000), vec![7u32; 5000]] {
+            let mask = choose(&stages, &words, 0);
+            assert_eq!(mask & !full_mask_for(stages.len()), 0);
+        }
+    }
+
+    #[test]
+    fn analysis_is_prefix_sampled() {
+        // A chunk whose tail is noise but whose prefix is smooth is
+        // judged by the prefix — documents (rather than hides) the
+        // sampling tradeoff.
+        let mut words: Vec<u32> = (0..SAMPLE_WORDS as u32).map(|i| i * 2).collect();
+        words.extend(noise_words(SAMPLE_WORDS));
+        let stages = default_stages();
+        assert_eq!(choose(&stages, &words, 0), full_mask_for(stages.len()));
+    }
+}

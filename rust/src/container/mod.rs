@@ -1,6 +1,6 @@
-//! The `.lcz` container format.
+//! The `.lcz` container format — versions 1 and 2.
 //!
-//! Layout (all integers little-endian):
+//! # v1 layout (magic `LCZ1`; all integers little-endian)
 //!
 //! ```text
 //! [magic "LCZ1" (4)] [flags u8] [eb_kind u8] [variant u8] [protection u8]
@@ -12,24 +12,100 @@
 //! [file crc32 u32 over everything before it]
 //! ```
 //!
+//! The per-chunk `crc32` covers the outlier bytes followed by the
+//! payload bytes; the trailing file CRC covers every byte before it
+//! (header and all chunk frames). Every chunk's payload is encoded with
+//! the full header stage chain.
+//!
+//! # v2 layout (magic `LCZ2`)
+//!
+//! Identical to v1 except each chunk frame carries a **plan byte**
+//! between the frame header and the frame body, and the chunk CRC
+//! additionally covers it:
+//!
+//! ```text
+//! per chunk:
+//!   [n_values u32] [outlier_bytes u32] [payload_bytes u32] [crc32 u32]
+//!   [plan u8] [outlier bitmap bytes] [payload bytes]
+//! ```
+//!
+//! The plan byte is a bit mask over the header's stage list: bit `i`
+//! set means `stages[i]` was applied to this chunk's payload (see
+//! [`crate::codec::Pipeline::encode_masked_into`]). Examples for the
+//! default chain `delta, bitshuffle, rle0, huffman`:
+//!
+//! | plan      | meaning                                   |
+//! |-----------|-------------------------------------------|
+//! | `0b1111`  | full chain (the only plan v1 can express) |
+//! | `0b1011`  | RLE skipped (no zero runs expected)       |
+//! | `0b0111`  | Huffman skipped (near-uniform bytes)      |
+//! | `0b0000`  | raw-stored words (incompressible chunk)   |
+//!
+//! Plan bits above the stage count are invalid and rejected at parse
+//! time. The chunk CRC in v2 covers `plan || outlier bytes || payload`,
+//! so a corrupted plan byte fails the chunk CRC, not just the file CRC.
+//!
 //! The outlier bitmap travels with each chunk ("in-line", Section 3.1),
 //! compressed as part of the integrity-checked chunk record. The
 //! effective epsilon records the NOA->ABS resolution so the decoder
-//! needs no second pass over the data.
+//! needs no second pass over the data. v1 containers remain fully
+//! readable (a v1 frame parses to the full-chain plan); the writer
+//! chooses the version via [`Header::version`]
+//! (`lc compress --container-version {1,2}`, default 2).
 
 pub mod crc;
 
 use crate::bitvec::BitVec;
-use crate::codec::{Pipeline, Stage};
+use crate::codec::{full_mask_for, Pipeline, Stage};
 use crate::types::{ErrorBound, FnVariant, Protection};
 
 use crc::{crc32, Crc32};
 
+/// v1 magic.
 pub const MAGIC: &[u8; 4] = b"LCZ1";
+/// v2 magic (per-chunk plan bytes).
+pub const MAGIC_V2: &[u8; 4] = b"LCZ2";
+
+/// Container format version. v2 adds the per-chunk plan byte that
+/// records the adaptive stage selection.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Default)]
+pub enum ContainerVersion {
+    V1,
+    #[default]
+    V2,
+}
+
+impl ContainerVersion {
+    /// Serialized length of this version's fixed chunk frame header.
+    pub fn chunk_frame_header_len(self) -> usize {
+        match self {
+            ContainerVersion::V1 => CHUNK_FRAME_HEADER_LEN,
+            ContainerVersion::V2 => CHUNK_FRAME_HEADER_LEN_V2,
+        }
+    }
+
+    fn magic(self) -> &'static [u8; 4] {
+        match self {
+            ContainerVersion::V1 => MAGIC,
+            ContainerVersion::V2 => MAGIC_V2,
+        }
+    }
+
+    fn from_magic(m: &[u8]) -> Option<ContainerVersion> {
+        if m == MAGIC {
+            Some(ContainerVersion::V1)
+        } else if m == MAGIC_V2 {
+            Some(ContainerVersion::V2)
+        } else {
+            None
+        }
+    }
+}
 
 /// Parsed container header.
 #[derive(Debug, Clone, PartialEq)]
 pub struct Header {
+    pub version: ContainerVersion,
     pub bound: ErrorBound,
     /// ABS epsilon actually used for binning (NOA resolves to this).
     pub effective_epsilon: f32,
@@ -45,6 +121,9 @@ pub struct Header {
 #[derive(Debug, Clone, PartialEq, Eq)]
 pub struct ChunkRecord {
     pub n_values: u32,
+    /// Stage-selection mask for this chunk's payload (bit `i` applies
+    /// header stage `i`). v1 frames always carry the full-chain mask.
+    pub plan: u8,
     pub outlier_bytes: Vec<u8>,
     pub payload: Vec<u8>,
 }
@@ -70,16 +149,20 @@ fn protection_tag(p: Protection) -> u8 {
     }
 }
 
-/// Serialized length of a chunk frame header
+/// Serialized length of a v1 chunk frame header
 /// (`n_values | outlier_bytes | payload_bytes | crc32`, u32 each).
 pub const CHUNK_FRAME_HEADER_LEN: usize = 16;
+
+/// Serialized length of a v2 chunk frame header (v1 plus the plan
+/// byte).
+pub const CHUNK_FRAME_HEADER_LEN_V2: usize = CHUNK_FRAME_HEADER_LEN + 1;
 
 impl Header {
     /// Serialize the header — everything that precedes the chunk
     /// records, `n_chunks` included.
     pub fn to_bytes(&self) -> Vec<u8> {
         let mut out = Vec::new();
-        out.extend_from_slice(MAGIC);
+        out.extend_from_slice(self.version.magic());
         out.push(0); // flags, reserved
         out.push(self.bound.kind_tag());
         out.push(variant_tag(self.variant));
@@ -101,22 +184,28 @@ impl Header {
     /// [`HEADER_FIXED_LEN`] bytes (through the stage count at offset
     /// `HEADER_FIXED_LEN - 1`), followed by one byte per stage and the
     /// 4-byte chunk count — the framing the streaming decoder reads
-    /// incrementally.
+    /// incrementally. Both container versions share this layout; the
+    /// magic selects the version.
     pub fn parse_prefix(data: &[u8]) -> Result<(Header, usize), String> {
         let mut r = Reader { data, pos: 0 };
         let h = parse_header(&mut r)?;
         Ok((h, r.pos))
     }
+
+    /// The plan mask meaning "every header stage" — the implied plan of
+    /// every v1 chunk.
+    pub fn full_plan(&self) -> u8 {
+        full_mask_for(self.stages.len())
+    }
 }
 
 /// Bytes before the per-stage tags in a serialized header (magic
-/// through the stage count byte).
+/// through the stage count byte); identical in v1 and v2.
 pub const HEADER_FIXED_LEN: usize = 29;
 
 fn parse_header(r: &mut Reader) -> Result<Header, String> {
-    if r.take(4)? != MAGIC {
-        return Err("bad magic (not an LCZ1 file)".into());
-    }
+    let version = ContainerVersion::from_magic(r.take(4)?)
+        .ok_or("bad magic (not an LCZ1/LCZ2 file)")?;
     let _flags = r.u8()?;
     let eb_kind = r.u8()?;
     let variant = match r.u8()? {
@@ -139,6 +228,9 @@ fn parse_header(r: &mut Reader) -> Result<Header, String> {
         return Err("zero chunk size".into());
     }
     let n_stages = r.u8()? as usize;
+    if n_stages > crate::codec::MAX_STAGES {
+        return Err(format!("stage count {n_stages} exceeds the plan-mask limit"));
+    }
     let mut stages = Vec::with_capacity(n_stages);
     for _ in 0..n_stages {
         let t = r.u8()?;
@@ -146,6 +238,7 @@ fn parse_header(r: &mut Reader) -> Result<Header, String> {
     }
     let n_chunks = r.u32()?;
     Ok(Header {
+        version,
         bound,
         effective_epsilon: effective,
         variant,
@@ -158,28 +251,36 @@ fn parse_header(r: &mut Reader) -> Result<Header, String> {
 }
 
 impl ChunkRecord {
-    /// CRC over the record's owned bytes — the integrity word stored in
-    /// the chunk frame.
-    pub fn crc32(&self) -> u32 {
+    /// CRC over the record's integrity-checked bytes — the word stored
+    /// in the chunk frame. v1 covers `outlier || payload`; v2 also
+    /// covers the plan byte (prepended), so a flipped plan fails fast.
+    pub fn crc32(&self, version: ContainerVersion) -> u32 {
         let mut crc = Crc32::new();
+        if version == ContainerVersion::V2 {
+            crc.update(&[self.plan]);
+        }
         crc.update(&self.outlier_bytes);
         crc.update(&self.payload);
         crc.finalize()
     }
 
     /// Append the chunk frame (header + bytes) to `out`.
-    pub fn write_to(&self, out: &mut Vec<u8>) {
+    pub fn write_to(&self, version: ContainerVersion, out: &mut Vec<u8>) {
         out.extend_from_slice(&self.n_values.to_le_bytes());
         out.extend_from_slice(&(self.outlier_bytes.len() as u32).to_le_bytes());
         out.extend_from_slice(&(self.payload.len() as u32).to_le_bytes());
-        out.extend_from_slice(&self.crc32().to_le_bytes());
+        out.extend_from_slice(&self.crc32(version).to_le_bytes());
+        if version == ContainerVersion::V2 {
+            out.push(self.plan);
+        }
         out.extend_from_slice(&self.outlier_bytes);
         out.extend_from_slice(&self.payload);
     }
 }
 
-/// Parse one chunk frame header into
-/// `(n_values, outlier_len, payload_len, crc32)`.
+/// Parse one v1 chunk frame header into
+/// `(n_values, outlier_len, payload_len, crc32)`. The v2 frame header
+/// is the same 16 bytes followed by the plan byte.
 pub fn parse_chunk_frame_header(b: &[u8; CHUNK_FRAME_HEADER_LEN]) -> (u32, u32, u32, u32) {
     (
         u32::from_le_bytes(b[0..4].try_into().unwrap()),
@@ -190,46 +291,61 @@ pub fn parse_chunk_frame_header(b: &[u8; CHUNK_FRAME_HEADER_LEN]) -> (u32, u32, 
 }
 
 impl Container {
-    /// Serialize to bytes.
+    /// Serialize to bytes (the version recorded in the header picks the
+    /// frame layout).
     pub fn to_bytes(&self) -> Vec<u8> {
         let mut header = self.header.clone();
         header.n_chunks = self.chunks.len() as u32;
         let mut out = header.to_bytes();
         for c in &self.chunks {
-            c.write_to(&mut out);
+            c.write_to(self.header.version, &mut out);
         }
         let file_crc = crc32(&out);
         out.extend_from_slice(&file_crc.to_le_bytes());
         out
     }
 
-    /// Parse and fully validate a container.
+    /// Parse and fully validate a container (either version).
     pub fn from_bytes(data: &[u8]) -> Result<Container, String> {
         let mut r = Reader { data, pos: 0 };
         let header = parse_header(&mut r)?;
+        let version = header.version;
+        let full_plan = header.full_plan();
         let n_chunks = header.n_chunks;
         // Cap the pre-reservation by what the data could possibly hold
         // (a corrupt header claiming 4G chunks must not OOM).
-        let plausible = (data.len() - r.pos) / CHUNK_FRAME_HEADER_LEN;
+        let plausible = (data.len() - r.pos) / version.chunk_frame_header_len();
         let mut chunks = Vec::with_capacity((n_chunks as usize).min(plausible));
         for i in 0..n_chunks {
             let n = r.u32()?;
             let ob = r.u32()? as usize;
             let pb = r.u32()? as usize;
             let want_crc = r.u32()?;
+            let plan = match version {
+                ContainerVersion::V1 => full_plan,
+                ContainerVersion::V2 => {
+                    let p = r.u8()?;
+                    if p & !full_plan != 0 {
+                        return Err(format!(
+                            "chunk {i} plan {p:#04x} has bits outside the {} header stages",
+                            header.stages.len()
+                        ));
+                    }
+                    p
+                }
+            };
             let outlier_bytes = r.take(ob)?.to_vec();
             let payload = r.take(pb)?.to_vec();
-            let mut crc = Crc32::new();
-            crc.update(&outlier_bytes);
-            crc.update(&payload);
-            if crc.finalize() != want_crc {
-                return Err(format!("chunk {i} CRC mismatch"));
-            }
-            chunks.push(ChunkRecord {
+            let rec = ChunkRecord {
                 n_values: n,
+                plan,
                 outlier_bytes,
                 payload,
-            });
+            };
+            if rec.crc32(version) != want_crc {
+                return Err(format!("chunk {i} CRC mismatch"));
+            }
+            chunks.push(rec);
         }
         let body_end = r.pos;
         let file_crc = r.u32()?;
@@ -255,16 +371,29 @@ impl Container {
     pub fn compressed_size(&self) -> usize {
         self.to_bytes().len()
     }
+
+    /// Chunk count per plan mask (index = plan byte) — observability
+    /// for the adaptive selection (bench emitters, tests).
+    pub fn plan_histogram(&self) -> [usize; 256] {
+        let mut hist = [0usize; 256];
+        for c in &self.chunks {
+            hist[c.plan as usize] += 1;
+        }
+        hist
+    }
 }
 
-/// Decode one chunk record back to words + outlier map. The outlier
-/// bitmap is RLE-compressed in the record (an uncompressed bitmap
-/// would cap the achievable ratio at 32x).
+/// Decode one chunk record back to words + outlier map, honoring the
+/// record's plan mask. The outlier bitmap is RLE-compressed in the
+/// record (an uncompressed bitmap would cap the achievable ratio at
+/// 32x).
 pub fn decode_chunk(
     rec: &ChunkRecord,
     pipeline: &Pipeline,
 ) -> Result<(Vec<u32>, BitVec), String> {
-    let words = pipeline.decode(&rec.payload, rec.n_values as usize)?;
+    let mut s = crate::codec::CodecScratch::new();
+    pipeline.decode_masked_into(rec.plan, &rec.payload, rec.n_values as usize, &mut s)?;
+    let words = s.words_a;
     let n = rec.n_values as usize;
     let bitmap = crate::codec::rle::decode(&rec.outlier_bytes, n.div_ceil(8))?;
     let outliers = BitVec::from_bytes(&bitmap, n)?;
@@ -299,9 +428,11 @@ impl<'a> Reader<'a> {
 mod tests {
     use super::*;
 
-    fn sample() -> Container {
+    fn sample_versioned(version: ContainerVersion) -> Container {
+        let full = full_mask_for(4);
         Container {
             header: Header {
+                version,
                 bound: ErrorBound::Abs(1e-3),
                 effective_epsilon: 1e-3,
                 variant: FnVariant::Approx,
@@ -314,11 +445,14 @@ mod tests {
             chunks: vec![
                 ChunkRecord {
                     n_values: 100,
+                    plan: full,
                     outlier_bytes: vec![0xAA; 13],
                     payload: vec![1, 2, 3, 4, 5],
                 },
                 ChunkRecord {
                     n_values: 50,
+                    // v1 frames can only record the full chain.
+                    plan: if version == ContainerVersion::V2 { 0b1011 } else { full },
                     outlier_bytes: vec![0x00; 7],
                     payload: vec![9; 40],
                 },
@@ -326,28 +460,77 @@ mod tests {
         }
     }
 
-    #[test]
-    fn roundtrip() {
-        let c = sample();
-        let bytes = c.to_bytes();
-        let back = Container::from_bytes(&bytes).unwrap();
-        assert_eq!(back, c);
+    fn sample() -> Container {
+        sample_versioned(ContainerVersion::V1)
     }
 
     #[test]
-    fn detects_bit_flips_anywhere() {
-        let bytes = sample().to_bytes();
-        // Flip every 13th byte and confirm *some* check fires; payload
-        // flips must fire the chunk CRC, header flips the file CRC or a
-        // parse error.
-        for i in (0..bytes.len()).step_by(13) {
-            let mut bad = bytes.clone();
-            bad[i] ^= 0x10;
-            assert!(
-                Container::from_bytes(&bad).is_err(),
-                "flip at {i} went undetected"
-            );
+    fn roundtrip_both_versions() {
+        for version in [ContainerVersion::V1, ContainerVersion::V2] {
+            let c = sample_versioned(version);
+            let bytes = c.to_bytes();
+            let back = Container::from_bytes(&bytes).unwrap();
+            assert_eq!(back, c, "{version:?}");
+            assert_eq!(back.header.version, version);
         }
+    }
+
+    #[test]
+    fn v2_roundtrips_plan_bytes() {
+        let c = sample_versioned(ContainerVersion::V2);
+        let back = Container::from_bytes(&c.to_bytes()).unwrap();
+        assert_eq!(back.chunks[0].plan, 0b1111);
+        assert_eq!(back.chunks[1].plan, 0b1011);
+        let hist = back.plan_histogram();
+        assert_eq!(hist[0b1111], 1);
+        assert_eq!(hist[0b1011], 1);
+    }
+
+    #[test]
+    fn v1_frames_imply_the_full_plan() {
+        let c = sample();
+        let back = Container::from_bytes(&c.to_bytes()).unwrap();
+        assert!(back.chunks.iter().all(|r| r.plan == 0b1111));
+    }
+
+    #[test]
+    fn v2_rejects_plan_bits_past_stage_count() {
+        let mut c = sample_versioned(ContainerVersion::V2);
+        c.chunks[1].plan = 0b1_0000; // bit 4 of a 4-stage chain
+        let bytes = c.to_bytes();
+        let err = Container::from_bytes(&bytes).unwrap_err();
+        assert!(err.contains("plan"), "{err}");
+    }
+
+    #[test]
+    fn detects_bit_flips_anywhere_both_versions() {
+        for version in [ContainerVersion::V1, ContainerVersion::V2] {
+            let bytes = sample_versioned(version).to_bytes();
+            // Flip every 13th byte and confirm *some* check fires;
+            // payload flips must fire the chunk CRC, header flips the
+            // file CRC or a parse error, v2 plan-byte flips the chunk
+            // CRC.
+            for i in (0..bytes.len()).step_by(13) {
+                let mut bad = bytes.clone();
+                bad[i] ^= 0x10;
+                assert!(
+                    Container::from_bytes(&bad).is_err(),
+                    "{version:?}: flip at {i} went undetected"
+                );
+            }
+        }
+    }
+
+    #[test]
+    fn v2_plan_byte_flip_fails_chunk_crc() {
+        let c = sample_versioned(ContainerVersion::V2);
+        let bytes = c.to_bytes();
+        let plan_off = c.header.to_bytes().len() + CHUNK_FRAME_HEADER_LEN;
+        assert_eq!(bytes[plan_off], 0b1111);
+        let mut bad = bytes.clone();
+        bad[plan_off] = 0b0111; // a *valid* but wrong plan
+        let err = Container::from_bytes(&bad).unwrap_err();
+        assert!(err.contains("CRC"), "{err}");
     }
 
     #[test]

@@ -28,8 +28,8 @@ use std::time::Instant;
 
 use anyhow::{anyhow, Result};
 
-use crate::codec::Pipeline;
-use crate::container::{ChunkRecord, Container, Header};
+use crate::codec::{plan, Pipeline};
+use crate::container::{ChunkRecord, Container, ContainerVersion, Header};
 use crate::quantizer::QuantizerConfig;
 use crate::runtime::PjrtHandle;
 use crate::scratch::Scratch;
@@ -50,6 +50,10 @@ pub struct EngineConfig {
     /// Values per chunk. Must equal CHUNK_ELEMS when device == Pjrt
     /// (the AOT artifacts have a fixed shape).
     pub chunk_size: usize,
+    /// Container format to write. V2 (default) enables adaptive
+    /// per-chunk stage selection; V1 reproduces the seed's format
+    /// byte-for-byte (every chunk uses the full stage chain).
+    pub container_version: ContainerVersion,
     /// PJRT handle, required when device == Pjrt.
     pub pjrt: Option<PjrtHandle>,
 }
@@ -64,6 +68,7 @@ impl EngineConfig {
             pipeline: Pipeline::default_chain(),
             workers: 0,
             chunk_size: CHUNK_ELEMS,
+            container_version: ContainerVersion::default(),
             pjrt: None,
         }
     }
@@ -161,6 +166,12 @@ fn quantize_into_scratch(
 /// count. This is the single per-chunk encode path shared by the
 /// in-memory engine and the streaming pipeline; the only allocations
 /// are the record's owned bytes.
+///
+/// Under container v2 a cheap per-chunk analysis (outlier density from
+/// the quantizer bitmap, sampled byte entropy, sampled zero-run
+/// fraction — see [`crate::codec::plan`]) picks the stage subset for
+/// this chunk's payload and records it as the frame's plan byte; v1
+/// always applies the full header chain.
 pub fn encode_chunk_record(
     cfg: &EngineConfig,
     qc: &QuantizerConfig,
@@ -174,11 +185,17 @@ pub fn encode_chunk_record(
     crate::bitvec::bits_to_bytes_into(&s.obits, values.len(), &mut s.bitmap);
     let mut outlier_bytes = Vec::new();
     crate::codec::rle::encode_into(&s.bitmap, &mut outlier_bytes);
+    let chunk_plan = match cfg.container_version {
+        ContainerVersion::V1 => cfg.pipeline.full_mask(),
+        ContainerVersion::V2 => plan::choose(cfg.pipeline.stages(), &s.qwords, outliers),
+    };
     let mut payload = Vec::new();
-    cfg.pipeline.encode_into(&s.qwords, &mut s.codec, &mut payload);
+    cfg.pipeline
+        .encode_masked_into(chunk_plan, &s.qwords, &mut s.codec, &mut payload);
     Ok((
         ChunkRecord {
             n_values: values.len() as u32,
+            plan: chunk_plan,
             outlier_bytes,
             payload,
         },
@@ -192,7 +209,9 @@ pub fn encode_chunk_record(
 /// shared by the in-memory engine and the streaming decompressor;
 /// steady state it performs zero heap allocations — the Huffman decode
 /// table is cached in the scratch, every intermediate buffer is
-/// reused, and the output is caller-preallocated.
+/// reused, and the output is caller-preallocated. The record's plan
+/// mask (container v2) selects the stage subset to undo; v1 records
+/// carry the full-chain mask.
 pub fn decode_chunk_record_into(
     cfg: &EngineConfig,
     qc: &QuantizerConfig,
@@ -209,14 +228,18 @@ pub fn decode_chunk_record_into(
         ));
     }
     pipeline
-        .decode_into(&rec.payload, n, &mut s.codec)
+        .decode_masked_into(rec.plan, &rec.payload, n, &mut s.codec)
         .map_err(|e| anyhow!(e))?;
     crate::codec::rle::decode_into(&rec.outlier_bytes, n.div_ceil(8), &mut s.bitmap)
         .map_err(|e| anyhow!(e))?;
     crate::bitvec::bytes_to_bits_into(&s.bitmap, n, &mut s.obits).map_err(|e| anyhow!(e))?;
     match cfg.device {
         Device::Native => {
-            qc.dequantize_native_slice(&s.codec.words_a, &s.obits, out);
+            // The decode boundary validates the bitmap length so a
+            // malformed container errors instead of panicking in the
+            // dequantize kernels.
+            qc.dequantize_native_slice(&s.codec.words_a, &s.obits, out)
+                .map_err(|e| anyhow!(e))?;
             Ok(())
         }
         Device::Pjrt => {
@@ -330,6 +353,7 @@ pub fn compress(cfg: &EngineConfig, data: &[f32]) -> Result<(Container, RunStats
 
     let container = Container {
         header: Header {
+            version: cfg.container_version,
             bound: cfg.bound,
             effective_epsilon: qc.effective_epsilon(),
             variant: cfg.variant,

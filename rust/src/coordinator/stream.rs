@@ -31,8 +31,8 @@ use std::time::Instant;
 use anyhow::{anyhow, bail, Result};
 
 use crate::container::{
-    crc::Crc32, parse_chunk_frame_header, ChunkRecord, Header, CHUNK_FRAME_HEADER_LEN,
-    HEADER_FIXED_LEN,
+    crc::Crc32, parse_chunk_frame_header, ChunkRecord, ContainerVersion, Header,
+    CHUNK_FRAME_HEADER_LEN_V2, HEADER_FIXED_LEN,
 };
 use crate::quantizer::QuantizerConfig;
 use crate::scratch::Scratch;
@@ -193,6 +193,7 @@ pub fn compress_stream<R: Read, W: Write>(
 
     let container = crate::container::Container {
         header: crate::container::Header {
+            version: cfg.container_version,
             bound: cfg.bound,
             effective_epsilon: qc.effective_epsilon(),
             variant: cfg.variant,
@@ -297,6 +298,8 @@ pub fn decompress_stream<R: Read, W: Write + Send>(
             bail!("PJRT device requires chunk_size == {CHUNK_ELEMS} (AOT shape)");
         }
     }
+    let version = header.version;
+    let full_plan = header.full_plan();
     let chunk_size = header.chunk_size as usize;
     let n_chunks = header.n_chunks as usize;
     if n_chunks != (header.n_values as usize).div_ceil(chunk_size) {
@@ -340,7 +343,7 @@ pub fn decompress_stream<R: Read, W: Write + Send>(
                 let wcfg = cfg.clone();
                 let mut scratch = Scratch::new();
                 while let Some(item) = work_rx.recv() {
-                    if item.record.crc32() != item.want_crc {
+                    if item.record.crc32(version) != item.want_crc {
                         *err.lock().unwrap() =
                             Some(anyhow!("chunk {} CRC mismatch", item.index));
                         break;
@@ -409,8 +412,10 @@ pub fn decompress_stream<R: Read, W: Write + Send>(
         });
 
         // Reader (this thread): frame one chunk at a time under
-        // backpressure from the bounded work queue.
-        let mut frame_head = [0u8; CHUNK_FRAME_HEADER_LEN];
+        // backpressure from the bounded work queue. The frame header is
+        // 16 bytes (v1) or 17 (v2's trailing plan byte).
+        let fh_len = version.chunk_frame_header_len();
+        let mut frame_head = [0u8; CHUNK_FRAME_HEADER_LEN_V2];
         let mut values_seen = 0u64;
         for index in 0..n_chunks {
             // A failed worker never emits its chunk, so the collector
@@ -420,14 +425,31 @@ pub fn decompress_stream<R: Read, W: Write + Send>(
             if err.lock().unwrap().is_some() {
                 break;
             }
-            if read_exact_tracked(&mut input, &mut frame_head, &mut crc, &mut compressed_bytes)
-                .is_err()
+            if read_exact_tracked(
+                &mut input,
+                &mut frame_head[..fh_len],
+                &mut crc,
+                &mut compressed_bytes,
+            )
+            .is_err()
             {
                 drop(work_tx);
                 let _ = collector.join();
                 bail!("truncated container at chunk {index}");
             }
-            let (n, ob, pb, want_crc) = parse_chunk_frame_header(&frame_head);
+            let fixed: [u8; 16] = frame_head[..16].try_into().unwrap();
+            let (n, ob, pb, want_crc) = parse_chunk_frame_header(&fixed);
+            let chunk_plan = match version {
+                ContainerVersion::V1 => full_plan,
+                ContainerVersion::V2 => frame_head[16],
+            };
+            if chunk_plan & !full_plan != 0 {
+                drop(work_tx);
+                let _ = collector.join();
+                bail!(
+                    "chunk {index} plan {chunk_plan:#04x} has bits outside the header stages"
+                );
+            }
             let n = n as usize;
             let last = index + 1 == n_chunks;
             if n == 0 || n > chunk_size || (!last && n != chunk_size) {
@@ -461,6 +483,7 @@ pub fn decompress_stream<R: Read, W: Write + Send>(
                 index,
                 record: ChunkRecord {
                     n_values: n as u32,
+                    plan: chunk_plan,
                     outlier_bytes,
                     payload,
                 },

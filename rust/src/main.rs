@@ -41,6 +41,8 @@ USAGE:
   lc compress   <in.f32> <out.lcz> [--eb-type abs|rel|noa] [--eb EPS]
                 [--variant approx|native] [--unprotected]
                 [--device native|pjrt] [--workers N]
+                [--container-version 1|2]  (2 = adaptive per-chunk
+                stage selection, the default; 1 = seed format)
   lc decompress <in.lcz> <out.f32> [--device native|pjrt] [--workers N]
   lc verify     <orig.f32> <file.lcz>
   lc gendata    <suite> <file-idx> <n-values> <out.f32>
@@ -117,6 +119,11 @@ fn engine_config(o: &Opts, service: &mut Option<PjrtService>) -> Result<EngineCo
     if o.flag("unprotected").is_some() {
         cfg.protection = Protection::Unprotected;
     }
+    cfg.container_version = match o.usize_flag("container-version", 2)? {
+        1 => lc::container::ContainerVersion::V1,
+        2 => lc::container::ContainerVersion::V2,
+        v => bail!("unknown --container-version {v} (expected 1 or 2)"),
+    };
     cfg.workers = o.usize_flag("workers", 0)?;
     if o.flag("device") == Some("pjrt") {
         let svc = PjrtService::start(&default_artifact_dir())?;

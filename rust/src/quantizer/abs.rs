@@ -115,12 +115,19 @@ pub fn quantize(x: &[f32], p: AbsParams, protection: Protection) -> QuantizedChu
 
 /// Decode a word stream + packed outlier bitmap directly into a
 /// preallocated slice (`out.len()` must equal `words.len()`; `obits`
-/// must cover `words.len()` bits) — the shared blocked kernel behind
+/// must cover `words.len()` bits — decode boundaries validate this via
+/// [`crate::quantizer::check_bitmap_len`] and return a typed error,
+/// keeping this kernel branch-light) — the shared blocked kernel behind
 /// both the engine's preallocated-output decode loop and the streaming
 /// decoder. The multiply must stay a single f32 operation: it defines
 /// the reconstruction the encoder verified.
 pub fn dequantize_slice(words: &[u32], obits: &[u64], p: AbsParams, out: &mut [f32]) {
     assert_eq!(out.len(), words.len(), "output slice length mismatch");
+    assert!(
+        obits.len() >= words.len().div_ceil(64),
+        "outlier bitmap shorter than the word stream (callers must \
+         check_bitmap_len at the decode boundary)"
+    );
     for (bi, (blk, oblk)) in words.chunks(64).zip(out.chunks_mut(64)).enumerate() {
         let mask = obits[bi];
         for (j, (&w, o)) in blk.iter().zip(oblk.iter_mut()).enumerate() {

@@ -18,7 +18,56 @@ pub mod f64data;
 pub mod noa;
 pub mod rel;
 
+use std::fmt;
+
 use crate::types::{ErrorBound, FnVariant, Protection, QuantizedChunk};
+
+/// Typed error for a decode-side outlier bitmap that cannot cover the
+/// word stream: `obits` must hold at least `ceil(n_values / 64)` packed
+/// words. A malformed container must surface this as an `Err` at the
+/// decode boundary, never as an index panic inside the dequantize
+/// kernels.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct BitmapLengthError {
+    /// Words (values) the caller asked to dequantize.
+    pub n_values: usize,
+    /// Packed u64 bitmap words actually provided.
+    pub obits_words: usize,
+}
+
+impl fmt::Display for BitmapLengthError {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        write!(
+            f,
+            "outlier bitmap has {} words, {} values need {}",
+            self.obits_words,
+            self.n_values,
+            self.n_values.div_ceil(64)
+        )
+    }
+}
+
+impl std::error::Error for BitmapLengthError {}
+
+impl From<BitmapLengthError> for String {
+    fn from(e: BitmapLengthError) -> String {
+        e.to_string()
+    }
+}
+
+/// Validate that a packed outlier bitmap covers `n_values` bits — the
+/// decode-boundary check in front of the unchecked-index dequantize
+/// kernels.
+#[inline]
+pub fn check_bitmap_len(n_values: usize, obits: &[u64]) -> Result<(), BitmapLengthError> {
+    if obits.len() < n_values.div_ceil(64) {
+        return Err(BitmapLengthError {
+            n_values,
+            obits_words: obits.len(),
+        });
+    }
+    Ok(())
+}
 
 /// Signed bin -> non-negative code. The shift is defined bitwise in
 /// rust (no UB on value overflow), matching XLA/numpy semantics.
@@ -118,12 +167,21 @@ impl QuantizerConfig {
     /// Dequantize on the native (rust) pipeline directly into a
     /// preallocated slice (`out.len()` must equal `words.len()`) — the
     /// allocation-free decode path shared by the in-memory engine and
-    /// the streaming decompressor.
-    pub fn dequantize_native_slice(&self, words: &[u32], obits: &[u64], out: &mut [f32]) {
+    /// the streaming decompressor. Validates the outlier bitmap length
+    /// up front so a malformed container returns a typed error instead
+    /// of panicking inside the blocked kernels.
+    pub fn dequantize_native_slice(
+        &self,
+        words: &[u32],
+        obits: &[u64],
+        out: &mut [f32],
+    ) -> Result<(), BitmapLengthError> {
+        check_bitmap_len(words.len(), obits)?;
         match *self {
             QuantizerConfig::Abs(p, _) => abs::dequantize_slice(words, obits, p, out),
             QuantizerConfig::Rel(p, v, _) => rel::dequantize_slice(words, obits, p, v, out),
         }
+        Ok(())
     }
 
     /// Quantize on the native (rust) pipeline (allocating wrapper).

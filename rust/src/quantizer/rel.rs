@@ -119,9 +119,11 @@ pub fn quantize(
 }
 
 /// Decode a word stream + packed outlier bitmap directly into a
-/// preallocated slice (`out.len()` must equal `words.len()`) — the
-/// shared blocked kernel behind the engine and streaming decode loops.
-/// Must use the same pow2 the encoder verified with.
+/// preallocated slice (`out.len()` must equal `words.len()`; `obits`
+/// must cover `words.len()` bits — decode boundaries validate this via
+/// [`crate::quantizer::check_bitmap_len`] and return a typed error) —
+/// the shared blocked kernel behind the engine and streaming decode
+/// loops. Must use the same pow2 the encoder verified with.
 pub fn dequantize_slice(
     words: &[u32],
     obits: &[u64],
@@ -130,6 +132,11 @@ pub fn dequantize_slice(
     out: &mut [f32],
 ) {
     assert_eq!(out.len(), words.len(), "output slice length mismatch");
+    assert!(
+        obits.len() >= words.len().div_ceil(64),
+        "outlier bitmap shorter than the word stream (callers must \
+         check_bitmap_len at the decode boundary)"
+    );
     for (bi, (blk, oblk)) in words.chunks(64).zip(out.chunks_mut(64)).enumerate() {
         let mask = obits[bi];
         for (j, (&w, o)) in blk.iter().zip(oblk.iter_mut()).enumerate() {
@@ -309,6 +316,113 @@ mod tests {
         let p = RelParams::new(1e-3);
         let c = quantize(&[], p, Approx, Protected);
         assert!(dequantize(&c, p, Approx).is_empty());
+    }
+
+    #[test]
+    fn packing_at_maxbin_boundary_fits_u32() {
+        // The word layout is `(zigzag(bin) << 1) | sign`. At the bin
+        // limit `±(MAXBIN_REL - 1)` the intermediate is
+        // `zigzag = 2^28 - 1` -> packed `< 2^29`, so the i32 arithmetic
+        // can never overflow (this test runs under debug overflow
+        // checks, which would panic if it did) and the top three bits
+        // stay clear.
+        use crate::types::MAXBIN_REL;
+        for bin in [
+            0,
+            1,
+            -1,
+            MAXBIN_REL - 2,
+            -(MAXBIN_REL - 2),
+            MAXBIN_REL - 1,
+            -(MAXBIN_REL - 1),
+        ] {
+            for sign in 0..=1i32 {
+                let packed = (zigzag(bin) << 1) | sign;
+                assert!(packed >= 0, "bin {bin} sign {sign} went negative");
+                let w = packed as u32;
+                assert!(w < 1 << 29, "bin {bin} sign {sign}: word {w:#x}");
+                assert_eq!(unzigzag(w >> 1), bin, "bin roundtrip");
+                assert_eq!((w & 1) != 0, sign == 1, "sign roundtrip");
+            }
+        }
+    }
+
+    #[test]
+    fn boundary_bins_quantize_without_overflow_or_aliasing() {
+        // Values whose bins straddle ±(MAXBIN_REL - 1): eb is chosen so
+        // the boundary sits near |log2 x| = 120, then a fine scan
+        // crosses it from both sides. Every quantized lane must unpack
+        // to an in-range bin with the right sign; every out-of-range
+        // lane must fall to the outlier path with its raw bits —
+        // i.e. a packed word is never mistaken for (or aliased with)
+        // an outlier word, because the bitmap alone separates them.
+        use crate::types::Protection::Unprotected;
+        use crate::types::MAXBIN_REL;
+        let eb = 6.2e-7f32;
+        let p = RelParams::new(eb);
+        let mut xs = Vec::new();
+        for j in 0..2048u32 {
+            let m = 1.0f32 + j as f32 / 1024.0;
+            // log2 in [120, 121): bins straddle +(MAXBIN_REL - 1).
+            let hi = m * 2.0f32.powi(120);
+            // log2 in [-121, -120): bins straddle -(MAXBIN_REL - 1)
+            // (still far above REL_MIN_MAG = 2^-124).
+            let lo = m * 2.0f32.powi(-121);
+            xs.extend_from_slice(&[hi, -hi, lo, -lo]);
+        }
+        let c = quantize(&xs, p, Approx, Unprotected);
+        let (mut near_pos, mut near_neg, mut out_of_range) = (0usize, 0usize, 0usize);
+        for (i, (&x, &w)) in xs.iter().zip(&c.words).enumerate() {
+            if c.outliers.get(i) {
+                assert_eq!(w, x.to_bits(), "outlier lanes carry raw bits");
+                out_of_range += 1;
+                continue;
+            }
+            assert!(w < 1 << 29, "packed word {w:#x} has high bits set");
+            let sign = (w & 1) != 0;
+            let bin = unzigzag(w >> 1);
+            assert!(
+                bin.unsigned_abs() < MAXBIN_REL as u32,
+                "bin {bin} escaped the range check"
+            );
+            assert_eq!(sign, x < 0.0, "sign bit mismatch for {x}");
+            if bin >= MAXBIN_REL - 2_000_000 {
+                near_pos += 1;
+            }
+            if bin <= -(MAXBIN_REL - 2_000_000) {
+                near_neg += 1;
+            }
+        }
+        assert!(near_pos > 0, "scan never reached the +bin boundary");
+        assert!(near_neg > 0, "scan never reached the -bin boundary");
+        assert!(out_of_range > 0, "scan never crossed out of range");
+        // The unpacked reconstruction keeps every sign.
+        let y = dequantize(&c, p, Approx);
+        for (a, b) in xs.iter().zip(&y) {
+            assert_eq!(
+                a.is_sign_negative(),
+                b.is_sign_negative(),
+                "sign lost: {a} -> {b}"
+            );
+        }
+    }
+
+    #[test]
+    fn negative_zero_and_denormals_keep_bits_and_sign_through_outliers() {
+        let p = RelParams::new(1e-3);
+        let xs = [
+            -0.0f32,
+            f32::from_bits(0x8000_0001), // smallest negative denormal
+            f32::from_bits(0x807F_FFFF), // largest negative denormal
+            -f32::MIN_POSITIVE / 2.0,    // negative denormal via arithmetic
+        ];
+        let c = quantize(&xs, p, Approx, Protected);
+        assert_eq!(c.outlier_count(), xs.len(), "all must be outliers");
+        let y = dequantize(&c, p, Approx);
+        for (a, b) in xs.iter().zip(&y) {
+            assert_eq!(a.to_bits(), b.to_bits(), "{a} must be bit-preserved");
+            assert!(b.is_sign_negative(), "{b} lost its sign");
+        }
     }
 
     #[test]

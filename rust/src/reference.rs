@@ -20,7 +20,7 @@ use std::collections::{BinaryHeap, HashMap};
 
 use crate::bitvec::BitVec;
 use crate::codec::{Pipeline, Stage};
-use crate::container::{ChunkRecord, Container, Header};
+use crate::container::{ChunkRecord, Container, ContainerVersion, Header};
 use crate::coordinator::EngineConfig;
 use crate::quantizer::abs::AbsParams;
 use crate::quantizer::approx::{log2approxf, pow2approx_from_bins};
@@ -581,9 +581,25 @@ pub fn encode_pipeline(p: &Pipeline, words: &[u32]) -> Vec<u8> {
 // Full compressor (seed engine assembly, single-threaded)
 // ---------------------------------------------------------------------
 
+/// The stage subset a plan mask keeps, built naively (allocating —
+/// this module's style) from a header stage list.
+fn masked_pipeline(stages: &[Stage], plan: u8) -> Result<Pipeline, String> {
+    let subset: Vec<Stage> = stages
+        .iter()
+        .enumerate()
+        .filter(|(i, _)| plan & (1u8 << i) != 0)
+        .map(|(_, &s)| s)
+        .collect();
+    Pipeline::new(subset)
+}
+
 /// Naive single-threaded mirror of `coordinator::engine::compress`:
 /// chunk, quantize (per-element), encode (per-stage Vecs), assemble.
-/// Containers must be byte-identical to the engine's.
+/// Containers must be byte-identical to the engine's — for both
+/// container versions. Under v2 the same per-chunk plan chooser runs
+/// (`codec::plan::choose` is shared analysis, not a hot-path kernel);
+/// the chunk is then encoded through the naive per-stage oracles over
+/// the masked subset.
 pub fn compress(cfg: &EngineConfig, data: &[f32]) -> Result<Container, String> {
     if cfg.device != Device::Native {
         return Err("reference::compress supports the native device only".into());
@@ -599,14 +615,25 @@ pub fn compress(cfg: &EngineConfig, data: &[f32]) -> Result<Container, String> {
             QuantizerConfig::Abs(p, prot) => quantize_abs(chunk, p, prot),
             QuantizerConfig::Rel(p, v, prot) => quantize_rel(chunk, p, v, prot),
         };
+        let plan = match cfg.container_version {
+            ContainerVersion::V1 => cfg.pipeline.full_mask(),
+            ContainerVersion::V2 => crate::codec::plan::choose(
+                cfg.pipeline.stages(),
+                &q.words,
+                q.outlier_count(),
+            ),
+        };
+        let sub = masked_pipeline(cfg.pipeline.stages(), plan)?;
         chunks.push(ChunkRecord {
             n_values: chunk.len() as u32,
+            plan,
             outlier_bytes: rle_encode(&q.outliers.to_bytes()),
-            payload: encode_pipeline(&cfg.pipeline, &q.words),
+            payload: encode_pipeline(&sub, &q.words),
         });
     }
     Ok(Container {
         header: Header {
+            version: cfg.container_version,
             bound: cfg.bound,
             effective_epsilon: qc.effective_epsilon(),
             variant: cfg.variant,
@@ -621,9 +648,10 @@ pub fn compress(cfg: &EngineConfig, data: &[f32]) -> Result<Container, String> {
 }
 
 /// Naive single-threaded mirror of `coordinator::engine::decompress`:
-/// per-chunk naive pipeline decode, per-element dequantize, straight
-/// concatenation. Reconstructions must be bit-identical to the
-/// engine's (and the streaming decoder's).
+/// per-chunk naive pipeline decode (honoring each chunk's plan mask —
+/// the naive plan-aware decode for v2 containers), per-element
+/// dequantize, straight concatenation. Reconstructions must be
+/// bit-identical to the engine's (and the streaming decoder's).
 pub fn decompress(container: &Container) -> Result<Vec<f32>, String> {
     let h = &container.header;
     let qc = match h.bound {
@@ -632,10 +660,10 @@ pub fn decompress(container: &Container) -> Result<Vec<f32>, String> {
         }
         ErrorBound::Rel(e) => QuantizerConfig::Rel(RelParams::new(e), h.variant, h.protection),
     };
-    let p = container.pipeline()?;
     let mut out = Vec::with_capacity(h.n_values as usize);
     for rec in &container.chunks {
         let n = rec.n_values as usize;
+        let p = masked_pipeline(&h.stages, rec.plan)?;
         let words = decode_pipeline(&p, &rec.payload, n)?;
         let bitmap = rle_decode(&rec.outlier_bytes, n.div_ceil(8))?;
         let outliers = BitVec::from_bytes(&bitmap, n)?;

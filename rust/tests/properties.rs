@@ -4,7 +4,7 @@
 
 use lc::bitvec::BitVec;
 use lc::codec::{Pipeline, Stage};
-use lc::container::Container;
+use lc::container::{Container, ContainerVersion};
 use lc::coordinator::{compress, decompress, EngineConfig};
 use lc::data::Rng;
 use lc::quantizer::{abs, rel};
@@ -229,10 +229,12 @@ fn prop_quantize_shape_invariants() {
 /// PROPERTY: the scratch-arena engine produces containers BYTE-
 /// IDENTICAL to the retained naive reference path (`lc::reference` —
 /// the seed's per-element quantizers, per-stage Vec codec, heap-built
-/// Huffman) across PRNG suites, every quantizer variant, and both
-/// protection modes. This pins the blocked kernels, the ping-pong
-/// codec, and the flat-array Huffman builder to the seed's exact
-/// output.
+/// Huffman) across PRNG suites, every quantizer variant, both
+/// protection modes — and BOTH container versions (the v2 adaptive
+/// plans run the shared chooser, then the naive stage oracles). This
+/// pins the blocked kernels, the ping-pong codec, the flat-array
+/// Huffman builder, and the masked encode path to the reference's
+/// exact output.
 #[test]
 fn prop_scratch_engine_matches_reference_containers() {
     use lc::data::Suite;
@@ -250,18 +252,21 @@ fn prop_scratch_engine_matches_reference_containers() {
                 lc::types::Protection::Unprotected,
             ] {
                 for variant in [FnVariant::Approx, FnVariant::Native] {
-                    let mut cfg = EngineConfig::native(bound);
-                    cfg.protection = protection;
-                    cfg.variant = variant;
-                    cfg.chunk_size = 7777; // force multiple chunks + a short tail
-                    cfg.workers = 3;
-                    let (engine_c, _) = compress(&cfg, &x).unwrap();
-                    let reference_c = lc::reference::compress(&cfg, &x).unwrap();
-                    assert_eq!(
-                        engine_c.to_bytes(),
-                        reference_c.to_bytes(),
-                        "{suite:?} {bound:?} {protection:?} {variant:?}"
-                    );
+                    for version in [ContainerVersion::V1, ContainerVersion::V2] {
+                        let mut cfg = EngineConfig::native(bound);
+                        cfg.protection = protection;
+                        cfg.variant = variant;
+                        cfg.container_version = version;
+                        cfg.chunk_size = 7777; // multiple chunks + short tail
+                        cfg.workers = 3;
+                        let (engine_c, _) = compress(&cfg, &x).unwrap();
+                        let reference_c = lc::reference::compress(&cfg, &x).unwrap();
+                        assert_eq!(
+                            engine_c.to_bytes(),
+                            reference_c.to_bytes(),
+                            "{suite:?} {bound:?} {protection:?} {variant:?} {version:?}"
+                        );
+                    }
                 }
             }
         }
@@ -272,9 +277,11 @@ fn prop_scratch_engine_matches_reference_containers() {
 /// paths — the scratch-arena engine (cached multi-symbol Huffman
 /// table, SIMD bitshuffle, preallocated output), the streaming
 /// decompressor, and the naive `lc::reference` decoder (bit-by-bit
-/// Huffman walk, per-element dequantize) — for every quantizer variant
-/// and the default chain. The decode mirror of
-/// `prop_scratch_engine_matches_reference_containers`.
+/// Huffman walk, per-element dequantize, naive plan-aware stage undo)
+/// — for every quantizer variant, the default chain, and BOTH
+/// container versions (v2 containers carry per-chunk plan bytes). The
+/// decode mirror of `prop_scratch_engine_matches_reference_containers`
+/// and the lossless-equivalence pin for adaptive stage selection.
 #[test]
 fn prop_decode_paths_match_reference_bit_for_bit() {
     use lc::data::Suite;
@@ -288,32 +295,144 @@ fn prop_decode_paths_match_reference_bit_for_bit() {
         let x = suite.generate(si, 30_000 + si * 777);
         for bound in bounds {
             for variant in [FnVariant::Approx, FnVariant::Native] {
-                let mut cfg = EngineConfig::native(bound);
-                cfg.variant = variant;
-                cfg.chunk_size = 7777; // multiple chunks + short tail
-                cfg.workers = 3;
-                let (container, _) = compress(&cfg, &x).unwrap();
-                let bytes = container.to_bytes();
-                let (engine_y, _) = decompress(&cfg, &container).unwrap();
-                let reference_y = lc::reference::decompress(&container).unwrap();
-                let engine_bits: Vec<u32> = engine_y.iter().map(|v| v.to_bits()).collect();
-                let reference_bits: Vec<u32> =
-                    reference_y.iter().map(|v| v.to_bits()).collect();
-                assert_eq!(
-                    engine_bits, reference_bits,
-                    "{suite:?} {bound:?} {variant:?} engine != reference"
-                );
-                let (streamed_y, _) =
-                    lc::coordinator::decompress_slice_streaming(&cfg, &bytes).unwrap();
-                let streamed_bits: Vec<u32> =
-                    streamed_y.iter().map(|v| v.to_bits()).collect();
-                assert_eq!(
-                    streamed_bits, engine_bits,
-                    "{suite:?} {bound:?} {variant:?} stream != engine"
-                );
+                for version in [ContainerVersion::V1, ContainerVersion::V2] {
+                    let mut cfg = EngineConfig::native(bound);
+                    cfg.variant = variant;
+                    cfg.container_version = version;
+                    cfg.chunk_size = 7777; // multiple chunks + short tail
+                    cfg.workers = 3;
+                    let (container, _) = compress(&cfg, &x).unwrap();
+                    let bytes = container.to_bytes();
+                    let (engine_y, _) = decompress(&cfg, &container).unwrap();
+                    let reference_y = lc::reference::decompress(&container).unwrap();
+                    let engine_bits: Vec<u32> =
+                        engine_y.iter().map(|v| v.to_bits()).collect();
+                    let reference_bits: Vec<u32> =
+                        reference_y.iter().map(|v| v.to_bits()).collect();
+                    assert_eq!(
+                        engine_bits, reference_bits,
+                        "{suite:?} {bound:?} {variant:?} {version:?} engine != reference"
+                    );
+                    let (streamed_y, _) =
+                        lc::coordinator::decompress_slice_streaming(&cfg, &bytes).unwrap();
+                    let streamed_bits: Vec<u32> =
+                        streamed_y.iter().map(|v| v.to_bits()).collect();
+                    assert_eq!(
+                        streamed_bits, engine_bits,
+                        "{suite:?} {bound:?} {variant:?} {version:?} stream != engine"
+                    );
+                }
             }
         }
     }
+}
+
+/// PROPERTY (adaptive selection is lossless-equivalent and
+/// bound-preserving): for mixed workloads — skewed scientific fields,
+/// incompressible noise, constant fields — the v2 adaptive container
+/// reconstructs BIT-IDENTICALLY to the v1 full-chain container, and a
+/// v1 container written by the seed path (`lc::reference::compress`)
+/// still decodes byte-identically through the engine.
+#[test]
+fn prop_v2_reconstruction_identical_to_v1() {
+    use lc::data::Suite;
+    let mut rng = Rng::new(0xADA9);
+    let noise: Vec<f32> = (0..60_000)
+        .map(|_| {
+            let v = f32::from_bits(rng.next_u32());
+            if v.is_nan() {
+                1.0
+            } else {
+                v
+            }
+        })
+        .collect();
+    let constant = vec![3.25f32; 50_000];
+    let smooth = Suite::Cesm.generate(0, 60_000);
+    for (name, x) in [("noise", &noise), ("constant", &constant), ("smooth", &smooth)] {
+        for bound in [ErrorBound::Abs(1e-3), ErrorBound::Rel(1e-2)] {
+            let mut v1 = EngineConfig::native(bound);
+            v1.container_version = ContainerVersion::V1;
+            v1.chunk_size = 8192;
+            let mut v2 = v1.clone();
+            v2.container_version = ContainerVersion::V2;
+            let (c1, _) = compress(&v1, x).unwrap();
+            let (c2, _) = compress(&v2, x).unwrap();
+            let (y1, _) = decompress(&v1, &c1).unwrap();
+            let (y2, _) = decompress(&v2, &c2).unwrap();
+            let b1: Vec<u32> = y1.iter().map(|v| v.to_bits()).collect();
+            let b2: Vec<u32> = y2.iter().map(|v| v.to_bits()).collect();
+            assert_eq!(b1, b2, "{name} {bound:?}: v2 must reconstruct exactly like v1");
+            // The seed-path v1 container decodes byte-identically too.
+            let seed_c = lc::reference::compress(&v1, x).unwrap();
+            assert_eq!(seed_c.to_bytes(), c1.to_bytes(), "{name} {bound:?} seed v1");
+            let (y_seed, _) = decompress(&v1, &seed_c).unwrap();
+            let bs: Vec<u32> = y_seed.iter().map(|v| v.to_bits()).collect();
+            assert_eq!(bs, b1, "{name} {bound:?}: seed v1 decode");
+        }
+    }
+}
+
+/// PROPERTY (the scenario-diversity payoff): on incompressible noise
+/// the adaptive analyzer picks cheaper plans (raw-stored chunks), on a
+/// constant field it keeps the full chain, and on the skewed benchmark
+/// suite the v2 compression ratio regresses by less than 1% against
+/// v1.
+#[test]
+fn prop_adaptive_plans_match_the_workload() {
+    use lc::data::Suite;
+    let mut rng = Rng::new(77);
+    // Finite random bit noise: high entropy, few outliers at a loose
+    // ABS bound would still quantize — use raw bits so most values are
+    // huge/outliers OR entropy keeps chunks incompressible either way.
+    let noise: Vec<f32> = (0..80_000)
+        .map(|_| (rng.normal() * 1e4) as f32 + rng.uniform() as f32)
+        .collect();
+    let mut cfg = EngineConfig::native(ErrorBound::Abs(1e-7));
+    cfg.chunk_size = 8192;
+    let (c_noise, _) = compress(&cfg, &noise).unwrap();
+    let hist = c_noise.plan_histogram();
+    let full = 0b1111usize;
+    let non_full: usize = hist
+        .iter()
+        .enumerate()
+        .filter(|(p, _)| *p != full)
+        .map(|(_, &c)| c)
+        .sum();
+    assert!(
+        non_full > 0,
+        "noise must trigger adaptive plans, histogram full-only: {}",
+        hist[full]
+    );
+
+    // Constant field: every chunk keeps the full chain (it compresses
+    // superbly and the analyzer must not be fooled). A sane bound so
+    // the bins are small and exactly reconstructible.
+    let constant = vec![1.5f32; 40_000];
+    let mut cfg = EngineConfig::native(ErrorBound::Abs(1e-3));
+    cfg.chunk_size = 8192;
+    let (c_const, _) = compress(&cfg, &constant).unwrap();
+    let hist = c_const.plan_histogram();
+    assert_eq!(
+        hist[full],
+        c_const.chunks.len(),
+        "constant field must keep the full chain"
+    );
+
+    // Skewed benchmark input: ratio regression under 1%.
+    let skewed = Suite::Cesm.generate(2, 1 << 18);
+    let mut v1 = EngineConfig::native(ErrorBound::Abs(1e-3));
+    v1.container_version = ContainerVersion::V1;
+    let mut v2 = v1.clone();
+    v2.container_version = ContainerVersion::V2;
+    let (c1, _) = compress(&v1, &skewed).unwrap();
+    let (c2, _) = compress(&v2, &skewed).unwrap();
+    let s1 = c1.compressed_size() as f64;
+    let s2 = c2.compressed_size() as f64;
+    assert!(
+        s2 <= s1 * 1.01,
+        "v2 ratio regressed >1%: v1 {s1} bytes, v2 {s2} bytes"
+    );
 }
 
 /// PROPERTY: NOA with range R equals ABS with eps*R (definition 2.1.3).

@@ -5,21 +5,29 @@
 //! engine, and the streaming decompressor.
 
 use lc::codec::{CodecScratch, Pipeline};
-use lc::container::Container;
+use lc::container::{Container, ContainerVersion};
 use lc::coordinator::{
     compress, decompress, decompress_slice_streaming, EngineConfig,
 };
 use lc::data::Rng;
 use lc::types::ErrorBound;
 
-fn sample_container(n: usize) -> (EngineConfig, Vec<u8>, Vec<f32>) {
+fn sample_container_versioned(
+    n: usize,
+    version: ContainerVersion,
+) -> (EngineConfig, Vec<u8>, Vec<f32>) {
     let mut rng = Rng::new(0xF00D);
     let x: Vec<f32> = (0..n).map(|_| (rng.normal() * 10.0) as f32).collect();
     let mut cfg = EngineConfig::native(ErrorBound::Abs(1e-3));
     cfg.chunk_size = 2048; // several chunks
+    cfg.container_version = version;
     let (container, _) = compress(&cfg, &x).unwrap();
     let (golden, _) = decompress(&cfg, &container).unwrap();
     (cfg, container.to_bytes(), golden)
+}
+
+fn sample_container(n: usize) -> (EngineConfig, Vec<u8>, Vec<f32>) {
+    sample_container_versioned(n, ContainerVersion::default())
 }
 
 /// Zero-length and tiny inputs: clean errors everywhere.
@@ -35,21 +43,95 @@ fn zero_length_and_tiny_containers_error_cleanly() {
     }
 }
 
-/// Every truncation point: `Err`, not panic — on both decode paths.
+/// Every truncation point: `Err`, not panic — on both decode paths and
+/// both container versions.
 #[test]
 fn truncated_containers_error_cleanly() {
-    let (cfg, bytes, _) = sample_container(10_000);
-    // Dense near the front (header framing), strided through the body.
-    let mut cuts: Vec<usize> = (0..64.min(bytes.len())).collect();
-    cuts.extend((64..bytes.len()).step_by(97));
-    cuts.push(bytes.len() - 1);
-    for cut in cuts {
-        assert!(Container::from_bytes(&bytes[..cut]).is_err(), "cut {cut}");
+    for version in [ContainerVersion::V1, ContainerVersion::V2] {
+        let (cfg, bytes, _) = sample_container_versioned(10_000, version);
+        // Dense near the front (header framing), strided through the
+        // body.
+        let mut cuts: Vec<usize> = (0..64.min(bytes.len())).collect();
+        cuts.extend((64..bytes.len()).step_by(97));
+        cuts.push(bytes.len() - 1);
+        for cut in cuts {
+            assert!(
+                Container::from_bytes(&bytes[..cut]).is_err(),
+                "{version:?} cut {cut}"
+            );
+            assert!(
+                decompress_slice_streaming(&cfg, &bytes[..cut]).is_err(),
+                "{version:?} cut {cut}"
+            );
+        }
+    }
+}
+
+/// Regression (PR 3): a chunk whose outlier bitmap is SHORTER than its
+/// value count — with all CRCs recomputed so the frame itself is
+/// "valid" — must produce a clean `Err` on every decode path.
+///
+/// Honest scope note: through the container paths the short bitmap is
+/// caught by the RLE expected-length validation (the bitmap must
+/// decode to exactly `ceil(n/8)` bytes) BEFORE the dequantize kernels
+/// run — this test pins that first line of defense and asserts it is
+/// the error that fires. The kernels' former `obits[bi]` panic is
+/// reachable only through the public slice APIs with caller-built
+/// buffers; that hole is what `check_bitmap_len` +
+/// `dequantize_slice_boundary_returns_typed_error` (below) close.
+#[test]
+fn short_outlier_bitmap_errors_cleanly() {
+    for version in [ContainerVersion::V1, ContainerVersion::V2] {
+        let (cfg, bytes, _) = sample_container_versioned(10_000, version);
+        let mut container = Container::from_bytes(&bytes).unwrap();
+        // Re-encode chunk 0's bitmap as one that covers only 8 of its
+        // 2048 values; to_bytes() recomputes the chunk and file CRCs,
+        // so the frame parses cleanly and the length validation layers
+        // are all that reject it.
+        let short_bitmap = vec![0u8; 1];
+        container.chunks[0].outlier_bytes = lc::codec::rle::encode(&short_bitmap);
+        let evil = container.to_bytes();
+        let parsed = Container::from_bytes(&evil).expect("CRCs were recomputed");
+        let err = decompress(&cfg, &parsed).unwrap_err().to_string();
         assert!(
-            decompress_slice_streaming(&cfg, &bytes[..cut]).is_err(),
-            "cut {cut}"
+            err.contains("rle decoded"),
+            "{version:?}: expected the RLE length check to fire first, got: {err}"
+        );
+        assert!(
+            decompress_slice_streaming(&cfg, &evil).is_err(),
+            "{version:?}: streaming decode must error"
+        );
+        // The same through the naive reference decoder.
+        assert!(
+            lc::reference::decompress(&parsed).is_err(),
+            "{version:?}: reference decode must error"
         );
     }
+}
+
+/// Regression (PR 3): the actual defect from the issue — the public
+/// dequantize slice APIs indexed `obits[bi]` unchecked, so a
+/// caller-supplied short bitmap panicked instead of erroring. The
+/// decode boundary now validates and returns the typed
+/// `BitmapLengthError`.
+#[test]
+fn dequantize_slice_boundary_returns_typed_error() {
+    use lc::quantizer::{abs::AbsParams, check_bitmap_len, QuantizerConfig};
+    use lc::types::Protection;
+    let qc = QuantizerConfig::Abs(AbsParams::new(1e-3), Protection::Protected);
+    let words = vec![0u32; 130]; // needs ceil(130/64) = 3 bitmap words
+    let obits = vec![0u64; 2]; // one short
+    let mut out = vec![0f32; 130];
+    let err = qc
+        .dequantize_native_slice(&words, &obits, &mut out)
+        .unwrap_err();
+    assert_eq!(err.n_values, 130);
+    assert_eq!(err.obits_words, 2);
+    let msg: String = err.into();
+    assert!(msg.contains("130"), "{msg}");
+    assert!(check_bitmap_len(130, &obits).is_err());
+    assert!(check_bitmap_len(128, &obits).is_ok());
+    assert!(check_bitmap_len(0, &[]).is_ok());
 }
 
 /// Random bit flips: either detected or decoded to the exact golden
