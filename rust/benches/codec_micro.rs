@@ -427,4 +427,94 @@ fn main() {
     if let Err(e) = update_bench_json(&json_path, "hotpath", &hot_dec) {
         eprintln!("failed to write {json_path}: {e}");
     }
+
+    // ---- hotpath.delta: scalar twins vs the dispatched lc::simd
+    // kernels, one encode + one decode per rep over the quantized word
+    // stream (the decode side is the interesting one: the serial
+    // prefix sum vs the log-step scan). Bit-identical by property.
+    {
+        let mut buf = words.clone();
+        let m_scalar = measure(1, reps, || {
+            buf.copy_from_slice(&words);
+            lc::simd::delta::encode_scalar(&mut buf);
+            lc::simd::delta::decode_scalar(&mut buf);
+            std::hint::black_box(buf.len());
+        });
+        let m_simd = measure(1, reps, || {
+            buf.copy_from_slice(&words);
+            lc::simd::delta::encode(&mut buf);
+            lc::simd::delta::decode(&mut buf);
+            std::hint::black_box(buf.len());
+        });
+        let hot = vec![
+            ("delta_scalar_eps".to_string(), m_scalar.eps(n)),
+            ("delta_simd_eps".to_string(), m_simd.eps(n)),
+            (
+                "delta_simd_speedup".to_string(),
+                m_simd.eps(n) / m_scalar.eps(n).max(1.0),
+            ),
+        ];
+        println!(
+            "json hotpath delta ({:?}): {:.0} -> {:.0} elem/s ({:.2}x)",
+            lc::simd::level(),
+            m_scalar.eps(n),
+            m_simd.eps(n),
+            m_simd.eps(n) / m_scalar.eps(n).max(1.0)
+        );
+        if let Err(e) = update_bench_json(&json_path, "hotpath", &hot) {
+            eprintln!("failed to write {json_path}: {e}");
+        }
+    }
+
+    // ---- hotpath.rle_scan: the zero/literal run-boundary scan core
+    // (the rle0 encode hot loop) over the shuffled byte stream, scalar
+    // SWAR probes vs the dispatched 32-byte AVX2 probes. Measured as
+    // bytes scanned per second; the run boundaries found are identical
+    // by construction.
+    {
+        let scan = |zero: fn(&[u8], usize) -> usize, lit: fn(&[u8], usize) -> usize| {
+            let mut i = 0usize;
+            let mut runs = 0usize;
+            while i < shuf_bytes.len() {
+                i = if shuf_bytes[i] == 0 {
+                    zero(&shuf_bytes, i + 1)
+                } else {
+                    lit(&shuf_bytes, i + 1)
+                };
+                runs += 1;
+            }
+            runs
+        };
+        let m_scalar = measure(1, reps, || {
+            std::hint::black_box(scan(
+                lc::simd::rle::zero_run_end_scalar,
+                lc::simd::rle::literal_run_end_scalar,
+            ));
+        });
+        let m_simd = measure(1, reps, || {
+            std::hint::black_box(scan(
+                lc::simd::rle::zero_run_end,
+                lc::simd::rle::literal_run_end,
+            ));
+        });
+        let nb = shuf_bytes.len();
+        let hot = vec![
+            ("rle_scan_scalar_eps".to_string(), m_scalar.eps(nb)),
+            ("rle_scan_simd_eps".to_string(), m_simd.eps(nb)),
+            (
+                "rle_scan_simd_speedup".to_string(),
+                m_simd.eps(nb) / m_scalar.eps(nb).max(1.0),
+            ),
+        ];
+        println!(
+            "json hotpath rle_scan ({:?}): {:.0} -> {:.0} bytes/s ({:.2}x)",
+            lc::simd::level(),
+            m_scalar.eps(nb),
+            m_simd.eps(nb),
+            m_simd.eps(nb) / m_scalar.eps(nb).max(1.0)
+        );
+        if let Err(e) = update_bench_json(&json_path, "hotpath", &hot) {
+            eprintln!("failed to write {json_path}: {e}");
+        }
+    }
 }

@@ -121,6 +121,47 @@ fn main() {
         Err(e) => eprintln!("failed to write {json_path}: {e}"),
     }
 
+    // ---- hotpath.quantize_abs: the scalar twin vs the dispatched SIMD
+    // block kernel over the same 64-element blocked loop. Outputs are
+    // bit-identical (pinned by the differential properties); the entry
+    // isolates the kernel speedup from the allocation story above. On
+    // machines without AVX2 — or under LC_FORCE_SCALAR=1 — both sides
+    // run the scalar kernel and the speedup reads ~1.0x.
+    {
+        let mut words = vec![0u32; n];
+        let mut obits = vec![0u64; n.div_ceil(64)];
+        let m_scalar = measure(1, reps, || {
+            for (bi, (blk, out)) in x.chunks(64).zip(words.chunks_mut(64)).enumerate() {
+                obits[bi] = lc::simd::abs::quantize_block_scalar(blk, pa, true, out);
+            }
+            std::hint::black_box(&obits);
+        });
+        let m_simd = measure(1, reps, || {
+            for (bi, (blk, out)) in x.chunks(64).zip(words.chunks_mut(64)).enumerate() {
+                obits[bi] = lc::simd::abs::quantize_block(blk, pa, true, out);
+            }
+            std::hint::black_box(&obits);
+        });
+        let hot = vec![
+            ("quantize_abs_scalar_eps".to_string(), m_scalar.eps(n)),
+            ("quantize_abs_simd_eps".to_string(), m_simd.eps(n)),
+            (
+                "quantize_abs_simd_speedup".to_string(),
+                m_simd.eps(n) / m_scalar.eps(n).max(1.0),
+            ),
+        ];
+        println!(
+            "json hotpath quantize_abs ({:?}): {:.0} -> {:.0} elem/s ({:.2}x)",
+            lc::simd::level(),
+            m_scalar.eps(n),
+            m_simd.eps(n),
+            m_simd.eps(n) / m_scalar.eps(n).max(1.0)
+        );
+        if let Err(e) = update_bench_json(&json_path, "hotpath", &hot) {
+            eprintln!("failed to write {json_path}: {e}");
+        }
+    }
+
     // PJRT chunk path, if artifacts are available.
     match lc::runtime::PjrtService::start(&lc::runtime::default_artifact_dir()) {
         Err(e) => println!("\n(PJRT bench skipped: {e})"),

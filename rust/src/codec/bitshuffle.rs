@@ -10,9 +10,11 @@
 //! The 32x32 transpose is the word-stage hot spot on both encode and
 //! decode. It runs as a fully unrolled 5-stage shift-mask butterfly
 //! (Hacker's Delight 7-3 with every stage's shift a compile-time
-//! constant), with a `core::arch` AVX2 kernel dispatched at runtime on
-//! x86-64: stages 16/8 pair whole 8-lane vectors, stages 4/2/1 pair
-//! lanes inside a vector via constant lane swaps plus a blend.
+//! constant), with a `core::arch` AVX2 kernel dispatched through the
+//! shared [`crate::simd`] layer on x86-64 (cached cpuid probe,
+//! `LC_FORCE_SCALAR` kill-switch): stages 16/8 pair whole 8-lane
+//! vectors, stages 4/2/1 pair lanes inside a vector via constant lane
+//! swaps plus a blend.
 
 use std::fmt;
 
@@ -78,22 +80,6 @@ fn transpose32_scalar(a: &mut [u32; 32]) {
     butterfly_stage::<4>(a, 0x0F0F_0F0F);
     butterfly_stage::<2>(a, 0x3333_3333);
     butterfly_stage::<1>(a, 0x5555_5555);
-}
-
-#[cfg(target_arch = "x86_64")]
-fn avx2_enabled() -> bool {
-    use std::sync::atomic::{AtomicU8, Ordering};
-    // 0 = unknown, 1 = unavailable, 2 = available.
-    static AVX2: AtomicU8 = AtomicU8::new(0);
-    match AVX2.load(Ordering::Relaxed) {
-        2 => true,
-        1 => false,
-        _ => {
-            let ok = is_x86_feature_detected!("avx2");
-            AVX2.store(if ok { 2 } else { 1 }, Ordering::Relaxed);
-            ok
-        }
-    }
 }
 
 #[cfg(target_arch = "x86_64")]
@@ -193,7 +179,9 @@ mod simd {
 fn transpose32(a: &mut [u32; 32]) {
     #[cfg(target_arch = "x86_64")]
     {
-        if avx2_enabled() {
+        // Shared dispatcher (crate::simd): one cached cpuid probe for
+        // the whole crate, plus the LC_FORCE_SCALAR kill-switch.
+        if crate::simd::avx2() {
             // SAFETY: gated on runtime AVX2 detection above.
             unsafe { simd::transpose32_avx2(a) };
             return;

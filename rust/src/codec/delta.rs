@@ -9,24 +9,17 @@
 /// In-place delta encode: out[i] = zigzag(w[i] - w[i-1]) (wrapping).
 /// The zigzag keeps small negative deltas small as u32 — without it a
 /// -1 delta becomes 0xFFFFFFFF and ruins the bit-shuffle's zero planes.
+/// Runs on the dispatched [`crate::simd::delta`] kernels (AVX2 when
+/// available; the scalar twin otherwise / under `LC_FORCE_SCALAR`).
 pub fn encode(words: &mut [u32]) {
-    let mut prev = 0u32;
-    for w in words.iter_mut() {
-        let cur = *w;
-        let d = cur.wrapping_sub(prev) as i32;
-        *w = ((d << 1) ^ (d >> 31)) as u32;
-        prev = cur;
-    }
+    crate::simd::delta::encode(words);
 }
 
-/// In-place inverse (unzigzag, then prefix sum, wrapping).
+/// In-place inverse (unzigzag, then prefix sum, wrapping). The serial
+/// prefix sum was the decode chain's only loop-carried dependency; the
+/// dispatched kernel replaces it with a bit-identical log-step scan.
 pub fn decode(words: &mut [u32]) {
-    let mut acc = 0u32;
-    for w in words.iter_mut() {
-        let d = ((*w >> 1) as i32) ^ -((*w & 1) as i32);
-        acc = acc.wrapping_add(d as u32);
-        *w = acc;
-    }
+    crate::simd::delta::decode(words);
 }
 
 #[cfg(test)]

@@ -28,6 +28,7 @@ pub mod quantizer;
 pub mod reference;
 pub mod runtime;
 pub mod scratch;
+pub mod simd;
 pub mod tables;
 pub mod types;
 pub mod verify;

@@ -16,8 +16,6 @@
 use crate::bitvec::BitVec;
 use crate::types::{Protection, QuantizedChunk, MAXBIN_ABS};
 
-use super::zigzag;
-
 /// Derived ABS factors, computed once per stream.
 #[derive(Debug, Clone, Copy)]
 pub struct AbsParams {
@@ -48,11 +46,12 @@ impl AbsParams {
 /// [`BitVec`] layout). Protected mode double-checks every value.
 ///
 /// The loop is blocked 64 elements at a time — one block per bitmap
-/// word. The branch-light inner loop always pushes the quantized word
-/// and accumulates an outlier mask; a sparse fixup pass then overwrites
-/// the (rare) outlier lanes with raw IEEE-754 bits. Semantics are
+/// word — and each block runs through the dispatched
+/// [`crate::simd::abs::quantize_block`] kernel (AVX2 when available,
+/// the scalar twin otherwise / under `LC_FORCE_SCALAR`). Semantics are
 /// bit-identical to the seed's per-element loop (pinned by the
-/// `crate::reference` differential tests).
+/// `crate::reference` differential tests and the SIMD differential
+/// properties).
 pub fn quantize_into(
     x: &[f32],
     p: AbsParams,
@@ -61,43 +60,14 @@ pub fn quantize_into(
     obits: &mut Vec<u64>,
 ) {
     let n = x.len();
-    words.clear();
-    words.reserve(n);
-    obits.clear();
+    // Bare resize, no clear-then-zero-fill: the block kernels overwrite
+    // every element, so only growth beyond the previous length pays a
+    // fill (steady-state equal-size chunks: no memset at all).
+    words.resize(n, 0);
     obits.resize(n.div_ceil(64), 0);
     let protected = protection == Protection::Protected;
-    let maxbin = MAXBIN_ABS as f32;
-    let eb2_64 = p.eb2 as f64;
-    let eb_64 = p.eb as f64;
-    for (bi, blk) in x.chunks(64).enumerate() {
-        let base = words.len();
-        let mut mask = 0u64;
-        for (j, &v) in blk.iter().enumerate() {
-            let binf = (v * p.inv_eb2).round_ties_even();
-            // Two comparisons, not abs() — Section 3.3. NaN compares false.
-            let in_range = binf < maxbin && binf > -maxbin;
-            let binc = if in_range { binf } else { 0.0 };
-            let bin = binc as i32;
-            // Exact f64 product rounded once to f32: identical to the
-            // decoder's plain f32 multiply, FMA-proof.
-            let recon = ((binc as f64) * eb2_64) as f32;
-            let quant = if protected {
-                let err = ((v as f64) - (recon as f64)).abs();
-                in_range && err <= eb_64
-            } else {
-                in_range
-            };
-            words.push(zigzag(bin) as u32);
-            mask |= (!quant as u64) << j;
-        }
-        // Fixup pass: outlier lanes keep their raw bits.
-        let mut m = mask;
-        while m != 0 {
-            let j = m.trailing_zeros() as usize;
-            words[base + j] = blk[j].to_bits();
-            m &= m - 1;
-        }
-        obits[bi] = mask;
+    for (bi, (blk, out)) in x.chunks(64).zip(words.chunks_mut(64)).enumerate() {
+        obits[bi] = crate::simd::abs::quantize_block(blk, p, protected, out);
     }
 }
 
@@ -129,14 +99,7 @@ pub fn dequantize_slice(words: &[u32], obits: &[u64], p: AbsParams, out: &mut [f
          check_bitmap_len at the decode boundary)"
     );
     for (bi, (blk, oblk)) in words.chunks(64).zip(out.chunks_mut(64)).enumerate() {
-        let mask = obits[bi];
-        for (j, (&w, o)) in blk.iter().zip(oblk.iter_mut()).enumerate() {
-            *o = if (mask >> j) & 1 != 0 {
-                f32::from_bits(w)
-            } else {
-                super::unzigzag(w) as f32 * p.eb2
-            };
-        }
+        crate::simd::abs::dequantize_block(blk, obits[bi], p, oblk);
     }
 }
 

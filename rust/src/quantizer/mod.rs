@@ -11,6 +11,12 @@
 //! paper's "CPU") and as AOT-compiled XLA artifacts (the paper's
 //! "GPU"), with bit-for-bit identical outputs for the parity-safe
 //! variants — enforced by `verify::parity` and the pytest suite.
+//!
+//! The native f32 hot loops (ABS/REL quantize + dequantize) run
+//! 64-element blocks through the dispatched [`crate::simd`] kernels:
+//! AVX2 when the CPU has it, the scalar twins otherwise or under
+//! `LC_FORCE_SCALAR=1` — bit-identical either way (the dispatch
+//! contract and its differential-test obligations live in `lc::simd`).
 
 pub mod abs;
 pub mod approx;

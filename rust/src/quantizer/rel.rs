@@ -10,7 +10,7 @@ use crate::bitvec::BitVec;
 use crate::types::{FnVariant, Protection, QuantizedChunk, MAXBIN_REL, REL_MIN_MAG};
 
 use super::approx::{log2approxf, pow2approx_from_bins};
-use super::{unzigzag, zigzag};
+use super::zigzag;
 
 /// Derived REL factors, computed ONCE per stream so every device uses
 /// bit-identical values (the paper's fix for divergent log()/pow()).
@@ -39,8 +39,11 @@ impl RelParams {
     }
 }
 
+/// Encode one value: `(word, is_outlier)`. The semantic reference for
+/// the REL kernels — the scalar twin in [`crate::simd::rel`] is a
+/// per-lane loop over exactly this function.
 #[inline]
-fn encode_one(v: f32, p: RelParams, variant: FnVariant, protected: bool) -> (u32, bool) {
+pub(crate) fn encode_one(v: f32, p: RelParams, variant: FnVariant, protected: bool) -> (u32, bool) {
     let sign = (v < 0.0) as i32;
     let ax = v.abs();
     let finite = ax < f32::INFINITY; // false for INF and NaN
@@ -75,7 +78,10 @@ fn encode_one(v: f32, p: RelParams, variant: FnVariant, protected: bool) -> (u32
 /// Quantize one slice under a point-wise relative bound into
 /// caller-provided buffers (cleared first; bitmap layout as in
 /// [`crate::quantizer::abs::quantize_into`]). Blocked 64 elements per
-/// bitmap word; semantics are pinned to [`encode_one`] exactly.
+/// bitmap word through the dispatched
+/// [`crate::simd::rel::quantize_block`] kernel (AVX2 for the `Approx`
+/// variant; `Native` and `LC_FORCE_SCALAR` run the scalar twin);
+/// semantics are pinned to [`encode_one`] exactly.
 pub fn quantize_into(
     x: &[f32],
     p: RelParams,
@@ -85,19 +91,14 @@ pub fn quantize_into(
     obits: &mut Vec<u64>,
 ) {
     let n = x.len();
-    words.clear();
-    words.reserve(n);
-    obits.clear();
+    // Bare resize, no clear-then-zero-fill: the block kernels overwrite
+    // every element, so only growth beyond the previous length pays a
+    // fill (steady-state equal-size chunks: no memset at all).
+    words.resize(n, 0);
     obits.resize(n.div_ceil(64), 0);
     let protected = protection == Protection::Protected;
-    for (bi, blk) in x.chunks(64).enumerate() {
-        let mut mask = 0u64;
-        for (j, &v) in blk.iter().enumerate() {
-            let (w, o) = encode_one(v, p, variant, protected);
-            words.push(w);
-            mask |= (o as u64) << j;
-        }
-        obits[bi] = mask;
+    for (bi, (blk, out)) in x.chunks(64).zip(words.chunks_mut(64)).enumerate() {
+        obits[bi] = crate::simd::rel::quantize_block(blk, p, variant, protected, out);
     }
 }
 
@@ -138,24 +139,7 @@ pub fn dequantize_slice(
          check_bitmap_len at the decode boundary)"
     );
     for (bi, (blk, oblk)) in words.chunks(64).zip(out.chunks_mut(64)).enumerate() {
-        let mask = obits[bi];
-        for (j, (&w, o)) in blk.iter().zip(oblk.iter_mut()).enumerate() {
-            *o = if (mask >> j) & 1 != 0 {
-                f32::from_bits(w)
-            } else {
-                let sign = (w & 1) != 0;
-                let bin = unzigzag(w >> 1);
-                let mag = match variant {
-                    FnVariant::Approx => pow2approx_from_bins(bin, p.l2eb),
-                    FnVariant::Native => (bin as f32 * p.l2eb).exp2(),
-                };
-                if sign {
-                    -mag
-                } else {
-                    mag
-                }
-            };
-        }
+        crate::simd::rel::dequantize_block(blk, obits[bi], p, variant, oblk);
     }
 }
 
@@ -202,6 +186,7 @@ pub fn rounding_affected(x: &[f32], p: RelParams, variant: FnVariant) -> usize {
 #[cfg(test)]
 mod tests {
     use super::*;
+    use crate::quantizer::unzigzag;
     use crate::types::FnVariant::{Approx, Native};
     use crate::types::Protection::Protected;
 

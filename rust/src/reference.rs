@@ -369,7 +369,10 @@ pub fn huffman_encode(data: &[u8]) -> Vec<u8> {
     out
 }
 
-/// Naive zero-run-length decoder (per-byte scan, same format).
+/// Naive zero-run-length decoder (per-byte scan, same format; mirrors
+/// the production decoder's accept/reject set — canonical 10th varint
+/// byte, u64-safe run/room comparison — so engine and oracle agree on
+/// hostile inputs too).
 pub fn rle_decode(data: &[u8], expected_len: usize) -> Result<Vec<u8>, String> {
     fn read_varint(data: &[u8]) -> Result<(u64, usize), String> {
         let mut v = 0u64;
@@ -377,6 +380,9 @@ pub fn rle_decode(data: &[u8], expected_len: usize) -> Result<Vec<u8>, String> {
         for (i, &b) in data.iter().enumerate() {
             if shift >= 64 {
                 return Err("varint overflow".into());
+            }
+            if shift == 63 && (b & 0xFE) != 0 {
+                return Err(format!("non-canonical varint final byte {b:#04x}"));
             }
             v |= ((b & 0x7F) as u64) << shift;
             if b & 0x80 == 0 {
@@ -386,7 +392,8 @@ pub fn rle_decode(data: &[u8], expected_len: usize) -> Result<Vec<u8>, String> {
         }
         Err("truncated varint".into())
     }
-    let mut out = Vec::with_capacity(expected_len);
+    let mut out =
+        Vec::with_capacity(expected_len.min(crate::codec::rle::DECODE_RESERVE_CAP));
     let mut i = 0;
     while i < data.len() {
         if data[i] == 0 {
@@ -395,7 +402,7 @@ pub fn rle_decode(data: &[u8], expected_len: usize) -> Result<Vec<u8>, String> {
             if run == 0 {
                 return Err("zero-length run".into());
             }
-            if out.len() + run as usize > expected_len {
+            if run > expected_len.saturating_sub(out.len()) as u64 {
                 return Err("run overflows expected length".into());
             }
             out.resize(out.len() + run as usize, 0);

@@ -6,7 +6,11 @@
 //! FZ-GPU (arXiv 2304.12557) both show that error-bounded compressors
 //! live or die on exactly this kind of memory-traffic discipline, so
 //! every intermediate buffer now lives in a [`Scratch`] arena that a
-//! worker owns for its whole work-stealing loop.
+//! worker owns for its whole work-stealing loop. The kernels that fill
+//! these buffers are the dispatched [`crate::simd`] block kernels —
+//! the arenas' 64-element block layout (one packed `obits` word per
+//! block) is exactly the granularity those kernels produce with one
+//! movemask, so the two layers compose without any repacking.
 //!
 //! # Ownership rules
 //!

@@ -1,0 +1,311 @@
+//! ABS quantize/dequantize block kernels (scalar twin + AVX2).
+//!
+//! One block = up to 64 values = one outlier-bitmap word. The scalar
+//! kernels are the seed's per-element loops verbatim and define the
+//! semantics; the AVX2 kernels reproduce them bit for bit (dispatch
+//! contract in [`crate::simd`]). The load-bearing subtlety is the
+//! reconstruction `f32(f64(bin) * f64(2eb))`: the vector kernel widens
+//! the 8 bin lanes to two 4-lane f64 vectors so the product is the
+//! same single f64 rounding followed by the same single f32 convert
+//! the scalar (and the decoder) performs — collapsing it to an f32
+//! multiply would break the double check's exactness argument.
+
+use crate::quantizer::abs::AbsParams;
+use crate::quantizer::{unzigzag, zigzag};
+use crate::types::MAXBIN_ABS;
+
+/// Quantize one block (`x.len() <= 64`) into `out` (same length):
+/// quantized zigzag words, raw IEEE-754 bits for outlier lanes.
+/// Returns the block's outlier mask (bit `j` = lane `j`). Dispatched;
+/// production code calls this, never the twins directly.
+#[inline]
+pub fn quantize_block(x: &[f32], p: AbsParams, protected: bool, out: &mut [u32]) -> u64 {
+    debug_assert!(x.len() <= 64);
+    debug_assert_eq!(x.len(), out.len());
+    #[cfg(target_arch = "x86_64")]
+    {
+        if super::avx2() {
+            // SAFETY: AVX2 presence established by the dispatcher.
+            return unsafe { avx2::quantize_block(x, p, protected, out) };
+        }
+    }
+    quantize_block_scalar(x, p, protected, out)
+}
+
+/// Scalar twin of [`quantize_block`] — the semantic reference (the
+/// seed's per-element loop). Public so the differential property tests
+/// and benches can pin the vector kernel against it.
+pub fn quantize_block_scalar(x: &[f32], p: AbsParams, protected: bool, out: &mut [u32]) -> u64 {
+    let maxbin = MAXBIN_ABS as f32;
+    let eb2_64 = p.eb2 as f64;
+    let eb_64 = p.eb as f64;
+    let mut mask = 0u64;
+    for (j, (&v, w)) in x.iter().zip(out.iter_mut()).enumerate() {
+        let binf = (v * p.inv_eb2).round_ties_even();
+        // Two comparisons, not abs() — Section 3.3. NaN compares false.
+        let in_range = binf < maxbin && binf > -maxbin;
+        let binc = if in_range { binf } else { 0.0 };
+        let bin = binc as i32;
+        // Exact f64 product rounded once to f32: identical to the
+        // decoder's plain f32 multiply, FMA-proof.
+        let recon = ((binc as f64) * eb2_64) as f32;
+        let quant = if protected {
+            let err = ((v as f64) - (recon as f64)).abs();
+            in_range && err <= eb_64
+        } else {
+            in_range
+        };
+        *w = if quant { zigzag(bin) as u32 } else { v.to_bits() };
+        mask |= (!quant as u64) << j;
+    }
+    mask
+}
+
+/// Dequantize one block (`words.len() <= 64`) into `out` (same
+/// length); `mask` is the block's outlier-bitmap word. Dispatched.
+#[inline]
+pub fn dequantize_block(words: &[u32], mask: u64, p: AbsParams, out: &mut [f32]) {
+    debug_assert!(words.len() <= 64);
+    debug_assert_eq!(words.len(), out.len());
+    #[cfg(target_arch = "x86_64")]
+    {
+        if super::avx2() {
+            // SAFETY: AVX2 presence established by the dispatcher.
+            unsafe { avx2::dequantize_block(words, mask, p, out) };
+            return;
+        }
+    }
+    dequantize_block_scalar(words, mask, p, out);
+}
+
+/// Scalar twin of [`dequantize_block`]. The multiply must stay a single
+/// f32 operation: it defines the reconstruction the encoder verified.
+pub fn dequantize_block_scalar(words: &[u32], mask: u64, p: AbsParams, out: &mut [f32]) {
+    for (j, (&w, o)) in words.iter().zip(out.iter_mut()).enumerate() {
+        *o = if (mask >> j) & 1 != 0 {
+            f32::from_bits(w)
+        } else {
+            unzigzag(w) as f32 * p.eb2
+        };
+    }
+}
+
+#[cfg(target_arch = "x86_64")]
+mod avx2 {
+    use super::*;
+    use crate::simd::x86::{join_pd_masks, lane_mask_from_bits, unzigzag_epi32, zigzag_epi32};
+    use core::arch::x86_64::*;
+
+    /// 8-lane ABS quantize: returns the 8 outlier bits for lanes
+    /// `xp[0..8]` and stores the 8 output words.
+    ///
+    /// # Safety
+    /// AVX2; `xp`/`outp` must be valid for 8 f32/u32 reads/writes.
+    #[target_feature(enable = "avx2")]
+    #[inline]
+    unsafe fn quantize8(xp: *const f32, p: AbsParams, protected: bool, outp: *mut u32) -> u32 {
+        let v = _mm256_loadu_ps(xp);
+        // binf = rint(v * inv_eb2): one correctly-rounded multiply, one
+        // round-to-nearest-even — same two roundings as the scalar.
+        let binf = _mm256_round_ps::<{ _MM_FROUND_TO_NEAREST_INT | _MM_FROUND_NO_EXC }>(
+            _mm256_mul_ps(v, _mm256_set1_ps(p.inv_eb2)),
+        );
+        // Ordered-quiet compares: NaN lanes fall out exactly like the
+        // scalar `<` / `>` operators.
+        let in_range = _mm256_and_ps(
+            _mm256_cmp_ps::<_CMP_LT_OQ>(binf, _mm256_set1_ps(MAXBIN_ABS as f32)),
+            _mm256_cmp_ps::<_CMP_GT_OQ>(binf, _mm256_set1_ps(-(MAXBIN_ABS as f32))),
+        );
+        // binc = in_range ? binf : 0.0 (masking yields +0.0, matching
+        // the scalar literal).
+        let binc = _mm256_and_ps(binf, in_range);
+        // |binc| < 2^28 by construction, so the truncating convert can
+        // neither saturate nor hit the indefinite value.
+        let bin = _mm256_cvttps_epi32(binc);
+        // recon = f32(f64(binc) * f64(eb2)), widened lane-pair-wise.
+        let eb2 = _mm256_set1_pd(p.eb2 as f64);
+        let binc_lo = _mm256_cvtps_pd(_mm256_castps256_ps128(binc));
+        let binc_hi = _mm256_cvtps_pd(_mm256_extractf128_ps::<1>(binc));
+        let recon_lo = _mm256_cvtpd_ps(_mm256_mul_pd(binc_lo, eb2));
+        let recon_hi = _mm256_cvtpd_ps(_mm256_mul_pd(binc_hi, eb2));
+        let quant = if protected {
+            // err = |f64(v) - f64(recon)| <= f64(eb), exactly in f64.
+            let abs_mask = _mm256_set1_pd(f64::from_bits(0x7FFF_FFFF_FFFF_FFFF));
+            let eb = _mm256_set1_pd(p.eb as f64);
+            let v_lo = _mm256_cvtps_pd(_mm256_castps256_ps128(v));
+            let v_hi = _mm256_cvtps_pd(_mm256_extractf128_ps::<1>(v));
+            let err_lo =
+                _mm256_and_pd(_mm256_sub_pd(v_lo, _mm256_cvtps_pd(recon_lo)), abs_mask);
+            let err_hi =
+                _mm256_and_pd(_mm256_sub_pd(v_hi, _mm256_cvtps_pd(recon_hi)), abs_mask);
+            let ok = join_pd_masks(
+                _mm256_cmp_pd::<_CMP_LE_OQ>(err_lo, eb),
+                _mm256_cmp_pd::<_CMP_LE_OQ>(err_hi, eb),
+            );
+            _mm256_and_ps(in_range, ok)
+        } else {
+            in_range
+        };
+        // Quantized lanes carry zigzag(bin); outlier lanes their raw
+        // bits — one blend replaces the scalar fixup pass.
+        let zz = zigzag_epi32(bin);
+        let quant_i = _mm256_castps_si256(quant);
+        let words = _mm256_blendv_epi8(_mm256_castps_si256(v), zz, quant_i);
+        _mm256_storeu_si256(outp as *mut __m256i, words);
+        !(_mm256_movemask_ps(quant) as u32) & 0xFF
+    }
+
+    /// AVX2 block kernel: 8-lane groups, scalar twin on the tail (every
+    /// tail length mod 8 is therefore scalar-defined by construction).
+    ///
+    /// # Safety
+    /// Caller must have verified AVX2 support at runtime.
+    #[target_feature(enable = "avx2")]
+    pub(super) unsafe fn quantize_block(
+        x: &[f32],
+        p: AbsParams,
+        protected: bool,
+        out: &mut [u32],
+    ) -> u64 {
+        let groups = x.len() / 8;
+        let mut mask = 0u64;
+        for g in 0..groups {
+            let bits = quantize8(x.as_ptr().add(g * 8), p, protected, out.as_mut_ptr().add(g * 8));
+            mask |= (bits as u64) << (g * 8);
+        }
+        let done = groups * 8;
+        if done < x.len() {
+            mask |= quantize_block_scalar(&x[done..], p, protected, &mut out[done..]) << done;
+        }
+        mask
+    }
+
+    /// 8-lane ABS dequantize; `obits` holds the 8 outlier bits.
+    ///
+    /// # Safety
+    /// AVX2; `wp`/`outp` must be valid for 8 u32/f32 reads/writes.
+    #[target_feature(enable = "avx2")]
+    #[inline]
+    unsafe fn dequantize8(wp: *const u32, obits: u32, p: AbsParams, outp: *mut f32) {
+        let w = _mm256_loadu_si256(wp as *const __m256i);
+        // cvtdq2ps is the same correctly-rounded int->f32 convert as
+        // the scalar `as f32`; the multiply is the single f32 op the
+        // encoder verified.
+        let q = _mm256_mul_ps(_mm256_cvtepi32_ps(unzigzag_epi32(w)), _mm256_set1_ps(p.eb2));
+        let om = lane_mask_from_bits(obits);
+        let vals = _mm256_blendv_epi8(_mm256_castps_si256(q), w, om);
+        _mm256_storeu_si256(outp as *mut __m256i, vals);
+    }
+
+    /// AVX2 dequantize block kernel (tail via the scalar twin).
+    ///
+    /// # Safety
+    /// Caller must have verified AVX2 support at runtime.
+    #[target_feature(enable = "avx2")]
+    pub(super) unsafe fn dequantize_block(
+        words: &[u32],
+        mask: u64,
+        p: AbsParams,
+        out: &mut [f32],
+    ) {
+        let groups = words.len() / 8;
+        for g in 0..groups {
+            let obits = ((mask >> (g * 8)) & 0xFF) as u32;
+            dequantize8(words.as_ptr().add(g * 8), obits, p, out.as_mut_ptr().add(g * 8));
+        }
+        let done = groups * 8;
+        if done < words.len() {
+            dequantize_block_scalar(&words[done..], mask >> done, p, &mut out[done..]);
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::data::Rng;
+
+    fn adversarial(rng: &mut Rng, p: AbsParams, n: usize) -> Vec<f32> {
+        let eb2 = p.eb2 as f64;
+        (0..n)
+            .map(|i| match i % 17 {
+                0 => f32::NAN,
+                1 => f32::INFINITY,
+                2 => f32::NEG_INFINITY,
+                3 => 0.0,
+                4 => -0.0,
+                5 => f32::from_bits(0x8000_0001), // negative denormal
+                6 => 1e30,
+                // ±MAXBIN boundary bins and half-step bait.
+                7 => ((MAXBIN_ABS as f64 - 1.0) * eb2) as f32,
+                8 => (-(MAXBIN_ABS as f64) * eb2) as f32,
+                9 => ((MAXBIN_ABS as f64 + 0.5) * eb2) as f32,
+                _ => {
+                    let v = f32::from_bits(rng.next_u32());
+                    if v.is_nan() {
+                        0.25
+                    } else {
+                        v
+                    }
+                }
+            })
+            .collect()
+    }
+
+    #[test]
+    fn dispatched_matches_scalar_every_tail_length() {
+        let mut rng = Rng::new(0xAB5);
+        for eb in [1e-1f32, 1e-3, 1e-6] {
+            let p = AbsParams::new(eb);
+            for protected in [true, false] {
+                for len in (0..=16).chain([31, 32, 33, 63, 64]) {
+                    let x = adversarial(&mut rng, p, len);
+                    let mut a = vec![0u32; len];
+                    let mut b = vec![0u32; len];
+                    let ma = quantize_block(&x, p, protected, &mut a);
+                    let mb = quantize_block_scalar(&x, p, protected, &mut b);
+                    assert_eq!(a, b, "eb {eb} prot {protected} len {len}");
+                    assert_eq!(ma, mb, "eb {eb} prot {protected} len {len}");
+                    let mut ya = vec![0f32; len];
+                    let mut yb = vec![0f32; len];
+                    dequantize_block(&a, ma, p, &mut ya);
+                    dequantize_block_scalar(&b, mb, p, &mut yb);
+                    let bits_a: Vec<u32> = ya.iter().map(|v| v.to_bits()).collect();
+                    let bits_b: Vec<u32> = yb.iter().map(|v| v.to_bits()).collect();
+                    assert_eq!(bits_a, bits_b, "eb {eb} prot {protected} len {len}");
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn all_outlier_block_matches() {
+        let p = AbsParams::new(1e-6);
+        let x = vec![1e30f32; 64];
+        let mut a = vec![0u32; 64];
+        let mut b = vec![0u32; 64];
+        let ma = quantize_block(&x, p, true, &mut a);
+        let mb = quantize_block_scalar(&x, p, true, &mut b);
+        assert_eq!((ma, &a), (mb, &b));
+        assert_eq!(ma, u64::MAX);
+    }
+
+    #[test]
+    fn dequantize_hostile_words_match_scalar() {
+        // Decode-side words come off the wire: arbitrary u32 content
+        // and arbitrary masks must still decode identically.
+        let p = AbsParams::new(1e-3);
+        let mut rng = Rng::new(77);
+        for len in [8usize, 13, 64] {
+            let words: Vec<u32> = (0..len).map(|_| rng.next_u32()).collect();
+            let mask = ((rng.next_u32() as u64) << 32) | rng.next_u32() as u64;
+            let mut ya = vec![0f32; len];
+            let mut yb = vec![0f32; len];
+            dequantize_block(&words, mask, p, &mut ya);
+            dequantize_block_scalar(&words, mask, p, &mut yb);
+            let bits_a: Vec<u32> = ya.iter().map(|v| v.to_bits()).collect();
+            let bits_b: Vec<u32> = yb.iter().map(|v| v.to_bits()).collect();
+            assert_eq!(bits_a, bits_b, "len {len}");
+        }
+    }
+}

@@ -1,0 +1,167 @@
+//! Delta transform kernels (scalar twin + AVX2).
+//!
+//! Everything here is wrapping u32/i32 arithmetic, so bit-exactness is
+//! structural: wrapping addition is associative and commutative mod
+//! 2^32, which lets the decode prefix sum reassociate into a log-step
+//! (Hillis–Steele) scan without changing a single output bit. The
+//! encode is elementwise (`out[i] = zigzag(w[i] - w[i-1])`) once the
+//! loop-carried `prev` is recognized as just a lane shift of the
+//! input.
+
+/// Dispatched in-place delta encode:
+/// `out[i] = zigzag(w[i] - w[i-1])` (wrapping, `w[-1] = 0`).
+#[inline]
+pub fn encode(words: &mut [u32]) {
+    #[cfg(target_arch = "x86_64")]
+    {
+        if super::avx2() {
+            // SAFETY: AVX2 presence established by the dispatcher.
+            unsafe { avx2::encode(words) };
+            return;
+        }
+    }
+    encode_scalar(words);
+}
+
+/// Scalar twin of [`encode`] — the seed's loop, verbatim.
+pub fn encode_scalar(words: &mut [u32]) {
+    let mut prev = 0u32;
+    for w in words.iter_mut() {
+        let cur = *w;
+        let d = cur.wrapping_sub(prev) as i32;
+        *w = ((d << 1) ^ (d >> 31)) as u32;
+        prev = cur;
+    }
+}
+
+/// Dispatched in-place inverse (unzigzag, then wrapping prefix sum).
+/// The serial form is the decode chain's only loop-carried dependency;
+/// the AVX2 kernel breaks it with a log-step scan.
+#[inline]
+pub fn decode(words: &mut [u32]) {
+    #[cfg(target_arch = "x86_64")]
+    {
+        if super::avx2() {
+            // SAFETY: AVX2 presence established by the dispatcher.
+            unsafe { avx2::decode(words) };
+            return;
+        }
+    }
+    decode_scalar(words);
+}
+
+/// Scalar twin of [`decode`] — the seed's loop, verbatim.
+pub fn decode_scalar(words: &mut [u32]) {
+    let mut acc = 0u32;
+    for w in words.iter_mut() {
+        let d = ((*w >> 1) as i32) ^ -((*w & 1) as i32);
+        acc = acc.wrapping_add(d as u32);
+        *w = acc;
+    }
+}
+
+#[cfg(target_arch = "x86_64")]
+mod avx2 {
+    use crate::simd::x86::{unzigzag_epi32, zigzag_epi32};
+    use core::arch::x86_64::*;
+
+    /// AVX2 delta encode. The `prev` lane vector is built by rotating
+    /// the current vector one lane right and inserting the carried
+    /// last-original-word — stores are never re-read, so the in-place
+    /// update cannot observe its own output.
+    ///
+    /// # Safety
+    /// Caller must have verified AVX2 support at runtime.
+    #[target_feature(enable = "avx2")]
+    pub(super) unsafe fn encode(words: &mut [u32]) {
+        let n = words.len();
+        let p = words.as_mut_ptr();
+        let rot_idx = _mm256_setr_epi32(7, 0, 1, 2, 3, 4, 5, 6);
+        let mut carry = 0u32; // original w[i-1] for the current group
+        let mut i = 0usize;
+        while i + 8 <= n {
+            let cur = _mm256_loadu_si256(p.add(i) as *const __m256i);
+            let rot = _mm256_permutevar8x32_epi32(cur, rot_idx);
+            let prev = _mm256_blend_epi32::<0x01>(rot, _mm256_set1_epi32(carry as i32));
+            carry = _mm256_extract_epi32::<7>(cur) as u32;
+            let z = zigzag_epi32(_mm256_sub_epi32(cur, prev));
+            _mm256_storeu_si256(p.add(i) as *mut __m256i, z);
+            i += 8;
+        }
+        let mut prev = carry;
+        for w in words[i..].iter_mut() {
+            let cur = *w;
+            let d = cur.wrapping_sub(prev) as i32;
+            *w = ((d << 1) ^ (d >> 31)) as u32;
+            prev = cur;
+        }
+    }
+
+    /// AVX2 delta decode: per-vector Hillis–Steele inclusive scan
+    /// (shift-add steps 1 and 2 inside each 128-bit lane, then the low
+    /// lane's total carried into the high lane), plus the running
+    /// prefix broadcast. Wrapping adds keep every output bit identical
+    /// to the serial sum.
+    ///
+    /// # Safety
+    /// Caller must have verified AVX2 support at runtime.
+    #[target_feature(enable = "avx2")]
+    pub(super) unsafe fn decode(words: &mut [u32]) {
+        let n = words.len();
+        let p = words.as_mut_ptr();
+        let mut accv = _mm256_setzero_si256(); // running prefix, all lanes
+        let mut i = 0usize;
+        while i + 8 <= n {
+            let z = _mm256_loadu_si256(p.add(i) as *const __m256i);
+            let mut d = unzigzag_epi32(z);
+            d = _mm256_add_epi32(d, _mm256_slli_si256::<4>(d));
+            d = _mm256_add_epi32(d, _mm256_slli_si256::<8>(d));
+            // Carry the low 128-lane's total (element 3) into the high
+            // lane: broadcast it, then zero the low half.
+            let low_total = _mm256_permutevar8x32_epi32(d, _mm256_set1_epi32(3));
+            d = _mm256_add_epi32(d, _mm256_permute2x128_si256::<0x28>(low_total, low_total));
+            d = _mm256_add_epi32(d, accv);
+            _mm256_storeu_si256(p.add(i) as *mut __m256i, d);
+            accv = _mm256_permutevar8x32_epi32(d, _mm256_set1_epi32(7));
+            i += 8;
+        }
+        let mut acc = _mm256_extract_epi32::<0>(accv) as u32;
+        for w in words[i..].iter_mut() {
+            let d = ((*w >> 1) as i32) ^ -((*w & 1) as i32);
+            acc = acc.wrapping_add(d as u32);
+            *w = acc;
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::data::Rng;
+
+    #[test]
+    fn dispatched_matches_scalar_every_tail_length() {
+        let mut rng = Rng::new(0xDE17A);
+        for len in (0..=20).chain([31, 32, 33, 63, 64, 65, 1000, 4097]) {
+            let orig: Vec<u32> = (0..len)
+                .map(|k| match k % 7 {
+                    0 => 0,
+                    1 => u32::MAX,
+                    2 => 1 << 31,
+                    _ => rng.next_u32(),
+                })
+                .collect();
+            let mut a = orig.clone();
+            let mut b = orig.clone();
+            encode(&mut a);
+            encode_scalar(&mut b);
+            assert_eq!(a, b, "encode len {len}");
+            let mut da = a.clone();
+            let mut db = a.clone();
+            decode(&mut da);
+            decode_scalar(&mut db);
+            assert_eq!(da, db, "decode len {len}");
+            assert_eq!(da, orig, "roundtrip len {len}");
+        }
+    }
+}

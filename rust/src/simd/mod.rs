@@ -1,0 +1,219 @@
+//! `lc::simd` — the unified SIMD kernel layer behind every per-element
+//! hot loop (quantize/dequantize blocks, delta transform, RLE zero
+//! scan, and the bitshuffle transpose's feature gate).
+//!
+//! # Dispatch contract
+//!
+//! One process-wide decision, made once and cached: [`level`] probes
+//! cpuid (`is_x86_feature_detected!("avx2")`) and the `LC_FORCE_SCALAR`
+//! environment variable on first use, then every kernel call is a
+//! single predictable load + branch. Setting `LC_FORCE_SCALAR` to
+//! anything other than `""` or `"0"` pins the whole process to the
+//! scalar kernels — the triage kill-switch (a miscompare between two
+//! machines can be bisected to the vector layer by re-running one side
+//! scalar-forced) and the CI lever that keeps the scalar fallback from
+//! rotting on AVX2 runners. The variable is read once; changing it
+//! after the first kernel call has no effect.
+//!
+//! # Bit-exactness requirement
+//!
+//! The paper's error-bound guarantee rests on the encoder and decoder
+//! performing **bit-identical roundings** (the same discipline SZx and
+//! FZ-GPU apply to keep their vector fast paths lossless-equivalent to
+//! their reference kernels). Every kernel in this module therefore
+//! ships as a pair:
+//!
+//! * a **scalar twin** (`*_scalar`) — the semantic definition, byte-
+//!   for-byte the seed's loop, always compiled, always the reference;
+//! * a vector kernel that must reproduce the twin **bit for bit on
+//!   every input**, specials included (NaN payload propagation is the
+//!   one tolerated exception — and only where the bits never reach an
+//!   output, e.g. a comparison mask).
+//!
+//! Rules the AVX2 kernels follow to get there:
+//!
+//! * every float step is the same single correctly-rounded IEEE-754
+//!   operation the scalar twin performs (`_mm256_mul_ps` ==  `*`,
+//!   `_mm256_round_ps::<NEAREST>` == `round_ties_even`, `cvtpd_ps` ==
+//!   `as f32`), in the same order — no FMA, no reassociation;
+//! * f32→f64→f32 double-rounding sequences are widened lane-pair-wise
+//!   (`cvtps_pd` / `mul_pd` / `cvtpd_ps`), never approximated in f32;
+//! * float→int casts with Rust semantics (saturate, NaN→0) either
+//!   prove the input in range or take the scalar-cast fixup path
+//!   (see `rel::cvtpd_i32_rust`);
+//! * predicates use ordered, quiet comparisons (`_CMP_*_OQ`) so NaN
+//!   lanes fall out exactly like the scalar `<`/`>=` operators;
+//! * integer lanes (zigzag, wrapping sums, bit packing) are exact by
+//!   construction — wrapping addition is associative mod 2^32, so even
+//!   the reassociated prefix sum is bit-identical.
+//!
+//! # How to add a kernel
+//!
+//! 1. Extract the scalar loop into `<module>::<name>_scalar` verbatim —
+//!    it becomes the reference; the caller keeps no second copy.
+//! 2. Write the AVX2 kernel in the module's `avx2` submodule as a
+//!    `#[target_feature(enable = "avx2")]` fn; handle tails (< one
+//!    vector) by delegating to the scalar twin on the remainder slice.
+//! 3. Expose one safe dispatched entry point that branches on
+//!    [`avx2`] and document it as the only function production code
+//!    may call.
+//! 4. Pin the pair with a differential property test over adversarial
+//!    inputs (NaN, ±0, denormals, boundary bins, all-outlier blocks,
+//!    every tail length mod the lane count) — see
+//!    `rust/tests/properties.rs` — and run the suite both default and
+//!    `LC_FORCE_SCALAR=1`.
+
+pub mod abs;
+pub mod delta;
+pub mod rel;
+pub mod rle;
+
+use std::sync::atomic::{AtomicU8, Ordering};
+
+/// Vector instruction tier selected for this process.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum SimdLevel {
+    /// Portable scalar kernels (also the bit-exactness reference).
+    Scalar,
+    /// 256-bit AVX2 kernels (x86-64, runtime-detected).
+    Avx2,
+}
+
+/// `LC_FORCE_SCALAR` parsing: unset, empty, and `"0"` leave SIMD on;
+/// any other value forces the scalar kernels.
+fn force_scalar_value(v: Option<&std::ffi::OsStr>) -> bool {
+    match v {
+        None => false,
+        Some(s) => !s.is_empty() && s != "0",
+    }
+}
+
+fn detect() -> SimdLevel {
+    if force_scalar_value(std::env::var_os("LC_FORCE_SCALAR").as_deref()) {
+        return SimdLevel::Scalar;
+    }
+    #[cfg(target_arch = "x86_64")]
+    {
+        if is_x86_feature_detected!("avx2") {
+            return SimdLevel::Avx2;
+        }
+    }
+    SimdLevel::Scalar
+}
+
+/// The process-wide dispatch decision. cpuid and `LC_FORCE_SCALAR` are
+/// probed exactly once (first call) and cached; afterwards this is one
+/// relaxed atomic load.
+#[inline]
+pub fn level() -> SimdLevel {
+    // 0 = unknown, 1 = scalar, 2 = avx2.
+    static LEVEL: AtomicU8 = AtomicU8::new(0);
+    match LEVEL.load(Ordering::Relaxed) {
+        1 => SimdLevel::Scalar,
+        2 => SimdLevel::Avx2,
+        _ => {
+            let l = detect();
+            let tag = match l {
+                SimdLevel::Scalar => 1,
+                SimdLevel::Avx2 => 2,
+            };
+            LEVEL.store(tag, Ordering::Relaxed);
+            l
+        }
+    }
+}
+
+/// True when the AVX2 kernels are dispatched (feature present and not
+/// scalar-forced).
+#[inline]
+pub fn avx2() -> bool {
+    level() == SimdLevel::Avx2
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn force_scalar_parsing() {
+        use std::ffi::OsStr;
+        assert!(!force_scalar_value(None));
+        assert!(!force_scalar_value(Some(OsStr::new(""))));
+        assert!(!force_scalar_value(Some(OsStr::new("0"))));
+        assert!(force_scalar_value(Some(OsStr::new("1"))));
+        assert!(force_scalar_value(Some(OsStr::new("yes"))));
+    }
+
+    #[test]
+    fn level_is_cached_and_consistent() {
+        // The decision must be stable across calls (it is cached), and
+        // avx2() must agree with it. Under LC_FORCE_SCALAR=1 (the
+        // second CI pass) this pins the kill-switch: level() is Scalar
+        // even on AVX2 hardware.
+        let a = level();
+        assert_eq!(a, level());
+        assert_eq!(avx2(), a == SimdLevel::Avx2);
+        if force_scalar_value(std::env::var_os("LC_FORCE_SCALAR").as_deref()) {
+            assert_eq!(a, SimdLevel::Scalar, "kill-switch must pin scalar");
+        }
+        #[cfg(not(target_arch = "x86_64"))]
+        assert_eq!(a, SimdLevel::Scalar);
+    }
+}
+
+/// Shared x86-64 lane helpers used by more than one kernel module.
+#[cfg(target_arch = "x86_64")]
+pub(crate) mod x86 {
+    use core::arch::x86_64::*;
+
+    /// Lane-wise `zigzag`: `(b << 1) ^ (b >> 31)` (arithmetic shift).
+    ///
+    /// # Safety
+    /// AVX2 only (callers are themselves AVX2-gated).
+    #[target_feature(enable = "avx2")]
+    #[inline]
+    pub unsafe fn zigzag_epi32(b: __m256i) -> __m256i {
+        _mm256_xor_si256(_mm256_slli_epi32::<1>(b), _mm256_srai_epi32::<31>(b))
+    }
+
+    /// Lane-wise `unzigzag`: `((z >> 1) as i32) ^ -((z & 1) as i32)`.
+    ///
+    /// # Safety
+    /// AVX2 only (callers are themselves AVX2-gated).
+    #[target_feature(enable = "avx2")]
+    #[inline]
+    pub unsafe fn unzigzag_epi32(z: __m256i) -> __m256i {
+        _mm256_xor_si256(
+            _mm256_srli_epi32::<1>(z),
+            _mm256_sub_epi32(_mm256_setzero_si256(), _mm256_and_si256(z, _mm256_set1_epi32(1))),
+        )
+    }
+
+    /// Expand the low 8 bits of `bits` into 8 full 32-bit lane masks
+    /// (lane j all-ones iff bit j set) — the outlier-bitmap unpack.
+    ///
+    /// # Safety
+    /// AVX2 only (callers are themselves AVX2-gated).
+    #[target_feature(enable = "avx2")]
+    #[inline]
+    pub unsafe fn lane_mask_from_bits(bits: u32) -> __m256i {
+        let b = _mm256_set1_epi32(bits as i32);
+        let sel = _mm256_setr_epi32(1, 2, 4, 8, 16, 32, 64, 128);
+        _mm256_cmpeq_epi32(_mm256_and_si256(b, sel), sel)
+    }
+
+    /// Compress two 4x64-bit lane masks (from `_mm256_cmp_pd`) into one
+    /// 8x32-bit lane mask, preserving lane order: result lane j is the
+    /// mask of f64 lane j (j < 4 from `lo`, else from `hi`).
+    ///
+    /// # Safety
+    /// AVX2 only (callers are themselves AVX2-gated).
+    #[target_feature(enable = "avx2")]
+    #[inline]
+    pub unsafe fn join_pd_masks(lo: __m256d, hi: __m256d) -> __m256 {
+        // Each 64-bit mask is two identical 32-bit halves; pick one half
+        // per f64 lane, then permute the 64-bit quarters back in order.
+        let s = _mm256_shuffle_ps::<0x88>(_mm256_castpd_ps(lo), _mm256_castpd_ps(hi));
+        _mm256_castpd_ps(_mm256_permute4x64_pd::<0xD8>(_mm256_castps_pd(s)))
+    }
+}

@@ -1,0 +1,462 @@
+//! REL quantize/dequantize block kernels (scalar twin + AVX2).
+//!
+//! Only the parity-safe `Approx` variant is vectorized:
+//! `log2approxf`/`pow2approx_from_bins` are integer/bit manipulations
+//! plus single correctly-rounded float ops, so they map to AVX2 lanes
+//! exactly. The `Native` variant calls libm `log2`/`exp2`, which has no
+//! lane-exact vector form — it always dispatches to the scalar twin
+//! (it is the paper's deliberately non-parity-safe baseline anyway).
+//!
+//! The one place the vector kernel cannot use the hardware cast
+//! directly is `pow2approx`'s `biased as i32`: Rust's float→int cast
+//! saturates (and maps NaN to 0) while `cvttpd` returns the indefinite
+//! value. Valid parameters never reach that region, but decode-side
+//! bins come off the wire, so [`avx2::cvtpd_i32_rust`] detects the
+//! disagreement region with one unordered compare and falls back to
+//! the scalar cast for those (hostile-input-only) lanes.
+
+use crate::quantizer::approx::pow2approx_from_bins;
+use crate::quantizer::rel::{encode_one, RelParams};
+use crate::quantizer::unzigzag;
+use crate::types::FnVariant;
+
+/// Quantize one block (`x.len() <= 64`) into `out` (same length).
+/// Returns the block's outlier mask. Dispatched; `Native` always runs
+/// the scalar twin.
+#[inline]
+pub fn quantize_block(
+    x: &[f32],
+    p: RelParams,
+    variant: FnVariant,
+    protected: bool,
+    out: &mut [u32],
+) -> u64 {
+    debug_assert!(x.len() <= 64);
+    debug_assert_eq!(x.len(), out.len());
+    #[cfg(target_arch = "x86_64")]
+    {
+        if variant == FnVariant::Approx && super::avx2() {
+            // SAFETY: AVX2 presence established by the dispatcher.
+            return unsafe { avx2::quantize_block(x, p, protected, out) };
+        }
+    }
+    quantize_block_scalar(x, p, variant, protected, out)
+}
+
+/// Scalar twin of [`quantize_block`]: per-lane
+/// [`crate::quantizer::rel::encode_one`], the semantic reference.
+pub fn quantize_block_scalar(
+    x: &[f32],
+    p: RelParams,
+    variant: FnVariant,
+    protected: bool,
+    out: &mut [u32],
+) -> u64 {
+    let mut mask = 0u64;
+    for (j, (&v, w)) in x.iter().zip(out.iter_mut()).enumerate() {
+        let (word, outlier) = encode_one(v, p, variant, protected);
+        *w = word;
+        mask |= (outlier as u64) << j;
+    }
+    mask
+}
+
+/// Dequantize one block (`words.len() <= 64`) into `out` (same
+/// length); `mask` is the block's outlier-bitmap word. Dispatched;
+/// `Native` always runs the scalar twin.
+#[inline]
+pub fn dequantize_block(
+    words: &[u32],
+    mask: u64,
+    p: RelParams,
+    variant: FnVariant,
+    out: &mut [f32],
+) {
+    debug_assert!(words.len() <= 64);
+    debug_assert_eq!(words.len(), out.len());
+    #[cfg(target_arch = "x86_64")]
+    {
+        if variant == FnVariant::Approx && super::avx2() {
+            // SAFETY: AVX2 presence established by the dispatcher.
+            unsafe { avx2::dequantize_block(words, mask, p, out) };
+            return;
+        }
+    }
+    dequantize_block_scalar(words, mask, p, variant, out);
+}
+
+/// Scalar twin of [`dequantize_block`]. Must use the same pow2 the
+/// encoder verified with.
+pub fn dequantize_block_scalar(
+    words: &[u32],
+    mask: u64,
+    p: RelParams,
+    variant: FnVariant,
+    out: &mut [f32],
+) {
+    for (j, (&w, o)) in words.iter().zip(out.iter_mut()).enumerate() {
+        *o = if (mask >> j) & 1 != 0 {
+            f32::from_bits(w)
+        } else {
+            let sign = (w & 1) != 0;
+            let bin = unzigzag(w >> 1);
+            let mag = match variant {
+                FnVariant::Approx => pow2approx_from_bins(bin, p.l2eb),
+                FnVariant::Native => (bin as f32 * p.l2eb).exp2(),
+            };
+            if sign {
+                -mag
+            } else {
+                mag
+            }
+        };
+    }
+}
+
+#[cfg(target_arch = "x86_64")]
+mod avx2 {
+    use super::*;
+    use crate::simd::x86::{join_pd_masks, lane_mask_from_bits, unzigzag_epi32, zigzag_epi32};
+    use crate::types::{MANTISSA_MASK_F32, MAXBIN_REL, REL_MIN_MAG};
+    use core::arch::x86_64::*;
+
+    /// f64x4 → i32x4 with Rust `as i32` cast semantics (truncate;
+    /// saturate on overflow; NaN → 0). `cvttpd` already matches for
+    /// everything below 2^31 (including underflow saturation to
+    /// `i32::MIN`); the only disagreement region is `x >= 2^31 ∪ NaN`,
+    /// which one `NLT_UQ` compare detects — those lanes re-cast
+    /// through the scalar operator, which IS the semantics.
+    ///
+    /// Reachability note: under validated REL bounds (`eb < 1` ⇒
+    /// `l2eb < 1`) even hostile wire bins (|bin| ≤ 2^30) keep
+    /// `|biased| < 2^31`, so this fixup is pure defense-in-depth for
+    /// unvalidated params; it is pinned directly by the
+    /// `cvtpd_i32_rust_matches_scalar_cast_semantics` unit test (the
+    /// kernel-level differential tests cannot reach it, and the scalar
+    /// twin's `128 - expo` would overflow in that region anyway).
+    ///
+    /// # Safety
+    /// AVX2 only (callers are themselves AVX2-gated).
+    #[target_feature(enable = "avx2")]
+    #[inline]
+    pub(super) unsafe fn cvtpd_i32_rust(x: __m256d) -> __m128i {
+        let raw = _mm256_cvttpd_epi32(x);
+        let bad = _mm256_cmp_pd::<_CMP_NLT_UQ>(x, _mm256_set1_pd(2147483648.0));
+        if _mm256_movemask_pd(bad) == 0 {
+            return raw;
+        }
+        let mut lanes = [0.0f64; 4];
+        _mm256_storeu_pd(lanes.as_mut_ptr(), x);
+        let fixed = [
+            lanes[0] as i32,
+            lanes[1] as i32,
+            lanes[2] as i32,
+            lanes[3] as i32,
+        ];
+        _mm_loadu_si128(fixed.as_ptr() as *const __m128i)
+    }
+
+    /// 4-lane `pow2approx_from_bins`: every step is the same single
+    /// correctly-rounded operation as the scalar (see
+    /// `quantizer::approx` for the exactness argument).
+    ///
+    /// # Safety
+    /// AVX2 only (callers are themselves AVX2-gated).
+    #[target_feature(enable = "avx2")]
+    #[inline]
+    unsafe fn pow2approx4(bin: __m128i, l2eb: f64) -> __m128 {
+        let arg = _mm256_mul_pd(_mm256_cvtepi32_pd(bin), _mm256_set1_pd(l2eb));
+        let biased = _mm256_add_pd(arg, _mm256_set1_pd(127.0));
+        let expo = cvtpd_i32_rust(biased);
+        let frac64 = _mm256_add_pd(
+            arg,
+            _mm256_cvtepi32_pd(_mm_sub_epi32(_mm_set1_epi32(128), expo)),
+        );
+        let frac_i = _mm_castps_si128(_mm256_cvtpd_ps(frac64));
+        let exp_i = _mm_or_si128(
+            _mm_slli_epi32::<23>(expo),
+            _mm_and_si128(frac_i, _mm_set1_epi32(MANTISSA_MASK_F32)),
+        );
+        _mm_castsi128_ps(exp_i)
+    }
+
+    /// 8-lane `pow2approx_from_bins` over an i32 bin vector.
+    ///
+    /// # Safety
+    /// AVX2 only (callers are themselves AVX2-gated).
+    #[target_feature(enable = "avx2")]
+    #[inline]
+    unsafe fn pow2approx8(bin: __m256i, l2eb: f64) -> __m256 {
+        let lo = pow2approx4(_mm256_castsi256_si128(bin), l2eb);
+        let hi = pow2approx4(_mm256_extracti128_si256::<1>(bin), l2eb);
+        _mm256_insertf128_ps::<1>(_mm256_castps128_ps256(lo), hi)
+    }
+
+    /// 8-lane REL (Approx) quantize; returns the 8 outlier bits.
+    ///
+    /// # Safety
+    /// AVX2; `xp`/`outp` must be valid for 8 f32/u32 reads/writes.
+    #[target_feature(enable = "avx2")]
+    #[inline]
+    unsafe fn quantize8(xp: *const f32, p: RelParams, protected: bool, outp: *mut u32) -> u32 {
+        let v = _mm256_loadu_ps(xp);
+        let ax = _mm256_and_ps(v, _mm256_castsi256_ps(_mm256_set1_epi32(0x7FFF_FFFF)));
+        // sign = (v < 0.0) as i32: ordered compare, NaN and -0.0 -> 0.
+        let sign01 = _mm256_and_si256(
+            _mm256_castps_si256(_mm256_cmp_ps::<_CMP_LT_OQ>(v, _mm256_setzero_ps())),
+            _mm256_set1_epi32(1),
+        );
+        let finite = _mm256_cmp_ps::<_CMP_LT_OQ>(ax, _mm256_set1_ps(f32::INFINITY));
+        let big = _mm256_cmp_ps::<_CMP_GE_OQ>(ax, _mm256_set1_ps(REL_MIN_MAG));
+        // log2approxf lane-wise: ax has the sign bit clear, so the
+        // scalar's arithmetic shift == this logical shift.
+        let bits = _mm256_castps_si256(ax);
+        let expo = _mm256_srli_epi32::<23>(bits);
+        let frac = _mm256_castsi256_ps(_mm256_or_si256(
+            _mm256_set1_epi32(127 << 23),
+            _mm256_and_si256(bits, _mm256_set1_epi32(MANTISSA_MASK_F32)),
+        ));
+        let lg = _mm256_add_ps(
+            frac,
+            _mm256_cvtepi32_ps(_mm256_sub_epi32(expo, _mm256_set1_epi32(128))),
+        );
+        let binf = _mm256_round_ps::<{ _MM_FROUND_TO_NEAREST_INT | _MM_FROUND_NO_EXC }>(
+            _mm256_mul_ps(lg, _mm256_set1_ps(p.inv_l2eb)),
+        );
+        let in_range = _mm256_and_ps(
+            _mm256_cmp_ps::<_CMP_LT_OQ>(binf, _mm256_set1_ps(MAXBIN_REL as f32)),
+            _mm256_cmp_ps::<_CMP_GT_OQ>(binf, _mm256_set1_ps(-(MAXBIN_REL as f32))),
+        );
+        let usable = _mm256_and_ps(_mm256_and_ps(in_range, finite), big);
+        let binc = _mm256_and_ps(binf, usable);
+        let bin = _mm256_cvttps_epi32(binc);
+        let recon = pow2approx8(bin, p.l2eb as f64);
+        let quant = if protected {
+            // err = |f64(ax) - f64(recon)| <= f64(eb) * f64(ax).
+            let abs_mask = _mm256_set1_pd(f64::from_bits(0x7FFF_FFFF_FFFF_FFFF));
+            let eb = _mm256_set1_pd(p.eb as f64);
+            let ax_lo = _mm256_cvtps_pd(_mm256_castps256_ps128(ax));
+            let ax_hi = _mm256_cvtps_pd(_mm256_extractf128_ps::<1>(ax));
+            let re_lo = _mm256_cvtps_pd(_mm256_castps256_ps128(recon));
+            let re_hi = _mm256_cvtps_pd(_mm256_extractf128_ps::<1>(recon));
+            let err_lo = _mm256_and_pd(_mm256_sub_pd(ax_lo, re_lo), abs_mask);
+            let err_hi = _mm256_and_pd(_mm256_sub_pd(ax_hi, re_hi), abs_mask);
+            let ok = join_pd_masks(
+                _mm256_cmp_pd::<_CMP_LE_OQ>(err_lo, _mm256_mul_pd(eb, ax_lo)),
+                _mm256_cmp_pd::<_CMP_LE_OQ>(err_hi, _mm256_mul_pd(eb, ax_hi)),
+            );
+            _mm256_and_ps(usable, ok)
+        } else {
+            usable
+        };
+        // packed = (zigzag(bin) << 1) | sign; outlier lanes raw bits.
+        let packed = _mm256_or_si256(_mm256_slli_epi32::<1>(zigzag_epi32(bin)), sign01);
+        let quant_i = _mm256_castps_si256(quant);
+        let words = _mm256_blendv_epi8(_mm256_castps_si256(v), packed, quant_i);
+        _mm256_storeu_si256(outp as *mut __m256i, words);
+        !(_mm256_movemask_ps(quant) as u32) & 0xFF
+    }
+
+    /// AVX2 REL (Approx) quantize block kernel (scalar twin on tails).
+    ///
+    /// # Safety
+    /// Caller must have verified AVX2 support at runtime.
+    #[target_feature(enable = "avx2")]
+    pub(super) unsafe fn quantize_block(
+        x: &[f32],
+        p: RelParams,
+        protected: bool,
+        out: &mut [u32],
+    ) -> u64 {
+        let groups = x.len() / 8;
+        let mut mask = 0u64;
+        for g in 0..groups {
+            let bits = quantize8(x.as_ptr().add(g * 8), p, protected, out.as_mut_ptr().add(g * 8));
+            mask |= (bits as u64) << (g * 8);
+        }
+        let done = groups * 8;
+        if done < x.len() {
+            mask |= quantize_block_scalar(&x[done..], p, FnVariant::Approx, protected, &mut out[done..])
+                << done;
+        }
+        mask
+    }
+
+    /// 8-lane REL (Approx) dequantize.
+    ///
+    /// # Safety
+    /// AVX2; `wp`/`outp` must be valid for 8 u32/f32 reads/writes.
+    #[target_feature(enable = "avx2")]
+    #[inline]
+    unsafe fn dequantize8(wp: *const u32, obits: u32, p: RelParams, outp: *mut f32) {
+        let w = _mm256_loadu_si256(wp as *const __m256i);
+        // Scalar negation of any f32 (NaN included) flips the sign bit;
+        // xor with sign<<31 is the same operation.
+        let sign = _mm256_slli_epi32::<31>(_mm256_and_si256(w, _mm256_set1_epi32(1)));
+        let bin = unzigzag_epi32(_mm256_srli_epi32::<1>(w));
+        let mag = pow2approx8(bin, p.l2eb as f64);
+        let vals = _mm256_xor_si256(_mm256_castps_si256(mag), sign);
+        let om = lane_mask_from_bits(obits);
+        _mm256_storeu_si256(outp as *mut __m256i, _mm256_blendv_epi8(vals, w, om));
+    }
+
+    /// AVX2 REL (Approx) dequantize block kernel (scalar tails).
+    ///
+    /// # Safety
+    /// Caller must have verified AVX2 support at runtime.
+    #[target_feature(enable = "avx2")]
+    pub(super) unsafe fn dequantize_block(
+        words: &[u32],
+        mask: u64,
+        p: RelParams,
+        out: &mut [f32],
+    ) {
+        let groups = words.len() / 8;
+        for g in 0..groups {
+            let obits = ((mask >> (g * 8)) & 0xFF) as u32;
+            dequantize8(words.as_ptr().add(g * 8), obits, p, out.as_mut_ptr().add(g * 8));
+        }
+        let done = groups * 8;
+        if done < words.len() {
+            dequantize_block_scalar(
+                &words[done..],
+                mask >> done,
+                p,
+                FnVariant::Approx,
+                &mut out[done..],
+            );
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::data::Rng;
+    use crate::types::REL_MIN_MAG;
+
+    fn adversarial(rng: &mut Rng, n: usize) -> Vec<f32> {
+        (0..n)
+            .map(|i| match i % 19 {
+                0 => f32::NAN,
+                1 => f32::INFINITY,
+                2 => f32::NEG_INFINITY,
+                3 => 0.0,
+                4 => -0.0,
+                5 => f32::from_bits(0x8000_0001), // negative denormal
+                6 => f32::from_bits(0x807F_FFFF), // largest negative denormal
+                7 => REL_MIN_MAG,
+                8 => -REL_MIN_MAG / 2.0,
+                9 => f32::MAX,
+                10 => f32::MIN,
+                // ±MAXBIN_REL boundary magnitudes at eb = 6.2e-7
+                // (|log2 x| straddles 120, see rel.rs boundary test).
+                11 => 1.5f32 * 2.0f32.powi(120),
+                12 => -1.5f32 * 2.0f32.powi(120),
+                13 => 1.5f32 * 2.0f32.powi(-121),
+                _ => {
+                    let v = f32::from_bits(rng.next_u32());
+                    if v.is_nan() {
+                        -0.75
+                    } else {
+                        v
+                    }
+                }
+            })
+            .collect()
+    }
+
+    #[test]
+    fn dispatched_matches_scalar_every_tail_length() {
+        let mut rng = Rng::new(0x9E1);
+        // 6.2e-7 parks bins at the ±(MAXBIN_REL - 1) boundary.
+        for eb in [1e-1f32, 1e-3, 6.2e-7] {
+            let p = RelParams::new(eb);
+            for variant in [FnVariant::Approx, FnVariant::Native] {
+                for protected in [true, false] {
+                    for len in (0..=16).chain([31, 32, 33, 63, 64]) {
+                        let x = adversarial(&mut rng, len);
+                        let mut a = vec![0u32; len];
+                        let mut b = vec![0u32; len];
+                        let ma = quantize_block(&x, p, variant, protected, &mut a);
+                        let mb = quantize_block_scalar(&x, p, variant, protected, &mut b);
+                        assert_eq!(a, b, "eb {eb} {variant:?} prot {protected} len {len}");
+                        assert_eq!(ma, mb, "eb {eb} {variant:?} prot {protected} len {len}");
+                        let mut ya = vec![0f32; len];
+                        let mut yb = vec![0f32; len];
+                        dequantize_block(&a, ma, p, variant, &mut ya);
+                        dequantize_block_scalar(&b, mb, p, variant, &mut yb);
+                        let bits_a: Vec<u32> = ya.iter().map(|v| v.to_bits()).collect();
+                        let bits_b: Vec<u32> = yb.iter().map(|v| v.to_bits()).collect();
+                        assert_eq!(bits_a, bits_b, "eb {eb} {variant:?} len {len}");
+                    }
+                }
+            }
+        }
+    }
+
+    #[cfg(target_arch = "x86_64")]
+    #[test]
+    fn cvtpd_i32_rust_matches_scalar_cast_semantics() {
+        // Direct pin of the saturating-cast fixup (the differential
+        // kernel tests cannot reach it: validated REL params keep
+        // |biased| < 2^31 even for hostile wire bins).
+        if !is_x86_feature_detected!("avx2") {
+            return;
+        }
+        use core::arch::x86_64::*;
+        let cases: [[f64; 4]; 4] = [
+            [0.0, -0.0, 1.9, -1.9],
+            [2147483647.0, 2147483648.0, -2147483648.0, -2147483649.0],
+            [f64::NAN, 3e9, -3e9, f64::INFINITY],
+            [f64::NEG_INFINITY, 127.5, -127.5, 4.2e18],
+        ];
+        for c in cases {
+            // SAFETY: AVX2 availability checked above.
+            let got: [i32; 4] = unsafe {
+                let mut out = [0i32; 4];
+                let r = super::avx2::cvtpd_i32_rust(_mm256_loadu_pd(c.as_ptr()));
+                _mm_storeu_si128(out.as_mut_ptr() as *mut __m128i, r);
+                out
+            };
+            let want = [c[0] as i32, c[1] as i32, c[2] as i32, c[3] as i32];
+            assert_eq!(got, want, "{c:?}");
+        }
+    }
+
+    #[test]
+    fn hostile_wire_bins_decode_identically() {
+        // Arbitrary u32 words (bins up to ±2^30, far beyond anything
+        // the encoder emits) must decode bit-identically on both
+        // kernels. (The pow2 saturating-cast fixup itself is pinned by
+        // the dedicated unit test above — validated REL params keep
+        // these bins below the saturation region.)
+        let mut rng = Rng::new(0xD0D0);
+        for eb in [1e-3f32, 0.9] {
+            let p = RelParams::new(eb);
+            for len in [8usize, 29, 64] {
+                let words: Vec<u32> = (0..len).map(|_| rng.next_u32()).collect();
+                let mask = ((rng.next_u32() as u64) << 32) | rng.next_u32() as u64;
+                let mut ya = vec![0f32; len];
+                let mut yb = vec![0f32; len];
+                dequantize_block(&words, mask, p, FnVariant::Approx, &mut ya);
+                dequantize_block_scalar(&words, mask, p, FnVariant::Approx, &mut yb);
+                let bits_a: Vec<u32> = ya.iter().map(|v| v.to_bits()).collect();
+                let bits_b: Vec<u32> = yb.iter().map(|v| v.to_bits()).collect();
+                assert_eq!(bits_a, bits_b, "eb {eb} len {len}");
+            }
+        }
+    }
+
+    #[test]
+    fn all_outlier_block_matches() {
+        let p = RelParams::new(1e-3);
+        let x = vec![-0.0f32; 64]; // -0 is always lossless under REL
+        let mut a = vec![0u32; 64];
+        let mut b = vec![0u32; 64];
+        let ma = quantize_block(&x, p, FnVariant::Approx, true, &mut a);
+        let mb = quantize_block_scalar(&x, p, FnVariant::Approx, true, &mut b);
+        assert_eq!((ma, &a), (mb, &b));
+        assert_eq!(ma, u64::MAX);
+    }
+}

@@ -1,0 +1,193 @@
+//! RLE zero-scan kernels (scalar twin + AVX2).
+//!
+//! The zero-RLE encoder spends its time answering one question: where
+//! does the current run (of zeros, or of literals) end? Both answers
+//! are pure functions of the byte stream — "first index >= start whose
+//! byte is (non)zero" — so any correct implementation is bit-exact by
+//! construction; the AVX2 kernels probe 32 bytes per step with
+//! `cmpeq_epi8` + `movemask` instead of the scalar u64 SWAR probe.
+
+/// First index `>= start` whose byte is non-zero (or `data.len()`).
+/// Dispatched.
+#[inline]
+pub fn zero_run_end(data: &[u8], start: usize) -> usize {
+    #[cfg(target_arch = "x86_64")]
+    {
+        if super::avx2() {
+            // SAFETY: AVX2 presence established by the dispatcher.
+            return unsafe { avx2::zero_run_end(data, start) };
+        }
+    }
+    zero_run_end_scalar(data, start)
+}
+
+/// Scalar twin of [`zero_run_end`]: the seed's u64-at-a-time probe.
+pub fn zero_run_end_scalar(data: &[u8], mut i: usize) -> usize {
+    let n = data.len();
+    while i + 8 <= n {
+        let w = u64::from_le_bytes(data[i..i + 8].try_into().unwrap());
+        if w == 0 {
+            i += 8;
+        } else {
+            return i + (w.trailing_zeros() / 8) as usize;
+        }
+    }
+    while i < n && data[i] == 0 {
+        i += 1;
+    }
+    i
+}
+
+/// First index `>= start` whose byte IS zero (or `data.len()`).
+/// Dispatched.
+#[inline]
+pub fn literal_run_end(data: &[u8], start: usize) -> usize {
+    #[cfg(target_arch = "x86_64")]
+    {
+        if super::avx2() {
+            // SAFETY: AVX2 presence established by the dispatcher.
+            return unsafe { avx2::literal_run_end(data, start) };
+        }
+    }
+    literal_run_end_scalar(data, start)
+}
+
+/// Scalar twin of [`literal_run_end`]: the seed's SWAR zero-byte
+/// detector (the borrow trick's first set high bit is always the first
+/// zero byte, so `trailing_zeros` is exact).
+pub fn literal_run_end_scalar(data: &[u8], mut i: usize) -> usize {
+    let n = data.len();
+    while i + 8 <= n {
+        let w = u64::from_le_bytes(data[i..i + 8].try_into().unwrap());
+        let has_zero = w.wrapping_sub(0x0101_0101_0101_0101) & !w & 0x8080_8080_8080_8080;
+        if has_zero == 0 {
+            i += 8;
+        } else {
+            return i + (has_zero.trailing_zeros() / 8) as usize;
+        }
+    }
+    while i < n && data[i] != 0 {
+        i += 1;
+    }
+    i
+}
+
+#[cfg(target_arch = "x86_64")]
+mod avx2 {
+    use core::arch::x86_64::*;
+
+    /// 32-byte-per-step zero scan (tail via the scalar twin).
+    ///
+    /// # Safety
+    /// Caller must have verified AVX2 support at runtime.
+    #[target_feature(enable = "avx2")]
+    pub(super) unsafe fn zero_run_end(data: &[u8], mut i: usize) -> usize {
+        let n = data.len();
+        let zero = _mm256_setzero_si256();
+        while i + 32 <= n {
+            let v = _mm256_loadu_si256(data.as_ptr().add(i) as *const __m256i);
+            // Bit k set <=> byte k == 0.
+            let m = _mm256_movemask_epi8(_mm256_cmpeq_epi8(v, zero)) as u32;
+            if m == u32::MAX {
+                i += 32;
+            } else {
+                return i + (!m).trailing_zeros() as usize;
+            }
+        }
+        super::zero_run_end_scalar(data, i)
+    }
+
+    /// 32-byte-per-step literal scan (tail via the scalar twin).
+    ///
+    /// # Safety
+    /// Caller must have verified AVX2 support at runtime.
+    #[target_feature(enable = "avx2")]
+    pub(super) unsafe fn literal_run_end(data: &[u8], mut i: usize) -> usize {
+        let n = data.len();
+        let zero = _mm256_setzero_si256();
+        while i + 32 <= n {
+            let v = _mm256_loadu_si256(data.as_ptr().add(i) as *const __m256i);
+            let m = _mm256_movemask_epi8(_mm256_cmpeq_epi8(v, zero)) as u32;
+            if m == 0 {
+                i += 32;
+            } else {
+                return i + m.trailing_zeros() as usize;
+            }
+        }
+        super::literal_run_end_scalar(data, i)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::data::Rng;
+
+    fn patterns() -> Vec<Vec<u8>> {
+        let mut rng = Rng::new(0x51CA);
+        let mut out = vec![
+            vec![],
+            vec![0],
+            vec![1],
+            vec![0u8; 100],
+            vec![7u8; 100],
+        ];
+        // Zero runs ending at every offset around the 8/32-byte
+        // boundaries the vector steps use.
+        for run in [1usize, 7, 8, 9, 31, 32, 33, 40, 64, 65] {
+            let mut v = vec![0u8; run];
+            v.push(9);
+            v.extend(vec![0u8; 70 - run.min(70)]);
+            out.push(v);
+            let mut v = vec![5u8; run];
+            v.push(0);
+            v.extend(vec![3u8; 70 - run.min(70)]);
+            out.push(v);
+        }
+        // Sparse random zeros.
+        for density in [2usize, 5, 17] {
+            out.push(
+                (0..500)
+                    .map(|_| {
+                        if rng.below(density) == 0 {
+                            0
+                        } else {
+                            (rng.next_u32() as u8) | 1
+                        }
+                    })
+                    .collect(),
+            );
+        }
+        out
+    }
+
+    #[test]
+    fn dispatched_scans_match_scalar_at_every_position() {
+        for data in patterns() {
+            for start in 0..=data.len() {
+                assert_eq!(
+                    zero_run_end(&data, start),
+                    zero_run_end_scalar(&data, start),
+                    "zero scan at {start} of {} bytes",
+                    data.len()
+                );
+                assert_eq!(
+                    literal_run_end(&data, start),
+                    literal_run_end_scalar(&data, start),
+                    "literal scan at {start} of {} bytes",
+                    data.len()
+                );
+            }
+        }
+    }
+
+    #[test]
+    fn scan_semantics() {
+        let d = [0u8, 0, 0, 4, 5, 0, 6];
+        assert_eq!(zero_run_end_scalar(&d, 0), 3);
+        assert_eq!(zero_run_end_scalar(&d, 3), 3);
+        assert_eq!(literal_run_end_scalar(&d, 3), 5);
+        assert_eq!(literal_run_end_scalar(&d, 6), 7);
+        assert_eq!(zero_run_end_scalar(&[], 0), 0);
+    }
+}

@@ -435,6 +435,194 @@ fn prop_adaptive_plans_match_the_workload() {
     );
 }
 
+/// PROPERTY (SIMD dispatch seam): every dispatched `lc::simd` kernel
+/// is bit-identical to its scalar twin on adversarial inputs — NaN,
+/// ±0, negative denormals, ±MAXBIN boundary values, all-outlier
+/// blocks, and tail blocks of EVERY length mod 8. On AVX2 machines
+/// this differential-tests the vector kernels; scalar-forced runs
+/// (`LC_FORCE_SCALAR=1`, the second CI pass) pin the fallback. The
+/// container-level statement — byte-identical output across dispatch
+/// levels — follows from `prop_scratch_engine_matches_reference_containers`,
+/// whose `lc::reference` side is pure scalar.
+#[test]
+fn prop_simd_kernels_bit_identical_to_scalar() {
+    use lc::quantizer::abs::AbsParams;
+    use lc::quantizer::rel::RelParams;
+    use lc::simd;
+    use lc::types::{MAXBIN_ABS, REL_MIN_MAG};
+
+    let mut rng = Rng::new(0x51D3);
+    let lengths: Vec<usize> = (0..=17).chain([31, 32, 33, 40, 63, 64]).collect();
+
+    // ABS quantize/dequantize pairs.
+    for eb in [1e-1f32, 1e-3, 1e-6] {
+        let p = AbsParams::new(eb);
+        let eb2 = p.eb2 as f64;
+        let pool = |rng: &mut Rng, i: usize| -> f32 {
+            match i % 16 {
+                0 => f32::NAN,
+                1 => -0.0,
+                2 => 0.0,
+                3 => f32::from_bits(0x8000_0001), // negative denormal
+                4 => f32::INFINITY,
+                5 => ((MAXBIN_ABS as f64 - 1.0) * eb2) as f32, // +boundary bin
+                6 => (-(MAXBIN_ABS as f64 - 1.0) * eb2) as f32, // -boundary bin
+                7 => ((MAXBIN_ABS as f64 + 0.5) * eb2) as f32, // just out of range
+                8 => 1e30,
+                _ => {
+                    let v = f32::from_bits(rng.next_u32());
+                    if v.is_nan() {
+                        0.5
+                    } else {
+                        v
+                    }
+                }
+            }
+        };
+        for protected in [true, false] {
+            for &len in &lengths {
+                let x: Vec<f32> = (0..len).map(|i| pool(&mut rng, i)).collect();
+                let mut wa = vec![0u32; len];
+                let mut ws = vec![0u32; len];
+                let ma = simd::abs::quantize_block(&x, p, protected, &mut wa);
+                let ms = simd::abs::quantize_block_scalar(&x, p, protected, &mut ws);
+                assert_eq!((ma, &wa), (ms, &ws), "abs eb {eb} prot {protected} len {len}");
+                let mut ya = vec![0f32; len];
+                let mut ys = vec![0f32; len];
+                simd::abs::dequantize_block(&wa, ma, p, &mut ya);
+                simd::abs::dequantize_block_scalar(&ws, ms, p, &mut ys);
+                let ba: Vec<u32> = ya.iter().map(|v| v.to_bits()).collect();
+                let bs: Vec<u32> = ys.iter().map(|v| v.to_bits()).collect();
+                assert_eq!(ba, bs, "abs dequant eb {eb} len {len}");
+            }
+            // All-outlier block.
+            let x = vec![f32::NAN; 64];
+            let mut wa = vec![0u32; 64];
+            let mut ws = vec![0u32; 64];
+            let ma = simd::abs::quantize_block(&x, p, protected, &mut wa);
+            let ms = simd::abs::quantize_block_scalar(&x, p, protected, &mut ws);
+            assert_eq!((ma, &wa), (ms, &ws), "abs all-outlier eb {eb}");
+            assert_eq!(ma, u64::MAX);
+        }
+    }
+
+    // REL quantize/dequantize pairs (both variants; Native dispatches
+    // to the scalar twin by contract, Approx is the vector kernel).
+    // eb = 6.2e-7 parks bins at the ±(MAXBIN_REL - 1) boundary.
+    for eb in [1e-1f32, 1e-3, 6.2e-7] {
+        let p = RelParams::new(eb);
+        let pool = |rng: &mut Rng, i: usize| -> f32 {
+            match i % 16 {
+                0 => f32::NAN,
+                1 => -0.0,
+                2 => f32::from_bits(0x807F_FFFF), // largest negative denormal
+                3 => REL_MIN_MAG,
+                4 => -REL_MIN_MAG / 2.0,
+                5 => f32::NEG_INFINITY,
+                6 => 1.5f32 * 2.0f32.powi(120), // ±MAXBIN_REL straddle at 6.2e-7
+                7 => -1.5f32 * 2.0f32.powi(-121),
+                _ => {
+                    let v = f32::from_bits(rng.next_u32());
+                    if v.is_nan() {
+                        -1.5
+                    } else {
+                        v
+                    }
+                }
+            }
+        };
+        for variant in [FnVariant::Approx, FnVariant::Native] {
+            for protected in [true, false] {
+                for &len in &lengths {
+                    let x: Vec<f32> = (0..len).map(|i| pool(&mut rng, i)).collect();
+                    let mut wa = vec![0u32; len];
+                    let mut ws = vec![0u32; len];
+                    let ma = simd::rel::quantize_block(&x, p, variant, protected, &mut wa);
+                    let ms = simd::rel::quantize_block_scalar(&x, p, variant, protected, &mut ws);
+                    assert_eq!(
+                        (ma, &wa),
+                        (ms, &ws),
+                        "rel eb {eb} {variant:?} prot {protected} len {len}"
+                    );
+                    let mut ya = vec![0f32; len];
+                    let mut ys = vec![0f32; len];
+                    simd::rel::dequantize_block(&wa, ma, p, variant, &mut ya);
+                    simd::rel::dequantize_block_scalar(&ws, ms, p, variant, &mut ys);
+                    let ba: Vec<u32> = ya.iter().map(|v| v.to_bits()).collect();
+                    let bs: Vec<u32> = ys.iter().map(|v| v.to_bits()).collect();
+                    assert_eq!(ba, bs, "rel dequant eb {eb} {variant:?} len {len}");
+                }
+            }
+            // Hostile wire words (arbitrary bins up to ±2^30, far
+            // beyond anything the encoder emits) through the
+            // dequantize pair. (The pow2 saturating-cast fixup itself
+            // is pinned by a dedicated unit test in lc::simd::rel —
+            // validated REL bounds keep even these bins below the
+            // saturation region.)
+            for &len in &[8usize, 64] {
+                let words: Vec<u32> = (0..len).map(|_| rng.next_u32()).collect();
+                let mask = ((rng.next_u32() as u64) << 32) | rng.next_u32() as u64;
+                let mut ya = vec![0f32; len];
+                let mut ys = vec![0f32; len];
+                simd::rel::dequantize_block(&words, mask, p, variant, &mut ya);
+                simd::rel::dequantize_block_scalar(&words, mask, p, variant, &mut ys);
+                let ba: Vec<u32> = ya.iter().map(|v| v.to_bits()).collect();
+                let bs: Vec<u32> = ys.iter().map(|v| v.to_bits()).collect();
+                assert_eq!(ba, bs, "rel hostile eb {eb} {variant:?} len {len}");
+            }
+        }
+    }
+
+    // Delta pairs: every tail residue plus bulk, with wrap extremes.
+    for &len in lengths.iter().chain(&[1000usize, 4097]) {
+        let orig: Vec<u32> = (0..len)
+            .map(|k| match k % 5 {
+                0 => 0,
+                1 => u32::MAX,
+                2 => 1 << 31,
+                _ => rng.next_u32(),
+            })
+            .collect();
+        let mut a = orig.clone();
+        let mut s = orig.clone();
+        simd::delta::encode(&mut a);
+        simd::delta::encode_scalar(&mut s);
+        assert_eq!(a, s, "delta encode len {len}");
+        let mut da = a.clone();
+        let mut ds = a.clone();
+        simd::delta::decode(&mut da);
+        simd::delta::decode_scalar(&mut ds);
+        assert_eq!(da, ds, "delta decode len {len}");
+        assert_eq!(da, orig, "delta roundtrip len {len}");
+    }
+
+    // RLE scan pairs at every start offset of boundary-aligned runs,
+    // and token-stream equality against the naive per-byte encoder.
+    for run in [1usize, 8, 31, 32, 33, 64] {
+        let mut data = vec![0u8; run];
+        data.push(7);
+        data.extend(vec![9u8; run]);
+        data.extend(vec![0u8; run + 1]);
+        for start in 0..=data.len() {
+            assert_eq!(
+                simd::rle::zero_run_end(&data, start),
+                simd::rle::zero_run_end_scalar(&data, start),
+                "zero scan run {run} start {start}"
+            );
+            assert_eq!(
+                simd::rle::literal_run_end(&data, start),
+                simd::rle::literal_run_end_scalar(&data, start),
+                "literal scan run {run} start {start}"
+            );
+        }
+        assert_eq!(
+            lc::codec::rle::encode(&data),
+            lc::reference::rle_encode(&data),
+            "rle tokens run {run}"
+        );
+    }
+}
+
 /// PROPERTY: NOA with range R equals ABS with eps*R (definition 2.1.3).
 #[test]
 fn prop_noa_equals_scaled_abs() {

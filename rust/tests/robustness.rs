@@ -209,6 +209,50 @@ fn pipeline_decode_survives_garbage_and_scratch_stays_usable() {
     assert_eq!(s.words_a, words);
 }
 
+/// Hostile RLE payloads: non-canonical varints, zero-length runs, and
+/// absurd run/declared lengths must all produce typed errors — never a
+/// panic, a silently wrapped value, or a giant allocation.
+#[test]
+fn rle_hostile_varints_and_lengths_rejected() {
+    use lc::codec::rle::{decode, decode_into, RleError};
+    // run_len == 0 token.
+    assert_eq!(decode(&[0, 0], 5).unwrap_err(), RleError::ZeroLengthRun);
+    // Truncated varint.
+    assert_eq!(decode(&[0, 0x80], 5).unwrap_err(), RleError::TruncatedVarint);
+    // 10th byte with payload bits above bit 63: the old reader
+    // silently truncated the value; now a typed reject.
+    let mut evil = vec![0u8];
+    evil.extend([0x80u8; 9]);
+    evil.push(0x02);
+    assert_eq!(
+        decode(&evil, 5).unwrap_err(),
+        RleError::NonCanonicalVarint { byte: 0x02 }
+    );
+    // run = u64::MAX against a small declared size: typed overflow
+    // (checked in u64 — cannot wrap on any target), no allocation.
+    let mut evil = vec![0u8];
+    evil.extend([0xFFu8; 9]);
+    evil.push(0x01);
+    assert_eq!(
+        decode(&evil, 64).unwrap_err(),
+        RleError::RunOverflowsExpected {
+            run: u64::MAX,
+            room: 64
+        }
+    );
+    // A hostile DECLARED length must not pre-reserve unbounded memory:
+    // the up-front reservation is capped, so this returns a length
+    // mismatch instead of aborting on an allocation.
+    let mut out = Vec::new();
+    let err = decode_into(&[9, 9, 9], usize::MAX >> 1, &mut out).unwrap_err();
+    assert!(matches!(err, RleError::LengthMismatch { got: 3, .. }));
+    assert!(out.capacity() < 1 << 24, "capacity {}", out.capacity());
+    // The typed error converts to the pipeline's String with the
+    // message the decode paths surface.
+    let msg: String = RleError::ZeroLengthRun.into();
+    assert_eq!(msg, "zero-length run");
+}
+
 /// Huffman payloads with hostile headers (over-subscribed tables, bad
 /// lengths) through the cached decoder: `Err`, never panic, cache
 /// stays usable.
