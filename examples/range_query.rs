@@ -1,0 +1,78 @@
+//! Random access over a compressed container: `lc::archive`.
+//!
+//! Compresses a multi-chunk signal into a v3 (indexed) container, then
+//! answers two kinds of query without a full-file decompress:
+//!
+//! * a range decode (`Reader::decode_range`) that reads and decodes
+//!   only the chunks overlapping the requested element span, and
+//! * a threshold query (`Reader::chunks_where`) that prunes chunks on
+//!   the index footer's min/max summaries, decoding only the chunks
+//!   that can contain a qualifying value.
+//!
+//! Run: cargo run --release --example range_query
+
+use lc::archive::Reader;
+use lc::container::ContainerVersion;
+use lc::coordinator::{compress, EngineConfig};
+use lc::types::ErrorBound;
+
+fn main() -> anyhow::Result<()> {
+    // A smooth field with one hot region the threshold query will find.
+    let n = 4_000_000usize;
+    let data: Vec<f32> = (0..n)
+        .map(|i| {
+            let base = (i as f32 * 2e-5).sin() * 10.0;
+            if (1_500_000..1_540_000).contains(&i) {
+                base + 80.0
+            } else {
+                base
+            }
+        })
+        .collect();
+
+    let eb = 1e-3f32;
+    let mut cfg = EngineConfig::native(ErrorBound::Abs(eb));
+    cfg.container_version = ContainerVersion::V3; // the default, spelled out
+    let (container, stats) = compress(&cfg, &data)?;
+    let bytes = container.to_bytes();
+    println!(
+        "compressed {} values into {} chunks ({} bytes, ratio {:.2}x)",
+        stats.n_values,
+        container.chunks.len(),
+        bytes.len(),
+        stats.ratio()
+    );
+
+    // Open by footer: O(index) work, no chunk data touched. (Swap
+    // `from_bytes` for `Reader::open_file` to serve from disk.)
+    let reader = Reader::from_bytes(bytes).map_err(anyhow::Error::msg)?;
+
+    // Range decode: only the overlapping chunks are read and decoded.
+    let (a, b) = (1_234_567u64, 1_238_000u64);
+    let slice = reader.decode_range(a..b).map_err(anyhow::Error::msg)?;
+    assert_eq!(slice.len(), (b - a) as usize);
+    for (k, v) in slice.iter().enumerate() {
+        let orig = data[a as usize + k];
+        assert!((v - orig).abs() <= eb, "bound must hold on the slice");
+    }
+    println!("range {a}..{b}: {} values decoded, bound verified", slice.len());
+
+    // Threshold query: prune on the footer stats, decode survivors.
+    let t = 50.0f32;
+    let hot = reader.chunks_where(|s| s.max >= t);
+    println!(
+        "chunks with max >= {t}: {} of {} (pruned {} without decoding)",
+        hot.len(),
+        reader.n_chunks(),
+        reader.n_chunks() - hot.len()
+    );
+    let mut matches = 0usize;
+    for h in &hot {
+        let y = reader.decode_chunk(h.index).map_err(anyhow::Error::msg)?;
+        matches += y.iter().filter(|&&v| v >= t).count();
+    }
+    let expected = data.iter().filter(|&&v| v >= t - eb).count();
+    println!("{matches} matching values found (input had ~{expected})");
+    assert!(matches > 0, "the hot region must be found");
+    Ok(())
+}

@@ -466,6 +466,50 @@ fn main() {
         }
     }
 
+    // ---- hotpath.random_access: serve 1 chunk out of 256 through the
+    // v3 index (archive::Reader::decode_range) vs the full-container
+    // decompress a v1/v2 reader is forced into. The acceptance metric
+    // for the seekable-container subsystem; the speedup should sit
+    // near the chunk count for CPU-bound decodes.
+    {
+        let n_chunks = 256usize;
+        let chunk = 4096usize;
+        let xa = Suite::Cesm.generate(1, n_chunks * chunk);
+        let mut cfg_v3 = EngineConfig::native(ErrorBound::Abs(1e-3));
+        cfg_v3.container_version = lc::container::ContainerVersion::V3;
+        cfg_v3.chunk_size = chunk;
+        let (container, _) = lc::coordinator::compress(&cfg_v3, &xa).unwrap();
+        let bytes = container.to_bytes();
+        let reader = lc::archive::Reader::from_bytes(bytes).unwrap();
+        // Full decode of the parsed container (parse cost excluded on
+        // both sides; the reader was opened once, as a server would).
+        let m_full = measure(1, reps, || {
+            let (y, _) = lc::coordinator::decompress(&cfg_v3, &container).unwrap();
+            std::hint::black_box(y.len());
+        });
+        // One mid-file chunk through the index.
+        let a = (n_chunks as u64 / 2) * chunk as u64;
+        let m_ra = measure(1, reps, || {
+            let y = reader.decode_range(a..a + chunk as u64).unwrap();
+            std::hint::black_box(y.len());
+        });
+        let full_s = m_full.median.as_secs_f64();
+        let ra_s = m_ra.median.as_secs_f64().max(1e-12);
+        let speedup = full_s / ra_s;
+        let hot = vec![
+            ("random_access_full_eps".to_string(), m_full.eps(n_chunks * chunk)),
+            ("random_access_chunk_eps".to_string(), m_ra.eps(chunk)),
+            ("random_access_speedup".to_string(), speedup),
+        ];
+        println!(
+            "json hotpath random_access: full {full_s:.4}s vs 1/{n_chunks} chunk \
+             {ra_s:.6}s ({speedup:.1}x)"
+        );
+        if let Err(e) = update_bench_json(&json_path, "hotpath", &hot) {
+            eprintln!("failed to write {json_path}: {e}");
+        }
+    }
+
     // ---- hotpath.rle_scan: the zero/literal run-boundary scan core
     // (the rle0 encode hot loop) over the shuffled byte stream, scalar
     // SWAR probes vs the dispatched 32-byte AVX2 probes. Measured as

@@ -1,0 +1,340 @@
+//! The v3 index footer: serialization, parsing, and the hostile-input
+//! validation layer.
+//!
+//! Byte layout (all integers little-endian; see
+//! [`crate::container`] for where the footer sits in the file):
+//!
+//! ```text
+//! footer  := entry * n_chunks, crc32(entries) u32
+//! entry   := offset u64, frame_len u32, n_values u32, plan u8,
+//!            crc32 u32, min f32, max f32          (29 bytes)
+//! trailer := footer_offset u64, n_chunks u32, "LCX3"   (16 bytes)
+//! ```
+//!
+//! The trailer is fixed-size and sits immediately before the file CRC,
+//! so a reader locates the footer with one read from the end of the
+//! file. The trailer itself carries no CRC; instead every trailer field
+//! is cross-checked against independently known facts (the header's
+//! chunk count, the file length, the footer CRC), so a corrupted
+//! trailer cannot direct a reader out of bounds or into a giant
+//! allocation.
+
+use crate::container::{crc::crc32, Header};
+
+use super::stats::ChunkStats;
+
+/// Serialized length of one footer entry.
+pub const ENTRY_LEN: usize = 29;
+/// Serialized length of the fixed trailer.
+pub const TRAILER_LEN: usize = 16;
+/// Trailer magic ("LC indeX, container 3").
+pub const TRAILER_MAGIC: &[u8; 4] = b"LCX3";
+/// Footer bytes beyond the entries: footer CRC + trailer.
+pub const FOOTER_FIXED_OVERHEAD: usize = 4 + TRAILER_LEN;
+
+/// One chunk's row in the index footer.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct IndexEntry {
+    /// Absolute byte offset of the chunk frame (from file start).
+    pub offset: u64,
+    /// Total frame length in bytes (frame header + plan + bodies).
+    pub frame_len: u32,
+    /// Elements this chunk decodes to.
+    pub n_values: u32,
+    /// The chunk's stage-selection plan byte.
+    pub plan: u8,
+    /// The chunk CRC, duplicated from the frame header so integrity
+    /// can be pre-checked without touching the frame.
+    pub crc32: u32,
+    /// Min/max summary of the chunk's reconstructed values.
+    pub stats: ChunkStats,
+}
+
+impl IndexEntry {
+    fn write_to(&self, out: &mut Vec<u8>) {
+        out.extend_from_slice(&self.offset.to_le_bytes());
+        out.extend_from_slice(&self.frame_len.to_le_bytes());
+        out.extend_from_slice(&self.n_values.to_le_bytes());
+        out.push(self.plan);
+        out.extend_from_slice(&self.crc32.to_le_bytes());
+        out.extend_from_slice(&self.stats.min.to_le_bytes());
+        out.extend_from_slice(&self.stats.max.to_le_bytes());
+    }
+
+    fn from_bytes(b: &[u8; ENTRY_LEN]) -> IndexEntry {
+        IndexEntry {
+            offset: u64::from_le_bytes(b[0..8].try_into().unwrap()),
+            frame_len: u32::from_le_bytes(b[8..12].try_into().unwrap()),
+            n_values: u32::from_le_bytes(b[12..16].try_into().unwrap()),
+            plan: b[16],
+            crc32: u32::from_le_bytes(b[17..21].try_into().unwrap()),
+            stats: ChunkStats {
+                min: f32::from_le_bytes(b[21..25].try_into().unwrap()),
+                max: f32::from_le_bytes(b[25..29].try_into().unwrap()),
+            },
+        }
+    }
+}
+
+/// The parsed fixed trailer.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct Trailer {
+    /// Absolute byte offset of the footer's first entry.
+    pub footer_offset: u64,
+    /// Chunk count (must match the header's).
+    pub n_chunks: u32,
+}
+
+impl Trailer {
+    /// Footer length implied by this trailer: entries + footer CRC.
+    /// Computed in u64 so a hostile `n_chunks` cannot overflow.
+    pub fn footer_len(&self) -> u64 {
+        self.n_chunks as u64 * ENTRY_LEN as u64 + 4
+    }
+}
+
+/// Append the index footer (entries, footer CRC, trailer) to a file
+/// body ending right after the last chunk frame. The file CRC is NOT
+/// appended here — the container serializer owns it.
+pub fn write_footer(entries: &[IndexEntry], out: &mut Vec<u8>) {
+    let footer_offset = out.len() as u64;
+    let entries_start = out.len();
+    for e in entries {
+        e.write_to(out);
+    }
+    let footer_crc = crc32(&out[entries_start..]);
+    out.extend_from_slice(&footer_crc.to_le_bytes());
+    out.extend_from_slice(&footer_offset.to_le_bytes());
+    out.extend_from_slice(&(entries.len() as u32).to_le_bytes());
+    out.extend_from_slice(TRAILER_MAGIC);
+}
+
+/// Parse the fixed trailer from its serialized bytes.
+pub fn parse_trailer(b: &[u8]) -> Result<Trailer, String> {
+    if b.len() != TRAILER_LEN {
+        return Err(format!("index trailer wants {TRAILER_LEN} bytes, got {}", b.len()));
+    }
+    if &b[12..16] != TRAILER_MAGIC {
+        return Err("bad index trailer magic (not a v3 index)".into());
+    }
+    Ok(Trailer {
+        footer_offset: u64::from_le_bytes(b[0..8].try_into().unwrap()),
+        n_chunks: u32::from_le_bytes(b[8..12].try_into().unwrap()),
+    })
+}
+
+/// Parse a footer block (`entries || footer crc32`) after verifying the
+/// CRC. The block length fixes the entry count, so a caller that sized
+/// the block from *validated* facts (file length, header chunk count)
+/// can never be made to allocate beyond it.
+pub fn parse_entries(block: &[u8]) -> Result<Vec<IndexEntry>, String> {
+    if block.len() < 4 || (block.len() - 4) % ENTRY_LEN != 0 {
+        return Err(format!("index footer block has bad length {}", block.len()));
+    }
+    let body = &block[..block.len() - 4];
+    let want = u32::from_le_bytes(block[block.len() - 4..].try_into().unwrap());
+    if crc32(body) != want {
+        return Err("index footer CRC mismatch".into());
+    }
+    let mut entries = Vec::with_capacity(body.len() / ENTRY_LEN);
+    for e in body.chunks_exact(ENTRY_LEN) {
+        entries.push(IndexEntry::from_bytes(e.try_into().unwrap()));
+    }
+    Ok(entries)
+}
+
+/// The parsed and layout-validated chunk index of a v3 container.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct Index {
+    pub entries: Vec<IndexEntry>,
+}
+
+impl Index {
+    /// Validate the entries against everything independently known:
+    /// the header, the serialized header length, and the footer's own
+    /// offset. Rejects non-monotonic / non-contiguous / out-of-bounds
+    /// offsets, impossible frame lengths, element counts that break
+    /// the uniform-chunk layout or don't sum to `n_values`, and plan
+    /// bits outside the header's stage list — the checks that make a
+    /// hostile footer unable to alias frames, read out of bounds, or
+    /// inflate an allocation.
+    pub fn validate_layout(
+        &self,
+        header: &Header,
+        header_len: u64,
+        footer_offset: u64,
+    ) -> Result<(), String> {
+        if self.entries.len() != header.n_chunks as usize {
+            return Err(format!(
+                "index has {} entries, header declares {} chunks",
+                self.entries.len(),
+                header.n_chunks
+            ));
+        }
+        let chunk_size = header.chunk_size;
+        let full_plan = header.full_plan();
+        let frame_head = header.version.chunk_frame_header_len() as u64;
+        let mut cursor = header_len;
+        let mut total: u64 = 0;
+        let last = self.entries.len().saturating_sub(1);
+        for (i, e) in self.entries.iter().enumerate() {
+            if e.offset != cursor {
+                return Err(format!(
+                    "chunk {i} offset {} breaks contiguity (expected {cursor})",
+                    e.offset
+                ));
+            }
+            if (e.frame_len as u64) < frame_head {
+                return Err(format!(
+                    "chunk {i} frame length {} is shorter than its header",
+                    e.frame_len
+                ));
+            }
+            cursor += e.frame_len as u64;
+            if cursor > footer_offset {
+                return Err(format!("chunk {i} frame runs past the index footer"));
+            }
+            let n = e.n_values;
+            if n == 0 || n > chunk_size || (i != last && n != chunk_size) {
+                return Err(format!(
+                    "chunk {i} claims {n} values against chunk size {chunk_size}"
+                ));
+            }
+            if e.plan & !full_plan != 0 {
+                return Err(format!(
+                    "chunk {i} plan {:#04x} has bits outside the {} header stages",
+                    e.plan,
+                    header.stages.len()
+                ));
+            }
+            total += n as u64;
+        }
+        if cursor != footer_offset {
+            return Err(format!(
+                "chunk frames end at {cursor}, index footer starts at {footer_offset}"
+            ));
+        }
+        if total != header.n_values {
+            return Err(format!("chunk values {total} != header {}", header.n_values));
+        }
+        Ok(())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::container::ContainerVersion;
+    use crate::types::{ErrorBound, FnVariant, Protection};
+
+    fn entry(offset: u64, frame_len: u32, n: u32) -> IndexEntry {
+        IndexEntry {
+            offset,
+            frame_len,
+            n_values: n,
+            plan: 0b1111,
+            crc32: 0xDEAD_BEEF,
+            stats: ChunkStats {
+                min: -1.0,
+                max: 2.5,
+            },
+        }
+    }
+
+    fn header(n_chunks: u32, n_values: u64) -> Header {
+        Header {
+            version: ContainerVersion::V3,
+            bound: ErrorBound::Abs(1e-3),
+            effective_epsilon: 1e-3,
+            variant: FnVariant::Approx,
+            protection: Protection::Protected,
+            n_values,
+            chunk_size: 100,
+            stages: vec![
+                crate::codec::Stage::Delta,
+                crate::codec::Stage::BitShuffle,
+                crate::codec::Stage::Rle0,
+                crate::codec::Stage::Huffman,
+            ],
+            n_chunks,
+        }
+    }
+
+    #[test]
+    fn footer_roundtrips_bit_for_bit() {
+        let entries = vec![entry(40, 60, 100), entry(100, 37, 50)];
+        let mut out = vec![0u8; 40]; // stand-in for header + frames
+        write_footer(&entries, &mut out);
+        assert_eq!(out.len(), 40 + 2 * ENTRY_LEN + FOOTER_FIXED_OVERHEAD);
+        let block = &out[40..out.len() - TRAILER_LEN];
+        let back = parse_entries(block).unwrap();
+        assert_eq!(back, entries);
+        let t = parse_trailer(&out[out.len() - TRAILER_LEN..]).unwrap();
+        assert_eq!(t.footer_offset, 40);
+        assert_eq!(t.n_chunks, 2);
+        assert_eq!(t.footer_len(), 2 * ENTRY_LEN as u64 + 4);
+    }
+
+    #[test]
+    fn footer_crc_and_trailer_magic_rejected() {
+        let entries = vec![entry(40, 60, 100)];
+        let mut out = vec![0u8; 40];
+        write_footer(&entries, &mut out);
+        let footer_end = out.len() - TRAILER_LEN;
+        let mut bad = out.clone();
+        bad[41] ^= 1; // flip an entry byte
+        assert!(parse_entries(&bad[40..footer_end]).is_err());
+        let mut bad = out.clone();
+        *bad.last_mut().unwrap() ^= 0xFF; // break the magic
+        assert!(parse_trailer(&bad[footer_end..]).is_err());
+        assert!(parse_trailer(&out[..TRAILER_LEN - 1]).is_err());
+        assert!(parse_entries(&out[40..footer_end - 1]).is_err());
+    }
+
+    #[test]
+    fn layout_validation_catches_hostile_entries() {
+        let h = header(2, 150);
+        let good = Index {
+            entries: vec![entry(40, 60, 100), entry(100, 37, 50)],
+        };
+        good.validate_layout(&h, 40, 137).unwrap();
+
+        // Wrong entry count vs the header.
+        let short = Index { entries: vec![entry(40, 97, 100)] };
+        assert!(short.validate_layout(&h, 40, 137).is_err());
+        // Non-contiguous / overlapping offsets.
+        let overlap = Index {
+            entries: vec![entry(40, 60, 100), entry(90, 47, 50)],
+        };
+        assert!(overlap.validate_layout(&h, 40, 137).is_err());
+        // Frame running past the footer.
+        let oob = Index {
+            entries: vec![entry(40, 60, 100), entry(100, 1000, 50)],
+        };
+        assert!(oob.validate_layout(&h, 40, 137).is_err());
+        // Frame shorter than its own header.
+        let tiny = Index {
+            entries: vec![entry(40, 60, 100), entry(100, 3, 50)],
+        };
+        assert!(tiny.validate_layout(&h, 40, 137).is_err());
+        // Element counts that don't sum to n_values.
+        let sum = Index {
+            entries: vec![entry(40, 60, 100), entry(100, 37, 49)],
+        };
+        assert!(sum.validate_layout(&h, 40, 137).is_err());
+        // Mid-stream short chunk (breaks the uniform layout).
+        let h3 = header(2, 140);
+        let ragged = Index {
+            entries: vec![entry(40, 60, 90), entry(100, 37, 50)],
+        };
+        assert!(ragged.validate_layout(&h3, 40, 137).is_err());
+        // Plan bits outside the stage list.
+        let mut planful = good.clone();
+        planful.entries[1].plan = 0b1_0000;
+        assert!(planful.validate_layout(&h, 40, 137).is_err());
+        // Zero-value chunk.
+        let mut zero = good;
+        zero.entries[1].n_values = 0;
+        assert!(zero.validate_layout(&header(2, 100), 40, 137).is_err());
+    }
+}

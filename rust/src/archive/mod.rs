@@ -1,0 +1,119 @@
+//! `lc::archive` — seekable indexed containers: random-access range
+//! decode and predicate-pruned chunk queries over `.lcz` files.
+//!
+//! Every chunk of an `.lcz` container has always been independently
+//! coded and CRC'd; what was missing was *addressability* — serving a
+//! slice of a large dataset cost a full-file decompress. Container
+//! **v3** (magic `LCZ3`, the default since this subsystem landed)
+//! closes that gap: chunk frames stay byte-identical to v2, and the
+//! writer appends a self-describing index footer (per chunk: byte
+//! offset, frame length, element count, plan byte, chunk CRC, and a
+//! min/max summary of the reconstructed values) plus a fixed-size
+//! trailer that locates the footer from the end of the file. See
+//! [`crate::container`] for the byte-level layout and [`index`] for
+//! the footer encoding.
+//!
+//! # The random-access contract
+//!
+//! * **v3 only.** [`Reader::open_indexed`] succeeds only on v3
+//!   containers; v1/v2 files return the explicit
+//!   [`ArchiveError::NotIndexed`] so callers fall back to a linear
+//!   scan (`coordinator::decompress` / `decompress_stream`) knowingly
+//!   — there is no silent full-file decode hiding behind a seek API.
+//! * **Open cost is O(index), not O(data).** Opening reads the header
+//!   prefix, the trailer, and the footer — never the chunk frames.
+//!   Every footer field is validated against hostile input before use
+//!   (offset monotonicity + contiguity, bounds against the file
+//!   length, element-count totals, plan bits, footer CRC), so a
+//!   corrupt or malicious index errors out instead of panicking,
+//!   aliasing frames, or forcing a giant allocation.
+//! * **[`Reader::decode_range`] touches only overlapping chunks.** A
+//!   range maps to a contiguous run of chunks, which is one contiguous
+//!   byte span — fetched with a single read and decoded in parallel on
+//!   a worker pool with per-worker [`crate::scratch::Scratch`] arenas;
+//!   the first/last chunks are trimmed to the requested bounds. Chunk
+//!   CRCs are verified before decoding, exactly as the linear paths
+//!   do.
+//! * **[`Reader::chunks_where`] prunes without decoding.** The footer
+//!   min/max summaries describe each chunk's *reconstruction*
+//!   (NaN-skipped — see [`stats::ChunkStats`]), so threshold queries
+//!   like `max >= t` skip non-matching chunks entirely, and the
+//!   summaries are conservative: a chunk whose reconstruction contains
+//!   a qualifying value is never pruned. The summaries are computed on
+//!   the native (rust) reconstruction; the parity-safe quantizer
+//!   variants make this bit-identical to the PJRT pipeline's output.
+//!
+//! `lc::reference::rebuild_index` re-derives the entire footer from a
+//! container's frames alone (naive decode, per-element min/max) and
+//! must match the writer's footer exactly — the differential pin that
+//! keeps writer and index honest against each other.
+
+pub mod index;
+pub mod reader;
+pub mod stats;
+
+pub use index::{Index, IndexEntry};
+pub use reader::{ChunkHandle, Reader, Source};
+pub use stats::ChunkStats;
+
+use crate::container::ContainerVersion;
+
+/// Typed error surface of the archive subsystem.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub enum ArchiveError {
+    /// The container predates the index footer (v1/v2): random access
+    /// is unavailable and the caller must fall back to a linear scan.
+    NotIndexed { version: ContainerVersion },
+    /// The file is too short to hold the structure being read.
+    Truncated,
+    /// The fixed trailer is malformed or inconsistent with the file.
+    BadTrailer(String),
+    /// The index footer failed validation (CRC or layout).
+    BadIndex(String),
+    /// A requested element range is reversed or out of bounds.
+    BadRange { start: u64, end: u64, n_values: u64 },
+    /// A chunk frame disagrees with its index entry.
+    ChunkMismatch { index: usize, detail: String },
+    /// A chunk body failed its CRC.
+    ChunkCrc { index: usize },
+    /// Underlying I/O failure.
+    Io(String),
+    /// The container header failed to parse.
+    Container(String),
+    /// A chunk failed to decode.
+    Decode(String),
+}
+
+impl std::fmt::Display for ArchiveError {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        match self {
+            ArchiveError::NotIndexed { version } => write!(
+                f,
+                "container version {version:?} has no index footer; \
+                 random access needs v3 (fall back to a linear scan)"
+            ),
+            ArchiveError::Truncated => write!(f, "truncated container"),
+            ArchiveError::BadTrailer(d) => write!(f, "bad index trailer: {d}"),
+            ArchiveError::BadIndex(d) => write!(f, "bad index footer: {d}"),
+            ArchiveError::BadRange { start, end, n_values } => write!(
+                f,
+                "bad element range {start}..{end} (container holds {n_values} values)"
+            ),
+            ArchiveError::ChunkMismatch { index, detail } => {
+                write!(f, "chunk {index} disagrees with its index entry: {detail}")
+            }
+            ArchiveError::ChunkCrc { index } => write!(f, "chunk {index} CRC mismatch"),
+            ArchiveError::Io(d) => write!(f, "archive I/O error: {d}"),
+            ArchiveError::Container(d) => write!(f, "bad container: {d}"),
+            ArchiveError::Decode(d) => write!(f, "chunk decode failed: {d}"),
+        }
+    }
+}
+
+impl std::error::Error for ArchiveError {}
+
+impl From<ArchiveError> for String {
+    fn from(e: ArchiveError) -> String {
+        e.to_string()
+    }
+}

@@ -1,0 +1,560 @@
+//! Random-access container reader: open-by-footer, range decode over
+//! only the overlapping chunks, predicate-pruned chunk queries.
+
+use std::ops::Range;
+use std::sync::atomic::{AtomicUsize, Ordering};
+use std::sync::Mutex;
+
+use crate::codec::Pipeline;
+use crate::container::{
+    parse_chunk_frame_header, ChunkRecord, ContainerVersion, Header, CHUNK_FRAME_HEADER_LEN,
+    CHUNK_FRAME_HEADER_LEN_V2, HEADER_FIXED_LEN,
+};
+use crate::coordinator::engine::{decode_chunk_record_into, quantizer_from_header};
+use crate::coordinator::EngineConfig;
+use crate::quantizer::QuantizerConfig;
+use crate::scratch::Scratch;
+
+use super::index::{self, Index, IndexEntry};
+use super::stats::ChunkStats;
+use super::ArchiveError;
+
+/// Where the container bytes live. Reads are positional, so a file
+/// source never needs the whole container in memory — opening touches
+/// the header and footer only, and a range decode reads exactly the
+/// overlapping frames' byte span.
+pub enum Source {
+    Bytes(Vec<u8>),
+    /// Seek+read under a mutex (the reader issues one positional read
+    /// per operation, so the lock is uncontended).
+    File { file: Mutex<std::fs::File>, len: u64 },
+}
+
+impl Source {
+    pub fn from_bytes(bytes: Vec<u8>) -> Source {
+        Source::Bytes(bytes)
+    }
+
+    pub fn from_file(file: std::fs::File) -> Result<Source, ArchiveError> {
+        let meta = file.metadata().map_err(|e| ArchiveError::Io(e.to_string()))?;
+        let len = meta.len();
+        Ok(Source::File {
+            file: Mutex::new(file),
+            len,
+        })
+    }
+
+    fn len(&self) -> u64 {
+        match self {
+            Source::Bytes(b) => b.len() as u64,
+            Source::File { len, .. } => *len,
+        }
+    }
+
+    fn read_exact_at(&self, offset: u64, buf: &mut [u8]) -> Result<(), ArchiveError> {
+        match self {
+            Source::Bytes(b) => {
+                let end = offset
+                    .checked_add(buf.len() as u64)
+                    .filter(|&e| e <= b.len() as u64)
+                    .ok_or(ArchiveError::Truncated)?;
+                buf.copy_from_slice(&b[offset as usize..end as usize]);
+                Ok(())
+            }
+            Source::File { file, .. } => {
+                use std::io::{Read, Seek, SeekFrom};
+                let mut f = file.lock().unwrap();
+                f.seek(SeekFrom::Start(offset))
+                    .map_err(|e| ArchiveError::Io(e.to_string()))?;
+                f.read_exact(buf)
+                    .map_err(|e| ArchiveError::Io(e.to_string()))
+            }
+        }
+    }
+
+    /// A byte span of the container: borrowed straight out of an
+    /// in-memory source (no copy), read into an owned buffer for a
+    /// file source.
+    fn span(&self, offset: u64, len: usize) -> Result<std::borrow::Cow<'_, [u8]>, ArchiveError> {
+        match self {
+            Source::Bytes(b) => {
+                let end = offset
+                    .checked_add(len as u64)
+                    .filter(|&e| e <= b.len() as u64)
+                    .ok_or(ArchiveError::Truncated)?;
+                Ok(std::borrow::Cow::Borrowed(&b[offset as usize..end as usize]))
+            }
+            Source::File { .. } => {
+                let mut buf = vec![0u8; len];
+                self.read_exact_at(offset, &mut buf)?;
+                Ok(std::borrow::Cow::Owned(buf))
+            }
+        }
+    }
+}
+
+/// One chunk selected by [`Reader::chunks_where`].
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct ChunkHandle {
+    /// Chunk index within the container.
+    pub index: usize,
+    /// Element offset of the chunk's first value.
+    pub elem_start: u64,
+    /// Elements the chunk decodes to.
+    pub n_values: u32,
+    /// The chunk's footer summary.
+    pub stats: ChunkStats,
+}
+
+impl ChunkHandle {
+    /// The element range this chunk covers.
+    pub fn elem_range(&self) -> Range<u64> {
+        self.elem_start..self.elem_start + self.n_values as u64
+    }
+}
+
+/// A v3 container opened for random access (see the module docs of
+/// [`crate::archive`] for the contract).
+pub struct Reader {
+    source: Source,
+    header: Header,
+    index: Index,
+    cfg: EngineConfig,
+    qc: QuantizerConfig,
+    pipeline: Pipeline,
+    /// Worker threads for range decodes (0 = available parallelism).
+    workers: usize,
+}
+
+impl Reader {
+    /// Open an indexed (v3) container from any [`Source`]. v1/v2
+    /// containers return [`ArchiveError::NotIndexed`] — they remain
+    /// fully decodable through the linear-scan paths, just not
+    /// randomly addressable. Validates the trailer, footer CRC, and
+    /// the whole index layout against hostile input before returning;
+    /// chunk frames themselves are not read here.
+    pub fn open_indexed(source: Source) -> Result<Reader, ArchiveError> {
+        let file_len = source.len();
+        // Header prefix: the fixed part, at most MAX_STAGES stage
+        // tags, and the 4-byte chunk count.
+        let head_want = (HEADER_FIXED_LEN + crate::codec::MAX_STAGES + 4).min(file_len as usize);
+        let mut head = vec![0u8; head_want];
+        source.read_exact_at(0, &mut head)?;
+        let (header, header_len) = Header::parse_prefix(&head).map_err(ArchiveError::Container)?;
+        let header_len = header_len as u64;
+        if header.version != ContainerVersion::V3 {
+            return Err(ArchiveError::NotIndexed {
+                version: header.version,
+            });
+        }
+        // The trailer and the file CRC are the last bytes of the file.
+        let tail_len = (index::TRAILER_LEN + 4) as u64;
+        if file_len < header_len + tail_len {
+            return Err(ArchiveError::Truncated);
+        }
+        let mut tail = [0u8; index::TRAILER_LEN];
+        source.read_exact_at(file_len - tail_len, &mut tail)?;
+        let trailer = index::parse_trailer(&tail).map_err(ArchiveError::BadTrailer)?;
+        if trailer.n_chunks != header.n_chunks {
+            return Err(ArchiveError::BadTrailer(format!(
+                "trailer declares {} chunks, header {}",
+                trailer.n_chunks, header.n_chunks
+            )));
+        }
+        // Bounds BEFORE any allocation: the footer must sit exactly
+        // between the header and the trailer, so a hostile trailer can
+        // neither point out of bounds nor inflate the footer read.
+        let footer_end = file_len - tail_len;
+        if trailer.footer_offset < header_len
+            || trailer.footer_offset.checked_add(trailer.footer_len()) != Some(footer_end)
+        {
+            return Err(ArchiveError::BadTrailer(format!(
+                "footer span {}+{} does not fit the file ({footer_end} bytes before trailer)",
+                trailer.footer_offset,
+                trailer.footer_len()
+            )));
+        }
+        let mut block = vec![0u8; trailer.footer_len() as usize];
+        source.read_exact_at(trailer.footer_offset, &mut block)?;
+        let entries = index::parse_entries(&block).map_err(ArchiveError::BadIndex)?;
+        let index = Index { entries };
+        index
+            .validate_layout(&header, header_len, trailer.footer_offset)
+            .map_err(ArchiveError::BadIndex)?;
+
+        let mut cfg = EngineConfig::native(header.bound);
+        cfg.variant = header.variant;
+        cfg.protection = header.protection;
+        cfg.chunk_size = header.chunk_size as usize;
+        let qc = quantizer_from_header(&header);
+        let pipeline = Pipeline::new(header.stages.clone()).map_err(ArchiveError::Container)?;
+        Ok(Reader {
+            source,
+            header,
+            index,
+            cfg,
+            qc,
+            pipeline,
+            workers: 0,
+        })
+    }
+
+    /// Open an in-memory container (serialized bytes).
+    pub fn from_bytes(bytes: Vec<u8>) -> Result<Reader, ArchiveError> {
+        Reader::open_indexed(Source::from_bytes(bytes))
+    }
+
+    /// Open a container file without reading its chunk data.
+    pub fn open_file<P: AsRef<std::path::Path>>(path: P) -> Result<Reader, ArchiveError> {
+        let f = std::fs::File::open(path).map_err(|e| ArchiveError::Io(e.to_string()))?;
+        Reader::open_indexed(Source::from_file(f)?)
+    }
+
+    pub fn header(&self) -> &Header {
+        &self.header
+    }
+
+    /// The validated index footer entries, one per chunk.
+    pub fn entries(&self) -> &[IndexEntry] {
+        &self.index.entries
+    }
+
+    pub fn n_values(&self) -> u64 {
+        self.header.n_values
+    }
+
+    pub fn n_chunks(&self) -> usize {
+        self.index.entries.len()
+    }
+
+    /// Worker threads for range decodes (0 = available parallelism).
+    pub fn set_workers(&mut self, workers: usize) {
+        self.workers = workers;
+    }
+
+    /// Chunks whose footer summary satisfies `pred`, with their element
+    /// spans — the predicate-pruning entry point: chunks that cannot
+    /// contain a qualifying value are skipped without being read or
+    /// decoded. The summaries are conservative (see
+    /// [`super::stats::ChunkStats`]), so e.g. `pred = |s| s.max >= t`
+    /// never prunes a chunk whose reconstruction contains a value
+    /// `>= t`.
+    pub fn chunks_where<F>(&self, pred: F) -> Vec<ChunkHandle>
+    where
+        F: Fn(&ChunkStats) -> bool,
+    {
+        let cs = self.header.chunk_size as u64;
+        self.index
+            .entries
+            .iter()
+            .enumerate()
+            .filter(|(_, e)| pred(&e.stats))
+            .map(|(i, e)| ChunkHandle {
+                index: i,
+                elem_start: i as u64 * cs,
+                n_values: e.n_values,
+                stats: e.stats,
+            })
+            .collect()
+    }
+
+    /// Decode one chunk in full.
+    pub fn decode_chunk(&self, index: usize) -> Result<Vec<f32>, ArchiveError> {
+        let start = (index as u64).saturating_mul(self.header.chunk_size as u64);
+        let e = self.index.entries.get(index).ok_or(ArchiveError::BadRange {
+            start,
+            end: start,
+            n_values: self.header.n_values,
+        })?;
+        self.decode_range(start..start + e.n_values as u64)
+    }
+
+    /// Decode exactly the elements `range.start..range.end` (0-based,
+    /// end-exclusive), reading and decoding only the chunks that
+    /// overlap the range. Overlapping chunks are one contiguous byte
+    /// span — fetched with a single positional read — and are decoded
+    /// in parallel with per-worker scratch arenas; the first and last
+    /// chunks are trimmed to the requested bounds. Every touched
+    /// chunk's CRC is verified first.
+    pub fn decode_range(&self, range: Range<u64>) -> Result<Vec<f32>, ArchiveError> {
+        let n_values = self.header.n_values;
+        let (start, end) = (range.start, range.end);
+        if start > end || end > n_values {
+            return Err(ArchiveError::BadRange { start, end, n_values });
+        }
+        if start == end {
+            return Ok(Vec::new());
+        }
+        let cs = self.header.chunk_size as u64;
+        let first = (start / cs) as usize;
+        let last = ((end - 1) / cs) as usize;
+        let entries = &self.index.entries[first..=last];
+
+        // One contiguous span covering every overlapping frame
+        // (offsets were validated contiguous at open): borrowed
+        // in-place from a bytes source, one positional read from a
+        // file source.
+        let b0 = entries[0].offset;
+        let e_last = &entries[entries.len() - 1];
+        let b1 = e_last.offset + e_last.frame_len as u64;
+        let buf = self.source.span(b0, (b1 - b0) as usize)?;
+
+        let mut records = Vec::with_capacity(entries.len());
+        for (k, e) in entries.iter().enumerate() {
+            let lo = (e.offset - b0) as usize;
+            let frame = buf
+                .get(lo..lo + e.frame_len as usize)
+                .ok_or_else(|| ArchiveError::BadIndex("frame slice out of bounds".into()))?;
+            records.push(parse_frame_against_entry(first + k, frame, e)?);
+        }
+
+        // Carve the output into one disjoint slot per chunk; first and
+        // last slots cover only the in-range trim of their chunk.
+        let mut out = vec![0f32; (end - start) as usize];
+        let mut slots: Vec<Mutex<&mut [f32]>> = Vec::with_capacity(records.len());
+        {
+            let mut rest: &mut [f32] = &mut out;
+            for (k, e) in entries.iter().enumerate() {
+                let i = (first + k) as u64;
+                let a = (i * cs).max(start);
+                let b = (i * cs + e.n_values as u64).min(end);
+                let (head, tail) = std::mem::take(&mut rest).split_at_mut((b - a) as usize);
+                slots.push(Mutex::new(head));
+                rest = tail;
+            }
+            debug_assert!(rest.is_empty());
+        }
+
+        let workers = if self.workers > 0 {
+            self.workers
+        } else {
+            std::thread::available_parallelism().map(|n| n.get()).unwrap_or(1)
+        };
+        let workers = workers.min(records.len());
+        let cursor = AtomicUsize::new(0);
+        let err: Mutex<Option<ArchiveError>> = Mutex::new(None);
+        std::thread::scope(|s| {
+            for _ in 0..workers {
+                let records = &records;
+                let slots = &slots;
+                let cursor = &cursor;
+                let err = &err;
+                s.spawn(move || {
+                    let wcfg = self.cfg.clone();
+                    let mut scratch = Scratch::new();
+                    // Staging for the trimmed first/last chunks, whose
+                    // slot is shorter than the full chunk.
+                    let mut staging: Vec<f32> = Vec::new();
+                    loop {
+                        let k = cursor.fetch_add(1, Ordering::Relaxed);
+                        if k >= records.len() {
+                            break;
+                        }
+                        let rec = &records[k];
+                        let n_i = rec.n_values as usize;
+                        let i = (first + k) as u64;
+                        let mut slot = slots[k].lock().unwrap();
+                        let result = if slot.len() == n_i {
+                            decode_chunk_record_into(
+                                &wcfg,
+                                &self.qc,
+                                &self.pipeline,
+                                rec,
+                                &mut scratch,
+                                &mut slot,
+                            )
+                        } else {
+                            staging.clear();
+                            staging.resize(n_i, 0.0);
+                            decode_chunk_record_into(
+                                &wcfg,
+                                &self.qc,
+                                &self.pipeline,
+                                rec,
+                                &mut scratch,
+                                &mut staging,
+                            )
+                            .map(|()| {
+                                let from = ((i * cs).max(start) - i * cs) as usize;
+                                slot.copy_from_slice(&staging[from..from + slot.len()]);
+                            })
+                        };
+                        if let Err(e) = result {
+                            *err.lock().unwrap() = Some(ArchiveError::Decode(format!("{e:#}")));
+                            break;
+                        }
+                    }
+                });
+            }
+        });
+        drop(slots);
+        if let Some(e) = err.into_inner().unwrap() {
+            return Err(e);
+        }
+        Ok(out)
+    }
+}
+
+/// Parse one chunk frame out of the fetched byte span and cross-check
+/// every redundant field against its index entry (count, plan, CRC,
+/// body lengths), then verify the body CRC.
+fn parse_frame_against_entry(
+    index: usize,
+    frame: &[u8],
+    e: &IndexEntry,
+) -> Result<ChunkRecord, ArchiveError> {
+    let head_len = CHUNK_FRAME_HEADER_LEN_V2; // v3 frames are v2-shaped
+    if frame.len() < head_len {
+        return Err(ArchiveError::ChunkMismatch {
+            index,
+            detail: format!("frame of {} bytes has no header", frame.len()),
+        });
+    }
+    let fixed: [u8; CHUNK_FRAME_HEADER_LEN] = frame[..CHUNK_FRAME_HEADER_LEN].try_into().unwrap();
+    let (n, ob, pb, want_crc) = parse_chunk_frame_header(&fixed);
+    let plan = frame[head_len - 1];
+    let mismatch = |detail: String| ArchiveError::ChunkMismatch { index, detail };
+    if n != e.n_values {
+        return Err(mismatch(format!("frame says {n} values, index {}", e.n_values)));
+    }
+    if plan != e.plan {
+        return Err(mismatch(format!("frame plan {plan:#04x}, index {:#04x}", e.plan)));
+    }
+    if want_crc != e.crc32 {
+        return Err(mismatch("frame CRC differs from index CRC".into()));
+    }
+    if head_len as u64 + ob as u64 + pb as u64 != e.frame_len as u64 {
+        return Err(mismatch(format!(
+            "body lengths {ob}+{pb} do not fill the {}-byte frame",
+            e.frame_len
+        )));
+    }
+    let outlier_bytes = frame[head_len..head_len + ob as usize].to_vec();
+    let payload = frame[head_len + ob as usize..].to_vec();
+    let rec = ChunkRecord {
+        n_values: n,
+        plan,
+        outlier_bytes,
+        payload,
+        stats: e.stats,
+    };
+    if rec.crc32(ContainerVersion::V3) != want_crc {
+        return Err(ArchiveError::ChunkCrc { index });
+    }
+    Ok(rec)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::coordinator::compress;
+    use crate::data::Suite;
+    use crate::types::ErrorBound;
+
+    fn v3_bytes(n: usize, chunk_size: usize) -> (EngineConfig, Vec<u8>, Vec<f32>) {
+        let x = Suite::Cesm.generate(0, n);
+        let mut cfg = EngineConfig::native(ErrorBound::Abs(1e-3));
+        cfg.chunk_size = chunk_size;
+        cfg.container_version = ContainerVersion::V3;
+        let (container, _) = compress(&cfg, &x).unwrap();
+        let (golden, _) = crate::coordinator::decompress(&cfg, &container).unwrap();
+        (cfg, container.to_bytes(), golden)
+    }
+
+    #[test]
+    fn open_decode_range_matches_full_decode() {
+        let (_, bytes, golden) = v3_bytes(10_000, 1024);
+        let r = Reader::from_bytes(bytes).unwrap();
+        assert_eq!(r.n_values(), 10_000);
+        assert_eq!(r.n_chunks(), 10);
+        let full = r.decode_range(0..10_000).unwrap();
+        assert_eq!(full.len(), golden.len());
+        for (a, b) in full.iter().zip(&golden) {
+            assert_eq!(a.to_bits(), b.to_bits());
+        }
+        // Sub-ranges, including chunk-straddling and single-element.
+        for (s, e) in [(0u64, 1u64), (1023, 1025), (500, 7777), (9999, 10_000), (4096, 4096)] {
+            let y = r.decode_range(s..e).unwrap();
+            assert_eq!(y.len(), (e - s) as usize, "{s}..{e}");
+            for (k, v) in y.iter().enumerate() {
+                assert_eq!(
+                    v.to_bits(),
+                    golden[s as usize + k].to_bits(),
+                    "{s}..{e} at {k}"
+                );
+            }
+        }
+    }
+
+    #[test]
+    fn bad_ranges_are_typed_errors() {
+        let (_, bytes, _) = v3_bytes(5_000, 1024);
+        let r = Reader::from_bytes(bytes).unwrap();
+        assert!(matches!(
+            r.decode_range(10..5).unwrap_err(),
+            ArchiveError::BadRange { .. }
+        ));
+        assert!(matches!(
+            r.decode_range(0..5001).unwrap_err(),
+            ArchiveError::BadRange { .. }
+        ));
+        assert!(r.decode_range(5000..5000).unwrap().is_empty());
+    }
+
+    #[test]
+    fn v1_v2_report_not_indexed() {
+        for version in [ContainerVersion::V1, ContainerVersion::V2] {
+            let x = Suite::Hacc.generate(0, 3000);
+            let mut cfg = EngineConfig::native(ErrorBound::Abs(1e-2));
+            cfg.container_version = version;
+            let (container, _) = compress(&cfg, &x).unwrap();
+            let err = Reader::from_bytes(container.to_bytes()).unwrap_err();
+            assert_eq!(err, ArchiveError::NotIndexed { version });
+        }
+    }
+
+    #[test]
+    fn decode_chunk_and_handles_line_up() {
+        let (_, bytes, golden) = v3_bytes(8_000, 1000);
+        let r = Reader::from_bytes(bytes).unwrap();
+        let all = r.chunks_where(|_| true);
+        assert_eq!(all.len(), 8);
+        for h in &all {
+            assert_eq!(h.elem_range().end - h.elem_range().start, h.n_values as u64);
+            let y = r.decode_chunk(h.index).unwrap();
+            assert_eq!(y.len(), h.n_values as usize);
+            for (k, v) in y.iter().enumerate() {
+                assert_eq!(v.to_bits(), golden[h.elem_start as usize + k].to_bits());
+            }
+        }
+        assert!(r.decode_chunk(8).is_err());
+    }
+
+    #[test]
+    fn file_backed_reader_reads_only_what_it_needs() {
+        let (_, bytes, golden) = v3_bytes(20_000, 2048);
+        let path = std::env::temp_dir().join(format!(
+            "lc_archive_reader_test_{}.lcz",
+            std::process::id()
+        ));
+        std::fs::write(&path, &bytes).unwrap();
+        let r = Reader::open_file(&path).unwrap();
+        let y = r.decode_range(3000..9000).unwrap();
+        for (k, v) in y.iter().enumerate() {
+            assert_eq!(v.to_bits(), golden[3000 + k].to_bits());
+        }
+        drop(r);
+        std::fs::remove_file(&path).unwrap();
+    }
+
+    #[test]
+    fn worker_count_does_not_change_output() {
+        let (_, bytes, _) = v3_bytes(30_000, 1111);
+        let mut r = Reader::from_bytes(bytes).unwrap();
+        let a = r.decode_range(100..29_000).unwrap();
+        r.set_workers(1);
+        let b = r.decode_range(100..29_000).unwrap();
+        let bits = |v: &[f32]| v.iter().map(|x| x.to_bits()).collect::<Vec<_>>();
+        assert_eq!(bits(&a), bits(&b));
+    }
+}

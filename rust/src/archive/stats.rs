@@ -1,0 +1,109 @@
+//! Per-chunk value summaries stored in the v3 index footer.
+//!
+//! A [`ChunkStats`] is the min/max of a chunk's **reconstructed**
+//! values (what [`crate::archive::Reader::decode_range`] returns for
+//! that chunk), not of the original input: the reconstruction is the
+//! only definition an independent reader can rebuild from the container
+//! alone, which is what lets `lc::reference::rebuild_index`
+//! differentially pin the writer's footer bit for bit. Outliers travel
+//! as raw bits, so extreme values (±Inf included) land in the summary
+//! exactly; NaN never satisfies an ordered comparison, so it is skipped
+//! — a chunk of nothing but NaN summarizes as the empty interval
+//! `[+Inf, -Inf]`, which no threshold predicate selects and which
+//! contains no prunable value either. Both properties together make the
+//! summaries *conservative*: a predicate like `max >= t` can never
+//! prune a chunk whose reconstruction contains a value `>= t`.
+
+/// Min/max summary of one chunk's reconstructed values (NaN skipped).
+///
+/// Equality compares **bit patterns**, so `-0.0 != 0.0` here and the
+/// footer roundtrip is exact — required by the differential index
+/// tests and by `Container`'s `PartialEq`.
+#[derive(Debug, Clone, Copy)]
+pub struct ChunkStats {
+    pub min: f32,
+    pub max: f32,
+}
+
+impl ChunkStats {
+    /// The empty summary (`[+Inf, -Inf]`): the fold identity, and the
+    /// placeholder carried by v1/v2 chunk records (which have no
+    /// footer to store one in).
+    pub const EMPTY: ChunkStats = ChunkStats {
+        min: f32::INFINITY,
+        max: f32::NEG_INFINITY,
+    };
+
+    /// Summarize a slice of reconstructed values. NaN fails both
+    /// comparisons, so specials drop out without a branch; ±Inf
+    /// participate normally.
+    pub fn from_values(values: &[f32]) -> ChunkStats {
+        let mut s = ChunkStats::EMPTY;
+        for &v in values {
+            if v < s.min {
+                s.min = v;
+            }
+            if v > s.max {
+                s.max = v;
+            }
+        }
+        s
+    }
+
+    /// True when no non-NaN value contributed (all-NaN or empty input).
+    pub fn is_empty(&self) -> bool {
+        self.min > self.max
+    }
+}
+
+impl PartialEq for ChunkStats {
+    fn eq(&self, other: &ChunkStats) -> bool {
+        self.min.to_bits() == other.min.to_bits() && self.max.to_bits() == other.max.to_bits()
+    }
+}
+
+impl Eq for ChunkStats {}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn summarizes_plain_values() {
+        let s = ChunkStats::from_values(&[3.0, -1.5, 2.25]);
+        let want = ChunkStats {
+            min: -1.5,
+            max: 3.0,
+        };
+        assert_eq!(s, want);
+        assert!(!s.is_empty());
+    }
+
+    #[test]
+    fn nan_is_skipped_infinities_participate() {
+        let s = ChunkStats::from_values(&[f32::NAN, 1.0, f32::INFINITY, -2.0]);
+        assert_eq!(s.min.to_bits(), (-2.0f32).to_bits());
+        assert_eq!(s.max, f32::INFINITY);
+        let s = ChunkStats::from_values(&[f32::NEG_INFINITY, f32::NAN]);
+        assert_eq!(s.min, f32::NEG_INFINITY);
+        assert_eq!(s.max, f32::NEG_INFINITY);
+    }
+
+    #[test]
+    fn all_nan_and_empty_are_the_empty_interval() {
+        assert!(ChunkStats::from_values(&[]).is_empty());
+        assert!(ChunkStats::from_values(&[f32::NAN, f32::NAN]).is_empty());
+        assert_eq!(ChunkStats::from_values(&[]), ChunkStats::EMPTY);
+    }
+
+    #[test]
+    fn equality_is_bitwise() {
+        let a = ChunkStats {
+            min: -0.0,
+            max: 1.0,
+        };
+        let b = ChunkStats { min: 0.0, max: 1.0 };
+        assert_ne!(a, b, "-0.0 and 0.0 must not compare equal bitwise");
+        assert_eq!(a, a);
+    }
+}

@@ -1,4 +1,4 @@
-//! The `.lcz` container format — versions 1 and 2.
+//! The `.lcz` container format — versions 1, 2, and 3.
 //!
 //! # v1 layout (magic `LCZ1`; all integers little-endian)
 //!
@@ -45,16 +45,56 @@
 //! time. The chunk CRC in v2 covers `plan || outlier bytes || payload`,
 //! so a corrupted plan byte fails the chunk CRC, not just the file CRC.
 //!
+//! # v3 layout (magic `LCZ3`): the seekable indexed container
+//!
+//! Header and chunk frames are **byte-identical to v2** (same frame
+//! header, plan byte, CRC coverage); after the last chunk frame the
+//! writer appends a self-describing **index footer** and a fixed-size
+//! **trailer**, still covered by the trailing file CRC:
+//!
+//! ```text
+//! [header (as v2, magic "LCZ3")]
+//! [chunk frames (exactly the v2 frame layout)]
+//! [footer: n_chunks entries][footer crc32 u32 over the entries]
+//! [trailer: footer_offset u64][n_chunks u32]["LCX3"]
+//! [file crc32 u32 over everything before it]
+//! ```
+//!
+//! Each 29-byte footer entry describes one chunk:
+//!
+//! | field     | type | meaning                                      |
+//! |-----------|------|----------------------------------------------|
+//! | offset    | u64  | absolute byte offset of the chunk frame      |
+//! | frame_len | u32  | total frame bytes (header + plan + bodies)   |
+//! | n_values  | u32  | elements the chunk decodes to                |
+//! | plan      | u8   | the frame's plan byte, duplicated            |
+//! | crc32     | u32  | the frame's chunk CRC, duplicated            |
+//! | min       | f32  | min of the reconstructed values (NaN skipped)|
+//! | max       | f32  | max of the reconstructed values (NaN skipped)|
+//!
+//! The footer CRC covers the entries; the trailer carries no CRC of
+//! its own but every field is cross-checked (header chunk count, file
+//! length, footer CRC) at open. A reader locates the footer with one
+//! read from the end of the file — random access never scans the
+//! chunk frames. The `lc::archive` subsystem
+//! ([`crate::archive::Reader`]) is the consumer: `decode_range`
+//! touches only overlapping chunks and `chunks_where` prunes on the
+//! min/max summaries. CRC placement in v3: per-chunk CRCs as v2,
+//! footer CRC after the entries, file CRC last (covering header,
+//! frames, footer, and trailer).
+//!
 //! The outlier bitmap travels with each chunk ("in-line", Section 3.1),
 //! compressed as part of the integrity-checked chunk record. The
 //! effective epsilon records the NOA->ABS resolution so the decoder
-//! needs no second pass over the data. v1 containers remain fully
-//! readable (a v1 frame parses to the full-chain plan); the writer
-//! chooses the version via [`Header::version`]
-//! (`lc compress --container-version {1,2}`, default 2).
+//! needs no second pass over the data. v1/v2 containers remain fully
+//! readable and writable (a v1 frame parses to the full-chain plan);
+//! the writer chooses the version via [`Header::version`]
+//! (`lc compress --container-version {1,2,3}`, default 3).
 
 pub mod crc;
 
+use crate::archive::index::{self, IndexEntry};
+use crate::archive::stats::ChunkStats;
 use crate::bitvec::BitVec;
 use crate::codec::{full_mask_for, Pipeline, Stage};
 use crate::types::{ErrorBound, FnVariant, Protection};
@@ -65,14 +105,18 @@ use crc::{crc32, Crc32};
 pub const MAGIC: &[u8; 4] = b"LCZ1";
 /// v2 magic (per-chunk plan bytes).
 pub const MAGIC_V2: &[u8; 4] = b"LCZ2";
+/// v3 magic (v2 frames + the index footer).
+pub const MAGIC_V3: &[u8; 4] = b"LCZ3";
 
 /// Container format version. v2 adds the per-chunk plan byte that
-/// records the adaptive stage selection.
+/// records the adaptive stage selection; v3 keeps the v2 frames and
+/// appends the seekable index footer (see the module docs).
 #[derive(Debug, Clone, Copy, PartialEq, Eq, Default)]
 pub enum ContainerVersion {
     V1,
-    #[default]
     V2,
+    #[default]
+    V3,
 }
 
 impl ContainerVersion {
@@ -80,7 +124,7 @@ impl ContainerVersion {
     pub fn chunk_frame_header_len(self) -> usize {
         match self {
             ContainerVersion::V1 => CHUNK_FRAME_HEADER_LEN,
-            ContainerVersion::V2 => CHUNK_FRAME_HEADER_LEN_V2,
+            ContainerVersion::V2 | ContainerVersion::V3 => CHUNK_FRAME_HEADER_LEN_V2,
         }
     }
 
@@ -88,6 +132,7 @@ impl ContainerVersion {
         match self {
             ContainerVersion::V1 => MAGIC,
             ContainerVersion::V2 => MAGIC_V2,
+            ContainerVersion::V3 => MAGIC_V3,
         }
     }
 
@@ -96,6 +141,8 @@ impl ContainerVersion {
             Some(ContainerVersion::V1)
         } else if m == MAGIC_V2 {
             Some(ContainerVersion::V2)
+        } else if m == MAGIC_V3 {
+            Some(ContainerVersion::V3)
         } else {
             None
         }
@@ -126,6 +173,11 @@ pub struct ChunkRecord {
     pub plan: u8,
     pub outlier_bytes: Vec<u8>,
     pub payload: Vec<u8>,
+    /// Min/max summary of the reconstructed values — serialized into
+    /// the v3 index footer only (not part of any chunk frame). v1/v2
+    /// writers leave it [`ChunkStats::EMPTY`]; parsing a v3 container
+    /// fills it from the footer. Equality is bitwise.
+    pub stats: ChunkStats,
 }
 
 /// A fully assembled compressed file (in memory).
@@ -205,7 +257,7 @@ pub const HEADER_FIXED_LEN: usize = 29;
 
 fn parse_header(r: &mut Reader) -> Result<Header, String> {
     let version = ContainerVersion::from_magic(r.take(4)?)
-        .ok_or("bad magic (not an LCZ1/LCZ2 file)")?;
+        .ok_or("bad magic (not an LCZ1/LCZ2/LCZ3 file)")?;
     let _flags = r.u8()?;
     let eb_kind = r.u8()?;
     let variant = match r.u8()? {
@@ -252,11 +304,12 @@ fn parse_header(r: &mut Reader) -> Result<Header, String> {
 
 impl ChunkRecord {
     /// CRC over the record's integrity-checked bytes — the word stored
-    /// in the chunk frame. v1 covers `outlier || payload`; v2 also
-    /// covers the plan byte (prepended), so a flipped plan fails fast.
+    /// in the chunk frame. v1 covers `outlier || payload`; v2 and v3
+    /// also cover the plan byte (prepended), so a flipped plan fails
+    /// fast.
     pub fn crc32(&self, version: ContainerVersion) -> u32 {
         let mut crc = Crc32::new();
-        if version == ContainerVersion::V2 {
+        if version != ContainerVersion::V1 {
             crc.update(&[self.plan]);
         }
         crc.update(&self.outlier_bytes);
@@ -264,13 +317,21 @@ impl ChunkRecord {
         crc.finalize()
     }
 
-    /// Append the chunk frame (header + bytes) to `out`.
+    /// Append the chunk frame (header + bytes) to `out`. v3 frames are
+    /// byte-identical to v2 frames.
     pub fn write_to(&self, version: ContainerVersion, out: &mut Vec<u8>) {
+        self.write_frame(version, self.crc32(version), out);
+    }
+
+    /// [`ChunkRecord::write_to`] with the chunk CRC precomputed, so a
+    /// caller that also needs the CRC (the v3 index entry) runs the
+    /// CRC pass once per chunk, not twice.
+    fn write_frame(&self, version: ContainerVersion, crc: u32, out: &mut Vec<u8>) {
         out.extend_from_slice(&self.n_values.to_le_bytes());
         out.extend_from_slice(&(self.outlier_bytes.len() as u32).to_le_bytes());
         out.extend_from_slice(&(self.payload.len() as u32).to_le_bytes());
-        out.extend_from_slice(&self.crc32(version).to_le_bytes());
-        if version == ContainerVersion::V2 {
+        out.extend_from_slice(&crc.to_le_bytes());
+        if version != ContainerVersion::V1 {
             out.push(self.plan);
         }
         out.extend_from_slice(&self.outlier_bytes);
@@ -279,8 +340,8 @@ impl ChunkRecord {
 }
 
 /// Parse one v1 chunk frame header into
-/// `(n_values, outlier_len, payload_len, crc32)`. The v2 frame header
-/// is the same 16 bytes followed by the plan byte.
+/// `(n_values, outlier_len, payload_len, crc32)`. The v2/v3 frame
+/// header is the same 16 bytes followed by the plan byte.
 pub fn parse_chunk_frame_header(b: &[u8; CHUNK_FRAME_HEADER_LEN]) -> (u32, u32, u32, u32) {
     (
         u32::from_le_bytes(b[0..4].try_into().unwrap()),
@@ -292,20 +353,42 @@ pub fn parse_chunk_frame_header(b: &[u8; CHUNK_FRAME_HEADER_LEN]) -> (u32, u32, 
 
 impl Container {
     /// Serialize to bytes (the version recorded in the header picks the
-    /// frame layout).
+    /// frame layout; v3 additionally appends the index footer between
+    /// the last frame and the file CRC).
     pub fn to_bytes(&self) -> Vec<u8> {
+        let version = self.header.version;
         let mut header = self.header.clone();
         header.n_chunks = self.chunks.len() as u32;
         let mut out = header.to_bytes();
+        let mut entries: Vec<IndexEntry> = Vec::new();
         for c in &self.chunks {
-            c.write_to(self.header.version, &mut out);
+            let offset = out.len() as u64;
+            let crc = c.crc32(version);
+            c.write_frame(version, crc, &mut out);
+            if version == ContainerVersion::V3 {
+                entries.push(IndexEntry {
+                    offset,
+                    frame_len: (out.len() as u64 - offset) as u32,
+                    n_values: c.n_values,
+                    plan: c.plan,
+                    crc32: crc,
+                    stats: c.stats,
+                });
+            }
+        }
+        if version == ContainerVersion::V3 {
+            index::write_footer(&entries, &mut out);
         }
         let file_crc = crc32(&out);
         out.extend_from_slice(&file_crc.to_le_bytes());
         out
     }
 
-    /// Parse and fully validate a container (either version).
+    /// Parse and fully validate a container (any version). For v3 the
+    /// index footer is parsed, CRC-checked, and cross-validated
+    /// against the actual chunk frames (offsets, lengths, counts,
+    /// plans, CRCs); the parsed records then carry the footer's
+    /// min/max summaries.
     pub fn from_bytes(data: &[u8]) -> Result<Container, String> {
         let mut r = Reader { data, pos: 0 };
         let header = parse_header(&mut r)?;
@@ -316,14 +399,18 @@ impl Container {
         // (a corrupt header claiming 4G chunks must not OOM).
         let plausible = (data.len() - r.pos) / version.chunk_frame_header_len();
         let mut chunks = Vec::with_capacity((n_chunks as usize).min(plausible));
+        // (offset, frame_len, crc) per frame, for the v3 footer
+        // cross-validation.
+        let mut observed: Vec<(u64, u32, u32)> = Vec::new();
         for i in 0..n_chunks {
+            let frame_start = r.pos as u64;
             let n = r.u32()?;
             let ob = r.u32()? as usize;
             let pb = r.u32()? as usize;
             let want_crc = r.u32()?;
             let plan = match version {
                 ContainerVersion::V1 => full_plan,
-                ContainerVersion::V2 => {
+                ContainerVersion::V2 | ContainerVersion::V3 => {
                     let p = r.u8()?;
                     if p & !full_plan != 0 {
                         return Err(format!(
@@ -341,11 +428,43 @@ impl Container {
                 plan,
                 outlier_bytes,
                 payload,
+                stats: ChunkStats::EMPTY,
             };
             if rec.crc32(version) != want_crc {
                 return Err(format!("chunk {i} CRC mismatch"));
             }
+            if version == ContainerVersion::V3 {
+                observed.push((frame_start, (r.pos as u64 - frame_start) as u32, want_crc));
+            }
             chunks.push(rec);
+        }
+        if version == ContainerVersion::V3 {
+            let footer_offset = r.pos as u64;
+            let block_len = n_chunks as u64 * index::ENTRY_LEN as u64 + 4;
+            // The remaining bytes bound the read; r.take errors before
+            // any allocation if a hostile header overstates n_chunks.
+            let block = r.take(block_len as usize)?;
+            let entries = index::parse_entries(block)?;
+            let trailer = index::parse_trailer(r.take(index::TRAILER_LEN)?)?;
+            if trailer.footer_offset != footer_offset || trailer.n_chunks != n_chunks {
+                return Err(format!(
+                    "index trailer ({} chunks at {}) disagrees with the file \
+                     ({n_chunks} chunks at {footer_offset})",
+                    trailer.n_chunks, trailer.footer_offset
+                ));
+            }
+            for (i, (e, &(off, flen, crc))) in entries.iter().zip(&observed).enumerate() {
+                if e.offset != off || e.frame_len != flen {
+                    return Err(format!("index entry {i} points at the wrong frame"));
+                }
+                if e.crc32 != crc {
+                    return Err(format!("index entry {i} CRC disagrees with chunk {i}"));
+                }
+                if e.n_values != chunks[i].n_values || e.plan != chunks[i].plan {
+                    return Err(format!("index entry {i} disagrees with chunk {i}"));
+                }
+                chunks[i].stats = e.stats;
+            }
         }
         let body_end = r.pos;
         let file_crc = r.u32()?;
@@ -428,8 +547,17 @@ impl<'a> Reader<'a> {
 mod tests {
     use super::*;
 
+    const ALL_VERSIONS: [ContainerVersion; 3] = [
+        ContainerVersion::V1,
+        ContainerVersion::V2,
+        ContainerVersion::V3,
+    ];
+
     fn sample_versioned(version: ContainerVersion) -> Container {
         let full = full_mask_for(4);
+        // v3 serializes the stats into the footer; keep v1/v2 records
+        // at the EMPTY placeholder so parse roundtrips compare equal.
+        let v3 = version == ContainerVersion::V3;
         Container {
             header: Header {
                 version,
@@ -448,13 +576,29 @@ mod tests {
                     plan: full,
                     outlier_bytes: vec![0xAA; 13],
                     payload: vec![1, 2, 3, 4, 5],
+                    stats: if v3 {
+                        ChunkStats {
+                            min: -2.5,
+                            max: 7.0,
+                        }
+                    } else {
+                        ChunkStats::EMPTY
+                    },
                 },
                 ChunkRecord {
                     n_values: 50,
                     // v1 frames can only record the full chain.
-                    plan: if version == ContainerVersion::V2 { 0b1011 } else { full },
+                    plan: if version == ContainerVersion::V1 { full } else { 0b1011 },
                     outlier_bytes: vec![0x00; 7],
                     payload: vec![9; 40],
+                    stats: if v3 {
+                        ChunkStats {
+                            min: 0.0,
+                            max: f32::INFINITY,
+                        }
+                    } else {
+                        ChunkStats::EMPTY
+                    },
                 },
             ],
         }
@@ -465,14 +609,46 @@ mod tests {
     }
 
     #[test]
-    fn roundtrip_both_versions() {
-        for version in [ContainerVersion::V1, ContainerVersion::V2] {
+    fn roundtrip_all_versions() {
+        for version in ALL_VERSIONS {
             let c = sample_versioned(version);
             let bytes = c.to_bytes();
             let back = Container::from_bytes(&bytes).unwrap();
             assert_eq!(back, c, "{version:?}");
             assert_eq!(back.header.version, version);
         }
+    }
+
+    #[test]
+    fn v3_frames_are_byte_identical_to_v2() {
+        let v2 = sample_versioned(ContainerVersion::V2).to_bytes();
+        let v3 = sample_versioned(ContainerVersion::V3).to_bytes();
+        // Same bytes from after the magic through the last chunk frame
+        // (v2 then ends with its file CRC; v3 continues with the
+        // footer).
+        let frames_end = v2.len() - 4;
+        assert_eq!(&v3[4..frames_end], &v2[4..frames_end]);
+        assert_eq!(&v3[..4], MAGIC_V3);
+        // v3 adds exactly the footer: entries + CRC + trailer.
+        let footer = 2 * index::ENTRY_LEN + index::FOOTER_FIXED_OVERHEAD;
+        assert_eq!(v3.len(), v2.len() + footer);
+    }
+
+    #[test]
+    fn v3_roundtrips_footer_stats_bitwise() {
+        let c = sample_versioned(ContainerVersion::V3);
+        let back = Container::from_bytes(&c.to_bytes()).unwrap();
+        let want = ChunkStats {
+            min: -2.5,
+            max: 7.0,
+        };
+        assert_eq!(back.chunks[0].stats, want);
+        assert_eq!(back.chunks[1].stats.max, f32::INFINITY);
+        // -0.0 vs 0.0 must survive bitwise.
+        let mut c = c;
+        c.chunks[1].stats.min = -0.0;
+        let back = Container::from_bytes(&c.to_bytes()).unwrap();
+        assert_eq!(back.chunks[1].stats.min.to_bits(), (-0.0f32).to_bits());
     }
 
     #[test]
@@ -503,13 +679,14 @@ mod tests {
     }
 
     #[test]
-    fn detects_bit_flips_anywhere_both_versions() {
-        for version in [ContainerVersion::V1, ContainerVersion::V2] {
+    fn detects_bit_flips_anywhere_all_versions() {
+        for version in ALL_VERSIONS {
             let bytes = sample_versioned(version).to_bytes();
             // Flip every 13th byte and confirm *some* check fires;
             // payload flips must fire the chunk CRC, header flips the
-            // file CRC or a parse error, v2 plan-byte flips the chunk
-            // CRC.
+            // file CRC or a parse error, v2/v3 plan-byte flips the
+            // chunk CRC, v3 footer flips the footer CRC or the trailer
+            // cross-checks (the file CRC backstops the rest).
             for i in (0..bytes.len()).step_by(13) {
                 let mut bad = bytes.clone();
                 bad[i] ^= 0x10;

@@ -28,6 +28,7 @@ use std::time::Instant;
 
 use anyhow::{anyhow, Result};
 
+use crate::archive::stats::ChunkStats;
 use crate::codec::{plan, Pipeline};
 use crate::container::{ChunkRecord, Container, ContainerVersion, Header};
 use crate::quantizer::QuantizerConfig;
@@ -50,8 +51,10 @@ pub struct EngineConfig {
     /// Values per chunk. Must equal CHUNK_ELEMS when device == Pjrt
     /// (the AOT artifacts have a fixed shape).
     pub chunk_size: usize,
-    /// Container format to write. V2 (default) enables adaptive
-    /// per-chunk stage selection; V1 reproduces the seed's format
+    /// Container format to write. V3 (default) = V2's adaptive
+    /// per-chunk stage selection plus the seekable index footer
+    /// ([`crate::archive`]); V2 enables adaptive stage selection
+    /// without the index; V1 reproduces the seed's format
     /// byte-for-byte (every chunk uses the full stage chain).
     pub container_version: ContainerVersion,
     /// PJRT handle, required when device == Pjrt.
@@ -167,11 +170,14 @@ fn quantize_into_scratch(
 /// in-memory engine and the streaming pipeline; the only allocations
 /// are the record's owned bytes.
 ///
-/// Under container v2 a cheap per-chunk analysis (outlier density from
-/// the quantizer bitmap, sampled byte entropy, sampled zero-run
-/// fraction — see [`crate::codec::plan`]) picks the stage subset for
-/// this chunk's payload and records it as the frame's plan byte; v1
-/// always applies the full header chain.
+/// Under containers v2 and v3 a cheap per-chunk analysis (outlier
+/// density from the quantizer bitmap, sampled byte entropy, sampled
+/// zero-run fraction — see [`crate::codec::plan`]) picks the stage
+/// subset for this chunk's payload and records it as the frame's plan
+/// byte; v1 always applies the full header chain. Under v3 the record
+/// additionally carries the min/max summary of the chunk's **native
+/// reconstruction** (dequantized through the scratch arena), destined
+/// for the index footer that [`crate::archive::Reader`] prunes on.
 pub fn encode_chunk_record(
     cfg: &EngineConfig,
     qc: &QuantizerConfig,
@@ -187,7 +193,23 @@ pub fn encode_chunk_record(
     crate::codec::rle::encode_into(&s.bitmap, &mut outlier_bytes);
     let chunk_plan = match cfg.container_version {
         ContainerVersion::V1 => cfg.pipeline.full_mask(),
-        ContainerVersion::V2 => plan::choose(cfg.pipeline.stages(), &s.qwords, outliers),
+        ContainerVersion::V2 | ContainerVersion::V3 => {
+            plan::choose(cfg.pipeline.stages(), &s.qwords, outliers)
+        }
+    };
+    let stats = match cfg.container_version {
+        ContainerVersion::V3 => {
+            // Summarize what a reader will decode, not the input: the
+            // reconstruction is what an independent index rebuild can
+            // reproduce, and what range queries actually see. Bare
+            // resize (no clear + zero-fill): the dequantize kernel
+            // overwrites every element.
+            s.values.resize(values.len(), 0.0);
+            qc.dequantize_native_slice(&s.qwords, &s.obits, &mut s.values)
+                .map_err(|e| anyhow!(String::from(e)))?;
+            ChunkStats::from_values(&s.values)
+        }
+        _ => ChunkStats::EMPTY,
     };
     let mut payload = Vec::new();
     cfg.pipeline
@@ -198,6 +220,7 @@ pub fn encode_chunk_record(
             plan: chunk_plan,
             outlier_bytes,
             payload,
+            stats,
         },
         outliers,
     ))

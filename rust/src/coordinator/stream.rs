@@ -30,6 +30,8 @@ use std::time::Instant;
 
 use anyhow::{anyhow, bail, Result};
 
+use crate::archive::index as archive_index;
+use crate::archive::stats::ChunkStats;
 use crate::container::{
     crc::Crc32, parse_chunk_frame_header, ChunkRecord, ContainerVersion, Header,
     CHUNK_FRAME_HEADER_LEN_V2, HEADER_FIXED_LEN,
@@ -57,6 +59,12 @@ struct DoneItem {
 
 /// Compress a byte stream of little-endian f32 values into a container
 /// written to `out`. Returns run statistics.
+///
+/// Under container v3 (the default) the emitted container carries the
+/// seekable index footer: each worker's [`ChunkRecord`] already
+/// includes its min/max summary, so the index costs this pipeline only
+/// the per-chunk entry bookkeeping the serializer keeps anyway — no
+/// chunk data is re-read or re-buffered to build it.
 pub fn compress_stream<R: Read, W: Write>(
     cfg: &EngineConfig,
     queue_depth: usize,
@@ -413,10 +421,13 @@ pub fn decompress_stream<R: Read, W: Write + Send>(
 
         // Reader (this thread): frame one chunk at a time under
         // backpressure from the bounded work queue. The frame header is
-        // 16 bytes (v1) or 17 (v2's trailing plan byte).
+        // 16 bytes (v1) or 17 (the trailing plan byte of v2 and v3).
         let fh_len = version.chunk_frame_header_len();
         let mut frame_head = [0u8; CHUNK_FRAME_HEADER_LEN_V2];
         let mut values_seen = 0u64;
+        // v3 only: (offset, frame_len, crc, n_values, plan) per frame,
+        // to cross-validate the index footer after the last chunk.
+        let mut observed_frames: Vec<(u64, u32, u32, u32, u8)> = Vec::new();
         for index in 0..n_chunks {
             // A failed worker never emits its chunk, so the collector
             // stalls at that index forever — stop framing immediately,
@@ -437,11 +448,12 @@ pub fn decompress_stream<R: Read, W: Write + Send>(
                 let _ = collector.join();
                 bail!("truncated container at chunk {index}");
             }
+            let frame_start = compressed_bytes - fh_len as u64;
             let fixed: [u8; 16] = frame_head[..16].try_into().unwrap();
             let (n, ob, pb, want_crc) = parse_chunk_frame_header(&fixed);
             let chunk_plan = match version {
                 ContainerVersion::V1 => full_plan,
-                ContainerVersion::V2 => frame_head[16],
+                ContainerVersion::V2 | ContainerVersion::V3 => frame_head[16],
             };
             if chunk_plan & !full_plan != 0 {
                 drop(work_tx);
@@ -479,6 +491,15 @@ pub fn decompress_stream<R: Read, W: Write + Send>(
                 let _ = collector.join();
                 bail!("truncated container at chunk {index}");
             }
+            if version == ContainerVersion::V3 {
+                observed_frames.push((
+                    frame_start,
+                    (compressed_bytes - frame_start) as u32,
+                    want_crc,
+                    n as u32,
+                    chunk_plan,
+                ));
+            }
             let item = DecodeItem {
                 index,
                 record: ChunkRecord {
@@ -486,6 +507,7 @@ pub fn decompress_stream<R: Read, W: Write + Send>(
                     plan: chunk_plan,
                     outlier_bytes,
                     payload,
+                    stats: ChunkStats::EMPTY,
                 },
                 want_crc,
             };
@@ -504,6 +526,41 @@ pub fn decompress_stream<R: Read, W: Write + Send>(
         }
         if written != header.n_values {
             bail!("lost chunks: wrote {written} of {} values", header.n_values);
+        }
+        // v3: the index footer sits between the last frame and the
+        // file CRC. Its size is O(n_chunks) — the only per-file state
+        // this decoder holds besides the bounded chunk window — and
+        // every entry is cross-checked against the frames just
+        // streamed (stats excepted: validating those would need the
+        // reconstructions, which have already left the window).
+        if version == ContainerVersion::V3 {
+            let footer_offset = compressed_bytes;
+            let mut block = vec![0u8; n_chunks * archive_index::ENTRY_LEN + 4];
+            read_exact_tracked(&mut input, &mut block, &mut crc, &mut compressed_bytes)?;
+            let entries = archive_index::parse_entries(&block).map_err(|e| anyhow!(e))?;
+            let mut tail = [0u8; archive_index::TRAILER_LEN];
+            read_exact_tracked(&mut input, &mut tail, &mut crc, &mut compressed_bytes)?;
+            let trailer = archive_index::parse_trailer(&tail).map_err(|e| anyhow!(e))?;
+            if trailer.footer_offset != footer_offset || trailer.n_chunks as usize != n_chunks {
+                bail!(
+                    "index trailer ({} chunks at {}) disagrees with the stream \
+                     ({n_chunks} chunks at {footer_offset})",
+                    trailer.n_chunks,
+                    trailer.footer_offset
+                );
+            }
+            for (i, (e, &(off, flen, fcrc, fn_values, fplan))) in
+                entries.iter().zip(&observed_frames).enumerate()
+            {
+                if e.offset != off
+                    || e.frame_len != flen
+                    || e.crc32 != fcrc
+                    || e.n_values != fn_values
+                    || e.plan != fplan
+                {
+                    bail!("index entry {i} disagrees with streamed chunk {i}");
+                }
+            }
         }
         // Trailing file CRC (not part of the running CRC), then EOF.
         let mut trail = [0u8; 4];

@@ -17,6 +17,7 @@
 //! parity here; the parity-safe quantizer variants produce bit-for-bit
 //! identical compressed streams on both.
 
+pub mod archive;
 pub mod baselines;
 pub mod bench_util;
 pub mod bitvec;

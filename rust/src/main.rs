@@ -2,6 +2,8 @@
 //!
 //! Subcommands:
 //!   compress / decompress / verify     file operations (.f32 <-> .lcz)
+//!   inspect                            header + chunk index/stats table
+//!   extract                            random-access element-range decode
 //!   gendata                            synthetic suite generation
 //!   table1 table3 table4 table5 table6 table7 table8 table9
 //!                                      regenerate the paper's tables
@@ -41,9 +43,15 @@ USAGE:
   lc compress   <in.f32> <out.lcz> [--eb-type abs|rel|noa] [--eb EPS]
                 [--variant approx|native] [--unprotected]
                 [--device native|pjrt] [--workers N]
-                [--container-version 1|2]  (2 = adaptive per-chunk
-                stage selection, the default; 1 = seed format)
+                [--container-version 1|2|3]  (3 = seekable index footer
+                + adaptive per-chunk stage selection, the default;
+                2 = adaptive without the index; 1 = seed format)
   lc decompress <in.lcz> <out.f32> [--device native|pjrt] [--workers N]
+  lc inspect    <in.lcz>           (header + per-chunk table; v3 adds
+                the index footer's offsets and min/max stats)
+  lc extract    <in.lcz> <out.f32> [--range A..B]  (decode elements
+                A..B, end-exclusive; random access on v3 containers,
+                explicit full-decode fallback on v1/v2)
   lc verify     <orig.f32> <file.lcz>
   lc gendata    <suite> <file-idx> <n-values> <out.f32>
   lc table1 | table3 | table4 | table5 | table6 | table7 | table8 | table9
@@ -119,10 +127,11 @@ fn engine_config(o: &Opts, service: &mut Option<PjrtService>) -> Result<EngineCo
     if o.flag("unprotected").is_some() {
         cfg.protection = Protection::Unprotected;
     }
-    cfg.container_version = match o.usize_flag("container-version", 2)? {
-        1 => lc::container::ContainerVersion::V1,
-        2 => lc::container::ContainerVersion::V2,
-        v => bail!("unknown --container-version {v} (expected 1 or 2)"),
+    cfg.container_version = match o.flag("container-version").unwrap_or("3") {
+        "1" => lc::container::ContainerVersion::V1,
+        "2" => lc::container::ContainerVersion::V2,
+        "3" => lc::container::ContainerVersion::V3,
+        v => bail!("invalid --container-version {v:?} (expected 1, 2, or 3)"),
     };
     cfg.workers = o.usize_flag("workers", 0)?;
     if o.flag("device") == Some("pjrt") {
@@ -176,6 +185,46 @@ fn read_f32_file(path: &str) -> Result<Vec<f32>> {
 fn write_f32_file(path: &str, data: &[f32]) -> Result<()> {
     let bytes: Vec<u8> = data.iter().flat_map(|v| v.to_le_bytes()).collect();
     std::fs::write(path, bytes).with_context(|| format!("writing {path}"))
+}
+
+/// Parse and bounds-check an `--range A..B` element range (end
+/// exclusive; either side may be omitted). Reversed or out-of-bounds
+/// ranges are rejected with a message naming the limit.
+fn parse_elem_range(spec: Option<&str>, n_values: u64) -> Result<std::ops::Range<u64>> {
+    let Some(spec) = spec else {
+        return Ok(0..n_values);
+    };
+    let Some((a, b)) = spec.split_once("..") else {
+        bail!("bad --range {spec:?} (expected START..END, e.g. 1000..5000)");
+    };
+    let start: u64 = if a.is_empty() {
+        0
+    } else {
+        a.parse().with_context(|| format!("bad --range start {a:?}"))?
+    };
+    let end: u64 = if b.is_empty() {
+        n_values
+    } else {
+        b.parse().with_context(|| format!("bad --range end {b:?}"))?
+    };
+    if start > end {
+        bail!("--range {start}..{end} is reversed (start must not exceed end)");
+    }
+    if end > n_values {
+        bail!("--range end {end} is past the container's {n_values} values");
+    }
+    Ok(start..end)
+}
+
+fn print_container_header(h: &lc::container::Header) {
+    println!(
+        "version {:?}  bound {}  effective eps {:e}  variant {:?}  protection {:?}",
+        h.version, h.bound, h.effective_epsilon, h.variant, h.protection
+    );
+    println!(
+        "values {}  chunk size {}  chunks {}  stages {:?}",
+        h.n_values, h.chunk_size, h.n_chunks, h.stages
+    );
 }
 
 fn run(args: Vec<String>) -> Result<()> {
@@ -272,6 +321,100 @@ fn run(args: Vec<String>) -> Result<()> {
                 bail!("{violations} bound violations");
             }
             println!("error bound verified");
+        }
+        "inspect" => {
+            let [inp] = o.positional.as_slice() else {
+                bail!("inspect wants <in.lcz>");
+            };
+            let bytes = std::fs::read(inp).with_context(|| format!("reading {inp}"))?;
+            if bytes.get(..4) == Some(lc::container::MAGIC_V3.as_slice()) {
+                let r = lc::archive::Reader::from_bytes(bytes).map_err(|e| anyhow!(e))?;
+                let h = r.header();
+                let plan_w = h.stages.len().max(1);
+                print_container_header(h);
+                println!(
+                    "{:>6}  {:>12}  {:>10}  {:>8}  {:>8}  {:>10}  {:>13}  {:>13}",
+                    "chunk", "offset", "bytes", "values", "plan", "crc32", "min", "max"
+                );
+                for (i, e) in r.entries().iter().enumerate() {
+                    println!(
+                        "{i:>6}  {:>12}  {:>10}  {:>8}  {:>8}  {:>10x}  {:>13.5e}  {:>13.5e}",
+                        e.offset,
+                        e.frame_len,
+                        e.n_values,
+                        format!("{:0plan_w$b}", e.plan),
+                        e.crc32,
+                        e.stats.min,
+                        e.stats.max
+                    );
+                }
+            } else {
+                let container =
+                    lc::container::Container::from_bytes(&bytes).map_err(|e| anyhow!(e))?;
+                let h = &container.header;
+                let plan_w = h.stages.len().max(1);
+                print_container_header(h);
+                println!("no index footer ({:?}): offsets from a linear scan, no stats", h.version);
+                println!(
+                    "{:>6}  {:>12}  {:>10}  {:>8}  {:>8}  {:>10}",
+                    "chunk", "offset", "bytes", "values", "plan", "crc32"
+                );
+                let mut offset = h.to_bytes().len() as u64;
+                for (i, c) in container.chunks.iter().enumerate() {
+                    let frame_len = h.version.chunk_frame_header_len() as u64
+                        + c.outlier_bytes.len() as u64
+                        + c.payload.len() as u64;
+                    println!(
+                        "{i:>6}  {offset:>12}  {frame_len:>10}  {:>8}  {:>8}  {:>10x}",
+                        c.n_values,
+                        format!("{:0plan_w$b}", c.plan),
+                        c.crc32(h.version)
+                    );
+                    offset += frame_len;
+                }
+            }
+        }
+        "extract" => {
+            let [inp, outp] = o.positional.as_slice() else {
+                bail!("extract wants <in.lcz> <out.f32> [--range A..B]");
+            };
+            let bytes = std::fs::read(inp).with_context(|| format!("reading {inp}"))?;
+            if bytes.get(..4) == Some(lc::container::MAGIC_V3.as_slice()) {
+                let r = lc::archive::Reader::from_bytes(bytes).map_err(|e| anyhow!(e))?;
+                let range = parse_elem_range(o.flag("range"), r.n_values())?;
+                let y = r.decode_range(range.clone()).map_err(|e| anyhow!(e))?;
+                write_f32_file(outp, &y)?;
+                println!(
+                    "extracted {} values [{}..{}) to {outp} (random access)",
+                    y.len(),
+                    range.start,
+                    range.end
+                );
+            } else {
+                // v1/v2: no index footer — the explicit linear-scan
+                // fallback (decode everything, slice the range).
+                let container =
+                    lc::container::Container::from_bytes(&bytes).map_err(|e| anyhow!(e))?;
+                let h = &container.header;
+                let range = parse_elem_range(o.flag("range"), h.n_values)?;
+                eprintln!(
+                    "note: {:?} container has no index footer; falling back to a full \
+                     linear decode",
+                    h.version
+                );
+                let mut cfg = EngineConfig::native(h.bound);
+                cfg.variant = h.variant;
+                cfg.protection = h.protection;
+                let (recon, _) = decompress(&cfg, &container)?;
+                let y = &recon[range.start as usize..range.end as usize];
+                write_f32_file(outp, y)?;
+                println!(
+                    "extracted {} values [{}..{}) to {outp} (linear scan)",
+                    y.len(),
+                    range.start,
+                    range.end
+                );
+            }
         }
         "gendata" => {
             let [suite, idx, n, outp] = o.positional.as_slice() else {

@@ -18,6 +18,8 @@
 use std::cmp::Reverse;
 use std::collections::{BinaryHeap, HashMap};
 
+use crate::archive::index::IndexEntry;
+use crate::archive::stats::ChunkStats;
 use crate::bitvec::BitVec;
 use crate::codec::{Pipeline, Stage};
 use crate::container::{ChunkRecord, Container, ContainerVersion, Header};
@@ -602,11 +604,12 @@ fn masked_pipeline(stages: &[Stage], plan: u8) -> Result<Pipeline, String> {
 
 /// Naive single-threaded mirror of `coordinator::engine::compress`:
 /// chunk, quantize (per-element), encode (per-stage Vecs), assemble.
-/// Containers must be byte-identical to the engine's — for both
-/// container versions. Under v2 the same per-chunk plan chooser runs
-/// (`codec::plan::choose` is shared analysis, not a hot-path kernel);
-/// the chunk is then encoded through the naive per-stage oracles over
-/// the masked subset.
+/// Containers must be byte-identical to the engine's — for every
+/// container version (v3's index footer included). Under v2/v3 the
+/// same per-chunk plan chooser runs (`codec::plan::choose` is shared
+/// analysis, not a hot-path kernel); the chunk is then encoded through
+/// the naive per-stage oracles over the masked subset, and v3 stats
+/// come from the naive dequantize + [`naive_min_max`].
 pub fn compress(cfg: &EngineConfig, data: &[f32]) -> Result<Container, String> {
     if cfg.device != Device::Native {
         return Err("reference::compress supports the native device only".into());
@@ -624,11 +627,23 @@ pub fn compress(cfg: &EngineConfig, data: &[f32]) -> Result<Container, String> {
         };
         let plan = match cfg.container_version {
             ContainerVersion::V1 => cfg.pipeline.full_mask(),
-            ContainerVersion::V2 => crate::codec::plan::choose(
+            ContainerVersion::V2 | ContainerVersion::V3 => crate::codec::plan::choose(
                 cfg.pipeline.stages(),
                 &q.words,
                 q.outlier_count(),
             ),
+        };
+        // v3: the footer summary over the naive reconstruction —
+        // per-element dequantize + a naive fold, this module's style.
+        let stats = match cfg.container_version {
+            ContainerVersion::V3 => {
+                let y = match qc {
+                    QuantizerConfig::Abs(p, _) => dequantize_abs(&q, p),
+                    QuantizerConfig::Rel(p, v, _) => dequantize_rel(&q, p, v),
+                };
+                naive_min_max(&y)
+            }
+            _ => ChunkStats::EMPTY,
         };
         let sub = masked_pipeline(cfg.pipeline.stages(), plan)?;
         chunks.push(ChunkRecord {
@@ -636,6 +651,7 @@ pub fn compress(cfg: &EngineConfig, data: &[f32]) -> Result<Container, String> {
             plan,
             outlier_bytes: rle_encode(&q.outliers.to_bytes()),
             payload: encode_pipeline(&sub, &q.words),
+            stats,
         });
     }
     Ok(Container {
@@ -652,6 +668,70 @@ pub fn compress(cfg: &EngineConfig, data: &[f32]) -> Result<Container, String> {
         },
         chunks,
     })
+}
+
+/// Naive NaN-skipping min/max fold — deliberately restated here (not
+/// shared with `ChunkStats::from_values`) so the reference side of the
+/// index differential is independent. The comparison set must match
+/// bit for bit: `<`/`>` both reject NaN and treat ±0 as equal, so the
+/// first zero encountered wins in both implementations.
+fn naive_min_max(values: &[f32]) -> ChunkStats {
+    let mut min = f32::INFINITY;
+    let mut max = f32::NEG_INFINITY;
+    for &v in values {
+        if v < min {
+            min = v;
+        }
+        if v > max {
+            max = v;
+        }
+    }
+    ChunkStats { min, max }
+}
+
+/// Independently rebuild a v3 container's index footer from its frames
+/// alone: offsets by re-walking the serialized layout, stats by naive
+/// per-chunk decode + per-element dequantize, CRCs recomputed. The
+/// writer's footer must match this bit for bit
+/// (`prop_v3_reference_index_rebuild_matches_writer`) — the
+/// differential pin that keeps the engine's footer honest.
+pub fn rebuild_index(container: &Container) -> Result<Vec<IndexEntry>, String> {
+    let h = &container.header;
+    if h.version != ContainerVersion::V3 {
+        return Err(format!("rebuild_index wants a v3 container, got {:?}", h.version));
+    }
+    let qc = match h.bound {
+        ErrorBound::Abs(_) | ErrorBound::Noa(_) => {
+            QuantizerConfig::Abs(AbsParams::new(h.effective_epsilon), h.protection)
+        }
+        ErrorBound::Rel(e) => QuantizerConfig::Rel(RelParams::new(e), h.variant, h.protection),
+    };
+    let frame_head = h.version.chunk_frame_header_len() as u64;
+    let mut offset = h.to_bytes().len() as u64;
+    let mut entries = Vec::with_capacity(container.chunks.len());
+    for rec in &container.chunks {
+        let n = rec.n_values as usize;
+        let p = masked_pipeline(&h.stages, rec.plan)?;
+        let words = decode_pipeline(&p, &rec.payload, n)?;
+        let bitmap = rle_decode(&rec.outlier_bytes, n.div_ceil(8))?;
+        let outliers = BitVec::from_bytes(&bitmap, n)?;
+        let chunk = QuantizedChunk { words, outliers };
+        let y = match qc {
+            QuantizerConfig::Abs(pp, _) => dequantize_abs(&chunk, pp),
+            QuantizerConfig::Rel(pp, v, _) => dequantize_rel(&chunk, pp, v),
+        };
+        let frame_len = frame_head + rec.outlier_bytes.len() as u64 + rec.payload.len() as u64;
+        entries.push(IndexEntry {
+            offset,
+            frame_len: frame_len as u32,
+            n_values: rec.n_values,
+            plan: rec.plan,
+            crc32: rec.crc32(h.version),
+            stats: naive_min_max(&y),
+        });
+        offset += frame_len;
+    }
+    Ok(entries)
 }
 
 /// Naive single-threaded mirror of `coordinator::engine::decompress`:

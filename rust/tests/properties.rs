@@ -252,7 +252,11 @@ fn prop_scratch_engine_matches_reference_containers() {
                 lc::types::Protection::Unprotected,
             ] {
                 for variant in [FnVariant::Approx, FnVariant::Native] {
-                    for version in [ContainerVersion::V1, ContainerVersion::V2] {
+                    for version in [
+                        ContainerVersion::V1,
+                        ContainerVersion::V2,
+                        ContainerVersion::V3,
+                    ] {
                         let mut cfg = EngineConfig::native(bound);
                         cfg.protection = protection;
                         cfg.variant = variant;
@@ -295,7 +299,11 @@ fn prop_decode_paths_match_reference_bit_for_bit() {
         let x = suite.generate(si, 30_000 + si * 777);
         for bound in bounds {
             for variant in [FnVariant::Approx, FnVariant::Native] {
-                for version in [ContainerVersion::V1, ContainerVersion::V2] {
+                for version in [
+                    ContainerVersion::V1,
+                    ContainerVersion::V2,
+                    ContainerVersion::V3,
+                ] {
                     let mut cfg = EngineConfig::native(bound);
                     cfg.variant = variant;
                     cfg.container_version = version;
@@ -620,6 +628,167 @@ fn prop_simd_kernels_bit_identical_to_scalar() {
             lc::reference::rle_encode(&data),
             "rle tokens run {run}"
         );
+    }
+}
+
+/// PROPERTY (v3 archive, acceptance a+b): a v3 container's chunk
+/// bodies are byte-identical to the v2 encoding of the same input;
+/// `archive::Reader::decode_range(0..n)` equals the full engine
+/// `decompress` bit for bit for ABS/REL/NOA; and every random
+/// sub-range equals the corresponding slice of the full
+/// reconstruction.
+#[test]
+fn prop_v3_random_access_matches_full_decode() {
+    use lc::archive::Reader;
+    let bounds = [
+        ErrorBound::Abs(1e-3),
+        ErrorBound::Rel(1e-3),
+        ErrorBound::Noa(1e-3),
+    ];
+    for (bi, bound) in bounds.into_iter().enumerate() {
+        let mut rng = Rng::new(0xA3C4 + bi as u64);
+        let x = arb_vec(&mut rng, 50_000);
+        let mut v2 = EngineConfig::native(bound);
+        v2.container_version = ContainerVersion::V2;
+        v2.chunk_size = 7777; // multiple chunks + short tail
+        v2.workers = 3;
+        let mut v3 = v2.clone();
+        v3.container_version = ContainerVersion::V3;
+        let (c2, _) = compress(&v2, &x).unwrap();
+        let (c3, _) = compress(&v3, &x).unwrap();
+        let b2 = c2.to_bytes();
+        let b3 = c3.to_bytes();
+        // (a) identical from after the magic through the last chunk
+        // frame; v2 then ends with its file CRC, v3 appends the
+        // footer.
+        let frames_end = b2.len() - 4;
+        assert_eq!(&b3[..4], b"LCZ3", "{bound:?}");
+        assert_eq!(&b3[4..frames_end], &b2[4..frames_end], "{bound:?} chunk bodies");
+
+        let (full, _) = decompress(&v3, &c3).unwrap();
+        let full_bits: Vec<u32> = full.iter().map(|v| v.to_bits()).collect();
+        let r = Reader::from_bytes(b3).unwrap();
+        let n = x.len() as u64;
+        assert_eq!(r.n_values(), n, "{bound:?}");
+        let whole = r.decode_range(0..n).unwrap();
+        let whole_bits: Vec<u32> = whole.iter().map(|v| v.to_bits()).collect();
+        assert_eq!(whole_bits, full_bits, "{bound:?} decode_range(0..n)");
+
+        // (b) random sub-ranges, plus targeted chunk-boundary cases.
+        let mut ranges: Vec<(u64, u64)> = Vec::new();
+        if n > 0 {
+            ranges.extend([(0, 1), (n - 1, n), (0, n.min(7777)), (n / 2, n / 2)]);
+            if n > 7777 {
+                ranges.push((7776, 7778)); // straddle the first boundary
+            }
+            for _ in 0..12 {
+                let a = rng.below(n as usize + 1) as u64;
+                let b = a + rng.below((n - a) as usize + 1) as u64;
+                ranges.push((a, b));
+            }
+        }
+        for (a, b) in ranges {
+            let y = r.decode_range(a..b).unwrap();
+            assert_eq!(y.len(), (b - a) as usize, "{bound:?} {a}..{b}");
+            for (k, v) in y.iter().enumerate() {
+                assert_eq!(
+                    v.to_bits(),
+                    full_bits[a as usize + k],
+                    "{bound:?} range {a}..{b} at {k}"
+                );
+            }
+        }
+    }
+}
+
+/// PROPERTY (v3 archive, acceptance c): `chunks_where(max >= t)` never
+/// prunes a chunk whose reconstruction contains a value `>= t` — the
+/// min/max summaries are conservative over outliers (raw-bit extremes,
+/// ±Inf) and NaN (which satisfies no ordered comparison and so can
+/// never be the qualifying value). Mirror statement for `min <= t`.
+#[test]
+fn prop_v3_pruning_is_conservative() {
+    use lc::archive::Reader;
+    for seed in 0..8u64 {
+        let mut rng = Rng::new(0x9A11 ^ seed);
+        // Mixed data: smooth base, injected outliers, specials.
+        let n = 20_000 + rng.below(20_000);
+        let x: Vec<f32> = (0..n)
+            .map(|i| match rng.below(97) {
+                0 => f32::NAN,
+                1 => f32::INFINITY,
+                2 => f32::NEG_INFINITY,
+                3 => 1e30,
+                4 => -1e30,
+                _ => ((i as f32) * 7e-4).sin() * 50.0 + (rng.normal() as f32),
+            })
+            .collect();
+        let mut cfg = EngineConfig::native(ErrorBound::Abs(1e-2));
+        cfg.container_version = ContainerVersion::V3;
+        cfg.chunk_size = 2048;
+        let (container, _) = compress(&cfg, &x).unwrap();
+        let (recon, _) = decompress(&cfg, &container).unwrap();
+        let r = Reader::from_bytes(container.to_bytes()).unwrap();
+        for t in [-1e25f32, -40.0, 0.0, 40.0, 1e25] {
+            let kept: std::collections::HashSet<usize> =
+                r.chunks_where(|s| s.max >= t).iter().map(|h| h.index).collect();
+            let kept_min: std::collections::HashSet<usize> =
+                r.chunks_where(|s| s.min <= t).iter().map(|h| h.index).collect();
+            for (ci, chunk) in recon.chunks(2048).enumerate() {
+                if chunk.iter().any(|&v| v >= t) {
+                    assert!(
+                        kept.contains(&ci),
+                        "seed {seed} t {t}: chunk {ci} has a value >= t but was pruned"
+                    );
+                }
+                if chunk.iter().any(|&v| v <= t) {
+                    assert!(
+                        kept_min.contains(&ci),
+                        "seed {seed} t {t}: chunk {ci} has a value <= t but was pruned"
+                    );
+                }
+            }
+        }
+    }
+}
+
+/// PROPERTY (v3 archive, acceptance d): the reference oracle's
+/// independently rebuilt index — offsets re-walked, stats from naive
+/// per-element decode, CRCs recomputed — matches the writer's footer
+/// EXACTLY (bitwise on the f32 summaries), for ABS/REL/NOA and both
+/// write paths (engine and streaming).
+#[test]
+fn prop_v3_reference_index_rebuild_matches_writer() {
+    use lc::archive::Reader;
+    use lc::data::Suite;
+    let bounds = [
+        ErrorBound::Abs(1e-3),
+        ErrorBound::Rel(1e-3),
+        ErrorBound::Noa(1e-3),
+    ];
+    for (bi, bound) in bounds.into_iter().enumerate() {
+        let x = Suite::Cesm.generate(bi, 30_000 + bi * 777);
+        let mut cfg = EngineConfig::native(bound);
+        cfg.container_version = ContainerVersion::V3;
+        cfg.chunk_size = 4096;
+        cfg.workers = 3;
+        let (container, _) = compress(&cfg, &x).unwrap();
+        let bytes = container.to_bytes();
+        let rebuilt = lc::reference::rebuild_index(&container).unwrap();
+        let r = Reader::from_bytes(bytes.clone()).unwrap();
+        assert_eq!(r.entries(), rebuilt.as_slice(), "{bound:?} engine path");
+        // The streaming writer must emit the identical footer (NOA
+        // cannot stream; the engine path above covers it).
+        if !matches!(bound, ErrorBound::Noa(_)) {
+            let (streamed, _) =
+                lc::coordinator::stream::compress_slice_streaming(&cfg, &x).unwrap();
+            assert_eq!(streamed, bytes, "{bound:?} streaming bytes");
+        }
+        // And the parsed container carries the same stats per chunk.
+        let parsed = lc::container::Container::from_bytes(&bytes).unwrap();
+        for (i, (rec, e)) in parsed.chunks.iter().zip(rebuilt.iter()).enumerate() {
+            assert_eq!(rec.stats, e.stats, "{bound:?} chunk {i} parsed stats");
+        }
     }
 }
 

@@ -44,10 +44,14 @@ fn zero_length_and_tiny_containers_error_cleanly() {
 }
 
 /// Every truncation point: `Err`, not panic — on both decode paths and
-/// both container versions.
+/// every container version.
 #[test]
 fn truncated_containers_error_cleanly() {
-    for version in [ContainerVersion::V1, ContainerVersion::V2] {
+    for version in [
+        ContainerVersion::V1,
+        ContainerVersion::V2,
+        ContainerVersion::V3,
+    ] {
         let (cfg, bytes, _) = sample_container_versioned(10_000, version);
         // Dense near the front (header framing), strided through the
         // body.
@@ -81,7 +85,11 @@ fn truncated_containers_error_cleanly() {
 /// `dequantize_slice_boundary_returns_typed_error` (below) close.
 #[test]
 fn short_outlier_bitmap_errors_cleanly() {
-    for version in [ContainerVersion::V1, ContainerVersion::V2] {
+    for version in [
+        ContainerVersion::V1,
+        ContainerVersion::V2,
+        ContainerVersion::V3,
+    ] {
         let (cfg, bytes, _) = sample_container_versioned(10_000, version);
         let mut container = Container::from_bytes(&bytes).unwrap();
         // Re-encode chunk 0's bitmap as one that covers only 8 of its
@@ -251,6 +259,202 @@ fn rle_hostile_varints_and_lengths_rejected() {
     // message the decode paths surface.
     let msg: String = RleError::ZeroLengthRun.into();
     assert_eq!(msg, "zero-length run");
+}
+
+// ---------------------------------------------------------------------
+// Hostile v3 index footers: every attack must produce a typed error —
+// never a panic, silent misread, or unbounded pre-allocation — on all
+// three consumers (archive::Reader, Container::from_bytes, streaming).
+// ---------------------------------------------------------------------
+
+use lc::archive::index::{ENTRY_LEN, TRAILER_LEN};
+use lc::archive::{ArchiveError, Reader};
+
+/// Byte offsets of the v3 footer regions for surgical corruption.
+struct V3Layout {
+    entries_start: usize,
+    footer_crc_pos: usize,
+    trailer_start: usize,
+}
+
+fn v3_layout(bytes: &[u8], n_chunks: usize) -> V3Layout {
+    let len = bytes.len();
+    let trailer_start = len - 4 - TRAILER_LEN;
+    let footer_crc_pos = trailer_start - 4;
+    V3Layout {
+        entries_start: footer_crc_pos - n_chunks * ENTRY_LEN,
+        footer_crc_pos,
+        trailer_start,
+    }
+}
+
+/// Recompute the footer CRC and file CRC after surgery, so only the
+/// targeted inconsistency remains.
+fn refresh_v3_crcs(bytes: &mut [u8], n_chunks: usize) {
+    use lc::container::crc::crc32;
+    let l = v3_layout(bytes, n_chunks);
+    let fc = crc32(&bytes[l.entries_start..l.footer_crc_pos]);
+    bytes[l.footer_crc_pos..l.footer_crc_pos + 4].copy_from_slice(&fc.to_le_bytes());
+    let len = bytes.len();
+    let flc = crc32(&bytes[..len - 4]);
+    bytes[len - 4..].copy_from_slice(&flc.to_le_bytes());
+}
+
+fn v3_sample(n: usize) -> (EngineConfig, Vec<u8>, usize) {
+    let (cfg, bytes, _) = sample_container_versioned(n, ContainerVersion::V3);
+    let n_chunks = n.div_ceil(cfg.chunk_size);
+    (cfg, bytes, n_chunks)
+}
+
+/// Truncations inside the footer and trailer: typed errors everywhere.
+#[test]
+fn v3_truncated_footer_and_trailer_error_cleanly() {
+    let (cfg, bytes, n_chunks) = v3_sample(10_000);
+    let l = v3_layout(&bytes, n_chunks);
+    let cuts = [
+        l.entries_start + 1,
+        l.entries_start + ENTRY_LEN,
+        l.footer_crc_pos,
+        l.footer_crc_pos + 2,
+        l.trailer_start,
+        l.trailer_start + TRAILER_LEN - 1,
+        bytes.len() - 2,
+    ];
+    for cut in cuts {
+        let t = &bytes[..cut];
+        assert!(Container::from_bytes(t).is_err(), "cut {cut}");
+        assert!(decompress_slice_streaming(&cfg, t).is_err(), "cut {cut}");
+        assert!(Reader::from_bytes(t.to_vec()).is_err(), "cut {cut}");
+    }
+}
+
+/// A flipped entry byte with the footer CRC left stale: the footer CRC
+/// check fires (typed), on every consumer.
+#[test]
+fn v3_footer_crc_mismatch_is_typed() {
+    let (cfg, mut bytes, n_chunks) = v3_sample(10_000);
+    let l = v3_layout(&bytes, n_chunks);
+    // Flip a stats byte of entry 0 (min field starts at +21).
+    bytes[l.entries_start + 21] ^= 0x40;
+    // Refresh ONLY the file CRC so the footer CRC is what fails.
+    use lc::container::crc::crc32;
+    let len = bytes.len();
+    let flc = crc32(&bytes[..len - 4]);
+    bytes[len - 4..].copy_from_slice(&flc.to_le_bytes());
+    match Reader::from_bytes(bytes.clone()) {
+        Err(ArchiveError::BadIndex(d)) => assert!(d.contains("CRC"), "{d}"),
+        other => panic!("expected BadIndex(CRC), got {other:?}"),
+    }
+    assert!(Container::from_bytes(&bytes).is_err());
+    assert!(decompress_slice_streaming(&cfg, &bytes).is_err());
+}
+
+/// Out-of-bounds / overlapping entry offsets (footer + file CRCs
+/// recomputed so only the offsets lie): layout validation fires.
+#[test]
+fn v3_hostile_entry_offsets_rejected() {
+    let (cfg, bytes, n_chunks) = v3_sample(10_000);
+    assert!(n_chunks >= 2, "need several chunks");
+    let l = v3_layout(&bytes, n_chunks);
+    // Entry 1's offset field: pull it backwards into entry 0's frame
+    // (overlap), then push it past the footer (out of bounds).
+    for evil_offset in [0u64, u64::MAX / 2] {
+        let mut bad = bytes.clone();
+        let e1 = l.entries_start + ENTRY_LEN;
+        bad[e1..e1 + 8].copy_from_slice(&evil_offset.to_le_bytes());
+        refresh_v3_crcs(&mut bad, n_chunks);
+        match Reader::from_bytes(bad.clone()) {
+            Err(ArchiveError::BadIndex(_)) => {}
+            other => panic!("offset {evil_offset}: expected BadIndex, got {other:?}"),
+        }
+        assert!(Container::from_bytes(&bad).is_err(), "offset {evil_offset}");
+        assert!(decompress_slice_streaming(&cfg, &bad).is_err(), "offset {evil_offset}");
+    }
+}
+
+/// Element counts that don't sum to `n_values` (or break the uniform
+/// chunk layout): rejected by the index validation.
+#[test]
+fn v3_entry_element_counts_must_sum() {
+    let (cfg, bytes, n_chunks) = v3_sample(10_000);
+    let l = v3_layout(&bytes, n_chunks);
+    for evil_n in [0u32, 1, u32::MAX] {
+        let mut bad = bytes.clone();
+        let nv = l.entries_start + 12; // entry 0's n_values field
+        bad[nv..nv + 4].copy_from_slice(&evil_n.to_le_bytes());
+        refresh_v3_crcs(&mut bad, n_chunks);
+        match Reader::from_bytes(bad.clone()) {
+            Err(ArchiveError::BadIndex(_)) => {}
+            other => panic!("n {evil_n}: expected BadIndex, got {other:?}"),
+        }
+        assert!(Container::from_bytes(&bad).is_err(), "n {evil_n}");
+        assert!(decompress_slice_streaming(&cfg, &bad).is_err(), "n {evil_n}");
+    }
+}
+
+/// Absurd declared chunk counts in the trailer (alone, and matching a
+/// forged header): typed errors BEFORE any proportional allocation.
+#[test]
+fn v3_absurd_chunk_counts_rejected_without_allocation() {
+    let (cfg, bytes, n_chunks) = v3_sample(5_000);
+    let l = v3_layout(&bytes, n_chunks);
+    // Trailer-only forgery: disagrees with the header -> BadTrailer.
+    let mut bad = bytes.clone();
+    let tn = l.trailer_start + 8; // n_chunks field of the trailer
+    bad[tn..tn + 4].copy_from_slice(&u32::MAX.to_le_bytes());
+    refresh_v3_crcs(&mut bad, n_chunks);
+    match Reader::from_bytes(bad.clone()) {
+        Err(ArchiveError::BadTrailer(_)) => {}
+        other => panic!("expected BadTrailer, got {other:?}"),
+    }
+    assert!(Container::from_bytes(&bad).is_err());
+    assert!(decompress_slice_streaming(&cfg, &bad).is_err());
+    // Header + trailer both forged: the footer span (4G entries) can't
+    // fit the file, caught before the footer is even read.
+    let mut bad = bytes.clone();
+    let container = Container::from_bytes(&bytes).unwrap();
+    let n_chunks_off = container.header.to_bytes().len() - 4;
+    bad[n_chunks_off..n_chunks_off + 4].copy_from_slice(&u32::MAX.to_le_bytes());
+    bad[tn..tn + 4].copy_from_slice(&u32::MAX.to_le_bytes());
+    // (No CRC refresh needed for the Reader path: it must reject on
+    // structure alone, before ever checking a CRC over 100+ GB.)
+    match Reader::from_bytes(bad.clone()) {
+        Err(ArchiveError::BadTrailer(_)) | Err(ArchiveError::Truncated) => {}
+        other => panic!("expected BadTrailer/Truncated, got {other:?}"),
+    }
+    assert!(Container::from_bytes(&bad).is_err());
+    assert!(decompress_slice_streaming(&cfg, &bad).is_err());
+}
+
+/// A CRC-valid index over a corrupted chunk body: `decode_range` of
+/// the touched span returns the typed chunk-CRC error (the index CRC
+/// duplicate fails first), other spans still decode.
+#[test]
+fn v3_corrupt_chunk_body_is_isolated() {
+    let (_, bytes, _) = v3_sample(10_000);
+    let mut bad = bytes.clone();
+    let container = Container::from_bytes(&bytes).unwrap();
+    // Flip a byte inside chunk 1's payload; fix only the file CRC so
+    // the frame CRC (and its footer duplicate) now lie about the body.
+    let header_len = container.header.to_bytes().len();
+    let frame0_len =
+        17 + container.chunks[0].outlier_bytes.len() + container.chunks[0].payload.len();
+    let target = header_len + frame0_len + 30; // inside chunk 1's frame body
+    bad[target] ^= 0x08;
+    use lc::container::crc::crc32;
+    let len = bad.len();
+    let flc = crc32(&bad[..len - 4]);
+    bad[len - 4..].copy_from_slice(&flc.to_le_bytes());
+    let r = Reader::from_bytes(bad).unwrap();
+    let cs = container.header.chunk_size as u64;
+    // Chunk 0 still decodes...
+    assert!(r.decode_range(0..cs).is_ok());
+    // ...chunk 1 reports its corruption, typed.
+    match r.decode_range(cs..2 * cs) {
+        Err(ArchiveError::ChunkCrc { index: 1 })
+        | Err(ArchiveError::ChunkMismatch { index: 1, .. }) => {}
+        other => panic!("expected chunk 1 CRC/mismatch error, got {other:?}"),
+    }
 }
 
 /// Huffman payloads with hostile headers (over-subscribed tables, bad
