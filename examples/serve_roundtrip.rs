@@ -1,0 +1,76 @@
+//! The compression daemon end to end: `lc::server`.
+//!
+//! Starts an in-process `lc serve` instance on an ephemeral TCP port,
+//! then drives it with the blocking client: compress a signal
+//! server-side, decompress it back, answer a random-access range query
+//! against the served container, read the per-tenant status counters,
+//! and finally drain the server gracefully. The same wire protocol is
+//! what `lc serve` speaks as a standalone daemon (see the spec in
+//! `lc::server::proto`).
+//!
+//! Run: cargo run --release --example serve_roundtrip
+
+use lc::server::{Client, CompressParams, ServeConfig, Server};
+
+fn main() -> anyhow::Result<()> {
+    let server = Server::start(ServeConfig {
+        workers: 2,
+        ..ServeConfig::default()
+    })
+    .map_err(anyhow::Error::msg)?;
+    let addr = server.tcp_addr().expect("tcp listener is configured");
+    println!("lc serve listening on {addr}");
+
+    let mut client = Client::connect_tcp(addr).map_err(anyhow::Error::msg)?;
+    client.tenant = 42;
+
+    // Compress server-side: raw values out, serialized container back.
+    let eb = 1e-3f32;
+    let n = 500_000usize;
+    let data: Vec<f32> = (0..n).map(|i| (i as f32 * 4e-5).sin() * 20.0).collect();
+    let container = client
+        .compress(&CompressParams::abs(eb), &data)
+        .map_err(anyhow::Error::msg)?;
+    println!(
+        "compressed {n} values into {} container bytes (ratio {:.2}x)",
+        container.len(),
+        (n * 4) as f64 / container.len() as f64
+    );
+
+    // Decompress it back and verify the error bound held end to end.
+    let restored = client.decompress(&container).map_err(anyhow::Error::msg)?;
+    assert_eq!(restored.len(), n);
+    for (x, y) in data.iter().zip(&restored) {
+        assert!((x - y).abs() <= eb, "bound must hold through the wire");
+    }
+    println!("decompressed {} values, bound verified", restored.len());
+
+    // Range query: the server decodes only the chunks overlapping the
+    // requested span of the (v3, indexed) container.
+    let (a, b) = (123_456u64, 130_000u64);
+    let slice = client
+        .range(&container, a, b)
+        .map_err(anyhow::Error::msg)?;
+    assert_eq!(slice.len(), (b - a) as usize);
+    for (k, v) in slice.iter().enumerate() {
+        assert!((v - data[a as usize + k]).abs() <= eb);
+    }
+    println!("range {a}..{b}: {} values served, bound verified", slice.len());
+
+    // Live per-tenant accounting, as `lc serve --status` would print.
+    let status = client.status().map_err(anyhow::Error::msg)?;
+    for (tenant, c) in &status.tenants {
+        println!(
+            "tenant {tenant}: {} requests, {} bytes in, {} bytes out, \
+             {} rejected, {} timeouts, {} errors",
+            c.requests, c.bytes_in, c.bytes_out, c.rejected, c.timeouts, c.errors
+        );
+    }
+
+    // Graceful drain: in-flight work finishes, replies flush, join
+    // returns.
+    client.drain_server().map_err(anyhow::Error::msg)?;
+    server.join();
+    println!("server drained cleanly");
+    Ok(())
+}

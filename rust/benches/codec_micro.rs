@@ -561,4 +561,94 @@ fn main() {
             eprintln!("failed to write {json_path}: {e}");
         }
     }
+
+    // ---- hotpath.serve: the daemon's wire round-trip (frame + admit +
+    // queue + encode + reply over loopback TCP) vs the same serial
+    // compress called directly in-process — the protocol tax a network
+    // client pays. Plus the admission behaviour under deliberate
+    // oversubscription: a small-budget server hammered by concurrent
+    // clients, counting typed Busy rejections (every request must get
+    // an answer either way).
+    {
+        let n_srv = if std::env::var("LC_BENCH_QUICK").is_ok() {
+            1 << 16
+        } else {
+            1 << 20
+        };
+        let xs = Suite::Cesm.generate(3, n_srv);
+        let mut cfg_serial = EngineConfig::native(ErrorBound::Abs(1e-3));
+        cfg_serial.workers = 1;
+        let m_direct = measure(1, reps, || {
+            let (c, _) = lc::coordinator::compress(&cfg_serial, &xs).unwrap();
+            std::hint::black_box(c.chunks.len());
+        });
+        let params = lc::server::CompressParams::abs(1e-3);
+        let srv = lc::server::Server::start(lc::server::ServeConfig {
+            workers: 1,
+            ..lc::server::ServeConfig::default()
+        })
+        .unwrap();
+        let addr = srv.tcp_addr().unwrap();
+        let mut client = lc::server::Client::connect_tcp(addr).unwrap();
+        let m_served = measure(1, reps, || {
+            let c = client.compress(&params, &xs).unwrap();
+            std::hint::black_box(c.len());
+        });
+        client.drain_server().unwrap();
+        srv.join();
+
+        // Oversubscription: budget admits two bodies at a time, four
+        // clients push four requests each.
+        let body = (16 + 4 * xs.len()) as u64;
+        let srv = lc::server::Server::start(lc::server::ServeConfig {
+            workers: 1,
+            budget_bytes: 2 * body,
+            max_frame_bytes: body,
+            ..lc::server::ServeConfig::default()
+        })
+        .unwrap();
+        let addr = srv.tcp_addr().unwrap();
+        let clients: Vec<_> = (0..4)
+            .map(|_| {
+                let xs = xs.clone();
+                std::thread::spawn(move || {
+                    let mut c = lc::server::Client::connect_tcp(addr).unwrap();
+                    let mut busy = 0u64;
+                    for _ in 0..4 {
+                        match c.compress(&params, &xs) {
+                            Ok(_) => {}
+                            Err(lc::server::ClientError::Wire { code, .. })
+                                if code == lc::server::proto::ERR_BUSY =>
+                            {
+                                busy += 1
+                            }
+                            Err(e) => panic!("serve bench request failed: {e}"),
+                        }
+                    }
+                    busy
+                })
+            })
+            .collect();
+        let rejected: u64 = clients.into_iter().map(|t| t.join().unwrap()).sum();
+        let mut ctl = lc::server::Client::connect_tcp(addr).unwrap();
+        ctl.drain_server().unwrap();
+        srv.join();
+
+        let direct = m_direct.eps(n_srv);
+        let served = m_served.eps(n_srv);
+        let hot = vec![
+            ("serve_direct_eps".to_string(), direct),
+            ("serve_roundtrip_eps".to_string(), served),
+            ("serve_overhead_ratio".to_string(), direct / served.max(1.0)),
+            ("serve_busy_rejections".to_string(), rejected as f64),
+        ];
+        println!(
+            "json hotpath serve: direct {direct:.0} vs served {served:.0} elem/s \
+             ({:.2}x protocol tax), {rejected} busy rejections under oversubscription",
+            direct / served.max(1.0)
+        );
+        if let Err(e) = update_bench_json(&json_path, "hotpath", &hot) {
+            eprintln!("failed to write {json_path}: {e}");
+        }
+    }
 }

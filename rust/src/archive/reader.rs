@@ -325,68 +325,80 @@ impl Reader {
             debug_assert!(rest.is_empty());
         }
 
+        // One chunk's decode, shared by the serial and parallel paths
+        // below. Staging covers the trimmed first/last chunks, whose
+        // slot is shorter than the full chunk.
+        let decode_one = |k: usize,
+                          cfg: &EngineConfig,
+                          scratch: &mut Scratch,
+                          staging: &mut Vec<f32>|
+         -> Result<(), ArchiveError> {
+            let rec = &records[k];
+            let n_i = rec.n_values as usize;
+            let i = (first + k) as u64;
+            let mut slot = slots[k].lock().unwrap();
+            let result = if slot.len() == n_i {
+                decode_chunk_record_into(cfg, &self.qc, &self.pipeline, rec, scratch, &mut slot)
+            } else {
+                staging.clear();
+                staging.resize(n_i, 0.0);
+                decode_chunk_record_into(cfg, &self.qc, &self.pipeline, rec, scratch, staging)
+                    .map(|()| {
+                        let from = ((i * cs).max(start) - i * cs) as usize;
+                        slot.copy_from_slice(&staging[from..from + slot.len()]);
+                    })
+            };
+            result.map_err(|e| ArchiveError::Decode(format!("{e:#}")))
+        };
+
         let workers = if self.workers > 0 {
             self.workers
         } else {
             std::thread::available_parallelism().map(|n| n.get()).unwrap_or(1)
         };
         let workers = workers.min(records.len());
-        let cursor = AtomicUsize::new(0);
         let err: Mutex<Option<ArchiveError>> = Mutex::new(None);
-        std::thread::scope(|s| {
-            for _ in 0..workers {
-                let records = &records;
-                let slots = &slots;
-                let cursor = &cursor;
-                let err = &err;
-                s.spawn(move || {
-                    let wcfg = self.cfg.clone();
-                    let mut scratch = Scratch::new();
-                    // Staging for the trimmed first/last chunks, whose
-                    // slot is shorter than the full chunk.
-                    let mut staging: Vec<f32> = Vec::new();
-                    loop {
-                        let k = cursor.fetch_add(1, Ordering::Relaxed);
-                        if k >= records.len() {
-                            break;
-                        }
-                        let rec = &records[k];
-                        let n_i = rec.n_values as usize;
-                        let i = (first + k) as u64;
-                        let mut slot = slots[k].lock().unwrap();
-                        let result = if slot.len() == n_i {
-                            decode_chunk_record_into(
-                                &wcfg,
-                                &self.qc,
-                                &self.pipeline,
-                                rec,
-                                &mut scratch,
-                                &mut slot,
-                            )
-                        } else {
-                            staging.clear();
-                            staging.resize(n_i, 0.0);
-                            decode_chunk_record_into(
-                                &wcfg,
-                                &self.qc,
-                                &self.pipeline,
-                                rec,
-                                &mut scratch,
-                                &mut staging,
-                            )
-                            .map(|()| {
-                                let from = ((i * cs).max(start) - i * cs) as usize;
-                                slot.copy_from_slice(&staging[from..from + slot.len()]);
-                            })
-                        };
-                        if let Err(e) = result {
-                            *err.lock().unwrap() = Some(ArchiveError::Decode(format!("{e:#}")));
-                            break;
-                        }
-                    }
-                });
+        if workers <= 1 {
+            // Serial fast path on the caller's thread: no scope spawn
+            // for single-worker readers (the `lc serve` per-request
+            // path, which multiplexes requests onto its own pool and
+            // checks deadlines between decode_range calls) or
+            // single-chunk ranges.
+            let wcfg = self.cfg.clone();
+            let mut scratch = Scratch::new();
+            let mut staging: Vec<f32> = Vec::new();
+            for k in 0..records.len() {
+                if let Err(e) = decode_one(k, &wcfg, &mut scratch, &mut staging) {
+                    *err.lock().unwrap() = Some(e);
+                    break;
+                }
             }
-        });
+        } else {
+            let cursor = AtomicUsize::new(0);
+            std::thread::scope(|s| {
+                for _ in 0..workers {
+                    let records = &records;
+                    let decode_one = &decode_one;
+                    let cursor = &cursor;
+                    let err = &err;
+                    s.spawn(move || {
+                        let wcfg = self.cfg.clone();
+                        let mut scratch = Scratch::new();
+                        let mut staging: Vec<f32> = Vec::new();
+                        loop {
+                            let k = cursor.fetch_add(1, Ordering::Relaxed);
+                            if k >= records.len() {
+                                break;
+                            }
+                            if let Err(e) = decode_one(k, &wcfg, &mut scratch, &mut staging) {
+                                *err.lock().unwrap() = Some(e);
+                                break;
+                            }
+                        }
+                    });
+                }
+            });
+        }
         drop(slots);
         if let Some(e) = err.into_inner().unwrap() {
             return Err(e);

@@ -389,7 +389,16 @@ impl Container {
     /// against the actual chunk frames (offsets, lengths, counts,
     /// plans, CRCs); the parsed records then carry the footer's
     /// min/max summaries.
-    pub fn from_bytes(data: &[u8]) -> Result<Container, String> {
+    ///
+    /// Every failure is [`crate::LcError::Container`]; the detail text
+    /// is unchanged from the pre-typed `String` errors
+    /// (`From<LcError> for String` keeps string-handling callers
+    /// working).
+    pub fn from_bytes(data: &[u8]) -> Result<Container, crate::LcError> {
+        Container::from_bytes_inner(data).map_err(crate::LcError::Container)
+    }
+
+    fn from_bytes_inner(data: &[u8]) -> Result<Container, String> {
         let mut r = Reader { data, pos: 0 };
         let header = parse_header(&mut r)?;
         let version = header.version;
@@ -674,7 +683,7 @@ mod tests {
         let mut c = sample_versioned(ContainerVersion::V2);
         c.chunks[1].plan = 0b1_0000; // bit 4 of a 4-stage chain
         let bytes = c.to_bytes();
-        let err = Container::from_bytes(&bytes).unwrap_err();
+        let err = String::from(Container::from_bytes(&bytes).unwrap_err());
         assert!(err.contains("plan"), "{err}");
     }
 
@@ -706,7 +715,7 @@ mod tests {
         assert_eq!(bytes[plan_off], 0b1111);
         let mut bad = bytes.clone();
         bad[plan_off] = 0b0111; // a *valid* but wrong plan
-        let err = Container::from_bytes(&bad).unwrap_err();
+        let err = String::from(Container::from_bytes(&bad).unwrap_err());
         assert!(err.contains("CRC"), "{err}");
     }
 

@@ -31,6 +31,7 @@ use anyhow::{anyhow, Result};
 use crate::archive::stats::ChunkStats;
 use crate::codec::{plan, Pipeline};
 use crate::container::{ChunkRecord, Container, ContainerVersion, Header};
+use crate::error::LcError;
 use crate::quantizer::QuantizerConfig;
 use crate::runtime::PjrtHandle;
 use crate::scratch::Scratch;
@@ -147,14 +148,14 @@ fn quantize_into_scratch(
     qc: &QuantizerConfig,
     chunk: &[f32],
     s: &mut Scratch,
-) -> Result<()> {
+) -> Result<(), LcError> {
     match cfg.device {
         Device::Native => {
             qc.quantize_native_into(chunk, &mut s.qwords, &mut s.obits);
             Ok(())
         }
         Device::Pjrt => {
-            let q = quantize_on(cfg, qc, chunk)?;
+            let q = quantize_on(cfg, qc, chunk).map_err(|e| LcError::Runtime(format!("{e:#}")))?;
             s.qwords.clear();
             s.qwords.extend_from_slice(&q.words);
             s.obits.clear();
@@ -183,7 +184,7 @@ pub fn encode_chunk_record(
     qc: &QuantizerConfig,
     values: &[f32],
     s: &mut Scratch,
-) -> Result<(ChunkRecord, usize)> {
+) -> Result<(ChunkRecord, usize), LcError> {
     quantize_into_scratch(cfg, qc, values, s)?;
     let outliers: usize = s.obits.iter().map(|w| w.count_ones() as usize).sum();
     // RLE keeps the (almost always zero) bitmap from capping the ratio
@@ -206,7 +207,7 @@ pub fn encode_chunk_record(
             // overwrites every element.
             s.values.resize(values.len(), 0.0);
             qc.dequantize_native_slice(&s.qwords, &s.obits, &mut s.values)
-                .map_err(|e| anyhow!(String::from(e)))?;
+                .map_err(|e| LcError::Quantizer(String::from(e)))?;
             ChunkStats::from_values(&s.values)
         }
         _ => ChunkStats::EMPTY,
@@ -242,27 +243,27 @@ pub fn decode_chunk_record_into(
     rec: &ChunkRecord,
     s: &mut Scratch,
     out: &mut [f32],
-) -> Result<()> {
+) -> Result<(), LcError> {
     let n = rec.n_values as usize;
     if out.len() != n {
-        return Err(anyhow!(
+        return Err(LcError::Container(format!(
             "chunk decodes {n} values, output slot has {}",
             out.len()
-        ));
+        )));
     }
     pipeline
         .decode_masked_into(rec.plan, &rec.payload, n, &mut s.codec)
-        .map_err(|e| anyhow!(e))?;
+        .map_err(LcError::Codec)?;
     crate::codec::rle::decode_into(&rec.outlier_bytes, n.div_ceil(8), &mut s.bitmap)
-        .map_err(|e| anyhow!(e))?;
-    crate::bitvec::bytes_to_bits_into(&s.bitmap, n, &mut s.obits).map_err(|e| anyhow!(e))?;
+        .map_err(|e| LcError::Codec(String::from(e)))?;
+    crate::bitvec::bytes_to_bits_into(&s.bitmap, n, &mut s.obits).map_err(LcError::Codec)?;
     match cfg.device {
         Device::Native => {
             // The decode boundary validates the bitmap length so a
             // malformed container errors instead of panicking in the
             // dequantize kernels.
             qc.dequantize_native_slice(&s.codec.words_a, &s.obits, out)
-                .map_err(|e| anyhow!(e))?;
+                .map_err(|e| LcError::Quantizer(String::from(e)))?;
             Ok(())
         }
         Device::Pjrt => {
@@ -270,7 +271,8 @@ pub fn decode_chunk_record_into(
                 words: s.codec.words_a.clone(),
                 outliers: crate::bitvec::BitVec::from_raw(s.obits.clone(), n),
             };
-            let y = dequantize_chunk(cfg, qc, &chunk)?;
+            let y = dequantize_chunk(cfg, qc, &chunk)
+                .map_err(|e| LcError::Runtime(format!("{e:#}")))?;
             out.copy_from_slice(&y);
             Ok(())
         }
@@ -354,7 +356,7 @@ pub fn compress(cfg: &EngineConfig, data: &[f32]) -> Result<(Container, RunStats
                             records.lock().unwrap()[i] = Some(rec_outliers);
                         }
                         Err(e) => {
-                            *err.lock().unwrap() = Some(e);
+                            *err.lock().unwrap() = Some(e.into());
                             break;
                         }
                     }
@@ -410,6 +412,19 @@ pub fn decompress(cfg: &EngineConfig, container: &Container) -> Result<(Vec<f32>
     if h.chunk_size == 0 {
         return Err(anyhow!("container has zero chunk size"));
     }
+    // Cross-check the header's claimed value count against the chunk
+    // count BEFORE the output allocation: chunk CRCs don't cover the
+    // frame's n_values field, so a forged header/chunk pair can claim
+    // an absurd total and would otherwise force a giant allocation
+    // here before any consistency check fires.
+    if h.n_values.div_ceil(h.chunk_size as u64) != n_chunks as u64 {
+        return Err(anyhow!(
+            "container layout mismatch: {} chunks for {} values at chunk size {}",
+            n_chunks,
+            h.n_values,
+            h.chunk_size
+        ));
+    }
     // Preallocate the full reconstruction once; workers decode through
     // their scratch arena directly into disjoint per-chunk slices
     // (each behind its own uncontended Mutex), so the steady-state
@@ -419,14 +434,7 @@ pub fn decompress(cfg: &EngineConfig, container: &Container) -> Result<(Vec<f32>
         .chunks_mut(h.chunk_size as usize)
         .map(Mutex::new)
         .collect();
-    if slots.len() != n_chunks {
-        return Err(anyhow!(
-            "container layout mismatch: {} chunks for {} values at chunk size {}",
-            n_chunks,
-            h.n_values,
-            h.chunk_size
-        ));
-    }
+    debug_assert_eq!(slots.len(), n_chunks);
     let cursor = AtomicUsize::new(0);
     let workers = cfg.effective_workers().min(n_chunks.max(1));
     let err: Mutex<Option<anyhow::Error>> = Mutex::new(None);
@@ -459,7 +467,7 @@ pub fn decompress(cfg: &EngineConfig, container: &Container) -> Result<(Vec<f32>
                         &mut slot,
                     );
                     if let Err(e) = decoded {
-                        *err.lock().unwrap() = Some(e);
+                        *err.lock().unwrap() = Some(e.into());
                         break;
                     }
                 }

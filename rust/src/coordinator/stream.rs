@@ -121,7 +121,7 @@ pub fn compress_stream<R: Read, W: Write>(
                             }
                         }
                         Err(e) => {
-                            *err.lock().unwrap() = Some(e);
+                            *err.lock().unwrap() = Some(e.into());
                             break;
                         }
                     }
@@ -380,7 +380,7 @@ pub fn decompress_stream<R: Read, W: Write + Send>(
                             }
                         }
                         Err(e) => {
-                            *err.lock().unwrap() = Some(e);
+                            *err.lock().unwrap() = Some(e.into());
                             break;
                         }
                     }

@@ -1,0 +1,98 @@
+//! The crate-wide typed error surface.
+//!
+//! Historically the pipeline/container/archive boundaries grew ad-hoc
+//! error types: `Result<_, String>` in the codec and container
+//! parsers, `anyhow::Error` in the coordinator, and the typed
+//! [`ArchiveError`] taxonomy in `lc::archive`. [`LcError`] unifies
+//! them at the public boundaries — [`crate::container::Container::from_bytes`],
+//! the per-chunk engine paths
+//! ([`crate::coordinator::encode_chunk_record`] /
+//! [`crate::coordinator::decode_chunk_record_into`]), and the server —
+//! so callers that need to *dispatch* on failure class (the `lc serve`
+//! wire error codes, most prominently) match on a variant instead of
+//! grepping message text.
+//!
+//! The conversion is non-breaking by the same convention the earlier
+//! typed errors (`RleError`, `BitshuffleError`, `ArchiveError`)
+//! established: `From<LcError> for String` keeps every
+//! `.map_err(|e| anyhow!(e))` / string-comparison call site compiling,
+//! and the `Display` text preserves the underlying detail message, so
+//! substring assertions on the old `String` errors still hold.
+//! Interior layers (individual codec stages, quantizer kernels) keep
+//! their local error types; `LcError` wraps at the boundary rather
+//! than forcing one enum through every kernel.
+
+use crate::archive::ArchiveError;
+
+/// Typed failure classes at the crate's public boundaries.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub enum LcError {
+    /// Invalid configuration or request parameters (bad bound, bad
+    /// chunk size, missing PJRT handle, ...).
+    Config(String),
+    /// Underlying I/O failure.
+    Io(String),
+    /// Container parse or validation failure (bad magic, truncation,
+    /// CRC mismatch, layout inconsistencies, ...).
+    Container(String),
+    /// A lossless codec stage failed to decode (RLE, bitshuffle,
+    /// Huffman, plan handling).
+    Codec(String),
+    /// The quantizer boundary rejected its inputs (short outlier
+    /// bitmap, ...).
+    Quantizer(String),
+    /// The PJRT runtime failed (service stopped, artifact error, ...).
+    Runtime(String),
+    /// A typed archive (random-access) failure; the full
+    /// [`ArchiveError`] taxonomy is preserved, not flattened.
+    Archive(ArchiveError),
+}
+
+impl std::fmt::Display for LcError {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        match self {
+            LcError::Config(d) => write!(f, "invalid configuration: {d}"),
+            LcError::Io(d) => write!(f, "I/O error: {d}"),
+            LcError::Container(d) => write!(f, "bad container: {d}"),
+            LcError::Codec(d) => write!(f, "codec error: {d}"),
+            LcError::Quantizer(d) => write!(f, "quantizer error: {d}"),
+            LcError::Runtime(d) => write!(f, "runtime error: {d}"),
+            LcError::Archive(e) => write!(f, "{e}"),
+        }
+    }
+}
+
+impl std::error::Error for LcError {}
+
+impl From<ArchiveError> for LcError {
+    fn from(e: ArchiveError) -> LcError {
+        LcError::Archive(e)
+    }
+}
+
+/// Non-breaking compatibility with the pre-typed `String` boundaries.
+impl From<LcError> for String {
+    fn from(e: LcError) -> String {
+        e.to_string()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn display_preserves_detail_text() {
+        let e = LcError::Codec("rle decoded 1 bytes, expected 2".into());
+        let s = String::from(e);
+        assert!(s.contains("rle decoded"), "{s}");
+        assert!(s.contains("codec"), "{s}");
+    }
+
+    #[test]
+    fn archive_errors_nest_without_flattening() {
+        let e = LcError::from(ArchiveError::ChunkCrc { index: 3 });
+        assert_eq!(e, LcError::Archive(ArchiveError::ChunkCrc { index: 3 }));
+        assert!(e.to_string().contains("chunk 3 CRC"));
+    }
+}

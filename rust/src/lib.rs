@@ -25,11 +25,15 @@ pub mod codec;
 pub mod container;
 pub mod coordinator;
 pub mod data;
+pub mod error;
 pub mod quantizer;
 pub mod reference;
 pub mod runtime;
 pub mod scratch;
+pub mod server;
 pub mod simd;
 pub mod tables;
 pub mod types;
 pub mod verify;
+
+pub use error::LcError;

@@ -9,6 +9,8 @@
 //!                                      regenerate the paper's tables
 //!   sweep                              exhaustive/strided f32 sweep
 //!   parity                             native vs PJRT parity audit
+//!   serve                              compression daemon (TCP/Unix
+//!                                      sockets; see lc::server)
 //!
 //! Hand-rolled argument parsing (no clap in the offline environment).
 
@@ -58,6 +60,13 @@ USAGE:
                 [--quick] [--device pjrt] [--files N] [--n N]
   lc sweep      [--eb EPS] [--stride K] [--rel] [--variant native] [--threads N]
   lc parity     [--eb EPS] [--n N]
+  lc serve      [--tcp ADDR] [--uds PATH] [--workers N] [--budget-mb N]
+                [--max-frame-mb N] [--io-timeout-secs N] [--deadline-secs N]
+                (compression daemon with admission control, per-request
+                deadlines, and typed wire errors; default listener is
+                tcp 127.0.0.1:7440; drains gracefully on SIGTERM)
+  lc serve --status [--tcp ADDR | --uds PATH]
+                (query a running daemon's gauges and per-tenant counters)
 
 Suites: CESM EXAALT HACC NYX QMCPACK SCALE ISABEL
 Artifacts are loaded from $LC_ARTIFACT_DIR or ./artifacts (PJRT device).
@@ -75,7 +84,7 @@ fn parse_opts(args: &[String]) -> Opts {
     while i < args.len() {
         let a = &args[i];
         if let Some(name) = a.strip_prefix("--") {
-            let boolean = matches!(name, "unprotected" | "rel" | "quick" | "help");
+            let boolean = matches!(name, "unprotected" | "rel" | "quick" | "help" | "status");
             if boolean || i + 1 >= args.len() {
                 flags.insert(name.to_string(), "true".to_string());
             } else {
@@ -169,6 +178,25 @@ fn eval_config(o: &Opts) -> Result<EvalConfig> {
     }
     ec.max_files = o.usize_flag("files", ec.max_files)?;
     Ok(ec)
+}
+
+/// Query a running `lc serve` daemon's status over TCP or (on Unix) a
+/// Unix socket.
+fn serve_status(tcp: &str, uds: Option<&str>) -> Result<lc::server::StatusReport> {
+    if let Some(path) = uds {
+        #[cfg(unix)]
+        {
+            let mut c = lc::server::Client::connect_uds(path).map_err(|e| anyhow!(e))?;
+            return c.status().map_err(|e| anyhow!(e));
+        }
+        #[cfg(not(unix))]
+        {
+            let _ = path;
+            bail!("unix-socket status queries need a unix platform");
+        }
+    }
+    let mut c = lc::server::Client::connect_tcp(tcp).map_err(|e| anyhow!(e))?;
+    c.status().map_err(|e| anyhow!(e))
 }
 
 fn read_f32_file(path: &str) -> Result<Vec<f32>> {
@@ -505,6 +533,66 @@ fn run(args: Vec<String>) -> Result<()> {
             }
             println!("parity-safe variants are bit-identical across pipelines");
             drop(svc);
+        }
+        "serve" => {
+            let default_addr = "127.0.0.1:7440";
+            if o.flag("status").is_some() {
+                let report = serve_status(
+                    o.flag("tcp").unwrap_or(default_addr),
+                    o.flag("uds"),
+                )?;
+                println!(
+                    "draining: {}   in-flight bytes: {} / {}",
+                    report.draining, report.in_flight_bytes, report.budget_bytes
+                );
+                if report.tenants.is_empty() {
+                    println!("no work requests yet");
+                } else {
+                    println!(
+                        "{:>10}  {:>9}  {:>12}  {:>12}  {:>8}  {:>8}  {:>7}",
+                        "tenant", "requests", "bytes in", "bytes out", "rejected", "timeouts",
+                        "errors"
+                    );
+                    for (tenant, c) in &report.tenants {
+                        println!(
+                            "{tenant:>10}  {:>9}  {:>12}  {:>12}  {:>8}  {:>8}  {:>7}",
+                            c.requests, c.bytes_in, c.bytes_out, c.rejected, c.timeouts, c.errors
+                        );
+                    }
+                }
+                return Ok(());
+            }
+            let uds = o.flag("uds").map(std::path::PathBuf::from);
+            let tcp = match (o.flag("tcp"), &uds) {
+                (Some(addr), _) => Some(addr.to_string()),
+                (None, Some(_)) => None,
+                (None, None) => Some(default_addr.to_string()),
+            };
+            let cfg = lc::server::ServeConfig {
+                tcp,
+                uds,
+                workers: o.usize_flag("workers", 0)?,
+                budget_bytes: (o.usize_flag("budget-mb", 256)? as u64) << 20,
+                max_frame_bytes: (o.usize_flag("max-frame-mb", 64)? as u64) << 20,
+                io_timeout: std::time::Duration::from_secs(
+                    o.usize_flag("io-timeout-secs", 30)? as u64
+                ),
+                default_deadline: std::time::Duration::from_secs(
+                    o.usize_flag("deadline-secs", 60)? as u64,
+                ),
+                handle_signals: true,
+                ..lc::server::ServeConfig::default()
+            };
+            let server = lc::server::Server::start(cfg).map_err(|e| anyhow!(e))?;
+            if let Some(addr) = server.tcp_addr() {
+                println!("lc serve listening on tcp {addr}");
+            }
+            if let Some(path) = o.flag("uds") {
+                println!("lc serve listening on unix socket {path}");
+            }
+            println!("drain with SIGTERM, SIGINT, or a wire Drain request");
+            server.join();
+            println!("drained cleanly");
         }
         other => {
             print!("{USAGE}");

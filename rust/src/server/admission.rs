@@ -1,0 +1,135 @@
+//! Admission control: a hard bound on admitted request-body bytes.
+//!
+//! The server never queues more request payload than
+//! [`ServeConfig::budget_bytes`](super::ServeConfig::budget_bytes).
+//! The bound holds *by construction*: admission is a compare-and-swap
+//! against the budget, so two racing requests can never both slip past
+//! a nearly-full gauge, and release is RAII — a [`Permit`] dropped on
+//! any path (reply sent, worker panic, connection death) returns its
+//! bytes exactly once.
+
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::Arc;
+
+/// Shared admission gauge for one server.
+pub struct Admission {
+    budget: u64,
+    in_flight: AtomicU64,
+}
+
+impl Admission {
+    pub fn new(budget: u64) -> Admission {
+        Admission {
+            budget,
+            in_flight: AtomicU64::new(0),
+        }
+    }
+
+    /// The configured budget in bytes.
+    pub fn budget(&self) -> u64 {
+        self.budget
+    }
+
+    /// Admitted request-body bytes currently in flight.
+    pub fn in_flight(&self) -> u64 {
+        self.in_flight.load(Ordering::Acquire)
+    }
+
+    /// Try to admit a request of `bytes` body bytes. `None` means the
+    /// budget is full and the caller must answer `ERR_BUSY`. A request
+    /// larger than the whole budget can never be admitted (the frame
+    /// cap rejects those earlier with `ERR_TOO_LARGE`).
+    pub fn try_admit(self: &Arc<Self>, bytes: u64) -> Option<Permit> {
+        let mut cur = self.in_flight.load(Ordering::Relaxed);
+        loop {
+            let next = cur.checked_add(bytes)?;
+            if next > self.budget {
+                return None;
+            }
+            match self.in_flight.compare_exchange_weak(
+                cur,
+                next,
+                Ordering::AcqRel,
+                Ordering::Relaxed,
+            ) {
+                Ok(_) => {
+                    return Some(Permit {
+                        ctrl: Arc::clone(self),
+                        bytes,
+                    })
+                }
+                Err(seen) => cur = seen,
+            }
+        }
+    }
+}
+
+/// RAII receipt for admitted bytes; dropping it releases them.
+pub struct Permit {
+    ctrl: Arc<Admission>,
+    bytes: u64,
+}
+
+impl Permit {
+    /// How many bytes this permit holds.
+    pub fn bytes(&self) -> u64 {
+        self.bytes
+    }
+}
+
+impl Drop for Permit {
+    fn drop(&mut self) {
+        self.ctrl.in_flight.fetch_sub(self.bytes, Ordering::AcqRel);
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn budget_is_a_hard_bound() {
+        let a = Arc::new(Admission::new(100));
+        let p1 = a.try_admit(60).unwrap();
+        assert!(a.try_admit(60).is_none(), "would exceed the budget");
+        let p2 = a.try_admit(40).unwrap();
+        assert_eq!(a.in_flight(), 100);
+        drop(p1);
+        assert_eq!(a.in_flight(), 40);
+        drop(p2);
+        assert_eq!(a.in_flight(), 0);
+        // Zero-byte bodies are always admissible once there is room.
+        assert!(a.try_admit(0).is_some());
+    }
+
+    #[test]
+    fn concurrent_admits_never_exceed_budget() {
+        use std::sync::atomic::AtomicU64;
+        let a = Arc::new(Admission::new(64));
+        let peak = AtomicU64::new(0);
+        std::thread::scope(|s| {
+            for _ in 0..8 {
+                s.spawn(|| {
+                    for _ in 0..1000 {
+                        if let Some(p) = a.try_admit(16) {
+                            peak.fetch_max(a.in_flight(), Ordering::AcqRel);
+                            assert!(a.in_flight() <= 64);
+                            drop(p);
+                        }
+                    }
+                });
+            }
+        });
+        assert!(peak.load(Ordering::Acquire) <= 64);
+        assert_eq!(a.in_flight(), 0);
+    }
+
+    #[test]
+    fn oversized_and_overflowing_requests_are_rejected() {
+        let a = Arc::new(Admission::new(10));
+        assert!(a.try_admit(11).is_none());
+        assert!(a.try_admit(u64::MAX).is_none(), "checked_add must not wrap");
+        let _p = a.try_admit(10).unwrap();
+        assert!(a.try_admit(1).is_none());
+    }
+}

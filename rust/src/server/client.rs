@@ -1,0 +1,172 @@
+//! A minimal blocking client for the `lc serve` wire protocol.
+//!
+//! One request in flight at a time: each call writes a frame, reads
+//! the matching reply, and surfaces typed wire errors as
+//! [`ClientError::Wire`]. Pipelined / adversarial traffic is the
+//! conformance suite's job, done there with raw sockets; this client
+//! is the well-behaved path used by `lc serve --status`, the examples,
+//! and the benches.
+
+use std::io::{Read, Write};
+use std::net::{TcpStream, ToSocketAddrs};
+
+use super::proto::{
+    bytes_to_f32s, encode_compress_tail, encode_range_tail, encode_request_prefix, frame,
+    parse_error_body, parse_frame_header, parse_status, CompressParams, StatusReport,
+    FRAME_HEADER_LEN, REP_CONTAINER, REP_DRAINING, REP_ERROR, REP_STATUS, REP_VALUES,
+    REQ_COMPRESS, REQ_DECOMPRESS, REQ_DRAIN, REQ_RANGE, REQ_STATUS,
+};
+
+/// Client-side failure: a typed error reply from the server, a
+/// transport failure, or a reply that does not parse.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub enum ClientError {
+    /// The server answered with a typed wire error (codes in
+    /// [`super::proto`]).
+    Wire { code: u16, message: String },
+    /// The transport failed.
+    Io(String),
+    /// The reply violated the protocol.
+    Protocol(String),
+}
+
+impl std::fmt::Display for ClientError {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        match self {
+            ClientError::Wire { code, message } => {
+                write!(f, "server error {code}: {message}")
+            }
+            ClientError::Io(d) => write!(f, "I/O error: {d}"),
+            ClientError::Protocol(d) => write!(f, "protocol error: {d}"),
+        }
+    }
+}
+
+impl std::error::Error for ClientError {}
+
+impl From<std::io::Error> for ClientError {
+    fn from(e: std::io::Error) -> ClientError {
+        ClientError::Io(e.to_string())
+    }
+}
+
+/// A blocking protocol client over any byte stream.
+pub struct Client<S: Read + Write> {
+    stream: S,
+    next_id: u64,
+    /// Tenant id stamped on every work request.
+    pub tenant: u32,
+    /// Deadline (ms) stamped on every work request; 0 = server default.
+    pub deadline_ms: u32,
+}
+
+impl Client<TcpStream> {
+    pub fn connect_tcp<A: ToSocketAddrs>(addr: A) -> Result<Client<TcpStream>, ClientError> {
+        Ok(Client::new(TcpStream::connect(addr)?))
+    }
+}
+
+#[cfg(unix)]
+impl Client<std::os::unix::net::UnixStream> {
+    pub fn connect_uds<P: AsRef<std::path::Path>>(
+        path: P,
+    ) -> Result<Client<std::os::unix::net::UnixStream>, ClientError> {
+        Ok(Client::new(std::os::unix::net::UnixStream::connect(path)?))
+    }
+}
+
+impl<S: Read + Write> Client<S> {
+    pub fn new(stream: S) -> Client<S> {
+        Client {
+            stream,
+            next_id: 1,
+            tenant: 0,
+            deadline_ms: 0,
+        }
+    }
+
+    fn roundtrip(&mut self, kind: u8, body: &[u8]) -> Result<(u8, Vec<u8>), ClientError> {
+        let id = self.next_id;
+        self.next_id += 1;
+        self.stream.write_all(&frame(kind, id, body))?;
+        self.stream.flush()?;
+        let mut hdr = [0u8; FRAME_HEADER_LEN];
+        self.stream.read_exact(&mut hdr)?;
+        let fh = parse_frame_header(&hdr)
+            .ok_or_else(|| ClientError::Protocol("reply frame with bad magic".to_string()))?;
+        if fh.request_id != id {
+            return Err(ClientError::Protocol(format!(
+                "reply for request {} while waiting for {id}",
+                fh.request_id
+            )));
+        }
+        let mut reply = vec![0u8; fh.body_len as usize];
+        self.stream.read_exact(&mut reply)?;
+        if fh.kind == REP_ERROR {
+            let (code, message) = parse_error_body(&reply)
+                .ok_or_else(|| ClientError::Protocol("unparseable error reply".to_string()))?;
+            return Err(ClientError::Wire { code, message });
+        }
+        Ok((fh.kind, reply))
+    }
+
+    fn expect(&mut self, kind: u8, body: &[u8], want: u8) -> Result<Vec<u8>, ClientError> {
+        let (got, reply) = self.roundtrip(kind, body)?;
+        if got != want {
+            return Err(ClientError::Protocol(format!(
+                "reply type 0x{got:02x}, wanted 0x{want:02x}"
+            )));
+        }
+        Ok(reply)
+    }
+
+    fn work_body(&self, tail: &[u8]) -> Vec<u8> {
+        let mut body = encode_request_prefix(self.tenant, self.deadline_ms).to_vec();
+        body.extend_from_slice(tail);
+        body
+    }
+
+    /// Compress values server-side; returns the serialized container.
+    pub fn compress(
+        &mut self,
+        params: &CompressParams,
+        data: &[f32],
+    ) -> Result<Vec<u8>, ClientError> {
+        let body = self.work_body(&encode_compress_tail(params, data));
+        self.expect(REQ_COMPRESS, &body, REP_CONTAINER)
+    }
+
+    /// Decompress a serialized container server-side.
+    pub fn decompress(&mut self, container: &[u8]) -> Result<Vec<f32>, ClientError> {
+        let body = self.work_body(container);
+        let reply = self.expect(REQ_DECOMPRESS, &body, REP_VALUES)?;
+        bytes_to_f32s(&reply)
+            .ok_or_else(|| ClientError::Protocol("values reply with ragged length".to_string()))
+    }
+
+    /// Decode `[start, end)` from a v3 container server-side.
+    pub fn range(
+        &mut self,
+        container: &[u8],
+        start: u64,
+        end: u64,
+    ) -> Result<Vec<f32>, ClientError> {
+        let body = self.work_body(&encode_range_tail(start, end, container));
+        let reply = self.expect(REQ_RANGE, &body, REP_VALUES)?;
+        bytes_to_f32s(&reply)
+            .ok_or_else(|| ClientError::Protocol("values reply with ragged length".to_string()))
+    }
+
+    /// Fetch the server's live status snapshot.
+    pub fn status(&mut self) -> Result<StatusReport, ClientError> {
+        let reply = self.expect(REQ_STATUS, &[], REP_STATUS)?;
+        parse_status(&reply)
+            .ok_or_else(|| ClientError::Protocol("unparseable status reply".to_string()))
+    }
+
+    /// Ask the server to drain gracefully.
+    pub fn drain_server(&mut self) -> Result<(), ClientError> {
+        self.expect(REQ_DRAIN, &[], REP_DRAINING)?;
+        Ok(())
+    }
+}

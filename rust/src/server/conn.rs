@@ -1,0 +1,525 @@
+//! Per-connection machinery: transport abstraction, the framed reader
+//! loop (where every hostile-input defense lives), and the writer
+//! thread that flushes replies.
+//!
+//! Each connection runs a reader thread (this module) and a writer
+//! thread. The reader parses frames, enforces the frame cap, drain
+//! state, and admission *before* buffering a request body, and submits
+//! admitted work to the server's shared worker pool. Replies flow back
+//! through a bounded channel to the writer, so a slow-reading client
+//! backpressures its own workers instead of growing an unbounded reply
+//! queue. Reply accounting is RAII ([`JobGuard`]): every admitted
+//! request produces exactly one reply frame on every path, including a
+//! worker panic.
+
+use std::io::{ErrorKind, Read, Write};
+use std::net::TcpStream;
+use std::sync::atomic::{AtomicBool, AtomicUsize, Ordering};
+use std::sync::mpsc::{Receiver, SyncSender};
+use std::sync::Arc;
+use std::time::{Duration, Instant};
+
+use crate::scratch::Scratch;
+
+use super::admission::Permit;
+use super::drain::WgToken;
+use super::proto::{
+    encode_status, error_frame, frame, parse_frame_header, parse_request_prefix, CONTROL_BODY_MAX,
+    ERR_BUSY, ERR_CANCELLED, ERR_DEADLINE, ERR_DRAINING, ERR_INTERNAL, ERR_MALFORMED,
+    ERR_TOO_LARGE, ERR_UNSUPPORTED, FRAME_HEADER_LEN, REP_DRAINING, REP_STATUS,
+    REQUEST_PREFIX_LEN, REQ_COMPRESS, REQ_DECOMPRESS, REQ_DRAIN, REQ_RANGE, REQ_STATUS,
+};
+use super::{Metrics, Shared};
+
+/// A job handed to the shared worker pool.
+pub(crate) type Job = Box<dyn FnOnce(&mut Scratch) + Send + 'static>;
+
+/// Reader poll granularity: how often a blocked read re-checks drain,
+/// liveness, and stall deadlines.
+const TICK: Duration = Duration::from_millis(100);
+/// Bound on queued-but-unwritten reply frames per connection.
+const REPLY_QUEUE: usize = 8;
+/// Discard granularity for rejected request bodies (framing is
+/// preserved without ever buffering the body whole).
+const DISCARD_CHUNK: usize = 8192;
+
+/// Stream abstraction so TCP and Unix sockets share one code path.
+pub(crate) trait Transport: Read + Write + Send {
+    fn try_clone_t(&self) -> std::io::Result<Box<dyn Transport>>;
+    fn set_read_timeout_t(&self, d: Option<Duration>) -> std::io::Result<()>;
+    fn set_write_timeout_t(&self, d: Option<Duration>) -> std::io::Result<()>;
+    /// Best-effort full shutdown, used to unblock the peer thread.
+    fn shutdown_t(&self);
+}
+
+impl Transport for TcpStream {
+    fn try_clone_t(&self) -> std::io::Result<Box<dyn Transport>> {
+        self.try_clone().map(|s| Box::new(s) as Box<dyn Transport>)
+    }
+    fn set_read_timeout_t(&self, d: Option<Duration>) -> std::io::Result<()> {
+        self.set_read_timeout(d)
+    }
+    fn set_write_timeout_t(&self, d: Option<Duration>) -> std::io::Result<()> {
+        self.set_write_timeout(d)
+    }
+    fn shutdown_t(&self) {
+        let _ = self.shutdown(std::net::Shutdown::Both);
+    }
+}
+
+#[cfg(unix)]
+impl Transport for std::os::unix::net::UnixStream {
+    fn try_clone_t(&self) -> std::io::Result<Box<dyn Transport>> {
+        self.try_clone().map(|s| Box::new(s) as Box<dyn Transport>)
+    }
+    fn set_read_timeout_t(&self, d: Option<Duration>) -> std::io::Result<()> {
+        self.set_read_timeout(d)
+    }
+    fn set_write_timeout_t(&self, d: Option<Duration>) -> std::io::Result<()> {
+        self.set_write_timeout(d)
+    }
+    fn shutdown_t(&self) {
+        let _ = self.shutdown(std::net::Shutdown::Both);
+    }
+}
+
+/// State shared between one connection's reader, writer, and in-flight
+/// jobs.
+pub(crate) struct ConnShared {
+    /// Cleared when the connection dies; in-flight jobs observe it via
+    /// their [`Gate`] and cancel instead of computing replies nobody
+    /// will read.
+    pub alive: AtomicBool,
+    /// Requests admitted on this connection whose reply has not been
+    /// produced yet (drain uses it to tell idle from waiting).
+    pub in_flight: AtomicUsize,
+}
+
+/// Cooperative cancellation checked between chunks of server-side
+/// work: deadline expiry and connection death both stop a request
+/// without poisoning anything else.
+pub(crate) struct Gate {
+    pub deadline: Instant,
+    pub cs: Arc<ConnShared>,
+}
+
+impl Gate {
+    pub fn check(&self) -> Result<(), (u16, String)> {
+        if !self.cs.alive.load(Ordering::Acquire) {
+            return Err((
+                ERR_CANCELLED,
+                "connection closed before the request finished".to_string(),
+            ));
+        }
+        if Instant::now() >= self.deadline {
+            return Err((ERR_DEADLINE, "request deadline expired".to_string()));
+        }
+        Ok(())
+    }
+}
+
+/// RAII reply accounting for one admitted request. Exactly one reply
+/// frame is produced per admitted request on every path: normal
+/// completion, handler error, worker panic, or a job dropped unrun
+/// during shutdown all resolve through here, releasing the admission
+/// permit and the connection's in-flight count exactly once.
+pub(crate) struct JobGuard {
+    cs: Arc<ConnShared>,
+    reply_tx: SyncSender<Vec<u8>>,
+    metrics: Arc<Metrics>,
+    tenant: u32,
+    request_id: u64,
+    bytes_in: u64,
+    _permit: Permit,
+    done: bool,
+}
+
+impl JobGuard {
+    pub fn new(
+        cs: Arc<ConnShared>,
+        reply_tx: SyncSender<Vec<u8>>,
+        metrics: Arc<Metrics>,
+        tenant: u32,
+        request_id: u64,
+        bytes_in: u64,
+        permit: Permit,
+    ) -> JobGuard {
+        JobGuard {
+            cs,
+            reply_tx,
+            metrics,
+            tenant,
+            request_id,
+            bytes_in,
+            _permit: permit,
+            done: false,
+        }
+    }
+
+    pub fn cs(&self) -> &Arc<ConnShared> {
+        &self.cs
+    }
+
+    /// Record success and ship the reply frame.
+    pub fn finish_ok(mut self, reply_kind: u8, body: Vec<u8>) {
+        self.done = true;
+        self.metrics
+            .record_ok(self.tenant, self.bytes_in, body.len() as u64);
+        let _ = self.reply_tx.send(frame(reply_kind, self.request_id, &body));
+    }
+
+    /// Record a typed failure and ship the error reply.
+    pub fn finish_err(mut self, code: u16, msg: &str) {
+        self.done = true;
+        self.metrics.record_failed(self.tenant, self.bytes_in, code);
+        let _ = self.reply_tx.send(error_frame(self.request_id, code, msg));
+    }
+}
+
+impl Drop for JobGuard {
+    fn drop(&mut self) {
+        if !self.done {
+            // Worker panic mid-handler, or a job dropped unrun: the
+            // request still gets its one typed reply.
+            self.metrics
+                .record_failed(self.tenant, self.bytes_in, ERR_INTERNAL);
+            let _ = self
+                .reply_tx
+                .send(error_frame(self.request_id, ERR_INTERNAL, "request aborted"));
+        }
+        self.cs.in_flight.fetch_sub(1, Ordering::AcqRel);
+        // The admission permit releases its bytes here.
+    }
+}
+
+/// Writer thread: flushes reply frames in arrival order. On a write
+/// failure it marks the connection dead and keeps *consuming* (so
+/// senders never block on a corpse), exiting when every sender — the
+/// reader plus all in-flight job guards — has dropped. Joining this
+/// thread therefore proves every produced reply was flushed or the
+/// peer was gone.
+fn writer_loop(mut stream: Box<dyn Transport>, rx: Receiver<Vec<u8>>, cs: Arc<ConnShared>) {
+    let mut failed = false;
+    for f in rx {
+        if !failed && (stream.write_all(&f).is_err() || stream.flush().is_err()) {
+            failed = true;
+            cs.alive.store(false, Ordering::Release);
+            // Unblock a reader parked in a socket read.
+            stream.shutdown_t();
+        }
+    }
+}
+
+/// Read a full frame header. The connection may sit *idle* (zero bytes
+/// of the next frame) indefinitely — unless it is draining with no
+/// in-flight work, in which case it closes. Once the first header byte
+/// arrives, the rest must land within the I/O timeout (slow-loris
+/// cutoff).
+fn read_header(
+    stream: &mut dyn Transport,
+    cs: &ConnShared,
+    shared: &Shared,
+) -> Result<[u8; FRAME_HEADER_LEN], ()> {
+    let mut buf = [0u8; FRAME_HEADER_LEN];
+    let mut got = 0usize;
+    let mut deadline: Option<Instant> = None;
+    loop {
+        match stream.read(&mut buf[got..]) {
+            Ok(0) => return Err(()),
+            Ok(n) => {
+                got += n;
+                if got == FRAME_HEADER_LEN {
+                    return Ok(buf);
+                }
+                deadline.get_or_insert_with(|| Instant::now() + shared.cfg.io_timeout);
+            }
+            Err(e) => match e.kind() {
+                ErrorKind::WouldBlock | ErrorKind::TimedOut => {
+                    if !cs.alive.load(Ordering::Acquire) {
+                        return Err(());
+                    }
+                    match deadline {
+                        Some(d) if Instant::now() >= d => return Err(()), // stalled mid-header
+                        None if shared.drain.is_draining()
+                            && cs.in_flight.load(Ordering::Acquire) == 0 =>
+                        {
+                            return Err(()); // drained and idle: close
+                        }
+                        _ => {}
+                    }
+                }
+                ErrorKind::Interrupted => {}
+                _ => return Err(()),
+            },
+        }
+    }
+}
+
+/// Read exactly `buf.len()` bytes or fail by `deadline` (one deadline
+/// covers a whole frame body, so trickling bytes cannot hold a
+/// connection open past the I/O timeout).
+fn read_exact_deadline(
+    stream: &mut dyn Transport,
+    buf: &mut [u8],
+    deadline: Instant,
+    cs: &ConnShared,
+) -> Result<(), ()> {
+    let mut got = 0usize;
+    while got < buf.len() {
+        match stream.read(&mut buf[got..]) {
+            Ok(0) => return Err(()),
+            Ok(n) => got += n,
+            Err(e) => match e.kind() {
+                ErrorKind::WouldBlock | ErrorKind::TimedOut => {
+                    if !cs.alive.load(Ordering::Acquire) || Instant::now() >= deadline {
+                        return Err(());
+                    }
+                }
+                ErrorKind::Interrupted => {}
+                _ => return Err(()),
+            },
+        }
+    }
+    Ok(())
+}
+
+/// Consume and discard `remaining` body bytes through a small fixed
+/// buffer — rejected requests keep the stream framed without the
+/// server ever holding their payload.
+fn discard(
+    stream: &mut dyn Transport,
+    mut remaining: u64,
+    deadline: Instant,
+    cs: &ConnShared,
+) -> Result<(), ()> {
+    let mut buf = [0u8; DISCARD_CHUNK];
+    while remaining > 0 {
+        let want = remaining.min(DISCARD_CHUNK as u64) as usize;
+        read_exact_deadline(stream, &mut buf[..want], deadline, cs)?;
+        remaining -= want as u64;
+    }
+    Ok(())
+}
+
+/// Serve one accepted connection to completion. Owns the reader loop;
+/// spawns the writer; returns only after the writer has flushed every
+/// reply (the caller-held [`WgToken`] dropping on return is what lets
+/// a drain finish).
+pub(crate) fn serve_conn(
+    shared: Arc<Shared>,
+    stream: Box<dyn Transport>,
+    job_tx: SyncSender<Job>,
+    _token: WgToken,
+) {
+    if stream.set_read_timeout_t(Some(TICK)).is_err() {
+        stream.shutdown_t();
+        return;
+    }
+    let _ = stream.set_write_timeout_t(Some(shared.cfg.io_timeout));
+    let Ok(wstream) = stream.try_clone_t() else {
+        stream.shutdown_t();
+        return;
+    };
+    let cs = Arc::new(ConnShared {
+        alive: AtomicBool::new(true),
+        in_flight: AtomicUsize::new(0),
+    });
+    let (reply_tx, reply_rx) = std::sync::mpsc::sync_channel::<Vec<u8>>(REPLY_QUEUE);
+    let writer = {
+        let wcs = Arc::clone(&cs);
+        std::thread::spawn(move || writer_loop(wstream, reply_rx, wcs))
+    };
+    let mut stream = stream;
+    read_loop(&shared, &mut *stream, &job_tx, &cs, &reply_tx);
+    // The reader is done (clean close, protocol violation, timeout, or
+    // peer death). Cancel whatever is still in flight for this
+    // connection, then wait for the writer to flush: its exit proves
+    // every reply produced by already-finished jobs hit the socket.
+    cs.alive.store(false, Ordering::Release);
+    drop(reply_tx);
+    let _ = writer.join();
+    stream.shutdown_t();
+}
+
+fn read_loop(
+    shared: &Arc<Shared>,
+    stream: &mut dyn Transport,
+    job_tx: &SyncSender<Job>,
+    cs: &Arc<ConnShared>,
+    reply_tx: &SyncSender<Vec<u8>>,
+) {
+    loop {
+        let Ok(hdr) = read_header(stream, cs, shared) else {
+            return;
+        };
+        let Some(fh) = parse_frame_header(&hdr) else {
+            // Framing is lost; one typed reply, then close. The id
+            // cannot be trusted, so it is reported as 0.
+            let _ = reply_tx.send(error_frame(0, ERR_MALFORMED, "bad frame magic"));
+            return;
+        };
+        // One deadline covers this whole frame body.
+        let body_deadline = Instant::now() + shared.cfg.io_timeout;
+        match fh.kind {
+            REQ_STATUS | REQ_DRAIN => {
+                if fh.body_len > CONTROL_BODY_MAX {
+                    let _ = reply_tx.send(error_frame(
+                        fh.request_id,
+                        ERR_MALFORMED,
+                        "control request with an oversized body",
+                    ));
+                    return;
+                }
+                if discard(stream, fh.body_len as u64, body_deadline, cs).is_err() {
+                    return;
+                }
+                let reply = if fh.kind == REQ_STATUS {
+                    frame(
+                        REP_STATUS,
+                        fh.request_id,
+                        &encode_status(&shared.status_report()),
+                    )
+                } else {
+                    shared.drain.begin();
+                    frame(REP_DRAINING, fh.request_id, &[])
+                };
+                if reply_tx.send(reply).is_err() {
+                    return;
+                }
+            }
+            REQ_COMPRESS | REQ_DECOMPRESS | REQ_RANGE => {
+                if fh.body_len as u64 > shared.cfg.max_frame_bytes {
+                    // Reject the declared length without reading (or
+                    // allocating) a single body byte, then close: the
+                    // unread body makes the stream unframeable.
+                    let _ = reply_tx.send(error_frame(
+                        fh.request_id,
+                        ERR_TOO_LARGE,
+                        &format!(
+                            "declared body of {} bytes exceeds the {}-byte frame cap",
+                            fh.body_len, shared.cfg.max_frame_bytes
+                        ),
+                    ));
+                    return;
+                }
+                if (fh.body_len as usize) < REQUEST_PREFIX_LEN {
+                    if discard(stream, fh.body_len as u64, body_deadline, cs).is_err() {
+                        return;
+                    }
+                    if reply_tx
+                        .send(error_frame(
+                            fh.request_id,
+                            ERR_MALFORMED,
+                            "work request shorter than its tenant/deadline prefix",
+                        ))
+                        .is_err()
+                    {
+                        return;
+                    }
+                    continue;
+                }
+                // Read only the prefix before deciding the request's
+                // fate: rejected bodies are discarded, never buffered.
+                let mut prefix = [0u8; REQUEST_PREFIX_LEN];
+                if read_exact_deadline(stream, &mut prefix, body_deadline, cs).is_err() {
+                    return;
+                }
+                let (tenant, deadline_ms) = parse_request_prefix(&prefix).expect("length checked");
+                let rest = fh.body_len as u64 - REQUEST_PREFIX_LEN as u64;
+                if shared.drain.is_draining() {
+                    if discard(stream, rest, body_deadline, cs).is_err() {
+                        return;
+                    }
+                    shared.metrics.record_rejected(tenant);
+                    if reply_tx
+                        .send(error_frame(fh.request_id, ERR_DRAINING, "server is draining"))
+                        .is_err()
+                    {
+                        return;
+                    }
+                    continue;
+                }
+                let Some(permit) = shared.admission.try_admit(fh.body_len as u64) else {
+                    if discard(stream, rest, body_deadline, cs).is_err() {
+                        return;
+                    }
+                    shared.metrics.record_rejected(tenant);
+                    if reply_tx
+                        .send(error_frame(
+                            fh.request_id,
+                            ERR_BUSY,
+                            "in-flight byte budget is full, retry later",
+                        ))
+                        .is_err()
+                    {
+                        return;
+                    }
+                    continue;
+                };
+                let mut body = vec![0u8; rest as usize];
+                if read_exact_deadline(stream, &mut body, body_deadline, cs).is_err() {
+                    return;
+                }
+                let wanted = Duration::from_millis(u64::from(deadline_ms));
+                let allowance = if deadline_ms == 0 {
+                    shared.cfg.default_deadline
+                } else {
+                    wanted.min(shared.cfg.max_deadline)
+                };
+                let deadline = Instant::now() + allowance;
+                cs.in_flight.fetch_add(1, Ordering::AcqRel);
+                let guard = JobGuard::new(
+                    Arc::clone(cs),
+                    reply_tx.clone(),
+                    Arc::clone(&shared.metrics),
+                    tenant,
+                    fh.request_id,
+                    fh.body_len as u64,
+                    permit,
+                );
+                let kind = fh.kind;
+                let sh = Arc::clone(shared);
+                let job: Job = Box::new(move |scratch: &mut Scratch| {
+                    let gate = Gate {
+                        deadline,
+                        cs: Arc::clone(guard.cs()),
+                    };
+                    match super::handle_work(&sh, kind, &body, &gate, scratch) {
+                        Ok((reply_kind, reply_body)) => guard.finish_ok(reply_kind, reply_body),
+                        Err((code, msg)) => guard.finish_err(code, &msg),
+                    }
+                });
+                // A full job queue blocks the reader here: bounded
+                // backpressure, by design. If the pool is gone
+                // (shutdown race) the dropped job's guard already
+                // produced the reply.
+                if job_tx.send(job).is_err() {
+                    return;
+                }
+            }
+            other => {
+                if fh.body_len as u64 > shared.cfg.max_frame_bytes {
+                    let _ = reply_tx.send(error_frame(
+                        fh.request_id,
+                        ERR_TOO_LARGE,
+                        "unknown request type with an oversized body",
+                    ));
+                    return;
+                }
+                if discard(stream, fh.body_len as u64, body_deadline, cs).is_err() {
+                    return;
+                }
+                if reply_tx
+                    .send(error_frame(
+                        fh.request_id,
+                        ERR_UNSUPPORTED,
+                        &format!("unknown request type 0x{other:02x}"),
+                    ))
+                    .is_err()
+                {
+                    return;
+                }
+            }
+        }
+    }
+}

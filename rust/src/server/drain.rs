@@ -1,0 +1,169 @@
+//! Graceful-drain machinery: the drain flag, a connection wait-group,
+//! and (on Unix, daemon mode only) minimal SIGTERM/SIGINT latching.
+//!
+//! Drain is a one-way transition. Once begun: listeners stop
+//! accepting, new work requests answer `ERR_DRAINING`, in-flight
+//! requests run to completion or deadline, and `Server::join` blocks
+//! on the [`WaitGroup`] until every connection has flushed its replies
+//! and unregistered.
+
+use std::sync::atomic::{AtomicBool, Ordering};
+use std::sync::{Arc, Condvar, Mutex};
+use std::time::Duration;
+
+/// The server-wide draining flag.
+#[derive(Default)]
+pub struct DrainState {
+    draining: AtomicBool,
+}
+
+impl DrainState {
+    pub fn new() -> DrainState {
+        DrainState::default()
+    }
+
+    /// Enter draining. Idempotent; returns `true` on the first call.
+    pub fn begin(&self) -> bool {
+        !self.draining.swap(true, Ordering::AcqRel)
+    }
+
+    pub fn is_draining(&self) -> bool {
+        self.draining.load(Ordering::Acquire)
+    }
+}
+
+/// Counts live connections so drain can wait for their replies to
+/// flush. Registration is RAII: a [`WgToken`] dropped on any path
+/// (clean close, I/O error, reader panic) decrements exactly once.
+#[derive(Default)]
+pub struct WaitGroup {
+    count: Mutex<usize>,
+    idle: Condvar,
+}
+
+impl WaitGroup {
+    pub fn new() -> WaitGroup {
+        WaitGroup::default()
+    }
+
+    pub fn register(self: &Arc<Self>) -> WgToken {
+        *self.count.lock().unwrap() += 1;
+        WgToken {
+            wg: Arc::clone(self),
+        }
+    }
+
+    pub fn active(&self) -> usize {
+        *self.count.lock().unwrap()
+    }
+
+    /// Block until every registered token has dropped.
+    pub fn wait_idle(&self) {
+        let mut n = self.count.lock().unwrap();
+        while *n != 0 {
+            // The timeout is belt-and-braces against a lost notify; the
+            // loop re-checks the real count either way.
+            let (guard, _) = self
+                .idle
+                .wait_timeout(n, Duration::from_millis(200))
+                .unwrap();
+            n = guard;
+        }
+    }
+}
+
+/// RAII membership in a [`WaitGroup`].
+pub struct WgToken {
+    wg: Arc<WaitGroup>,
+}
+
+impl Drop for WgToken {
+    fn drop(&mut self) {
+        let mut n = self.wg.count.lock().unwrap();
+        *n -= 1;
+        if *n == 0 {
+            self.wg.idle.notify_all();
+        }
+    }
+}
+
+/// Latched SIGTERM/SIGINT, installed only by `lc serve` daemon mode
+/// (never by tests or library users). Uses the C `signal` interface
+/// directly so no signal-handling crate is needed; the handler only
+/// stores into an atomic, which is async-signal-safe.
+#[cfg(unix)]
+mod sig {
+    use std::sync::atomic::{AtomicBool, Ordering};
+
+    pub static TERM: AtomicBool = AtomicBool::new(false);
+
+    const SIGINT: i32 = 2;
+    const SIGTERM: i32 = 15;
+
+    extern "C" {
+        fn signal(signum: i32, handler: extern "C" fn(i32)) -> usize;
+    }
+
+    extern "C" fn on_term(_sig: i32) {
+        TERM.store(true, Ordering::Release);
+    }
+
+    pub fn install() {
+        unsafe {
+            signal(SIGTERM, on_term);
+            signal(SIGINT, on_term);
+        }
+    }
+}
+
+/// Install the SIGTERM/SIGINT latch (no-op off Unix).
+pub fn install_signal_handlers() {
+    #[cfg(unix)]
+    sig::install();
+}
+
+/// Whether a termination signal has been received since
+/// [`install_signal_handlers`] ran. Always `false` off Unix.
+pub fn termination_requested() -> bool {
+    #[cfg(unix)]
+    {
+        sig::TERM.load(std::sync::atomic::Ordering::Acquire)
+    }
+    #[cfg(not(unix))]
+    {
+        false
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn drain_begins_once() {
+        let d = DrainState::new();
+        assert!(!d.is_draining());
+        assert!(d.begin());
+        assert!(!d.begin(), "second begin reports already-draining");
+        assert!(d.is_draining());
+    }
+
+    #[test]
+    fn wait_group_waits_for_all_tokens() {
+        let wg = Arc::new(WaitGroup::new());
+        let t1 = wg.register();
+        let t2 = wg.register();
+        assert_eq!(wg.active(), 2);
+        let waiter = {
+            let wg = Arc::clone(&wg);
+            std::thread::spawn(move || wg.wait_idle())
+        };
+        drop(t1);
+        assert_eq!(wg.active(), 1);
+        drop(t2);
+        waiter.join().unwrap();
+        assert_eq!(wg.active(), 0);
+        // An empty group is immediately idle.
+        wg.wait_idle();
+    }
+}

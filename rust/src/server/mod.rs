@@ -1,0 +1,713 @@
+//! `lc serve` — a hostile-client-proof compression daemon.
+//!
+//! A long-running server that multiplexes concurrent compress /
+//! decompress / range-query sessions from many connections (TCP and
+//! Unix sockets) onto one shared work-stealing worker pool, built
+//! entirely on `std` (no async runtime, no protocol crates). The wire
+//! protocol lives in [`proto`] (full spec in its module docs); a
+//! minimal blocking client in [`client`].
+//!
+//! Robustness is enforced by construction rather than by review:
+//!
+//! * **Admission control** ([`admission`]) — a compare-and-swap byte
+//!   budget bounds total in-flight request payload; excess work is
+//!   rejected with a typed `Busy` wire error instead of queued.
+//! * **Backpressure** — the job queue and each connection's reply
+//!   queue are bounded channels; a slow client throttles itself, not
+//!   the server.
+//! * **Timeouts** — per-connection I/O deadlines drop slow-loris
+//!   peers; per-request deadlines (checked cooperatively between
+//!   chunks) bound how long any request can hold a worker.
+//! * **Fault isolation** — one request's malformed container, CRC
+//!   mismatch, or even a worker panic produces one typed error reply
+//!   for that request id and poisons nothing else.
+//! * **Graceful drain** ([`drain`]) — SIGTERM or a `Drain` request
+//!   stops accepting, bounces new work with `Draining`, finishes (or
+//!   deadline-cancels) in-flight work, flushes every reply, and lets
+//!   [`Server::join`] return.
+//!
+//! Per-tenant counters (requests, bytes in/out, rejections, timeouts,
+//! errors — the wire-facing analogue of
+//! [`crate::coordinator::RunStats`]) are queryable live through a
+//! `Status` request or `lc serve --status`.
+
+pub mod admission;
+pub mod client;
+mod conn;
+pub mod drain;
+pub mod proto;
+
+pub use client::{Client, ClientError};
+pub use proto::{CompressParams, StatusReport};
+
+use std::collections::BTreeMap;
+use std::net::{SocketAddr, TcpListener};
+use std::path::PathBuf;
+use std::sync::mpsc::{Receiver, SyncSender};
+use std::sync::{Arc, Mutex};
+use std::thread::JoinHandle;
+use std::time::Duration;
+
+use crate::archive::Reader;
+use crate::container::{Container, Header};
+use crate::coordinator::engine::{
+    decode_chunk_record_into, encode_chunk_record, quantizer_from_header, EngineConfig,
+};
+use crate::error::LcError;
+use crate::quantizer::QuantizerConfig;
+use crate::scratch::Scratch;
+use crate::types::CHUNK_ELEMS;
+
+use admission::Admission;
+use conn::{Gate, Job};
+use drain::{DrainState, WaitGroup};
+use proto::{
+    archive_wire_code, bytes_to_f32s, f32s_to_bytes, parse_compress_tail, parse_range_tail,
+    wire_code, ERR_BAD_REQUEST, ERR_CONTAINER, ERR_MALFORMED, ERR_TOO_LARGE, ERR_UNSUPPORTED,
+    REP_CONTAINER, REP_VALUES, REQ_COMPRESS, REQ_DECOMPRESS, REQ_RANGE,
+};
+
+/// Server configuration. The defaults are production-shaped; tests
+/// shrink the budgets and timeouts to provoke the failure paths fast.
+#[derive(Debug, Clone)]
+pub struct ServeConfig {
+    /// TCP listen address (e.g. `127.0.0.1:7440`; port 0 = ephemeral,
+    /// query the bound port with [`Server::tcp_addr`]).
+    pub tcp: Option<String>,
+    /// Unix-socket listen path (Unix only; a stale file is replaced).
+    pub uds: Option<PathBuf>,
+    /// Worker threads (0 = available parallelism).
+    pub workers: usize,
+    /// Bound on queued-but-unstarted jobs; a full queue blocks the
+    /// submitting connection's reader (backpressure, not growth).
+    pub queue_depth: usize,
+    /// Admission budget: total admitted request-body bytes in flight.
+    pub budget_bytes: u64,
+    /// Largest acceptable request frame body; bigger declared lengths
+    /// are bounced without reading a byte.
+    pub max_frame_bytes: u64,
+    /// Largest reply body the server will materialize (a decompress
+    /// reply can legitimately dwarf its request).
+    pub max_reply_bytes: u64,
+    /// Per-connection I/O deadline: bounds mid-frame stalls, total
+    /// body transfer time, and a reply write.
+    pub io_timeout: Duration,
+    /// Deadline applied to requests that ask for none.
+    pub default_deadline: Duration,
+    /// Hard ceiling on any request's deadline.
+    pub max_deadline: Duration,
+    /// Values per compression chunk (requests are encoded server-side
+    /// with this chunk size).
+    pub chunk_size: usize,
+    /// Latch SIGTERM/SIGINT into a drain (daemon mode only; tests and
+    /// embedders leave this off).
+    pub handle_signals: bool,
+}
+
+impl Default for ServeConfig {
+    fn default() -> ServeConfig {
+        ServeConfig {
+            tcp: Some("127.0.0.1:0".to_string()),
+            uds: None,
+            workers: 0,
+            queue_depth: 32,
+            budget_bytes: 256 << 20,
+            max_frame_bytes: 64 << 20,
+            max_reply_bytes: 1 << 30,
+            io_timeout: Duration::from_secs(30),
+            default_deadline: Duration::from_secs(60),
+            max_deadline: Duration::from_secs(300),
+            chunk_size: CHUNK_ELEMS,
+            handle_signals: false,
+        }
+    }
+}
+
+impl ServeConfig {
+    fn validate(&self) -> Result<(), LcError> {
+        if self.tcp.is_none() && self.uds.is_none() {
+            return Err(LcError::Config(
+                "serve needs at least one listener (tcp or uds)".to_string(),
+            ));
+        }
+        if cfg!(not(unix)) && self.uds.is_some() {
+            return Err(LcError::Config(
+                "unix-socket listeners need a unix platform".to_string(),
+            ));
+        }
+        if self.queue_depth == 0 {
+            return Err(LcError::Config("queue_depth must be at least 1".to_string()));
+        }
+        if self.chunk_size == 0 {
+            return Err(LcError::Config("chunk_size must be positive".to_string()));
+        }
+        if self.max_frame_bytes < 4096 {
+            return Err(LcError::Config(
+                "max_frame_bytes below 4096 cannot carry real requests".to_string(),
+            ));
+        }
+        if self.max_frame_bytes > self.budget_bytes {
+            return Err(LcError::Config(format!(
+                "max_frame_bytes ({}) above budget_bytes ({}) admits requests that can never run",
+                self.max_frame_bytes, self.budget_bytes
+            )));
+        }
+        if self.io_timeout.is_zero() || self.default_deadline.is_zero() || self.max_deadline.is_zero()
+        {
+            return Err(LcError::Config(
+                "io_timeout, default_deadline, and max_deadline must be positive".to_string(),
+            ));
+        }
+        Ok(())
+    }
+}
+
+/// Per-tenant request counters, exposed through `Status` replies.
+#[derive(Debug, Clone, Copy, Default, PartialEq, Eq)]
+pub struct TenantCounters {
+    /// Admitted work requests that produced a reply (ok or error).
+    pub requests: u64,
+    /// Request-body bytes of those requests.
+    pub bytes_in: u64,
+    /// Reply-body bytes of successful requests.
+    pub bytes_out: u64,
+    /// Requests bounced at admission (`Busy`) or during drain.
+    pub rejected: u64,
+    /// Requests that hit their deadline.
+    pub timeouts: u64,
+    /// Requests that failed for any other reason.
+    pub errors: u64,
+}
+
+/// Server-wide per-tenant accounting. One coarse lock: every record is
+/// a handful of integer bumps, orders of magnitude cheaper than the
+/// codec work bracketing it.
+#[derive(Default)]
+pub struct Metrics {
+    tenants: Mutex<BTreeMap<u32, TenantCounters>>,
+}
+
+impl Metrics {
+    fn with(&self, tenant: u32, f: impl FnOnce(&mut TenantCounters)) {
+        f(self.tenants.lock().unwrap().entry(tenant).or_default())
+    }
+
+    pub(crate) fn record_ok(&self, tenant: u32, bytes_in: u64, bytes_out: u64) {
+        self.with(tenant, |c| {
+            c.requests += 1;
+            c.bytes_in += bytes_in;
+            c.bytes_out += bytes_out;
+        });
+    }
+
+    pub(crate) fn record_rejected(&self, tenant: u32) {
+        self.with(tenant, |c| c.rejected += 1);
+    }
+
+    pub(crate) fn record_failed(&self, tenant: u32, bytes_in: u64, code: u16) {
+        self.with(tenant, |c| {
+            c.requests += 1;
+            c.bytes_in += bytes_in;
+            if code == proto::ERR_DEADLINE {
+                c.timeouts += 1;
+            } else {
+                c.errors += 1;
+            }
+        });
+    }
+
+    /// Counters per tenant, ascending by tenant id.
+    pub fn snapshot(&self) -> Vec<(u32, TenantCounters)> {
+        self.tenants
+            .lock()
+            .unwrap()
+            .iter()
+            .map(|(t, c)| (*t, *c))
+            .collect()
+    }
+}
+
+/// Immutable state shared by every connection and worker.
+pub(crate) struct Shared {
+    pub cfg: ServeConfig,
+    pub admission: Arc<Admission>,
+    pub drain: DrainState,
+    pub metrics: Arc<Metrics>,
+}
+
+impl Shared {
+    pub(crate) fn status_report(&self) -> StatusReport {
+        StatusReport {
+            draining: self.drain.is_draining(),
+            in_flight_bytes: self.admission.in_flight(),
+            budget_bytes: self.admission.budget(),
+            tenants: self.metrics.snapshot(),
+        }
+    }
+}
+
+/// A running `lc serve` instance.
+pub struct Server {
+    shared: Arc<Shared>,
+    conns: Arc<WaitGroup>,
+    acceptors: Vec<JoinHandle<()>>,
+    workers: Vec<JoinHandle<()>>,
+    job_tx: Option<SyncSender<Job>>,
+    tcp_addr: Option<SocketAddr>,
+    uds_path: Option<PathBuf>,
+}
+
+impl Server {
+    /// Bind the listeners, spawn the worker pool, and start accepting.
+    pub fn start(cfg: ServeConfig) -> Result<Server, LcError> {
+        cfg.validate()?;
+        if cfg.handle_signals {
+            drain::install_signal_handlers();
+        }
+        let shared = Arc::new(Shared {
+            admission: Arc::new(Admission::new(cfg.budget_bytes)),
+            drain: DrainState::new(),
+            metrics: Arc::new(Metrics::default()),
+            cfg,
+        });
+        let (job_tx, job_rx) = std::sync::mpsc::sync_channel::<Job>(shared.cfg.queue_depth);
+        let job_rx = Arc::new(Mutex::new(job_rx));
+        let n_workers = if shared.cfg.workers > 0 {
+            shared.cfg.workers
+        } else {
+            std::thread::available_parallelism()
+                .map(|n| n.get())
+                .unwrap_or(1)
+        };
+        let workers = (0..n_workers)
+            .map(|_| {
+                let rx = Arc::clone(&job_rx);
+                std::thread::spawn(move || worker_loop(rx))
+            })
+            .collect();
+        let conns = Arc::new(WaitGroup::new());
+        let mut acceptors = Vec::new();
+        let mut tcp_addr = None;
+        if let Some(addr) = &shared.cfg.tcp {
+            let listener = TcpListener::bind(addr)
+                .map_err(|e| LcError::Io(format!("bind tcp {addr}: {e}")))?;
+            listener
+                .set_nonblocking(true)
+                .map_err(|e| LcError::Io(e.to_string()))?;
+            tcp_addr = Some(
+                listener
+                    .local_addr()
+                    .map_err(|e| LcError::Io(e.to_string()))?,
+            );
+            let sh = Arc::clone(&shared);
+            let cg = Arc::clone(&conns);
+            let tx = job_tx.clone();
+            acceptors.push(std::thread::spawn(move || accept_loop_tcp(listener, sh, cg, tx)));
+        }
+        let mut uds_path = None;
+        #[cfg(unix)]
+        if let Some(path) = shared.cfg.uds.clone() {
+            let _ = std::fs::remove_file(&path);
+            let listener = std::os::unix::net::UnixListener::bind(&path)
+                .map_err(|e| LcError::Io(format!("bind uds {}: {e}", path.display())))?;
+            listener
+                .set_nonblocking(true)
+                .map_err(|e| LcError::Io(e.to_string()))?;
+            uds_path = Some(path);
+            let sh = Arc::clone(&shared);
+            let cg = Arc::clone(&conns);
+            let tx = job_tx.clone();
+            acceptors.push(std::thread::spawn(move || accept_loop_uds(listener, sh, cg, tx)));
+        }
+        Ok(Server {
+            shared,
+            conns,
+            acceptors,
+            workers,
+            job_tx: Some(job_tx),
+            tcp_addr,
+            uds_path,
+        })
+    }
+
+    /// The bound TCP address (useful with port 0).
+    pub fn tcp_addr(&self) -> Option<SocketAddr> {
+        self.tcp_addr
+    }
+
+    /// Begin a graceful drain (idempotent).
+    pub fn drain(&self) {
+        self.shared.drain.begin();
+    }
+
+    pub fn is_draining(&self) -> bool {
+        self.shared.drain.is_draining()
+    }
+
+    /// A live status snapshot (the same data a `Status` request gets).
+    pub fn status(&self) -> StatusReport {
+        self.shared.status_report()
+    }
+
+    /// Block until the server has fully drained, then tear down.
+    ///
+    /// Waits for a drain to be *requested* (via [`Server::drain`], a
+    /// wire `Drain` request, or — with `handle_signals` —
+    /// SIGTERM/SIGINT), then for every connection to flush its last
+    /// reply, then joins the worker pool and removes the Unix socket.
+    /// In-flight replies are never dropped: connections unregister
+    /// only after their writer thread has exited.
+    pub fn join(mut self) {
+        for a in self.acceptors.drain(..) {
+            let _ = a.join();
+        }
+        self.conns.wait_idle();
+        // Closing the job channel is what stops the workers; any job
+        // still queued here belonged to a connection that already
+        // died (its guard answers with a typed error on drop).
+        drop(self.job_tx.take());
+        for w in self.workers.drain(..) {
+            let _ = w.join();
+        }
+        if let Some(p) = self.uds_path.take() {
+            let _ = std::fs::remove_file(p);
+        }
+    }
+}
+
+/// Shared-receiver work stealing: each worker owns one [`Scratch`]
+/// arena for its lifetime and pulls jobs until the channel closes. A
+/// panicking job is contained by `catch_unwind` (its [`conn::JobGuard`]
+/// already produced the typed error reply during unwind) and the
+/// worker keeps serving.
+fn worker_loop(rx: Arc<Mutex<Receiver<Job>>>) {
+    let mut scratch = Scratch::new();
+    loop {
+        let job = rx.lock().unwrap().recv();
+        let Ok(job) = job else { break };
+        let _ = std::panic::catch_unwind(std::panic::AssertUnwindSafe(|| job(&mut scratch)));
+    }
+}
+
+const ACCEPT_POLL: Duration = Duration::from_millis(50);
+
+fn accept_loop_tcp(
+    listener: TcpListener,
+    shared: Arc<Shared>,
+    conns: Arc<WaitGroup>,
+    job_tx: SyncSender<Job>,
+) {
+    loop {
+        if shared.cfg.handle_signals && drain::termination_requested() {
+            shared.drain.begin();
+        }
+        if shared.drain.is_draining() {
+            return;
+        }
+        match listener.accept() {
+            Ok((stream, _peer)) => {
+                // The listener is nonblocking; accepted sockets must
+                // not inherit that (the conn reader uses timeouts).
+                if stream.set_nonblocking(false).is_err() {
+                    continue;
+                }
+                let token = conns.register();
+                let sh = Arc::clone(&shared);
+                let tx = job_tx.clone();
+                std::thread::spawn(move || conn::serve_conn(sh, Box::new(stream), tx, token));
+            }
+            Err(e) if matches!(e.kind(), std::io::ErrorKind::WouldBlock | std::io::ErrorKind::TimedOut) => {
+                std::thread::sleep(ACCEPT_POLL)
+            }
+            Err(e) if e.kind() == std::io::ErrorKind::Interrupted => {}
+            Err(_) => std::thread::sleep(ACCEPT_POLL),
+        }
+    }
+}
+
+#[cfg(unix)]
+fn accept_loop_uds(
+    listener: std::os::unix::net::UnixListener,
+    shared: Arc<Shared>,
+    conns: Arc<WaitGroup>,
+    job_tx: SyncSender<Job>,
+) {
+    loop {
+        if shared.cfg.handle_signals && drain::termination_requested() {
+            shared.drain.begin();
+        }
+        if shared.drain.is_draining() {
+            return;
+        }
+        match listener.accept() {
+            Ok((stream, _peer)) => {
+                if stream.set_nonblocking(false).is_err() {
+                    continue;
+                }
+                let token = conns.register();
+                let sh = Arc::clone(&shared);
+                let tx = job_tx.clone();
+                std::thread::spawn(move || conn::serve_conn(sh, Box::new(stream), tx, token));
+            }
+            Err(e) if matches!(e.kind(), std::io::ErrorKind::WouldBlock | std::io::ErrorKind::TimedOut) => {
+                std::thread::sleep(ACCEPT_POLL)
+            }
+            Err(e) if e.kind() == std::io::ErrorKind::Interrupted => {}
+            Err(_) => std::thread::sleep(ACCEPT_POLL),
+        }
+    }
+}
+
+/// Dispatch one admitted work request on a pool worker. The body is
+/// the request frame minus its tenant/deadline prefix. Errors are
+/// `(wire code, detail)` pairs — the caller's [`conn::JobGuard`] turns
+/// them into typed error replies.
+pub(crate) fn handle_work(
+    shared: &Arc<Shared>,
+    kind: u8,
+    body: &[u8],
+    gate: &Gate,
+    scratch: &mut Scratch,
+) -> Result<(u8, Vec<u8>), (u16, String)> {
+    gate.check()?;
+    match kind {
+        REQ_COMPRESS => handle_compress(shared, body, gate, scratch),
+        REQ_DECOMPRESS => handle_decompress(shared, body, gate, scratch),
+        REQ_RANGE => handle_range(shared, body, gate),
+        other => Err((
+            ERR_UNSUPPORTED,
+            format!("unknown work request type 0x{other:02x}"),
+        )),
+    }
+}
+
+/// Compress raw values into a container, serially chunk-by-chunk on
+/// the calling worker (request-level parallelism comes from the pool;
+/// chunk-level parallelism inside one request would let a single
+/// client monopolize it), checking the gate between chunks.
+fn handle_compress(
+    shared: &Arc<Shared>,
+    body: &[u8],
+    gate: &Gate,
+    scratch: &mut Scratch,
+) -> Result<(u8, Vec<u8>), (u16, String)> {
+    let (params, raw) = parse_compress_tail(body).map_err(|d| (ERR_MALFORMED, d))?;
+    params.bound.validate().map_err(|d| (ERR_BAD_REQUEST, d))?;
+    let data = bytes_to_f32s(raw).expect("alignment checked by parse_compress_tail");
+    let mut cfg = EngineConfig::native(params.bound);
+    cfg.variant = params.variant;
+    cfg.protection = params.protection;
+    cfg.container_version = params.version;
+    cfg.chunk_size = shared.cfg.chunk_size;
+    cfg.workers = 1;
+    let qc = QuantizerConfig::resolve(params.bound, params.variant, params.protection, &data);
+    let mut records = Vec::with_capacity(data.len().div_ceil(cfg.chunk_size));
+    for chunk in data.chunks(cfg.chunk_size) {
+        gate.check()?;
+        let (rec, _outliers) = encode_chunk_record(&cfg, &qc, chunk, scratch)
+            .map_err(|e| (wire_code(&e), String::from(e)))?;
+        records.push(rec);
+    }
+    let container = Container {
+        header: Header {
+            version: params.version,
+            bound: params.bound,
+            effective_epsilon: qc.effective_epsilon(),
+            variant: params.variant,
+            protection: params.protection,
+            n_values: data.len() as u64,
+            chunk_size: cfg.chunk_size as u32,
+            stages: cfg.pipeline.stages().to_vec(),
+            n_chunks: records.len() as u32,
+        },
+        chunks: records,
+    };
+    let bytes = container.to_bytes();
+    if bytes.len() as u64 > shared.cfg.max_reply_bytes {
+        return Err((
+            ERR_TOO_LARGE,
+            format!(
+                "compressed container of {} bytes exceeds the {}-byte reply cap",
+                bytes.len(),
+                shared.cfg.max_reply_bytes
+            ),
+        ));
+    }
+    Ok((REP_CONTAINER, bytes))
+}
+
+/// Decompress a container back to raw values, serially chunk-by-chunk,
+/// checking the gate between chunks. All size claims are validated
+/// *before* the output allocation (chunk CRCs do not cover the
+/// header's `n_values`, so it is hostile input until cross-checked).
+fn handle_decompress(
+    shared: &Arc<Shared>,
+    body: &[u8],
+    gate: &Gate,
+    scratch: &mut Scratch,
+) -> Result<(u8, Vec<u8>), (u16, String)> {
+    let container =
+        Container::from_bytes(body).map_err(|e| (wire_code(&e), String::from(e)))?;
+    let h = &container.header;
+    if h.chunk_size == 0 {
+        return Err((ERR_CONTAINER, "container has zero chunk size".to_string()));
+    }
+    match h.n_values.checked_mul(4) {
+        Some(b) if b <= shared.cfg.max_reply_bytes => {}
+        _ => {
+            return Err((
+                ERR_TOO_LARGE,
+                format!(
+                    "reconstruction of {} values exceeds the {}-byte reply cap",
+                    h.n_values, shared.cfg.max_reply_bytes
+                ),
+            ))
+        }
+    }
+    if h.n_values.div_ceil(h.chunk_size as u64) != container.chunks.len() as u64 {
+        return Err((
+            ERR_CONTAINER,
+            format!(
+                "container layout mismatch: {} chunks for {} values at chunk size {}",
+                container.chunks.len(),
+                h.n_values,
+                h.chunk_size
+            ),
+        ));
+    }
+    let pipeline = container.pipeline().map_err(|d| (ERR_CONTAINER, d))?;
+    let qc = quantizer_from_header(h);
+    let mut cfg = EngineConfig::native(h.bound);
+    cfg.variant = h.variant;
+    cfg.protection = h.protection;
+    cfg.container_version = h.version;
+    cfg.chunk_size = h.chunk_size as usize;
+    cfg.workers = 1;
+    let mut out = vec![0f32; h.n_values as usize];
+    for (i, slot) in out.chunks_mut(h.chunk_size as usize).enumerate() {
+        gate.check()?;
+        decode_chunk_record_into(&cfg, &qc, &pipeline, &container.chunks[i], scratch, slot)
+            .map_err(|e| (wire_code(&e), String::from(e)))?;
+    }
+    Ok((REP_VALUES, f32s_to_bytes(&out)))
+}
+
+/// Random-access range decode over a v3 container, one indexed chunk
+/// at a time with the gate checked between chunks. The
+/// [`ArchiveError`](crate::archive::ArchiveError) taxonomy maps to
+/// stable wire codes 20-29.
+fn handle_range(
+    shared: &Arc<Shared>,
+    body: &[u8],
+    gate: &Gate,
+) -> Result<(u8, Vec<u8>), (u16, String)> {
+    let (start, end, cbytes) = parse_range_tail(body)
+        .ok_or((ERR_MALFORMED, "range body too short for its bounds".to_string()))?;
+    if start > end {
+        return Err((ERR_BAD_REQUEST, format!("reversed range {start}..{end}")));
+    }
+    let span = end - start;
+    match span.checked_mul(4) {
+        Some(b) if b <= shared.cfg.max_reply_bytes => {}
+        _ => {
+            return Err((
+                ERR_TOO_LARGE,
+                format!(
+                    "range of {span} values exceeds the {}-byte reply cap",
+                    shared.cfg.max_reply_bytes
+                ),
+            ))
+        }
+    }
+    let mut reader = Reader::from_bytes(cbytes.to_vec())
+        .map_err(|e| (archive_wire_code(&e), e.to_string()))?;
+    reader.set_workers(1);
+    let chunk_elems = u64::from(reader.header().chunk_size);
+    let mut out = Vec::with_capacity(span as usize);
+    let mut pos = start;
+    // Validate the bounds even when the loop below would not run.
+    if span == 0 && start > reader.n_values() {
+        let n_values = reader.n_values();
+        let e = crate::archive::ArchiveError::BadRange { start, end, n_values };
+        return Err((archive_wire_code(&e), e.to_string()));
+    }
+    while pos < end {
+        gate.check()?;
+        let stop = ((pos / chunk_elems + 1) * chunk_elems).min(end);
+        let part = reader
+            .decode_range(pos..stop)
+            .map_err(|e| (archive_wire_code(&e), e.to_string()))?;
+        out.extend_from_slice(&part);
+        pos = stop;
+    }
+    Ok((REP_VALUES, f32s_to_bytes(&out)))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn config_validation_rejects_degenerate_setups() {
+        assert!(ServeConfig::default().validate().is_ok());
+        let no_listener = ServeConfig {
+            tcp: None,
+            uds: None,
+            ..ServeConfig::default()
+        };
+        assert!(no_listener.validate().is_err());
+        let zero_queue = ServeConfig {
+            queue_depth: 0,
+            ..ServeConfig::default()
+        };
+        assert!(zero_queue.validate().is_err());
+        let frame_over_budget = ServeConfig {
+            budget_bytes: 1 << 20,
+            max_frame_bytes: 2 << 20,
+            ..ServeConfig::default()
+        };
+        assert!(frame_over_budget.validate().is_err());
+        let tiny_frame = ServeConfig {
+            max_frame_bytes: 16,
+            ..ServeConfig::default()
+        };
+        assert!(tiny_frame.validate().is_err());
+    }
+
+    #[test]
+    fn metrics_classify_outcomes_per_tenant() {
+        let m = Metrics::default();
+        m.record_ok(3, 100, 40);
+        m.record_failed(3, 50, proto::ERR_DEADLINE);
+        m.record_failed(3, 10, proto::ERR_CHUNK_CRC);
+        m.record_rejected(3);
+        m.record_ok(9, 1, 1);
+        let snap = m.snapshot();
+        assert_eq!(snap.len(), 2);
+        let (tenant, c) = snap[0];
+        assert_eq!(tenant, 3);
+        assert_eq!(c.requests, 3);
+        assert_eq!(c.bytes_in, 160);
+        assert_eq!(c.bytes_out, 40);
+        assert_eq!(c.rejected, 1);
+        assert_eq!(c.timeouts, 1);
+        assert_eq!(c.errors, 1);
+        assert_eq!(snap[1].0, 9);
+    }
+
+    #[test]
+    fn server_starts_drains_and_joins_with_no_clients() {
+        let srv = Server::start(ServeConfig {
+            workers: 2,
+            ..ServeConfig::default()
+        })
+        .unwrap();
+        assert!(srv.tcp_addr().is_some());
+        assert!(!srv.is_draining());
+        let report = srv.status();
+        assert_eq!(report.in_flight_bytes, 0);
+        srv.drain();
+        assert!(srv.is_draining());
+        srv.join();
+    }
+}

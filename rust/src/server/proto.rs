@@ -1,0 +1,645 @@
+//! The `lc serve` wire protocol — frame layout, request/reply types,
+//! error codes, deadline and drain semantics.
+//!
+//! The protocol is deliberately minimal: length-prefixed binary frames
+//! over a byte stream (TCP or a Unix socket), little-endian integers
+//! throughout, no heavy serialization dependency. Everything a server
+//! must trust is validated before it is buffered; everything a client
+//! must trust is redundantly framed (per-frame magic + echoed request
+//! id).
+//!
+//! # Frame layout
+//!
+//! Every message — request or reply — is one frame:
+//!
+//! ```text
+//! [magic "LCS1" (4)] [type u8] [request_id u64] [body_len u32] [body ...]
+//! ```
+//!
+//! The fixed header is [`FRAME_HEADER_LEN`] = 17 bytes. The per-frame
+//! magic exists so a desynchronized or hostile peer is detected at the
+//! very next frame boundary instead of being misparsed. `request_id`
+//! is chosen by the client and echoed verbatim in the reply; replies
+//! to one connection's requests may arrive **out of order** (requests
+//! are multiplexed onto a shared worker pool), so clients that
+//! pipeline must match on the id. `body_len` counts only the body
+//! bytes that follow.
+//!
+//! # Request types (client -> server)
+//!
+//! | type | name       | body                                          |
+//! |------|------------|-----------------------------------------------|
+//! | 0x01 | Compress   | prefix ++ params ++ raw f32 little-endian data|
+//! | 0x02 | Decompress | prefix ++ serialized `.lcz` container         |
+//! | 0x03 | Range      | prefix ++ start u64 ++ end u64 ++ container   |
+//! | 0x04 | Status     | empty                                         |
+//! | 0x05 | Drain      | empty                                         |
+//!
+//! Work requests (0x01-0x03) share an 8-byte **prefix**:
+//! `[tenant u32][deadline_ms u32]`. `tenant` keys the server's
+//! per-tenant counters; `deadline_ms` is the request's deadline budget
+//! (0 = the server's default), measured from the moment the request
+//! body has been fully read and admitted. Compress **params** are
+//! `[eb_kind u8][variant u8][protection u8][container_version u8]
+//! [epsilon f32]` with the container header's tag encodings
+//! (eb_kind 0 = ABS, 1 = REL, 2 = NOA; variant 0 = approx,
+//! 1 = native; protection 0 = protected, 1 = unprotected; version
+//! 1 | 2 | 3). Range bounds are element indices, end-exclusive, over a
+//! **v3** container (v1/v2 answer with `ERR_NOT_INDEXED`).
+//!
+//! # Reply types (server -> client)
+//!
+//! | type | name      | body                                           |
+//! |------|-----------|------------------------------------------------|
+//! | 0x81 | Container | serialized `.lcz` container                    |
+//! | 0x82 | Values    | raw f32 little-endian data                     |
+//! | 0x83 | Error     | `[code u16][msg_len u16][msg utf-8]`           |
+//! | 0x84 | Status    | see below                                      |
+//! | 0x85 | Draining  | empty (acknowledges a Drain request)           |
+//!
+//! The Status body is
+//! `[draining u8][in_flight_bytes u64][budget_bytes u64][n_tenants u32]`
+//! followed by `n_tenants` 52-byte entries, ascending by tenant id:
+//! `[tenant u32][requests u64][bytes_in u64][bytes_out u64]
+//! [rejected u64][timeouts u64][errors u64]`.
+//!
+//! # Error codes
+//!
+//! Codes are stable: clients may dispatch on them. 1-9 are protocol /
+//! lifecycle failures, 10-15 map [`LcError`] classes, 20-29 preserve
+//! the [`ArchiveError`] taxonomy for range queries.
+//!
+//! | code | name                  | meaning                               |
+//! |------|-----------------------|---------------------------------------|
+//! | 1    | `ERR_MALFORMED`       | unparseable frame or request body     |
+//! | 2    | `ERR_TOO_LARGE`       | declared body or reply exceeds the cap|
+//! | 3    | `ERR_BUSY`            | admission reject: in-flight-bytes budget is full |
+//! | 4    | `ERR_DEADLINE`        | request deadline expired              |
+//! | 5    | `ERR_DRAINING`        | server is draining; no new work       |
+//! | 6    | `ERR_BAD_REQUEST`     | well-formed but invalid parameters    |
+//! | 7    | `ERR_INTERNAL`        | unexpected server-side failure        |
+//! | 8    | `ERR_UNSUPPORTED`     | unknown request type                  |
+//! | 9    | `ERR_CANCELLED`       | connection died before the work ran   |
+//! | 10   | `ERR_CONFIG`          | [`LcError::Config`]                   |
+//! | 11   | `ERR_IO`              | [`LcError::Io`]                       |
+//! | 12   | `ERR_CONTAINER`       | [`LcError::Container`]                |
+//! | 13   | `ERR_CODEC`           | [`LcError::Codec`]                    |
+//! | 14   | `ERR_QUANTIZER`       | [`LcError::Quantizer`]                |
+//! | 15   | `ERR_RUNTIME`         | [`LcError::Runtime`]                  |
+//! | 20   | `ERR_NOT_INDEXED`     | [`ArchiveError::NotIndexed`]          |
+//! | 21   | `ERR_TRUNCATED`       | [`ArchiveError::Truncated`]           |
+//! | 22   | `ERR_BAD_TRAILER`     | [`ArchiveError::BadTrailer`]          |
+//! | 23   | `ERR_BAD_INDEX`       | [`ArchiveError::BadIndex`]            |
+//! | 24   | `ERR_BAD_RANGE`       | [`ArchiveError::BadRange`]            |
+//! | 25   | `ERR_CHUNK_MISMATCH`  | [`ArchiveError::ChunkMismatch`]       |
+//! | 26   | `ERR_CHUNK_CRC`       | [`ArchiveError::ChunkCrc`]            |
+//! | 27   | `ERR_ARCHIVE_IO`      | [`ArchiveError::Io`]                  |
+//! | 28   | `ERR_ARCHIVE_CONTAINER` | [`ArchiveError::Container`]         |
+//! | 29   | `ERR_ARCHIVE_DECODE`  | [`ArchiveError::Decode`]              |
+//!
+//! # Robustness rules (what the server does to hostile frames)
+//!
+//! * **Bad magic / unparseable header** -> one `Error` reply
+//!   (`ERR_MALFORMED`, request id 0 — the id can't be trusted) and the
+//!   connection is closed: framing is lost, nothing after it can be
+//!   parsed safely.
+//! * **Declared `body_len` over the max-frame cap** -> `ERR_TOO_LARGE`
+//!   and close, *without reading or buffering a single body byte* —
+//!   absurd-length frames cost the server nothing.
+//! * **Admission reject** -> the body is consumed from the socket in
+//!   small increments (framing preserved, never buffered whole), the
+//!   reply is `ERR_BUSY`, and the connection stays usable: the client
+//!   may retry. The in-flight-bytes gauge counts admitted request
+//!   bodies and is bounded by construction (compare-and-swap against
+//!   the budget).
+//! * **Slow-loris** -> a frame that stalls mid-read longer than the
+//!   per-connection I/O timeout closes the connection. An *idle*
+//!   connection (no partial frame) may stay open indefinitely.
+//! * **Unknown request type** -> the body is consumed (subject to the
+//!   same cap), the reply is `ERR_UNSUPPORTED`, and the connection
+//!   stays open — framing was never in doubt.
+//! * **Fault isolation** -> any decode/validation failure inside one
+//!   request produces one typed `Error` reply for that request id and
+//!   poisons nothing else: not the connection, not other requests, not
+//!   the worker pool.
+//!
+//! # Deadline semantics
+//!
+//! The effective deadline is `min(requested, server max)`, or the
+//! server default when the request says 0, measured from admission.
+//! The deadline is checked before the work starts and cooperatively
+//! between chunks; an expired request answers `ERR_DEADLINE` and its
+//! partial work is discarded. A request can therefore never pin a
+//! worker longer than one chunk past its deadline.
+//!
+//! # Drain semantics
+//!
+//! A `Drain` request (or SIGTERM/SIGINT in daemon mode) moves the
+//! server into draining: listeners stop accepting, new work requests
+//! answer `ERR_DRAINING`, in-flight requests run to completion or to
+//! their deadline, every produced reply is flushed to its connection,
+//! idle connections are closed, and the process exits 0. In-flight
+//! replies are never dropped by a drain.
+
+use crate::archive::ArchiveError;
+use crate::container::ContainerVersion;
+use crate::error::LcError;
+use crate::types::{ErrorBound, FnVariant, Protection};
+
+use super::TenantCounters;
+
+/// Per-frame magic, leading every request and reply.
+pub const FRAME_MAGIC: [u8; 4] = *b"LCS1";
+/// Fixed frame header length: magic + type + request id + body length.
+pub const FRAME_HEADER_LEN: usize = 17;
+/// Work-request bodies start with `[tenant u32][deadline_ms u32]`.
+pub const REQUEST_PREFIX_LEN: usize = 8;
+/// Compress params after the prefix: kind/variant/protection/version
+/// tags + epsilon.
+pub const COMPRESS_PARAMS_LEN: usize = 8;
+/// Control frames (Status/Drain) carry no meaningful body; anything
+/// larger than this is malformed by definition.
+pub const CONTROL_BODY_MAX: u32 = 4096;
+/// Error reply messages are truncated to this many bytes.
+pub const MAX_ERROR_MSG: usize = 512;
+
+pub const REQ_COMPRESS: u8 = 0x01;
+pub const REQ_DECOMPRESS: u8 = 0x02;
+pub const REQ_RANGE: u8 = 0x03;
+pub const REQ_STATUS: u8 = 0x04;
+pub const REQ_DRAIN: u8 = 0x05;
+
+pub const REP_CONTAINER: u8 = 0x81;
+pub const REP_VALUES: u8 = 0x82;
+pub const REP_ERROR: u8 = 0x83;
+pub const REP_STATUS: u8 = 0x84;
+pub const REP_DRAINING: u8 = 0x85;
+
+pub const ERR_MALFORMED: u16 = 1;
+pub const ERR_TOO_LARGE: u16 = 2;
+pub const ERR_BUSY: u16 = 3;
+pub const ERR_DEADLINE: u16 = 4;
+pub const ERR_DRAINING: u16 = 5;
+pub const ERR_BAD_REQUEST: u16 = 6;
+pub const ERR_INTERNAL: u16 = 7;
+pub const ERR_UNSUPPORTED: u16 = 8;
+pub const ERR_CANCELLED: u16 = 9;
+pub const ERR_CONFIG: u16 = 10;
+pub const ERR_IO: u16 = 11;
+pub const ERR_CONTAINER: u16 = 12;
+pub const ERR_CODEC: u16 = 13;
+pub const ERR_QUANTIZER: u16 = 14;
+pub const ERR_RUNTIME: u16 = 15;
+pub const ERR_NOT_INDEXED: u16 = 20;
+pub const ERR_TRUNCATED: u16 = 21;
+pub const ERR_BAD_TRAILER: u16 = 22;
+pub const ERR_BAD_INDEX: u16 = 23;
+pub const ERR_BAD_RANGE: u16 = 24;
+pub const ERR_CHUNK_MISMATCH: u16 = 25;
+pub const ERR_CHUNK_CRC: u16 = 26;
+pub const ERR_ARCHIVE_IO: u16 = 27;
+pub const ERR_ARCHIVE_CONTAINER: u16 = 28;
+pub const ERR_ARCHIVE_DECODE: u16 = 29;
+
+/// The stable wire code for an [`ArchiveError`] (codes 20-29).
+pub fn archive_wire_code(e: &ArchiveError) -> u16 {
+    match e {
+        ArchiveError::NotIndexed { .. } => ERR_NOT_INDEXED,
+        ArchiveError::Truncated => ERR_TRUNCATED,
+        ArchiveError::BadTrailer(_) => ERR_BAD_TRAILER,
+        ArchiveError::BadIndex(_) => ERR_BAD_INDEX,
+        ArchiveError::BadRange { .. } => ERR_BAD_RANGE,
+        ArchiveError::ChunkMismatch { .. } => ERR_CHUNK_MISMATCH,
+        ArchiveError::ChunkCrc { .. } => ERR_CHUNK_CRC,
+        ArchiveError::Io(_) => ERR_ARCHIVE_IO,
+        ArchiveError::Container(_) => ERR_ARCHIVE_CONTAINER,
+        ArchiveError::Decode(_) => ERR_ARCHIVE_DECODE,
+    }
+}
+
+/// The stable wire code for an [`LcError`]: typed variants map to
+/// typed codes — no message grepping anywhere on the wire path.
+pub fn wire_code(e: &LcError) -> u16 {
+    match e {
+        LcError::Config(_) => ERR_CONFIG,
+        LcError::Io(_) => ERR_IO,
+        LcError::Container(_) => ERR_CONTAINER,
+        LcError::Codec(_) => ERR_CODEC,
+        LcError::Quantizer(_) => ERR_QUANTIZER,
+        LcError::Runtime(_) => ERR_RUNTIME,
+        LcError::Archive(a) => archive_wire_code(a),
+    }
+}
+
+/// Parsed fixed frame header (magic already verified).
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct FrameHeader {
+    pub kind: u8,
+    pub request_id: u64,
+    pub body_len: u32,
+}
+
+/// Serialize a frame header.
+pub fn encode_frame_header(kind: u8, request_id: u64, body_len: u32) -> [u8; FRAME_HEADER_LEN] {
+    let mut h = [0u8; FRAME_HEADER_LEN];
+    h[0..4].copy_from_slice(&FRAME_MAGIC);
+    h[4] = kind;
+    h[5..13].copy_from_slice(&request_id.to_le_bytes());
+    h[13..17].copy_from_slice(&body_len.to_le_bytes());
+    h
+}
+
+/// Parse a frame header; `None` means the magic is wrong and the
+/// stream can no longer be trusted.
+pub fn parse_frame_header(h: &[u8; FRAME_HEADER_LEN]) -> Option<FrameHeader> {
+    if h[0..4] != FRAME_MAGIC {
+        return None;
+    }
+    Some(FrameHeader {
+        kind: h[4],
+        request_id: u64::from_le_bytes(h[5..13].try_into().unwrap()),
+        body_len: u32::from_le_bytes(h[13..17].try_into().unwrap()),
+    })
+}
+
+/// Assemble a whole frame (header + body).
+pub fn frame(kind: u8, request_id: u64, body: &[u8]) -> Vec<u8> {
+    let mut out = Vec::with_capacity(FRAME_HEADER_LEN + body.len());
+    out.extend_from_slice(&encode_frame_header(kind, request_id, body.len() as u32));
+    out.extend_from_slice(body);
+    out
+}
+
+/// Assemble an `Error` reply frame; the message is truncated to
+/// [`MAX_ERROR_MSG`] bytes on a character boundary.
+pub fn error_frame(request_id: u64, code: u16, msg: &str) -> Vec<u8> {
+    let mut cut = msg.len().min(MAX_ERROR_MSG);
+    while cut > 0 && !msg.is_char_boundary(cut) {
+        cut -= 1;
+    }
+    let msg = &msg.as_bytes()[..cut];
+    let mut body = Vec::with_capacity(4 + msg.len());
+    body.extend_from_slice(&code.to_le_bytes());
+    body.extend_from_slice(&(msg.len() as u16).to_le_bytes());
+    body.extend_from_slice(msg);
+    frame(REP_ERROR, request_id, &body)
+}
+
+/// Parse an `Error` reply body into `(code, message)`.
+pub fn parse_error_body(b: &[u8]) -> Option<(u16, String)> {
+    if b.len() < 4 {
+        return None;
+    }
+    let code = u16::from_le_bytes(b[0..2].try_into().unwrap());
+    let len = u16::from_le_bytes(b[2..4].try_into().unwrap()) as usize;
+    let msg = b.get(4..4 + len)?;
+    Some((code, String::from_utf8_lossy(msg).into_owned()))
+}
+
+/// Compress-request parameters (the bytes between the request prefix
+/// and the raw data).
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct CompressParams {
+    pub bound: ErrorBound,
+    pub variant: FnVariant,
+    pub protection: Protection,
+    pub version: ContainerVersion,
+}
+
+impl CompressParams {
+    /// ABS bound, protected, approx variant, v3 container — the
+    /// server-side defaults of `lc compress`.
+    pub fn abs(epsilon: f32) -> CompressParams {
+        CompressParams {
+            bound: ErrorBound::Abs(epsilon),
+            variant: FnVariant::Approx,
+            protection: Protection::Protected,
+            version: ContainerVersion::V3,
+        }
+    }
+}
+
+fn variant_tag(v: FnVariant) -> u8 {
+    match v {
+        FnVariant::Approx => 0,
+        FnVariant::Native => 1,
+    }
+}
+
+fn protection_tag(p: Protection) -> u8 {
+    match p {
+        Protection::Protected => 0,
+        Protection::Unprotected => 1,
+    }
+}
+
+fn version_tag(v: ContainerVersion) -> u8 {
+    match v {
+        ContainerVersion::V1 => 1,
+        ContainerVersion::V2 => 2,
+        ContainerVersion::V3 => 3,
+    }
+}
+
+/// Serialize the 8-byte work-request prefix.
+pub fn encode_request_prefix(tenant: u32, deadline_ms: u32) -> [u8; REQUEST_PREFIX_LEN] {
+    let mut p = [0u8; REQUEST_PREFIX_LEN];
+    p[0..4].copy_from_slice(&tenant.to_le_bytes());
+    p[4..8].copy_from_slice(&deadline_ms.to_le_bytes());
+    p
+}
+
+/// Parse the 8-byte work-request prefix into `(tenant, deadline_ms)`.
+pub fn parse_request_prefix(b: &[u8]) -> Option<(u32, u32)> {
+    if b.len() < REQUEST_PREFIX_LEN {
+        return None;
+    }
+    Some((
+        u32::from_le_bytes(b[0..4].try_into().unwrap()),
+        u32::from_le_bytes(b[4..8].try_into().unwrap()),
+    ))
+}
+
+/// Serialize compress params + raw values (the body after the prefix).
+pub fn encode_compress_tail(params: &CompressParams, data: &[f32]) -> Vec<u8> {
+    let mut out = Vec::with_capacity(COMPRESS_PARAMS_LEN + data.len() * 4);
+    out.push(params.bound.kind_tag());
+    out.push(variant_tag(params.variant));
+    out.push(protection_tag(params.protection));
+    out.push(version_tag(params.version));
+    out.extend_from_slice(&params.bound.epsilon().to_le_bytes());
+    for v in data {
+        out.extend_from_slice(&v.to_le_bytes());
+    }
+    out
+}
+
+/// Parse a compress body tail into its params and the raw data bytes.
+/// Errors are human-readable detail strings (the caller picks the
+/// wire code: structure problems are `ERR_MALFORMED`).
+pub fn parse_compress_tail(b: &[u8]) -> Result<(CompressParams, &[u8]), String> {
+    if b.len() < COMPRESS_PARAMS_LEN {
+        return Err(format!(
+            "compress body holds {} bytes, params need {COMPRESS_PARAMS_LEN}",
+            b.len()
+        ));
+    }
+    let epsilon = f32::from_le_bytes(b[4..8].try_into().unwrap());
+    let bound =
+        ErrorBound::from_tag(b[0], epsilon).ok_or(format!("bad error-bound tag {}", b[0]))?;
+    let variant = match b[1] {
+        0 => FnVariant::Approx,
+        1 => FnVariant::Native,
+        t => return Err(format!("bad variant tag {t}")),
+    };
+    let protection = match b[2] {
+        0 => Protection::Protected,
+        1 => Protection::Unprotected,
+        t => return Err(format!("bad protection tag {t}")),
+    };
+    let version = match b[3] {
+        1 => ContainerVersion::V1,
+        2 => ContainerVersion::V2,
+        3 => ContainerVersion::V3,
+        t => return Err(format!("bad container version tag {t}")),
+    };
+    let data = &b[COMPRESS_PARAMS_LEN..];
+    if data.len() % 4 != 0 {
+        return Err(format!("raw data length {} is not a multiple of 4", data.len()));
+    }
+    Ok((
+        CompressParams {
+            bound,
+            variant,
+            protection,
+            version,
+        },
+        data,
+    ))
+}
+
+/// Serialize a range body tail: bounds + container bytes.
+pub fn encode_range_tail(start: u64, end: u64, container: &[u8]) -> Vec<u8> {
+    let mut out = Vec::with_capacity(16 + container.len());
+    out.extend_from_slice(&start.to_le_bytes());
+    out.extend_from_slice(&end.to_le_bytes());
+    out.extend_from_slice(container);
+    out
+}
+
+/// Parse a range body tail into `(start, end, container bytes)`.
+pub fn parse_range_tail(b: &[u8]) -> Option<(u64, u64, &[u8])> {
+    if b.len() < 16 {
+        return None;
+    }
+    Some((
+        u64::from_le_bytes(b[0..8].try_into().unwrap()),
+        u64::from_le_bytes(b[8..16].try_into().unwrap()),
+        &b[16..],
+    ))
+}
+
+/// Raw f32 values <-> little-endian bytes (the Values reply body and
+/// the compress request payload).
+pub fn f32s_to_bytes(data: &[f32]) -> Vec<u8> {
+    let mut out = Vec::with_capacity(data.len() * 4);
+    for v in data {
+        out.extend_from_slice(&v.to_le_bytes());
+    }
+    out
+}
+
+/// Inverse of [`f32s_to_bytes`]; `None` if the length is ragged.
+pub fn bytes_to_f32s(b: &[u8]) -> Option<Vec<f32>> {
+    if b.len() % 4 != 0 {
+        return None;
+    }
+    Some(
+        b.chunks_exact(4)
+            .map(|c| f32::from_le_bytes(c.try_into().unwrap()))
+            .collect(),
+    )
+}
+
+/// A parsed Status reply: global gauges + per-tenant counters.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct StatusReport {
+    pub draining: bool,
+    /// Admitted request-body bytes currently in flight.
+    pub in_flight_bytes: u64,
+    /// The admission budget those bytes are bounded by.
+    pub budget_bytes: u64,
+    /// Counters per tenant id, ascending.
+    pub tenants: Vec<(u32, TenantCounters)>,
+}
+
+/// Serialize a Status reply body.
+pub fn encode_status(r: &StatusReport) -> Vec<u8> {
+    let mut out = Vec::with_capacity(21 + r.tenants.len() * 52);
+    out.push(r.draining as u8);
+    out.extend_from_slice(&r.in_flight_bytes.to_le_bytes());
+    out.extend_from_slice(&r.budget_bytes.to_le_bytes());
+    out.extend_from_slice(&(r.tenants.len() as u32).to_le_bytes());
+    for (tenant, c) in &r.tenants {
+        out.extend_from_slice(&tenant.to_le_bytes());
+        out.extend_from_slice(&c.requests.to_le_bytes());
+        out.extend_from_slice(&c.bytes_in.to_le_bytes());
+        out.extend_from_slice(&c.bytes_out.to_le_bytes());
+        out.extend_from_slice(&c.rejected.to_le_bytes());
+        out.extend_from_slice(&c.timeouts.to_le_bytes());
+        out.extend_from_slice(&c.errors.to_le_bytes());
+    }
+    out
+}
+
+/// Parse a Status reply body.
+pub fn parse_status(b: &[u8]) -> Option<StatusReport> {
+    if b.len() < 21 {
+        return None;
+    }
+    let draining = b[0] != 0;
+    let in_flight_bytes = u64::from_le_bytes(b[1..9].try_into().unwrap());
+    let budget_bytes = u64::from_le_bytes(b[9..17].try_into().unwrap());
+    let n = u32::from_le_bytes(b[17..21].try_into().unwrap()) as usize;
+    let mut tenants = Vec::with_capacity(n.min(1024));
+    let mut pos = 21;
+    for _ in 0..n {
+        let e = b.get(pos..pos + 52)?;
+        let u64_at =
+            |off: usize| u64::from_le_bytes(e[off..off + 8].try_into().unwrap());
+        tenants.push((
+            u32::from_le_bytes(e[0..4].try_into().unwrap()),
+            TenantCounters {
+                requests: u64_at(4),
+                bytes_in: u64_at(12),
+                bytes_out: u64_at(20),
+                rejected: u64_at(28),
+                timeouts: u64_at(36),
+                errors: u64_at(44),
+            },
+        ));
+        pos += 52;
+    }
+    if pos != b.len() {
+        return None;
+    }
+    Some(StatusReport {
+        draining,
+        in_flight_bytes,
+        budget_bytes,
+        tenants,
+    })
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn frame_header_roundtrip_and_magic_guard() {
+        let h = encode_frame_header(REQ_COMPRESS, 42, 1000);
+        let fh = parse_frame_header(&h).unwrap();
+        assert_eq!(fh.kind, REQ_COMPRESS);
+        assert_eq!(fh.request_id, 42);
+        assert_eq!(fh.body_len, 1000);
+        let mut bad = h;
+        bad[0] = b'X';
+        assert!(parse_frame_header(&bad).is_none());
+    }
+
+    #[test]
+    fn error_frame_roundtrip_truncates_on_char_boundary() {
+        let long = "é".repeat(600); // 1200 bytes of 2-byte chars
+        let f = error_frame(7, ERR_BUSY, &long);
+        let fh = parse_frame_header(f[..FRAME_HEADER_LEN].try_into().unwrap()).unwrap();
+        assert_eq!(fh.kind, REP_ERROR);
+        assert_eq!(fh.request_id, 7);
+        let (code, msg) = parse_error_body(&f[FRAME_HEADER_LEN..]).unwrap();
+        assert_eq!(code, ERR_BUSY);
+        assert!(msg.len() <= MAX_ERROR_MSG);
+        assert!(msg.chars().all(|c| c == 'é'));
+    }
+
+    #[test]
+    fn compress_tail_roundtrip() {
+        let p = CompressParams::abs(1e-3);
+        let data = [1.0f32, -2.5, f32::NAN];
+        let tail = encode_compress_tail(&p, &data);
+        let (q, raw) = parse_compress_tail(&tail).unwrap();
+        assert_eq!(q, p);
+        let back = bytes_to_f32s(raw).unwrap();
+        assert_eq!(back[0], 1.0);
+        assert_eq!(back[1], -2.5);
+        assert!(back[2].is_nan());
+    }
+
+    #[test]
+    fn compress_tail_rejects_garbage() {
+        assert!(parse_compress_tail(&[0; 3]).is_err());
+        let mut tail = encode_compress_tail(&CompressParams::abs(1e-3), &[1.0]);
+        tail[0] = 99; // bad bound tag
+        assert!(parse_compress_tail(&tail).is_err());
+        let tail = encode_compress_tail(&CompressParams::abs(1e-3), &[1.0]);
+        assert!(parse_compress_tail(&tail[..tail.len() - 1]).is_err()); // ragged data
+    }
+
+    #[test]
+    fn status_roundtrip() {
+        let r = StatusReport {
+            draining: true,
+            in_flight_bytes: 123,
+            budget_bytes: 456,
+            tenants: vec![
+                (
+                    1,
+                    TenantCounters {
+                        requests: 10,
+                        bytes_in: 20,
+                        bytes_out: 30,
+                        rejected: 1,
+                        timeouts: 2,
+                        errors: 3,
+                    },
+                ),
+                (9, TenantCounters::default()),
+            ],
+        };
+        let b = encode_status(&r);
+        assert_eq!(parse_status(&b).unwrap(), r);
+        assert!(parse_status(&b[..b.len() - 1]).is_none());
+    }
+
+    #[test]
+    fn range_tail_roundtrip() {
+        let t = encode_range_tail(5, 99, b"container");
+        let (s, e, c) = parse_range_tail(&t).unwrap();
+        assert_eq!((s, e), (5, 99));
+        assert_eq!(c, b"container");
+        assert!(parse_range_tail(&t[..10]).is_none());
+    }
+
+    #[test]
+    fn wire_codes_are_stable_and_distinct() {
+        let codes = [
+            wire_code(&LcError::Config(String::new())),
+            wire_code(&LcError::Io(String::new())),
+            wire_code(&LcError::Container(String::new())),
+            wire_code(&LcError::Codec(String::new())),
+            wire_code(&LcError::Quantizer(String::new())),
+            wire_code(&LcError::Runtime(String::new())),
+            archive_wire_code(&ArchiveError::Truncated),
+            archive_wire_code(&ArchiveError::ChunkCrc { index: 0 }),
+        ];
+        assert_eq!(codes[0], ERR_CONFIG);
+        assert_eq!(codes[6], ERR_TRUNCATED);
+        assert_eq!(codes[7], ERR_CHUNK_CRC);
+        let mut uniq = codes.to_vec();
+        uniq.sort_unstable();
+        uniq.dedup();
+        assert_eq!(uniq.len(), codes.len());
+        assert_eq!(
+            wire_code(&LcError::Archive(ArchiveError::ChunkCrc { index: 1 })),
+            ERR_CHUNK_CRC
+        );
+    }
+}

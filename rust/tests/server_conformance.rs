@@ -1,0 +1,663 @@
+//! `lc serve` conformance: a live in-process server hammered by
+//! hostile clients. Every test runs under a watchdog — a hung server
+//! is a failure, not a stuck CI job.
+//!
+//! Invariants exercised here:
+//! * the server never panics, never buffers an absurd declared length,
+//!   and never exceeds its in-flight-bytes budget;
+//! * every malformed input gets a *typed* wire error reply;
+//! * one request's hostile container poisons nothing but that request;
+//! * graceful drain loses zero in-flight replies;
+//! * the well-behaved path is bit-identical to `lc::reference` and the
+//!   in-memory engine.
+
+use std::collections::HashMap;
+use std::io::{ErrorKind, Read, Write};
+use std::net::TcpStream;
+use std::sync::mpsc;
+use std::thread;
+use std::time::Duration;
+
+use lc::container::ContainerVersion;
+use lc::coordinator::{compress as engine_compress, decompress as engine_decompress, EngineConfig};
+use lc::data::Rng;
+use lc::server::proto::{
+    self, CompressParams, ERR_BAD_RANGE, ERR_BAD_REQUEST, ERR_BUSY, ERR_CHUNK_CRC, ERR_CONTAINER,
+    ERR_DEADLINE, ERR_DRAINING, ERR_MALFORMED, ERR_NOT_INDEXED, ERR_TOO_LARGE, ERR_UNSUPPORTED,
+    FRAME_HEADER_LEN, REP_CONTAINER, REP_DRAINING, REP_ERROR, REP_STATUS, REQ_COMPRESS,
+    REQ_DRAIN, REQ_STATUS,
+};
+use lc::server::{Client, ClientError, ServeConfig, Server};
+use lc::types::ErrorBound;
+
+/// Run `f` on its own thread; fail loudly if it neither finishes nor
+/// panics within `secs` (server hang / lost reply / deadlock).
+fn under_timeout<F: FnOnce() + Send + 'static>(secs: u64, f: F) {
+    let (tx, rx) = mpsc::channel();
+    let t = thread::spawn(move || {
+        f();
+        let _ = tx.send(());
+    });
+    match rx.recv_timeout(Duration::from_secs(secs)) {
+        Ok(()) | Err(mpsc::RecvTimeoutError::Disconnected) => {
+            if let Err(e) = t.join() {
+                std::panic::resume_unwind(e);
+            }
+        }
+        Err(mpsc::RecvTimeoutError::Timeout) => {
+            panic!("test body exceeded the {secs}s watchdog — server hang or lost reply")
+        }
+    }
+}
+
+fn test_cfg() -> ServeConfig {
+    ServeConfig {
+        workers: 2,
+        io_timeout: Duration::from_secs(5),
+        ..ServeConfig::default()
+    }
+}
+
+fn sample(n: usize, seed: u64) -> Vec<f32> {
+    let mut rng = Rng::new(seed);
+    (0..n).map(|_| (rng.normal() * 10.0) as f32).collect()
+}
+
+/// Read one reply frame from a raw socket.
+fn read_frame(s: &mut TcpStream) -> std::io::Result<(proto::FrameHeader, Vec<u8>)> {
+    let mut hdr = [0u8; FRAME_HEADER_LEN];
+    s.read_exact(&mut hdr)?;
+    let fh = proto::parse_frame_header(&hdr).expect("server replies carry valid magic");
+    let mut body = vec![0u8; fh.body_len as usize];
+    s.read_exact(&mut body)?;
+    Ok((fh, body))
+}
+
+/// Build a full work-request frame (prefix + tail) for raw sockets.
+fn work_frame(kind: u8, id: u64, tenant: u32, deadline_ms: u32, tail: &[u8]) -> Vec<u8> {
+    let mut body = proto::encode_request_prefix(tenant, deadline_ms).to_vec();
+    body.extend_from_slice(tail);
+    proto::frame(kind, id, &body)
+}
+
+fn expect_wire_err(r: Result<Vec<f32>, ClientError>, want: u16, ctx: &str) {
+    match r {
+        Err(ClientError::Wire { code, message }) => {
+            assert_eq!(code, want, "{ctx}: got code {code} ({message})")
+        }
+        other => panic!("{ctx}: expected wire error {want}, got {other:?}"),
+    }
+}
+
+#[test]
+fn well_behaved_roundtrip_is_bit_exact() {
+    under_timeout(240, || {
+        let srv = Server::start(test_cfg()).unwrap();
+        let addr = srv.tcp_addr().unwrap();
+        let mut c = Client::connect_tcp(addr).unwrap();
+        let data = sample(100_000, 0xC0FFEE);
+        let container = c.compress(&CompressParams::abs(1e-3), &data).unwrap();
+
+        // Served compression is bit-identical to the reference model
+        // and the in-memory engine.
+        let cfg = EngineConfig::native(ErrorBound::Abs(1e-3));
+        let reference = lc::reference::compress(&cfg, &data).unwrap().to_bytes();
+        assert!(container == reference, "served container != lc::reference");
+        let (engine_c, _) = engine_compress(&cfg, &data).unwrap();
+        assert!(container == engine_c.to_bytes(), "served container != engine");
+
+        // Served decompression is bit-identical to the engine's.
+        let served = c.decompress(&container).unwrap();
+        let (golden, _) = engine_decompress(&cfg, &engine_c).unwrap();
+        assert_eq!(served.len(), golden.len());
+        assert!(
+            served.iter().zip(&golden).all(|(a, b)| a.to_bits() == b.to_bits()),
+            "served reconstruction differs from the engine's"
+        );
+        // And the error bound holds against the original.
+        assert!(data
+            .iter()
+            .zip(&served)
+            .all(|(x, y)| (x - y).abs() <= 1e-3 * (1.0 + 1e-5)));
+
+        // Range query over the same container matches the golden slice.
+        let (lo, hi) = (70_000u64, 90_000u64);
+        let part = c.range(&container, lo, hi).unwrap();
+        assert_eq!(part.len(), (hi - lo) as usize);
+        assert!(part
+            .iter()
+            .zip(&golden[lo as usize..hi as usize])
+            .all(|(a, b)| a.to_bits() == b.to_bits()));
+
+        c.drain_server().unwrap();
+        srv.join();
+    });
+}
+
+#[cfg(unix)]
+#[test]
+fn unix_socket_roundtrip() {
+    under_timeout(120, || {
+        let path = std::env::temp_dir().join(format!(
+            "lc-serve-conformance-{}.sock",
+            std::process::id()
+        ));
+        let srv = Server::start(ServeConfig {
+            tcp: None,
+            uds: Some(path.clone()),
+            workers: 2,
+            ..ServeConfig::default()
+        })
+        .unwrap();
+        let mut c = Client::connect_uds(&path).unwrap();
+        let data = sample(10_000, 7);
+        let container = c.compress(&CompressParams::abs(1e-3), &data).unwrap();
+        let back = c.decompress(&container).unwrap();
+        assert_eq!(back.len(), data.len());
+        c.drain_server().unwrap();
+        srv.join();
+        assert!(!path.exists(), "join must remove the socket file");
+    });
+}
+
+#[test]
+fn garbage_magic_gets_typed_error_and_close() {
+    under_timeout(120, || {
+        let srv = Server::start(test_cfg()).unwrap();
+        let addr = srv.tcp_addr().unwrap();
+        let mut s = TcpStream::connect(addr).unwrap();
+        s.write_all(b"GET / HTTP/1.1\r\nHost: pwn\r\n\r\n").unwrap();
+        let (fh, body) = read_frame(&mut s).unwrap();
+        assert_eq!(fh.kind, REP_ERROR);
+        assert_eq!(fh.request_id, 0, "untrusted id is reported as 0");
+        let (code, _) = proto::parse_error_body(&body).unwrap();
+        assert_eq!(code, ERR_MALFORMED);
+        // The stream is desynchronized; the server must close it.
+        let mut b = [0u8; 1];
+        match s.read(&mut b) {
+            Ok(0) | Err(_) => {}
+            Ok(_) => panic!("server kept talking on a desynchronized stream"),
+        }
+        // The server itself is unharmed.
+        let mut c = Client::connect_tcp(addr).unwrap();
+        assert!(c.compress(&CompressParams::abs(1e-3), &sample(1000, 1)).is_ok());
+        c.drain_server().unwrap();
+        srv.join();
+    });
+}
+
+#[test]
+fn truncated_frames_and_disconnects_do_not_wedge_the_server() {
+    under_timeout(120, || {
+        let srv = Server::start(ServeConfig {
+            workers: 2,
+            io_timeout: Duration::from_millis(500),
+            ..ServeConfig::default()
+        })
+        .unwrap();
+        let addr = srv.tcp_addr().unwrap();
+        // Partial frame header, then vanish.
+        {
+            let mut s = TcpStream::connect(addr).unwrap();
+            let hdr = proto::encode_frame_header(REQ_COMPRESS, 1, 100);
+            s.write_all(&hdr[..5]).unwrap();
+        }
+        // Full header declaring a body, a few body bytes, then vanish.
+        {
+            let mut s = TcpStream::connect(addr).unwrap();
+            let f = work_frame(
+                REQ_COMPRESS,
+                2,
+                0,
+                0,
+                &proto::encode_compress_tail(&CompressParams::abs(1e-3), &sample(1000, 2)),
+            );
+            s.write_all(&f[..40]).unwrap();
+        }
+        thread::sleep(Duration::from_millis(200));
+        // Valid traffic still flows.
+        let mut c = Client::connect_tcp(addr).unwrap();
+        assert!(c.compress(&CompressParams::abs(1e-3), &sample(2000, 3)).is_ok());
+        c.drain_server().unwrap();
+        srv.join();
+    });
+}
+
+#[test]
+fn absurd_declared_length_is_bounced_unread() {
+    under_timeout(120, || {
+        let srv = Server::start(ServeConfig {
+            workers: 1,
+            budget_bytes: 2 << 20,
+            max_frame_bytes: 1 << 20,
+            ..ServeConfig::default()
+        })
+        .unwrap();
+        let addr = srv.tcp_addr().unwrap();
+        let mut s = TcpStream::connect(addr).unwrap();
+        // A ~4 GiB declared body. The server must answer (typed) and
+        // close without reading or allocating any of it.
+        s.write_all(&proto::encode_frame_header(REQ_COMPRESS, 5, u32::MAX))
+            .unwrap();
+        let (fh, body) = read_frame(&mut s).unwrap();
+        assert_eq!(fh.kind, REP_ERROR);
+        assert_eq!(fh.request_id, 5);
+        let (code, _) = proto::parse_error_body(&body).unwrap();
+        assert_eq!(code, ERR_TOO_LARGE);
+        let mut b = [0u8; 1];
+        match s.read(&mut b) {
+            Ok(0) | Err(_) => {}
+            Ok(_) => panic!("connection must close after an unframeable request"),
+        }
+        let mut c = Client::connect_tcp(addr).unwrap();
+        assert!(c.compress(&CompressParams::abs(1e-3), &sample(1000, 4)).is_ok());
+        c.drain_server().unwrap();
+        srv.join();
+    });
+}
+
+#[test]
+fn slow_loris_is_dropped_while_valid_clients_proceed() {
+    under_timeout(120, || {
+        let srv = Server::start(ServeConfig {
+            workers: 2,
+            io_timeout: Duration::from_millis(300),
+            ..ServeConfig::default()
+        })
+        .unwrap();
+        let addr = srv.tcp_addr().unwrap();
+        // The loris: three bytes of a frame header, then silence.
+        let mut loris = TcpStream::connect(addr).unwrap();
+        loris.write_all(&proto::FRAME_MAGIC[..3]).unwrap();
+        // A well-behaved client is not starved by it.
+        let worker = thread::spawn(move || {
+            let mut c = Client::connect_tcp(addr).unwrap();
+            let data = sample(50_000, 5);
+            let container = c.compress(&CompressParams::abs(1e-3), &data).unwrap();
+            c.decompress(&container).unwrap().len()
+        });
+        assert_eq!(worker.join().unwrap(), 50_000);
+        // Past the I/O timeout the loris connection must be gone.
+        thread::sleep(Duration::from_millis(600));
+        loris
+            .set_read_timeout(Some(Duration::from_secs(2)))
+            .unwrap();
+        let mut b = [0u8; 1];
+        match loris.read(&mut b) {
+            Ok(0) => {}
+            Ok(_) => panic!("server sent data to a slow-loris client"),
+            Err(e) if matches!(e.kind(), ErrorKind::WouldBlock | ErrorKind::TimedOut) => {
+                panic!("slow-loris connection still open after the I/O timeout")
+            }
+            Err(_) => {} // reset: also closed
+        }
+        let mut c = Client::connect_tcp(addr).unwrap();
+        c.drain_server().unwrap();
+        srv.join();
+    });
+}
+
+#[test]
+fn unknown_request_type_keeps_the_connection_usable() {
+    under_timeout(120, || {
+        let srv = Server::start(test_cfg()).unwrap();
+        let addr = srv.tcp_addr().unwrap();
+        let mut s = TcpStream::connect(addr).unwrap();
+        s.write_all(&proto::frame(0x7F, 3, b"??")).unwrap();
+        let (fh, body) = read_frame(&mut s).unwrap();
+        assert_eq!((fh.kind, fh.request_id), (REP_ERROR, 3));
+        let (code, _) = proto::parse_error_body(&body).unwrap();
+        assert_eq!(code, ERR_UNSUPPORTED);
+        // Framing was never in doubt: the same socket still works.
+        s.write_all(&proto::frame(REQ_STATUS, 4, &[])).unwrap();
+        let (fh, body) = read_frame(&mut s).unwrap();
+        assert_eq!((fh.kind, fh.request_id), (REP_STATUS, 4));
+        assert!(proto::parse_status(&body).is_some());
+        s.write_all(&proto::frame(REQ_DRAIN, 5, &[])).unwrap();
+        let (fh, _) = read_frame(&mut s).unwrap();
+        assert_eq!(fh.kind, REP_DRAINING);
+        drop(s);
+        srv.join();
+    });
+}
+
+/// Deterministic admission: with worker concurrency 1, a large request
+/// A holds the worker while B (admitted, queued) and C (over budget)
+/// arrive. C must be rejected `Busy`; A and B must both succeed; a
+/// retry of C after the replies drains must succeed too.
+#[test]
+fn busy_rejection_is_deterministic_and_recoverable() {
+    under_timeout(240, || {
+        let big = sample(2_000_000, 8);
+        let small = sample(1_000, 9);
+        let tail_big = proto::encode_compress_tail(&CompressParams::abs(1e-3), &big);
+        let tail_small = proto::encode_compress_tail(&CompressParams::abs(1e-3), &small);
+        let body_big = (proto::REQUEST_PREFIX_LEN + tail_big.len()) as u64;
+        let body_small = (proto::REQUEST_PREFIX_LEN + tail_small.len()) as u64;
+        let srv = Server::start(ServeConfig {
+            workers: 1,
+            // Exactly A + B fit; C cannot.
+            budget_bytes: body_big + body_small,
+            max_frame_bytes: body_big,
+            ..ServeConfig::default()
+        })
+        .unwrap();
+        let addr = srv.tcp_addr().unwrap();
+        let mut s = TcpStream::connect(addr).unwrap();
+        s.write_all(&work_frame(REQ_COMPRESS, 1, 0, 0, &tail_big)).unwrap();
+        s.write_all(&work_frame(REQ_COMPRESS, 2, 0, 0, &tail_small)).unwrap();
+        s.write_all(&work_frame(REQ_COMPRESS, 3, 0, 0, &tail_small)).unwrap();
+        // Replies are multiplexed: match on request id, not order.
+        let mut replies = HashMap::new();
+        for _ in 0..3 {
+            let (fh, body) = read_frame(&mut s).unwrap();
+            replies.insert(fh.request_id, (fh.kind, body));
+        }
+        assert_eq!(replies[&1].0, REP_CONTAINER, "A must succeed");
+        assert_eq!(replies[&2].0, REP_CONTAINER, "B fit the budget with A");
+        assert_eq!(replies[&3].0, REP_ERROR, "C must be bounced, not queued");
+        let (code, _) = proto::parse_error_body(&replies[&3].1).unwrap();
+        assert_eq!(code, ERR_BUSY);
+        // All permits are back: C's retry succeeds.
+        s.write_all(&work_frame(REQ_COMPRESS, 4, 0, 0, &tail_small)).unwrap();
+        let (fh, _) = read_frame(&mut s).unwrap();
+        assert_eq!((fh.request_id, fh.kind), (4, REP_CONTAINER));
+        let mut c = Client::connect_tcp(addr).unwrap();
+        let report = c.status().unwrap();
+        assert_eq!(report.in_flight_bytes, 0);
+        assert_eq!(report.tenants[0].1.rejected, 1);
+        c.drain_server().unwrap();
+        drop(s);
+        srv.join();
+    });
+}
+
+/// A request whose deadline expires while it waits in the queue is
+/// answered with the typed deadline error, and counted as a timeout.
+#[test]
+fn deadline_expires_in_queue_behind_slow_work() {
+    under_timeout(240, || {
+        let srv = Server::start(ServeConfig {
+            workers: 1,
+            ..test_cfg()
+        })
+        .unwrap();
+        let addr = srv.tcp_addr().unwrap();
+        let mut s = TcpStream::connect(addr).unwrap();
+        let tail_a = proto::encode_compress_tail(&CompressParams::abs(1e-3), &sample(2_000_000, 10));
+        let tail_b = proto::encode_compress_tail(&CompressParams::abs(1e-3), &sample(50_000, 11));
+        s.write_all(&work_frame(REQ_COMPRESS, 1, 5, 0, &tail_a)).unwrap();
+        // 1 ms deadline, stuck behind A's multi-ms encode.
+        s.write_all(&work_frame(REQ_COMPRESS, 2, 5, 1, &tail_b)).unwrap();
+        let mut replies = HashMap::new();
+        for _ in 0..2 {
+            let (fh, body) = read_frame(&mut s).unwrap();
+            replies.insert(fh.request_id, (fh.kind, body));
+        }
+        assert_eq!(replies[&1].0, REP_CONTAINER);
+        assert_eq!(replies[&2].0, REP_ERROR);
+        let (code, _) = proto::parse_error_body(&replies[&2].1).unwrap();
+        assert_eq!(code, ERR_DEADLINE);
+        let mut c = Client::connect_tcp(addr).unwrap();
+        let report = c.status().unwrap();
+        let t5 = report.tenants.iter().find(|(t, _)| *t == 5).unwrap().1;
+        assert_eq!(t5.requests, 2);
+        assert_eq!(t5.timeouts, 1);
+        c.drain_server().unwrap();
+        drop(s);
+        srv.join();
+    });
+}
+
+/// One request's hostile container yields one typed error and poisons
+/// nothing: the same connection keeps serving, and the error codes
+/// preserve the archive taxonomy.
+#[test]
+fn fault_isolation_maps_taxonomy_to_wire_codes() {
+    under_timeout(240, || {
+        let srv = Server::start(test_cfg()).unwrap();
+        let addr = srv.tcp_addr().unwrap();
+        let mut c = Client::connect_tcp(addr).unwrap();
+        let data = sample(3 * lc::types::CHUNK_ELEMS, 12);
+        let v3 = c.compress(&CompressParams::abs(1e-3), &data).unwrap();
+
+        // (a) Flipped payload byte -> container-level CRC failure on
+        // the decompress path (code 12), connection survives.
+        let mut bad = v3.clone();
+        bad[300] ^= 0x40;
+        expect_wire_err(c.decompress(&bad), ERR_CONTAINER, "flipped payload decompress");
+        assert_eq!(c.decompress(&v3).unwrap().len(), data.len(), "conn poisoned");
+
+        // (b) Same flip through the range path -> the archive layer's
+        // per-chunk CRC verdict (code 26).
+        expect_wire_err(c.range(&bad, 0, 10), ERR_CHUNK_CRC, "flipped payload range");
+
+        // (c) Range query against a v2 container -> NotIndexed (20).
+        let v2 = c
+            .compress(
+                &CompressParams {
+                    version: ContainerVersion::V2,
+                    ..CompressParams::abs(1e-3)
+                },
+                &sample(10_000, 13),
+            )
+            .unwrap();
+        expect_wire_err(c.range(&v2, 0, 10), ERR_NOT_INDEXED, "range over v2");
+
+        // (d) Degenerate bounds: reversed is a bad request, past-the-end
+        // is the archive's BadRange (24).
+        expect_wire_err(c.range(&v3, 10, 5), ERR_BAD_REQUEST, "reversed range");
+        let n = data.len() as u64;
+        expect_wire_err(c.range(&v3, 0, n + 5), ERR_BAD_RANGE, "range past the end");
+
+        // (e) A forged header claiming an absurd value count is caught
+        // by parse-time cross-checks (typed, and crucially *before* any
+        // n_values-sized allocation).
+        let cfg = EngineConfig::native(ErrorBound::Abs(1e-3));
+        let (mut forged, _) = engine_compress(&cfg, &sample(10_000, 14)).unwrap();
+        forged.header.n_values = 1 << 40;
+        expect_wire_err(
+            c.decompress(&forged.to_bytes()),
+            ERR_CONTAINER,
+            "forged n_values",
+        );
+
+        // (f) Plain garbage in place of a container.
+        expect_wire_err(
+            c.decompress(&[0xA5u8; 512]),
+            ERR_CONTAINER,
+            "garbage container",
+        );
+
+        // Still alive after the whole gauntlet.
+        assert_eq!(c.decompress(&v3).unwrap().len(), data.len());
+        c.drain_server().unwrap();
+        srv.join();
+    });
+}
+
+/// Replies larger than the configured cap are refused with the typed
+/// too-large error instead of materialized.
+#[test]
+fn reply_size_cap_is_enforced() {
+    under_timeout(120, || {
+        let srv = Server::start(ServeConfig {
+            workers: 1,
+            max_reply_bytes: 4096,
+            ..ServeConfig::default()
+        })
+        .unwrap();
+        let addr = srv.tcp_addr().unwrap();
+        let mut c = Client::connect_tcp(addr).unwrap();
+        let cfg = EngineConfig::native(ErrorBound::Abs(1e-3));
+        let (container, _) = engine_compress(&cfg, &sample(50_000, 15)).unwrap();
+        let bytes = container.to_bytes();
+        // 50k values -> 200 kB reconstruction, far over the 4 kB cap.
+        expect_wire_err(c.decompress(&bytes), ERR_TOO_LARGE, "decompress over cap");
+        // 2000-value range -> 8 kB, also over the cap.
+        expect_wire_err(c.range(&bytes, 0, 2000), ERR_TOO_LARGE, "range over cap");
+        // A range under the cap still works on the same connection.
+        assert_eq!(c.range(&bytes, 0, 100).unwrap().len(), 100);
+        c.drain_server().unwrap();
+        srv.join();
+    });
+}
+
+/// Drain must flush every in-flight reply: four clients with admitted
+/// work all get complete, valid replies even though the drain lands
+/// mid-flight, and join() returns.
+#[test]
+fn drain_flushes_all_in_flight_replies() {
+    under_timeout(240, || {
+        let srv = Server::start(test_cfg()).unwrap();
+        let addr = srv.tcp_addr().unwrap();
+        // Pre-generate outside the threads so each request hits the wire
+        // within milliseconds of spawn — well inside the 100ms window
+        // before the drain below flips the admission gate.
+        let inputs: Vec<Vec<f32>> = (0..4).map(|i| sample(1_000_000, 16 + i)).collect();
+        let clients: Vec<_> = inputs
+            .into_iter()
+            .map(|data| {
+                thread::spawn(move || {
+                    let mut c = Client::connect_tcp(addr).unwrap();
+                    c.compress(&CompressParams::abs(1e-3), &data).unwrap()
+                })
+            })
+            .collect();
+        // Let the requests land, then drain mid-flight.
+        thread::sleep(Duration::from_millis(100));
+        let mut ctl = Client::connect_tcp(addr).unwrap();
+        ctl.drain_server().unwrap();
+        for t in clients {
+            let container = t.join().unwrap();
+            assert!(!container.is_empty(), "in-flight reply lost during drain");
+        }
+        srv.join();
+    });
+}
+
+/// During a drain, work already admitted finishes but *new* pipelined
+/// work on the same connection is bounced with the typed draining
+/// error — and its reply still arrives before the server exits.
+#[test]
+fn drain_bounces_new_work_with_typed_error() {
+    under_timeout(240, || {
+        let srv = Server::start(ServeConfig {
+            workers: 1,
+            ..test_cfg()
+        })
+        .unwrap();
+        let addr = srv.tcp_addr().unwrap();
+        let mut s = TcpStream::connect(addr).unwrap();
+        let tail_a = proto::encode_compress_tail(&CompressParams::abs(1e-3), &sample(2_000_000, 20));
+        let tail_b = proto::encode_compress_tail(&CompressParams::abs(1e-3), &sample(1_000, 21));
+        // A is admitted, then the same connection requests a drain,
+        // then pipelines B.
+        s.write_all(&work_frame(REQ_COMPRESS, 1, 0, 0, &tail_a)).unwrap();
+        s.write_all(&proto::frame(REQ_DRAIN, 2, &[])).unwrap();
+        s.write_all(&work_frame(REQ_COMPRESS, 3, 0, 0, &tail_b)).unwrap();
+        let mut replies = HashMap::new();
+        for _ in 0..3 {
+            let (fh, body) = read_frame(&mut s).unwrap();
+            replies.insert(fh.request_id, (fh.kind, body));
+        }
+        assert_eq!(replies[&1].0, REP_CONTAINER, "admitted work must finish");
+        assert_eq!(replies[&2].0, REP_DRAINING);
+        assert_eq!(replies[&3].0, REP_ERROR);
+        let (code, _) = proto::parse_error_body(&replies[&3].1).unwrap();
+        assert_eq!(code, ERR_DRAINING);
+        drop(s);
+        srv.join();
+    });
+}
+
+/// Concurrency hammer: many oversubscribed clients, every outcome is
+/// either success or a typed Busy, and the admission gauge never
+/// exceeds the budget (observed via concurrent status polling).
+#[test]
+fn hammer_never_exceeds_budget_and_always_answers() {
+    under_timeout(240, || {
+        let srv = Server::start(ServeConfig {
+            workers: 2,
+            budget_bytes: 1_000_000,
+            max_frame_bytes: 500_000,
+            ..ServeConfig::default()
+        })
+        .unwrap();
+        let addr = srv.tcp_addr().unwrap();
+        let hammers: Vec<_> = (0..4)
+            .map(|i| {
+                thread::spawn(move || {
+                    let mut c = Client::connect_tcp(addr).unwrap();
+                    let data = sample(100_000, 30 + i); // ~400 kB body
+                    let mut ok = 0u32;
+                    let mut busy = 0u32;
+                    for _ in 0..20 {
+                        match c.compress(&CompressParams::abs(1e-3), &data) {
+                            Ok(_) => ok += 1,
+                            Err(ClientError::Wire { code, .. }) if code == ERR_BUSY => busy += 1,
+                            Err(e) => panic!("unexpected failure under load: {e}"),
+                        }
+                    }
+                    (ok, busy)
+                })
+            })
+            .collect();
+        let watcher = thread::spawn(move || {
+            let mut c = Client::connect_tcp(addr).unwrap();
+            for _ in 0..50 {
+                let r = c.status().unwrap();
+                assert!(
+                    r.in_flight_bytes <= r.budget_bytes,
+                    "admission budget exceeded: {} > {}",
+                    r.in_flight_bytes,
+                    r.budget_bytes
+                );
+                thread::sleep(Duration::from_millis(5));
+            }
+        });
+        let mut total_ok = 0;
+        let mut total_busy = 0;
+        for t in hammers {
+            let (ok, busy) = t.join().unwrap();
+            total_ok += ok;
+            total_busy += busy;
+        }
+        watcher.join().unwrap();
+        assert_eq!(total_ok + total_busy, 80, "every request got an answer");
+        assert!(total_ok >= 1, "at least some requests must get through");
+        let mut c = Client::connect_tcp(addr).unwrap();
+        c.drain_server().unwrap();
+        srv.join();
+    });
+}
+
+/// Per-tenant counters classify outcomes and are queryable live.
+#[test]
+fn status_counters_track_tenants() {
+    under_timeout(120, || {
+        let srv = Server::start(test_cfg()).unwrap();
+        let addr = srv.tcp_addr().unwrap();
+        let mut c = Client::connect_tcp(addr).unwrap();
+        c.tenant = 7;
+        let data = sample(5_000, 40);
+        let container = c.compress(&CompressParams::abs(1e-3), &data).unwrap();
+        c.decompress(&container).unwrap();
+        expect_wire_err(
+            c.decompress(&[0u8; 64]),
+            ERR_CONTAINER,
+            "garbage decompress",
+        );
+        let report = c.status().unwrap();
+        assert!(!report.draining);
+        let t7 = report.tenants.iter().find(|(t, _)| *t == 7).unwrap().1;
+        assert_eq!(t7.requests, 3);
+        assert_eq!(t7.errors, 1);
+        assert_eq!(t7.timeouts, 0);
+        assert_eq!(t7.rejected, 0);
+        assert!(t7.bytes_in > 0);
+        assert!(t7.bytes_out as usize >= data.len() * 4, "decompress reply counted");
+        c.drain_server().unwrap();
+        srv.join();
+    });
+}
