@@ -32,7 +32,9 @@ fn main() -> anyhow::Result<()> {
 
     let eb = 1e-3f32;
     let mut cfg = EngineConfig::native(ErrorBound::Abs(eb));
-    cfg.container_version = ContainerVersion::V3; // the default, spelled out
+    // v3: index footer without parity frames — the leanest indexed
+    // layout when self-healing (v4, the default) isn't wanted.
+    cfg.container_version = ContainerVersion::V3;
     let (container, stats) = compress(&cfg, &data)?;
     let bytes = container.to_bytes();
     println!(

@@ -510,6 +510,72 @@ fn main() {
         }
     }
 
+    // ---- hotpath.parity: the v4 self-healing tax and payoff. Encode
+    // with and without interleaved XOR parity frames (throughput and
+    // size overhead), verify-scrub throughput on a clean archive, and
+    // the latency of rebuilding one corrupt chunk frame from its
+    // group's parity.
+    {
+        let n_chunks = 64usize;
+        let chunk = 4096usize;
+        let nv = n_chunks * chunk;
+        let xa = Suite::Cesm.generate(2, nv);
+        let mut cfg_v3 = EngineConfig::native(ErrorBound::Abs(1e-3));
+        cfg_v3.container_version = lc::container::ContainerVersion::V3;
+        cfg_v3.chunk_size = chunk;
+        let mut cfg_v4 = cfg_v3.clone();
+        cfg_v4.container_version = lc::container::ContainerVersion::V4;
+        cfg_v4.parity_group = 16;
+        let m_v3 = measure(1, reps, || {
+            let (c, _) = lc::coordinator::compress(&cfg_v3, &xa).unwrap();
+            std::hint::black_box(c.to_bytes().len());
+        });
+        let m_v4 = measure(1, reps, || {
+            let (c, _) = lc::coordinator::compress(&cfg_v4, &xa).unwrap();
+            std::hint::black_box(c.to_bytes().len());
+        });
+        let (c3, _) = lc::coordinator::compress(&cfg_v3, &xa).unwrap();
+        let (c4, _) = lc::coordinator::compress(&cfg_v4, &xa).unwrap();
+        let b3 = c3.to_bytes().len() as f64;
+        let bytes4 = c4.to_bytes();
+        let b4 = bytes4.len() as f64;
+        // Verify-scrub of a clean archive (the fast path: one full
+        // parse, nothing rewritten).
+        let m_scrub = measure(1, reps, || {
+            let r = lc::archive::scrub(&bytes4).unwrap();
+            std::hint::black_box(r.patched.is_none());
+        });
+        // Rebuild one corrupt chunk frame from its group's parity and
+        // re-validate the whole patched image.
+        let reader = lc::archive::Reader::from_bytes(bytes4.clone()).unwrap();
+        let ent = reader.entries()[n_chunks / 2];
+        let mut bad = bytes4.clone();
+        bad[ent.offset as usize + 24] ^= 0x3C;
+        let m_repair = measure(1, reps, || {
+            let r = lc::archive::scrub(&bad).unwrap();
+            std::hint::black_box(r.repaired_chunks.len());
+        });
+        let size_overhead = b4 / b3.max(1.0);
+        let repair_ms = m_repair.median.as_secs_f64() * 1e3;
+        let hot = vec![
+            ("parity_encode_v3_eps".to_string(), m_v3.eps(nv)),
+            ("parity_encode_v4_eps".to_string(), m_v4.eps(nv)),
+            ("parity_size_overhead".to_string(), size_overhead),
+            ("parity_scrub_clean_eps".to_string(), m_scrub.eps(nv)),
+            ("parity_repair_ms".to_string(), repair_ms),
+        ];
+        println!(
+            "json hotpath parity: encode {:.0} -> {:.0} val/s, size x{size_overhead:.4}, \
+             scrub {:.0} val/s, one-frame repair {repair_ms:.2} ms",
+            m_v3.eps(nv),
+            m_v4.eps(nv),
+            m_scrub.eps(nv)
+        );
+        if let Err(e) = update_bench_json(&json_path, "hotpath", &hot) {
+            eprintln!("failed to write {json_path}: {e}");
+        }
+    }
+
     // ---- hotpath.rle_scan: the zero/literal run-boundary scan core
     // (the rle0 encode hot loop) over the shuffled byte stream, scalar
     // SWAR probes vs the dispatched 32-byte AVX2 probes. Measured as

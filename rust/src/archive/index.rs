@@ -1,5 +1,5 @@
-//! The v3 index footer: serialization, parsing, and the hostile-input
-//! validation layer.
+//! The v3/v4 index footer: serialization, parsing, and the
+//! hostile-input validation layer.
 //!
 //! Byte layout (all integers little-endian; see
 //! [`crate::container`] for where the footer sits in the file):
@@ -11,6 +11,18 @@
 //! trailer := footer_offset u64, n_chunks u32, "LCX3"   (16 bytes)
 //! ```
 //!
+//! The v4 footer extends v3's with one parity entry per group between
+//! the chunk entries and the footer CRC, and widens the trailer:
+//!
+//! ```text
+//! footer4  := entry * n_chunks, parity * n_groups, crc32 u32
+//! parity   := offset u64, frame_len u32, crc32 u32     (16 bytes)
+//! trailer4 := footer_offset u64, n_chunks u32, parity_group u32,
+//!             n_groups u32, "LCX4"                     (24 bytes)
+//! ```
+//!
+//! The parity entry's `crc32` covers the *whole* serialized parity
+//! frame, so a scrub can verify a parity frame without re-deriving it.
 //! The trailer is fixed-size and sits immediately before the file CRC,
 //! so a reader locates the footer with one read from the end of the
 //! file. The trailer itself carries no CRC; instead every trailer field
@@ -19,7 +31,7 @@
 //! trailer cannot direct a reader out of bounds or into a giant
 //! allocation.
 
-use crate::container::{crc::crc32, Header};
+use crate::container::{crc::crc32, Header, ParityFrame};
 
 use super::stats::ChunkStats;
 
@@ -31,6 +43,12 @@ pub const TRAILER_LEN: usize = 16;
 pub const TRAILER_MAGIC: &[u8; 4] = b"LCX3";
 /// Footer bytes beyond the entries: footer CRC + trailer.
 pub const FOOTER_FIXED_OVERHEAD: usize = 4 + TRAILER_LEN;
+/// Serialized length of one v4 parity entry.
+pub const PARITY_ENTRY_LEN: usize = 16;
+/// Serialized length of the fixed v4 trailer.
+pub const TRAILER_LEN_V4: usize = 24;
+/// v4 trailer magic.
+pub const TRAILER_MAGIC_V4: &[u8; 4] = b"LCX4";
 
 /// One chunk's row in the index footer.
 #[derive(Debug, Clone, Copy, PartialEq, Eq)]
@@ -76,6 +94,47 @@ impl IndexEntry {
     }
 }
 
+/// One parity frame's row in the v4 index footer.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct ParityEntry {
+    /// Absolute byte offset of the parity frame (from file start).
+    pub offset: u64,
+    /// Total serialized parity frame length in bytes.
+    pub frame_len: u32,
+    /// CRC over the whole serialized parity frame, so a scrub can
+    /// verify parity integrity without re-deriving the XOR fold.
+    pub crc32: u32,
+}
+
+impl ParityEntry {
+    fn write_to(&self, out: &mut Vec<u8>) {
+        out.extend_from_slice(&self.offset.to_le_bytes());
+        out.extend_from_slice(&self.frame_len.to_le_bytes());
+        out.extend_from_slice(&self.crc32.to_le_bytes());
+    }
+
+    fn from_bytes(b: &[u8; PARITY_ENTRY_LEN]) -> ParityEntry {
+        ParityEntry {
+            offset: u64::from_le_bytes(b[0..8].try_into().unwrap()),
+            frame_len: u32::from_le_bytes(b[8..12].try_into().unwrap()),
+            crc32: u32::from_le_bytes(b[12..16].try_into().unwrap()),
+        }
+    }
+}
+
+/// The parsed fixed v4 trailer.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct TrailerV4 {
+    /// Absolute byte offset of the footer's first entry.
+    pub footer_offset: u64,
+    /// Chunk count (must match the header's).
+    pub n_chunks: u32,
+    /// Parity group size k (chunk frames per parity frame).
+    pub parity_group: u32,
+    /// Parity frame count (must equal `n_chunks.div_ceil(k)`).
+    pub n_groups: u32,
+}
+
 /// The parsed fixed trailer.
 #[derive(Debug, Clone, Copy, PartialEq, Eq)]
 pub struct Trailer {
@@ -107,6 +166,86 @@ pub fn write_footer(entries: &[IndexEntry], out: &mut Vec<u8>) {
     out.extend_from_slice(&footer_offset.to_le_bytes());
     out.extend_from_slice(&(entries.len() as u32).to_le_bytes());
     out.extend_from_slice(TRAILER_MAGIC);
+}
+
+/// Append the v4 index footer (chunk entries, parity entries, footer
+/// CRC, widened trailer) to a file body ending right after the last
+/// parity frame. The file CRC is NOT appended here — the container
+/// serializer owns it (and the finalization marker after it).
+pub fn write_footer_v4(
+    entries: &[IndexEntry],
+    parity: &[ParityEntry],
+    parity_group: u32,
+    out: &mut Vec<u8>,
+) {
+    let footer_offset = out.len() as u64;
+    let start = out.len();
+    for e in entries {
+        e.write_to(out);
+    }
+    for p in parity {
+        p.write_to(out);
+    }
+    let footer_crc = crc32(&out[start..]);
+    out.extend_from_slice(&footer_crc.to_le_bytes());
+    out.extend_from_slice(&footer_offset.to_le_bytes());
+    out.extend_from_slice(&(entries.len() as u32).to_le_bytes());
+    out.extend_from_slice(&parity_group.to_le_bytes());
+    out.extend_from_slice(&(parity.len() as u32).to_le_bytes());
+    out.extend_from_slice(TRAILER_MAGIC_V4);
+}
+
+/// Parse the fixed v4 trailer from its serialized bytes.
+pub fn parse_trailer_v4(b: &[u8]) -> Result<TrailerV4, String> {
+    if b.len() != TRAILER_LEN_V4 {
+        return Err(format!(
+            "v4 index trailer wants {TRAILER_LEN_V4} bytes, got {}",
+            b.len()
+        ));
+    }
+    if &b[20..24] != TRAILER_MAGIC_V4 {
+        return Err("bad index trailer magic (not a v4 index)".into());
+    }
+    Ok(TrailerV4 {
+        footer_offset: u64::from_le_bytes(b[0..8].try_into().unwrap()),
+        n_chunks: u32::from_le_bytes(b[8..12].try_into().unwrap()),
+        parity_group: u32::from_le_bytes(b[12..16].try_into().unwrap()),
+        n_groups: u32::from_le_bytes(b[16..20].try_into().unwrap()),
+    })
+}
+
+/// Parse a v4 footer block
+/// (`chunk entries || parity entries || footer crc32`) after verifying
+/// the CRC. The caller sizes the block from *validated* facts (file
+/// length, header chunk count, trailer group count), so the parse can
+/// never be made to allocate beyond it.
+pub fn parse_entries_v4(
+    block: &[u8],
+    n_chunks: u32,
+    n_groups: u32,
+) -> Result<(Vec<IndexEntry>, Vec<ParityEntry>), String> {
+    let expect = n_chunks as u64 * ENTRY_LEN as u64 + n_groups as u64 * PARITY_ENTRY_LEN as u64 + 4;
+    if block.len() as u64 != expect {
+        return Err(format!(
+            "v4 index footer block has bad length {} (expected {expect})",
+            block.len()
+        ));
+    }
+    let body = &block[..block.len() - 4];
+    let want = u32::from_le_bytes(block[block.len() - 4..].try_into().unwrap());
+    if crc32(body) != want {
+        return Err("index footer CRC mismatch".into());
+    }
+    let split = n_chunks as usize * ENTRY_LEN;
+    let mut entries = Vec::with_capacity(n_chunks as usize);
+    for e in body[..split].chunks_exact(ENTRY_LEN) {
+        entries.push(IndexEntry::from_bytes(e.try_into().unwrap()));
+    }
+    let mut parity = Vec::with_capacity(n_groups as usize);
+    for p in body[split..].chunks_exact(PARITY_ENTRY_LEN) {
+        parity.push(ParityEntry::from_bytes(p.try_into().unwrap()));
+    }
+    Ok((entries, parity))
 }
 
 /// Parse the fixed trailer from its serialized bytes.
@@ -219,6 +358,116 @@ impl Index {
         }
         Ok(())
     }
+
+    /// The v4 variant of [`Index::validate_layout`]: the same per-chunk
+    /// checks, plus a group-aware contiguity walk — after every
+    /// `header.parity_group` chunk frames (and after the short last
+    /// group) exactly one parity frame must sit at the cursor, with
+    /// exactly the length its group implies
+    /// ([`ParityFrame::frame_len`] of the member count and the longest
+    /// member frame). A hostile footer therefore cannot alias parity
+    /// frames onto chunk frames or stretch one past the footer.
+    pub fn validate_layout_v4(
+        &self,
+        header: &Header,
+        header_len: u64,
+        footer_offset: u64,
+        parity: &[ParityEntry],
+    ) -> Result<(), String> {
+        if self.entries.len() != header.n_chunks as usize {
+            return Err(format!(
+                "index has {} entries, header declares {} chunks",
+                self.entries.len(),
+                header.n_chunks
+            ));
+        }
+        let k = header.parity_group as usize;
+        if k == 0 {
+            return Err("v4 layout validation needs a nonzero parity group size".into());
+        }
+        let expected_groups = self.entries.len().div_ceil(k);
+        if parity.len() != expected_groups {
+            return Err(format!(
+                "index has {} parity entries, the layout implies {expected_groups}",
+                parity.len()
+            ));
+        }
+        let chunk_size = header.chunk_size;
+        let full_plan = header.full_plan();
+        let frame_head = header.version.chunk_frame_header_len() as u64;
+        let mut cursor = header_len;
+        let mut total: u64 = 0;
+        let last = self.entries.len().saturating_sub(1);
+        let mut group_max: usize = 0;
+        let mut group_n: usize = 0;
+        let mut g = 0usize;
+        for (i, e) in self.entries.iter().enumerate() {
+            if e.offset != cursor {
+                return Err(format!(
+                    "chunk {i} offset {} breaks contiguity (expected {cursor})",
+                    e.offset
+                ));
+            }
+            if (e.frame_len as u64) < frame_head {
+                return Err(format!(
+                    "chunk {i} frame length {} is shorter than its header",
+                    e.frame_len
+                ));
+            }
+            cursor += e.frame_len as u64;
+            if cursor > footer_offset {
+                return Err(format!("chunk {i} frame runs past the index footer"));
+            }
+            let n = e.n_values;
+            if n == 0 || n > chunk_size || (i != last && n != chunk_size) {
+                return Err(format!(
+                    "chunk {i} claims {n} values against chunk size {chunk_size}"
+                ));
+            }
+            if e.plan & !full_plan != 0 {
+                return Err(format!(
+                    "chunk {i} plan {:#04x} has bits outside the {} header stages",
+                    e.plan,
+                    header.stages.len()
+                ));
+            }
+            total += n as u64;
+            group_max = group_max.max(e.frame_len as usize);
+            group_n += 1;
+            if group_n == k || i == last {
+                let pe = &parity[g];
+                if pe.offset != cursor {
+                    return Err(format!(
+                        "parity frame {g} offset {} breaks contiguity (expected {cursor})",
+                        pe.offset
+                    ));
+                }
+                let want = ParityFrame::frame_len(group_n, group_max) as u64;
+                if pe.frame_len as u64 != want {
+                    return Err(format!(
+                        "parity frame {g} length {} disagrees with its group (expected {want})",
+                        pe.frame_len
+                    ));
+                }
+                cursor += pe.frame_len as u64;
+                if cursor > footer_offset {
+                    return Err(format!("parity frame {g} runs past the index footer"));
+                }
+                group_max = 0;
+                group_n = 0;
+                g += 1;
+            }
+        }
+        if cursor != footer_offset {
+            return Err(format!(
+                "frames end at {cursor}, index footer starts at {footer_offset}"
+            ));
+        }
+        if total != header.n_values {
+            return Err(format!("chunk values {total} != header {}", header.n_values));
+        }
+        Ok(())
+    }
 }
 
 #[cfg(test)]
@@ -257,6 +506,7 @@ mod tests {
                 crate::codec::Stage::Huffman,
             ],
             n_chunks,
+            parity_group: 0,
         }
     }
 
@@ -289,6 +539,40 @@ mod tests {
         assert!(parse_trailer(&bad[footer_end..]).is_err());
         assert!(parse_trailer(&out[..TRAILER_LEN - 1]).is_err());
         assert!(parse_entries(&out[40..footer_end - 1]).is_err());
+    }
+
+    #[test]
+    fn v4_footer_roundtrips_bit_for_bit() {
+        let entries = vec![entry(40, 60, 100), entry(100, 37, 50)];
+        let parity = vec![
+            ParityEntry { offset: 160, frame_len: 104, crc32: 0x1234_5678 },
+            ParityEntry { offset: 264, frame_len: 81, crc32: 0x9ABC_DEF0 },
+        ];
+        let mut out = vec![0u8; 40];
+        write_footer_v4(&entries, &parity, 1, &mut out);
+        assert_eq!(
+            out.len(),
+            40 + 2 * ENTRY_LEN + 2 * PARITY_ENTRY_LEN + 4 + TRAILER_LEN_V4
+        );
+        let block = &out[40..out.len() - TRAILER_LEN_V4];
+        let (e_back, p_back) = parse_entries_v4(block, 2, 2).unwrap();
+        assert_eq!(e_back, entries);
+        assert_eq!(p_back, parity);
+        let t = parse_trailer_v4(&out[out.len() - TRAILER_LEN_V4..]).unwrap();
+        assert_eq!(
+            t,
+            TrailerV4 { footer_offset: 40, n_chunks: 2, parity_group: 1, n_groups: 2 }
+        );
+        // Corruption anywhere in the block fires the footer CRC; a
+        // mangled trailer magic or length fails the trailer parse.
+        let mut bad = out.clone();
+        bad[45] ^= 1;
+        assert!(parse_entries_v4(&bad[40..bad.len() - TRAILER_LEN_V4], 2, 2).is_err());
+        let mut bad = out.clone();
+        *bad.last_mut().unwrap() ^= 0xFF;
+        assert!(parse_trailer_v4(&bad[bad.len() - TRAILER_LEN_V4..]).is_err());
+        assert!(parse_trailer_v4(&out[..TRAILER_LEN_V4 - 1]).is_err());
+        assert!(parse_entries_v4(block, 2, 1).is_err());
     }
 
     #[test]
@@ -336,5 +620,36 @@ mod tests {
         let mut zero = good;
         zero.entries[1].n_values = 0;
         assert!(zero.validate_layout(&header(2, 100), 40, 137).is_err());
+    }
+
+    #[test]
+    fn v4_layout_validation_walks_groups() {
+        let mut h = header(2, 150);
+        h.version = ContainerVersion::V4;
+        h.parity_group = 1;
+        // k=1: chunk(40,60), parity(100,104 = 28+8+8+60),
+        // chunk(204,37), parity(241,81 = 28+8+8+37), footer at 322.
+        let idx = Index {
+            entries: vec![entry(40, 60, 100), entry(204, 37, 50)],
+        };
+        let parity = vec![
+            ParityEntry { offset: 100, frame_len: 104, crc32: 0 },
+            ParityEntry { offset: 241, frame_len: 81, crc32: 0 },
+        ];
+        idx.validate_layout_v4(&h, 40, 322, &parity).unwrap();
+        // Wrong parity entry count for the layout.
+        assert!(idx.validate_layout_v4(&h, 40, 322, &parity[..1]).is_err());
+        // Parity frame length that disagrees with its group.
+        let mut bad = parity.clone();
+        bad[0].frame_len = 105;
+        assert!(idx.validate_layout_v4(&h, 40, 322, &bad).is_err());
+        // Parity frame at the wrong offset.
+        let mut bad = parity.clone();
+        bad[1].offset = 240;
+        assert!(idx.validate_layout_v4(&h, 40, 322, &bad).is_err());
+        // Zero group size is rejected outright.
+        let mut h0 = h.clone();
+        h0.parity_group = 0;
+        assert!(idx.validate_layout_v4(&h0, 40, 322, &parity).is_err());
     }
 }

@@ -13,10 +13,16 @@
 //! [`crate::container`] for the byte-level layout and [`index`] for
 //! the footer encoding.
 //!
+//! Container **v4** (magic `LCZ4`, now the default) keeps the v3
+//! layout and interleaves one XOR **parity frame** per group of
+//! `parity_group` chunk frames, turning corruption *detection* into
+//! single-erasure *repair* — see [`crate::container`] for the byte
+//! layout and [`repair`] for scrub/salvage.
+//!
 //! # The random-access contract
 //!
-//! * **v3 only.** [`Reader::open_indexed`] succeeds only on v3
-//!   containers; v1/v2 files return the explicit
+//! * **v3/v4 only.** [`Reader::open_indexed`] succeeds only on
+//!   indexed containers; v1/v2 files return the explicit
 //!   [`ArchiveError::NotIndexed`] so callers fall back to a linear
 //!   scan (`coordinator::decompress` / `decompress_stream`) knowingly
 //!   — there is no silent full-file decode hiding behind a seek API.
@@ -46,14 +52,45 @@
 //! `lc::reference::rebuild_index` re-derives the entire footer from a
 //! container's frames alone (naive decode, per-element min/max) and
 //! must match the writer's footer exactly — the differential pin that
-//! keeps writer and index honest against each other.
+//! keeps writer and index honest against each other (and
+//! `lc::reference::rebuild_parity` does the same for v4 parity
+//! frames).
+//!
+//! # The recovery contract (v4)
+//!
+//! What repair and salvage guarantee — and refuse:
+//!
+//! * **Repaired means bit-exact.** A frame rebuilt from parity is
+//!   accepted only if its internal chunk CRC (and its index entry)
+//!   verify; a repair that cannot prove itself is reported as a
+//!   failure, never returned as data.
+//! * **One erasure per group.** XOR parity rebuilds exactly one
+//!   corrupt frame per group. Two or more corrupt frames in one group
+//!   yield the typed [`ArchiveError::Unrecoverable`] naming the group;
+//!   *other* groups still decode, and [`repair::salvage`] reports the
+//!   damaged chunks as explicit holes.
+//! * **Holes are never filled in.** Salvage output contains only
+//!   byte-ranges that decoded (or repaired) bit-exactly; everything
+//!   else is listed in the hole map with a reason. No fabricated,
+//!   interpolated, or zero-filled values, ever.
+//! * **Torn tails are typed.** A v4 writer appends a finalization
+//!   marker after the file CRC as its very last write; a file without
+//!   it fails as [`ArchiveError::Unfinalized`] instead of passing for
+//!   a shorter-but-valid archive. Salvage still walks whatever
+//!   survives.
+//! * **Hostile input cannot amplify.** Salvage walks damaged files
+//!   with bounds-checked arithmetic and caps every allocation by what
+//!   the file actually holds — corrupt metadata produces typed errors
+//!   or holes, never a panic or an OOM.
 
 pub mod index;
 pub mod reader;
+pub mod repair;
 pub mod stats;
 
 pub use index::{Index, IndexEntry};
 pub use reader::{ChunkHandle, Reader, Source};
+pub use repair::{salvage, scrub, Hole, Salvage, SalvageReport, ScrubReport};
 pub use stats::ChunkStats;
 
 use crate::container::ContainerVersion;
@@ -82,6 +119,12 @@ pub enum ArchiveError {
     Container(String),
     /// A chunk failed to decode.
     Decode(String),
+    /// More corrupt frames in one parity group than XOR parity can
+    /// rebuild (two or more erasures; the code repairs exactly one).
+    Unrecoverable { group: usize },
+    /// A v4 container without its finalization marker: the writer was
+    /// interrupted (torn write) and the tail cannot be trusted.
+    Unfinalized,
 }
 
 impl std::fmt::Display for ArchiveError {
@@ -90,7 +133,7 @@ impl std::fmt::Display for ArchiveError {
             ArchiveError::NotIndexed { version } => write!(
                 f,
                 "container version {version:?} has no index footer; \
-                 random access needs v3 (fall back to a linear scan)"
+                 random access needs v3 or v4 (fall back to a linear scan)"
             ),
             ArchiveError::Truncated => write!(f, "truncated container"),
             ArchiveError::BadTrailer(d) => write!(f, "bad index trailer: {d}"),
@@ -106,6 +149,16 @@ impl std::fmt::Display for ArchiveError {
             ArchiveError::Io(d) => write!(f, "archive I/O error: {d}"),
             ArchiveError::Container(d) => write!(f, "bad container: {d}"),
             ArchiveError::Decode(d) => write!(f, "chunk decode failed: {d}"),
+            ArchiveError::Unrecoverable { group } => write!(
+                f,
+                "parity group {group} is beyond single-erasure repair \
+                 (two or more corrupt frames)"
+            ),
+            ArchiveError::Unfinalized => write!(
+                f,
+                "{}",
+                crate::container::UNFINALIZED_DETAIL
+            ),
         }
     }
 }

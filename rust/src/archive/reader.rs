@@ -7,8 +7,9 @@ use std::sync::Mutex;
 
 use crate::codec::Pipeline;
 use crate::container::{
-    parse_chunk_frame_header, ChunkRecord, ContainerVersion, Header, CHUNK_FRAME_HEADER_LEN,
-    CHUNK_FRAME_HEADER_LEN_V2, HEADER_FIXED_LEN,
+    chunk_frame_crc_ok, crc::crc32, parse_chunk_frame_header, ChunkRecord, ContainerVersion,
+    Header, ParityFrame, CHUNK_FRAME_HEADER_LEN, CHUNK_FRAME_HEADER_LEN_V2, FINALIZE_MARKER,
+    HEADER_FIXED_LEN,
 };
 use crate::coordinator::engine::{decode_chunk_record_into, quantizer_from_header};
 use crate::coordinator::EngineConfig;
@@ -16,6 +17,7 @@ use crate::quantizer::QuantizerConfig;
 use crate::scratch::Scratch;
 
 use super::index::{self, Index, IndexEntry};
+use super::repair::{push_hole, Salvage, SalvageReport, SalvageSegment};
 use super::stats::ChunkStats;
 use super::ArchiveError;
 
@@ -66,8 +68,21 @@ impl Source {
                 let mut f = file.lock().unwrap();
                 f.seek(SeekFrom::Start(offset))
                     .map_err(|e| ArchiveError::Io(e.to_string()))?;
-                f.read_exact(buf)
-                    .map_err(|e| ArchiveError::Io(e.to_string()))
+                // Positional reads loop explicitly: a short read means
+                // "ask again", not corruption (a signal landing during
+                // a large decode_range read returns partial data or
+                // EINTR, and must never surface as a spurious error —
+                // only a genuine EOF is `Truncated`).
+                let mut filled = 0usize;
+                while filled < buf.len() {
+                    match f.read(&mut buf[filled..]) {
+                        Ok(0) => return Err(ArchiveError::Truncated),
+                        Ok(n) => filled += n,
+                        Err(e) if e.kind() == std::io::ErrorKind::Interrupted => continue,
+                        Err(e) => return Err(ArchiveError::Io(e.to_string())),
+                    }
+                }
+                Ok(())
             }
         }
     }
@@ -113,12 +128,14 @@ impl ChunkHandle {
     }
 }
 
-/// A v3 container opened for random access (see the module docs of
+/// A v3/v4 container opened for random access (see the module docs of
 /// [`crate::archive`] for the contract).
 pub struct Reader {
     source: Source,
     header: Header,
     index: Index,
+    /// v4 parity entries, one per group (empty for v3).
+    parity: Vec<index::ParityEntry>,
     cfg: EngineConfig,
     qc: QuantizerConfig,
     pipeline: Pipeline,
@@ -127,12 +144,14 @@ pub struct Reader {
 }
 
 impl Reader {
-    /// Open an indexed (v3) container from any [`Source`]. v1/v2
+    /// Open an indexed (v3/v4) container from any [`Source`]. v1/v2
     /// containers return [`ArchiveError::NotIndexed`] — they remain
     /// fully decodable through the linear-scan paths, just not
     /// randomly addressable. Validates the trailer, footer CRC, and
     /// the whole index layout against hostile input before returning;
-    /// chunk frames themselves are not read here.
+    /// chunk frames themselves are not read here. A v4 file without
+    /// its finalization marker is the typed
+    /// [`ArchiveError::Unfinalized`].
     pub fn open_indexed(source: Source) -> Result<Reader, ArchiveError> {
         let file_len = source.len();
         // Header prefix: the fixed part, at most MAX_STAGES stage
@@ -140,47 +159,111 @@ impl Reader {
         let head_want = (HEADER_FIXED_LEN + crate::codec::MAX_STAGES + 4).min(file_len as usize);
         let mut head = vec![0u8; head_want];
         source.read_exact_at(0, &mut head)?;
-        let (header, header_len) = Header::parse_prefix(&head).map_err(ArchiveError::Container)?;
+        let (mut header, header_len) =
+            Header::parse_prefix(&head).map_err(ArchiveError::Container)?;
         let header_len = header_len as u64;
-        if header.version != ContainerVersion::V3 {
-            return Err(ArchiveError::NotIndexed {
-                version: header.version,
-            });
-        }
-        // The trailer and the file CRC are the last bytes of the file.
-        let tail_len = (index::TRAILER_LEN + 4) as u64;
-        if file_len < header_len + tail_len {
-            return Err(ArchiveError::Truncated);
-        }
-        let mut tail = [0u8; index::TRAILER_LEN];
-        source.read_exact_at(file_len - tail_len, &mut tail)?;
-        let trailer = index::parse_trailer(&tail).map_err(ArchiveError::BadTrailer)?;
-        if trailer.n_chunks != header.n_chunks {
-            return Err(ArchiveError::BadTrailer(format!(
-                "trailer declares {} chunks, header {}",
-                trailer.n_chunks, header.n_chunks
-            )));
-        }
-        // Bounds BEFORE any allocation: the footer must sit exactly
-        // between the header and the trailer, so a hostile trailer can
-        // neither point out of bounds nor inflate the footer read.
-        let footer_end = file_len - tail_len;
-        if trailer.footer_offset < header_len
-            || trailer.footer_offset.checked_add(trailer.footer_len()) != Some(footer_end)
-        {
-            return Err(ArchiveError::BadTrailer(format!(
-                "footer span {}+{} does not fit the file ({footer_end} bytes before trailer)",
-                trailer.footer_offset,
-                trailer.footer_len()
-            )));
-        }
-        let mut block = vec![0u8; trailer.footer_len() as usize];
-        source.read_exact_at(trailer.footer_offset, &mut block)?;
-        let entries = index::parse_entries(&block).map_err(ArchiveError::BadIndex)?;
-        let index = Index { entries };
-        index
-            .validate_layout(&header, header_len, trailer.footer_offset)
-            .map_err(ArchiveError::BadIndex)?;
+        let (index, parity) = match header.version {
+            ContainerVersion::V3 => {
+                // The trailer and the file CRC are the last bytes of
+                // the file.
+                let tail_len = (index::TRAILER_LEN + 4) as u64;
+                if file_len < header_len + tail_len {
+                    return Err(ArchiveError::Truncated);
+                }
+                let mut tail = [0u8; index::TRAILER_LEN];
+                source.read_exact_at(file_len - tail_len, &mut tail)?;
+                let trailer = index::parse_trailer(&tail).map_err(ArchiveError::BadTrailer)?;
+                if trailer.n_chunks != header.n_chunks {
+                    return Err(ArchiveError::BadTrailer(format!(
+                        "trailer declares {} chunks, header {}",
+                        trailer.n_chunks, header.n_chunks
+                    )));
+                }
+                // Bounds BEFORE any allocation: the footer must sit
+                // exactly between the header and the trailer, so a
+                // hostile trailer can neither point out of bounds nor
+                // inflate the footer read.
+                let footer_end = file_len - tail_len;
+                if trailer.footer_offset < header_len
+                    || trailer.footer_offset.checked_add(trailer.footer_len())
+                        != Some(footer_end)
+                {
+                    return Err(ArchiveError::BadTrailer(format!(
+                        "footer span {}+{} does not fit the file \
+                         ({footer_end} bytes before trailer)",
+                        trailer.footer_offset,
+                        trailer.footer_len()
+                    )));
+                }
+                let mut block = vec![0u8; trailer.footer_len() as usize];
+                source.read_exact_at(trailer.footer_offset, &mut block)?;
+                let entries = index::parse_entries(&block).map_err(ArchiveError::BadIndex)?;
+                let index = Index { entries };
+                index
+                    .validate_layout(&header, header_len, trailer.footer_offset)
+                    .map_err(ArchiveError::BadIndex)?;
+                (index, Vec::new())
+            }
+            ContainerVersion::V4 => {
+                // v4 tail: trailer, file CRC, finalization marker.
+                let tail_len = (index::TRAILER_LEN_V4 + 4 + FINALIZE_MARKER.len()) as u64;
+                if file_len < header_len + tail_len {
+                    return Err(ArchiveError::Truncated);
+                }
+                let mut marker = [0u8; 8];
+                source.read_exact_at(file_len - 8, &mut marker)?;
+                if &marker != FINALIZE_MARKER {
+                    return Err(ArchiveError::Unfinalized);
+                }
+                let mut tail = [0u8; index::TRAILER_LEN_V4];
+                source.read_exact_at(file_len - tail_len, &mut tail)?;
+                let trailer = index::parse_trailer_v4(&tail).map_err(ArchiveError::BadTrailer)?;
+                if trailer.n_chunks != header.n_chunks {
+                    return Err(ArchiveError::BadTrailer(format!(
+                        "trailer declares {} chunks, header {}",
+                        trailer.n_chunks, header.n_chunks
+                    )));
+                }
+                if trailer.parity_group == 0 {
+                    return Err(ArchiveError::BadTrailer(
+                        "zero parity group size".into(),
+                    ));
+                }
+                if u64::from(trailer.n_groups)
+                    != u64::from(trailer.n_chunks).div_ceil(u64::from(trailer.parity_group))
+                {
+                    return Err(ArchiveError::BadTrailer(format!(
+                        "{} parity groups for {} chunks in groups of {}",
+                        trailer.n_groups, trailer.n_chunks, trailer.parity_group
+                    )));
+                }
+                header.parity_group = trailer.parity_group;
+                let footer_len = trailer.n_chunks as u64 * index::ENTRY_LEN as u64
+                    + trailer.n_groups as u64 * index::PARITY_ENTRY_LEN as u64
+                    + 4;
+                let footer_end = file_len - tail_len;
+                if trailer.footer_offset < header_len
+                    || trailer.footer_offset.checked_add(footer_len) != Some(footer_end)
+                {
+                    return Err(ArchiveError::BadTrailer(format!(
+                        "footer span {}+{footer_len} does not fit the file \
+                         ({footer_end} bytes before trailer)",
+                        trailer.footer_offset
+                    )));
+                }
+                let mut block = vec![0u8; footer_len as usize];
+                source.read_exact_at(trailer.footer_offset, &mut block)?;
+                let (entries, parity) =
+                    index::parse_entries_v4(&block, trailer.n_chunks, trailer.n_groups)
+                        .map_err(ArchiveError::BadIndex)?;
+                let index = Index { entries };
+                index
+                    .validate_layout_v4(&header, header_len, trailer.footer_offset, &parity)
+                    .map_err(ArchiveError::BadIndex)?;
+                (index, parity)
+            }
+            version => return Err(ArchiveError::NotIndexed { version }),
+        };
 
         let mut cfg = EngineConfig::native(header.bound);
         cfg.variant = header.variant;
@@ -192,6 +275,7 @@ impl Reader {
             source,
             header,
             index,
+            parity,
             cfg,
             qc,
             pipeline,
@@ -217,6 +301,11 @@ impl Reader {
     /// The validated index footer entries, one per chunk.
     pub fn entries(&self) -> &[IndexEntry] {
         &self.index.entries
+    }
+
+    /// The validated v4 parity entries, one per group (empty for v3).
+    pub fn parity_entries(&self) -> &[index::ParityEntry] {
+        &self.parity
     }
 
     pub fn n_values(&self) -> u64 {
@@ -305,7 +394,19 @@ impl Reader {
             let frame = buf
                 .get(lo..lo + e.frame_len as usize)
                 .ok_or_else(|| ArchiveError::BadIndex("frame slice out of bounds".into()))?;
-            records.push(parse_frame_against_entry(first + k, frame, e)?);
+            let rec = match parse_frame_against_entry(first + k, frame, e) {
+                Ok(rec) => rec,
+                // v4: a frame that fails its CRC (or disagrees with
+                // its entry) is a located erasure — rebuild it from
+                // the group's parity before giving up.
+                Err(ArchiveError::ChunkCrc { .. } | ArchiveError::ChunkMismatch { .. })
+                    if self.header.version == ContainerVersion::V4 =>
+                {
+                    self.repair_chunk_record(first + k)?
+                }
+                Err(err) => return Err(err),
+            };
+            records.push(rec);
         }
 
         // Carve the output into one disjoint slot per chunk; first and
@@ -404,6 +505,175 @@ impl Reader {
             return Err(e);
         }
         Ok(out)
+    }
+
+    /// Rebuild chunk `chunk_idx`'s frame from its group's XOR parity
+    /// (v4 only). The group's member frames and its parity frame are
+    /// one contiguous byte span; per-frame CRC checks against the
+    /// index locate the erasures. Exactly one erased member (this one)
+    /// repairs bit-exactly — the rebuilt frame must verify its own
+    /// chunk CRC before it is trusted. Anything else is the typed
+    /// [`ArchiveError::Unrecoverable`] naming the group.
+    fn repair_chunk_record(&self, chunk_idx: usize) -> Result<ChunkRecord, ArchiveError> {
+        let k = self.header.parity_group as usize;
+        if self.header.version != ContainerVersion::V4 || k == 0 {
+            return Err(ArchiveError::ChunkCrc { index: chunk_idx });
+        }
+        let g = chunk_idx / k;
+        let base = g * k;
+        let members = &self.index.entries[base..(base + k).min(self.index.entries.len())];
+        let pe = self
+            .parity
+            .get(g)
+            .ok_or_else(|| ArchiveError::BadIndex(format!("no parity entry for group {g}")))?;
+        // Members are contiguous and their parity frame follows the
+        // last one (validated at open), so the whole group is one
+        // positional read.
+        let b0 = members[0].offset;
+        let b1 = pe.offset + pe.frame_len as u64;
+        let buf = self.source.span(b0, (b1 - b0) as usize)?;
+        // The parity frame must itself be intact: its footer-entry CRC
+        // guards the image, then the parse re-verifies head and data
+        // CRCs. A corrupt parity frame plus a corrupt member is two
+        // erasures — beyond the code.
+        let p_lo = (pe.offset - b0) as usize;
+        let p_img = &buf[p_lo..p_lo + pe.frame_len as usize];
+        if crc32(p_img) != pe.crc32 {
+            return Err(ArchiveError::Unrecoverable { group: g });
+        }
+        let (pf, used) =
+            ParityFrame::parse(p_img).map_err(|_| ArchiveError::Unrecoverable { group: g })?;
+        if used != p_img.len()
+            || pf.group != g as u32
+            || pf.group_start != b0
+            || pf.members.len() != members.len()
+        {
+            return Err(ArchiveError::Unrecoverable { group: g });
+        }
+        let mut present: Vec<Option<&[u8]>> = Vec::with_capacity(members.len());
+        let mut bad: Vec<usize> = Vec::new();
+        for (mi, e) in members.iter().enumerate() {
+            if pf.members[mi].0 != e.frame_len || pf.members[mi].1 != e.crc32 {
+                // Parity table and index disagree about the group —
+                // no way to tell which is lying.
+                return Err(ArchiveError::Unrecoverable { group: g });
+            }
+            let lo = (e.offset - b0) as usize;
+            let frame = &buf[lo..lo + e.frame_len as usize];
+            if chunk_frame_crc_ok(frame, e.crc32) {
+                present.push(Some(frame));
+            } else {
+                present.push(None);
+                bad.push(mi);
+            }
+        }
+        if bad.len() != 1 {
+            return Err(ArchiveError::Unrecoverable { group: g });
+        }
+        let mi = bad[0];
+        if base + mi != chunk_idx {
+            // The frame we were asked about verifies fine; the
+            // group's erasure is a different chunk. Report the
+            // original failure rather than repairing the wrong frame.
+            return Err(ArchiveError::ChunkMismatch {
+                index: chunk_idx,
+                detail: "frame CRC verifies; the parity group's erasure is elsewhere".into(),
+            });
+        }
+        let rebuilt = pf
+            .repair(&present)
+            .map_err(|_| ArchiveError::Unrecoverable { group: g })?;
+        // The rebuilt frame is self-validating: parse_frame_against_
+        // entry re-checks every redundant field AND the internal chunk
+        // CRC, so a wrong rebuild can never be returned as data.
+        parse_frame_against_entry(chunk_idx, &rebuilt, &members[mi])
+            .map_err(|_| ArchiveError::Unrecoverable { group: g })
+    }
+
+    /// Walk every chunk of a (possibly damaged) indexed container and
+    /// recover everything that can be proven bit-exact: intact chunks
+    /// decode normally, single-erasure chunks repair through parity
+    /// (v4), and everything else becomes an explicit hole in the
+    /// report — never fabricated bytes. Requires the index to have
+    /// survived (the reader opened); for files whose tail is gone, use
+    /// [`crate::archive::repair::salvage`], which falls back to a
+    /// frame-resync scan.
+    pub fn decode_salvage(&self) -> Result<Salvage, ArchiveError> {
+        let cs = self.header.chunk_size as u64;
+        let mut segments: Vec<SalvageSegment> = Vec::new();
+        let mut report = SalvageReport {
+            n_values: self.header.n_values,
+            chunk_size: self.header.chunk_size,
+            n_chunks: self.index.entries.len(),
+            recovered: Vec::new(),
+            holes: Vec::new(),
+            repaired_chunks: Vec::new(),
+            unplaced_frames: 0,
+            used_resync: false,
+        };
+        let mut scratch = Scratch::new();
+        for (i, e) in self.index.entries.iter().enumerate() {
+            let elem_start = i as u64 * cs;
+            let elem_end = elem_start + e.n_values as u64;
+            // Fetch + parse (+ repair) each chunk independently, so
+            // one bad chunk never poisons its neighbors.
+            let fetched: Result<(ChunkRecord, bool), ArchiveError> = self
+                .source
+                .span(e.offset, e.frame_len as usize)
+                .and_then(|frame| match parse_frame_against_entry(i, &frame, e) {
+                    Ok(rec) => Ok((rec, false)),
+                    Err(ArchiveError::ChunkCrc { .. } | ArchiveError::ChunkMismatch { .. })
+                        if self.header.version == ContainerVersion::V4 =>
+                    {
+                        self.repair_chunk_record(i).map(|rec| (rec, true))
+                    }
+                    Err(err) => Err(err),
+                });
+            match fetched {
+                Ok((rec, repaired)) => {
+                    let mut y = vec![0f32; rec.n_values as usize];
+                    match decode_chunk_record_into(
+                        &self.cfg,
+                        &self.qc,
+                        &self.pipeline,
+                        &rec,
+                        &mut scratch,
+                        &mut y,
+                    ) {
+                        Ok(()) => {
+                            if repaired {
+                                report.repaired_chunks.push(i);
+                            }
+                            match segments.last_mut() {
+                                Some(s)
+                                    if s.elem_start + s.values.len() as u64 == elem_start =>
+                                {
+                                    s.values.extend_from_slice(&y)
+                                }
+                                _ => segments.push(SalvageSegment {
+                                    elem_start,
+                                    values: y,
+                                }),
+                            }
+                            match report.recovered.last_mut() {
+                                Some(r) if r.end == elem_start => r.end = elem_end,
+                                _ => report.recovered.push(elem_start..elem_end),
+                            }
+                        }
+                        Err(err) => push_hole(
+                            &mut report.holes,
+                            i,
+                            elem_start..elem_end,
+                            format!("decode failed: {err:#}"),
+                        ),
+                    }
+                }
+                Err(err) => {
+                    push_hole(&mut report.holes, i, elem_start..elem_end, err.to_string())
+                }
+            }
+        }
+        Ok(Salvage { segments, report })
     }
 }
 
@@ -557,6 +827,69 @@ mod tests {
         }
         drop(r);
         std::fs::remove_file(&path).unwrap();
+    }
+
+    fn v4_bytes(n: usize, chunk_size: usize, k: u32) -> (Vec<u8>, Vec<f32>) {
+        let x = Suite::Cesm.generate(7, n);
+        let mut cfg = EngineConfig::native(ErrorBound::Abs(1e-3));
+        cfg.chunk_size = chunk_size;
+        cfg.container_version = ContainerVersion::V4;
+        cfg.parity_group = k;
+        let (container, _) = compress(&cfg, &x).unwrap();
+        let (golden, _) = crate::coordinator::decompress(&cfg, &container).unwrap();
+        (container.to_bytes(), golden)
+    }
+
+    #[test]
+    fn v4_single_frame_corruption_repairs_bit_exactly() {
+        let (bytes, golden) = v4_bytes(10_000, 1024, 4);
+        let r = Reader::from_bytes(bytes.clone()).unwrap();
+        assert_eq!(r.parity_entries().len(), 3); // 10 chunks / k=4
+        let e = r.entries()[2];
+        let mut bad = bytes.clone();
+        let off = e.offset as usize + e.frame_len as usize / 2;
+        for b in &mut bad[off..off + 8] {
+            *b ^= 0x5A;
+        }
+        let r2 = Reader::from_bytes(bad).unwrap();
+        let y = r2.decode_range(0..10_000).unwrap();
+        for (a, b) in y.iter().zip(&golden) {
+            assert_eq!(a.to_bits(), b.to_bits());
+        }
+        let s = r2.decode_salvage().unwrap();
+        assert_eq!(s.report.repaired_chunks, vec![2]);
+        assert!(s.report.holes.is_empty());
+        assert_eq!(s.report.recovered, vec![0..10_000]);
+        assert_eq!(s.segments.len(), 1);
+    }
+
+    #[test]
+    fn v4_two_corrupt_frames_in_one_group_are_unrecoverable() {
+        let (bytes, golden) = v4_bytes(10_000, 1024, 4);
+        let r = Reader::from_bytes(bytes.clone()).unwrap();
+        let mut bad = bytes.clone();
+        for i in [1usize, 2] {
+            let e = r.entries()[i];
+            bad[e.offset as usize + e.frame_len as usize - 3] ^= 0xFF;
+        }
+        let r2 = Reader::from_bytes(bad).unwrap();
+        assert_eq!(
+            r2.decode_range(0..4096).unwrap_err(),
+            ArchiveError::Unrecoverable { group: 0 }
+        );
+        // Other groups are unaffected and still decode bit-exactly.
+        let y = r2.decode_range(4096..10_000).unwrap();
+        for (k, v) in y.iter().enumerate() {
+            assert_eq!(v.to_bits(), golden[4096 + k].to_bits());
+        }
+        // Salvage reports exactly the two damaged chunks as one hole;
+        // the intact chunks of the damaged group still decode.
+        let s = r2.decode_salvage().unwrap();
+        assert!(s.report.repaired_chunks.is_empty());
+        assert_eq!(s.report.holes.len(), 1);
+        assert_eq!(s.report.holes[0].chunks, 1..3);
+        assert_eq!(s.report.holes[0].elems, 1024..3072);
+        assert_eq!(s.report.recovered, vec![0..1024, 3072..10_000]);
     }
 
     #[test]

@@ -1,0 +1,678 @@
+//! Self-healing archives: parity repair, in-place scrub, and
+//! salvage-mode decode for damaged or truncated containers.
+//!
+//! Three entry points, by how much of the file survives:
+//!
+//! * [`scrub`] — the index and tail are intact but frames (or parity,
+//!   or the file CRC) may be corrupt: verify every parity group,
+//!   rebuild single-erasure frames and stale parity in place, and
+//!   return a fully re-validated patched image. Scrub refuses to bless
+//!   anything it cannot prove: the patched image must pass the full
+//!   container parse, and a group beyond single-erasure repair is the
+//!   typed [`ArchiveError::Unrecoverable`].
+//! * [`crate::archive::Reader::decode_salvage`] — the index survives:
+//!   walk it chunk by chunk, repairing what parity can repair and
+//!   reporting the rest as holes.
+//! * [`salvage`] — works on anything: tries the indexed path first and
+//!   falls back to [`salvage_scan`], a forward walk that
+//!   re-synchronizes on frame boundaries. v4 parity frames double as
+//!   placement anchors (each head records its group index *and* the
+//!   group size, so `group * group_size` names the first member chunk
+//!   even with the trailer gone); between anchors, CRC-valid frames
+//!   found after a corruption are counted but never guessed into
+//!   place — a placement that cannot be proven is a hole, not data.
+//!
+//! The output contract is the paper's error-bound discipline
+//! transplanted to integrity: every returned byte is bit-exact
+//! (CRC-proven, possibly after parity rebuild), every missing byte is
+//! an explicit [`Hole`] with a reason, and hostile metadata produces
+//! typed errors — never a panic, an OOM, or fabricated values.
+
+use std::collections::{BTreeMap, HashSet};
+use std::ops::Range;
+
+use crate::codec::Pipeline;
+use crate::container::{
+    chunk_frame_crc_ok, crc::crc32, ChunkRecord, Container, ContainerVersion, Header, ParityFrame,
+    CHUNK_FRAME_HEADER_LEN_V2, FINALIZE_MARKER, PARITY_MAGIC,
+};
+use crate::coordinator::engine::{decode_chunk_record_into, quantizer_from_header};
+use crate::coordinator::EngineConfig;
+use crate::quantizer::QuantizerConfig;
+use crate::scratch::Scratch;
+
+use super::reader::Reader;
+use super::stats::ChunkStats;
+use super::ArchiveError;
+
+/// Salvage refuses headers claiming chunks above this (16 Mi values ≈
+/// 64 MiB decoded per chunk): a corrupt `chunk_size` must not steer
+/// allocations.
+pub const MAX_SALVAGE_CHUNK: u32 = 1 << 24;
+
+/// One contiguous run of bit-exactly recovered values.
+#[derive(Debug, Clone, PartialEq)]
+pub struct SalvageSegment {
+    /// Element offset of the segment's first value in the original
+    /// stream.
+    pub elem_start: u64,
+    /// The recovered values (CRC-proven, possibly parity-repaired).
+    pub values: Vec<f32>,
+}
+
+/// One unrecoverable gap in the salvage output.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct Hole {
+    /// Chunk indices lost (end-exclusive).
+    pub chunks: Range<usize>,
+    /// Element range lost (end-exclusive).
+    pub elems: Range<u64>,
+    /// Why this range could not be recovered.
+    pub reason: String,
+}
+
+/// The structured account of a salvage walk.
+#[derive(Debug, Clone, PartialEq)]
+pub struct SalvageReport {
+    /// Element count the header claims.
+    pub n_values: u64,
+    /// Chunk size the header claims.
+    pub chunk_size: u32,
+    /// Chunk count the header claims.
+    pub n_chunks: usize,
+    /// Bit-exactly recovered element ranges, ascending and disjoint.
+    pub recovered: Vec<Range<u64>>,
+    /// Unrecoverable ranges, with reasons. `recovered` and `holes`
+    /// partition the claimed element space.
+    pub holes: Vec<Hole>,
+    /// Chunks that were rebuilt from parity (and then CRC-verified).
+    pub repaired_chunks: Vec<usize>,
+    /// CRC-valid frames found after a corruption that could not be
+    /// placed (no surviving anchor names their chunk index) — counted,
+    /// never guessed into place.
+    pub unplaced_frames: usize,
+    /// True when the index was unusable and placement came from the
+    /// frame-resync scan.
+    pub used_resync: bool,
+}
+
+/// Everything a salvage walk recovered, plus the account of what it
+/// could not.
+#[derive(Debug, Clone, PartialEq)]
+pub struct Salvage {
+    /// Recovered value runs, ascending and disjoint.
+    pub segments: Vec<SalvageSegment>,
+    pub report: SalvageReport,
+}
+
+/// Append a one-chunk hole, merging into the previous hole when it is
+/// chunk- and element-contiguous with the same reason.
+pub(crate) fn push_hole(holes: &mut Vec<Hole>, chunk: usize, elems: Range<u64>, reason: String) {
+    if let Some(last) = holes.last_mut() {
+        if last.chunks.end == chunk && last.elems.end == elems.start && last.reason == reason {
+            last.chunks.end = chunk + 1;
+            last.elems.end = elems.end;
+            return;
+        }
+    }
+    holes.push(Hole {
+        chunks: chunk..chunk + 1,
+        elems,
+        reason,
+    });
+}
+
+/// What an in-place scrub found and fixed.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct ScrubReport {
+    /// Chunks rebuilt from their group's parity (CRC-verified).
+    pub repaired_chunks: Vec<usize>,
+    /// Parity groups whose parity frame was rebuilt from intact
+    /// members (and matched the footer's recorded parity CRC).
+    pub rebuilt_parity: Vec<usize>,
+    /// The repaired file image, fully re-validated — `None` when the
+    /// input already parsed clean and nothing was touched.
+    pub patched: Option<Vec<u8>>,
+}
+
+/// Verify a container and repair it in place where parity allows.
+///
+/// A clean container returns `patched: None`. A v4 container with
+/// damage returns a patched image that has passed the *full* container
+/// parse (frames, parity XOR verification, footer, file CRC, marker) —
+/// scrub never blesses residual corruption. Damage beyond repair is
+/// typed: [`ArchiveError::Unrecoverable`] names the group; a file
+/// whose index or tail is gone fails as the reader's open error
+/// (salvage is the tool for those).
+pub fn scrub(data: &[u8]) -> Result<ScrubReport, ArchiveError> {
+    if Container::from_bytes(data).is_ok() {
+        return Ok(ScrubReport {
+            repaired_chunks: Vec::new(),
+            rebuilt_parity: Vec::new(),
+            patched: None,
+        });
+    }
+    let r = Reader::from_bytes(data.to_vec())?;
+    if r.header().version != ContainerVersion::V4 {
+        return Err(ArchiveError::Container(
+            "scrub can only repair v4 containers (earlier versions have no parity)".into(),
+        ));
+    }
+    let k = r.header().parity_group as usize;
+    let entries = r.entries().to_vec();
+    let parity = r.parity_entries().to_vec();
+    let mut out = data.to_vec();
+    let mut repaired_chunks: Vec<usize> = Vec::new();
+    let mut rebuilt_parity: Vec<usize> = Vec::new();
+    for (g, pe) in parity.iter().enumerate() {
+        let base = g * k;
+        let members = &entries[base..(base + k).min(entries.len())];
+        let member_img =
+            |e: &super::IndexEntry| &data[e.offset as usize..(e.offset + e.frame_len as u64) as usize];
+        let mut bad: Vec<usize> = members
+            .iter()
+            .enumerate()
+            .filter(|(_, e)| !chunk_frame_crc_ok(member_img(e), e.crc32))
+            .map(|(mi, _)| mi)
+            .collect();
+        let p_img = &data[pe.offset as usize..(pe.offset + pe.frame_len as u64) as usize];
+        let parity_ok = crc32(p_img) == pe.crc32
+            && ParityFrame::parse(p_img)
+                .map(|(pf, used)| {
+                    used == p_img.len()
+                        && pf.group == g as u32
+                        && pf.group_start == members[0].offset
+                        && pf.members.len() == members.len()
+                        && pf
+                            .members
+                            .iter()
+                            .zip(members)
+                            .all(|(&(l, c), e)| l == e.frame_len && c == e.crc32)
+                })
+                .unwrap_or(false);
+        match (bad.len(), parity_ok) {
+            (0, true) => {}
+            (0, false) => {
+                // All members intact: rebuild the parity frame from
+                // them. The rebuild must match the footer's recorded
+                // length and CRC bit for bit, or the index itself is
+                // lying — which is beyond what this group can prove.
+                let mems: Vec<(u64, u32)> =
+                    members.iter().map(|e| (e.offset, e.frame_len)).collect();
+                let pf = ParityFrame::build(g as u32, k as u32, data, &mems);
+                let mut img = Vec::new();
+                pf.write_to(&mut img);
+                if img.len() != pe.frame_len as usize || crc32(&img) != pe.crc32 {
+                    return Err(ArchiveError::Unrecoverable { group: g });
+                }
+                out[pe.offset as usize..pe.offset as usize + img.len()].copy_from_slice(&img);
+                rebuilt_parity.push(g);
+            }
+            (1, true) => {
+                let (pf, _) = ParityFrame::parse(p_img)
+                    .map_err(|_| ArchiveError::Unrecoverable { group: g })?;
+                let mi = bad.pop().unwrap();
+                let present: Vec<Option<&[u8]>> = members
+                    .iter()
+                    .enumerate()
+                    .map(|(i, e)| (i != mi).then(|| member_img(e)))
+                    .collect();
+                let rebuilt = pf
+                    .repair(&present)
+                    .map_err(|_| ArchiveError::Unrecoverable { group: g })?;
+                // The rebuilt frame must verify its own chunk CRC —
+                // a repair that cannot prove itself is a failure.
+                if !chunk_frame_crc_ok(&rebuilt, members[mi].crc32) {
+                    return Err(ArchiveError::Unrecoverable { group: g });
+                }
+                let e = &members[mi];
+                out[e.offset as usize..e.offset as usize + rebuilt.len()]
+                    .copy_from_slice(&rebuilt);
+                repaired_chunks.push(base + mi);
+            }
+            _ => return Err(ArchiveError::Unrecoverable { group: g }),
+        }
+    }
+    // Recompute the file CRC (it covers every byte before itself; the
+    // 8-byte finalization marker follows it and is excluded). This
+    // also heals a corrupt CRC word over otherwise-clean contents.
+    let crc_pos = out.len() - FINALIZE_MARKER.len() - 4;
+    let crc = crc32(&out[..crc_pos]);
+    out[crc_pos..crc_pos + 4].copy_from_slice(&crc.to_le_bytes());
+    // Final gate: the patched image must fully validate (this catches
+    // damage parity cannot see, e.g. a corrupt header).
+    Container::from_bytes(&out).map_err(|e| ArchiveError::Container(String::from(e)))?;
+    Ok(ScrubReport {
+        repaired_chunks,
+        rebuilt_parity,
+        patched: Some(out),
+    })
+}
+
+/// Salvage whatever is bit-exactly recoverable from a (possibly
+/// damaged or truncated) container. Tries the indexed walk first
+/// ([`Reader::decode_salvage`], which needs a surviving tail) and
+/// falls back to the frame-resync scan ([`salvage_scan`]) when the
+/// open fails for any reason — a torn tail, a smashed trailer, a
+/// mangled footer.
+pub fn salvage(data: &[u8]) -> Result<Salvage, ArchiveError> {
+    match Reader::from_bytes(data.to_vec()) {
+        Ok(r) => r.decode_salvage(),
+        Err(_) => salvage_scan(data),
+    }
+}
+
+fn decode_ctx(header: &Header) -> Result<(EngineConfig, QuantizerConfig, Pipeline), ArchiveError> {
+    let mut cfg = EngineConfig::native(header.bound);
+    cfg.variant = header.variant;
+    cfg.protection = header.protection;
+    cfg.chunk_size = header.chunk_size as usize;
+    let qc = quantizer_from_header(header);
+    let pipeline = Pipeline::new(header.stages.clone()).map_err(ArchiveError::Container)?;
+    Ok((cfg, qc, pipeline))
+}
+
+/// Parse one chunk frame from the front of `bytes` with every
+/// plausibility gate a scan needs before trusting a match: element
+/// count within the chunk size, plan bits within the header's stages,
+/// body lengths under the writer's own worst-case bound, and the chunk
+/// CRC verifying over exactly the claimed span. Returns the record and
+/// the frame length.
+fn parse_scan_frame(
+    bytes: &[u8],
+    header: &Header,
+    full_plan: u8,
+    max_body: u64,
+) -> Option<(ChunkRecord, usize)> {
+    if bytes.len() < CHUNK_FRAME_HEADER_LEN_V2 {
+        return None;
+    }
+    let le32 = |off: usize| u32::from_le_bytes(bytes[off..off + 4].try_into().unwrap());
+    let n = le32(0);
+    let ob = le32(4) as usize;
+    let pb = le32(8) as usize;
+    let crc = le32(12);
+    let plan = bytes[16];
+    if n == 0 || n > header.chunk_size {
+        return None;
+    }
+    if plan & !full_plan != 0 {
+        return None;
+    }
+    if ob as u64 + pb as u64 > max_body {
+        return None;
+    }
+    let total = CHUNK_FRAME_HEADER_LEN_V2
+        .checked_add(ob)?
+        .checked_add(pb)?;
+    if bytes.len() < total {
+        return None;
+    }
+    let frame = &bytes[..total];
+    if !chunk_frame_crc_ok(frame, crc) {
+        return None;
+    }
+    Some((
+        ChunkRecord {
+            n_values: n,
+            plan,
+            outlier_bytes: frame[CHUNK_FRAME_HEADER_LEN_V2..CHUNK_FRAME_HEADER_LEN_V2 + ob]
+                .to_vec(),
+            payload: frame[CHUNK_FRAME_HEADER_LEN_V2 + ob..].to_vec(),
+            stats: ChunkStats::EMPTY,
+        },
+        total,
+    ))
+}
+
+/// Forward-walk salvage for files whose index is unusable: start at
+/// the header, accept CRC-valid chunk frames while the walk is
+/// anchored (each match names the next chunk index), re-synchronize
+/// byte by byte after a corruption, and use v4 parity frames as
+/// absolute placement anchors (the head's `group * group_size` names
+/// the first member chunk; `group_start` plus the member table
+/// locates every member frame — including a single-erasure repair).
+/// CRC-valid frames found while unanchored are counted as
+/// `unplaced_frames`, never guessed into place.
+pub fn salvage_scan(data: &[u8]) -> Result<Salvage, ArchiveError> {
+    let (header, header_len) = Header::parse_prefix(data).map_err(ArchiveError::Container)?;
+    if header.version == ContainerVersion::V1 {
+        return Err(ArchiveError::Container(
+            "salvage scan needs v2+ chunk frames; v1 frames carry no plan byte to resync on"
+                .into(),
+        ));
+    }
+    if header.chunk_size > MAX_SALVAGE_CHUNK {
+        return Err(ArchiveError::Container(format!(
+            "implausible chunk size {} (salvage cap {MAX_SALVAGE_CHUNK})",
+            header.chunk_size
+        )));
+    }
+    let (cfg, qc, pipeline) = decode_ctx(&header)?;
+    let cs = header.chunk_size as u64;
+    let full_plan = header.full_plan();
+    // Mirror of the streaming decoder's worst-case frame body bound.
+    let max_body = 16 * cs * 4 + 4096;
+    let mut placed: BTreeMap<u64, ChunkRecord> = BTreeMap::new();
+    let mut placed_offsets: HashSet<u64> = HashSet::new();
+    let mut repaired: Vec<u64> = Vec::new();
+    let mut unanchored_offsets: Vec<u64> = Vec::new();
+    let mut anchored = true;
+    let mut next_idx: u64 = 0;
+    let mut pos = header_len;
+    // A placement is accepted only if its element span fits u64
+    // arithmetic — a hostile group index must not overflow.
+    let elem_ok = |idx: u64| idx.checked_mul(cs).and_then(|s| s.checked_add(cs)).is_some();
+    while pos + 4 <= data.len() {
+        if &data[pos..pos + 4] == PARITY_MAGIC {
+            if let Ok((pf, used)) = ParityFrame::parse(&data[pos..]) {
+                let base = pf.group as u64 * pf.group_size as u64;
+                // Locate the members from the frame's own table:
+                // absolute offsets from group_start + cumulative
+                // lengths; they must abut the parity frame exactly.
+                let mut spans: Vec<(u64, usize)> = Vec::with_capacity(pf.members.len());
+                let mut off = pf.group_start;
+                let mut ok = true;
+                for &(len, _) in &pf.members {
+                    match off.checked_add(len as u64) {
+                        Some(end) if end <= pos as u64 => {
+                            spans.push((off, len as usize));
+                            off = end;
+                        }
+                        _ => {
+                            ok = false;
+                            break;
+                        }
+                    }
+                }
+                if ok && off == pos as u64 {
+                    let mut present: Vec<Option<&[u8]>> = Vec::with_capacity(spans.len());
+                    let mut bad: Vec<usize> = Vec::new();
+                    for (mi, &(o, l)) in spans.iter().enumerate() {
+                        let f = &data[o as usize..o as usize + l];
+                        if chunk_frame_crc_ok(f, pf.members[mi].1) {
+                            present.push(Some(f));
+                        } else {
+                            present.push(None);
+                            bad.push(mi);
+                        }
+                    }
+                    // Place every intact member at its proven index
+                    // (the forward walk may already have).
+                    for (mi, p) in present.iter().enumerate() {
+                        if let Some(f) = p {
+                            if let Some(idx) = base.checked_add(mi as u64) {
+                                if elem_ok(idx) {
+                                    if let Some((rec, _)) =
+                                        parse_scan_frame(f, &header, full_plan, max_body)
+                                    {
+                                        placed.entry(idx).or_insert(rec);
+                                        placed_offsets.insert(spans[mi].0);
+                                    }
+                                }
+                            }
+                        }
+                    }
+                    // Single erasure: rebuild, and trust the result
+                    // only if its own chunk CRC verifies.
+                    if bad.len() == 1 {
+                        if let Ok(rebuilt) = pf.repair(&present) {
+                            let mi = bad[0];
+                            if chunk_frame_crc_ok(&rebuilt, pf.members[mi].1) {
+                                if let Some(idx) = base.checked_add(mi as u64) {
+                                    if elem_ok(idx) {
+                                        if let Some((rec, _)) = parse_scan_frame(
+                                            &rebuilt, &header, full_plan, max_body,
+                                        ) {
+                                            if placed.insert(idx, rec).is_none() {
+                                                repaired.push(idx);
+                                                placed_offsets.insert(spans[mi].0);
+                                            }
+                                        }
+                                    }
+                                }
+                            }
+                        }
+                    }
+                    // The parity frame re-anchors the walk.
+                    anchored = true;
+                    next_idx = base.saturating_add(pf.members.len() as u64);
+                    pos += used;
+                    continue;
+                }
+                // Valid parity frame whose members don't line up in
+                // this file image: skip it, stay unanchored.
+                anchored = false;
+                pos += used;
+                continue;
+            }
+        }
+        if let Some((rec, used)) = parse_scan_frame(&data[pos..], &header, full_plan, max_body) {
+            if anchored && elem_ok(next_idx) {
+                placed.entry(next_idx).or_insert(rec);
+                placed_offsets.insert(pos as u64);
+                next_idx += 1;
+            } else {
+                unanchored_offsets.push(pos as u64);
+            }
+            pos += used;
+            continue;
+        }
+        pos += 1;
+        anchored = false;
+    }
+    let unplaced_frames = unanchored_offsets
+        .iter()
+        .filter(|o| !placed_offsets.contains(o))
+        .count();
+
+    // Decode the placed chunks in index order; gaps between placed
+    // indices become holes (O(placed) — a hostile header claiming 4G
+    // chunks yields one big hole, not 4G iterations).
+    let mut segments: Vec<SalvageSegment> = Vec::new();
+    let mut report = SalvageReport {
+        n_values: header.n_values,
+        chunk_size: header.chunk_size,
+        n_chunks: header.n_chunks as usize,
+        recovered: Vec::new(),
+        holes: Vec::new(),
+        repaired_chunks: Vec::new(),
+        unplaced_frames,
+        used_resync: true,
+    };
+    let mut scratch = Scratch::new();
+    let mut prev: u64 = 0; // first chunk index not yet accounted for
+    let gap_reason = "no CRC-proven frame for this chunk (corrupt, lost, or unplaceable)";
+    for (&idx, rec) in &placed {
+        if idx > prev {
+            report.holes.push(Hole {
+                chunks: prev as usize..idx as usize,
+                elems: prev * cs..idx * cs,
+                reason: gap_reason.into(),
+            });
+        }
+        let elem_start = idx * cs;
+        let elem_end = elem_start + rec.n_values as u64;
+        let mut y = vec![0f32; rec.n_values as usize];
+        match decode_chunk_record_into(&cfg, &qc, &pipeline, rec, &mut scratch, &mut y) {
+            Ok(()) => {
+                if repaired.contains(&idx) {
+                    report.repaired_chunks.push(idx as usize);
+                }
+                match segments.last_mut() {
+                    Some(s) if s.elem_start + s.values.len() as u64 == elem_start => {
+                        s.values.extend_from_slice(&y)
+                    }
+                    _ => segments.push(SalvageSegment {
+                        elem_start,
+                        values: y,
+                    }),
+                }
+                match report.recovered.last_mut() {
+                    Some(r) if r.end == elem_start => r.end = elem_end,
+                    _ => report.recovered.push(elem_start..elem_end),
+                }
+            }
+            Err(err) => push_hole(
+                &mut report.holes,
+                idx as usize,
+                elem_start..elem_end,
+                format!("decode failed: {err:#}"),
+            ),
+        }
+        prev = idx + 1;
+    }
+    let claimed = header.n_chunks as u64;
+    if claimed > prev {
+        report.holes.push(Hole {
+            chunks: prev as usize..claimed as usize,
+            elems: (prev * cs)..header.n_values.max(prev * cs),
+            reason: gap_reason.into(),
+        });
+    }
+    // Holes were appended in two passes (gaps, then decode failures),
+    // so restore chunk order for the report.
+    report.holes.sort_by_key(|h| h.chunks.start);
+    Ok(Salvage { segments, report })
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::coordinator::{compress, decompress};
+    use crate::data::Suite;
+    use crate::types::ErrorBound;
+
+    fn v4_bytes(n: usize, chunk_size: usize, k: u32) -> (Vec<u8>, Vec<f32>) {
+        let x = Suite::Cesm.generate(11, n);
+        let mut cfg = EngineConfig::native(ErrorBound::Abs(1e-3));
+        cfg.chunk_size = chunk_size;
+        cfg.container_version = ContainerVersion::V4;
+        cfg.parity_group = k;
+        let (container, _) = compress(&cfg, &x).unwrap();
+        let (golden, _) = decompress(&cfg, &container).unwrap();
+        (container.to_bytes(), golden)
+    }
+
+    fn assert_bits(values: &[f32], golden: &[f32], from: usize) {
+        for (k, v) in values.iter().enumerate() {
+            assert_eq!(v.to_bits(), golden[from + k].to_bits(), "element {}", from + k);
+        }
+    }
+
+    #[test]
+    fn scrub_is_a_no_op_on_clean_files() {
+        let (bytes, _) = v4_bytes(6_000, 1024, 4);
+        let rep = scrub(&bytes).unwrap();
+        assert!(rep.patched.is_none());
+        assert!(rep.repaired_chunks.is_empty() && rep.rebuilt_parity.is_empty());
+    }
+
+    #[test]
+    fn scrub_repairs_a_corrupt_frame_back_to_the_original_bytes() {
+        let (bytes, _) = v4_bytes(6_000, 1024, 4);
+        let r = Reader::from_bytes(bytes.clone()).unwrap();
+        let e = r.entries()[3];
+        let mut bad = bytes.clone();
+        bad[e.offset as usize + 20] ^= 0xA5;
+        let rep = scrub(&bad).unwrap();
+        assert_eq!(rep.repaired_chunks, vec![3]);
+        // Bit-for-bit identical to the file before corruption.
+        assert_eq!(rep.patched.unwrap(), bytes);
+    }
+
+    #[test]
+    fn scrub_rebuilds_a_corrupt_parity_frame() {
+        let (bytes, _) = v4_bytes(6_000, 1024, 4);
+        let r = Reader::from_bytes(bytes.clone()).unwrap();
+        let pe = r.parity_entries()[1];
+        let mut bad = bytes.clone();
+        bad[pe.offset as usize + pe.frame_len as usize - 1] ^= 0x42;
+        let rep = scrub(&bad).unwrap();
+        assert_eq!(rep.rebuilt_parity, vec![1]);
+        assert_eq!(rep.patched.unwrap(), bytes);
+    }
+
+    #[test]
+    fn scrub_types_beyond_capability_damage() {
+        let (bytes, _) = v4_bytes(6_000, 1024, 4);
+        let r = Reader::from_bytes(bytes.clone()).unwrap();
+        let mut bad = bytes.clone();
+        for i in [0usize, 1] {
+            let e = r.entries()[i];
+            bad[e.offset as usize + 19] ^= 0x11;
+        }
+        assert_eq!(scrub(&bad).unwrap_err(), ArchiveError::Unrecoverable { group: 0 });
+    }
+
+    #[test]
+    fn salvage_scan_recovers_everything_when_the_tail_is_gone() {
+        let (bytes, golden) = v4_bytes(10_000, 1000, 3);
+        let r = Reader::from_bytes(bytes.clone()).unwrap();
+        // Cut the file right after the last parity frame: footer,
+        // trailer, file CRC, and marker all gone.
+        let pe = *r.parity_entries().last().unwrap();
+        let cut = (pe.offset + pe.frame_len as u64) as usize;
+        let s = salvage(&bytes[..cut]).unwrap();
+        assert!(s.report.used_resync);
+        assert!(s.report.holes.is_empty(), "{:?}", s.report.holes);
+        assert_eq!(s.report.recovered, vec![0..10_000]);
+        assert_eq!(s.segments.len(), 1);
+        assert_bits(&s.segments[0].values, &golden, 0);
+    }
+
+    #[test]
+    fn salvage_scan_repairs_through_a_parity_anchor() {
+        let (bytes, golden) = v4_bytes(10_000, 1000, 5);
+        let r = Reader::from_bytes(bytes.clone()).unwrap();
+        let e = r.entries()[2];
+        let pe = *r.parity_entries().last().unwrap();
+        let mut cut = bytes[..(pe.offset + pe.frame_len as u64) as usize].to_vec();
+        // Smash a frame head: the forward walk loses its anchor there,
+        // and only the group's parity frame can place + repair it.
+        for b in &mut cut[e.offset as usize..e.offset as usize + 8] {
+            *b = 0xEE;
+        }
+        let s = salvage(&cut).unwrap();
+        assert!(s.report.used_resync);
+        assert_eq!(s.report.repaired_chunks, vec![2]);
+        assert!(s.report.holes.is_empty(), "{:?}", s.report.holes);
+        assert_eq!(s.report.recovered, vec![0..10_000]);
+        assert_bits(&s.segments[0].values, &golden, 0);
+    }
+
+    #[test]
+    fn salvage_never_fabricates_on_a_dead_group() {
+        let (bytes, golden) = v4_bytes(10_000, 1000, 5);
+        let r = Reader::from_bytes(bytes.clone()).unwrap();
+        let mut bad = bytes.clone();
+        for i in [6usize, 8] {
+            let e = r.entries()[i];
+            bad[e.offset as usize + e.frame_len as usize / 2] ^= 0x77;
+        }
+        let s = salvage(&bad).unwrap();
+        // Indexed path: chunks 6 and 8 are holes, everything else is
+        // bit-exact.
+        assert!(!s.report.used_resync);
+        let holes: Vec<_> = s.report.holes.iter().map(|h| h.chunks.clone()).collect();
+        assert_eq!(holes, vec![6..7, 8..9]);
+        for seg in &s.segments {
+            assert_bits(&seg.values, &golden, seg.elem_start as usize);
+        }
+        let covered: u64 = s.report.recovered.iter().map(|r| r.end - r.start).sum();
+        let lost: u64 = s.report.holes.iter().map(|h| h.elems.end - h.elems.start).sum();
+        assert_eq!(covered + lost, 10_000);
+    }
+
+    #[test]
+    fn hole_merging_is_reason_aware() {
+        let mut holes = Vec::new();
+        push_hole(&mut holes, 1, 100..200, "a".into());
+        push_hole(&mut holes, 2, 200..300, "a".into());
+        push_hole(&mut holes, 3, 300..400, "b".into());
+        assert_eq!(holes.len(), 2);
+        assert_eq!(holes[0].chunks, 1..3);
+        assert_eq!(holes[0].elems, 100..300);
+        assert_eq!(holes[1].chunks, 3..4);
+    }
+}

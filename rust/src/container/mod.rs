@@ -1,4 +1,4 @@
-//! The `.lcz` container format — versions 1, 2, and 3.
+//! The `.lcz` container format — versions 1 through 4.
 //!
 //! # v1 layout (magic `LCZ1`; all integers little-endian)
 //!
@@ -83,13 +83,53 @@
 //! footer CRC after the entries, file CRC last (covering header,
 //! frames, footer, and trailer).
 //!
+//! # v4 layout (magic `LCZ4`): the parity-protected container
+//!
+//! Header and chunk frames are byte-identical to v3's; after every
+//! group of `k` chunk frames (`--parity-group`, default 16; the last
+//! group may be short) the writer emits one **XOR parity frame**:
+//!
+//! ```text
+//! ["LCPF"] [group u32] [group_size u32] [n_members u32] [data_len u32]
+//! [group_start u64]                                 <- 28 fixed bytes
+//! [member table: frame_len u32, crc32 u32 per member]  <- 8*m bytes
+//! [head crc32 u32] [data crc32 u32] [data: data_len bytes]
+//! ```
+//!
+//! `data` is the byte-wise XOR of the group's chunk-frame images, each
+//! zero-padded to the longest (`data_len` = max member `frame_len`).
+//! The existing per-chunk CRCs turn corruption into *located* erasures,
+//! so one parity frame rebuilds any single corrupt frame in its group
+//! bit-exactly (`lc scrub`, `Reader::decode_range` auto-repair, and
+//! salvage all use this); two corrupt frames in one group are beyond
+//! the code and surface as the typed
+//! [`crate::archive::ArchiveError::Unrecoverable`] error naming the
+//! group. Parity frames are *interleaved* (not a tail section) so a
+//! torn tail loses at most the final group's parity, and each head
+//! records both `group` and `group_size`: a scan-mode salvage can
+//! place the group (first member = chunk `group * group_size`, at file
+//! offset `group_start`) with no surviving trailer at all.
+//!
+//! The v4 footer extends v3's: the `n_chunks` 29-byte chunk entries
+//! are followed by one 16-byte parity entry per group
+//! (`offset u64 | frame_len u32 | crc32 u32`, the CRC over the whole
+//! serialized parity frame), all covered by the footer CRC. The
+//! trailer grows to 24 bytes —
+//! `footer_offset u64 | n_chunks u32 | parity_group u32 | n_groups u32
+//! | "LCX4"` — and after the file CRC the writer appends an 8-byte
+//! **finalization marker** (`LCZ4FIN\n`), written last, so a torn tail
+//! is detected as a typed "unfinalized" error instead of being
+//! mistaken for a shorter-but-valid file. v3 readers see unknown magic
+//! and fail typed, never silently.
+//!
 //! The outlier bitmap travels with each chunk ("in-line", Section 3.1),
 //! compressed as part of the integrity-checked chunk record. The
 //! effective epsilon records the NOA->ABS resolution so the decoder
-//! needs no second pass over the data. v1/v2 containers remain fully
-//! readable and writable (a v1 frame parses to the full-chain plan);
-//! the writer chooses the version via [`Header::version`]
-//! (`lc compress --container-version {1,2,3}`, default 3).
+//! needs no second pass over the data. v1/v2/v3 containers remain
+//! fully readable and writable, byte-identical to what earlier
+//! writers produced (a v1 frame parses to the full-chain plan); the
+//! writer chooses the version via [`Header::version`]
+//! (`lc compress --container-version {1,2,3,4}`, default 4).
 
 pub mod crc;
 
@@ -107,16 +147,38 @@ pub const MAGIC: &[u8; 4] = b"LCZ1";
 pub const MAGIC_V2: &[u8; 4] = b"LCZ2";
 /// v3 magic (v2 frames + the index footer).
 pub const MAGIC_V3: &[u8; 4] = b"LCZ3";
+/// v4 magic (v3 layout + interleaved XOR parity frames).
+pub const MAGIC_V4: &[u8; 4] = b"LCZ4";
+/// Parity frame magic (v4, interleaved between chunk-frame groups).
+/// As a little-endian u32 this is far above any plausible chunk
+/// `n_values`, so a 4-byte peek cleanly separates parity frames from
+/// chunk frames during streaming decode and salvage resync.
+pub const PARITY_MAGIC: &[u8; 4] = b"LCPF";
+/// v4 finalization marker, appended *after* the file CRC as the very
+/// last write. Its absence means the writer never finished: a torn
+/// tail parses as a typed "unfinalized" error instead of passing for
+/// a shorter-but-valid file.
+pub const FINALIZE_MARKER: &[u8; 8] = b"LCZ4FIN\n";
+/// Default v4 parity group size k (chunk frames per parity frame).
+pub const DEFAULT_PARITY_GROUP: u32 = 16;
+/// Typed detail text for a v4 container whose finalization marker is
+/// missing or mangled (shared by the in-memory and streaming parsers
+/// so callers can classify the failure).
+pub const UNFINALIZED_DETAIL: &str =
+    "unfinalized v4 container: finalization marker missing (torn write)";
 
 /// Container format version. v2 adds the per-chunk plan byte that
 /// records the adaptive stage selection; v3 keeps the v2 frames and
-/// appends the seekable index footer (see the module docs).
+/// appends the seekable index footer; v4 keeps the v3 layout and
+/// interleaves XOR parity frames for single-erasure repair (see the
+/// module docs).
 #[derive(Debug, Clone, Copy, PartialEq, Eq, Default)]
 pub enum ContainerVersion {
     V1,
     V2,
-    #[default]
     V3,
+    #[default]
+    V4,
 }
 
 impl ContainerVersion {
@@ -124,7 +186,9 @@ impl ContainerVersion {
     pub fn chunk_frame_header_len(self) -> usize {
         match self {
             ContainerVersion::V1 => CHUNK_FRAME_HEADER_LEN,
-            ContainerVersion::V2 | ContainerVersion::V3 => CHUNK_FRAME_HEADER_LEN_V2,
+            ContainerVersion::V2 | ContainerVersion::V3 | ContainerVersion::V4 => {
+                CHUNK_FRAME_HEADER_LEN_V2
+            }
         }
     }
 
@@ -133,6 +197,7 @@ impl ContainerVersion {
             ContainerVersion::V1 => MAGIC,
             ContainerVersion::V2 => MAGIC_V2,
             ContainerVersion::V3 => MAGIC_V3,
+            ContainerVersion::V4 => MAGIC_V4,
         }
     }
 
@@ -143,6 +208,8 @@ impl ContainerVersion {
             Some(ContainerVersion::V2)
         } else if m == MAGIC_V3 {
             Some(ContainerVersion::V3)
+        } else if m == MAGIC_V4 {
+            Some(ContainerVersion::V4)
         } else {
             None
         }
@@ -162,6 +229,14 @@ pub struct Header {
     pub chunk_size: u32,
     pub stages: Vec<Stage>,
     pub n_chunks: u32,
+    /// v4 parity group size k (chunk frames per XOR parity frame). Not
+    /// serialized in the header bytes — it lives in the v4 trailer, so
+    /// v1–v3 header images stay byte-identical to earlier writers.
+    /// 0 for v1–v3; for a v4 writer, 0 means "use the default"
+    /// ([`Container::to_bytes`] normalizes via
+    /// [`Header::parity_group_effective`]). Parsing a v4 container
+    /// fills it from the trailer.
+    pub parity_group: u32,
 }
 
 /// One encoded chunk record.
@@ -249,6 +324,22 @@ impl Header {
     pub fn full_plan(&self) -> u8 {
         full_mask_for(self.stages.len())
     }
+
+    /// The parity group size the writer will actually use: v4 maps a
+    /// zero field to [`DEFAULT_PARITY_GROUP`]; earlier versions carry
+    /// no parity and always resolve to 0.
+    pub fn parity_group_effective(&self) -> u32 {
+        match self.version {
+            ContainerVersion::V4 => {
+                if self.parity_group == 0 {
+                    DEFAULT_PARITY_GROUP
+                } else {
+                    self.parity_group
+                }
+            }
+            _ => 0,
+        }
+    }
 }
 
 /// Bytes before the per-stage tags in a serialized header (magic
@@ -257,7 +348,7 @@ pub const HEADER_FIXED_LEN: usize = 29;
 
 fn parse_header(r: &mut Reader) -> Result<Header, String> {
     let version = ContainerVersion::from_magic(r.take(4)?)
-        .ok_or("bad magic (not an LCZ1/LCZ2/LCZ3 file)")?;
+        .ok_or("bad magic (not an LCZ1/LCZ2/LCZ3/LCZ4 file)")?;
     let _flags = r.u8()?;
     let eb_kind = r.u8()?;
     let variant = match r.u8()? {
@@ -299,6 +390,9 @@ fn parse_header(r: &mut Reader) -> Result<Header, String> {
         chunk_size,
         stages,
         n_chunks,
+        // Not part of the header bytes; the v4 container parser fills
+        // this from the trailer after the header parse.
+        parity_group: 0,
     })
 }
 
@@ -351,36 +445,285 @@ pub fn parse_chunk_frame_header(b: &[u8; CHUNK_FRAME_HEADER_LEN]) -> (u32, u32, 
     )
 }
 
+/// Fixed bytes of a v4 parity frame before the member table (magic
+/// through `group_start`; see the module docs for the full layout).
+pub const PARITY_FRAME_FIXED: usize = 28;
+
+/// XOR `src` into the front of `dst` byte by byte. `dst` must be at
+/// least as long as `src` (parity data is sized to the longest member
+/// frame); extra `dst` bytes are left untouched, which is exactly the
+/// zero-padding semantics of the XOR code.
+pub fn xor_fold(dst: &mut [u8], src: &[u8]) {
+    debug_assert!(dst.len() >= src.len());
+    for (d, s) in dst.iter_mut().zip(src) {
+        *d ^= *s;
+    }
+}
+
+/// Does `frame` hold an intact v2/v3/v4 chunk frame whose chunk CRC is
+/// `want`? Used to *locate* erasures inside a parity group: the stored
+/// CRC word must match the expected one and the body
+/// (`plan || outlier || payload`, i.e. everything after the 16-byte
+/// fixed head) must hash to it.
+pub fn chunk_frame_crc_ok(frame: &[u8], want: u32) -> bool {
+    frame.len() >= CHUNK_FRAME_HEADER_LEN_V2
+        && u32::from_le_bytes(frame[12..16].try_into().unwrap()) == want
+        && crc32(&frame[CHUNK_FRAME_HEADER_LEN..]) == want
+}
+
+/// One v4 XOR parity frame: the byte-wise XOR of a group of chunk-frame
+/// images (each zero-padded to the longest), plus enough metadata to
+/// place and validate the group without the footer. With the per-chunk
+/// CRCs converting corruption into located erasures, this is a
+/// single-erasure code: any one corrupt member frame per group rebuilds
+/// bit-exactly via [`ParityFrame::repair`].
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct ParityFrame {
+    /// Group index (0-based, in file order).
+    pub group: u32,
+    /// The archive's parity group size k. Recorded per frame so a
+    /// scan-mode salvage can map `group` to a first chunk index
+    /// (`group * group_size`) with no surviving trailer.
+    pub group_size: u32,
+    /// Absolute file offset of the group's first member frame.
+    pub group_start: u64,
+    /// `(frame_len, chunk crc32)` per member, in chunk order.
+    pub members: Vec<(u32, u32)>,
+    /// XOR fold of the member frame images; `len` = max member
+    /// `frame_len`.
+    pub data: Vec<u8>,
+}
+
+impl ParityFrame {
+    /// Build the parity frame for one group. `members` lists
+    /// `(offset, frame_len)` of each member chunk frame inside `file`
+    /// (the serialized container so far); the member CRCs are read out
+    /// of the frame images themselves. `members` must be non-empty.
+    pub fn build(group: u32, group_size: u32, file: &[u8], members: &[(u64, u32)]) -> ParityFrame {
+        let group_start = members.first().map(|&(off, _)| off).unwrap_or(0);
+        let max_len = members.iter().map(|&(_, len)| len as usize).max().unwrap_or(0);
+        let mut data = vec![0u8; max_len];
+        let mut table = Vec::with_capacity(members.len());
+        for &(off, len) in members {
+            let frame = &file[off as usize..off as usize + len as usize];
+            let crc = u32::from_le_bytes(frame[12..16].try_into().unwrap());
+            table.push((len, crc));
+            xor_fold(&mut data, frame);
+        }
+        ParityFrame {
+            group,
+            group_size,
+            group_start,
+            members: table,
+            data,
+        }
+    }
+
+    /// Append the serialized parity frame to `out`.
+    pub fn write_to(&self, out: &mut Vec<u8>) {
+        let start = out.len();
+        out.extend_from_slice(PARITY_MAGIC);
+        out.extend_from_slice(&self.group.to_le_bytes());
+        out.extend_from_slice(&self.group_size.to_le_bytes());
+        out.extend_from_slice(&(self.members.len() as u32).to_le_bytes());
+        out.extend_from_slice(&(self.data.len() as u32).to_le_bytes());
+        out.extend_from_slice(&self.group_start.to_le_bytes());
+        for &(len, crc) in &self.members {
+            out.extend_from_slice(&len.to_le_bytes());
+            out.extend_from_slice(&crc.to_le_bytes());
+        }
+        // Head CRC covers everything after the magic (fields + member
+        // table); the data CRC covers the XOR bytes separately so a
+        // corrupt head and a corrupt body are distinguishable.
+        let head_crc = crc32(&out[start + 4..]);
+        out.extend_from_slice(&head_crc.to_le_bytes());
+        out.extend_from_slice(&crc32(&self.data).to_le_bytes());
+        out.extend_from_slice(&self.data);
+    }
+
+    /// Total serialized length of a parity frame with `n_members`
+    /// members and `data_len` XOR bytes.
+    pub fn frame_len(n_members: usize, data_len: usize) -> usize {
+        PARITY_FRAME_FIXED + 8 * n_members + 8 + data_len
+    }
+
+    /// Parse one parity frame from the front of `b`; returns the frame
+    /// and the byte count consumed. All lengths are bounds-checked with
+    /// checked arithmetic *before* any allocation (a hostile head must
+    /// produce a typed error, never an overflow or an OOM), and both
+    /// CRCs must verify.
+    pub fn parse(b: &[u8]) -> Result<(ParityFrame, usize), String> {
+        if b.len() < PARITY_FRAME_FIXED {
+            return Err("truncated parity frame".into());
+        }
+        if &b[..4] != PARITY_MAGIC {
+            return Err("bad parity frame magic".into());
+        }
+        let le32 = |off: usize| u32::from_le_bytes(b[off..off + 4].try_into().unwrap());
+        let group = le32(4);
+        let group_size = le32(8);
+        let n_members = le32(12) as usize;
+        let data_len = le32(16) as usize;
+        let group_start = u64::from_le_bytes(b[20..28].try_into().unwrap());
+        if n_members == 0 {
+            return Err("parity frame with zero members".into());
+        }
+        if group_size == 0 || n_members > group_size as usize {
+            return Err(format!(
+                "parity frame claims {n_members} members in a group of {group_size}"
+            ));
+        }
+        let table_end = n_members
+            .checked_mul(8)
+            .and_then(|t| t.checked_add(PARITY_FRAME_FIXED))
+            .ok_or("parity frame member table overflows")?;
+        let total = table_end
+            .checked_add(8)
+            .and_then(|t| t.checked_add(data_len))
+            .ok_or("parity frame length overflows")?;
+        if total > b.len() {
+            return Err("truncated parity frame".into());
+        }
+        if crc32(&b[4..table_end]) != le32(table_end) {
+            return Err("parity frame head CRC mismatch".into());
+        }
+        let data = &b[table_end + 8..total];
+        if crc32(data) != le32(table_end + 4) {
+            return Err("parity frame data CRC mismatch".into());
+        }
+        let mut members = Vec::with_capacity(n_members);
+        let mut max_len = 0usize;
+        for i in 0..n_members {
+            let len = le32(PARITY_FRAME_FIXED + 8 * i);
+            let crc = le32(PARITY_FRAME_FIXED + 8 * i + 4);
+            if (len as usize) < CHUNK_FRAME_HEADER_LEN_V2 {
+                return Err(format!("parity member {i} frame length {len} is too short"));
+            }
+            max_len = max_len.max(len as usize);
+            members.push((len, crc));
+        }
+        if max_len != data_len {
+            return Err(format!(
+                "parity data length {data_len} disagrees with the member table (max {max_len})"
+            ));
+        }
+        Ok((
+            ParityFrame {
+                group,
+                group_size,
+                group_start,
+                members,
+                data: data.to_vec(),
+            },
+            total,
+        ))
+    }
+
+    /// Rebuild the single missing member frame. `present[i]` holds
+    /// member `i`'s intact frame image, or `None` for the erased one;
+    /// exactly one entry must be `None`. Returns the rebuilt frame
+    /// bytes, truncated to the missing member's recorded length. The
+    /// rebuilt frame is self-validating: callers verify its internal
+    /// chunk CRC before trusting it.
+    pub fn repair(&self, present: &[Option<&[u8]>]) -> Result<Vec<u8>, String> {
+        if present.len() != self.members.len() {
+            return Err(format!(
+                "repair wants {} members, got {}",
+                self.members.len(),
+                present.len()
+            ));
+        }
+        let missing: Vec<usize> = present
+            .iter()
+            .enumerate()
+            .filter_map(|(i, m)| m.is_none().then_some(i))
+            .collect();
+        if missing.len() != 1 {
+            return Err(format!(
+                "parity rebuilds exactly one erased frame per group, {} are missing",
+                missing.len()
+            ));
+        }
+        let mut data = self.data.clone();
+        for (i, frame) in present.iter().enumerate() {
+            if let Some(frame) = frame {
+                if frame.len() != self.members[i].0 as usize {
+                    return Err(format!(
+                        "member {i} image is {} bytes, parity table says {}",
+                        frame.len(),
+                        self.members[i].0
+                    ));
+                }
+                xor_fold(&mut data, frame);
+            }
+        }
+        data.truncate(self.members[missing[0]].0 as usize);
+        Ok(data)
+    }
+}
+
 impl Container {
     /// Serialize to bytes (the version recorded in the header picks the
     /// frame layout; v3 additionally appends the index footer between
-    /// the last frame and the file CRC).
+    /// the last frame and the file CRC; v4 also interleaves one parity
+    /// frame per group of [`Header::parity_group_effective`] chunk
+    /// frames, extends the footer with parity entries, and finishes
+    /// with the finalization marker after the file CRC).
     pub fn to_bytes(&self) -> Vec<u8> {
         let version = self.header.version;
         let mut header = self.header.clone();
         header.n_chunks = self.chunks.len() as u32;
+        let parity_group = header.parity_group_effective();
         let mut out = header.to_bytes();
+        let indexed = matches!(version, ContainerVersion::V3 | ContainerVersion::V4);
         let mut entries: Vec<IndexEntry> = Vec::new();
-        for c in &self.chunks {
+        let mut parity: Vec<index::ParityEntry> = Vec::new();
+        // Members of the open parity group: (offset, frame_len).
+        let mut group: Vec<(u64, u32)> = Vec::new();
+        for (i, c) in self.chunks.iter().enumerate() {
             let offset = out.len() as u64;
             let crc = c.crc32(version);
             c.write_frame(version, crc, &mut out);
-            if version == ContainerVersion::V3 {
+            let frame_len = (out.len() as u64 - offset) as u32;
+            if indexed {
                 entries.push(IndexEntry {
                     offset,
-                    frame_len: (out.len() as u64 - offset) as u32,
+                    frame_len,
                     n_values: c.n_values,
                     plan: c.plan,
                     crc32: crc,
                     stats: c.stats,
                 });
             }
+            if version == ContainerVersion::V4 {
+                group.push((offset, frame_len));
+                let last = i + 1 == self.chunks.len();
+                if group.len() == parity_group as usize || last {
+                    let g = parity.len() as u32;
+                    let pf = ParityFrame::build(g, parity_group, &out, &group);
+                    let p_off = out.len();
+                    pf.write_to(&mut out);
+                    parity.push(index::ParityEntry {
+                        offset: p_off as u64,
+                        frame_len: (out.len() - p_off) as u32,
+                        crc32: crc32(&out[p_off..]),
+                    });
+                    group.clear();
+                }
+            }
         }
-        if version == ContainerVersion::V3 {
-            index::write_footer(&entries, &mut out);
+        match version {
+            ContainerVersion::V3 => index::write_footer(&entries, &mut out),
+            ContainerVersion::V4 => {
+                index::write_footer_v4(&entries, &parity, parity_group, &mut out)
+            }
+            _ => {}
         }
         let file_crc = crc32(&out);
         out.extend_from_slice(&file_crc.to_le_bytes());
+        if version == ContainerVersion::V4 {
+            out.extend_from_slice(FINALIZE_MARKER);
+        }
         out
     }
 
@@ -400,17 +743,61 @@ impl Container {
 
     fn from_bytes_inner(data: &[u8]) -> Result<Container, String> {
         let mut r = Reader { data, pos: 0 };
-        let header = parse_header(&mut r)?;
+        let mut header = parse_header(&mut r)?;
         let version = header.version;
         let full_plan = header.full_plan();
         let n_chunks = header.n_chunks;
+        // v4: validate the tail (finalization marker + trailer) up
+        // front — a torn tail must surface as the typed "unfinalized"
+        // detail, not as whatever frame-level error the forward walk
+        // happens to hit first. The frame loop then knows the parity
+        // group size before the first group closes.
+        let trailer_v4 = if version == ContainerVersion::V4 {
+            let tail = index::TRAILER_LEN_V4 + 4 + FINALIZE_MARKER.len();
+            if data.len() < r.pos + tail {
+                if data.len() >= FINALIZE_MARKER.len()
+                    && &data[data.len() - FINALIZE_MARKER.len()..] != FINALIZE_MARKER
+                {
+                    return Err(UNFINALIZED_DETAIL.into());
+                }
+                return Err("truncated container".into());
+            }
+            if &data[data.len() - FINALIZE_MARKER.len()..] != FINALIZE_MARKER {
+                return Err(UNFINALIZED_DETAIL.into());
+            }
+            let t_off = data.len() - FINALIZE_MARKER.len() - 4 - index::TRAILER_LEN_V4;
+            let t = index::parse_trailer_v4(&data[t_off..t_off + index::TRAILER_LEN_V4])?;
+            if t.n_chunks != n_chunks {
+                return Err(format!(
+                    "v4 trailer chunk count {} disagrees with the header ({n_chunks})",
+                    t.n_chunks
+                ));
+            }
+            if t.parity_group == 0 {
+                return Err("v4 trailer parity group size is zero".into());
+            }
+            if u64::from(t.n_groups) != u64::from(n_chunks).div_ceil(u64::from(t.parity_group)) {
+                return Err(format!(
+                    "v4 trailer group count {} disagrees with {n_chunks} chunks \
+                     in groups of {}",
+                    t.n_groups, t.parity_group
+                ));
+            }
+            header.parity_group = t.parity_group;
+            Some(t)
+        } else {
+            None
+        };
         // Cap the pre-reservation by what the data could possibly hold
         // (a corrupt header claiming 4G chunks must not OOM).
         let plausible = (data.len() - r.pos) / version.chunk_frame_header_len();
         let mut chunks = Vec::with_capacity((n_chunks as usize).min(plausible));
-        // (offset, frame_len, crc) per frame, for the v3 footer
-        // cross-validation.
+        // (offset, frame_len, crc) per frame, for the v3/v4 footer
+        // cross-validation; same triple per parity frame (CRC over the
+        // whole serialized parity frame) for the v4 parity entries.
         let mut observed: Vec<(u64, u32, u32)> = Vec::new();
+        let mut observed_parity: Vec<(u64, u32, u32)> = Vec::new();
+        let mut group_members: Vec<(u64, u32, u32)> = Vec::new();
         for i in 0..n_chunks {
             let frame_start = r.pos as u64;
             let n = r.u32()?;
@@ -419,7 +806,7 @@ impl Container {
             let want_crc = r.u32()?;
             let plan = match version {
                 ContainerVersion::V1 => full_plan,
-                ContainerVersion::V2 | ContainerVersion::V3 => {
+                ContainerVersion::V2 | ContainerVersion::V3 | ContainerVersion::V4 => {
                     let p = r.u8()?;
                     if p & !full_plan != 0 {
                         return Err(format!(
@@ -442,43 +829,128 @@ impl Container {
             if rec.crc32(version) != want_crc {
                 return Err(format!("chunk {i} CRC mismatch"));
             }
-            if version == ContainerVersion::V3 {
-                observed.push((frame_start, (r.pos as u64 - frame_start) as u32, want_crc));
+            let frame_len = (r.pos as u64 - frame_start) as u32;
+            if matches!(version, ContainerVersion::V3 | ContainerVersion::V4) {
+                observed.push((frame_start, frame_len, want_crc));
             }
             chunks.push(rec);
+            if let Some(t) = &trailer_v4 {
+                group_members.push((frame_start, frame_len, want_crc));
+                if group_members.len() == t.parity_group as usize || i + 1 == n_chunks {
+                    let p_start = r.pos;
+                    let (pf, consumed) = ParityFrame::parse(&data[p_start..])?;
+                    r.take(consumed)?;
+                    let g = observed_parity.len() as u32;
+                    if pf.group != g
+                        || pf.group_size != t.parity_group
+                        || pf.group_start != group_members[0].0
+                    {
+                        return Err(format!(
+                            "parity frame {g} placement fields disagree with the file"
+                        ));
+                    }
+                    if pf.members.len() != group_members.len() {
+                        return Err(format!(
+                            "parity frame {g} member count disagrees with the file"
+                        ));
+                    }
+                    // The parity data must equal the XOR fold of the
+                    // actual member frame images — a wrong fold would
+                    // silently poison any future repair.
+                    let mut fold = vec![0u8; pf.data.len()];
+                    for (mi, (&(off, len, crc), &(t_len, t_crc))) in
+                        group_members.iter().zip(&pf.members).enumerate()
+                    {
+                        if t_len != len || t_crc != crc {
+                            return Err(format!(
+                                "parity frame {g} member {mi} table disagrees with the file"
+                            ));
+                        }
+                        xor_fold(&mut fold, &data[off as usize..off as usize + len as usize]);
+                    }
+                    if fold != pf.data {
+                        return Err(format!(
+                            "parity frame {g} XOR data disagrees with its member frames"
+                        ));
+                    }
+                    observed_parity.push((
+                        p_start as u64,
+                        consumed as u32,
+                        crc32(&data[p_start..p_start + consumed]),
+                    ));
+                    group_members.clear();
+                }
+            }
         }
-        if version == ContainerVersion::V3 {
-            let footer_offset = r.pos as u64;
-            let block_len = n_chunks as u64 * index::ENTRY_LEN as u64 + 4;
-            // The remaining bytes bound the read; r.take errors before
-            // any allocation if a hostile header overstates n_chunks.
-            let block = r.take(block_len as usize)?;
-            let entries = index::parse_entries(block)?;
-            let trailer = index::parse_trailer(r.take(index::TRAILER_LEN)?)?;
-            if trailer.footer_offset != footer_offset || trailer.n_chunks != n_chunks {
-                return Err(format!(
-                    "index trailer ({} chunks at {}) disagrees with the file \
-                     ({n_chunks} chunks at {footer_offset})",
-                    trailer.n_chunks, trailer.footer_offset
-                ));
+        match (version, &trailer_v4) {
+            (ContainerVersion::V3, _) => {
+                let footer_offset = r.pos as u64;
+                let block_len = n_chunks as u64 * index::ENTRY_LEN as u64 + 4;
+                // The remaining bytes bound the read; r.take errors
+                // before any allocation if a hostile header overstates
+                // n_chunks.
+                let block = r.take(block_len as usize)?;
+                let entries = index::parse_entries(block)?;
+                let trailer = index::parse_trailer(r.take(index::TRAILER_LEN)?)?;
+                if trailer.footer_offset != footer_offset || trailer.n_chunks != n_chunks {
+                    return Err(format!(
+                        "index trailer ({} chunks at {}) disagrees with the file \
+                         ({n_chunks} chunks at {footer_offset})",
+                        trailer.n_chunks, trailer.footer_offset
+                    ));
+                }
+                cross_validate_entries(&entries, &observed, &mut chunks)?;
             }
-            for (i, (e, &(off, flen, crc))) in entries.iter().zip(&observed).enumerate() {
-                if e.offset != off || e.frame_len != flen {
-                    return Err(format!("index entry {i} points at the wrong frame"));
+            (ContainerVersion::V4, Some(t)) => {
+                let footer_offset = r.pos as u64;
+                if t.footer_offset != footer_offset {
+                    return Err(format!(
+                        "v4 trailer footer offset {} disagrees with the file ({footer_offset})",
+                        t.footer_offset
+                    ));
                 }
-                if e.crc32 != crc {
-                    return Err(format!("index entry {i} CRC disagrees with chunk {i}"));
+                let block_len = n_chunks as u64 * index::ENTRY_LEN as u64
+                    + t.n_groups as u64 * index::PARITY_ENTRY_LEN as u64
+                    + 4;
+                let block = r.take(block_len as usize)?;
+                let (entries, parity) = index::parse_entries_v4(block, n_chunks, t.n_groups)?;
+                // Re-read the trailer at the position the forward walk
+                // reached; it must be the same bytes the tail pre-read
+                // found, or the file's structure is inconsistent.
+                let t2 = index::parse_trailer_v4(r.take(index::TRAILER_LEN_V4)?)?;
+                if t2 != *t {
+                    return Err("v4 trailer disagrees with the file tail".into());
                 }
-                if e.n_values != chunks[i].n_values || e.plan != chunks[i].plan {
-                    return Err(format!("index entry {i} disagrees with chunk {i}"));
+                cross_validate_entries(&entries, &observed, &mut chunks)?;
+                for (g, (pe, &(off, plen, pcrc))) in
+                    parity.iter().zip(&observed_parity).enumerate()
+                {
+                    if pe.offset != off || pe.frame_len != plen {
+                        return Err(format!(
+                            "parity index entry {g} points at the wrong frame"
+                        ));
+                    }
+                    if pe.crc32 != pcrc {
+                        return Err(format!(
+                            "parity index entry {g} CRC disagrees with parity frame {g}"
+                        ));
+                    }
                 }
-                chunks[i].stats = e.stats;
             }
+            _ => {}
         }
         let body_end = r.pos;
         let file_crc = r.u32()?;
         if crc32(&data[..body_end]) != file_crc {
             return Err("file CRC mismatch".into());
+        }
+        if version == ContainerVersion::V4 {
+            // Already validated against the tail; consuming it here
+            // keeps the trailing-garbage check exact.
+            let m = r.take(FINALIZE_MARKER.len())?;
+            if m != FINALIZE_MARKER {
+                return Err(UNFINALIZED_DETAIL.into());
+            }
         }
         if r.pos != data.len() {
             return Err("trailing garbage after container".into());
@@ -528,6 +1000,29 @@ pub fn decode_chunk(
     Ok((words, outliers))
 }
 
+/// Shared v3/v4 footer cross-validation: every chunk index entry must
+/// agree with the frame actually observed by the forward walk, and the
+/// entry's min/max stats are copied onto the parsed record.
+fn cross_validate_entries(
+    entries: &[IndexEntry],
+    observed: &[(u64, u32, u32)],
+    chunks: &mut [ChunkRecord],
+) -> Result<(), String> {
+    for (i, (e, &(off, flen, crc))) in entries.iter().zip(observed).enumerate() {
+        if e.offset != off || e.frame_len != flen {
+            return Err(format!("index entry {i} points at the wrong frame"));
+        }
+        if e.crc32 != crc {
+            return Err(format!("index entry {i} CRC disagrees with chunk {i}"));
+        }
+        if e.n_values != chunks[i].n_values || e.plan != chunks[i].plan {
+            return Err(format!("index entry {i} disagrees with chunk {i}"));
+        }
+        chunks[i].stats = e.stats;
+    }
+    Ok(())
+}
+
 struct Reader<'a> {
     data: &'a [u8],
     pos: usize,
@@ -556,17 +1051,19 @@ impl<'a> Reader<'a> {
 mod tests {
     use super::*;
 
-    const ALL_VERSIONS: [ContainerVersion; 3] = [
+    const ALL_VERSIONS: [ContainerVersion; 4] = [
         ContainerVersion::V1,
         ContainerVersion::V2,
         ContainerVersion::V3,
+        ContainerVersion::V4,
     ];
 
     fn sample_versioned(version: ContainerVersion) -> Container {
         let full = full_mask_for(4);
-        // v3 serializes the stats into the footer; keep v1/v2 records
-        // at the EMPTY placeholder so parse roundtrips compare equal.
-        let v3 = version == ContainerVersion::V3;
+        // v3/v4 serialize the stats into the footer; keep v1/v2
+        // records at the EMPTY placeholder so parse roundtrips compare
+        // equal.
+        let v3 = matches!(version, ContainerVersion::V3 | ContainerVersion::V4);
         Container {
             header: Header {
                 version,
@@ -578,6 +1075,10 @@ mod tests {
                 chunk_size: 100,
                 stages: vec![Stage::Delta, Stage::BitShuffle, Stage::Rle0, Stage::Huffman],
                 n_chunks: 2,
+                // k=1 for v4: two chunks land in two parity groups, so
+                // the sample exercises multi-group layout and the
+                // short-last-group path stays trivial.
+                parity_group: if version == ContainerVersion::V4 { 1 } else { 0 },
             },
             chunks: vec![
                 ChunkRecord {
@@ -747,5 +1248,93 @@ mod tests {
         c.header.n_values = 151; // header lies about total values
         let bytes = c.to_bytes();
         assert!(Container::from_bytes(&bytes).is_err());
+    }
+
+    #[test]
+    fn v4_missing_or_mangled_marker_is_typed_unfinalized() {
+        let bytes = sample_versioned(ContainerVersion::V4).to_bytes();
+        assert_eq!(&bytes[bytes.len() - 8..], FINALIZE_MARKER);
+        // Torn tail: the marker (the very last write) never landed.
+        let cut = &bytes[..bytes.len() - FINALIZE_MARKER.len()];
+        let err = String::from(Container::from_bytes(cut).unwrap_err());
+        assert!(err.contains("unfinalized"), "{err}");
+        // Same length, garbage marker.
+        let mut bad = bytes.clone();
+        let n = bad.len();
+        bad[n - 8..].copy_from_slice(b"XXXXXXXX");
+        let err = String::from(Container::from_bytes(&bad).unwrap_err());
+        assert!(err.contains("unfinalized"), "{err}");
+    }
+
+    #[test]
+    fn v4_roundtrips_parity_group_from_trailer() {
+        let c = sample_versioned(ContainerVersion::V4);
+        let back = Container::from_bytes(&c.to_bytes()).unwrap();
+        assert_eq!(back.header.parity_group, 1);
+        // A zero field writes (and re-parses as) the default.
+        let mut c = c;
+        c.header.parity_group = 0;
+        let back = Container::from_bytes(&c.to_bytes()).unwrap();
+        assert_eq!(back.header.parity_group, DEFAULT_PARITY_GROUP);
+    }
+
+    #[test]
+    fn v4_chunk_frames_are_byte_identical_to_v3() {
+        let v3 = sample_versioned(ContainerVersion::V3).to_bytes();
+        let mut c4 = sample_versioned(ContainerVersion::V4);
+        // One group holding both chunks keeps the frames contiguous.
+        c4.header.parity_group = 2;
+        let v4 = c4.to_bytes();
+        let header_len = c4.header.to_bytes().len();
+        // First frame: offsets equal; both frames together span up to
+        // the first parity frame. Frame bytes must match v3 exactly.
+        let frames_len = {
+            // v3 layout: header, frames, footer(2 entries + crc),
+            // trailer, file crc.
+            v3.len() - 4 - index::TRAILER_LEN - (2 * index::ENTRY_LEN + 4) - header_len
+        };
+        assert_eq!(
+            &v4[header_len..header_len + frames_len],
+            &v3[header_len..header_len + frames_len]
+        );
+        assert_eq!(&v4[..4], MAGIC_V4);
+        assert_eq!(&v4[header_len..header_len + 4], &v3[header_len..header_len + 4]);
+        assert_eq!(&v4[header_len + frames_len..header_len + frames_len + 4], PARITY_MAGIC);
+    }
+
+    #[test]
+    fn parity_frame_builds_parses_and_repairs_a_single_erasure() {
+        // Two synthetic member "frames" (lengths 40 and 25; both carry
+        // a fake CRC word at bytes 12..16, which build() reads).
+        let a: Vec<u8> = (0..40u8).collect();
+        let b: Vec<u8> = (0..25u8).map(|i| 200 - i).collect();
+        let mut file = a.clone();
+        file.extend_from_slice(&b);
+        let members = [(0u64, 40u32), (40u64, 25u32)];
+        let pf = ParityFrame::build(3, 2, &file, &members);
+        assert_eq!(pf.group, 3);
+        assert_eq!(pf.group_size, 2);
+        assert_eq!(pf.group_start, 0);
+        assert_eq!(pf.data.len(), 40);
+        // Serialize/parse roundtrip.
+        let mut buf = Vec::new();
+        pf.write_to(&mut buf);
+        assert_eq!(buf.len(), ParityFrame::frame_len(2, 40));
+        let (back, used) = ParityFrame::parse(&buf).unwrap();
+        assert_eq!(used, buf.len());
+        assert_eq!(back, pf);
+        // Either member rebuilds bit-exactly from the other + parity.
+        assert_eq!(pf.repair(&[None, Some(&file[40..])]).unwrap(), a);
+        assert_eq!(pf.repair(&[Some(&file[..40]), None]).unwrap(), b);
+        // Zero or two erasures are beyond the code.
+        assert!(pf.repair(&[None, None]).is_err());
+        assert!(pf.repair(&[Some(&file[..40]), Some(&file[40..])]).is_err());
+        // Any bit flip anywhere in the serialized parity frame is
+        // caught by the head or data CRC.
+        for i in 0..buf.len() {
+            let mut bad = buf.clone();
+            bad[i] ^= 0x04;
+            assert!(ParityFrame::parse(&bad).is_err(), "flip at {i} undetected");
+        }
     }
 }

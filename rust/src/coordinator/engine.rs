@@ -52,12 +52,18 @@ pub struct EngineConfig {
     /// Values per chunk. Must equal CHUNK_ELEMS when device == Pjrt
     /// (the AOT artifacts have a fixed shape).
     pub chunk_size: usize,
-    /// Container format to write. V3 (default) = V2's adaptive
-    /// per-chunk stage selection plus the seekable index footer
-    /// ([`crate::archive`]); V2 enables adaptive stage selection
-    /// without the index; V1 reproduces the seed's format
-    /// byte-for-byte (every chunk uses the full stage chain).
+    /// Container format to write. V4 (default) = V3 plus one XOR
+    /// parity frame per `parity_group` chunks (single-erasure repair,
+    /// see [`crate::archive::repair`]) and a torn-write finalization
+    /// marker; V3 = V2's adaptive per-chunk stage selection plus the
+    /// seekable index footer ([`crate::archive`]); V2 enables adaptive
+    /// stage selection without the index; V1 reproduces the seed's
+    /// format byte-for-byte (every chunk uses the full stage chain).
     pub container_version: ContainerVersion,
+    /// Chunk frames per XOR parity frame (v4 only; smaller = more
+    /// repair capacity, more overhead). Must be nonzero when writing
+    /// v4; ignored by earlier versions.
+    pub parity_group: u32,
     /// PJRT handle, required when device == Pjrt.
     pub pjrt: Option<PjrtHandle>,
 }
@@ -73,6 +79,7 @@ impl EngineConfig {
             workers: 0,
             chunk_size: CHUNK_ELEMS,
             container_version: ContainerVersion::default(),
+            parity_group: crate::container::DEFAULT_PARITY_GROUP,
             pjrt: None,
         }
     }
@@ -99,6 +106,9 @@ impl EngineConfig {
         self.bound.validate().map_err(|e| anyhow!(e))?;
         if self.chunk_size == 0 {
             return Err(anyhow!("chunk_size must be positive"));
+        }
+        if self.container_version == ContainerVersion::V4 && self.parity_group == 0 {
+            return Err(anyhow!("v4 containers need parity_group >= 1"));
         }
         if self.device == Device::Pjrt {
             if self.chunk_size != CHUNK_ELEMS {
@@ -194,12 +204,12 @@ pub fn encode_chunk_record(
     crate::codec::rle::encode_into(&s.bitmap, &mut outlier_bytes);
     let chunk_plan = match cfg.container_version {
         ContainerVersion::V1 => cfg.pipeline.full_mask(),
-        ContainerVersion::V2 | ContainerVersion::V3 => {
+        ContainerVersion::V2 | ContainerVersion::V3 | ContainerVersion::V4 => {
             plan::choose(cfg.pipeline.stages(), &s.qwords, outliers)
         }
     };
     let stats = match cfg.container_version {
-        ContainerVersion::V3 => {
+        ContainerVersion::V3 | ContainerVersion::V4 => {
             // Summarize what a reader will decode, not the input: the
             // reconstruction is what an independent index rebuild can
             // reproduce, and what range queries actually see. Bare
@@ -387,6 +397,11 @@ pub fn compress(cfg: &EngineConfig, data: &[f32]) -> Result<(Container, RunStats
             chunk_size: cfg.chunk_size as u32,
             stages: cfg.pipeline.stages().to_vec(),
             n_chunks: n_chunks as u32,
+            parity_group: if cfg.container_version == ContainerVersion::V4 {
+                cfg.parity_group
+            } else {
+                0
+            },
         },
         chunks: chunk_records,
     };
@@ -569,6 +584,9 @@ mod tests {
         assert!(compress(&cfg, &[1.0]).is_err());
         cfg = EngineConfig::native(ErrorBound::Abs(1e-3));
         cfg.device = Device::Pjrt; // no handle
+        assert!(compress(&cfg, &[1.0]).is_err());
+        cfg = EngineConfig::native(ErrorBound::Abs(1e-3));
+        cfg.parity_group = 0; // v4 needs a nonzero group size
         assert!(compress(&cfg, &[1.0]).is_err());
     }
 

@@ -33,8 +33,10 @@ use anyhow::{anyhow, bail, Result};
 use crate::archive::index as archive_index;
 use crate::archive::stats::ChunkStats;
 use crate::container::{
-    crc::Crc32, parse_chunk_frame_header, ChunkRecord, ContainerVersion, Header,
-    CHUNK_FRAME_HEADER_LEN_V2, HEADER_FIXED_LEN,
+    crc::{crc32, Crc32},
+    parse_chunk_frame_header, ChunkRecord, ContainerVersion, Header, ParityFrame,
+    CHUNK_FRAME_HEADER_LEN_V2, FINALIZE_MARKER, HEADER_FIXED_LEN, PARITY_FRAME_FIXED,
+    PARITY_MAGIC, UNFINALIZED_DETAIL,
 };
 use crate::quantizer::QuantizerConfig;
 use crate::scratch::Scratch;
@@ -60,11 +62,13 @@ struct DoneItem {
 /// Compress a byte stream of little-endian f32 values into a container
 /// written to `out`. Returns run statistics.
 ///
-/// Under container v3 (the default) the emitted container carries the
-/// seekable index footer: each worker's [`ChunkRecord`] already
-/// includes its min/max summary, so the index costs this pipeline only
-/// the per-chunk entry bookkeeping the serializer keeps anyway — no
-/// chunk data is re-read or re-buffered to build it.
+/// Under containers v3 and v4 (the default) the emitted container
+/// carries the seekable index footer: each worker's [`ChunkRecord`]
+/// already includes its min/max summary, so the index costs this
+/// pipeline only the per-chunk entry bookkeeping the serializer keeps
+/// anyway — no chunk data is re-read or re-buffered to build it. v4
+/// additionally interleaves XOR parity frames and ends with a
+/// finalization marker (see [`crate::archive::repair`]).
 pub fn compress_stream<R: Read, W: Write>(
     cfg: &EngineConfig,
     queue_depth: usize,
@@ -75,6 +79,9 @@ pub fn compress_stream<R: Read, W: Write>(
         bail!("NOA needs a two-pass range scan; use coordinator::engine::compress");
     }
     cfg.bound.validate().map_err(|e| anyhow!(e))?;
+    if cfg.container_version == ContainerVersion::V4 && cfg.parity_group == 0 {
+        bail!("v4 containers need parity_group >= 1");
+    }
     let t0 = Instant::now();
     let qc = QuantizerConfig::resolve(cfg.bound, cfg.variant, cfg.protection, &[]);
     let depth = queue_depth.max(1);
@@ -210,6 +217,11 @@ pub fn compress_stream<R: Read, W: Write>(
             chunk_size: cfg.chunk_size as u32,
             stages: cfg.pipeline.stages().to_vec(),
             n_chunks: records.len() as u32,
+            parity_group: if cfg.container_version == ContainerVersion::V4 {
+                cfg.parity_group
+            } else {
+                0
+            },
         },
         chunks: records,
     };
@@ -237,6 +249,19 @@ fn read_full<R: Read>(r: &mut R, buf: &mut [u8]) -> Result<usize> {
     Ok(filled)
 }
 
+/// XOR `src` into `acc` starting at byte `pos`, growing `acc` with
+/// zeros as needed — the streaming form of a parity accumulation over
+/// frame images that arrive in pieces (head, outlier bytes, payload).
+fn xor_at(acc: &mut Vec<u8>, pos: usize, src: &[u8]) {
+    let end = pos + src.len();
+    if acc.len() < end {
+        acc.resize(end, 0);
+    }
+    for (a, b) in acc[pos..end].iter_mut().zip(src) {
+        *a ^= b;
+    }
+}
+
 /// `read_exact` that also feeds the running file CRC and byte counter.
 fn read_exact_tracked<R: Read>(
     r: &mut R,
@@ -249,6 +274,73 @@ fn read_exact_tracked<R: Read>(
     crc.update(buf);
     *count += buf.len() as u64;
     Ok(())
+}
+
+/// Stream one v4 parity frame (its 4-byte magic already consumed and
+/// CRC-tracked) and verify it against the group of chunk frames just
+/// streamed: member count and table, placement, and the XOR of the
+/// member frame images, bit for bit. `group` holds the streamed
+/// frames' (offset, frame_len, crc, n_values, plan) tuples and `acc`
+/// the running XOR of their images. Returns the frame's (offset,
+/// length, whole-frame CRC, group_size) for the footer cross-check.
+fn read_parity_frame<R: Read>(
+    input: &mut R,
+    crc: &mut Crc32,
+    compressed_bytes: &mut u64,
+    group: &[(u64, u32, u32, u32, u8)],
+    expected_group: usize,
+    acc: &[u8],
+) -> Result<(u64, u32, u32, u32)> {
+    let p_start = *compressed_bytes - 4;
+    let mut pbuf: Vec<u8> = Vec::with_capacity(PARITY_FRAME_FIXED);
+    pbuf.extend_from_slice(PARITY_MAGIC);
+    let mut fixed = [0u8; PARITY_FRAME_FIXED - 4];
+    read_exact_tracked(input, &mut fixed, crc, compressed_bytes)?;
+    pbuf.extend_from_slice(&fixed);
+    let n_members = u32::from_le_bytes(fixed[8..12].try_into().unwrap()) as usize;
+    let data_len = u32::from_le_bytes(fixed[12..16].try_into().unwrap()) as usize;
+    if n_members != group.len() {
+        bail!(
+            "parity frame {expected_group} covers {n_members} members, \
+             the stream produced {}",
+            group.len()
+        );
+    }
+    // The parity data must be exactly as long as the group's longest
+    // frame — checked against the frames already streamed BEFORE the
+    // allocation, so a forged length cannot balloon memory.
+    let max_len = group.iter().map(|f| f.1).max().unwrap_or(0) as usize;
+    if data_len != max_len {
+        bail!(
+            "parity frame {expected_group} data length {data_len} != \
+             longest member frame {max_len}"
+        );
+    }
+    let mut rest = vec![0u8; n_members * 8 + 8 + data_len];
+    read_exact_tracked(input, &mut rest, crc, compressed_bytes)?;
+    pbuf.extend_from_slice(&rest);
+    let (pf, used) = ParityFrame::parse(&pbuf).map_err(|e| anyhow!(e))?;
+    if used != pbuf.len() {
+        bail!("parity frame {expected_group} framing error");
+    }
+    if pf.group as usize != expected_group {
+        bail!(
+            "parity frame claims group {}, the stream is at group {expected_group}",
+            pf.group
+        );
+    }
+    if pf.group_start != group[0].0 {
+        bail!("parity frame {expected_group} group_start disagrees with the stream");
+    }
+    for (mi, (m, f)) in pf.members.iter().zip(group).enumerate() {
+        if m.0 != f.1 || m.1 != f.2 {
+            bail!("parity frame {expected_group} member {mi} disagrees with its streamed frame");
+        }
+    }
+    if pf.data != acc {
+        bail!("parity frame {expected_group} XOR data disagrees with its member frames");
+    }
+    Ok((p_start, pbuf.len() as u32, crc32(&pbuf), pf.group_size))
 }
 
 struct DecodeItem {
@@ -425,9 +517,26 @@ pub fn decompress_stream<R: Read, W: Write + Send>(
         let fh_len = version.chunk_frame_header_len();
         let mut frame_head = [0u8; CHUNK_FRAME_HEADER_LEN_V2];
         let mut values_seen = 0u64;
-        // v3 only: (offset, frame_len, crc, n_values, plan) per frame,
+        // v3/v4: (offset, frame_len, crc, n_values, plan) per frame,
         // to cross-validate the index footer after the last chunk.
         let mut observed_frames: Vec<(u64, u32, u32, u32, u8)> = Vec::new();
+        // v4 streaming parity state. The header does not carry the
+        // group size (it lives in the trailer, at the end) — so after
+        // each chunk frame the reader peeks 4 bytes: the parity magic
+        // means a parity frame follows; anything else is the start of
+        // the next chunk frame and is carried into its head read. The
+        // current group's XOR accumulator is folded as frame pieces
+        // stream by (O(one frame) memory), and each parity frame is
+        // verified on the spot: its member table against the frames
+        // just streamed, its data against the accumulator, bit for
+        // bit.
+        let mut acc: Vec<u8> = Vec::new();
+        let mut group_first = 0usize;
+        let mut k_seen: Option<u32> = None;
+        // (offset, frame_len, whole-frame crc) per parity frame, for
+        // the footer's parity entries.
+        let mut observed_parity: Vec<(u64, u32, u32)> = Vec::new();
+        let mut pending: Option<[u8; 4]> = None;
         for index in 0..n_chunks {
             // A failed worker never emits its chunk, so the collector
             // stalls at that index forever — stop framing immediately,
@@ -436,14 +545,26 @@ pub fn decompress_stream<R: Read, W: Write + Send>(
             if err.lock().unwrap().is_some() {
                 break;
             }
-            if read_exact_tracked(
-                &mut input,
-                &mut frame_head[..fh_len],
-                &mut crc,
-                &mut compressed_bytes,
-            )
-            .is_err()
-            {
+            // The v4 lookahead may already hold this frame's first 4
+            // bytes (they were read — and CRC-tracked — while peeking
+            // for a parity frame).
+            let head_read = if let Some(first4) = pending.take() {
+                frame_head[..4].copy_from_slice(&first4);
+                read_exact_tracked(
+                    &mut input,
+                    &mut frame_head[4..fh_len],
+                    &mut crc,
+                    &mut compressed_bytes,
+                )
+            } else {
+                read_exact_tracked(
+                    &mut input,
+                    &mut frame_head[..fh_len],
+                    &mut crc,
+                    &mut compressed_bytes,
+                )
+            };
+            if head_read.is_err() {
                 drop(work_tx);
                 let _ = collector.join();
                 bail!("truncated container at chunk {index}");
@@ -453,7 +574,9 @@ pub fn decompress_stream<R: Read, W: Write + Send>(
             let (n, ob, pb, want_crc) = parse_chunk_frame_header(&fixed);
             let chunk_plan = match version {
                 ContainerVersion::V1 => full_plan,
-                ContainerVersion::V2 | ContainerVersion::V3 => frame_head[16],
+                ContainerVersion::V2 | ContainerVersion::V3 | ContainerVersion::V4 => {
+                    frame_head[16]
+                }
             };
             if chunk_plan & !full_plan != 0 {
                 drop(work_tx);
@@ -491,7 +614,7 @@ pub fn decompress_stream<R: Read, W: Write + Send>(
                 let _ = collector.join();
                 bail!("truncated container at chunk {index}");
             }
-            if version == ContainerVersion::V3 {
+            if matches!(version, ContainerVersion::V3 | ContainerVersion::V4) {
                 observed_frames.push((
                     frame_start,
                     (compressed_bytes - frame_start) as u32,
@@ -499,6 +622,69 @@ pub fn decompress_stream<R: Read, W: Write + Send>(
                     n as u32,
                     chunk_plan,
                 ));
+            }
+            if version == ContainerVersion::V4 {
+                // Fold this frame's image into the group accumulator
+                // as its pieces sit in hand — no frame is re-read or
+                // re-buffered for parity verification.
+                xor_at(&mut acc, 0, &frame_head[..fh_len]);
+                xor_at(&mut acc, fh_len, &outlier_bytes);
+                xor_at(&mut acc, fh_len + ob as usize, &payload);
+                // Peek 4 bytes: a parity frame, or the next chunk
+                // frame's first bytes (carried into its head read).
+                let mut la = [0u8; 4];
+                if read_exact_tracked(&mut input, &mut la, &mut crc, &mut compressed_bytes)
+                    .is_err()
+                {
+                    drop(work_tx);
+                    let _ = collector.join();
+                    bail!("truncated container after chunk {index}");
+                }
+                if la == *PARITY_MAGIC {
+                    let group = &observed_frames[group_first..];
+                    let parsed = read_parity_frame(
+                        &mut input,
+                        &mut crc,
+                        &mut compressed_bytes,
+                        group,
+                        observed_parity.len(),
+                        &acc,
+                    );
+                    let (p_off, p_len, p_crc, gs) = match parsed {
+                        Ok(v) => v,
+                        Err(e) => {
+                            drop(work_tx);
+                            let _ = collector.join();
+                            return Err(e);
+                        }
+                    };
+                    // Only the final group may run short.
+                    if index + 1 != n_chunks && group.len() != gs as usize {
+                        drop(work_tx);
+                        let _ = collector.join();
+                        bail!(
+                            "parity frame {} closes a short group mid-stream",
+                            observed_parity.len()
+                        );
+                    }
+                    match k_seen {
+                        Some(k) if k != gs => {
+                            drop(work_tx);
+                            let _ = collector.join();
+                            bail!("parity frames disagree on the group size ({k} vs {gs})");
+                        }
+                        _ => k_seen = Some(gs),
+                    }
+                    observed_parity.push((p_off, p_len, p_crc));
+                    acc.clear();
+                    group_first = index + 1;
+                } else if index + 1 == n_chunks {
+                    drop(work_tx);
+                    let _ = collector.join();
+                    bail!("v4 container is missing its final parity frame");
+                } else {
+                    pending = Some(la);
+                }
             }
             let item = DecodeItem {
                 index,
@@ -562,6 +748,75 @@ pub fn decompress_stream<R: Read, W: Write + Send>(
                 }
             }
         }
+        // v4: same footer cross-check, plus parity entries and the
+        // richer trailer (which finally confirms the group size the
+        // parity frames advertised mid-stream).
+        if version == ContainerVersion::V4 {
+            let footer_offset = compressed_bytes;
+            let n_groups = observed_parity.len();
+            let mut block = vec![
+                0u8;
+                n_chunks * archive_index::ENTRY_LEN
+                    + n_groups * archive_index::PARITY_ENTRY_LEN
+                    + 4
+            ];
+            read_exact_tracked(&mut input, &mut block, &mut crc, &mut compressed_bytes)?;
+            let (entries, parity) =
+                archive_index::parse_entries_v4(&block, n_chunks as u32, n_groups as u32)
+                    .map_err(|e| anyhow!(e))?;
+            let mut tail = [0u8; archive_index::TRAILER_LEN_V4];
+            read_exact_tracked(&mut input, &mut tail, &mut crc, &mut compressed_bytes)?;
+            let trailer = archive_index::parse_trailer_v4(&tail).map_err(|e| anyhow!(e))?;
+            if trailer.footer_offset != footer_offset
+                || trailer.n_chunks as usize != n_chunks
+                || trailer.n_groups as usize != n_groups
+            {
+                bail!(
+                    "v4 trailer ({} chunks, {} groups at {}) disagrees with the stream \
+                     ({n_chunks} chunks, {n_groups} groups at {footer_offset})",
+                    trailer.n_chunks,
+                    trailer.n_groups,
+                    trailer.footer_offset
+                );
+            }
+            if trailer.parity_group == 0 {
+                bail!("v4 trailer has a zero parity group size");
+            }
+            if let Some(k) = k_seen {
+                if trailer.parity_group != k {
+                    bail!(
+                        "trailer parity group {} disagrees with the streamed frames ({k})",
+                        trailer.parity_group
+                    );
+                }
+            }
+            if (n_chunks as u64).div_ceil(trailer.parity_group as u64) != n_groups as u64 {
+                bail!(
+                    "v4 group count {n_groups} disagrees with {n_chunks} chunks at \
+                     group size {}",
+                    trailer.parity_group
+                );
+            }
+            for (i, (e, &(off, flen, fcrc, fn_values, fplan))) in
+                entries.iter().zip(&observed_frames).enumerate()
+            {
+                if e.offset != off
+                    || e.frame_len != flen
+                    || e.crc32 != fcrc
+                    || e.n_values != fn_values
+                    || e.plan != fplan
+                {
+                    bail!("index entry {i} disagrees with streamed chunk {i}");
+                }
+            }
+            for (g, (pe, &(off, flen, fcrc))) in
+                parity.iter().zip(&observed_parity).enumerate()
+            {
+                if pe.offset != off || pe.frame_len != flen || pe.crc32 != fcrc {
+                    bail!("parity entry {g} disagrees with streamed parity frame {g}");
+                }
+            }
+        }
         // Trailing file CRC (not part of the running CRC), then EOF.
         let mut trail = [0u8; 4];
         input
@@ -570,6 +825,16 @@ pub fn decompress_stream<R: Read, W: Write + Send>(
         compressed_bytes += 4;
         if crc.finalize() != u32::from_le_bytes(trail) {
             bail!("file CRC mismatch");
+        }
+        // v4: the finalization marker is the writer's very last write
+        // and is NOT covered by the file CRC; a missing or mangled
+        // marker is the typed torn-write signal.
+        if version == ContainerVersion::V4 {
+            let mut marker = [0u8; FINALIZE_MARKER.len()];
+            if input.read_exact(&mut marker).is_err() || marker != *FINALIZE_MARKER {
+                bail!("{UNFINALIZED_DETAIL}");
+            }
+            compressed_bytes += marker.len() as u64;
         }
         let mut probe = [0u8; 1];
         if input.read(&mut probe)? != 0 {
@@ -760,5 +1025,40 @@ mod tests {
         let mid = bytes.len() / 2;
         bad[mid] ^= 0x40;
         assert!(decompress_slice_streaming(&cfg, &bad).is_err());
+    }
+
+    #[test]
+    fn streaming_decode_types_a_torn_v4_tail() {
+        let x = Suite::Cesm.generate(3, 50_000);
+        let cfg = EngineConfig::native(ErrorBound::Abs(1e-3));
+        let (bytes, _) = compress_slice_streaming(&cfg, &x).unwrap();
+        // Default container is v4: dropping the 8-byte finalization
+        // marker must read as a torn write, not a short-but-valid file.
+        let torn = &bytes[..bytes.len() - crate::container::FINALIZE_MARKER.len()];
+        let err = decompress_slice_streaming(&cfg, torn).unwrap_err();
+        assert!(format!("{err:#}").contains("unfinalized"), "{err:#}");
+        // ... and a mangled marker likewise.
+        let mut mangled = bytes.clone();
+        let last = mangled.len() - 1;
+        mangled[last] ^= 0xFF;
+        let err = decompress_slice_streaming(&cfg, &mangled).unwrap_err();
+        assert!(format!("{err:#}").contains("unfinalized"), "{err:#}");
+    }
+
+    #[test]
+    fn streaming_decode_verifies_parity_against_frames() {
+        let x = Suite::Cesm.generate(4, 40_000);
+        let mut cfg = EngineConfig::native(ErrorBound::Abs(1e-3));
+        cfg.chunk_size = 4096;
+        cfg.parity_group = 2;
+        let (bytes, _) = compress_slice_streaming(&cfg, &x).unwrap();
+        let r = crate::archive::Reader::from_bytes(bytes.clone()).unwrap();
+        // Flip one byte inside a parity frame's XOR data: the streaming
+        // decoder must reject it even though every chunk CRC passes.
+        let pe = r.parity_entries()[0];
+        let mut bad = bytes.clone();
+        bad[(pe.offset + pe.frame_len as u64) as usize - 1] ^= 0x01;
+        let err = decompress_slice_streaming(&cfg, &bad).unwrap_err();
+        assert!(format!("{err:#}").contains("parity"), "{err:#}");
     }
 }

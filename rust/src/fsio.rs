@@ -1,0 +1,129 @@
+//! Crash-consistent file output: temp file + fsync + atomic rename.
+//!
+//! The failure this prevents: a compressor killed mid-write leaves a
+//! half-written `.lcz` at the destination path, and — before container
+//! v4's finalization marker — a torn tail could even parse as a
+//! shorter-but-valid archive. Writing through a temp sibling and
+//! renaming over the destination makes the visible file transition
+//! atomic: readers see either the complete old contents or the
+//! complete new contents, never a prefix.
+//!
+//! The sequence is the standard one: write to `<name>.tmp.<pid>` in
+//! the destination's directory (same filesystem, so the rename cannot
+//! degrade to a copy), `fsync` the temp file so its bytes are durable
+//! before the rename makes them visible, rename over the destination,
+//! then best-effort `fsync` the parent directory so the rename itself
+//! survives a crash (POSIX leaves directory durability to that final
+//! step; on non-unix targets it is skipped). Any error unlinks the
+//! temp file — a failed write never litters or half-replaces.
+
+use std::fs::File;
+use std::io::{self, Write};
+use std::path::{Path, PathBuf};
+
+/// The temp sibling for `path`: same directory, `.tmp.<pid>` suffix.
+/// The pid keeps concurrent writers of the same destination from
+/// clobbering each other's temp files (last rename still wins, but
+/// each rename moves a complete file).
+fn temp_sibling(path: &Path) -> PathBuf {
+    let mut name = path.file_name().unwrap_or_default().to_os_string();
+    name.push(format!(".tmp.{}", std::process::id()));
+    path.with_file_name(name)
+}
+
+/// Best-effort parent-directory fsync (unix only): makes the rename
+/// durable. Failures are ignored — some filesystems reject directory
+/// fsync, and the data-file fsync already happened.
+fn sync_parent_dir(path: &Path) {
+    #[cfg(unix)]
+    if let Some(parent) = path.parent() {
+        let dir = if parent.as_os_str().is_empty() {
+            Path::new(".")
+        } else {
+            parent
+        };
+        if let Ok(d) = File::open(dir) {
+            let _ = d.sync_all();
+        }
+    }
+    #[cfg(not(unix))]
+    let _ = path;
+}
+
+/// Write `bytes` to `path` crash-consistently: temp sibling, fsync,
+/// atomic rename, parent-dir fsync. On any error the temp file is
+/// removed and `path` is untouched.
+pub fn atomic_write(path: &Path, bytes: &[u8]) -> io::Result<()> {
+    atomic_write_with(path, |f| f.write_all(bytes))
+}
+
+/// Like [`atomic_write`], but the caller streams into the temp file
+/// through `fill` (for outputs too large to buffer). The temp file is
+/// fsynced and renamed into place only if `fill` succeeds; otherwise
+/// it is removed and `path` is untouched.
+pub fn atomic_write_with<F>(path: &Path, fill: F) -> io::Result<()>
+where
+    F: FnOnce(&mut File) -> io::Result<()>,
+{
+    let tmp = temp_sibling(path);
+    let result = (|| {
+        let mut f = File::create(&tmp)?;
+        fill(&mut f)?;
+        f.sync_all()?;
+        drop(f);
+        std::fs::rename(&tmp, path)?;
+        Ok(())
+    })();
+    match result {
+        Ok(()) => {
+            sync_parent_dir(path);
+            Ok(())
+        }
+        Err(e) => {
+            let _ = std::fs::remove_file(&tmp);
+            Err(e)
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn tmp_dir(tag: &str) -> PathBuf {
+        let d = std::env::temp_dir().join(format!("lc_fsio_{tag}_{}", std::process::id()));
+        std::fs::create_dir_all(&d).unwrap();
+        d
+    }
+
+    #[test]
+    fn atomic_write_roundtrips() {
+        let d = tmp_dir("roundtrip");
+        let p = d.join("out.bin");
+        atomic_write(&p, b"hello archive").unwrap();
+        assert_eq!(std::fs::read(&p).unwrap(), b"hello archive");
+        // Overwrite is atomic too (old contents fully replaced).
+        atomic_write(&p, b"second").unwrap();
+        assert_eq!(std::fs::read(&p).unwrap(), b"second");
+        std::fs::remove_dir_all(&d).unwrap();
+    }
+
+    #[test]
+    fn failed_fill_leaves_destination_untouched_and_no_temp() {
+        let d = tmp_dir("fail");
+        let p = d.join("out.bin");
+        atomic_write(&p, b"original").unwrap();
+        let err = atomic_write_with(&p, |f| {
+            f.write_all(b"partial garbage")?;
+            Err(io::Error::other("simulated mid-write crash"))
+        });
+        assert!(err.is_err());
+        assert_eq!(std::fs::read(&p).unwrap(), b"original");
+        let leftovers: Vec<_> = std::fs::read_dir(&d)
+            .unwrap()
+            .map(|e| e.unwrap().file_name())
+            .collect();
+        assert_eq!(leftovers, vec![std::ffi::OsString::from("out.bin")]);
+        std::fs::remove_dir_all(&d).unwrap();
+    }
+}

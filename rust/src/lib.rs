@@ -26,6 +26,7 @@ pub mod container;
 pub mod coordinator;
 pub mod data;
 pub mod error;
+pub mod fsio;
 pub mod quantizer;
 pub mod reference;
 pub mod runtime;

@@ -4,6 +4,10 @@
 //!   compress / decompress / verify     file operations (.f32 <-> .lcz)
 //!   inspect                            header + chunk index/stats table
 //!   extract                            random-access element-range decode
+//!   scrub                              verify + parity-repair a v4
+//!                                      container in place
+//!   salvage                            best-effort decode of a damaged
+//!                                      or truncated archive
 //!   gendata                            synthetic suite generation
 //!   table1 table3 table4 table5 table6 table7 table8 table9
 //!                                      regenerate the paper's tables
@@ -45,15 +49,27 @@ USAGE:
   lc compress   <in.f32> <out.lcz> [--eb-type abs|rel|noa] [--eb EPS]
                 [--variant approx|native] [--unprotected]
                 [--device native|pjrt] [--workers N]
-                [--container-version 1|2|3]  (3 = seekable index footer
-                + adaptive per-chunk stage selection, the default;
+                [--container-version 1|2|3|4]  (4 = v3 plus XOR parity
+                frames, crash marker, and in-place repair, the default;
+                3 = seekable index footer + adaptive per-chunk stages;
                 2 = adaptive without the index; 1 = seed format)
+                [--parity-group K]  (v4 only: chunk frames per XOR
+                parity frame, default 16; each group survives one
+                corrupt frame, so smaller K = more repair capacity)
   lc decompress <in.lcz> <out.f32> [--device native|pjrt] [--workers N]
-  lc inspect    <in.lcz>           (header + per-chunk table; v3 adds
+  lc inspect    <in.lcz>           (header + per-chunk table; v3/v4 add
                 the index footer's offsets and min/max stats)
   lc extract    <in.lcz> <out.f32> [--range A..B]  (decode elements
-                A..B, end-exclusive; random access on v3 containers,
+                A..B, end-exclusive; random access on v3/v4 containers,
                 explicit full-decode fallback on v1/v2)
+  lc scrub      <file.lcz> [--dry-run]  (verify a v4 container; rebuild
+                any single corrupt frame per parity group from XOR
+                parity, re-validate the whole image, and atomically
+                rewrite it in place; --dry-run reports without writing)
+  lc salvage    <in.lcz> <out.f32> [--report]  (best-effort decode of a
+                damaged or truncated archive: CRC-proven runs only,
+                written concatenated; --report prints the hole map —
+                holes are reported, never filled with fabricated bytes)
   lc verify     <orig.f32> <file.lcz>
   lc gendata    <suite> <file-idx> <n-values> <out.f32>
   lc table1 | table3 | table4 | table5 | table6 | table7 | table8 | table9
@@ -70,6 +86,7 @@ USAGE:
 
 Suites: CESM EXAALT HACC NYX QMCPACK SCALE ISABEL
 Artifacts are loaded from $LC_ARTIFACT_DIR or ./artifacts (PJRT device).
+File outputs are crash-consistent: temp sibling + fsync + atomic rename.
 ";
 
 struct Opts {
@@ -84,7 +101,10 @@ fn parse_opts(args: &[String]) -> Opts {
     while i < args.len() {
         let a = &args[i];
         if let Some(name) = a.strip_prefix("--") {
-            let boolean = matches!(name, "unprotected" | "rel" | "quick" | "help" | "status");
+            let boolean = matches!(
+                name,
+                "unprotected" | "rel" | "quick" | "help" | "status" | "dry-run" | "report"
+            );
             if boolean || i + 1 >= args.len() {
                 flags.insert(name.to_string(), "true".to_string());
             } else {
@@ -136,12 +156,15 @@ fn engine_config(o: &Opts, service: &mut Option<PjrtService>) -> Result<EngineCo
     if o.flag("unprotected").is_some() {
         cfg.protection = Protection::Unprotected;
     }
-    cfg.container_version = match o.flag("container-version").unwrap_or("3") {
+    cfg.container_version = match o.flag("container-version").unwrap_or("4") {
         "1" => lc::container::ContainerVersion::V1,
         "2" => lc::container::ContainerVersion::V2,
         "3" => lc::container::ContainerVersion::V3,
-        v => bail!("invalid --container-version {v:?} (expected 1, 2, or 3)"),
+        "4" => lc::container::ContainerVersion::V4,
+        v => bail!("invalid --container-version {v:?} (expected 1, 2, 3, or 4)"),
     };
+    cfg.parity_group =
+        o.usize_flag("parity-group", lc::container::DEFAULT_PARITY_GROUP as usize)? as u32;
     cfg.workers = o.usize_flag("workers", 0)?;
     if o.flag("device") == Some("pjrt") {
         let svc = PjrtService::start(&default_artifact_dir())?;
@@ -212,7 +235,8 @@ fn read_f32_file(path: &str) -> Result<Vec<f32>> {
 
 fn write_f32_file(path: &str, data: &[f32]) -> Result<()> {
     let bytes: Vec<u8> = data.iter().flat_map(|v| v.to_le_bytes()).collect();
-    std::fs::write(path, bytes).with_context(|| format!("writing {path}"))
+    lc::fsio::atomic_write(std::path::Path::new(path), &bytes)
+        .with_context(|| format!("writing {path}"))
 }
 
 /// Parse and bounds-check an `--range A..B` element range (end
@@ -276,20 +300,28 @@ fn run(args: Vec<String>) -> Result<()> {
                 // NOA needs the global range: in-memory path.
                 let data = read_f32_file(inp)?;
                 let (container, stats) = lc::coordinator::compress(&cfg, &data)?;
-                std::fs::write(outp, container.to_bytes())?;
+                lc::fsio::atomic_write(std::path::Path::new(outp), &container.to_bytes())
+                    .with_context(|| format!("writing {outp}"))?;
                 stats
             } else {
                 let f = std::fs::File::open(inp).with_context(|| format!("opening {inp}"))?;
-                let mut out = std::io::BufWriter::new(std::fs::File::create(outp)?);
-                let stats = compress_stream(
-                    &cfg,
-                    DEFAULT_QUEUE_DEPTH,
-                    std::io::BufReader::new(f),
-                    &mut out,
-                )?;
-                use std::io::Write;
-                out.flush()?;
-                stats
+                let mut reader = std::io::BufReader::new(f);
+                // Stream into a temp sibling; the destination appears
+                // only after the full container is fsynced (a crash
+                // mid-compress never leaves a torn .lcz at outp).
+                let mut stats_slot = None;
+                lc::fsio::atomic_write_with(std::path::Path::new(outp), |file| {
+                    let mut out = std::io::BufWriter::new(file);
+                    let stats =
+                        compress_stream(&cfg, DEFAULT_QUEUE_DEPTH, &mut reader, &mut out)
+                            .map_err(|e| std::io::Error::other(format!("{e:#}")))?;
+                    use std::io::Write;
+                    out.flush()?;
+                    stats_slot = Some(stats);
+                    Ok(())
+                })
+                .with_context(|| format!("writing {outp}"))?;
+                stats_slot.expect("compress_stream succeeded")
             };
             println!(
                 "{} values -> {} bytes  ratio {:.3}  outliers {:.4}%  {:.3} GB/s",
@@ -308,15 +340,19 @@ fn run(args: Vec<String>) -> Result<()> {
             // container is; all decode parameters travel in its header.
             let cfg = engine_config(&o, &mut service)?;
             let f = std::fs::File::open(inp).with_context(|| format!("opening {inp}"))?;
-            let mut out = std::io::BufWriter::new(std::fs::File::create(outp)?);
-            let stats = decompress_stream(
-                &cfg,
-                DEFAULT_QUEUE_DEPTH,
-                std::io::BufReader::new(f),
-                &mut out,
-            )?;
-            use std::io::Write;
-            out.flush()?;
+            let mut reader = std::io::BufReader::new(f);
+            let mut stats_slot = None;
+            lc::fsio::atomic_write_with(std::path::Path::new(outp), |file| {
+                let mut out = std::io::BufWriter::new(file);
+                let stats = decompress_stream(&cfg, DEFAULT_QUEUE_DEPTH, &mut reader, &mut out)
+                    .map_err(|e| std::io::Error::other(format!("{e:#}")))?;
+                use std::io::Write;
+                out.flush()?;
+                stats_slot = Some(stats);
+                Ok(())
+            })
+            .with_context(|| format!("writing {outp}"))?;
+            let stats = stats_slot.expect("decompress_stream succeeded");
             println!(
                 "{} values  {:.3} GB/s",
                 stats.n_values,
@@ -355,11 +391,21 @@ fn run(args: Vec<String>) -> Result<()> {
                 bail!("inspect wants <in.lcz>");
             };
             let bytes = std::fs::read(inp).with_context(|| format!("reading {inp}"))?;
-            if bytes.get(..4) == Some(lc::container::MAGIC_V3.as_slice()) {
+            let indexed = bytes.get(..4) == Some(lc::container::MAGIC_V3.as_slice())
+                || bytes.get(..4) == Some(lc::container::MAGIC_V4.as_slice());
+            if indexed {
                 let r = lc::archive::Reader::from_bytes(bytes).map_err(|e| anyhow!(e))?;
                 let h = r.header();
                 let plan_w = h.stages.len().max(1);
                 print_container_header(h);
+                if !r.parity_entries().is_empty() {
+                    println!(
+                        "parity: {} XOR frame(s), group size {} (each group survives one \
+                         corrupt chunk frame)",
+                        r.parity_entries().len(),
+                        h.parity_group_effective()
+                    );
+                }
                 println!(
                     "{:>6}  {:>12}  {:>10}  {:>8}  {:>8}  {:>10}  {:>13}  {:>13}",
                     "chunk", "offset", "bytes", "values", "plan", "crc32", "min", "max"
@@ -407,7 +453,9 @@ fn run(args: Vec<String>) -> Result<()> {
                 bail!("extract wants <in.lcz> <out.f32> [--range A..B]");
             };
             let bytes = std::fs::read(inp).with_context(|| format!("reading {inp}"))?;
-            if bytes.get(..4) == Some(lc::container::MAGIC_V3.as_slice()) {
+            let indexed = bytes.get(..4) == Some(lc::container::MAGIC_V3.as_slice())
+                || bytes.get(..4) == Some(lc::container::MAGIC_V4.as_slice());
+            if indexed {
                 let r = lc::archive::Reader::from_bytes(bytes).map_err(|e| anyhow!(e))?;
                 let range = parse_elem_range(o.flag("range"), r.n_values())?;
                 let y = r.decode_range(range.clone()).map_err(|e| anyhow!(e))?;
@@ -441,6 +489,101 @@ fn run(args: Vec<String>) -> Result<()> {
                     y.len(),
                     range.start,
                     range.end
+                );
+            }
+        }
+        "scrub" => {
+            let [inp] = o.positional.as_slice() else {
+                bail!("scrub wants <file.lcz> [--dry-run]");
+            };
+            let bytes = std::fs::read(inp).with_context(|| format!("reading {inp}"))?;
+            let report = lc::archive::scrub(&bytes).map_err(|e| anyhow!(e))?;
+            match &report.patched {
+                None => println!("{inp}: clean, no repairs needed"),
+                Some(patched) => {
+                    if !report.repaired_chunks.is_empty() {
+                        println!(
+                            "{inp}: rebuilt {} chunk frame(s) from parity: {:?}",
+                            report.repaired_chunks.len(),
+                            report.repaired_chunks
+                        );
+                    }
+                    if !report.rebuilt_parity.is_empty() {
+                        println!(
+                            "{inp}: rebuilt {} parity frame(s) from intact members: {:?}",
+                            report.rebuilt_parity.len(),
+                            report.rebuilt_parity
+                        );
+                    }
+                    if report.repaired_chunks.is_empty() && report.rebuilt_parity.is_empty() {
+                        println!("{inp}: repaired file metadata (CRC/tail)");
+                    }
+                    if o.flag("dry-run").is_some() {
+                        println!("dry run: {inp} left untouched");
+                    } else {
+                        lc::fsio::atomic_write(std::path::Path::new(inp), patched)
+                            .with_context(|| format!("rewriting {inp}"))?;
+                        println!(
+                            "rewrote {inp} atomically ({} bytes, fully re-validated)",
+                            patched.len()
+                        );
+                    }
+                }
+            }
+        }
+        "salvage" => {
+            let [inp, outp] = o.positional.as_slice() else {
+                bail!("salvage wants <in.lcz> <out.f32> [--report]");
+            };
+            let bytes = std::fs::read(inp).with_context(|| format!("reading {inp}"))?;
+            let s = lc::archive::salvage(&bytes).map_err(|e| anyhow!(e))?;
+            let total: usize = s.segments.iter().map(|seg| seg.values.len()).sum();
+            let mut vals = Vec::with_capacity(total);
+            for seg in &s.segments {
+                vals.extend_from_slice(&seg.values);
+            }
+            write_f32_file(outp, &vals)?;
+            let r = &s.report;
+            let lost: u64 = r.holes.iter().map(|h| h.elems.end - h.elems.start).sum();
+            println!(
+                "recovered {total} of {} values -> {outp}  ({} segment(s), {} hole(s), \
+                 {lost} value(s) lost){}",
+                r.n_values,
+                s.segments.len(),
+                r.holes.len(),
+                if r.used_resync {
+                    "  [index unusable: frame-resync scan]"
+                } else {
+                    ""
+                }
+            );
+            if !r.repaired_chunks.is_empty() {
+                println!("parity-repaired chunks: {:?}", r.repaired_chunks);
+            }
+            if r.unplaced_frames > 0 {
+                println!(
+                    "{} CRC-valid frame(s) found but not placed (no surviving anchor \
+                     names their chunk index)",
+                    r.unplaced_frames
+                );
+            }
+            if o.flag("report").is_some() {
+                println!("recovered element ranges:");
+                for rr in &r.recovered {
+                    println!("  [{}..{})", rr.start, rr.end);
+                }
+                println!("hole map:");
+                for h in &r.holes {
+                    println!(
+                        "  chunks [{}..{})  elems [{}..{})  {}",
+                        h.chunks.start, h.chunks.end, h.elems.start, h.elems.end, h.reason
+                    );
+                }
+            }
+            if !r.holes.is_empty() {
+                eprintln!(
+                    "note: {outp} concatenates the recovered runs; element placement is \
+                     in --report (holes are never filled with fabricated bytes)"
                 );
             }
         }

@@ -627,16 +627,14 @@ pub fn compress(cfg: &EngineConfig, data: &[f32]) -> Result<Container, String> {
         };
         let plan = match cfg.container_version {
             ContainerVersion::V1 => cfg.pipeline.full_mask(),
-            ContainerVersion::V2 | ContainerVersion::V3 => crate::codec::plan::choose(
-                cfg.pipeline.stages(),
-                &q.words,
-                q.outlier_count(),
-            ),
+            ContainerVersion::V2 | ContainerVersion::V3 | ContainerVersion::V4 => {
+                crate::codec::plan::choose(cfg.pipeline.stages(), &q.words, q.outlier_count())
+            }
         };
-        // v3: the footer summary over the naive reconstruction —
+        // v3/v4: the footer summary over the naive reconstruction —
         // per-element dequantize + a naive fold, this module's style.
         let stats = match cfg.container_version {
-            ContainerVersion::V3 => {
+            ContainerVersion::V3 | ContainerVersion::V4 => {
                 let y = match qc {
                     QuantizerConfig::Abs(p, _) => dequantize_abs(&q, p),
                     QuantizerConfig::Rel(p, v, _) => dequantize_rel(&q, p, v),
@@ -665,6 +663,11 @@ pub fn compress(cfg: &EngineConfig, data: &[f32]) -> Result<Container, String> {
             chunk_size: cfg.chunk_size as u32,
             stages: cfg.pipeline.stages().to_vec(),
             n_chunks: chunks.len() as u32,
+            parity_group: if cfg.container_version == ContainerVersion::V4 {
+                cfg.parity_group
+            } else {
+                0
+            },
         },
         chunks,
     })
@@ -689,16 +692,20 @@ fn naive_min_max(values: &[f32]) -> ChunkStats {
     ChunkStats { min, max }
 }
 
-/// Independently rebuild a v3 container's index footer from its frames
-/// alone: offsets by re-walking the serialized layout, stats by naive
+/// Independently rebuild a v3/v4 container's index footer from its
+/// frames alone: offsets by re-walking the serialized layout (v4 walks
+/// skip each group's interleaved parity frame), stats by naive
 /// per-chunk decode + per-element dequantize, CRCs recomputed. The
 /// writer's footer must match this bit for bit
 /// (`prop_v3_reference_index_rebuild_matches_writer`) — the
 /// differential pin that keeps the engine's footer honest.
 pub fn rebuild_index(container: &Container) -> Result<Vec<IndexEntry>, String> {
     let h = &container.header;
-    if h.version != ContainerVersion::V3 {
-        return Err(format!("rebuild_index wants a v3 container, got {:?}", h.version));
+    if !matches!(h.version, ContainerVersion::V3 | ContainerVersion::V4) {
+        return Err(format!(
+            "rebuild_index wants a v3/v4 container, got {:?}",
+            h.version
+        ));
     }
     let qc = match h.bound {
         ErrorBound::Abs(_) | ErrorBound::Noa(_) => {
@@ -707,9 +714,15 @@ pub fn rebuild_index(container: &Container) -> Result<Vec<IndexEntry>, String> {
         ErrorBound::Rel(e) => QuantizerConfig::Rel(RelParams::new(e), h.variant, h.protection),
     };
     let frame_head = h.version.chunk_frame_header_len() as u64;
+    let k = if h.version == ContainerVersion::V4 {
+        h.parity_group_effective() as usize
+    } else {
+        0
+    };
     let mut offset = h.to_bytes().len() as u64;
     let mut entries = Vec::with_capacity(container.chunks.len());
-    for rec in &container.chunks {
+    let mut group_lens: Vec<u64> = Vec::new();
+    for (i, rec) in container.chunks.iter().enumerate() {
         let n = rec.n_values as usize;
         let p = masked_pipeline(&h.stages, rec.plan)?;
         let words = decode_pipeline(&p, &rec.payload, n)?;
@@ -730,8 +743,93 @@ pub fn rebuild_index(container: &Container) -> Result<Vec<IndexEntry>, String> {
             stats: naive_min_max(&y),
         });
         offset += frame_len;
+        // v4: a parity frame follows every full group (and the last,
+        // possibly short, one) — skip its bytes in the offset walk.
+        if k > 0 {
+            group_lens.push(frame_len);
+            if group_lens.len() == k || i + 1 == container.chunks.len() {
+                let max_len = *group_lens.iter().max().unwrap() as usize;
+                offset +=
+                    crate::container::ParityFrame::frame_len(group_lens.len(), max_len) as u64;
+                group_lens.clear();
+            }
+        }
     }
     Ok(entries)
+}
+
+/// Independently rebuild a v4 container's parity frames from its chunk
+/// records alone: naive re-serialization of each member frame image, a
+/// byte-wise XOR fold zero-padded to the group's longest member, and a
+/// hand-rolled serialization of the parity frame layout — sharing no
+/// code with [`crate::container::ParityFrame`]. The writer's
+/// interleaved parity frames must match these images bit for bit — the
+/// differential pin that keeps the parity writer honest.
+pub fn rebuild_parity(container: &Container) -> Result<Vec<Vec<u8>>, String> {
+    let h = &container.header;
+    if h.version != ContainerVersion::V4 {
+        return Err(format!(
+            "rebuild_parity wants a v4 container, got {:?}",
+            h.version
+        ));
+    }
+    let k = h.parity_group_effective() as usize;
+    if k == 0 {
+        return Err("v4 header has a zero parity group size".into());
+    }
+    let mut offset = h.to_bytes().len() as u64;
+    let mut group: Vec<Vec<u8>> = Vec::new();
+    let mut group_start = offset;
+    let mut out: Vec<Vec<u8>> = Vec::new();
+    for (i, rec) in container.chunks.iter().enumerate() {
+        // Hand-rolled v2+ chunk frame image: 16-byte fixed head, plan
+        // byte, outlier bytes, payload; the chunk CRC covers
+        // `plan || outlier || payload`.
+        let mut body = Vec::with_capacity(1 + rec.outlier_bytes.len() + rec.payload.len());
+        body.push(rec.plan);
+        body.extend_from_slice(&rec.outlier_bytes);
+        body.extend_from_slice(&rec.payload);
+        let mut f = Vec::with_capacity(16 + body.len());
+        f.extend_from_slice(&rec.n_values.to_le_bytes());
+        f.extend_from_slice(&(rec.outlier_bytes.len() as u32).to_le_bytes());
+        f.extend_from_slice(&(rec.payload.len() as u32).to_le_bytes());
+        f.extend_from_slice(&crate::container::crc::crc32(&body).to_le_bytes());
+        f.extend_from_slice(&body);
+        if group.is_empty() {
+            group_start = offset;
+        }
+        offset += f.len() as u64;
+        group.push(f);
+        if group.len() == k || i + 1 == container.chunks.len() {
+            let data_len = group.iter().map(|f| f.len()).max().unwrap();
+            let mut data = vec![0u8; data_len];
+            for f in &group {
+                for (d, s) in data.iter_mut().zip(f) {
+                    *d ^= *s;
+                }
+            }
+            let mut p = Vec::new();
+            p.extend_from_slice(b"LCPF");
+            p.extend_from_slice(&(out.len() as u32).to_le_bytes());
+            p.extend_from_slice(&(k as u32).to_le_bytes());
+            p.extend_from_slice(&(group.len() as u32).to_le_bytes());
+            p.extend_from_slice(&(data_len as u32).to_le_bytes());
+            p.extend_from_slice(&group_start.to_le_bytes());
+            for f in &group {
+                let crc = u32::from_le_bytes(f[12..16].try_into().unwrap());
+                p.extend_from_slice(&(f.len() as u32).to_le_bytes());
+                p.extend_from_slice(&crc.to_le_bytes());
+            }
+            let head_crc = crate::container::crc::crc32(&p[4..]);
+            p.extend_from_slice(&head_crc.to_le_bytes());
+            p.extend_from_slice(&crate::container::crc::crc32(&data).to_le_bytes());
+            p.extend_from_slice(&data);
+            offset += p.len() as u64;
+            out.push(p);
+            group.clear();
+        }
+    }
+    Ok(out)
 }
 
 /// Naive single-threaded mirror of `coordinator::engine::decompress`:

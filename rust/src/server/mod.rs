@@ -519,6 +519,11 @@ fn handle_compress(
             chunk_size: cfg.chunk_size as u32,
             stages: cfg.pipeline.stages().to_vec(),
             n_chunks: records.len() as u32,
+            parity_group: if params.version == crate::container::ContainerVersion::V4 {
+                cfg.parity_group
+            } else {
+                0
+            },
         },
         chunks: records,
     };

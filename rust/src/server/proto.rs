@@ -307,14 +307,14 @@ pub struct CompressParams {
 }
 
 impl CompressParams {
-    /// ABS bound, protected, approx variant, v3 container — the
+    /// ABS bound, protected, approx variant, v4 container — the
     /// server-side defaults of `lc compress`.
     pub fn abs(epsilon: f32) -> CompressParams {
         CompressParams {
             bound: ErrorBound::Abs(epsilon),
             variant: FnVariant::Approx,
             protection: Protection::Protected,
-            version: ContainerVersion::V3,
+            version: ContainerVersion::V4,
         }
     }
 }
@@ -338,6 +338,7 @@ fn version_tag(v: ContainerVersion) -> u8 {
         ContainerVersion::V1 => 1,
         ContainerVersion::V2 => 2,
         ContainerVersion::V3 => 3,
+        ContainerVersion::V4 => 4,
     }
 }
 
@@ -401,6 +402,7 @@ pub fn parse_compress_tail(b: &[u8]) -> Result<(CompressParams, &[u8]), String> 
         1 => ContainerVersion::V1,
         2 => ContainerVersion::V2,
         3 => ContainerVersion::V3,
+        4 => ContainerVersion::V4,
         t => return Err(format!("bad container version tag {t}")),
     };
     let data = &b[COMPRESS_PARAMS_LEN..];

@@ -1,0 +1,341 @@
+//! Deterministic fault injection for the self-healing archive
+//! campaign.
+//!
+//! The robustness claim of container v4 ("every outcome is bit-exact
+//! data or a typed error — never a panic, an OOM, or silent wrong
+//! bytes") is only worth what the adversarial inputs behind it cover.
+//! This module makes those inputs systematic and reproducible:
+//!
+//! * [`map_v4`] labels every structural region of a serialized v4
+//!   container — header, each frame's fixed head / plan byte / body,
+//!   each parity frame's head and XOR data, footer, trailer, file CRC,
+//!   finalization marker — straight from the archive's own index, so
+//!   the sweep cannot drift out of sync with the layout.
+//! * [`sweep`] derives, from one seed, a fault per region per kind:
+//!   single-bit flips, multi-byte smears, truncations at and inside
+//!   every region boundary, and torn tails (truncate + garbage) — the
+//!   crash-mid-write shapes [`crate::fsio`] exists to prevent.
+//! * [`XorShift64`] is the seeded generator: same seed, same faults,
+//!   forever — a failing case in CI replays locally from its region
+//!   label and seed alone.
+//!
+//! The campaign itself lives in `rust/tests/fault_injection.rs`.
+
+use crate::archive::Reader;
+use crate::container::{
+    ContainerVersion, Header, ParityFrame, PARITY_FRAME_FIXED,
+};
+
+/// Minimal xorshift64 PRNG: deterministic, seedable, dependency-free.
+/// (The crate's `data::prng` xoshiro is for value generation; this one
+/// is deliberately separate so fault plans never shift when the data
+/// generator evolves.)
+#[derive(Debug, Clone)]
+pub struct XorShift64(u64);
+
+impl XorShift64 {
+    pub fn new(seed: u64) -> XorShift64 {
+        // xorshift has a zero fixed point; nudge it off.
+        XorShift64(if seed == 0 { 0x9E3779B97F4A7C15 } else { seed })
+    }
+
+    pub fn next_u64(&mut self) -> u64 {
+        let mut x = self.0;
+        x ^= x << 13;
+        x ^= x >> 7;
+        x ^= x << 17;
+        self.0 = x;
+        x
+    }
+
+    /// Uniform-ish draw in `0..n` (n must be nonzero; modulo bias is
+    /// irrelevant for fault placement).
+    pub fn below(&mut self, n: usize) -> usize {
+        (self.next_u64() % n as u64) as usize
+    }
+}
+
+/// One injectable fault, applied to a copy of the container image.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub enum Fault {
+    /// Flip one bit.
+    BitFlip { offset: usize, bit: u8 },
+    /// Overwrite `len` bytes with one value.
+    Smear { offset: usize, len: usize, value: u8 },
+    /// Keep only the first `keep` bytes (a crash mid-write).
+    Truncate { keep: usize },
+    /// Keep `keep` bytes, then append garbage (a torn write whose tail
+    /// sector landed but holds junk).
+    TornTail { keep: usize, garbage: Vec<u8> },
+}
+
+impl Fault {
+    /// Apply this fault to a copy of `bytes`.
+    pub fn apply(&self, bytes: &[u8]) -> Vec<u8> {
+        let mut out = bytes.to_vec();
+        match self {
+            Fault::BitFlip { offset, bit } => {
+                if *offset < out.len() {
+                    out[*offset] ^= 1u8 << (bit & 7);
+                }
+            }
+            Fault::Smear { offset, len, value } => {
+                for b in out.iter_mut().skip(*offset).take(*len) {
+                    *b = *value;
+                }
+            }
+            Fault::Truncate { keep } => out.truncate(*keep),
+            Fault::TornTail { keep, garbage } => {
+                out.truncate(*keep);
+                out.extend_from_slice(garbage);
+            }
+        }
+        out
+    }
+}
+
+/// A named byte range of the container image (end-exclusive).
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct Region {
+    pub name: String,
+    pub start: usize,
+    pub end: usize,
+}
+
+/// Every structural region of one v4 container, in file order.
+#[derive(Debug, Clone)]
+pub struct RegionMap {
+    pub regions: Vec<Region>,
+    pub file_len: usize,
+}
+
+/// Label every structural region of a serialized **v4** container. The
+/// regions come from the archive's own index (opened through the real
+/// reader), so the map stays correct by construction as the layout
+/// evolves.
+pub fn map_v4(bytes: &[u8]) -> Result<RegionMap, String> {
+    let (_, header_len) = Header::parse_prefix(bytes)?;
+    let r = Reader::from_bytes(bytes.to_vec()).map_err(|e| e.to_string())?;
+    if r.header().version != ContainerVersion::V4 {
+        return Err(format!(
+            "fault map wants a v4 container, got {:?}",
+            r.header().version
+        ));
+    }
+    let mut regions = vec![Region {
+        name: "header".into(),
+        start: 0,
+        end: header_len,
+    }];
+    for (i, e) in r.entries().iter().enumerate() {
+        let o = e.offset as usize;
+        regions.push(Region {
+            name: format!("frame_head.{i}"),
+            start: o,
+            end: o + 16,
+        });
+        regions.push(Region {
+            name: format!("plan.{i}"),
+            start: o + 16,
+            end: o + 17,
+        });
+        regions.push(Region {
+            name: format!("body.{i}"),
+            start: o + 17,
+            end: o + e.frame_len as usize,
+        });
+    }
+    for (g, pe) in r.parity_entries().iter().enumerate() {
+        let o = pe.offset as usize;
+        let (pf, _) = ParityFrame::parse(&bytes[o..o + pe.frame_len as usize])?;
+        let head_len = PARITY_FRAME_FIXED + 8 * pf.members.len() + 8;
+        regions.push(Region {
+            name: format!("parity_head.{g}"),
+            start: o,
+            end: o + head_len,
+        });
+        regions.push(Region {
+            name: format!("parity_data.{g}"),
+            start: o + head_len,
+            end: o + pe.frame_len as usize,
+        });
+    }
+    let len = bytes.len();
+    let trailer_start = len - 8 - 4 - crate::archive::index::TRAILER_LEN_V4;
+    let footer_start = r
+        .parity_entries()
+        .last()
+        .map(|pe| (pe.offset + pe.frame_len as u64) as usize)
+        .unwrap_or(header_len);
+    regions.push(Region {
+        name: "footer".into(),
+        start: footer_start,
+        end: trailer_start,
+    });
+    regions.push(Region {
+        name: "trailer".into(),
+        start: trailer_start,
+        end: trailer_start + crate::archive::index::TRAILER_LEN_V4,
+    });
+    regions.push(Region {
+        name: "file_crc".into(),
+        start: len - 12,
+        end: len - 8,
+    });
+    regions.push(Region {
+        name: "marker".into(),
+        start: len - 8,
+        end: len,
+    });
+    Ok(RegionMap {
+        regions,
+        file_len: len,
+    })
+}
+
+/// Derive the full deterministic fault plan for one region map: per
+/// region a bit flip, a smear, and truncations at its start and
+/// inside it; plus a set of tail faults (short truncations and a torn
+/// tail with garbage). Same map + same seed → byte-identical plan.
+pub fn sweep(map: &RegionMap, seed: u64) -> Vec<(String, Fault)> {
+    let mut rng = XorShift64::new(seed);
+    let mut out = Vec::new();
+    for r in &map.regions {
+        let len = r.end - r.start;
+        if len == 0 {
+            continue;
+        }
+        let off = r.start + rng.below(len);
+        out.push((
+            format!("{}/bitflip", r.name),
+            Fault::BitFlip {
+                offset: off,
+                bit: (rng.next_u64() % 8) as u8,
+            },
+        ));
+        let s_off = r.start + rng.below(len);
+        let s_len = (1 + rng.below(8)).min(r.end - s_off);
+        out.push((
+            format!("{}/smear", r.name),
+            Fault::Smear {
+                offset: s_off,
+                len: s_len,
+                value: (rng.next_u64() & 0xFF) as u8,
+            },
+        ));
+        out.push((
+            format!("{}/trunc-at-start", r.name),
+            Fault::Truncate { keep: r.start },
+        ));
+        out.push((
+            format!("{}/trunc-inside", r.name),
+            Fault::Truncate {
+                keep: r.start + rng.below(len),
+            },
+        ));
+    }
+    for drop in [1usize, 4, 8, 12, 24, 36] {
+        if drop <= map.file_len {
+            out.push((
+                format!("tail/drop-{drop}"),
+                Fault::Truncate {
+                    keep: map.file_len - drop,
+                },
+            ));
+        }
+    }
+    let mut garbage = vec![0u8; 16];
+    for b in garbage.iter_mut() {
+        *b = (rng.next_u64() & 0xFF) as u8;
+    }
+    out.push((
+        "tail/torn-then-garbage".into(),
+        Fault::TornTail {
+            keep: map.file_len.saturating_sub(10),
+            garbage,
+        },
+    ));
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn faults_apply_as_documented() {
+        let base = [0u8; 8];
+        assert_eq!(
+            Fault::BitFlip { offset: 3, bit: 1 }.apply(&base),
+            [0, 0, 0, 2, 0, 0, 0, 0]
+        );
+        assert_eq!(
+            Fault::Smear { offset: 6, len: 8, value: 0xAA }.apply(&base),
+            [0, 0, 0, 0, 0, 0, 0xAA, 0xAA]
+        );
+        assert_eq!(Fault::Truncate { keep: 2 }.apply(&base), [0, 0]);
+        assert_eq!(
+            Fault::TornTail { keep: 1, garbage: vec![9, 9] }.apply(&base),
+            [0, 9, 9]
+        );
+        // Out-of-range bit flip is a no-op, not a panic.
+        assert_eq!(Fault::BitFlip { offset: 99, bit: 0 }.apply(&base), base);
+    }
+
+    #[test]
+    fn sweep_is_deterministic_and_covers_every_region() {
+        let map = RegionMap {
+            regions: vec![
+                Region { name: "a".into(), start: 0, end: 10 },
+                Region { name: "b".into(), start: 10, end: 64 },
+            ],
+            file_len: 64,
+        };
+        let p1 = sweep(&map, 7);
+        let p2 = sweep(&map, 7);
+        assert_eq!(p1, p2);
+        let p3 = sweep(&map, 8);
+        assert_ne!(p1, p3);
+        for prefix in ["a/", "b/", "tail/"] {
+            assert!(p1.iter().any(|(n, _)| n.starts_with(prefix)), "{prefix}");
+        }
+        // Faults stay inside their regions.
+        for (name, f) in &p1 {
+            if let Fault::BitFlip { offset, .. } = f {
+                let region = map
+                    .regions
+                    .iter()
+                    .find(|r| name.starts_with(&format!("{}/", r.name)))
+                    .unwrap();
+                assert!(*offset >= region.start && *offset < region.end, "{name}");
+            }
+        }
+    }
+
+    #[test]
+    fn map_v4_labels_partition_the_file() {
+        use crate::coordinator::{compress, EngineConfig};
+        use crate::data::Suite;
+        use crate::types::ErrorBound;
+        let x = Suite::Cesm.generate(5, 5_000);
+        let mut cfg = EngineConfig::native(ErrorBound::Abs(1e-3));
+        cfg.chunk_size = 1024;
+        cfg.parity_group = 2;
+        let (c, _) = compress(&cfg, &x).unwrap();
+        let bytes = c.to_bytes();
+        let map = map_v4(&bytes).unwrap();
+        // Regions must tile the file exactly: sorted, contiguous, and
+        // covering byte 0 through the end.
+        let mut rs = map.regions.clone();
+        rs.sort_by_key(|r| r.start);
+        assert_eq!(rs.first().unwrap().start, 0);
+        assert_eq!(rs.last().unwrap().end, bytes.len());
+        for w in rs.windows(2) {
+            assert_eq!(w[0].end, w[1].start, "{} -> {}", w[0].name, w[1].name);
+        }
+        for want in ["header", "frame_head.0", "plan.4", "body.2", "parity_head.1",
+                     "parity_data.2", "footer", "trailer", "file_crc", "marker"] {
+            assert!(map.regions.iter().any(|r| r.name == want), "{want}");
+        }
+    }
+}

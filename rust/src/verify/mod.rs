@@ -4,6 +4,7 @@
 //! audits.
 
 pub mod classify;
+pub mod faults;
 pub mod metrics;
 pub mod parity;
 pub mod sweep;

@@ -51,6 +51,7 @@ fn truncated_containers_error_cleanly() {
         ContainerVersion::V1,
         ContainerVersion::V2,
         ContainerVersion::V3,
+        ContainerVersion::V4,
     ] {
         let (cfg, bytes, _) = sample_container_versioned(10_000, version);
         // Dense near the front (header framing), strided through the
@@ -89,6 +90,7 @@ fn short_outlier_bitmap_errors_cleanly() {
         ContainerVersion::V1,
         ContainerVersion::V2,
         ContainerVersion::V3,
+        ContainerVersion::V4,
     ] {
         let (cfg, bytes, _) = sample_container_versioned(10_000, version);
         let mut container = Container::from_bytes(&bytes).unwrap();
@@ -480,4 +482,40 @@ fn hostile_huffman_headers_error_cleanly() {
     // Cache still decodes the pristine payload.
     huffman::decode_into_cached(&good, data.len(), &mut cache, &mut out).unwrap();
     assert_eq!(out, data);
+}
+
+/// v4 parity repairs exactly one corrupt frame per group; two corrupt
+/// frames in the same group are beyond that capability and must be
+/// typed with the group index — while every *other* group keeps
+/// decoding bit-exactly (damage is contained, not contagious).
+#[test]
+fn v4_two_corrupt_frames_in_one_group_are_unrecoverable_but_contained() {
+    use lc::archive::{scrub, ArchiveError, Reader};
+    let mut rng = Rng::new(0xF00D);
+    let x: Vec<f32> = (0..12_000).map(|_| (rng.normal() * 10.0) as f32).collect();
+    let mut cfg = EngineConfig::native(ErrorBound::Abs(1e-3));
+    cfg.chunk_size = 1024;
+    cfg.container_version = ContainerVersion::V4;
+    cfg.parity_group = 3;
+    let (container, _) = compress(&cfg, &x).unwrap();
+    let (golden, _) = decompress(&cfg, &container).unwrap();
+    let bytes = container.to_bytes();
+    let entries = Reader::from_bytes(bytes.clone()).unwrap().entries().to_vec();
+    let mut bad = bytes.clone();
+    for i in [3usize, 5] {
+        // Chunks 3 and 5 both sit in parity group 1 (k = 3).
+        let off = entries[i].offset as usize + 20;
+        bad[off] ^= 0x80;
+    }
+    assert_eq!(
+        scrub(&bad).unwrap_err(),
+        ArchiveError::Unrecoverable { group: 1 }
+    );
+    let r = Reader::from_bytes(bad).unwrap();
+    assert!(r.decode_range(3 * 1024..4 * 1024).is_err(), "dead group must not decode");
+    let bits = |v: &[f32]| v.iter().map(|y| y.to_bits()).collect::<Vec<_>>();
+    let a = r.decode_range(0..3 * 1024).unwrap();
+    assert_eq!(bits(&a), bits(&golden[..3 * 1024]));
+    let b = r.decode_range(6 * 1024..12_000).unwrap();
+    assert_eq!(bits(&b), bits(&golden[6 * 1024..]));
 }
