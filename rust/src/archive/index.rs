@@ -32,6 +32,7 @@
 //! allocation.
 
 use crate::container::{crc::crc32, Header, ParityFrame};
+use crate::wire;
 
 use super::stats::ChunkStats;
 
@@ -79,16 +80,19 @@ impl IndexEntry {
         out.extend_from_slice(&self.stats.max.to_le_bytes());
     }
 
-    fn from_bytes(b: &[u8; ENTRY_LEN]) -> IndexEntry {
+    /// Deserialize one entry. `b` must hold exactly [`ENTRY_LEN`]
+    /// bytes (the `chunks_exact` call sites guarantee it; the wire
+    /// helpers keep a short slice from panicking regardless).
+    fn from_bytes(b: &[u8]) -> IndexEntry {
         IndexEntry {
-            offset: u64::from_le_bytes(b[0..8].try_into().unwrap()),
-            frame_len: u32::from_le_bytes(b[8..12].try_into().unwrap()),
-            n_values: u32::from_le_bytes(b[12..16].try_into().unwrap()),
-            plan: b[16],
-            crc32: u32::from_le_bytes(b[17..21].try_into().unwrap()),
+            offset: wire::le_u64_at(b, 0),
+            frame_len: wire::le_u32_at(b, 8),
+            n_values: wire::le_u32_at(b, 12),
+            plan: b.get(16).copied().unwrap_or(0),
+            crc32: wire::le_u32_at(b, 17),
             stats: ChunkStats {
-                min: f32::from_le_bytes(b[21..25].try_into().unwrap()),
-                max: f32::from_le_bytes(b[25..29].try_into().unwrap()),
+                min: wire::le_f32_at(b, 21),
+                max: wire::le_f32_at(b, 25),
             },
         }
     }
@@ -113,11 +117,13 @@ impl ParityEntry {
         out.extend_from_slice(&self.crc32.to_le_bytes());
     }
 
-    fn from_bytes(b: &[u8; PARITY_ENTRY_LEN]) -> ParityEntry {
+    /// Deserialize one parity entry from a [`PARITY_ENTRY_LEN`]-byte
+    /// slice (see [`IndexEntry::from_bytes`] on the length contract).
+    fn from_bytes(b: &[u8]) -> ParityEntry {
         ParityEntry {
-            offset: u64::from_le_bytes(b[0..8].try_into().unwrap()),
-            frame_len: u32::from_le_bytes(b[8..12].try_into().unwrap()),
-            crc32: u32::from_le_bytes(b[12..16].try_into().unwrap()),
+            offset: wire::le_u64_at(b, 0),
+            frame_len: wire::le_u32_at(b, 8),
+            crc32: wire::le_u32_at(b, 12),
         }
     }
 }
@@ -161,7 +167,7 @@ pub fn write_footer(entries: &[IndexEntry], out: &mut Vec<u8>) {
     for e in entries {
         e.write_to(out);
     }
-    let footer_crc = crc32(&out[entries_start..]);
+    let footer_crc = crc32(&out[entries_start..]); // lint: allow(range-index) -- entries_start captured from out.len() above, then only appended to
     out.extend_from_slice(&footer_crc.to_le_bytes());
     out.extend_from_slice(&footer_offset.to_le_bytes());
     out.extend_from_slice(&(entries.len() as u32).to_le_bytes());
@@ -186,7 +192,7 @@ pub fn write_footer_v4(
     for p in parity {
         p.write_to(out);
     }
-    let footer_crc = crc32(&out[start..]);
+    let footer_crc = crc32(&out[start..]); // lint: allow(range-index) -- start captured from out.len() above, then only appended to
     out.extend_from_slice(&footer_crc.to_le_bytes());
     out.extend_from_slice(&footer_offset.to_le_bytes());
     out.extend_from_slice(&(entries.len() as u32).to_le_bytes());
@@ -203,14 +209,14 @@ pub fn parse_trailer_v4(b: &[u8]) -> Result<TrailerV4, String> {
             b.len()
         ));
     }
-    if &b[20..24] != TRAILER_MAGIC_V4 {
+    if b.get(20..24) != Some(TRAILER_MAGIC_V4.as_slice()) {
         return Err("bad index trailer magic (not a v4 index)".into());
     }
     Ok(TrailerV4 {
-        footer_offset: u64::from_le_bytes(b[0..8].try_into().unwrap()),
-        n_chunks: u32::from_le_bytes(b[8..12].try_into().unwrap()),
-        parity_group: u32::from_le_bytes(b[12..16].try_into().unwrap()),
-        n_groups: u32::from_le_bytes(b[16..20].try_into().unwrap()),
+        footer_offset: wire::le_u64_at(b, 0),
+        n_chunks: wire::le_u32_at(b, 8),
+        parity_group: wire::le_u32_at(b, 12),
+        n_groups: wire::le_u32_at(b, 16),
     })
 }
 
@@ -231,19 +237,23 @@ pub fn parse_entries_v4(
             block.len()
         ));
     }
-    let body = &block[..block.len() - 4];
-    let want = u32::from_le_bytes(block[block.len() - 4..].try_into().unwrap());
+    let (body, crc_bytes) = block
+        .split_last_chunk::<4>()
+        .ok_or("index footer block too short")?;
+    let want = u32::from_le_bytes(*crc_bytes);
     if crc32(body) != want {
         return Err("index footer CRC mismatch".into());
     }
     let split = n_chunks as usize * ENTRY_LEN;
+    let chunk_body = body.get(..split).ok_or("index footer block too short")?;
+    let parity_body = body.get(split..).ok_or("index footer block too short")?;
     let mut entries = Vec::with_capacity(n_chunks as usize);
-    for e in body[..split].chunks_exact(ENTRY_LEN) {
-        entries.push(IndexEntry::from_bytes(e.try_into().unwrap()));
+    for e in chunk_body.chunks_exact(ENTRY_LEN) {
+        entries.push(IndexEntry::from_bytes(e));
     }
     let mut parity = Vec::with_capacity(n_groups as usize);
-    for p in body[split..].chunks_exact(PARITY_ENTRY_LEN) {
-        parity.push(ParityEntry::from_bytes(p.try_into().unwrap()));
+    for p in parity_body.chunks_exact(PARITY_ENTRY_LEN) {
+        parity.push(ParityEntry::from_bytes(p));
     }
     Ok((entries, parity))
 }
@@ -253,12 +263,12 @@ pub fn parse_trailer(b: &[u8]) -> Result<Trailer, String> {
     if b.len() != TRAILER_LEN {
         return Err(format!("index trailer wants {TRAILER_LEN} bytes, got {}", b.len()));
     }
-    if &b[12..16] != TRAILER_MAGIC {
+    if b.get(12..16) != Some(TRAILER_MAGIC.as_slice()) {
         return Err("bad index trailer magic (not a v3 index)".into());
     }
     Ok(Trailer {
-        footer_offset: u64::from_le_bytes(b[0..8].try_into().unwrap()),
-        n_chunks: u32::from_le_bytes(b[8..12].try_into().unwrap()),
+        footer_offset: wire::le_u64_at(b, 0),
+        n_chunks: wire::le_u32_at(b, 8),
     })
 }
 
@@ -270,14 +280,16 @@ pub fn parse_entries(block: &[u8]) -> Result<Vec<IndexEntry>, String> {
     if block.len() < 4 || (block.len() - 4) % ENTRY_LEN != 0 {
         return Err(format!("index footer block has bad length {}", block.len()));
     }
-    let body = &block[..block.len() - 4];
-    let want = u32::from_le_bytes(block[block.len() - 4..].try_into().unwrap());
+    let (body, crc_bytes) = block
+        .split_last_chunk::<4>()
+        .ok_or("index footer block too short")?;
+    let want = u32::from_le_bytes(*crc_bytes);
     if crc32(body) != want {
         return Err("index footer CRC mismatch".into());
     }
     let mut entries = Vec::with_capacity(body.len() / ENTRY_LEN);
     for e in body.chunks_exact(ENTRY_LEN) {
-        entries.push(IndexEntry::from_bytes(e.try_into().unwrap()));
+        entries.push(IndexEntry::from_bytes(e));
     }
     Ok(entries)
 }

@@ -60,12 +60,20 @@ impl Source {
                     .checked_add(buf.len() as u64)
                     .filter(|&e| e <= b.len() as u64)
                     .ok_or(ArchiveError::Truncated)?;
-                buf.copy_from_slice(&b[offset as usize..end as usize]);
+                let src = b
+                    .get(offset as usize..end as usize)
+                    .ok_or(ArchiveError::Truncated)?;
+                buf.copy_from_slice(src);
                 Ok(())
             }
             Source::File { file, .. } => {
                 use std::io::{Read, Seek, SeekFrom};
-                let mut f = file.lock().unwrap();
+                // A poisoned lock means an earlier reader panicked
+                // mid-read; surface it as a typed error instead of
+                // propagating the panic into this decode path.
+                let mut f = file
+                    .lock()
+                    .map_err(|_| ArchiveError::Io("file lock poisoned by an earlier panic".into()))?;
                 f.seek(SeekFrom::Start(offset))
                     .map_err(|e| ArchiveError::Io(e.to_string()))?;
                 // Positional reads loop explicitly: a short read means
@@ -75,6 +83,7 @@ impl Source {
                 // only a genuine EOF is `Truncated`).
                 let mut filled = 0usize;
                 while filled < buf.len() {
+                    // lint: allow(range-index) -- local output buffer; filled < buf.len() is the loop condition
                     match f.read(&mut buf[filled..]) {
                         Ok(0) => return Err(ArchiveError::Truncated),
                         Ok(n) => filled += n,
@@ -97,7 +106,10 @@ impl Source {
                     .checked_add(len as u64)
                     .filter(|&e| e <= b.len() as u64)
                     .ok_or(ArchiveError::Truncated)?;
-                Ok(std::borrow::Cow::Borrowed(&b[offset as usize..end as usize]))
+                Ok(std::borrow::Cow::Borrowed(
+                    b.get(offset as usize..end as usize)
+                        .ok_or(ArchiveError::Truncated)?,
+                ))
             }
             Source::File { .. } => {
                 let mut buf = vec![0u8; len];
@@ -377,7 +389,11 @@ impl Reader {
         let cs = self.header.chunk_size as u64;
         let first = (start / cs) as usize;
         let last = ((end - 1) / cs) as usize;
-        let entries = &self.index.entries[first..=last];
+        let entries = self
+            .index
+            .entries
+            .get(first..=last)
+            .ok_or_else(|| ArchiveError::BadIndex("range maps past the index entries".into()))?;
 
         // One contiguous span covering every overlapping frame
         // (offsets were validated contiguous at open): borrowed
@@ -437,7 +453,11 @@ impl Reader {
             let rec = &records[k];
             let n_i = rec.n_values as usize;
             let i = (first + k) as u64;
-            let mut slot = slots[k].lock().unwrap();
+            // Slots are disjoint per chunk; a poisoned slot lock means
+            // a sibling worker panicked and becomes a typed error here.
+            let mut slot = slots[k]
+                .lock()
+                .map_err(|_| ArchiveError::Decode("output slot lock poisoned".into()))?;
             let result = if slot.len() == n_i {
                 decode_chunk_record_into(cfg, &self.qc, &self.pipeline, rec, scratch, &mut slot)
             } else {
@@ -446,6 +466,7 @@ impl Reader {
                 decode_chunk_record_into(cfg, &self.qc, &self.pipeline, rec, scratch, staging)
                     .map(|()| {
                         let from = ((i * cs).max(start) - i * cs) as usize;
+                        // lint: allow(range-index) -- staging was just resized to the full chunk; the trim window is inside it
                         slot.copy_from_slice(&staging[from..from + slot.len()]);
                     })
             };
@@ -470,7 +491,9 @@ impl Reader {
             let mut staging: Vec<f32> = Vec::new();
             for k in 0..records.len() {
                 if let Err(e) = decode_one(k, &wcfg, &mut scratch, &mut staging) {
-                    *err.lock().unwrap() = Some(e);
+                    if let Ok(mut g) = err.lock() {
+                        *g = Some(e);
+                    }
                     break;
                 }
             }
@@ -492,7 +515,9 @@ impl Reader {
                                 break;
                             }
                             if let Err(e) = decode_one(k, &wcfg, &mut scratch, &mut staging) {
-                                *err.lock().unwrap() = Some(e);
+                                if let Ok(mut g) = err.lock() {
+                                    *g = Some(e);
+                                }
                                 break;
                             }
                         }
@@ -501,7 +526,12 @@ impl Reader {
             });
         }
         drop(slots);
-        if let Some(e) = err.into_inner().unwrap() {
+        // A poisoned mutex still carries the stored error; recover it
+        // rather than panicking inside the fault surface.
+        let stored = err
+            .into_inner()
+            .unwrap_or_else(std::sync::PoisonError::into_inner);
+        if let Some(e) = stored {
             return Err(e);
         }
         Ok(out)
@@ -521,7 +551,11 @@ impl Reader {
         }
         let g = chunk_idx / k;
         let base = g * k;
-        let members = &self.index.entries[base..(base + k).min(self.index.entries.len())];
+        let members = self
+            .index
+            .entries
+            .get(base..(base + k).min(self.index.entries.len()))
+            .ok_or_else(|| ArchiveError::BadIndex(format!("group {g} maps past the index")))?;
         let pe = self
             .parity
             .get(g)
@@ -537,7 +571,9 @@ impl Reader {
         // CRCs. A corrupt parity frame plus a corrupt member is two
         // erasures — beyond the code.
         let p_lo = (pe.offset - b0) as usize;
-        let p_img = &buf[p_lo..p_lo + pe.frame_len as usize];
+        let p_img = buf
+            .get(p_lo..p_lo + pe.frame_len as usize)
+            .ok_or(ArchiveError::Truncated)?;
         if crc32(p_img) != pe.crc32 {
             return Err(ArchiveError::Unrecoverable { group: g });
         }
@@ -559,7 +595,9 @@ impl Reader {
                 return Err(ArchiveError::Unrecoverable { group: g });
             }
             let lo = (e.offset - b0) as usize;
-            let frame = &buf[lo..lo + e.frame_len as usize];
+            let frame = buf
+                .get(lo..lo + e.frame_len as usize)
+                .ok_or(ArchiveError::Truncated)?;
             if chunk_frame_crc_ok(frame, e.crc32) {
                 present.push(Some(frame));
             } else {
@@ -692,8 +730,10 @@ fn parse_frame_against_entry(
             detail: format!("frame of {} bytes has no header", frame.len()),
         });
     }
-    let fixed: [u8; CHUNK_FRAME_HEADER_LEN] = frame[..CHUNK_FRAME_HEADER_LEN].try_into().unwrap();
-    let (n, ob, pb, want_crc) = parse_chunk_frame_header(&fixed);
+    let fixed = frame
+        .first_chunk::<CHUNK_FRAME_HEADER_LEN>()
+        .ok_or(ArchiveError::Truncated)?;
+    let (n, ob, pb, want_crc) = parse_chunk_frame_header(fixed);
     let plan = frame[head_len - 1];
     let mismatch = |detail: String| ArchiveError::ChunkMismatch { index, detail };
     if n != e.n_values {
@@ -711,8 +751,15 @@ fn parse_frame_against_entry(
             e.frame_len
         )));
     }
-    let outlier_bytes = frame[head_len..head_len + ob as usize].to_vec();
-    let payload = frame[head_len + ob as usize..].to_vec();
+    let outlier_end = head_len + ob as usize;
+    let outlier_bytes = frame
+        .get(head_len..outlier_end)
+        .ok_or(ArchiveError::Truncated)?
+        .to_vec();
+    let payload = frame
+        .get(outlier_end..)
+        .ok_or(ArchiveError::Truncated)?
+        .to_vec();
     let rec = ChunkRecord {
         n_values: n,
         plan,

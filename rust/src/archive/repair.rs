@@ -38,6 +38,7 @@ use crate::container::{
 };
 use crate::coordinator::engine::{decode_chunk_record_into, quantizer_from_header};
 use crate::coordinator::EngineConfig;
+use crate::wire;
 use crate::quantizer::QuantizerConfig;
 use crate::scratch::Scratch;
 
@@ -164,6 +165,7 @@ pub fn scrub(data: &[u8]) -> Result<ScrubReport, ArchiveError> {
     let mut out = data.to_vec();
     let mut repaired_chunks: Vec<usize> = Vec::new();
     let mut rebuilt_parity: Vec<usize> = Vec::new();
+    // lint: allow(range-index) -- entry/parity offsets and lengths were layout-validated by the Reader open above
     for (g, pe) in parity.iter().enumerate() {
         let base = g * k;
         let members = &entries[base..(base + k).min(entries.len())];
@@ -211,7 +213,9 @@ pub fn scrub(data: &[u8]) -> Result<ScrubReport, ArchiveError> {
             (1, true) => {
                 let (pf, _) = ParityFrame::parse(p_img)
                     .map_err(|_| ArchiveError::Unrecoverable { group: g })?;
-                let mi = bad.pop().unwrap();
+                let Some(mi) = bad.pop() else {
+                    return Err(ArchiveError::Unrecoverable { group: g });
+                };
                 let present: Vec<Option<&[u8]>> = members
                     .iter()
                     .enumerate()
@@ -237,8 +241,8 @@ pub fn scrub(data: &[u8]) -> Result<ScrubReport, ArchiveError> {
     // 8-byte finalization marker follows it and is excluded). This
     // also heals a corrupt CRC word over otherwise-clean contents.
     let crc_pos = out.len() - FINALIZE_MARKER.len() - 4;
-    let crc = crc32(&out[..crc_pos]);
-    out[crc_pos..crc_pos + 4].copy_from_slice(&crc.to_le_bytes());
+    let crc = crc32(&out[..crc_pos]); // lint: allow(range-index) -- a validated v4 image always holds marker + CRC
+    out[crc_pos..crc_pos + 4].copy_from_slice(&crc.to_le_bytes()); // lint: allow(range-index) -- same bound as the line above
     // Final gate: the patched image must fully validate (this catches
     // damage parity cannot see, e.g. a corrupt header).
     Container::from_bytes(&out).map_err(|e| ArchiveError::Container(String::from(e)))?;
@@ -287,7 +291,7 @@ fn parse_scan_frame(
     if bytes.len() < CHUNK_FRAME_HEADER_LEN_V2 {
         return None;
     }
-    let le32 = |off: usize| u32::from_le_bytes(bytes[off..off + 4].try_into().unwrap());
+    let le32 = |off: usize| wire::le_u32_at(bytes, off);
     let n = le32(0);
     let ob = le32(4) as usize;
     let pb = le32(8) as usize;
@@ -308,7 +312,7 @@ fn parse_scan_frame(
     if bytes.len() < total {
         return None;
     }
-    let frame = &bytes[..total];
+    let frame = bytes.get(..total)?;
     if !chunk_frame_crc_ok(frame, crc) {
         return None;
     }
@@ -316,9 +320,10 @@ fn parse_scan_frame(
         ChunkRecord {
             n_values: n,
             plan,
-            outlier_bytes: frame[CHUNK_FRAME_HEADER_LEN_V2..CHUNK_FRAME_HEADER_LEN_V2 + ob]
+            outlier_bytes: frame
+                .get(CHUNK_FRAME_HEADER_LEN_V2..CHUNK_FRAME_HEADER_LEN_V2 + ob)?
                 .to_vec(),
-            payload: frame[CHUNK_FRAME_HEADER_LEN_V2 + ob..].to_vec(),
+            payload: frame.get(CHUNK_FRAME_HEADER_LEN_V2 + ob..)?.to_vec(),
             stats: ChunkStats::EMPTY,
         },
         total,
@@ -364,8 +369,8 @@ pub fn salvage_scan(data: &[u8]) -> Result<Salvage, ArchiveError> {
     // arithmetic — a hostile group index must not overflow.
     let elem_ok = |idx: u64| idx.checked_mul(cs).and_then(|s| s.checked_add(cs)).is_some();
     while pos + 4 <= data.len() {
-        if &data[pos..pos + 4] == PARITY_MAGIC {
-            if let Ok((pf, used)) = ParityFrame::parse(&data[pos..]) {
+        if data.get(pos..pos + 4) == Some(PARITY_MAGIC.as_slice()) {
+            if let Ok((pf, used)) = ParityFrame::parse(data.get(pos..).unwrap_or_default()) {
                 let base = pf.group as u64 * pf.group_size as u64;
                 // Locate the members from the frame's own table:
                 // absolute offsets from group_start + cumulative
@@ -389,7 +394,9 @@ pub fn salvage_scan(data: &[u8]) -> Result<Salvage, ArchiveError> {
                     let mut present: Vec<Option<&[u8]>> = Vec::with_capacity(spans.len());
                     let mut bad: Vec<usize> = Vec::new();
                     for (mi, &(o, l)) in spans.iter().enumerate() {
-                        let f = &data[o as usize..o as usize + l];
+                        // Span ends were proven <= pos above; a miss
+                        // yields an empty slice that fails the CRC gate.
+                        let f = data.get(o as usize..o as usize + l).unwrap_or_default();
                         if chunk_frame_crc_ok(f, pf.members[mi].1) {
                             present.push(Some(f));
                         } else {
@@ -447,7 +454,12 @@ pub fn salvage_scan(data: &[u8]) -> Result<Salvage, ArchiveError> {
                 continue;
             }
         }
-        if let Some((rec, used)) = parse_scan_frame(&data[pos..], &header, full_plan, max_body) {
+        if let Some((rec, used)) = parse_scan_frame(
+            data.get(pos..).unwrap_or_default(),
+            &header,
+            full_plan,
+            max_body,
+        ) {
             if anchored && elem_ok(next_idx) {
                 placed.entry(next_idx).or_insert(rec);
                 placed_offsets.insert(pos as u64);

@@ -101,12 +101,15 @@ mod simd {
         u: __m256i,
         m: __m256i,
     ) -> __m256i {
-        let lo = _mm256_and_si256(_mm256_xor_si256(v, _mm256_srli_epi32::<J>(u)), m);
-        let hi = _mm256_slli_epi32::<J>(_mm256_and_si256(
-            _mm256_xor_si256(u, _mm256_srli_epi32::<J>(v)),
-            m,
-        ));
-        _mm256_xor_si256(v, _mm256_blend_epi32::<BLEND>(lo, hi))
+        // SAFETY: AVX2 is enabled for this fn; register-only intrinsics.
+        unsafe {
+            let lo = _mm256_and_si256(_mm256_xor_si256(v, _mm256_srli_epi32::<J>(u)), m);
+            let hi = _mm256_slli_epi32::<J>(_mm256_and_si256(
+                _mm256_xor_si256(u, _mm256_srli_epi32::<J>(v)),
+                m,
+            ));
+            _mm256_xor_si256(v, _mm256_blend_epi32::<BLEND>(lo, hi))
+        }
     }
 
     /// Cross-vector butterfly stage (`J` = 16 or 8 pairs whole vectors).
@@ -116,9 +119,12 @@ mod simd {
     #[target_feature(enable = "avx2")]
     #[inline]
     unsafe fn pair_stage<const J: i32>(a: &mut __m256i, b: &mut __m256i, m: __m256i) {
-        let t = _mm256_and_si256(_mm256_xor_si256(*a, _mm256_srli_epi32::<J>(*b)), m);
-        *a = _mm256_xor_si256(*a, t);
-        *b = _mm256_xor_si256(*b, _mm256_slli_epi32::<J>(t));
+        // SAFETY: AVX2 is enabled for this fn; register-only intrinsics.
+        unsafe {
+            let t = _mm256_and_si256(_mm256_xor_si256(*a, _mm256_srli_epi32::<J>(*b)), m);
+            *a = _mm256_xor_si256(*a, t);
+            *b = _mm256_xor_si256(*b, _mm256_slli_epi32::<J>(t));
+        }
     }
 
     /// AVX2 32x32 bit transpose, same function as the scalar butterfly.
@@ -127,47 +133,52 @@ mod simd {
     /// Caller must have verified AVX2 support at runtime.
     #[target_feature(enable = "avx2")]
     pub(super) unsafe fn transpose32_avx2(a: &mut [u32; 32]) {
-        let p = a.as_mut_ptr() as *mut __m256i;
-        let mut v0 = _mm256_loadu_si256(p);
-        let mut v1 = _mm256_loadu_si256(p.add(1));
-        let mut v2 = _mm256_loadu_si256(p.add(2));
-        let mut v3 = _mm256_loadu_si256(p.add(3));
+        // SAFETY: AVX2 is enabled for this fn; `a` is exactly 128 bytes,
+        // so the four unaligned 8-lane loads/stores at p..p+3 stay
+        // inside the array. Everything between them is register-only.
+        unsafe {
+            let p = a.as_mut_ptr() as *mut __m256i;
+            let mut v0 = _mm256_loadu_si256(p);
+            let mut v1 = _mm256_loadu_si256(p.add(1));
+            let mut v2 = _mm256_loadu_si256(p.add(2));
+            let mut v3 = _mm256_loadu_si256(p.add(3));
 
-        // j = 16: words (k, k+16) -> vector pairs (v0,v2), (v1,v3).
-        let m = _mm256_set1_epi32(0x0000_FFFF);
-        pair_stage::<16>(&mut v0, &mut v2, m);
-        pair_stage::<16>(&mut v1, &mut v3, m);
+            // j = 16: words (k, k+16) -> vector pairs (v0,v2), (v1,v3).
+            let m = _mm256_set1_epi32(0x0000_FFFF);
+            pair_stage::<16>(&mut v0, &mut v2, m);
+            pair_stage::<16>(&mut v1, &mut v3, m);
 
-        // j = 8: words (k, k+8) -> vector pairs (v0,v1), (v2,v3).
-        let m = _mm256_set1_epi32(0x00FF_00FF);
-        pair_stage::<8>(&mut v0, &mut v1, m);
-        pair_stage::<8>(&mut v2, &mut v3, m);
+            // j = 8: words (k, k+8) -> vector pairs (v0,v1), (v2,v3).
+            let m = _mm256_set1_epi32(0x00FF_00FF);
+            pair_stage::<8>(&mut v0, &mut v1, m);
+            pair_stage::<8>(&mut v2, &mut v3, m);
 
-        // j = 4: lanes 4 apart = swapped 128-bit halves.
-        let m = _mm256_set1_epi32(0x0F0F_0F0F);
-        v0 = lane_stage::<4, 0xF0>(v0, _mm256_permute2x128_si256::<0x01>(v0, v0), m);
-        v1 = lane_stage::<4, 0xF0>(v1, _mm256_permute2x128_si256::<0x01>(v1, v1), m);
-        v2 = lane_stage::<4, 0xF0>(v2, _mm256_permute2x128_si256::<0x01>(v2, v2), m);
-        v3 = lane_stage::<4, 0xF0>(v3, _mm256_permute2x128_si256::<0x01>(v3, v3), m);
+            // j = 4: lanes 4 apart = swapped 128-bit halves.
+            let m = _mm256_set1_epi32(0x0F0F_0F0F);
+            v0 = lane_stage::<4, 0xF0>(v0, _mm256_permute2x128_si256::<0x01>(v0, v0), m);
+            v1 = lane_stage::<4, 0xF0>(v1, _mm256_permute2x128_si256::<0x01>(v1, v1), m);
+            v2 = lane_stage::<4, 0xF0>(v2, _mm256_permute2x128_si256::<0x01>(v2, v2), m);
+            v3 = lane_stage::<4, 0xF0>(v3, _mm256_permute2x128_si256::<0x01>(v3, v3), m);
 
-        // j = 2: lanes 2 apart = dword shuffle [2,3,0,1] per half.
-        let m = _mm256_set1_epi32(0x3333_3333);
-        v0 = lane_stage::<2, 0xCC>(v0, _mm256_shuffle_epi32::<0x4E>(v0), m);
-        v1 = lane_stage::<2, 0xCC>(v1, _mm256_shuffle_epi32::<0x4E>(v1), m);
-        v2 = lane_stage::<2, 0xCC>(v2, _mm256_shuffle_epi32::<0x4E>(v2), m);
-        v3 = lane_stage::<2, 0xCC>(v3, _mm256_shuffle_epi32::<0x4E>(v3), m);
+            // j = 2: lanes 2 apart = dword shuffle [2,3,0,1] per half.
+            let m = _mm256_set1_epi32(0x3333_3333);
+            v0 = lane_stage::<2, 0xCC>(v0, _mm256_shuffle_epi32::<0x4E>(v0), m);
+            v1 = lane_stage::<2, 0xCC>(v1, _mm256_shuffle_epi32::<0x4E>(v1), m);
+            v2 = lane_stage::<2, 0xCC>(v2, _mm256_shuffle_epi32::<0x4E>(v2), m);
+            v3 = lane_stage::<2, 0xCC>(v3, _mm256_shuffle_epi32::<0x4E>(v3), m);
 
-        // j = 1: lanes 1 apart = dword shuffle [1,0,3,2] per half.
-        let m = _mm256_set1_epi32(0x5555_5555);
-        v0 = lane_stage::<1, 0xAA>(v0, _mm256_shuffle_epi32::<0xB1>(v0), m);
-        v1 = lane_stage::<1, 0xAA>(v1, _mm256_shuffle_epi32::<0xB1>(v1), m);
-        v2 = lane_stage::<1, 0xAA>(v2, _mm256_shuffle_epi32::<0xB1>(v2), m);
-        v3 = lane_stage::<1, 0xAA>(v3, _mm256_shuffle_epi32::<0xB1>(v3), m);
+            // j = 1: lanes 1 apart = dword shuffle [1,0,3,2] per half.
+            let m = _mm256_set1_epi32(0x5555_5555);
+            v0 = lane_stage::<1, 0xAA>(v0, _mm256_shuffle_epi32::<0xB1>(v0), m);
+            v1 = lane_stage::<1, 0xAA>(v1, _mm256_shuffle_epi32::<0xB1>(v1), m);
+            v2 = lane_stage::<1, 0xAA>(v2, _mm256_shuffle_epi32::<0xB1>(v2), m);
+            v3 = lane_stage::<1, 0xAA>(v3, _mm256_shuffle_epi32::<0xB1>(v3), m);
 
-        _mm256_storeu_si256(p, v0);
-        _mm256_storeu_si256(p.add(1), v1);
-        _mm256_storeu_si256(p.add(2), v2);
-        _mm256_storeu_si256(p.add(3), v3);
+            _mm256_storeu_si256(p, v0);
+            _mm256_storeu_si256(p.add(1), v1);
+            _mm256_storeu_si256(p.add(2), v2);
+            _mm256_storeu_si256(p.add(3), v3);
+        }
     }
 }
 

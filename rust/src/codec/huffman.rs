@@ -73,6 +73,7 @@ fn try_code_lengths(freqs: &[u64; 256]) -> [u8; 256] {
         }
         _ => {}
     }
+    // lint: allow(range-index) -- active counts the slots just written into the fixed 256-entry array
     leaves[..active].sort_unstable();
     // Internal queue: creation order. Merge sums are non-decreasing and
     // ids grow with creation, so the front is always the minimum.
@@ -151,7 +152,7 @@ fn canonical_codes(lens: &[u8; 256]) -> [u32; 256] {
     let mut codes = [0u32; 256];
     let mut code = 0u32;
     let mut prev_len = 0u8;
-    for &s in &syms[..n] {
+    for &s in syms.get(..n).unwrap_or_default() {
         let l = lens[s as usize];
         code <<= (l - prev_len) as u32;
         codes[s as usize] = code;
@@ -335,15 +336,21 @@ impl DecodeCache {
         let (syms, n) = symbols_by_length(lens);
         let mut code = 0u32;
         let mut prev_len = 0u8;
-        for &s in &syms[..n] {
+        for &s in syms.get(..n).unwrap_or_default() {
             let l = lens[s as usize] as u32;
             code <<= l - prev_len as u32;
             prev_len = l as u8;
-            // All windows starting with this code decode to s.
+            // All windows starting with this code decode to s. The
+            // Kraft check above bounds the fill window, but take the
+            // range defensively anyway — a table bug must surface as an
+            // error, not a panic, on this decode path.
             let shift = MAX_CODE_LEN - l;
             let base = (code as usize) << shift;
             let entry = l | (l << 8) | ((s as u32) << 16);
-            self.entries[base..base + (1 << shift)].fill(entry);
+            self.entries
+                .get_mut(base..base + (1 << shift))
+                .ok_or("over-subscribed Huffman table")?
+                .fill(entry);
             code += 1;
         }
         // Pass 2: fuse a second symbol into windows with spare bits.
@@ -394,7 +401,7 @@ pub fn decode_into_cached(
     out.clear();
     match payload.first() {
         Some(&MODE_STORED) => {
-            let body = &payload[1..];
+            let body = payload.get(1..).unwrap_or_default();
             if body.len() != expected_len {
                 return Err(format!(
                     "stored block has {} bytes, expected {expected_len}",
@@ -411,8 +418,8 @@ pub fn decode_into_cached(
         return Err("huffman payload shorter than header".into());
     }
     let mut lens = [0u8; 256];
-    lens.copy_from_slice(&payload[1..257]);
-    let n = u64::from_le_bytes(payload[257..265].try_into().unwrap()) as usize;
+    lens.copy_from_slice(payload.get(1..257).ok_or("huffman payload shorter than header")?);
+    let n = crate::wire::le_u64_at(payload, 257) as usize;
     if n != expected_len {
         return Err(format!("huffman length {n} != expected {expected_len}"));
     }
@@ -424,7 +431,7 @@ pub fn decode_into_cached(
         return Err("non-empty payload with empty table".into());
     }
     let entries = cache.entries.as_slice();
-    let bits = &payload[HEADER_LEN..];
+    let bits = payload.get(HEADER_LEN..).unwrap_or_default();
     out.reserve(n);
     let mut acc = 0u64;
     let mut acc_len = 0u32;
@@ -435,7 +442,7 @@ pub fn decode_into_cached(
     // guard keeps `out` at most `n` long, so the loop never over-reads
     // symbols from trailing padding.
     while pos + 4 <= bits.len() && out.len() + 4 <= n {
-        let w = u32::from_be_bytes(bits[pos..pos + 4].try_into().unwrap());
+        let w = crate::wire::be_u32_at(bits, pos);
         acc = (acc << 32) | w as u64;
         acc_len += 32;
         pos += 4;
@@ -457,7 +464,7 @@ pub fn decode_into_cached(
     while out.len() < n {
         if acc_len < MAX_CODE_LEN {
             if pos + 4 <= bits.len() {
-                let w = u32::from_be_bytes(bits[pos..pos + 4].try_into().unwrap());
+                let w = crate::wire::be_u32_at(bits, pos);
                 acc = (acc << 32) | w as u64;
                 acc_len += 32;
                 pos += 4;

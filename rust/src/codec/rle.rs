@@ -141,6 +141,7 @@ pub fn encode_into(data: &[u8], out: &mut Vec<u8>) {
         } else {
             // Copy a literal run in one memcpy: find the next zero.
             let end = crate::simd::rle::literal_run_end(data, i + 1);
+            // lint: allow(range-index) -- literal_run_end clamps to data.len() and i < end by construction
             out.extend_from_slice(&data[i..end]);
             i = end;
         }
@@ -166,7 +167,7 @@ pub fn decode_into(data: &[u8], expected_len: usize, out: &mut Vec<u8>) -> Resul
     let mut i = 0;
     while i < data.len() {
         if data[i] == 0 {
-            let (run, used) = read_varint(&data[i + 1..])?;
+            let (run, used) = read_varint(data.get(i + 1..).unwrap_or_default())?;
             i += 1 + used;
             if run == 0 {
                 return Err(RleError::ZeroLengthRun);

@@ -45,8 +45,8 @@ impl Crc32 {
         let mut crc = self.state;
         let mut chunks = data.chunks_exact(8);
         for c in &mut chunks {
-            let lo = u32::from_le_bytes(c[0..4].try_into().unwrap()) ^ crc;
-            let hi = u32::from_le_bytes(c[4..8].try_into().unwrap());
+            let lo = crate::wire::le_u32_at(c, 0) ^ crc;
+            let hi = crate::wire::le_u32_at(c, 4);
             crc = t[7][(lo & 0xFF) as usize]
                 ^ t[6][((lo >> 8) & 0xFF) as usize]
                 ^ t[5][((lo >> 16) & 0xFF) as usize]

@@ -138,6 +138,7 @@ use crate::archive::stats::ChunkStats;
 use crate::bitvec::BitVec;
 use crate::codec::{full_mask_for, Pipeline, Stage};
 use crate::types::{ErrorBound, FnVariant, Protection};
+use crate::wire;
 
 use crc::{crc32, Crc32};
 
@@ -361,11 +362,11 @@ fn parse_header(r: &mut Reader) -> Result<Header, String> {
         1 => Protection::Unprotected,
         t => return Err(format!("bad protection tag {t}")),
     };
-    let epsilon = f32::from_le_bytes(r.take(4)?.try_into().unwrap());
-    let effective = f32::from_le_bytes(r.take(4)?.try_into().unwrap());
+    let epsilon = wire::le_f32_at(r.take(4)?, 0);
+    let effective = wire::le_f32_at(r.take(4)?, 0);
     let bound =
         ErrorBound::from_tag(eb_kind, epsilon).ok_or(format!("bad bound tag {eb_kind}"))?;
-    let n_values = u64::from_le_bytes(r.take(8)?.try_into().unwrap());
+    let n_values = wire::le_u64_at(r.take(8)?, 0);
     let chunk_size = r.u32()?;
     if chunk_size == 0 {
         return Err("zero chunk size".into());
@@ -438,10 +439,10 @@ impl ChunkRecord {
 /// header is the same 16 bytes followed by the plan byte.
 pub fn parse_chunk_frame_header(b: &[u8; CHUNK_FRAME_HEADER_LEN]) -> (u32, u32, u32, u32) {
     (
-        u32::from_le_bytes(b[0..4].try_into().unwrap()),
-        u32::from_le_bytes(b[4..8].try_into().unwrap()),
-        u32::from_le_bytes(b[8..12].try_into().unwrap()),
-        u32::from_le_bytes(b[12..16].try_into().unwrap()),
+        wire::le_u32_at(b, 0),
+        wire::le_u32_at(b, 4),
+        wire::le_u32_at(b, 8),
+        wire::le_u32_at(b, 12),
     )
 }
 
@@ -467,8 +468,10 @@ pub fn xor_fold(dst: &mut [u8], src: &[u8]) {
 /// fixed head) must hash to it.
 pub fn chunk_frame_crc_ok(frame: &[u8], want: u32) -> bool {
     frame.len() >= CHUNK_FRAME_HEADER_LEN_V2
-        && u32::from_le_bytes(frame[12..16].try_into().unwrap()) == want
-        && crc32(&frame[CHUNK_FRAME_HEADER_LEN..]) == want
+        && wire::le_u32_at(frame, 12) == want
+        && frame
+            .get(CHUNK_FRAME_HEADER_LEN..)
+            .is_some_and(|body| crc32(body) == want)
 }
 
 /// One v4 XOR parity frame: the byte-wise XOR of a group of chunk-frame
@@ -504,9 +507,10 @@ impl ParityFrame {
         let max_len = members.iter().map(|&(_, len)| len as usize).max().unwrap_or(0);
         let mut data = vec![0u8; max_len];
         let mut table = Vec::with_capacity(members.len());
+        // lint: allow(range-index) -- writer-side fold: the offsets and lengths were produced by this writer earlier in the same pass
         for &(off, len) in members {
             let frame = &file[off as usize..off as usize + len as usize];
-            let crc = u32::from_le_bytes(frame[12..16].try_into().unwrap());
+            let crc = wire::le_u32_at(frame, 12);
             table.push((len, crc));
             xor_fold(&mut data, frame);
         }
@@ -535,7 +539,7 @@ impl ParityFrame {
         // Head CRC covers everything after the magic (fields + member
         // table); the data CRC covers the XOR bytes separately so a
         // corrupt head and a corrupt body are distinguishable.
-        let head_crc = crc32(&out[start + 4..]);
+        let head_crc = crc32(&out[start + 4..]); // lint: allow(range-index) -- start captured from out.len() above, then only appended to
         out.extend_from_slice(&head_crc.to_le_bytes());
         out.extend_from_slice(&crc32(&self.data).to_le_bytes());
         out.extend_from_slice(&self.data);
@@ -556,15 +560,15 @@ impl ParityFrame {
         if b.len() < PARITY_FRAME_FIXED {
             return Err("truncated parity frame".into());
         }
-        if &b[..4] != PARITY_MAGIC {
+        if !b.starts_with(PARITY_MAGIC) {
             return Err("bad parity frame magic".into());
         }
-        let le32 = |off: usize| u32::from_le_bytes(b[off..off + 4].try_into().unwrap());
+        let le32 = |off: usize| wire::le_u32_at(b, off);
         let group = le32(4);
         let group_size = le32(8);
         let n_members = le32(12) as usize;
         let data_len = le32(16) as usize;
-        let group_start = u64::from_le_bytes(b[20..28].try_into().unwrap());
+        let group_start = wire::le_u64_at(b, 20);
         if n_members == 0 {
             return Err("parity frame with zero members".into());
         }
@@ -584,10 +588,11 @@ impl ParityFrame {
         if total > b.len() {
             return Err("truncated parity frame".into());
         }
-        if crc32(&b[4..table_end]) != le32(table_end) {
+        let head = b.get(4..table_end).ok_or("truncated parity frame")?;
+        if crc32(head) != le32(table_end) {
             return Err("parity frame head CRC mismatch".into());
         }
-        let data = &b[table_end + 8..total];
+        let data = b.get(table_end + 8..total).ok_or("truncated parity frame")?;
         if crc32(data) != le32(table_end + 4) {
             return Err("parity frame data CRC mismatch".into());
         }
@@ -706,7 +711,7 @@ impl Container {
                     parity.push(index::ParityEntry {
                         offset: p_off as u64,
                         frame_len: (out.len() - p_off) as u32,
-                        crc32: crc32(&out[p_off..]),
+                        crc32: crc32(&out[p_off..]), // lint: allow(range-index) -- p_off captured from out.len() above, then only appended to
                     });
                     group.clear();
                 }
@@ -755,18 +760,19 @@ impl Container {
         let trailer_v4 = if version == ContainerVersion::V4 {
             let tail = index::TRAILER_LEN_V4 + 4 + FINALIZE_MARKER.len();
             if data.len() < r.pos + tail {
-                if data.len() >= FINALIZE_MARKER.len()
-                    && &data[data.len() - FINALIZE_MARKER.len()..] != FINALIZE_MARKER
-                {
+                if data.len() >= FINALIZE_MARKER.len() && !data.ends_with(FINALIZE_MARKER) {
                     return Err(UNFINALIZED_DETAIL.into());
                 }
                 return Err("truncated container".into());
             }
-            if &data[data.len() - FINALIZE_MARKER.len()..] != FINALIZE_MARKER {
+            if !data.ends_with(FINALIZE_MARKER) {
                 return Err(UNFINALIZED_DETAIL.into());
             }
             let t_off = data.len() - FINALIZE_MARKER.len() - 4 - index::TRAILER_LEN_V4;
-            let t = index::parse_trailer_v4(&data[t_off..t_off + index::TRAILER_LEN_V4])?;
+            let t = index::parse_trailer_v4(
+                data.get(t_off..t_off + index::TRAILER_LEN_V4)
+                    .ok_or("truncated container")?,
+            )?;
             if t.n_chunks != n_chunks {
                 return Err(format!(
                     "v4 trailer chunk count {} disagrees with the header ({n_chunks})",
@@ -838,7 +844,7 @@ impl Container {
                 group_members.push((frame_start, frame_len, want_crc));
                 if group_members.len() == t.parity_group as usize || i + 1 == n_chunks {
                     let p_start = r.pos;
-                    let (pf, consumed) = ParityFrame::parse(&data[p_start..])?;
+                    let (pf, consumed) = ParityFrame::parse(data.get(p_start..).unwrap_or_default())?;
                     r.take(consumed)?;
                     let g = observed_parity.len() as u32;
                     if pf.group != g
@@ -866,6 +872,7 @@ impl Container {
                                 "parity frame {g} member {mi} table disagrees with the file"
                             ));
                         }
+                        // lint: allow(range-index) -- member offsets/lengths were observed in-bounds by the forward walk above
                         xor_fold(&mut fold, &data[off as usize..off as usize + len as usize]);
                     }
                     if fold != pf.data {
@@ -876,6 +883,7 @@ impl Container {
                     observed_parity.push((
                         p_start as u64,
                         consumed as u32,
+                        // lint: allow(range-index) -- r.take(consumed) above proved the range in-bounds
                         crc32(&data[p_start..p_start + consumed]),
                     ));
                     group_members.clear();
@@ -941,7 +949,7 @@ impl Container {
         }
         let body_end = r.pos;
         let file_crc = r.u32()?;
-        if crc32(&data[..body_end]) != file_crc {
+        if crc32(data.get(..body_end).unwrap_or_default()) != file_crc {
             return Err("file CRC mismatch".into());
         }
         if version == ContainerVersion::V4 {
@@ -1030,20 +1038,18 @@ struct Reader<'a> {
 
 impl<'a> Reader<'a> {
     fn take(&mut self, n: usize) -> Result<&'a [u8], String> {
-        if self.pos + n > self.data.len() {
-            return Err("truncated container".into());
-        }
-        let s = &self.data[self.pos..self.pos + n];
-        self.pos += n;
+        let end = self.pos.checked_add(n).ok_or("truncated container")?;
+        let s = self.data.get(self.pos..end).ok_or("truncated container")?;
+        self.pos = end;
         Ok(s)
     }
 
     fn u8(&mut self) -> Result<u8, String> {
-        Ok(self.take(1)?[0])
+        Ok(self.take(1)?.first().copied().unwrap_or(0))
     }
 
     fn u32(&mut self) -> Result<u32, String> {
-        Ok(u32::from_le_bytes(self.take(4)?.try_into().unwrap()))
+        Ok(wire::le_u32_at(self.take(4)?, 0))
     }
 }
 

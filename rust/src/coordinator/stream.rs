@@ -128,7 +128,11 @@ pub fn compress_stream<R: Read, W: Write>(
                             }
                         }
                         Err(e) => {
-                            *err.lock().unwrap() = Some(e.into());
+                            // A poisoned error slot means another worker
+                            // already crashed; either way we stop.
+                            if let Ok(mut g) = err.lock() {
+                                *g = Some(e.into());
+                            }
                             break;
                         }
                     }
@@ -168,7 +172,9 @@ pub fn compress_stream<R: Read, W: Write>(
             // A failed worker never emits its chunk, so the collector
             // can never drain past it — stop feeding work immediately
             // or its reorder buffer would grow with every later chunk.
-            if err.lock().unwrap().is_some() {
+            // A poisoned slot means a worker panicked mid-store:
+            // treat it like a recorded error and stop feeding work.
+            if err.lock().map(|g| g.is_some()).unwrap_or(true) {
                 break;
             }
             let got = read_full(&mut input, &mut buf)?;
@@ -178,9 +184,11 @@ pub fn compress_stream<R: Read, W: Write>(
             if got % 4 != 0 {
                 bail!("input stream length is not a multiple of 4 bytes");
             }
-            let values: Vec<f32> = buf[..got]
+            let values: Vec<f32> = buf
+                .get(..got)
+                .unwrap_or_default()
                 .chunks_exact(4)
-                .map(|c| f32::from_le_bytes(c.try_into().unwrap()))
+                .map(|c| crate::wire::le_f32_at(c, 0))
                 .collect();
             n_values += values.len() as u64;
             if work_tx.send(WorkItem { index, values }).is_err() {
@@ -192,8 +200,16 @@ pub fn compress_stream<R: Read, W: Write>(
             }
         }
         drop(work_tx);
-        let ordered = collector.join().expect("collector panicked");
-        if let Some(e) = err.lock().unwrap().take() {
+        let ordered = collector
+            .join()
+            .map_err(|_| anyhow!("collector thread panicked"))?;
+        // into_inner: the workers are joined by scope exit order, so the
+        // slot has no other owner; recover the value even if poisoned.
+        if let Some(e) = err
+            .lock()
+            .unwrap_or_else(std::sync::PoisonError::into_inner)
+            .take()
+        {
             return Err(e);
         }
         if ordered.len() != index {
@@ -240,6 +256,7 @@ pub fn compress_stream<R: Read, W: Write>(
 fn read_full<R: Read>(r: &mut R, buf: &mut [u8]) -> Result<usize> {
     let mut filled = 0;
     while filled < buf.len() {
+        // lint: allow(range-index) -- filled < buf.len() is the loop condition
         let n = r.read(&mut buf[filled..])?;
         if n == 0 {
             break;
@@ -257,6 +274,7 @@ fn xor_at(acc: &mut Vec<u8>, pos: usize, src: &[u8]) {
     if acc.len() < end {
         acc.resize(end, 0);
     }
+    // lint: allow(range-index) -- acc was just resized to at least `end`
     for (a, b) in acc[pos..end].iter_mut().zip(src) {
         *a ^= b;
     }
@@ -297,8 +315,8 @@ fn read_parity_frame<R: Read>(
     let mut fixed = [0u8; PARITY_FRAME_FIXED - 4];
     read_exact_tracked(input, &mut fixed, crc, compressed_bytes)?;
     pbuf.extend_from_slice(&fixed);
-    let n_members = u32::from_le_bytes(fixed[8..12].try_into().unwrap()) as usize;
-    let data_len = u32::from_le_bytes(fixed[12..16].try_into().unwrap()) as usize;
+    let n_members = crate::wire::le_u32_at(&fixed, 8) as usize;
+    let data_len = crate::wire::le_u32_at(&fixed, 12) as usize;
     if n_members != group.len() {
         bail!(
             "parity frame {expected_group} covers {n_members} members, \
@@ -329,7 +347,7 @@ fn read_parity_frame<R: Read>(
             pf.group
         );
     }
-    if pf.group_start != group[0].0 {
+    if pf.group_start != group.first().map(|f| f.0).unwrap_or(0) {
         bail!("parity frame {expected_group} group_start disagrees with the stream");
     }
     for (mi, (m, f)) in pf.members.iter().zip(group).enumerate() {
@@ -444,8 +462,9 @@ pub fn decompress_stream<R: Read, W: Write + Send>(
                 let mut scratch = Scratch::new();
                 while let Some(item) = work_rx.recv() {
                     if item.record.crc32(version) != item.want_crc {
-                        *err.lock().unwrap() =
-                            Some(anyhow!("chunk {} CRC mismatch", item.index));
+                        if let Ok(mut g) = err.lock() {
+                            *g = Some(anyhow!("chunk {} CRC mismatch", item.index));
+                        }
                         break;
                     }
                     let n = item.record.n_values as usize;
@@ -472,7 +491,11 @@ pub fn decompress_stream<R: Read, W: Write + Send>(
                             }
                         }
                         Err(e) => {
-                            *err.lock().unwrap() = Some(e.into());
+                            // A poisoned error slot means another worker
+                            // already crashed; either way we stop.
+                            if let Ok(mut g) = err.lock() {
+                                *g = Some(e.into());
+                            }
                             break;
                         }
                     }
@@ -542,12 +565,13 @@ pub fn decompress_stream<R: Read, W: Write + Send>(
             // stalls at that index forever — stop framing immediately,
             // or its reorder buffer would accumulate every later chunk
             // and break the bounded-memory guarantee.
-            if err.lock().unwrap().is_some() {
+            if err.lock().map(|g| g.is_some()).unwrap_or(true) {
                 break;
             }
             // The v4 lookahead may already hold this frame's first 4
             // bytes (they were read — and CRC-tracked — while peeking
             // for a parity frame).
+            // lint: allow(range-index) -- frame_head is a fixed 17-byte array and fh_len is 16 or 17
             let head_read = if let Some(first4) = pending.take() {
                 frame_head[..4].copy_from_slice(&first4);
                 read_exact_tracked(
@@ -570,7 +594,8 @@ pub fn decompress_stream<R: Read, W: Write + Send>(
                 bail!("truncated container at chunk {index}");
             }
             let frame_start = compressed_bytes - fh_len as u64;
-            let fixed: [u8; 16] = frame_head[..16].try_into().unwrap();
+            // frame_head is 17 bytes, so first_chunk::<16> always succeeds.
+            let fixed = *frame_head.first_chunk::<16>().unwrap_or(&[0u8; 16]);
             let (n, ob, pb, want_crc) = parse_chunk_frame_header(&fixed);
             let chunk_plan = match version {
                 ContainerVersion::V1 => full_plan,
@@ -627,6 +652,7 @@ pub fn decompress_stream<R: Read, W: Write + Send>(
                 // Fold this frame's image into the group accumulator
                 // as its pieces sit in hand — no frame is re-read or
                 // re-buffered for parity verification.
+                // lint: allow(range-index) -- frame_head is a fixed 17-byte array and fh_len is 16 or 17
                 xor_at(&mut acc, 0, &frame_head[..fh_len]);
                 xor_at(&mut acc, fh_len, &outlier_bytes);
                 xor_at(&mut acc, fh_len + ob as usize, &payload);
@@ -641,7 +667,7 @@ pub fn decompress_stream<R: Read, W: Write + Send>(
                     bail!("truncated container after chunk {index}");
                 }
                 if la == *PARITY_MAGIC {
-                    let group = &observed_frames[group_first..];
+                    let group = observed_frames.get(group_first..).unwrap_or_default();
                     let parsed = read_parity_frame(
                         &mut input,
                         &mut crc,
@@ -702,8 +728,16 @@ pub fn decompress_stream<R: Read, W: Write + Send>(
             }
         }
         drop(work_tx);
-        let (written, write_result) = collector.join().expect("collector panicked");
-        if let Some(e) = err.lock().unwrap().take() {
+        let (written, write_result) = collector
+            .join()
+            .map_err(|_| anyhow!("collector thread panicked"))?;
+        // into_inner-equivalent: all workers are done by now, so recover
+        // the recorded error even from a poisoned slot.
+        if let Some(e) = err
+            .lock()
+            .unwrap_or_else(std::sync::PoisonError::into_inner)
+            .take()
+        {
             return Err(e);
         }
         write_result?;
@@ -872,7 +906,9 @@ impl<T> SharedReceiver<T> {
     }
 
     fn recv(&self) -> Option<T> {
-        self.inner.lock().unwrap().recv().ok()
+        // A poisoned receiver means a sibling worker panicked while
+        // holding the lock; report end-of-stream so this worker exits.
+        self.inner.lock().ok()?.recv().ok()
     }
 }
 
@@ -895,7 +931,7 @@ pub fn decompress_slice_streaming(
     let stats = decompress_stream(cfg, DEFAULT_QUEUE_DEPTH, bytes, &mut out)?;
     let values = out
         .chunks_exact(4)
-        .map(|c| f32::from_le_bytes(c.try_into().unwrap()))
+        .map(|c| crate::wire::le_f32_at(c, 0))
         .collect();
     Ok((values, stats))
 }

@@ -17,6 +17,12 @@
 //! parity here; the parity-safe quantizer variants produce bit-for-bit
 //! identical compressed streams on both.
 
+// Every unsafe operation inside an `unsafe fn` must sit in an explicit
+// `unsafe {}` block with its own `// SAFETY:` comment (enforced by
+// `lc lint`'s safety-comment check); the fn-level `unsafe` only
+// declares the *caller's* obligation.
+#![deny(unsafe_op_in_unsafe_fn)]
+
 pub mod archive;
 pub mod baselines;
 pub mod bench_util;
@@ -36,5 +42,6 @@ pub mod simd;
 pub mod tables;
 pub mod types;
 pub mod verify;
+pub mod wire;
 
 pub use error::LcError;

@@ -13,6 +13,8 @@
 //!                                      regenerate the paper's tables
 //!   sweep                              exhaustive/strided f32 sweep
 //!   parity                             native vs PJRT parity audit
+//!   lint                               repo-specific static analysis
+//!                                      (see lc::verify::lint)
 //!   serve                              compression daemon (TCP/Unix
 //!                                      sockets; see lc::server)
 //!
@@ -76,6 +78,12 @@ USAGE:
                 [--quick] [--device pjrt] [--files N] [--n N]
   lc sweep      [--eb EPS] [--stride K] [--rel] [--variant native] [--threads N]
   lc parity     [--eb EPS] [--n N]
+  lc lint       [--waivers] [paths...]  (repo-specific static analysis:
+                delimiter/doc integrity, panic-free fault surface,
+                SAFETY comments, wire-constant + doc-table sync,
+                float-cast discipline; paths default to the crate's own
+                sources, nonzero exit on any diagnostic; --waivers
+                lists every `lint: allow(...)` with its reason)
   lc serve      [--tcp ADDR] [--uds PATH] [--workers N] [--budget-mb N]
                 [--max-frame-mb N] [--io-timeout-secs N] [--deadline-secs N]
                 (compression daemon with admission control, per-request
@@ -104,6 +112,7 @@ fn parse_opts(args: &[String]) -> Opts {
             let boolean = matches!(
                 name,
                 "unprotected" | "rel" | "quick" | "help" | "status" | "dry-run" | "report"
+                    | "waivers"
             );
             if boolean || i + 1 >= args.len() {
                 flags.insert(name.to_string(), "true".to_string());
@@ -676,6 +685,40 @@ fn run(args: Vec<String>) -> Result<()> {
             }
             println!("parity-safe variants are bit-identical across pipelines");
             drop(svc);
+        }
+        "lint" => {
+            // Default to the crate's own sources, wherever we were
+            // launched from (repo root or rust/).
+            let roots: Vec<std::path::PathBuf> = if o.positional.is_empty() {
+                let d = if std::path::Path::new("rust/src").is_dir() {
+                    "rust/src"
+                } else {
+                    "src"
+                };
+                vec![d.into()]
+            } else {
+                o.positional.iter().map(std::path::PathBuf::from).collect()
+            };
+            let report = lc::verify::lint::lint_paths(&roots)
+                .with_context(|| format!("linting {roots:?}"))?;
+            for d in &report.diagnostics {
+                println!("{d}");
+            }
+            if o.flag("waivers").is_some() {
+                println!("waivers ({}):", report.waivers.len());
+                for w in &report.waivers {
+                    println!("  {w}");
+                }
+            }
+            println!(
+                "lint: {} files scanned, {} diagnostics, {} waivers",
+                report.files_scanned,
+                report.diagnostics.len(),
+                report.waivers.len()
+            );
+            if !report.is_clean() {
+                bail!("lint found {} diagnostics", report.diagnostics.len());
+            }
         }
         "serve" => {
             let default_addr = "127.0.0.1:7440";

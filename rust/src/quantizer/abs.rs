@@ -120,6 +120,7 @@ pub fn dequantize(chunk: &QuantizedChunk, p: AbsParams) -> Vec<f32> {
 
 /// Count values that fail ONLY the double check (i.e. in-range bins
 /// whose reconstruction misses the bound) — the paper's Table 9 metric.
+// lint: allow(float-cast) -- replays the encoder's deliberate double-rounding sequence exactly
 pub fn rounding_affected(x: &[f32], p: AbsParams) -> usize {
     let maxbin = MAXBIN_ABS as f32;
     x.iter()

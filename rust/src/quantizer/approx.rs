@@ -15,6 +15,7 @@ use crate::types::{
 /// [0,1]); the double check absorbs the inaccuracy by storing values it
 /// cannot bound losslessly.
 #[inline]
+// lint: allow(float-cast) -- the exponent term is an exact small-integer convert (parity argument in the docs)
 pub fn log2approxf(x: f32) -> f32 {
     let i = x.to_bits() as i32;
     let expo = (i >> MANTISSA_BITS_F32) & 0xFF;
@@ -31,6 +32,7 @@ pub fn log2approxf(x: f32) -> f32 {
 /// immune to FMA contraction / reassociation on any backend. See
 /// qmath.py::pow2approx_from_bins for the step-by-step argument.
 #[inline]
+// lint: allow(float-cast) -- each cast is an exact or single correctly-rounded step of the parity proof
 pub fn pow2approx_from_bins(bin: i32, l2eb: f32) -> f32 {
     let arg = (bin as f64) * (l2eb as f64); // exact
     let biased = arg + 127.0; // single RTN; fma(exact,..) identical
@@ -46,6 +48,7 @@ pub fn pow2approx_from_bins(bin: i32, l2eb: f32) -> f32 {
 /// rust pipeline handles f64 data (the AOT artifacts are f32), so this
 /// needs bound-correctness, not cross-device parity.
 #[inline]
+// lint: allow(float-cast) -- the exponent term is an exact small-integer convert
 pub fn log2approxd(x: f64) -> f64 {
     let i = x.to_bits() as i64;
     let expo = (i >> MANTISSA_BITS_F64) & 0x7FF;
@@ -56,6 +59,7 @@ pub fn log2approxd(x: f64) -> f64 {
 
 /// f64-data version of pow2approx evaluated at `arg = bin * l2eb`.
 #[inline]
+// lint: allow(float-cast) -- each cast is an exact or single correctly-rounded step
 pub fn pow2approxd_from_bins(bin: i64, l2eb: f64) -> f64 {
     let arg = (bin as f64) * l2eb;
     let biased = arg + 1023.0;

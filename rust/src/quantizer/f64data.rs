@@ -52,6 +52,7 @@ impl Abs64Params {
 /// ABS quantizer over f64 data into caller-provided buffers (cleared
 /// first; same blocked 64-element layout as the f32 kernels — one
 /// packed bitmap word per block, fixup pass for outlier lanes).
+// lint: allow(float-cast) -- bin-cap convert and float->int bin extraction are the defined roundings
 pub fn abs_quantize_into(
     x: &[f64],
     p: Abs64Params,
@@ -106,6 +107,7 @@ pub fn abs_quantize(x: &[f64], p: Abs64Params, protection: Protection) -> Quanti
 }
 
 /// ABS f64 decode into a caller-provided buffer (cleared first).
+// lint: allow(float-cast) -- the int->f64 convert is the reconstruction rounding the encoder verified
 pub fn abs_dequantize_into(words: &[u64], obits: &[u64], p: Abs64Params, out: &mut Vec<f64>) {
     out.clear();
     out.reserve(words.len());
@@ -150,6 +152,7 @@ impl Rel64Params {
 /// One REL f64 value -> (word, is_outlier). Kept as the single source
 /// of truth for the REL semantics (the blocked loop must not drift).
 #[inline]
+// lint: allow(float-cast) -- bin-cap convert and float->int bin extraction are the defined roundings
 fn rel_encode_one(v: f64, p: Rel64Params, variant: FnVariant, protected: bool) -> (u64, bool) {
     let sign = (v < 0.0) as i64;
     let ax = v.abs();
@@ -225,6 +228,7 @@ pub fn rel_quantize(
 }
 
 /// REL f64 decode into a caller-provided buffer (cleared first).
+// lint: allow(float-cast) -- the Native bin->f64 convert is the reference reconstruction rounding
 pub fn rel_dequantize_into(
     words: &[u64],
     obits: &[u64],

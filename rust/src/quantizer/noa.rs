@@ -39,6 +39,7 @@ impl RangeStats {
     }
 
     /// R = max - min, in f64 to avoid overflow on extreme ranges.
+    // lint: allow(float-cast) -- f32->f64 widening is exact
     pub fn range(&self) -> f64 {
         if self.finite_count == 0 {
             0.0
@@ -51,6 +52,7 @@ impl RangeStats {
 /// Derive the effective ABS params for a NOA bound over a given range.
 /// A zero range (constant or empty input) degrades to the raw epsilon,
 /// which quantizes everything into bin 0 exactly.
+// lint: allow(float-cast) -- the effective bound is computed once in f64 and rounded once to f32
 pub fn to_abs_params(eb_noa: f32, stats: RangeStats) -> AbsParams {
     let r = stats.range();
     let eff = if r > 0.0 {

@@ -24,6 +24,7 @@ pub struct RelParams {
 }
 
 impl RelParams {
+    // lint: allow(float-cast) -- l2eb is computed once in f64 and rounded once to f32, by design
     pub fn new(eb: f32) -> Self {
         let l2eb = ((1.0f64 + eb as f64).log2()) as f32;
         RelParams {
@@ -43,6 +44,7 @@ impl RelParams {
 /// the REL kernels — the scalar twin in [`crate::simd::rel`] is a
 /// per-lane loop over exactly this function.
 #[inline]
+// lint: allow(float-cast) -- every cast is one deliberate IEEE-754 rounding of the bound argument
 pub(crate) fn encode_one(v: f32, p: RelParams, variant: FnVariant, protected: bool) -> (u32, bool) {
     let sign = (v < 0.0) as i32;
     let ax = v.abs();

@@ -809,6 +809,7 @@ pub fn rebuild_parity(container: &Container) -> Result<Vec<Vec<u8>>, String> {
                 }
             }
             let mut p = Vec::new();
+            // lint: allow(wire-consts) -- the reference writer spells its wire bytes independently of the production consts
             p.extend_from_slice(b"LCPF");
             p.extend_from_slice(&(out.len() as u32).to_le_bytes());
             p.extend_from_slice(&(k as u32).to_le_bytes());

@@ -224,6 +224,7 @@ fn read_header(
     let mut got = 0usize;
     let mut deadline: Option<Instant> = None;
     loop {
+        // lint: allow(range-index) -- got == FRAME_HEADER_LEN returns before got can pass the array length
         match stream.read(&mut buf[got..]) {
             Ok(0) => return Err(()),
             Ok(n) => {
@@ -266,6 +267,7 @@ fn read_exact_deadline(
 ) -> Result<(), ()> {
     let mut got = 0usize;
     while got < buf.len() {
+        // lint: allow(range-index) -- got < buf.len() is the loop condition
         match stream.read(&mut buf[got..]) {
             Ok(0) => return Err(()),
             Ok(n) => got += n,
@@ -295,6 +297,7 @@ fn discard(
     let mut buf = [0u8; DISCARD_CHUNK];
     while remaining > 0 {
         let want = remaining.min(DISCARD_CHUNK as u64) as usize;
+        // lint: allow(range-index) -- want was clamped to the fixed buffer length on the line above
         read_exact_deadline(stream, &mut buf[..want], deadline, cs)?;
         remaining -= want as u64;
     }
@@ -424,7 +427,12 @@ fn read_loop(
                 if read_exact_deadline(stream, &mut prefix, body_deadline, cs).is_err() {
                     return;
                 }
-                let (tenant, deadline_ms) = parse_request_prefix(&prefix).expect("length checked");
+                let Some((tenant, deadline_ms)) = parse_request_prefix(&prefix) else {
+                    // Unreachable: the prefix array is exactly
+                    // REQUEST_PREFIX_LEN bytes. Fail the connection
+                    // rather than the process if that ever changes.
+                    return;
+                };
                 let rest = fh.body_len as u64 - REQUEST_PREFIX_LEN as u64;
                 if shared.drain.is_draining() {
                     if discard(stream, rest, body_deadline, cs).is_err() {

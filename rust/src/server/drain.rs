@@ -109,6 +109,9 @@ mod sig {
     }
 
     pub fn install() {
+        // SAFETY: `signal` is the libc prototype declared above and
+        // `on_term` is an `extern "C" fn(i32)` that only stores into an
+        // atomic — async-signal-safe, no data it touches can dangle.
         unsafe {
             signal(SIGTERM, on_term);
             signal(SIGINT, on_term);

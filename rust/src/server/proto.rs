@@ -145,6 +145,7 @@ use crate::archive::ArchiveError;
 use crate::container::ContainerVersion;
 use crate::error::LcError;
 use crate::types::{ErrorBound, FnVariant, Protection};
+use crate::wire;
 
 use super::TenantCounters;
 
@@ -240,6 +241,7 @@ pub struct FrameHeader {
 }
 
 /// Serialize a frame header.
+// lint: allow(range-index) -- writer-side packing of a fixed 17-byte array with constant ranges
 pub fn encode_frame_header(kind: u8, request_id: u64, body_len: u32) -> [u8; FRAME_HEADER_LEN] {
     let mut h = [0u8; FRAME_HEADER_LEN];
     h[0..4].copy_from_slice(&FRAME_MAGIC);
@@ -252,13 +254,13 @@ pub fn encode_frame_header(kind: u8, request_id: u64, body_len: u32) -> [u8; FRA
 /// Parse a frame header; `None` means the magic is wrong and the
 /// stream can no longer be trusted.
 pub fn parse_frame_header(h: &[u8; FRAME_HEADER_LEN]) -> Option<FrameHeader> {
-    if h[0..4] != FRAME_MAGIC {
+    if !h.starts_with(&FRAME_MAGIC) {
         return None;
     }
     Some(FrameHeader {
         kind: h[4],
-        request_id: u64::from_le_bytes(h[5..13].try_into().unwrap()),
-        body_len: u32::from_le_bytes(h[13..17].try_into().unwrap()),
+        request_id: wire::le_u64_at(h, 5),
+        body_len: wire::le_u32_at(h, 13),
     })
 }
 
@@ -277,7 +279,7 @@ pub fn error_frame(request_id: u64, code: u16, msg: &str) -> Vec<u8> {
     while cut > 0 && !msg.is_char_boundary(cut) {
         cut -= 1;
     }
-    let msg = &msg.as_bytes()[..cut];
+    let msg = msg.as_bytes().get(..cut).unwrap_or_default();
     let mut body = Vec::with_capacity(4 + msg.len());
     body.extend_from_slice(&code.to_le_bytes());
     body.extend_from_slice(&(msg.len() as u16).to_le_bytes());
@@ -290,8 +292,8 @@ pub fn parse_error_body(b: &[u8]) -> Option<(u16, String)> {
     if b.len() < 4 {
         return None;
     }
-    let code = u16::from_le_bytes(b[0..2].try_into().unwrap());
-    let len = u16::from_le_bytes(b[2..4].try_into().unwrap()) as usize;
+    let code = wire::le_u16_at(b, 0);
+    let len = wire::le_u16_at(b, 2) as usize;
     let msg = b.get(4..4 + len)?;
     Some((code, String::from_utf8_lossy(msg).into_owned()))
 }
@@ -343,6 +345,7 @@ fn version_tag(v: ContainerVersion) -> u8 {
 }
 
 /// Serialize the 8-byte work-request prefix.
+// lint: allow(range-index) -- writer-side packing of a fixed 8-byte array with constant ranges
 pub fn encode_request_prefix(tenant: u32, deadline_ms: u32) -> [u8; REQUEST_PREFIX_LEN] {
     let mut p = [0u8; REQUEST_PREFIX_LEN];
     p[0..4].copy_from_slice(&tenant.to_le_bytes());
@@ -355,10 +358,7 @@ pub fn parse_request_prefix(b: &[u8]) -> Option<(u32, u32)> {
     if b.len() < REQUEST_PREFIX_LEN {
         return None;
     }
-    Some((
-        u32::from_le_bytes(b[0..4].try_into().unwrap()),
-        u32::from_le_bytes(b[4..8].try_into().unwrap()),
-    ))
+    Some((wire::le_u32_at(b, 0), wire::le_u32_at(b, 4)))
 }
 
 /// Serialize compress params + raw values (the body after the prefix).
@@ -385,7 +385,7 @@ pub fn parse_compress_tail(b: &[u8]) -> Result<(CompressParams, &[u8]), String> 
             b.len()
         ));
     }
-    let epsilon = f32::from_le_bytes(b[4..8].try_into().unwrap());
+    let epsilon = wire::le_f32_at(b, 4);
     let bound =
         ErrorBound::from_tag(b[0], epsilon).ok_or(format!("bad error-bound tag {}", b[0]))?;
     let variant = match b[1] {
@@ -405,7 +405,7 @@ pub fn parse_compress_tail(b: &[u8]) -> Result<(CompressParams, &[u8]), String> 
         4 => ContainerVersion::V4,
         t => return Err(format!("bad container version tag {t}")),
     };
-    let data = &b[COMPRESS_PARAMS_LEN..];
+    let data = b.get(COMPRESS_PARAMS_LEN..).unwrap_or_default();
     if data.len() % 4 != 0 {
         return Err(format!("raw data length {} is not a multiple of 4", data.len()));
     }
@@ -435,9 +435,9 @@ pub fn parse_range_tail(b: &[u8]) -> Option<(u64, u64, &[u8])> {
         return None;
     }
     Some((
-        u64::from_le_bytes(b[0..8].try_into().unwrap()),
-        u64::from_le_bytes(b[8..16].try_into().unwrap()),
-        &b[16..],
+        wire::le_u64_at(b, 0),
+        wire::le_u64_at(b, 8),
+        b.get(16..)?,
     ))
 }
 
@@ -458,7 +458,7 @@ pub fn bytes_to_f32s(b: &[u8]) -> Option<Vec<f32>> {
     }
     Some(
         b.chunks_exact(4)
-            .map(|c| f32::from_le_bytes(c.try_into().unwrap()))
+            .map(|c| wire::le_f32_at(c, 0))
             .collect(),
     )
 }
@@ -500,17 +500,16 @@ pub fn parse_status(b: &[u8]) -> Option<StatusReport> {
         return None;
     }
     let draining = b[0] != 0;
-    let in_flight_bytes = u64::from_le_bytes(b[1..9].try_into().unwrap());
-    let budget_bytes = u64::from_le_bytes(b[9..17].try_into().unwrap());
-    let n = u32::from_le_bytes(b[17..21].try_into().unwrap()) as usize;
+    let in_flight_bytes = wire::le_u64_at(b, 1);
+    let budget_bytes = wire::le_u64_at(b, 9);
+    let n = wire::le_u32_at(b, 17) as usize;
     let mut tenants = Vec::with_capacity(n.min(1024));
     let mut pos = 21;
     for _ in 0..n {
         let e = b.get(pos..pos + 52)?;
-        let u64_at =
-            |off: usize| u64::from_le_bytes(e[off..off + 8].try_into().unwrap());
+        let u64_at = |off: usize| wire::le_u64_at(e, off);
         tenants.push((
-            u32::from_le_bytes(e[0..4].try_into().unwrap()),
+            wire::le_u32_at(e, 0),
             TenantCounters {
                 requests: u64_at(4),
                 bytes_in: u64_at(12),

@@ -35,6 +35,7 @@ pub fn quantize_block(x: &[f32], p: AbsParams, protected: bool, out: &mut [u32])
 /// Scalar twin of [`quantize_block`] — the semantic reference (the
 /// seed's per-element loop). Public so the differential property tests
 /// and benches can pin the vector kernel against it.
+// lint: allow(float-cast) -- every cast is one deliberate IEEE-754 rounding the decoder mirrors bit for bit
 pub fn quantize_block_scalar(x: &[f32], p: AbsParams, protected: bool, out: &mut [u32]) -> u64 {
     let maxbin = MAXBIN_ABS as f32;
     let eb2_64 = p.eb2 as f64;
@@ -80,6 +81,7 @@ pub fn dequantize_block(words: &[u32], mask: u64, p: AbsParams, out: &mut [f32])
 
 /// Scalar twin of [`dequantize_block`]. The multiply must stay a single
 /// f32 operation: it defines the reconstruction the encoder verified.
+// lint: allow(float-cast) -- the int->f32 convert is the reconstruction rounding the encoder verified
 pub fn dequantize_block_scalar(words: &[u32], mask: u64, p: AbsParams, out: &mut [f32]) {
     for (j, (&w, o)) in words.iter().zip(out.iter_mut()).enumerate() {
         *o = if (mask >> j) & 1 != 0 {
@@ -103,56 +105,63 @@ mod avx2 {
     /// AVX2; `xp`/`outp` must be valid for 8 f32/u32 reads/writes.
     #[target_feature(enable = "avx2")]
     #[inline]
+    // lint: allow(float-cast) -- lane constants are widened with the same single roundings as the scalar twin
     unsafe fn quantize8(xp: *const f32, p: AbsParams, protected: bool, outp: *mut u32) -> u32 {
-        let v = _mm256_loadu_ps(xp);
-        // binf = rint(v * inv_eb2): one correctly-rounded multiply, one
-        // round-to-nearest-even — same two roundings as the scalar.
-        let binf = _mm256_round_ps::<{ _MM_FROUND_TO_NEAREST_INT | _MM_FROUND_NO_EXC }>(
-            _mm256_mul_ps(v, _mm256_set1_ps(p.inv_eb2)),
-        );
-        // Ordered-quiet compares: NaN lanes fall out exactly like the
-        // scalar `<` / `>` operators.
-        let in_range = _mm256_and_ps(
-            _mm256_cmp_ps::<_CMP_LT_OQ>(binf, _mm256_set1_ps(MAXBIN_ABS as f32)),
-            _mm256_cmp_ps::<_CMP_GT_OQ>(binf, _mm256_set1_ps(-(MAXBIN_ABS as f32))),
-        );
-        // binc = in_range ? binf : 0.0 (masking yields +0.0, matching
-        // the scalar literal).
-        let binc = _mm256_and_ps(binf, in_range);
-        // |binc| < 2^28 by construction, so the truncating convert can
-        // neither saturate nor hit the indefinite value.
-        let bin = _mm256_cvttps_epi32(binc);
-        // recon = f32(f64(binc) * f64(eb2)), widened lane-pair-wise.
-        let eb2 = _mm256_set1_pd(p.eb2 as f64);
-        let binc_lo = _mm256_cvtps_pd(_mm256_castps256_ps128(binc));
-        let binc_hi = _mm256_cvtps_pd(_mm256_extractf128_ps::<1>(binc));
-        let recon_lo = _mm256_cvtpd_ps(_mm256_mul_pd(binc_lo, eb2));
-        let recon_hi = _mm256_cvtpd_ps(_mm256_mul_pd(binc_hi, eb2));
-        let quant = if protected {
-            // err = |f64(v) - f64(recon)| <= f64(eb), exactly in f64.
-            let abs_mask = _mm256_set1_pd(f64::from_bits(0x7FFF_FFFF_FFFF_FFFF));
-            let eb = _mm256_set1_pd(p.eb as f64);
-            let v_lo = _mm256_cvtps_pd(_mm256_castps256_ps128(v));
-            let v_hi = _mm256_cvtps_pd(_mm256_extractf128_ps::<1>(v));
-            let err_lo =
-                _mm256_and_pd(_mm256_sub_pd(v_lo, _mm256_cvtps_pd(recon_lo)), abs_mask);
-            let err_hi =
-                _mm256_and_pd(_mm256_sub_pd(v_hi, _mm256_cvtps_pd(recon_hi)), abs_mask);
-            let ok = join_pd_masks(
-                _mm256_cmp_pd::<_CMP_LE_OQ>(err_lo, eb),
-                _mm256_cmp_pd::<_CMP_LE_OQ>(err_hi, eb),
+        // SAFETY: AVX2 is enabled for this fn; the only memory the
+        // intrinsics touch is the caller-guaranteed 8-lane windows at
+        // `xp` and `outp` (unaligned load/store).
+        unsafe {
+            let v = _mm256_loadu_ps(xp);
+            // binf = rint(v * inv_eb2): one correctly-rounded multiply,
+            // one round-to-nearest-even — same two roundings as the
+            // scalar.
+            let binf = _mm256_round_ps::<{ _MM_FROUND_TO_NEAREST_INT | _MM_FROUND_NO_EXC }>(
+                _mm256_mul_ps(v, _mm256_set1_ps(p.inv_eb2)),
             );
-            _mm256_and_ps(in_range, ok)
-        } else {
-            in_range
-        };
-        // Quantized lanes carry zigzag(bin); outlier lanes their raw
-        // bits — one blend replaces the scalar fixup pass.
-        let zz = zigzag_epi32(bin);
-        let quant_i = _mm256_castps_si256(quant);
-        let words = _mm256_blendv_epi8(_mm256_castps_si256(v), zz, quant_i);
-        _mm256_storeu_si256(outp as *mut __m256i, words);
-        !(_mm256_movemask_ps(quant) as u32) & 0xFF
+            // Ordered-quiet compares: NaN lanes fall out exactly like
+            // the scalar `<` / `>` operators.
+            let in_range = _mm256_and_ps(
+                _mm256_cmp_ps::<_CMP_LT_OQ>(binf, _mm256_set1_ps(MAXBIN_ABS as f32)),
+                _mm256_cmp_ps::<_CMP_GT_OQ>(binf, _mm256_set1_ps(-(MAXBIN_ABS as f32))),
+            );
+            // binc = in_range ? binf : 0.0 (masking yields +0.0,
+            // matching the scalar literal).
+            let binc = _mm256_and_ps(binf, in_range);
+            // |binc| < 2^28 by construction, so the truncating convert
+            // can neither saturate nor hit the indefinite value.
+            let bin = _mm256_cvttps_epi32(binc);
+            // recon = f32(f64(binc) * f64(eb2)), widened lane-pair-wise.
+            let eb2 = _mm256_set1_pd(p.eb2 as f64);
+            let binc_lo = _mm256_cvtps_pd(_mm256_castps256_ps128(binc));
+            let binc_hi = _mm256_cvtps_pd(_mm256_extractf128_ps::<1>(binc));
+            let recon_lo = _mm256_cvtpd_ps(_mm256_mul_pd(binc_lo, eb2));
+            let recon_hi = _mm256_cvtpd_ps(_mm256_mul_pd(binc_hi, eb2));
+            let quant = if protected {
+                // err = |f64(v) - f64(recon)| <= f64(eb), exactly in f64.
+                let abs_mask = _mm256_set1_pd(f64::from_bits(0x7FFF_FFFF_FFFF_FFFF));
+                let eb = _mm256_set1_pd(p.eb as f64);
+                let v_lo = _mm256_cvtps_pd(_mm256_castps256_ps128(v));
+                let v_hi = _mm256_cvtps_pd(_mm256_extractf128_ps::<1>(v));
+                let err_lo =
+                    _mm256_and_pd(_mm256_sub_pd(v_lo, _mm256_cvtps_pd(recon_lo)), abs_mask);
+                let err_hi =
+                    _mm256_and_pd(_mm256_sub_pd(v_hi, _mm256_cvtps_pd(recon_hi)), abs_mask);
+                let ok = join_pd_masks(
+                    _mm256_cmp_pd::<_CMP_LE_OQ>(err_lo, eb),
+                    _mm256_cmp_pd::<_CMP_LE_OQ>(err_hi, eb),
+                );
+                _mm256_and_ps(in_range, ok)
+            } else {
+                in_range
+            };
+            // Quantized lanes carry zigzag(bin); outlier lanes their
+            // raw bits — one blend replaces the scalar fixup pass.
+            let zz = zigzag_epi32(bin);
+            let quant_i = _mm256_castps_si256(quant);
+            let words = _mm256_blendv_epi8(_mm256_castps_si256(v), zz, quant_i);
+            _mm256_storeu_si256(outp as *mut __m256i, words);
+            !(_mm256_movemask_ps(quant) as u32) & 0xFF
+        }
     }
 
     /// AVX2 block kernel: 8-lane groups, scalar twin on the tail (every
@@ -170,7 +179,11 @@ mod avx2 {
         let groups = x.len() / 8;
         let mut mask = 0u64;
         for g in 0..groups {
-            let bits = quantize8(x.as_ptr().add(g * 8), p, protected, out.as_mut_ptr().add(g * 8));
+            // SAFETY: g * 8 + 8 <= x.len() == out.len(), so both
+            // pointers are valid for one 8-lane group.
+            let bits = unsafe {
+                quantize8(x.as_ptr().add(g * 8), p, protected, out.as_mut_ptr().add(g * 8))
+            };
             mask |= (bits as u64) << (g * 8);
         }
         let done = groups * 8;
@@ -187,14 +200,18 @@ mod avx2 {
     #[target_feature(enable = "avx2")]
     #[inline]
     unsafe fn dequantize8(wp: *const u32, obits: u32, p: AbsParams, outp: *mut f32) {
-        let w = _mm256_loadu_si256(wp as *const __m256i);
-        // cvtdq2ps is the same correctly-rounded int->f32 convert as
-        // the scalar `as f32`; the multiply is the single f32 op the
-        // encoder verified.
-        let q = _mm256_mul_ps(_mm256_cvtepi32_ps(unzigzag_epi32(w)), _mm256_set1_ps(p.eb2));
-        let om = lane_mask_from_bits(obits);
-        let vals = _mm256_blendv_epi8(_mm256_castps_si256(q), w, om);
-        _mm256_storeu_si256(outp as *mut __m256i, vals);
+        // SAFETY: AVX2 is enabled for this fn; the only memory touched
+        // is the caller-guaranteed 8-lane windows at `wp` and `outp`.
+        unsafe {
+            let w = _mm256_loadu_si256(wp as *const __m256i);
+            // cvtdq2ps is the same correctly-rounded int->f32 convert
+            // as the scalar `as f32`; the multiply is the single f32 op
+            // the encoder verified.
+            let q = _mm256_mul_ps(_mm256_cvtepi32_ps(unzigzag_epi32(w)), _mm256_set1_ps(p.eb2));
+            let om = lane_mask_from_bits(obits);
+            let vals = _mm256_blendv_epi8(_mm256_castps_si256(q), w, om);
+            _mm256_storeu_si256(outp as *mut __m256i, vals);
+        }
     }
 
     /// AVX2 dequantize block kernel (tail via the scalar twin).
@@ -211,7 +228,11 @@ mod avx2 {
         let groups = words.len() / 8;
         for g in 0..groups {
             let obits = ((mask >> (g * 8)) & 0xFF) as u32;
-            dequantize8(words.as_ptr().add(g * 8), obits, p, out.as_mut_ptr().add(g * 8));
+            // SAFETY: g * 8 + 8 <= words.len() == out.len(), so both
+            // pointers are valid for one 8-lane group.
+            unsafe {
+                dequantize8(words.as_ptr().add(g * 8), obits, p, out.as_mut_ptr().add(g * 8));
+            }
         }
         let done = groups * 8;
         if done < words.len() {

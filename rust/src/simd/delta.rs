@@ -80,12 +80,16 @@ mod avx2 {
         let mut carry = 0u32; // original w[i-1] for the current group
         let mut i = 0usize;
         while i + 8 <= n {
-            let cur = _mm256_loadu_si256(p.add(i) as *const __m256i);
-            let rot = _mm256_permutevar8x32_epi32(cur, rot_idx);
-            let prev = _mm256_blend_epi32::<0x01>(rot, _mm256_set1_epi32(carry as i32));
-            carry = _mm256_extract_epi32::<7>(cur) as u32;
-            let z = zigzag_epi32(_mm256_sub_epi32(cur, prev));
-            _mm256_storeu_si256(p.add(i) as *mut __m256i, z);
+            // SAFETY: AVX2 is enabled for this fn; i + 8 <= n keeps the
+            // unaligned load/store inside the slice.
+            unsafe {
+                let cur = _mm256_loadu_si256(p.add(i) as *const __m256i);
+                let rot = _mm256_permutevar8x32_epi32(cur, rot_idx);
+                let prev = _mm256_blend_epi32::<0x01>(rot, _mm256_set1_epi32(carry as i32));
+                carry = _mm256_extract_epi32::<7>(cur) as u32;
+                let z = zigzag_epi32(_mm256_sub_epi32(cur, prev));
+                _mm256_storeu_si256(p.add(i) as *mut __m256i, z);
+            }
             i += 8;
         }
         let mut prev = carry;
@@ -109,23 +113,29 @@ mod avx2 {
     pub(super) unsafe fn decode(words: &mut [u32]) {
         let n = words.len();
         let p = words.as_mut_ptr();
-        let mut accv = _mm256_setzero_si256(); // running prefix, all lanes
+        // SAFETY: AVX2 is enabled for this fn (register-only op).
+        let mut accv = unsafe { _mm256_setzero_si256() }; // running prefix, all lanes
         let mut i = 0usize;
         while i + 8 <= n {
-            let z = _mm256_loadu_si256(p.add(i) as *const __m256i);
-            let mut d = unzigzag_epi32(z);
-            d = _mm256_add_epi32(d, _mm256_slli_si256::<4>(d));
-            d = _mm256_add_epi32(d, _mm256_slli_si256::<8>(d));
-            // Carry the low 128-lane's total (element 3) into the high
-            // lane: broadcast it, then zero the low half.
-            let low_total = _mm256_permutevar8x32_epi32(d, _mm256_set1_epi32(3));
-            d = _mm256_add_epi32(d, _mm256_permute2x128_si256::<0x28>(low_total, low_total));
-            d = _mm256_add_epi32(d, accv);
-            _mm256_storeu_si256(p.add(i) as *mut __m256i, d);
-            accv = _mm256_permutevar8x32_epi32(d, _mm256_set1_epi32(7));
+            // SAFETY: AVX2 is enabled for this fn; i + 8 <= n keeps the
+            // unaligned load/store inside the slice.
+            unsafe {
+                let z = _mm256_loadu_si256(p.add(i) as *const __m256i);
+                let mut d = unzigzag_epi32(z);
+                d = _mm256_add_epi32(d, _mm256_slli_si256::<4>(d));
+                d = _mm256_add_epi32(d, _mm256_slli_si256::<8>(d));
+                // Carry the low 128-lane's total (element 3) into the
+                // high lane: broadcast it, then zero the low half.
+                let low_total = _mm256_permutevar8x32_epi32(d, _mm256_set1_epi32(3));
+                d = _mm256_add_epi32(d, _mm256_permute2x128_si256::<0x28>(low_total, low_total));
+                d = _mm256_add_epi32(d, accv);
+                _mm256_storeu_si256(p.add(i) as *mut __m256i, d);
+                accv = _mm256_permutevar8x32_epi32(d, _mm256_set1_epi32(7));
+            }
             i += 8;
         }
-        let mut acc = _mm256_extract_epi32::<0>(accv) as u32;
+        // SAFETY: AVX2 is enabled for this fn (register-only op).
+        let mut acc = unsafe { _mm256_extract_epi32::<0>(accv) } as u32;
         for w in words[i..].iter_mut() {
             let d = ((*w >> 1) as i32) ^ -((*w & 1) as i32);
             acc = acc.wrapping_add(d as u32);

@@ -173,7 +173,8 @@ pub(crate) mod x86 {
     #[target_feature(enable = "avx2")]
     #[inline]
     pub unsafe fn zigzag_epi32(b: __m256i) -> __m256i {
-        _mm256_xor_si256(_mm256_slli_epi32::<1>(b), _mm256_srai_epi32::<31>(b))
+        // SAFETY: AVX2 is enabled for this fn; register-only intrinsics.
+        unsafe { _mm256_xor_si256(_mm256_slli_epi32::<1>(b), _mm256_srai_epi32::<31>(b)) }
     }
 
     /// Lane-wise `unzigzag`: `((z >> 1) as i32) ^ -((z & 1) as i32)`.
@@ -183,10 +184,16 @@ pub(crate) mod x86 {
     #[target_feature(enable = "avx2")]
     #[inline]
     pub unsafe fn unzigzag_epi32(z: __m256i) -> __m256i {
-        _mm256_xor_si256(
-            _mm256_srli_epi32::<1>(z),
-            _mm256_sub_epi32(_mm256_setzero_si256(), _mm256_and_si256(z, _mm256_set1_epi32(1))),
-        )
+        // SAFETY: AVX2 is enabled for this fn; register-only intrinsics.
+        unsafe {
+            _mm256_xor_si256(
+                _mm256_srli_epi32::<1>(z),
+                _mm256_sub_epi32(
+                    _mm256_setzero_si256(),
+                    _mm256_and_si256(z, _mm256_set1_epi32(1)),
+                ),
+            )
+        }
     }
 
     /// Expand the low 8 bits of `bits` into 8 full 32-bit lane masks
@@ -197,9 +204,12 @@ pub(crate) mod x86 {
     #[target_feature(enable = "avx2")]
     #[inline]
     pub unsafe fn lane_mask_from_bits(bits: u32) -> __m256i {
-        let b = _mm256_set1_epi32(bits as i32);
-        let sel = _mm256_setr_epi32(1, 2, 4, 8, 16, 32, 64, 128);
-        _mm256_cmpeq_epi32(_mm256_and_si256(b, sel), sel)
+        // SAFETY: AVX2 is enabled for this fn; register-only intrinsics.
+        unsafe {
+            let b = _mm256_set1_epi32(bits as i32);
+            let sel = _mm256_setr_epi32(1, 2, 4, 8, 16, 32, 64, 128);
+            _mm256_cmpeq_epi32(_mm256_and_si256(b, sel), sel)
+        }
     }
 
     /// Compress two 4x64-bit lane masks (from `_mm256_cmp_pd`) into one
@@ -213,7 +223,10 @@ pub(crate) mod x86 {
     pub unsafe fn join_pd_masks(lo: __m256d, hi: __m256d) -> __m256 {
         // Each 64-bit mask is two identical 32-bit halves; pick one half
         // per f64 lane, then permute the 64-bit quarters back in order.
-        let s = _mm256_shuffle_ps::<0x88>(_mm256_castpd_ps(lo), _mm256_castpd_ps(hi));
-        _mm256_castpd_ps(_mm256_permute4x64_pd::<0xD8>(_mm256_castps_pd(s)))
+        // SAFETY: AVX2 is enabled for this fn; register-only intrinsics.
+        unsafe {
+            let s = _mm256_shuffle_ps::<0x88>(_mm256_castpd_ps(lo), _mm256_castpd_ps(hi));
+            _mm256_castpd_ps(_mm256_permute4x64_pd::<0xD8>(_mm256_castps_pd(s)))
+        }
     }
 }

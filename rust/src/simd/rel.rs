@@ -87,6 +87,7 @@ pub fn dequantize_block(
 
 /// Scalar twin of [`dequantize_block`]. Must use the same pow2 the
 /// encoder verified with.
+// lint: allow(float-cast) -- the Native bin->f32 convert is the reference reconstruction rounding
 pub fn dequantize_block_scalar(
     words: &[u32],
     mask: u64,
@@ -140,20 +141,24 @@ mod avx2 {
     #[target_feature(enable = "avx2")]
     #[inline]
     pub(super) unsafe fn cvtpd_i32_rust(x: __m256d) -> __m128i {
-        let raw = _mm256_cvttpd_epi32(x);
-        let bad = _mm256_cmp_pd::<_CMP_NLT_UQ>(x, _mm256_set1_pd(2147483648.0));
-        if _mm256_movemask_pd(bad) == 0 {
-            return raw;
+        // SAFETY: AVX2 is enabled for this fn; the only memory touched
+        // is the two local stack arrays, both exactly 16 bytes.
+        unsafe {
+            let raw = _mm256_cvttpd_epi32(x);
+            let bad = _mm256_cmp_pd::<_CMP_NLT_UQ>(x, _mm256_set1_pd(2147483648.0));
+            if _mm256_movemask_pd(bad) == 0 {
+                return raw;
+            }
+            let mut lanes = [0.0f64; 4];
+            _mm256_storeu_pd(lanes.as_mut_ptr(), x);
+            let fixed = [
+                lanes[0] as i32,
+                lanes[1] as i32,
+                lanes[2] as i32,
+                lanes[3] as i32,
+            ];
+            _mm_loadu_si128(fixed.as_ptr() as *const __m128i)
         }
-        let mut lanes = [0.0f64; 4];
-        _mm256_storeu_pd(lanes.as_mut_ptr(), x);
-        let fixed = [
-            lanes[0] as i32,
-            lanes[1] as i32,
-            lanes[2] as i32,
-            lanes[3] as i32,
-        ];
-        _mm_loadu_si128(fixed.as_ptr() as *const __m128i)
     }
 
     /// 4-lane `pow2approx_from_bins`: every step is the same single
@@ -165,19 +170,22 @@ mod avx2 {
     #[target_feature(enable = "avx2")]
     #[inline]
     unsafe fn pow2approx4(bin: __m128i, l2eb: f64) -> __m128 {
-        let arg = _mm256_mul_pd(_mm256_cvtepi32_pd(bin), _mm256_set1_pd(l2eb));
-        let biased = _mm256_add_pd(arg, _mm256_set1_pd(127.0));
-        let expo = cvtpd_i32_rust(biased);
-        let frac64 = _mm256_add_pd(
-            arg,
-            _mm256_cvtepi32_pd(_mm_sub_epi32(_mm_set1_epi32(128), expo)),
-        );
-        let frac_i = _mm_castps_si128(_mm256_cvtpd_ps(frac64));
-        let exp_i = _mm_or_si128(
-            _mm_slli_epi32::<23>(expo),
-            _mm_and_si128(frac_i, _mm_set1_epi32(MANTISSA_MASK_F32)),
-        );
-        _mm_castsi128_ps(exp_i)
+        // SAFETY: AVX2 is enabled for this fn; register-only intrinsics.
+        unsafe {
+            let arg = _mm256_mul_pd(_mm256_cvtepi32_pd(bin), _mm256_set1_pd(l2eb));
+            let biased = _mm256_add_pd(arg, _mm256_set1_pd(127.0));
+            let expo = cvtpd_i32_rust(biased);
+            let frac64 = _mm256_add_pd(
+                arg,
+                _mm256_cvtepi32_pd(_mm_sub_epi32(_mm_set1_epi32(128), expo)),
+            );
+            let frac_i = _mm_castps_si128(_mm256_cvtpd_ps(frac64));
+            let exp_i = _mm_or_si128(
+                _mm_slli_epi32::<23>(expo),
+                _mm_and_si128(frac_i, _mm_set1_epi32(MANTISSA_MASK_F32)),
+            );
+            _mm_castsi128_ps(exp_i)
+        }
     }
 
     /// 8-lane `pow2approx_from_bins` over an i32 bin vector.
@@ -187,9 +195,12 @@ mod avx2 {
     #[target_feature(enable = "avx2")]
     #[inline]
     unsafe fn pow2approx8(bin: __m256i, l2eb: f64) -> __m256 {
-        let lo = pow2approx4(_mm256_castsi256_si128(bin), l2eb);
-        let hi = pow2approx4(_mm256_extracti128_si256::<1>(bin), l2eb);
-        _mm256_insertf128_ps::<1>(_mm256_castps128_ps256(lo), hi)
+        // SAFETY: AVX2 is enabled for this fn; register-only intrinsics.
+        unsafe {
+            let lo = pow2approx4(_mm256_castsi256_si128(bin), l2eb);
+            let hi = pow2approx4(_mm256_extracti128_si256::<1>(bin), l2eb);
+            _mm256_insertf128_ps::<1>(_mm256_castps128_ps256(lo), hi)
+        }
     }
 
     /// 8-lane REL (Approx) quantize; returns the 8 outlier bits.
@@ -198,63 +209,69 @@ mod avx2 {
     /// AVX2; `xp`/`outp` must be valid for 8 f32/u32 reads/writes.
     #[target_feature(enable = "avx2")]
     #[inline]
+    // lint: allow(float-cast) -- lane constants are widened with the same single roundings as the scalar twin
     unsafe fn quantize8(xp: *const f32, p: RelParams, protected: bool, outp: *mut u32) -> u32 {
-        let v = _mm256_loadu_ps(xp);
-        let ax = _mm256_and_ps(v, _mm256_castsi256_ps(_mm256_set1_epi32(0x7FFF_FFFF)));
-        // sign = (v < 0.0) as i32: ordered compare, NaN and -0.0 -> 0.
-        let sign01 = _mm256_and_si256(
-            _mm256_castps_si256(_mm256_cmp_ps::<_CMP_LT_OQ>(v, _mm256_setzero_ps())),
-            _mm256_set1_epi32(1),
-        );
-        let finite = _mm256_cmp_ps::<_CMP_LT_OQ>(ax, _mm256_set1_ps(f32::INFINITY));
-        let big = _mm256_cmp_ps::<_CMP_GE_OQ>(ax, _mm256_set1_ps(REL_MIN_MAG));
-        // log2approxf lane-wise: ax has the sign bit clear, so the
-        // scalar's arithmetic shift == this logical shift.
-        let bits = _mm256_castps_si256(ax);
-        let expo = _mm256_srli_epi32::<23>(bits);
-        let frac = _mm256_castsi256_ps(_mm256_or_si256(
-            _mm256_set1_epi32(127 << 23),
-            _mm256_and_si256(bits, _mm256_set1_epi32(MANTISSA_MASK_F32)),
-        ));
-        let lg = _mm256_add_ps(
-            frac,
-            _mm256_cvtepi32_ps(_mm256_sub_epi32(expo, _mm256_set1_epi32(128))),
-        );
-        let binf = _mm256_round_ps::<{ _MM_FROUND_TO_NEAREST_INT | _MM_FROUND_NO_EXC }>(
-            _mm256_mul_ps(lg, _mm256_set1_ps(p.inv_l2eb)),
-        );
-        let in_range = _mm256_and_ps(
-            _mm256_cmp_ps::<_CMP_LT_OQ>(binf, _mm256_set1_ps(MAXBIN_REL as f32)),
-            _mm256_cmp_ps::<_CMP_GT_OQ>(binf, _mm256_set1_ps(-(MAXBIN_REL as f32))),
-        );
-        let usable = _mm256_and_ps(_mm256_and_ps(in_range, finite), big);
-        let binc = _mm256_and_ps(binf, usable);
-        let bin = _mm256_cvttps_epi32(binc);
-        let recon = pow2approx8(bin, p.l2eb as f64);
-        let quant = if protected {
-            // err = |f64(ax) - f64(recon)| <= f64(eb) * f64(ax).
-            let abs_mask = _mm256_set1_pd(f64::from_bits(0x7FFF_FFFF_FFFF_FFFF));
-            let eb = _mm256_set1_pd(p.eb as f64);
-            let ax_lo = _mm256_cvtps_pd(_mm256_castps256_ps128(ax));
-            let ax_hi = _mm256_cvtps_pd(_mm256_extractf128_ps::<1>(ax));
-            let re_lo = _mm256_cvtps_pd(_mm256_castps256_ps128(recon));
-            let re_hi = _mm256_cvtps_pd(_mm256_extractf128_ps::<1>(recon));
-            let err_lo = _mm256_and_pd(_mm256_sub_pd(ax_lo, re_lo), abs_mask);
-            let err_hi = _mm256_and_pd(_mm256_sub_pd(ax_hi, re_hi), abs_mask);
-            let ok = join_pd_masks(
-                _mm256_cmp_pd::<_CMP_LE_OQ>(err_lo, _mm256_mul_pd(eb, ax_lo)),
-                _mm256_cmp_pd::<_CMP_LE_OQ>(err_hi, _mm256_mul_pd(eb, ax_hi)),
+        // SAFETY: AVX2 is enabled for this fn; the only memory the
+        // intrinsics touch is the caller-guaranteed 8-lane windows at
+        // `xp` and `outp` (unaligned load/store).
+        unsafe {
+            let v = _mm256_loadu_ps(xp);
+            let ax = _mm256_and_ps(v, _mm256_castsi256_ps(_mm256_set1_epi32(0x7FFF_FFFF)));
+            // sign = (v < 0.0) as i32: ordered compare, NaN and -0.0 -> 0.
+            let sign01 = _mm256_and_si256(
+                _mm256_castps_si256(_mm256_cmp_ps::<_CMP_LT_OQ>(v, _mm256_setzero_ps())),
+                _mm256_set1_epi32(1),
             );
-            _mm256_and_ps(usable, ok)
-        } else {
-            usable
-        };
-        // packed = (zigzag(bin) << 1) | sign; outlier lanes raw bits.
-        let packed = _mm256_or_si256(_mm256_slli_epi32::<1>(zigzag_epi32(bin)), sign01);
-        let quant_i = _mm256_castps_si256(quant);
-        let words = _mm256_blendv_epi8(_mm256_castps_si256(v), packed, quant_i);
-        _mm256_storeu_si256(outp as *mut __m256i, words);
-        !(_mm256_movemask_ps(quant) as u32) & 0xFF
+            let finite = _mm256_cmp_ps::<_CMP_LT_OQ>(ax, _mm256_set1_ps(f32::INFINITY));
+            let big = _mm256_cmp_ps::<_CMP_GE_OQ>(ax, _mm256_set1_ps(REL_MIN_MAG));
+            // log2approxf lane-wise: ax has the sign bit clear, so the
+            // scalar's arithmetic shift == this logical shift.
+            let bits = _mm256_castps_si256(ax);
+            let expo = _mm256_srli_epi32::<23>(bits);
+            let frac = _mm256_castsi256_ps(_mm256_or_si256(
+                _mm256_set1_epi32(127 << 23),
+                _mm256_and_si256(bits, _mm256_set1_epi32(MANTISSA_MASK_F32)),
+            ));
+            let lg = _mm256_add_ps(
+                frac,
+                _mm256_cvtepi32_ps(_mm256_sub_epi32(expo, _mm256_set1_epi32(128))),
+            );
+            let binf = _mm256_round_ps::<{ _MM_FROUND_TO_NEAREST_INT | _MM_FROUND_NO_EXC }>(
+                _mm256_mul_ps(lg, _mm256_set1_ps(p.inv_l2eb)),
+            );
+            let in_range = _mm256_and_ps(
+                _mm256_cmp_ps::<_CMP_LT_OQ>(binf, _mm256_set1_ps(MAXBIN_REL as f32)),
+                _mm256_cmp_ps::<_CMP_GT_OQ>(binf, _mm256_set1_ps(-(MAXBIN_REL as f32))),
+            );
+            let usable = _mm256_and_ps(_mm256_and_ps(in_range, finite), big);
+            let binc = _mm256_and_ps(binf, usable);
+            let bin = _mm256_cvttps_epi32(binc);
+            let recon = pow2approx8(bin, p.l2eb as f64);
+            let quant = if protected {
+                // err = |f64(ax) - f64(recon)| <= f64(eb) * f64(ax).
+                let abs_mask = _mm256_set1_pd(f64::from_bits(0x7FFF_FFFF_FFFF_FFFF));
+                let eb = _mm256_set1_pd(p.eb as f64);
+                let ax_lo = _mm256_cvtps_pd(_mm256_castps256_ps128(ax));
+                let ax_hi = _mm256_cvtps_pd(_mm256_extractf128_ps::<1>(ax));
+                let re_lo = _mm256_cvtps_pd(_mm256_castps256_ps128(recon));
+                let re_hi = _mm256_cvtps_pd(_mm256_extractf128_ps::<1>(recon));
+                let err_lo = _mm256_and_pd(_mm256_sub_pd(ax_lo, re_lo), abs_mask);
+                let err_hi = _mm256_and_pd(_mm256_sub_pd(ax_hi, re_hi), abs_mask);
+                let ok = join_pd_masks(
+                    _mm256_cmp_pd::<_CMP_LE_OQ>(err_lo, _mm256_mul_pd(eb, ax_lo)),
+                    _mm256_cmp_pd::<_CMP_LE_OQ>(err_hi, _mm256_mul_pd(eb, ax_hi)),
+                );
+                _mm256_and_ps(usable, ok)
+            } else {
+                usable
+            };
+            // packed = (zigzag(bin) << 1) | sign; outlier lanes raw bits.
+            let packed = _mm256_or_si256(_mm256_slli_epi32::<1>(zigzag_epi32(bin)), sign01);
+            let quant_i = _mm256_castps_si256(quant);
+            let words = _mm256_blendv_epi8(_mm256_castps_si256(v), packed, quant_i);
+            _mm256_storeu_si256(outp as *mut __m256i, words);
+            !(_mm256_movemask_ps(quant) as u32) & 0xFF
+        }
     }
 
     /// AVX2 REL (Approx) quantize block kernel (scalar twin on tails).
@@ -271,7 +288,11 @@ mod avx2 {
         let groups = x.len() / 8;
         let mut mask = 0u64;
         for g in 0..groups {
-            let bits = quantize8(x.as_ptr().add(g * 8), p, protected, out.as_mut_ptr().add(g * 8));
+            // SAFETY: g * 8 + 8 <= x.len() == out.len(), so both
+            // pointers are valid for one 8-lane group.
+            let bits = unsafe {
+                quantize8(x.as_ptr().add(g * 8), p, protected, out.as_mut_ptr().add(g * 8))
+            };
             mask |= (bits as u64) << (g * 8);
         }
         let done = groups * 8;
@@ -288,16 +309,21 @@ mod avx2 {
     /// AVX2; `wp`/`outp` must be valid for 8 u32/f32 reads/writes.
     #[target_feature(enable = "avx2")]
     #[inline]
+    // lint: allow(float-cast) -- l2eb is widened once, the same rounding the scalar pow2 performs
     unsafe fn dequantize8(wp: *const u32, obits: u32, p: RelParams, outp: *mut f32) {
-        let w = _mm256_loadu_si256(wp as *const __m256i);
-        // Scalar negation of any f32 (NaN included) flips the sign bit;
-        // xor with sign<<31 is the same operation.
-        let sign = _mm256_slli_epi32::<31>(_mm256_and_si256(w, _mm256_set1_epi32(1)));
-        let bin = unzigzag_epi32(_mm256_srli_epi32::<1>(w));
-        let mag = pow2approx8(bin, p.l2eb as f64);
-        let vals = _mm256_xor_si256(_mm256_castps_si256(mag), sign);
-        let om = lane_mask_from_bits(obits);
-        _mm256_storeu_si256(outp as *mut __m256i, _mm256_blendv_epi8(vals, w, om));
+        // SAFETY: AVX2 is enabled for this fn; the only memory touched
+        // is the caller-guaranteed 8-lane windows at `wp` and `outp`.
+        unsafe {
+            let w = _mm256_loadu_si256(wp as *const __m256i);
+            // Scalar negation of any f32 (NaN included) flips the sign
+            // bit; xor with sign<<31 is the same operation.
+            let sign = _mm256_slli_epi32::<31>(_mm256_and_si256(w, _mm256_set1_epi32(1)));
+            let bin = unzigzag_epi32(_mm256_srli_epi32::<1>(w));
+            let mag = pow2approx8(bin, p.l2eb as f64);
+            let vals = _mm256_xor_si256(_mm256_castps_si256(mag), sign);
+            let om = lane_mask_from_bits(obits);
+            _mm256_storeu_si256(outp as *mut __m256i, _mm256_blendv_epi8(vals, w, om));
+        }
     }
 
     /// AVX2 REL (Approx) dequantize block kernel (scalar tails).
@@ -314,7 +340,11 @@ mod avx2 {
         let groups = words.len() / 8;
         for g in 0..groups {
             let obits = ((mask >> (g * 8)) & 0xFF) as u32;
-            dequantize8(words.as_ptr().add(g * 8), obits, p, out.as_mut_ptr().add(g * 8));
+            // SAFETY: g * 8 + 8 <= words.len() == out.len(), so both
+            // pointers are valid for one 8-lane group.
+            unsafe {
+                dequantize8(words.as_ptr().add(g * 8), obits, p, out.as_mut_ptr().add(g * 8));
+            }
         }
         let done = groups * 8;
         if done < words.len() {

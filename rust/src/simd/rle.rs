@@ -83,11 +83,16 @@ mod avx2 {
     #[target_feature(enable = "avx2")]
     pub(super) unsafe fn zero_run_end(data: &[u8], mut i: usize) -> usize {
         let n = data.len();
-        let zero = _mm256_setzero_si256();
+        // SAFETY: AVX2 is enabled for this fn (register-only op).
+        let zero = unsafe { _mm256_setzero_si256() };
         while i + 32 <= n {
-            let v = _mm256_loadu_si256(data.as_ptr().add(i) as *const __m256i);
-            // Bit k set <=> byte k == 0.
-            let m = _mm256_movemask_epi8(_mm256_cmpeq_epi8(v, zero)) as u32;
+            // SAFETY: AVX2 is enabled for this fn; i + 32 <= n keeps the
+            // unaligned load inside the slice.
+            let m = unsafe {
+                let v = _mm256_loadu_si256(data.as_ptr().add(i) as *const __m256i);
+                // Bit k set <=> byte k == 0.
+                _mm256_movemask_epi8(_mm256_cmpeq_epi8(v, zero)) as u32
+            };
             if m == u32::MAX {
                 i += 32;
             } else {
@@ -104,10 +109,15 @@ mod avx2 {
     #[target_feature(enable = "avx2")]
     pub(super) unsafe fn literal_run_end(data: &[u8], mut i: usize) -> usize {
         let n = data.len();
-        let zero = _mm256_setzero_si256();
+        // SAFETY: AVX2 is enabled for this fn (register-only op).
+        let zero = unsafe { _mm256_setzero_si256() };
         while i + 32 <= n {
-            let v = _mm256_loadu_si256(data.as_ptr().add(i) as *const __m256i);
-            let m = _mm256_movemask_epi8(_mm256_cmpeq_epi8(v, zero)) as u32;
+            // SAFETY: AVX2 is enabled for this fn; i + 32 <= n keeps the
+            // unaligned load inside the slice.
+            let m = unsafe {
+                let v = _mm256_loadu_si256(data.as_ptr().add(i) as *const __m256i);
+                _mm256_movemask_epi8(_mm256_cmpeq_epi8(v, zero)) as u32
+            };
             if m == 0 {
                 i += 32;
             } else {

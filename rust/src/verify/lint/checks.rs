@@ -1,0 +1,210 @@
+//! The per-file token checks: panic-free fault surface, range-index
+//! discipline, float-cast discipline, and SAFETY comments — plus the
+//! waiver-hygiene pass.
+//!
+//! All token matching runs on the scanner's *code view* (comments
+//! stripped, literal contents blanked), so a `panic!` inside an error
+//! message or a doc example can never fire.
+
+use super::scanner::ScannedFile;
+use super::{is_designated, is_float_domain, Check, Diagnostic};
+
+/// Forbidden tokens on the designated fault surface. `.unwrap()` is
+/// matched with its closing paren so `unwrap_or(..)` and friends stay
+/// legal; the macros match with their opening paren so an identifier
+/// like `panic_free` does not.
+const PANIC_TOKENS: [&str; 6] = [
+    ".unwrap()",
+    ".expect(",
+    "panic!(",
+    "unreachable!(",
+    "todo!(",
+    "unimplemented!(",
+];
+
+pub(super) fn run(sf: &mut ScannedFile, diags: &mut Vec<Diagnostic>) {
+    let designated = is_designated(&sf.path);
+    let float_domain = is_float_domain(&sf.path);
+
+    for ln in 0..sf.lines.len() {
+        let is_test = sf.lines[ln].is_test;
+        let code = sf.lines[ln].code.clone();
+        let trimmed = code.trim_start();
+        let is_attr = trimmed.starts_with("#[") || trimmed.starts_with("#!");
+
+        if designated && !is_test && !is_attr {
+            for tok in PANIC_TOKENS {
+                if code.contains(tok) && !sf.waived(Check::PanicFree, ln) {
+                    push(sf, diags, ln, Check::PanicFree, format!(
+                        "`{tok}` on the designated fault surface: return a typed error instead"
+                    ));
+                    break;
+                }
+            }
+            if range_index_on(&code, sf.lines[ln].sq_depth_in)
+                && !sf.waived(Check::RangeIndex, ln)
+            {
+                push(sf, diags, ln, Check::RangeIndex, String::from(
+                    "range indexing on the designated fault surface: use `get(..)` \
+                     or waive with the bound argument",
+                ));
+            }
+        }
+
+        if float_domain && !is_test && !is_attr && float_cast_on(&code)
+            && !sf.waived(Check::FloatCast, ln)
+        {
+            push(sf, diags, ln, Check::FloatCast, String::from(
+                "`as f32`/`as f64` rounding cast in the error-bound domain: \
+                 waive with the rounding argument",
+            ));
+        }
+
+        // SAFETY comments are required everywhere, including tests.
+        if has_word(&code, "unsafe")
+            && !safety_annotated(sf, ln)
+            && !sf.waived(Check::SafetyComment, ln)
+        {
+            push(sf, diags, ln, Check::SafetyComment, String::from(
+                "`unsafe` without an adjacent `// SAFETY:` (or `# Safety` doc) \
+                 stating the precondition",
+            ));
+        }
+    }
+}
+
+fn push(
+    sf: &ScannedFile,
+    diags: &mut Vec<Diagnostic>,
+    ln: usize,
+    check: Check,
+    message: String,
+) {
+    diags.push(Diagnostic {
+        path: sf.path.clone(),
+        line: ln + 1,
+        check,
+        message,
+        excerpt: sf.excerpt(ln),
+    });
+}
+
+/// Report every waiver, and flag the dead ones. Must run after every
+/// other check so usage counts are final.
+pub(super) fn report_waivers(
+    sf: &ScannedFile,
+    diags: &mut Vec<Diagnostic>,
+    out: &mut Vec<super::WaiverReport>,
+) {
+    for w in &sf.waivers {
+        if w.used == 0 {
+            diags.push(Diagnostic {
+                path: sf.path.clone(),
+                line: w.line + 1,
+                check: Check::Waiver,
+                message: String::from(
+                    "waiver suppressed nothing: the site is clean, delete the waiver",
+                ),
+                excerpt: sf.excerpt(w.line),
+            });
+        }
+        out.push(super::WaiverReport {
+            path: sf.path.clone(),
+            line: w.line + 1,
+            checks: w.checks.clone(),
+            reason: w.reason.clone(),
+            suppressed: w.used,
+        });
+    }
+}
+
+/// `..` while inside square brackets (carrying depth across lines).
+fn range_index_on(code: &str, sq_depth_in: usize) -> bool {
+    let mut depth = sq_depth_in;
+    let chars: Vec<char> = code.chars().collect();
+    let mut i = 0;
+    while i < chars.len() {
+        match chars[i] {
+            '[' => depth += 1,
+            ']' => depth = depth.saturating_sub(1),
+            '.' if chars.get(i + 1) == Some(&'.') && depth > 0 => return true,
+            _ => {}
+        }
+        i += 1;
+    }
+    false
+}
+
+/// Word-bounded `as` followed by `f32` or `f64`.
+fn float_cast_on(code: &str) -> bool {
+    let bytes = code.as_bytes();
+    let mut start = 0;
+    while let Some(pos) = code[start..].find("as") {
+        let i = start + pos;
+        start = i + 2;
+        let before_ok = i == 0 || !is_word(bytes[i - 1]);
+        let after = &code[i + 2..];
+        if !before_ok || !after.starts_with(|c: char| c.is_whitespace()) {
+            continue;
+        }
+        let t = after.trim_start();
+        for f in ["f32", "f64"] {
+            if t.starts_with(f) && !t[f.len()..].starts_with(|c: char| is_word(c as u8)) {
+                return true;
+            }
+        }
+    }
+    false
+}
+
+fn is_word(b: u8) -> bool {
+    b.is_ascii_alphanumeric() || b == b'_'
+}
+
+fn has_word(code: &str, word: &str) -> bool {
+    let bytes = code.as_bytes();
+    let mut start = 0;
+    while let Some(pos) = code[start..].find(word) {
+        let i = start + pos;
+        start = i + word.len();
+        let before_ok = i == 0 || !is_word(bytes[i - 1]);
+        let after_ok = i + word.len() >= bytes.len() || !is_word(bytes[i + word.len()]);
+        if before_ok && after_ok {
+            return true;
+        }
+    }
+    false
+}
+
+/// Is the `unsafe` on line `ln` annotated? Accepted forms: a trailing
+/// `// SAFETY:` on the same line, or a contiguous comment block
+/// immediately above (attribute lines are transparent) containing
+/// `SAFETY:` or a `# Safety` doc heading.
+fn safety_annotated(sf: &ScannedFile, ln: usize) -> bool {
+    let marks = |t: &str| t.contains("SAFETY:") || t.contains("# Safety");
+    if sf.lines[ln]
+        .comment
+        .as_ref()
+        .is_some_and(|c| marks(&c.text))
+    {
+        return true;
+    }
+    let mut i = ln;
+    while i > 0 {
+        i -= 1;
+        let line = &sf.lines[i];
+        let code = line.code.trim();
+        if code.starts_with("#[") || code.starts_with("#!") {
+            continue; // attributes sit between docs and the item
+        }
+        if !code.is_empty() {
+            return false;
+        }
+        match &line.comment {
+            Some(c) if marks(&c.text) => return true,
+            Some(_) => continue,
+            None => return false, // blank line ends the block
+        }
+    }
+    false
+}

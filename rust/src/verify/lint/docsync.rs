@@ -1,0 +1,772 @@
+//! The `wire-consts` check: wire magics and layout constants are
+//! single-sourced, wire-code families collision-free, and the module
+//! docs' layout tables agree with the constants.
+//!
+//! The doc cross-checks anchor on the files that define the wire
+//! formats: the server protocol module (defines `FRAME_MAGIC`) and the
+//! container module (defines `PARITY_MAGIC`). The docs there are
+//! load-bearing — readers implement against them — so a table that
+//! drifts from the constants is treated exactly like wrong code.
+
+use super::scanner::ScannedFile;
+use super::{Check, Diagnostic};
+
+/// Byte-literal magics that must be written out exactly once, in their
+/// defining const.
+const WATCHED_MAGICS: [&str; 9] = [
+    "LCZ1", "LCZ2", "LCZ3", "LCZ4", "LCPF", "LCS1", "LCX3", "LCX4", "LCZ4FIN\n",
+];
+
+/// Layout constants that must have exactly one definition repo-wide.
+const WATCHED_CONSTS: [&str; 12] = [
+    "FRAME_HEADER_LEN",
+    "REQUEST_PREFIX_LEN",
+    "COMPRESS_PARAMS_LEN",
+    "ENTRY_LEN",
+    "TRAILER_LEN",
+    "TRAILER_LEN_V4",
+    "PARITY_ENTRY_LEN",
+    "PARITY_FRAME_FIXED",
+    "CHUNK_FRAME_HEADER_LEN",
+    "CHUNK_FRAME_HEADER_LEN_V2",
+    "HEADER_FIXED_LEN",
+    "DEFAULT_PARITY_GROUP",
+];
+
+struct ConstDef {
+    name: String,
+    value: Option<u64>,
+    line: usize, // 0-based
+}
+
+pub(super) fn run(files: &mut Vec<ScannedFile>, diags: &mut Vec<Diagnostic>) {
+    // Phase 1: collect const definitions and magic byte-literal sites.
+    let mut consts: Vec<Vec<ConstDef>> = Vec::with_capacity(files.len());
+    // (file idx, 0-based line, magic, is a const definition line)
+    let mut magic_sites: Vec<(usize, usize, String, bool)> = Vec::new();
+    for (fi, sf) in files.iter().enumerate() {
+        let mut defs = Vec::new();
+        for (ln, line) in sf.lines.iter().enumerate() {
+            if line.is_test {
+                continue;
+            }
+            if let Some(def) = parse_const(&line.code, ln) {
+                defs.push(def);
+            }
+            for content in &line.byte_strs {
+                if WATCHED_MAGICS.contains(&content.as_str()) {
+                    let is_def = has_word(&line.code, "const");
+                    magic_sites.push((fi, ln, content.clone(), is_def));
+                }
+            }
+        }
+        consts.push(defs);
+    }
+
+    // Global const value map (watched names are single-definition, so
+    // first-wins is unambiguous once the duplicate check passes).
+    let value_of = |name: &str| -> Option<u64> {
+        consts
+            .iter()
+            .flatten()
+            .find(|d| d.name == name)
+            .and_then(|d| d.value)
+    };
+
+    // Phase 2a: each watched magic spelled out at most once, and only
+    // in its const definition — everything else must reference the
+    // const, or corruption tests drift from the real wire bytes.
+    for magic in WATCHED_MAGICS {
+        let mut seen_def = false;
+        for (fi, ln, m, is_def) in &magic_sites {
+            if m.as_str() != magic {
+                continue;
+            }
+            let (fi, ln) = (*fi, *ln);
+            if *is_def {
+                if seen_def {
+                    emit(
+                        &mut files[fi],
+                        diags,
+                        ln,
+                        format!("wire magic {magic:?} defined more than once"),
+                    );
+                }
+                seen_def = true;
+            } else {
+                emit(
+                    &mut files[fi],
+                    diags,
+                    ln,
+                    format!("wire magic {magic:?} spelled out; reference its const"),
+                );
+            }
+        }
+    }
+
+    // Phase 2b: watched layout constants defined exactly once.
+    for name in WATCHED_CONSTS {
+        let mut first = true;
+        for fi in 0..files.len() {
+            let hits: Vec<usize> = consts[fi]
+                .iter()
+                .filter(|d| d.name == name)
+                .map(|d| d.line)
+                .collect();
+            for ln in hits {
+                if !first {
+                    emit(
+                        &mut files[fi],
+                        diags,
+                        ln,
+                        format!("layout constant `{name}` defined more than once"),
+                    );
+                }
+                first = false;
+            }
+        }
+    }
+
+    // Phase 2c: wire-code families must not collide on values.
+    for fi in 0..files.len() {
+        for family in ["REQ_", "REP_", "ERR_"] {
+            let mut seen: Vec<(u64, String, usize)> = Vec::new();
+            let fam: Vec<(String, Option<u64>, usize)> = consts[fi]
+                .iter()
+                .filter(|d| d.name.starts_with(family))
+                .map(|d| (d.name.clone(), d.value, d.line))
+                .collect();
+            for (name, value, line) in fam {
+                let Some(v) = value else { continue };
+                if let Some((_, other, _)) = seen.iter().find(|(sv, _, _)| *sv == v) {
+                    let msg = format!(
+                        "wire code collision: `{name}` and `{other}` are both {v}"
+                    );
+                    emit(&mut files[fi], diags, line, msg);
+                } else {
+                    seen.push((v, name, line));
+                }
+            }
+        }
+    }
+
+    // Phase 3: doc layout tables on the trigger files.
+    for fi in 0..files.len() {
+        let defines = |n: &str| consts[fi].iter().any(|d| d.name == n);
+        if defines("FRAME_MAGIC") {
+            let err_consts: Vec<(String, Option<u64>)> = consts[fi]
+                .iter()
+                .filter(|d| {
+                    d.name.starts_with("ERR_")
+                        || d.name.starts_with("REQ_")
+                        || d.name.starts_with("REP_")
+                })
+                .map(|d| (d.name.clone(), d.value))
+                .collect();
+            check_proto_docs(&mut files[fi], diags, &err_consts, &value_of);
+        }
+        if defines("PARITY_MAGIC") {
+            check_container_docs(&mut files[fi], diags, &value_of);
+        }
+    }
+}
+
+fn emit(sf: &mut ScannedFile, diags: &mut Vec<Diagnostic>, ln: usize, message: String) {
+    if sf.waived(Check::WireConsts, ln) {
+        return;
+    }
+    diags.push(Diagnostic {
+        path: sf.path.clone(),
+        line: ln + 1,
+        check: Check::WireConsts,
+        message,
+        excerpt: sf.excerpt(ln),
+    });
+}
+
+/// The server-protocol doc anchors: frame layout, header/prefix/params
+/// sizes, the status-entry layout, and the request/reply/error tables.
+fn check_proto_docs(
+    sf: &mut ScannedFile,
+    diags: &mut Vec<Diagnostic>,
+    codes: &[(String, Option<u64>)],
+    value_of: &dyn Fn(&str) -> Option<u64>,
+) {
+    let docs = doc_lines(sf);
+
+    // [magic "LCS1" (4)] [type u8] ... — fixed groups must sum to the
+    // frame header length.
+    check_run_anchor(
+        sf,
+        diags,
+        &docs,
+        "[magic \"LCS1\"",
+        value_of("FRAME_HEADER_LEN"),
+        "frame layout",
+    );
+    // "The fixed header is [`FRAME_HEADER_LEN`] = 17 bytes."
+    match docs
+        .iter()
+        .find(|(_, t)| t.contains("FRAME_HEADER_LEN") && t.contains("bytes"))
+    {
+        Some((ln, t)) => {
+            if let (Some(doc), Some(have)) = (first_int(t), value_of("FRAME_HEADER_LEN")) {
+                if doc != have {
+                    let msg = format!(
+                        "docs say the frame header is {doc} bytes; FRAME_HEADER_LEN is {have}"
+                    );
+                    emit(sf, diags, *ln, msg);
+                }
+            }
+        }
+        None => emit(sf, diags, 0, "missing doc anchor: FRAME_HEADER_LEN size phrase".into()),
+    }
+    // `[tenant u32][deadline_ms u32]` — the work-request prefix.
+    check_run_anchor(
+        sf,
+        diags,
+        &docs,
+        "[deadline_ms u32]",
+        value_of("REQUEST_PREFIX_LEN"),
+        "request prefix",
+    );
+    // `[eb_kind u8]...[epsilon f32]` — the compress params.
+    check_run_anchor(
+        sf,
+        diags,
+        &docs,
+        "[eb_kind u8]",
+        value_of("COMPRESS_PARAMS_LEN"),
+        "compress params",
+    );
+    // "followed by `n_tenants` NN-byte entries": the layout lines after
+    // the phrase must sum to NN.
+    match docs.iter().position(|(_, t)| t.contains("-byte entries")) {
+        Some(i) => {
+            let (ln, t) = &docs[i];
+            if let Some(want) = int_before(t, "-byte entries") {
+                let got = sum_run(&docs, i + 1);
+                if got != want {
+                    let msg = format!(
+                        "status entry documented as {want} bytes but its layout sums to {got}"
+                    );
+                    emit(sf, diags, *ln, msg);
+                }
+            }
+        }
+        None => emit(sf, diags, 0, "missing doc anchor: status entry size".into()),
+    }
+
+    // Request/reply tables: every `| 0xNN | Name |` row must match a
+    // REQ_/REP_ const, and every such const must appear in a row.
+    let mut seen: Vec<String> = Vec::new();
+    let mut any_row = false;
+    for (ln, t) in &docs {
+        let cells: Vec<&str> = t.split('|').map(str::trim).collect();
+        if cells.len() < 3 {
+            continue;
+        }
+        // | 0xNN | Name | ... rows.
+        if let Some(code) = cells
+            .get(1)
+            .and_then(|c| c.strip_prefix("0x"))
+            .and_then(|h| u64::from_str_radix(h, 16).ok())
+        {
+            let name = cells[2];
+            if !name.is_empty() && name.chars().all(|c| c.is_ascii_alphanumeric()) {
+                any_row = true;
+                let prefix = if code >= 0x80 { "REP_" } else { "REQ_" };
+                let want = format!("{prefix}{}", name.to_ascii_uppercase());
+                match codes.iter().find(|(n, _)| *n == want) {
+                    Some((_, Some(v))) if *v == code => seen.push(want),
+                    Some((_, v)) => {
+                        let msg = format!(
+                            "table row says `{want}` is {code:#04x} but the const is {v:?}"
+                        );
+                        emit(sf, diags, *ln, msg);
+                    }
+                    None => {
+                        let msg =
+                            format!("table row {code:#04x} `{name}` has no `{want}` const");
+                        emit(sf, diags, *ln, msg);
+                    }
+                }
+            }
+        }
+        // | N | `ERR_X` | ... rows.
+        if let Some(code) = cells
+            .get(1)
+            .filter(|c| !c.is_empty() && c.chars().all(|ch| ch.is_ascii_digit()))
+            .and_then(|c| c.parse::<u64>().ok())
+        {
+            if let Some(pos) = cells[2].find("ERR_") {
+                any_row = true;
+                let name: String = cells[2][pos..]
+                    .chars()
+                    .take_while(|c| c.is_ascii_alphanumeric() || *c == '_')
+                    .collect();
+                match codes.iter().find(|(n, _)| *n == name) {
+                    Some((_, Some(v))) if *v == code => seen.push(name),
+                    Some((_, v)) => {
+                        let msg = format!(
+                            "error table says `{name}` is {code} but the const is {v:?}"
+                        );
+                        emit(sf, diags, *ln, msg);
+                    }
+                    None => {
+                        let msg = format!("error table row {code} `{name}` has no const");
+                        emit(sf, diags, *ln, msg);
+                    }
+                }
+            }
+        }
+    }
+    if any_row {
+        for (name, _) in codes {
+            if !seen.iter().any(|s| s == name) {
+                let (ln, msg) = (
+                    const_line(sf, name),
+                    format!("`{name}` is not documented in the wire tables"),
+                );
+                emit(sf, diags, ln, msg);
+            }
+        }
+    } else {
+        emit(sf, diags, 0, "missing doc anchor: request/reply/error tables".into());
+    }
+}
+
+/// The container doc anchors: v1 header, chunk frame header, footer
+/// entry table, parity frame fixed head, parity entry, v4 trailer.
+fn check_container_docs(
+    sf: &mut ScannedFile,
+    diags: &mut Vec<Diagnostic>,
+    value_of: &dyn Fn(&str) -> Option<u64>,
+) {
+    let docs = doc_lines(sf);
+
+    check_run_anchor(
+        sf,
+        diags,
+        &docs,
+        "[magic \"LCZ1\"",
+        value_of("HEADER_FIXED_LEN"),
+        "v1 header layout",
+    );
+
+    // Every chunk-frame-header layout line must sum to the frame
+    // header length (v1 and v2 both spell it out).
+    let mut any_cfh = false;
+    for (ln, t) in &docs {
+        if t.contains("[n_values u32]") && t.contains("[payload_bytes u32]") && t.contains("[crc32 u32]") {
+            any_cfh = true;
+            let (sum, _) = line_groups(t);
+            if let Some(want) = value_of("CHUNK_FRAME_HEADER_LEN") {
+                if sum != want {
+                    let msg = format!(
+                        "chunk frame header documented as {sum} bytes; CHUNK_FRAME_HEADER_LEN is {want}"
+                    );
+                    emit(sf, diags, *ln, msg);
+                }
+            }
+        }
+    }
+    if !any_cfh {
+        emit(sf, diags, 0, "missing doc anchor: chunk frame header layout".into());
+    }
+
+    // "Each NN-byte footer entry" + the | field | type | table.
+    match docs.iter().position(|(_, t)| t.contains("-byte footer entry")) {
+        Some(i) => {
+            let (ln, t) = (docs[i].0, &docs[i].1);
+            let want = int_before(t, "-byte footer entry");
+            let sum = markdown_width_table_sum(&docs, i + 1);
+            if let Some(want) = want {
+                if sum != want {
+                    let msg = format!(
+                        "footer entry documented as {want} bytes but its field table sums to {sum}"
+                    );
+                    emit(sf, diags, ln, msg);
+                }
+                if let Some(entry) = value_of("ENTRY_LEN") {
+                    if entry != want {
+                        let msg = format!(
+                            "footer entry documented as {want} bytes; ENTRY_LEN is {entry}"
+                        );
+                        emit(sf, diags, ln, msg);
+                    }
+                }
+            }
+        }
+        None => emit(sf, diags, 0, "missing doc anchor: footer entry table".into()),
+    }
+
+    // The parity frame's fixed head: ["LCPF"] [group u32] ... and the
+    // `<- NN fixed bytes` annotation.
+    match docs.iter().position(|(_, t)| t.contains("[\"LCPF\"]")) {
+        Some(i) => {
+            let ln = docs[i].0;
+            let got = sum_run(&docs, i);
+            if let Some(want) = value_of("PARITY_FRAME_FIXED") {
+                if got != want {
+                    let msg = format!(
+                        "parity frame head sums to {got} bytes; PARITY_FRAME_FIXED is {want}"
+                    );
+                    emit(sf, diags, ln, msg);
+                }
+            }
+            for (aln, t) in &docs[i..(i + 3).min(docs.len())] {
+                if t.contains("fixed bytes") {
+                    if let Some(note) = int_before(t, " fixed bytes") {
+                        if note != got {
+                            let msg = format!(
+                                "parity head annotated as {note} fixed bytes but sums to {got}"
+                            );
+                            emit(sf, diags, *aln, msg);
+                        }
+                    }
+                }
+            }
+        }
+        None => emit(sf, diags, 0, "missing doc anchor: parity frame layout".into()),
+    }
+
+    // "one NN-byte parity entry per group (`offset u64 | ...`)".
+    check_pipe_anchor(
+        sf,
+        diags,
+        &docs,
+        "-byte parity entry",
+        value_of("PARITY_ENTRY_LEN"),
+        "parity entry",
+    );
+    // "The trailer grows to NN bytes — `footer_offset u64 | ...`".
+    check_pipe_anchor(
+        sf,
+        diags,
+        &docs,
+        "trailer grows to",
+        value_of("TRAILER_LEN_V4"),
+        "v4 trailer",
+    );
+}
+
+/// Anchor = a doc line containing `needle` that starts (or sits in) a
+/// run of `[group]` layout lines; the fixed-group sum must equal the
+/// const value.
+fn check_run_anchor(
+    sf: &mut ScannedFile,
+    diags: &mut Vec<Diagnostic>,
+    docs: &[(usize, String)],
+    needle: &str,
+    want: Option<u64>,
+    what: &str,
+) {
+    match docs.iter().position(|(_, t)| t.contains(needle)) {
+        Some(i) => {
+            let got = sum_run(docs, i);
+            if let Some(want) = want {
+                if got != want {
+                    let (ln, msg) = (
+                        docs[i].0,
+                        format!("{what} sums to {got} bytes but the const says {want}"),
+                    );
+                    emit(sf, diags, ln, msg);
+                }
+            }
+        }
+        None => emit(sf, diags, 0, format!("missing doc anchor: {what}")),
+    }
+}
+
+/// Anchor = "NN-byte ..." phrase followed (within three lines) by a
+/// backticked `name width | name width | ...` list; phrase, list, and
+/// const must all agree.
+fn check_pipe_anchor(
+    sf: &mut ScannedFile,
+    diags: &mut Vec<Diagnostic>,
+    docs: &[(usize, String)],
+    needle: &str,
+    want: Option<u64>,
+    what: &str,
+) {
+    match docs.iter().position(|(_, t)| t.contains(needle)) {
+        Some(i) => {
+            let ln = docs[i].0;
+            let window: Vec<&str> = docs[i..(i + 3).min(docs.len())]
+                .iter()
+                .map(|(_, t)| t.as_str())
+                .collect();
+            let got = pipe_window_sum(&window);
+            let doc_n = first_int(&docs[i].1);
+            if let (Some(n), true) = (doc_n, got > 0) {
+                if n != got {
+                    let msg = format!(
+                        "{what} documented as {n} bytes but its field list sums to {got}"
+                    );
+                    emit(sf, diags, ln, msg);
+                }
+            }
+            if let (Some(want), Some(n)) = (want, doc_n) {
+                if n != want {
+                    let msg =
+                        format!("{what} documented as {n} bytes but the const says {want}");
+                    emit(sf, diags, ln, msg);
+                }
+            }
+        }
+        None => emit(sf, diags, 0, format!("missing doc anchor: {what}")),
+    }
+}
+
+/// All doc-comment lines of the file, 0-based line plus text.
+fn doc_lines(sf: &ScannedFile) -> Vec<(usize, String)> {
+    use super::scanner::CommentKind;
+    sf.lines
+        .iter()
+        .enumerate()
+        .filter_map(|(ln, l)| {
+            l.comment
+                .as_ref()
+                .filter(|c| c.kind != CommentKind::Plain)
+                .map(|c| (ln, c.text.clone()))
+        })
+        .collect()
+}
+
+/// 0-based line of `const <name>` in the file, for diagnostics.
+fn const_line(sf: &ScannedFile, name: &str) -> usize {
+    sf.lines
+        .iter()
+        .position(|l| has_word(&l.code, "const") && has_word(&l.code, name))
+        .unwrap_or(0)
+}
+
+/// Parse `const NAME: Ty = <int literal>;` from a code-view line.
+fn parse_const(code: &str, ln: usize) -> Option<ConstDef> {
+    let mut search = 0;
+    loop {
+        let pos = code[search..].find("const")? + search;
+        search = pos + 5;
+        let before_ok = pos == 0 || !is_word_byte(code.as_bytes()[pos - 1]);
+        let after = &code[pos + 5..];
+        if before_ok && after.starts_with(|c: char| c.is_whitespace()) {
+            let rest = after.trim_start();
+            let name: String = rest
+                .chars()
+                .take_while(|c| c.is_ascii_alphanumeric() || *c == '_')
+                .collect();
+            if name.is_empty() || name == "fn" {
+                continue;
+            }
+            let tail = rest[name.len()..].trim_start();
+            if !tail.starts_with(':') {
+                continue; // `*const T` in a type position
+            }
+            let value = tail.find('=').and_then(|eq| {
+                let rhs = tail[eq + 1..].trim();
+                let rhs = rhs.strip_suffix(';').unwrap_or(rhs).trim();
+                parse_int(rhs)
+            });
+            return Some(ConstDef { name, value, line: ln });
+        }
+    }
+}
+
+fn parse_int(s: &str) -> Option<u64> {
+    let s: String = s.chars().filter(|c| *c != '_').collect();
+    if let Some(hex) = s.strip_prefix("0x") {
+        u64::from_str_radix(hex, 16).ok()
+    } else {
+        s.parse().ok()
+    }
+}
+
+fn is_word_byte(b: u8) -> bool {
+    b.is_ascii_alphanumeric() || b == b'_'
+}
+
+fn has_word(code: &str, word: &str) -> bool {
+    let bytes = code.as_bytes();
+    let mut start = 0;
+    while let Some(pos) = code[start..].find(word) {
+        let i = start + pos;
+        start = i + word.len();
+        let before_ok = i == 0 || !is_word_byte(bytes[i - 1]);
+        let after_ok = i + word.len() >= bytes.len() || !is_word_byte(bytes[i + word.len()]);
+        if before_ok && after_ok {
+            return true;
+        }
+    }
+    false
+}
+
+fn width_token(tok: &str) -> Option<u64> {
+    match tok {
+        "u8" | "i8" => Some(1),
+        "u16" | "i16" => Some(2),
+        "u32" | "i32" | "f32" => Some(4),
+        "u64" | "i64" | "f64" => Some(8),
+        _ => None,
+    }
+}
+
+/// Width of one `[...]` group. Precedence: `...` makes it variable, an
+/// explicit `(N)` wins, then a trailing width token, then a quoted
+/// string's byte length.
+enum GroupWidth {
+    Fixed(u64),
+    Variable,
+}
+
+fn group_width(content: &str) -> GroupWidth {
+    if content.contains("...") {
+        return GroupWidth::Variable;
+    }
+    // Explicit (N).
+    let mut rest = content;
+    while let Some(open) = rest.find('(') {
+        let inner = &rest[open + 1..];
+        if let Some(close) = inner.find(')') {
+            if let Some(n) = parse_int(inner[..close].trim()) {
+                return GroupWidth::Fixed(n);
+            }
+            rest = &inner[close + 1..];
+        } else {
+            break;
+        }
+    }
+    if let Some(w) = content.split_whitespace().last().and_then(width_token) {
+        return GroupWidth::Fixed(w);
+    }
+    if let Some(q) = quoted_len(content) {
+        return GroupWidth::Fixed(q);
+    }
+    GroupWidth::Variable
+}
+
+/// Byte length of the first `"..."` in the text, unescaping `\n`.
+fn quoted_len(text: &str) -> Option<u64> {
+    let open = text.find('"')?;
+    let inner = &text[open + 1..];
+    let close = inner.find('"')?;
+    Some(inner[..close].replace("\\n", "\n").len() as u64)
+}
+
+/// Sum the `[group]` widths on one line, left to right, stopping at
+/// the first variable-width group. Returns (sum, stopped-early).
+fn line_groups(text: &str) -> (u64, bool) {
+    let mut sum = 0;
+    let mut rest = text;
+    while let Some(open) = rest.find('[') {
+        let inner = &rest[open + 1..];
+        let Some(close) = inner.find(']') else { break };
+        match group_width(&inner[..close]) {
+            GroupWidth::Fixed(w) => sum += w,
+            GroupWidth::Variable => return (sum, true),
+        }
+        rest = &inner[close + 1..];
+    }
+    (sum, false)
+}
+
+/// Sum a run of consecutive layout lines starting at `docs[start]`:
+/// continue while the next doc line is the very next source line and
+/// opens with `[`; stop at the first variable-width group.
+fn sum_run(docs: &[(usize, String)], start: usize) -> u64 {
+    let mut sum = 0;
+    let mut i = start;
+    loop {
+        let Some((ln, text)) = docs.get(i) else { break };
+        if i > start {
+            let prev_ln = docs[i - 1].0;
+            let stripped = text.trim_start().trim_start_matches('`');
+            if *ln != prev_ln + 1 || !stripped.starts_with('[') {
+                break;
+            }
+        }
+        let (s, stopped) = line_groups(text);
+        sum += s;
+        if stopped {
+            break;
+        }
+        i += 1;
+    }
+    sum
+}
+
+/// Sum the `| name | type |` rows of a markdown table found after
+/// `docs[start]` (second column must be a width token; header and
+/// separator rows are skipped).
+fn markdown_width_table_sum(docs: &[(usize, String)], start: usize) -> u64 {
+    let mut sum = 0;
+    let mut in_table = false;
+    for (_, text) in &docs[start..] {
+        let t = text.trim();
+        if t.starts_with('|') {
+            in_table = true;
+            let cells: Vec<&str> = t.split('|').map(str::trim).collect();
+            if let Some(w) = cells.get(2).copied().and_then(width_token) {
+                sum += w;
+            }
+        } else if in_table {
+            break; // any non-row doc line ends the table
+        }
+    }
+    sum
+}
+
+/// Sum a backticked `name width | name width | "MAGIC"` list spread
+/// over a small window of doc lines.
+fn pipe_window_sum(window: &[&str]) -> u64 {
+    let joined = window.join(" ");
+    let mut sum = 0;
+    for (i, piece) in joined.split('|').enumerate() {
+        let toks: Vec<String> = piece
+            .split_whitespace()
+            .map(|t| t.trim_matches(|c| matches!(c, '`' | '(' | ')' | ',' | '.' | '—')).to_string())
+            .collect();
+        if i == 0 {
+            // Prose precedes the first field: read it from the end.
+            if let Some(w) = toks.last().and_then(|t| width_token(t)) {
+                sum += w;
+            } else if let Some(q) = toks.last().and_then(|t| quoted_len(t)) {
+                sum += q;
+            }
+        } else if let Some(q) = toks.first().and_then(|t| quoted_len(t)) {
+            sum += q;
+        } else if let Some(w) = toks.get(1).and_then(|t| width_token(t)) {
+            sum += w;
+        }
+    }
+    sum
+}
+
+/// First integer in the text.
+fn first_int(text: &str) -> Option<u64> {
+    let bytes = text.as_bytes();
+    let start = bytes.iter().position(|b| b.is_ascii_digit())?;
+    let end = bytes[start..]
+        .iter()
+        .position(|b| !b.is_ascii_digit())
+        .map(|e| start + e)
+        .unwrap_or(bytes.len());
+    text[start..end].parse().ok()
+}
+
+/// The integer immediately preceding `marker`, e.g. 29 from
+/// "Each 29-byte footer entry" with marker "-byte footer entry".
+fn int_before(text: &str, marker: &str) -> Option<u64> {
+    let pos = text.find(marker)?;
+    let head = &text[..pos];
+    let end = head.len();
+    let start = head
+        .bytes()
+        .rposition(|b| !b.is_ascii_digit())
+        .map(|p| p + 1)
+        .unwrap_or(0);
+    if start == end {
+        return None;
+    }
+    head[start..end].parse().ok()
+}

@@ -1,0 +1,575 @@
+//! String/comment-aware source scanner.
+//!
+//! One pass over the file produces, per line: a *code view* (comments
+//! removed, string/char literal contents blanked) so the token checks
+//! can never misfire inside a literal; the first comment on the line
+//! with its kind (`//`, `///`, `//!`); delimiter depths entering and
+//! leaving the line; captured byte-string literal contents (for the
+//! wire-magic single-definition scan); and a test-region flag. The
+//! same pass reports the `delims` structural diagnostics (unbalanced
+//! delimiters, unterminated literals, mangled doc comments) and
+//! parses the waiver comments.
+
+use super::{Check, Diagnostic};
+
+/// Comment kinds, as far as the linter cares.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum CommentKind {
+    /// `//` (also `////`-and-longer separators).
+    Plain,
+    /// `///` outer doc.
+    DocOuter,
+    /// `//!` inner doc.
+    DocInner,
+}
+
+#[derive(Debug)]
+pub struct Comment {
+    pub kind: CommentKind,
+    /// Text after the comment marker, untrimmed.
+    pub text: String,
+}
+
+#[derive(Debug)]
+pub struct Line {
+    /// Comments removed, literal contents blanked (quotes kept).
+    pub code: String,
+    /// First line comment on the line, if any.
+    pub comment: Option<Comment>,
+    /// Original line, for excerpts.
+    pub raw: String,
+    /// Combined `(`/`[`/`{` depth entering / leaving the line.
+    pub depth_in: usize,
+    pub depth_out: usize,
+    /// `[`-only depth entering the line (range-index check).
+    pub sq_depth_in: usize,
+    /// Inside a `#[cfg(test)]` item.
+    pub is_test: bool,
+    /// Unescaped contents of `b"..."` literals on this line.
+    pub byte_strs: Vec<String>,
+}
+
+/// A parsed waiver with its resolved coverage range.
+#[derive(Debug)]
+pub struct Waiver {
+    /// 0-based line of the waiver comment.
+    pub line: usize,
+    pub checks: Vec<Check>,
+    pub reason: String,
+    /// 0-based inclusive coverage range.
+    pub start: usize,
+    pub end: usize,
+    /// Diagnostics suppressed so far.
+    pub used: usize,
+}
+
+impl Waiver {
+    pub fn covers(&self, check: Check, line: usize) -> bool {
+        self.checks.contains(&check) && line >= self.start && line <= self.end
+    }
+}
+
+#[derive(Debug)]
+pub struct ScannedFile {
+    pub path: String,
+    pub lines: Vec<Line>,
+    pub waivers: Vec<Waiver>,
+}
+
+impl ScannedFile {
+    /// Consume a would-be diagnostic at 0-based `line` if a waiver
+    /// covers it; returns true when suppressed.
+    pub fn waived(&mut self, check: Check, line: usize) -> bool {
+        for w in &mut self.waivers {
+            if w.covers(check, line) {
+                w.used += 1;
+                return true;
+            }
+        }
+        false
+    }
+
+    pub fn excerpt(&self, line: usize) -> String {
+        excerpt_of(self.lines.get(line).map(|l| l.raw.as_str()).unwrap_or(""))
+    }
+}
+
+pub fn excerpt_of(raw: &str) -> String {
+    let t = raw.trim();
+    if t.len() > 90 {
+        let cut = (0..=90).rev().find(|&i| t.is_char_boundary(i)).unwrap_or(0);
+        format!("{}…", &t[..cut])
+    } else {
+        t.to_string()
+    }
+}
+
+/// Lexer state carried across lines. Byte-string content accumulates
+/// in a side buffer so the state stays `Copy`.
+#[derive(Clone, Copy)]
+enum Mode {
+    Code,
+    /// Inside `"..."`; `byte` strings capture their unescaped content.
+    Str { byte: bool },
+    /// Inside `r"` / `r#"` raw strings (`hashes` closing `#`s).
+    RawStr { hashes: usize },
+    /// Inside `/* ... */`, possibly nested.
+    Block { depth: usize },
+}
+
+pub fn scan(path: &str, text: &str, diags: &mut Vec<Diagnostic>) -> ScannedFile {
+    let mut lines: Vec<Line> = Vec::new();
+    let mut mode = Mode::Code;
+    // Open-delimiter stack: (char, 0-based line it opened on).
+    let mut stack: Vec<(char, usize)> = Vec::new();
+    let mut diag = |line: usize, check: Check, msg: String, raw: &str| {
+        diags.push(Diagnostic {
+            path: path.to_string(),
+            line: line + 1,
+            check,
+            message: msg,
+            excerpt: excerpt_of(raw),
+        });
+    };
+
+    // Unescaped content of the byte string currently being lexed.
+    let mut capture = String::new();
+
+    for (ln, raw) in text.lines().enumerate() {
+        let chars: Vec<char> = raw.chars().collect();
+        let mut code = String::with_capacity(raw.len());
+        let mut comment: Option<Comment> = None;
+        let mut byte_strs: Vec<String> = Vec::new();
+        let depth_in = stack.len();
+        let sq_depth_in = stack.iter().filter(|(c, _)| *c == '[').count();
+        let mut i = 0usize;
+        while i < chars.len() {
+            let c = chars[i];
+            match mode {
+                Mode::Str { byte } => {
+                    if c == '\\' {
+                        let (ch, used) = unescape(&chars[i..]);
+                        if byte {
+                            if let Some(ch) = ch {
+                                capture.push(ch);
+                            }
+                        }
+                        i += used;
+                        continue;
+                    } else if c == '"' {
+                        if byte {
+                            byte_strs.push(std::mem::take(&mut capture));
+                        }
+                        code.push('"');
+                        mode = Mode::Code;
+                    } else if byte {
+                        capture.push(c);
+                    }
+                    i += 1;
+                }
+                Mode::RawStr { hashes } => {
+                    if c == '"'
+                        && chars[i + 1..].iter().take(hashes).filter(|h| **h == '#').count()
+                            == hashes
+                    {
+                        i += 1 + hashes;
+                        code.push('"');
+                        mode = Mode::Code;
+                    } else {
+                        i += 1;
+                    }
+                }
+                Mode::Block { depth } => {
+                    if c == '*' && chars.get(i + 1) == Some(&'/') {
+                        i += 2;
+                        mode = if depth == 1 {
+                            Mode::Code
+                        } else {
+                            Mode::Block { depth: depth - 1 }
+                        };
+                    } else if c == '/' && chars.get(i + 1) == Some(&'*') {
+                        mode = Mode::Block { depth: depth + 1 };
+                        i += 2;
+                    } else {
+                        i += 1;
+                    }
+                }
+                Mode::Code => match c {
+                    '/' if chars.get(i + 1) == Some(&'/') => {
+                        // Line comment: classify, capture, stop the line.
+                        let rest: String = chars[i..].iter().collect();
+                        let kind = if rest.starts_with("///") && !rest.starts_with("////") {
+                            CommentKind::DocOuter
+                        } else if rest.starts_with("//!") {
+                            CommentKind::DocInner
+                        } else {
+                            CommentKind::Plain
+                        };
+                        let skip = match kind {
+                            CommentKind::Plain => 2,
+                            _ => 3,
+                        };
+                        let text: String = chars[i + skip..].iter().collect();
+                        if kind == CommentKind::Plain {
+                            let t = text.trim_start();
+                            // The mangled-doc-comment bug class: `// /`
+                            // is a doc line whose lead slash broke off.
+                            if t.starts_with("/ ") || t == "/" {
+                                diag(
+                                    ln,
+                                    Check::Delims,
+                                    "mangled doc comment: `// /` (doc text silently dropped)"
+                                        .to_string(),
+                                    raw,
+                                );
+                            }
+                        }
+                        if comment.is_none() {
+                            comment = Some(Comment { kind, text });
+                        }
+                        i = chars.len();
+                    }
+                    '/' if chars.get(i + 1) == Some(&'*') => {
+                        mode = Mode::Block { depth: 1 };
+                        i += 2;
+                    }
+                    '"' => {
+                        let byte = prev_nonword_prefix(&code, "b");
+                        if prev_nonword_prefix(&code, "r") || prev_nonword_prefix(&code, "br") {
+                            mode = Mode::RawStr { hashes: 0 };
+                        } else {
+                            capture.clear();
+                            mode = Mode::Str { byte };
+                        }
+                        code.push('"');
+                        i += 1;
+                    }
+                    '#' if chars.get(i + 1) == Some(&'"')
+                        || (chars.get(i + 1) == Some(&'#') && code.trim_end().ends_with('r')) =>
+                    {
+                        // r#"..." / r##"..." raw-string openers: count
+                        // the hashes, then enter raw-string mode.
+                        if code.trim_end().ends_with('r') || code.trim_end().ends_with("br") {
+                            let mut hashes = 0;
+                            while chars.get(i + hashes) == Some(&'#') {
+                                hashes += 1;
+                            }
+                            if chars.get(i + hashes) == Some(&'"') {
+                                mode = Mode::RawStr { hashes };
+                                code.push('"');
+                                i += hashes + 1;
+                                continue;
+                            }
+                        }
+                        code.push('#');
+                        i += 1;
+                    }
+                    '\'' => {
+                        // Char literal vs lifetime. A char literal
+                        // closes within a short window; a lifetime has
+                        // no closing quote.
+                        if chars.get(i + 1) == Some(&'\\') {
+                            let (_, used) = unescape(&chars[i + 1..]);
+                            code.push_str("' '");
+                            i += 1 + used;
+                            if chars.get(i) == Some(&'\'') {
+                                i += 1;
+                            }
+                        } else if chars.get(i + 2) == Some(&'\'') {
+                            code.push_str("' '");
+                            i += 3;
+                        } else {
+                            // Lifetime: keep the tick, scan on.
+                            code.push('\'');
+                            i += 1;
+                        }
+                    }
+                    '(' | '[' | '{' => {
+                        stack.push((c, ln));
+                        code.push(c);
+                        i += 1;
+                    }
+                    ')' | ']' | '}' => {
+                        let want = match c {
+                            ')' => '(',
+                            ']' => '[',
+                            _ => '{',
+                        };
+                        match stack.last() {
+                            Some((open, _)) if *open == want => {
+                                stack.pop();
+                            }
+                            Some((open, at)) => {
+                                diag(
+                                    ln,
+                                    Check::Delims,
+                                    format!(
+                                        "mismatched `{c}`: expected close for `{open}` \
+                                         opened on line {}",
+                                        at + 1
+                                    ),
+                                    raw,
+                                );
+                                stack.pop();
+                            }
+                            None => {
+                                diag(ln, Check::Delims, format!("unmatched `{c}`"), raw);
+                            }
+                        }
+                        code.push(c);
+                        i += 1;
+                    }
+                    _ => {
+                        code.push(c);
+                        i += 1;
+                    }
+                },
+            }
+        }
+        lines.push(Line {
+            code,
+            comment,
+            raw: raw.to_string(),
+            depth_in,
+            depth_out: stack.len(),
+            sq_depth_in,
+            is_test: false,
+            byte_strs,
+        });
+    }
+
+    match mode {
+        Mode::Code => {}
+        Mode::Str { .. } | Mode::RawStr { .. } => {
+            let last = lines.len().saturating_sub(1);
+            diag(last, Check::Delims, "unterminated string literal".into(), "");
+        }
+        Mode::Block { .. } => {
+            let last = lines.len().saturating_sub(1);
+            diag(last, Check::Delims, "unterminated block comment".into(), "");
+        }
+    }
+    for (open, at) in &stack {
+        diags.push(Diagnostic {
+            path: path.to_string(),
+            line: at + 1,
+            check: Check::Delims,
+            message: format!("unclosed `{open}`"),
+            excerpt: excerpt_of(lines.get(*at).map(|l| l.raw.as_str()).unwrap_or("")),
+        });
+    }
+
+    mark_header_doc_drift(path, &lines, diags);
+    mark_test_regions(&mut lines);
+    let waivers = parse_waivers(path, &lines, diags);
+    ScannedFile {
+        path: path.to_string(),
+        lines,
+        waivers,
+    }
+}
+
+/// Does the code buffer end with `prefix` as a standalone token (so a
+/// `"` that follows starts a prefixed literal)?
+fn prev_nonword_prefix(code: &str, prefix: &str) -> bool {
+    if !code.ends_with(prefix) {
+        return false;
+    }
+    let before = &code[..code.len() - prefix.len()];
+    !before
+        .chars()
+        .next_back()
+        .is_some_and(|c| c.is_alphanumeric() || c == '_')
+}
+
+/// Decode one escape sequence starting at `\\`; returns the decoded
+/// char (None for unrecognized) and the chars consumed.
+fn unescape(chars: &[char]) -> (Option<char>, usize) {
+    match chars.get(1) {
+        Some('n') => (Some('\n'), 2),
+        Some('r') => (Some('\r'), 2),
+        Some('t') => (Some('\t'), 2),
+        Some('\\') => (Some('\\'), 2),
+        Some('\'') => (Some('\''), 2),
+        Some('"') => (Some('"'), 2),
+        Some('0') => (Some('\0'), 2),
+        Some('x') => {
+            let hex: String = chars.iter().skip(2).take(2).collect();
+            let ch = u8::from_str_radix(&hex, 16).ok().map(|b| b as char);
+            (ch, 2 + hex.len())
+        }
+        Some('u') => {
+            // \u{...}: consume through the closing brace.
+            let mut used = 2;
+            let mut val = String::new();
+            if chars.get(used) == Some(&'{') {
+                used += 1;
+                while let Some(c) = chars.get(used) {
+                    used += 1;
+                    if *c == '}' {
+                        break;
+                    }
+                    val.push(*c);
+                }
+            }
+            let ch = u32::from_str_radix(&val, 16).ok().and_then(char::from_u32);
+            (ch, used)
+        }
+        Some(_) => (None, 2),
+        None => (None, 1),
+    }
+}
+
+/// `//!` inner docs are only legal in the file header (before the
+/// first code item; inner attributes `#![...]` don't end the header).
+/// One dropped doc line elsewhere compiles silently — flag it.
+fn mark_header_doc_drift(path: &str, lines: &[Line], diags: &mut Vec<Diagnostic>) {
+    let mut in_header = true;
+    for (ln, line) in lines.iter().enumerate() {
+        let code = line.code.trim();
+        if in_header {
+            if !code.is_empty() && !code.starts_with("#!") {
+                in_header = false;
+            }
+        } else if line
+            .comment
+            .as_ref()
+            .is_some_and(|c| c.kind == CommentKind::DocInner)
+            && line.code.trim().is_empty()
+        {
+            diags.push(Diagnostic {
+                path: path.to_string(),
+                line: ln + 1,
+                check: Check::Delims,
+                message: "misplaced `//!` inner doc after the file header".into(),
+                excerpt: excerpt_of(&line.raw),
+            });
+        }
+    }
+}
+
+/// Mark every line inside a `#[cfg(test)]` item as test code: from the
+/// attribute, attach to the next code line, then extend through its
+/// delimited block.
+fn mark_test_regions(lines: &mut [Line]) {
+    let mut regions: Vec<(usize, usize)> = Vec::new();
+    for ln in 0..lines.len() {
+        if lines[ln].code.contains("cfg(test)") && lines[ln].code.trim_start().starts_with("#[") {
+            if let Some((start, end)) = attach_range(lines, ln) {
+                regions.push((ln, end.max(start)));
+            }
+        }
+    }
+    for (start, end) in regions {
+        for line in lines.iter_mut().take(end + 1).skip(start) {
+            line.is_test = true;
+        }
+    }
+}
+
+/// Resolve the coverage range for an annotation sitting on line `ln`:
+/// the next code line (skipping blanks, attributes, comments), extended
+/// through its delimited block when it opens one (a brace body or a
+/// multi-line signature/call).
+pub fn attach_range(lines: &[Line], ln: usize) -> Option<(usize, usize)> {
+    let mut j = ln + 1;
+    loop {
+        let line = lines.get(j)?;
+        let code = line.code.trim();
+        if code.is_empty() || code.starts_with("#[") || code.starts_with("#!") {
+            j += 1;
+            continue;
+        }
+        break;
+    }
+    let base = lines[j].depth_in;
+    if lines[j].depth_out <= base {
+        return Some((j, j));
+    }
+    let mut k = j;
+    while let Some(line) = lines.get(k) {
+        if line.depth_out <= base {
+            return Some((j, k));
+        }
+        k += 1;
+    }
+    Some((j, lines.len() - 1))
+}
+
+/// Parse `// lint: allow(<check>[, ...]) -- <reason>` waivers. Only
+/// *plain* comments participate, so docs can quote the grammar.
+fn parse_waivers(path: &str, lines: &[Line], diags: &mut Vec<Diagnostic>) -> Vec<Waiver> {
+    let mut out = Vec::new();
+    for (ln, line) in lines.iter().enumerate() {
+        let Some(c) = &line.comment else { continue };
+        if c.kind != CommentKind::Plain {
+            continue;
+        }
+        let t = c.text.trim_start();
+        let Some(rest) = t.strip_prefix("lint:") else {
+            continue;
+        };
+        let mut bad = |msg: &str| {
+            diags.push(Diagnostic {
+                path: path.to_string(),
+                line: ln + 1,
+                check: Check::Waiver,
+                message: msg.to_string(),
+                excerpt: excerpt_of(&line.raw),
+            });
+        };
+        let rest = rest.trim_start();
+        let Some(rest) = rest.strip_prefix("allow(") else {
+            bad("malformed waiver: expected `lint: allow(<check>[, ...]) -- <reason>`");
+            continue;
+        };
+        let Some(close) = rest.find(')') else {
+            bad("malformed waiver: missing `)`");
+            continue;
+        };
+        let mut checks = Vec::new();
+        let mut ok = true;
+        for name in rest[..close].split(',') {
+            match Check::parse(name.trim()) {
+                Some(c) => checks.push(c),
+                None => {
+                    bad(&format!("unknown check `{}` in waiver", name.trim()));
+                    ok = false;
+                }
+            }
+        }
+        let after = rest[close + 1..].trim_start();
+        let Some(reason) = after.strip_prefix("--") else {
+            bad("waiver missing `-- <reason>`");
+            continue;
+        };
+        let reason = reason.trim();
+        if reason.is_empty() {
+            bad("waiver reason is empty: say why the invariant holds here");
+            continue;
+        }
+        if !ok || checks.is_empty() {
+            continue;
+        }
+        let (start, end) = if line.code.trim().is_empty() {
+            match attach_range(lines, ln) {
+                Some(r) => r,
+                None => {
+                    bad("waiver attaches to nothing (end of file)");
+                    continue;
+                }
+            }
+        } else {
+            (ln, ln)
+        };
+        out.push(Waiver {
+            line: ln,
+            checks,
+            reason: reason.to_string(),
+            start,
+            end,
+            used: 0,
+        });
+    }
+    out
+}

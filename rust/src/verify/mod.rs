@@ -5,6 +5,7 @@
 
 pub mod classify;
 pub mod faults;
+pub mod lint;
 pub mod metrics;
 pub mod parity;
 pub mod sweep;

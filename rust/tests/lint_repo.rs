@@ -1,0 +1,334 @@
+//! `lc lint` contract tests: every check fires on a known-bad fixture,
+//! waiver hygiene is enforced, and — the point of the whole exercise —
+//! the shipped tree lints clean.
+
+use lc::verify::lint::{lint_files, lint_tree, Check, LintReport, SourceFile};
+
+fn lint_one(path: &str, text: &str) -> LintReport {
+    lint_files(&[SourceFile {
+        path: path.to_string(),
+        text: text.to_string(),
+    }])
+}
+
+fn has(report: &LintReport, check: Check, line: usize) -> bool {
+    report
+        .diagnostics
+        .iter()
+        .any(|d| d.check == check && d.line == line)
+}
+
+fn count(report: &LintReport, check: Check) -> usize {
+    report.diagnostics.iter().filter(|d| d.check == check).count()
+}
+
+// --------------------------------------------------------------- delims
+
+#[test]
+fn delims_unclosed_brace_fires() {
+    let r = lint_one("src/util.rs", "fn f() {\n    let x = 1;\n");
+    assert!(has(&r, Check::Delims, 1), "{:?}", r.diagnostics);
+}
+
+#[test]
+fn delims_mismatched_close_fires() {
+    let r = lint_one("src/util.rs", "fn f() { let x = (1]; }\n");
+    assert!(count(&r, Check::Delims) > 0, "{:?}", r.diagnostics);
+}
+
+#[test]
+fn delims_stray_slash_doc_fires() {
+    // The `// /` mangled-doc-comment bug class caught by hand in PR 7.
+    let r = lint_one("src/util.rs", "// / rest of a doc sentence\nfn f() {}\n");
+    assert!(has(&r, Check::Delims, 1), "{:?}", r.diagnostics);
+}
+
+#[test]
+fn delims_misplaced_inner_doc_fires() {
+    let r = lint_one("src/util.rs", "//! header\nfn f() {}\n//! stray inner doc\n");
+    assert!(has(&r, Check::Delims, 3), "{:?}", r.diagnostics);
+}
+
+#[test]
+fn delims_clean_on_balanced_source() {
+    let r = lint_one(
+        "src/util.rs",
+        "//! Docs.\nfn f(x: &[u8]) -> usize {\n    x.len()\n}\n",
+    );
+    assert!(r.is_clean(), "{:?}", r.diagnostics);
+}
+
+#[test]
+fn delims_ignores_literals_and_comments() {
+    let text = "fn f() -> char {\n    let _s = \"}} not a close ]]\";\n    // ) neither\n    '}'\n}\n";
+    let r = lint_one("src/util.rs", text);
+    assert!(r.is_clean(), "{:?}", r.diagnostics);
+}
+
+// ----------------------------------------------------------- panic-free
+
+#[test]
+fn panic_free_fires_on_designated_surface() {
+    let text = "fn f(x: Option<u32>) -> u32 {\n    x.unwrap()\n}\n";
+    let r = lint_one("src/container/chunk.rs", text);
+    assert!(has(&r, Check::PanicFree, 2), "{:?}", r.diagnostics);
+}
+
+#[test]
+fn panic_free_ignores_undesignated_modules() {
+    let text = "fn f(x: Option<u32>) -> u32 {\n    x.unwrap()\n}\n";
+    let r = lint_one("src/tables/report.rs", text);
+    assert_eq!(count(&r, Check::PanicFree), 0, "{:?}", r.diagnostics);
+}
+
+#[test]
+fn panic_free_exempts_test_modules() {
+    let text = "fn ok() {}\n\n#[cfg(test)]\nmod tests {\n    #[test]\n    fn t() {\n        Some(1u32).unwrap();\n        panic!(\"in tests this is fine\");\n    }\n}\n";
+    let r = lint_one("src/container/chunk.rs", text);
+    assert_eq!(count(&r, Check::PanicFree), 0, "{:?}", r.diagnostics);
+}
+
+#[test]
+fn panic_free_does_not_flag_unwrap_or() {
+    let text = "fn f(x: Option<u32>) -> u32 {\n    x.unwrap_or(0) + x.unwrap_or_default()\n}\n";
+    let r = lint_one("src/container/chunk.rs", text);
+    assert_eq!(count(&r, Check::PanicFree), 0, "{:?}", r.diagnostics);
+}
+
+#[test]
+fn panic_free_ignores_tokens_in_strings_and_comments() {
+    let text = "fn f() -> &'static str {\n    // .unwrap() would panic!( here\n    \".unwrap()\"\n}\n";
+    let r = lint_one("src/container/chunk.rs", text);
+    assert_eq!(count(&r, Check::PanicFree), 0, "{:?}", r.diagnostics);
+}
+
+#[test]
+fn panic_free_catches_all_macro_forms() {
+    let text = "fn f(n: u32) {\n    match n {\n        0 => panic!(\"no\"),\n        1 => unreachable!(),\n        2 => todo!(),\n        _ => unimplemented!(),\n    }\n}\n";
+    let r = lint_one("src/codec/rle.rs", text);
+    assert_eq!(count(&r, Check::PanicFree), 4, "{:?}", r.diagnostics);
+}
+
+// ---------------------------------------------------------- range-index
+
+#[test]
+fn range_index_fires_and_waiver_suppresses() {
+    let bad = "fn f(b: &[u8]) -> &[u8] {\n    &b[1..5]\n}\n";
+    let r = lint_one("src/archive/reader.rs", bad);
+    assert!(has(&r, Check::RangeIndex, 2), "{:?}", r.diagnostics);
+
+    let waived = "fn f(b: &[u8]) -> &[u8] {\n    &b[1..5] // lint: allow(range-index) -- caller checked len >= 5\n}\n";
+    let r = lint_one("src/archive/reader.rs", waived);
+    assert!(r.is_clean(), "{:?}", r.diagnostics);
+    assert_eq!(r.waivers.len(), 1);
+    assert_eq!(r.waivers[0].suppressed, 1);
+    assert!(!r.waivers[0].reason.is_empty());
+}
+
+#[test]
+fn range_index_own_line_waiver_covers_multiline_statement() {
+    let text = "fn f(b: &[u8]) -> u32 {\n    // lint: allow(range-index) -- b.len() >= 8 was checked by the caller\n    u32::from_le_bytes(\n        b[4..8].try_into().unwrap_or([0; 4]),\n    )\n}\n";
+    let r = lint_one("src/archive/reader.rs", text);
+    assert!(r.is_clean(), "{:?}", r.diagnostics);
+}
+
+#[test]
+fn range_index_ignores_scalar_index_and_match_ranges() {
+    let text = "fn f(b: &[u8]) -> u8 {\n    match b.len() {\n        0..=3 => 0,\n        _ => b[0],\n    }\n}\n";
+    let r = lint_one("src/archive/reader.rs", text);
+    assert_eq!(count(&r, Check::RangeIndex), 0, "{:?}", r.diagnostics);
+}
+
+// --------------------------------------------------------------- waiver
+
+#[test]
+fn unused_waiver_is_a_diagnostic() {
+    let text = "// lint: allow(panic-free) -- nothing here actually panics\nfn f() {}\n";
+    let r = lint_one("src/container/chunk.rs", text);
+    assert!(has(&r, Check::Waiver, 1), "{:?}", r.diagnostics);
+}
+
+#[test]
+fn empty_waiver_reason_is_a_diagnostic() {
+    let text = "fn f(b: &[u8]) -> &[u8] {\n    &b[1..5] // lint: allow(range-index) --\n}\n";
+    let r = lint_one("src/archive/reader.rs", text);
+    assert!(has(&r, Check::Waiver, 2), "{:?}", r.diagnostics);
+    // The waiver never parsed, so the underlying finding still fires.
+    assert!(has(&r, Check::RangeIndex, 2), "{:?}", r.diagnostics);
+}
+
+#[test]
+fn unknown_check_in_waiver_is_a_diagnostic() {
+    let text = "fn f() {} // lint: allow(everything) -- please\n";
+    let r = lint_one("src/util.rs", text);
+    assert!(has(&r, Check::Waiver, 1), "{:?}", r.diagnostics);
+}
+
+#[test]
+fn waiver_cannot_waive_waiver() {
+    let text = "fn f() {} // lint: allow(waiver) -- meta\n";
+    let r = lint_one("src/util.rs", text);
+    assert!(has(&r, Check::Waiver, 1), "{:?}", r.diagnostics);
+}
+
+#[test]
+fn doc_comments_never_parse_as_waivers() {
+    // The grammar is quoted in module docs; doc text must be inert.
+    let text = "/// lint: allow(panic-free) -- quoted grammar in docs\nfn f() {}\n";
+    let r = lint_one("src/util.rs", text);
+    assert!(r.is_clean(), "{:?}", r.diagnostics);
+    assert!(r.waivers.is_empty());
+}
+
+// ------------------------------------------------------- safety-comment
+
+#[test]
+fn safety_comment_missing_fires_everywhere() {
+    let text = "fn f(p: *const u8) -> u8 {\n    unsafe { *p }\n}\n";
+    let r = lint_one("src/tables/report.rs", text);
+    assert!(has(&r, Check::SafetyComment, 2), "{:?}", r.diagnostics);
+}
+
+#[test]
+fn safety_comment_above_block_passes() {
+    let text = "fn f(p: *const u8) -> u8 {\n    // SAFETY: caller guarantees p is valid for reads.\n    unsafe { *p }\n}\n";
+    let r = lint_one("src/tables/report.rs", text);
+    assert!(r.is_clean(), "{:?}", r.diagnostics);
+}
+
+#[test]
+fn safety_doc_section_on_unsafe_fn_passes() {
+    let text = "/// Reads a byte.\n///\n/// # Safety\n/// `p` must be valid for reads.\n#[inline]\npub unsafe fn read(p: *const u8) -> u8 {\n    // SAFETY: delegated to the caller per the doc contract.\n    unsafe { *p }\n}\n";
+    let r = lint_one("src/tables/report.rs", text);
+    assert!(r.is_clean(), "{:?}", r.diagnostics);
+}
+
+#[test]
+fn safety_comment_required_even_in_test_modules() {
+    let text = "#[cfg(test)]\nmod tests {\n    #[test]\n    fn t() {\n        let x = 7u8;\n        assert_eq!(unsafe { *(&x as *const u8) }, 7);\n    }\n}\n";
+    let r = lint_one("src/tables/report.rs", text);
+    assert!(count(&r, Check::SafetyComment) > 0, "{:?}", r.diagnostics);
+}
+
+// ---------------------------------------------------------- wire-consts
+
+#[test]
+fn duplicate_magic_definition_fires() {
+    let a = SourceFile {
+        path: "src/container/mod.rs".into(),
+        text: "pub const MAGIC: &[u8; 4] = b\"LCZ1\";\n".into(),
+    };
+    let b = SourceFile {
+        path: "src/other.rs".into(),
+        text: "pub const ALSO: &[u8; 4] = b\"LCZ1\";\n".into(),
+    };
+    let r = lint_files(&[a, b]);
+    assert_eq!(count(&r, Check::WireConsts), 1, "{:?}", r.diagnostics);
+}
+
+#[test]
+fn spelled_out_magic_outside_const_fires() {
+    let text = "fn write(out: &mut Vec<u8>) {\n    out.extend_from_slice(b\"LCS1\");\n}\n";
+    let r = lint_one("src/util.rs", text);
+    assert!(has(&r, Check::WireConsts, 2), "{:?}", r.diagnostics);
+}
+
+#[test]
+fn magic_in_test_module_is_exempt() {
+    let text = "#[cfg(test)]\nmod tests {\n    #[test]\n    fn t() {\n        assert_eq!(&b\"LCZ1\"[..0], b\"\");\n    }\n}\n";
+    let r = lint_one("src/util.rs", text);
+    assert_eq!(count(&r, Check::WireConsts), 0, "{:?}", r.diagnostics);
+}
+
+#[test]
+fn wire_code_family_collision_fires() {
+    let text = "pub const ERR_A: u16 = 7;\npub const ERR_B: u16 = 7;\n";
+    let r = lint_one("src/util.rs", text);
+    assert_eq!(count(&r, Check::WireConsts), 1, "{:?}", r.diagnostics);
+}
+
+#[test]
+fn doc_layout_drift_fires() {
+    // A frame-layout doc that disagrees with the const: docs say
+    // 4 + 1 + 8 + 4 = 17 but the const claims 18.
+    let text = "\
+//! ```text
+//! [magic \"LCS1\" (4)] [type u8] [request_id u64] [body_len u32] [body ...]
+//! ```
+//!
+//! The fixed header is [`FRAME_HEADER_LEN`] = 18 bytes.
+pub const FRAME_MAGIC: [u8; 4] = *b\"LCS1\";
+pub const FRAME_HEADER_LEN: usize = 18;
+";
+    let r = lint_one("src/server/proto.rs", text);
+    assert!(
+        r.diagnostics
+            .iter()
+            .any(|d| d.check == Check::WireConsts && d.line == 2),
+        "{:?}",
+        r.diagnostics
+    );
+}
+
+#[test]
+fn missing_doc_anchor_fires() {
+    // A file that defines the frame magic but documents nothing.
+    let text = "pub const FRAME_MAGIC: [u8; 4] = *b\"LCS1\";\npub const FRAME_HEADER_LEN: usize = 17;\n";
+    let r = lint_one("src/server/proto.rs", text);
+    assert!(count(&r, Check::WireConsts) > 0, "{:?}", r.diagnostics);
+}
+
+// ----------------------------------------------------------- float-cast
+
+#[test]
+fn float_cast_fires_in_quantizer_and_simd() {
+    let text = "fn f(x: u32) -> f32 {\n    x as f32\n}\n";
+    let r = lint_one("src/quantizer/extra.rs", text);
+    assert!(has(&r, Check::FloatCast, 2), "{:?}", r.diagnostics);
+    let r = lint_one("src/simd/extra.rs", text);
+    assert!(has(&r, Check::FloatCast, 2), "{:?}", r.diagnostics);
+}
+
+#[test]
+fn float_cast_waiver_suppresses() {
+    let text = "// lint: allow(float-cast) -- exact small-integer convert\nfn f(x: u8) -> f32 {\n    x as f32\n}\n";
+    let r = lint_one("src/quantizer/extra.rs", text);
+    assert!(r.is_clean(), "{:?}", r.diagnostics);
+    assert_eq!(r.waivers[0].suppressed, 1);
+}
+
+#[test]
+fn float_cast_ignored_outside_the_domain() {
+    let text = "fn f(x: u32) -> f64 {\n    x as f64\n}\n";
+    let r = lint_one("src/tables/report.rs", text);
+    assert_eq!(count(&r, Check::FloatCast), 0, "{:?}", r.diagnostics);
+}
+
+#[test]
+fn float_cast_int_casts_not_flagged() {
+    let text = "fn f(x: f32) -> u32 {\n    x as u32\n}\n";
+    let r = lint_one("src/quantizer/extra.rs", text);
+    assert_eq!(count(&r, Check::FloatCast), 0, "{:?}", r.diagnostics);
+}
+
+// ---------------------------------------------------------- integration
+
+/// The whole point: the shipped tree is lint-clean, with every waiver
+/// carrying a reason.
+#[test]
+fn shipped_tree_lints_clean() {
+    let src = std::path::Path::new(env!("CARGO_MANIFEST_DIR")).join("src");
+    let report = lint_tree(&src).expect("scan src tree");
+    assert!(report.files_scanned > 50, "tree went missing?");
+    let rendered: Vec<String> = report.diagnostics.iter().map(|d| d.to_string()).collect();
+    assert!(
+        report.is_clean(),
+        "lint diagnostics on the shipped tree:\n{}",
+        rendered.join("\n")
+    );
+    assert!(!report.waivers.is_empty(), "expected the audited waivers");
+    for w in &report.waivers {
+        assert!(!w.reason.is_empty(), "waiver without reason: {w}");
+        assert!(w.suppressed > 0, "dead waiver escaped the linter: {w}");
+    }
+}
