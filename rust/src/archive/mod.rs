@@ -82,6 +82,16 @@
 //!   with bounds-checked arithmetic and caps every allocation by what
 //!   the file actually holds — corrupt metadata produces typed errors
 //!   or holes, never a panic or an OOM.
+//! * **The write path upholds the same contract.** Every archive (and
+//!   every scrub rewrite, via [`repair::scrub_path`]) reaches disk
+//!   through the crash-consistent atomic-write sequence — temp
+//!   sibling, fsync, atomic rename, parent-directory sync — whose
+//!   step-by-step power-cut guarantees are specified in the
+//!   [`crate::fsio`] module docs and enforced by the every-syscall
+//!   crash campaign in `tests/crash_consistency.rs`. A crash can cost
+//!   at most the write in flight (the old archive survives bit-exact,
+//!   plus maybe a stale `*.tmp.*` sibling that `scrub_path` sweeps);
+//!   it can never leave a silently truncated or blended archive.
 
 pub mod index;
 pub mod reader;
@@ -90,7 +100,10 @@ pub mod stats;
 
 pub use index::{Index, IndexEntry};
 pub use reader::{ChunkHandle, Reader, Source};
-pub use repair::{salvage, scrub, Hole, Salvage, SalvageReport, ScrubReport};
+pub use repair::{
+    salvage, scrub, scrub_path, scrub_path_in, Hole, Salvage, SalvageReport, ScrubFileOutcome,
+    ScrubReport,
+};
 pub use stats::ChunkStats;
 
 use crate::container::ContainerVersion;

@@ -13,6 +13,7 @@ use crate::container::{
 };
 use crate::coordinator::engine::{decode_chunk_record_into, quantizer_from_header};
 use crate::coordinator::EngineConfig;
+use crate::fsio::VfsFile;
 use crate::quantizer::QuantizerConfig;
 use crate::scratch::Scratch;
 
@@ -27,9 +28,14 @@ use super::ArchiveError;
 /// overlapping frames' byte span.
 pub enum Source {
     Bytes(Vec<u8>),
-    /// Seek+read under a mutex (the reader issues one positional read
-    /// per operation, so the lock is uncontended).
-    File { file: Mutex<std::fs::File>, len: u64 },
+    /// Positional reads through a [`crate::fsio::VfsFile`] handle —
+    /// the real filesystem or the fault-injecting simulation — under a
+    /// mutex (the reader issues one positional read per operation, so
+    /// the lock is uncontended).
+    File {
+        file: Mutex<Box<dyn VfsFile>>,
+        len: u64,
+    },
 }
 
 impl Source {
@@ -41,7 +47,20 @@ impl Source {
         let meta = file.metadata().map_err(|e| ArchiveError::Io(e.to_string()))?;
         let len = meta.len();
         Ok(Source::File {
-            file: Mutex::new(file),
+            file: Mutex::new(Box::new(file)),
+            len,
+        })
+    }
+
+    /// Open `path` through any [`crate::fsio::Vfs`] implementation.
+    pub fn from_vfs<V: crate::fsio::Vfs>(
+        vfs: &V,
+        path: &std::path::Path,
+    ) -> Result<Source, ArchiveError> {
+        let mut file = vfs.open(path).map_err(|e| ArchiveError::Io(e.to_string()))?;
+        let len = file.len().map_err(|e| ArchiveError::Io(e.to_string()))?;
+        Ok(Source::File {
+            file: Mutex::new(Box::new(file)),
             len,
         })
     }
@@ -67,31 +86,22 @@ impl Source {
                 Ok(())
             }
             Source::File { file, .. } => {
-                use std::io::{Read, Seek, SeekFrom};
                 // A poisoned lock means an earlier reader panicked
                 // mid-read; surface it as a typed error instead of
                 // propagating the panic into this decode path.
                 let mut f = file
                     .lock()
                     .map_err(|_| ArchiveError::Io("file lock poisoned by an earlier panic".into()))?;
-                f.seek(SeekFrom::Start(offset))
-                    .map_err(|e| ArchiveError::Io(e.to_string()))?;
-                // Positional reads loop explicitly: a short read means
-                // "ask again", not corruption (a signal landing during
-                // a large decode_range read returns partial data or
-                // EINTR, and must never surface as a spurious error —
-                // only a genuine EOF is `Truncated`).
-                let mut filled = 0usize;
-                while filled < buf.len() {
-                    // lint: allow(range-index) -- local output buffer; filled < buf.len() is the loop condition
-                    match f.read(&mut buf[filled..]) {
-                        Ok(0) => return Err(ArchiveError::Truncated),
-                        Ok(n) => filled += n,
-                        Err(e) if e.kind() == std::io::ErrorKind::Interrupted => continue,
-                        Err(e) => return Err(ArchiveError::Io(e.to_string())),
+                // The crate-wide transient policy: short reads and
+                // EINTR mean "ask again" (bounded), never corruption —
+                // only a genuine EOF is `Truncated`.
+                crate::fsio::read_exact_at(&mut **f, offset, buf).map_err(|e| {
+                    if e.kind() == std::io::ErrorKind::UnexpectedEof {
+                        ArchiveError::Truncated
+                    } else {
+                        ArchiveError::Io(e.to_string())
                     }
-                }
-                Ok(())
+                })
             }
         }
     }
@@ -304,6 +314,15 @@ impl Reader {
     pub fn open_file<P: AsRef<std::path::Path>>(path: P) -> Result<Reader, ArchiveError> {
         let f = std::fs::File::open(path).map_err(|e| ArchiveError::Io(e.to_string()))?;
         Reader::open_indexed(Source::from_file(f)?)
+    }
+
+    /// [`Reader::open_file`] through any [`crate::fsio::Vfs`] — how
+    /// the crash campaign re-opens archives on the simulated volume.
+    pub fn open_path_in<V: crate::fsio::Vfs>(
+        vfs: &V,
+        path: &std::path::Path,
+    ) -> Result<Reader, ArchiveError> {
+        Reader::open_indexed(Source::from_vfs(vfs, path)?)
     }
 
     pub fn header(&self) -> &Header {

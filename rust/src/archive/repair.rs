@@ -253,6 +253,57 @@ pub fn scrub(data: &[u8]) -> Result<ScrubReport, ArchiveError> {
     })
 }
 
+/// What [`scrub_path`] did to the file.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct ScrubFileOutcome {
+    /// The in-memory scrub account (repairs found, patched image).
+    pub report: ScrubReport,
+    /// Stale `*.tmp.*` siblings from crashed earlier runs, removed
+    /// before the scrub (see [`crate::fsio::sweep_stale_temps`]).
+    pub swept_temps: Vec<std::path::PathBuf>,
+    /// True when a patched image was atomically renamed over the
+    /// file; false when it was already clean.
+    pub rewritten: bool,
+}
+
+/// Scrub an archive file on the real filesystem: sweep stale temp
+/// siblings, verify, and — only if repairs were needed — replace the
+/// file with the patched image via the crash-consistent atomic-write
+/// sequence ([`crate::fsio`]). All-or-nothing by construction: any
+/// failure (including mid-rewrite power loss or ENOSPC) leaves the
+/// original archive bytes untouched on disk.
+pub fn scrub_path(path: &std::path::Path) -> Result<ScrubFileOutcome, ArchiveError> {
+    scrub_path_in(&crate::fsio::RealVfs, path)
+}
+
+/// [`scrub_path`] over any [`crate::fsio::Vfs`] — the form the crash
+/// campaign drives against the simulated filesystem.
+pub fn scrub_path_in<V: crate::fsio::Vfs>(
+    vfs: &V,
+    path: &std::path::Path,
+) -> Result<ScrubFileOutcome, ArchiveError> {
+    let swept_temps = crate::fsio::sweep_stale_temps_in(vfs, path)
+        .map_err(|e| ArchiveError::Io(e.to_string()))?;
+    let data = vfs
+        .read(path)
+        .map_err(|e| ArchiveError::Io(format!("reading {}: {e}", path.display())))?;
+    let report = scrub(&data)?;
+    let rewritten = match &report.patched {
+        Some(patched) => {
+            crate::fsio::atomic_write_in(vfs, path, patched).map_err(|e| {
+                ArchiveError::Io(format!("atomic rewrite of {}: {e}", path.display()))
+            })?;
+            true
+        }
+        None => false,
+    };
+    Ok(ScrubFileOutcome {
+        report,
+        swept_temps,
+        rewritten,
+    })
+}
+
 /// Salvage whatever is bit-exactly recoverable from a (possibly
 /// damaged or truncated) container. Tries the indexed walk first
 /// ([`Reader::decode_salvage`], which needs a surviving tail) and

@@ -242,7 +242,7 @@ pub fn compress_stream<R: Read, W: Write>(
         chunks: records,
     };
     let bytes = container.to_bytes();
-    out.write_all(&bytes)?;
+    crate::fsio::write_all_retry(out, &bytes)?;
     Ok(RunStats {
         n_values: n_values as usize,
         input_bytes: n_values as usize * 4,
@@ -252,18 +252,12 @@ pub fn compress_stream<R: Read, W: Write>(
     })
 }
 
-/// Read until the buffer is full or EOF; returns bytes read.
+/// Read until the buffer is full or EOF; returns bytes read. The
+/// bounded-retry policy in [`crate::fsio`] absorbs `Interrupted`
+/// signals (the hand-rolled loop this replaces propagated them as
+/// spurious errors).
 fn read_full<R: Read>(r: &mut R, buf: &mut [u8]) -> Result<usize> {
-    let mut filled = 0;
-    while filled < buf.len() {
-        // lint: allow(range-index) -- filled < buf.len() is the loop condition
-        let n = r.read(&mut buf[filled..])?;
-        if n == 0 {
-            break;
-        }
-        filled += n;
-    }
-    Ok(filled)
+    Ok(crate::fsio::read_full_retry(r, buf)?)
 }
 
 /// XOR `src` into `acc` starting at byte `pos`, growing `acc` with
@@ -524,7 +518,7 @@ pub fn decompress_stream<R: Read, W: Write + Send>(
                     for x in &v {
                         byte_buf.extend_from_slice(&x.to_le_bytes());
                     }
-                    if let Err(e) = out.write_all(&byte_buf) {
+                    if let Err(e) = crate::fsio::write_all_retry(&mut *out, &byte_buf) {
                         return (written, Err(e.into()));
                     }
                     written += v.len() as u64;

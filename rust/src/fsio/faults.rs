@@ -1,0 +1,163 @@
+//! Seeded I/O fault plans: *which* operation fails, and *how*.
+//!
+//! A [`FaultPlan`] maps operation indices (the [`crate::fsio::SimVfs`]
+//! op counter, which counts every filesystem call in program order) to
+//! an [`IoFaultKind`]. Faults are one-shot by construction: the op
+//! counter advances on every *attempt*, so a retried operation lands
+//! on a fresh index and succeeds — exactly the transient-signal shape
+//! the bounded retry policy in [`crate::fsio`] is written against.
+//!
+//! These are the in-flight counterpart of the at-rest fault kinds in
+//! [`crate::verify::faults`] (bit flips, smears, truncations); the
+//! [`crate::verify::faults::io_sweep`] helper derives the every-index
+//! crash-point campaign from a recorded trace length.
+
+use std::collections::BTreeMap;
+use std::io;
+
+/// How a planned operation misbehaves.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
+pub enum IoFaultKind {
+    /// Hard failure: the device is out of space. Not retryable.
+    Enospc,
+    /// Hard failure: a generic device I/O error. Not retryable.
+    Eio,
+    /// Transient: the call was interrupted by a signal and performed
+    /// no work. A bounded retry must absorb it.
+    Interrupted,
+    /// A write consumes only about half of the buffer it was handed
+    /// (reported honestly via the return count). On a non-write op
+    /// this degrades to [`IoFaultKind::Interrupted`].
+    ShortWrite,
+    /// A positional read fills only about half of the buffer. On a
+    /// non-read op this degrades to [`IoFaultKind::Interrupted`].
+    ShortRead,
+    /// Power loss *during* the operation: the op fails, and every
+    /// later op fails too until [`crate::fsio::SimVfs::remount`].
+    PowerCut,
+}
+
+impl IoFaultKind {
+    /// Every kind, for campaign sweeps.
+    pub const ALL: [IoFaultKind; 6] = [
+        IoFaultKind::Enospc,
+        IoFaultKind::Eio,
+        IoFaultKind::Interrupted,
+        IoFaultKind::ShortWrite,
+        IoFaultKind::ShortRead,
+        IoFaultKind::PowerCut,
+    ];
+
+    /// The error-returning kinds (everything except the partial
+    /// read/write shapes and the power cut).
+    pub const ERRORS: [IoFaultKind; 3] =
+        [IoFaultKind::Enospc, IoFaultKind::Eio, IoFaultKind::Interrupted];
+
+    /// Stable label for campaign case names.
+    pub fn label(self) -> &'static str {
+        match self {
+            IoFaultKind::Enospc => "enospc",
+            IoFaultKind::Eio => "eio",
+            IoFaultKind::Interrupted => "interrupted",
+            IoFaultKind::ShortWrite => "short-write",
+            IoFaultKind::ShortRead => "short-read",
+            IoFaultKind::PowerCut => "power-cut",
+        }
+    }
+
+    /// The `io::Error` this kind surfaces as. Only `Interrupted` needs
+    /// a semantic `ErrorKind` (the retry policy branches on it);
+    /// ENOSPC/EIO are modeled as opaque errors so the simulation does
+    /// not depend on `ErrorKind` variants stabilized after the pinned
+    /// toolchain.
+    pub fn to_error(self) -> io::Error {
+        match self {
+            IoFaultKind::Enospc => io::Error::other("ENOSPC (simulated): no space left on device"),
+            IoFaultKind::Eio => io::Error::other("EIO (simulated): device input/output error"),
+            IoFaultKind::Interrupted => io::Error::new(
+                io::ErrorKind::Interrupted,
+                "EINTR (simulated): interrupted by signal",
+            ),
+            IoFaultKind::ShortWrite | IoFaultKind::ShortRead | IoFaultKind::PowerCut => {
+                io::Error::other("simulated fault misapplied as an error")
+            }
+        }
+    }
+}
+
+/// A deterministic schedule of injected faults, keyed by op index.
+#[derive(Debug, Clone, Default, PartialEq, Eq)]
+pub struct FaultPlan {
+    faults: BTreeMap<u64, IoFaultKind>,
+}
+
+impl FaultPlan {
+    /// No faults: every operation succeeds.
+    pub fn none() -> FaultPlan {
+        FaultPlan::default()
+    }
+
+    /// Fault exactly the operation at `index`.
+    pub fn single(index: u64, kind: IoFaultKind) -> FaultPlan {
+        FaultPlan::none().fail_at(index, kind)
+    }
+
+    /// Builder: add a fault at `index` (last write wins).
+    pub fn fail_at(mut self, index: u64, kind: IoFaultKind) -> FaultPlan {
+        self.faults.insert(index, kind);
+        self
+    }
+
+    /// The fault scheduled for op `index`, if any.
+    pub fn get(&self, index: u64) -> Option<IoFaultKind> {
+        self.faults.get(&index).copied()
+    }
+
+    /// Number of scheduled faults.
+    pub fn len(&self) -> usize {
+        self.faults.len()
+    }
+
+    /// True when no fault is scheduled.
+    pub fn is_empty(&self) -> bool {
+        self.faults.is_empty()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn plans_are_keyed_by_op_index() {
+        let plan = FaultPlan::none()
+            .fail_at(3, IoFaultKind::Eio)
+            .fail_at(7, IoFaultKind::PowerCut);
+        assert_eq!(plan.get(3), Some(IoFaultKind::Eio));
+        assert_eq!(plan.get(7), Some(IoFaultKind::PowerCut));
+        assert_eq!(plan.get(4), None);
+        assert_eq!(plan.len(), 2);
+        assert!(!plan.is_empty());
+        assert!(FaultPlan::none().is_empty());
+    }
+
+    #[test]
+    fn interrupted_maps_to_the_semantic_error_kind() {
+        let e = IoFaultKind::Interrupted.to_error();
+        assert_eq!(e.kind(), std::io::ErrorKind::Interrupted);
+        // The hard-failure kinds must NOT look transient.
+        for kind in IoFaultKind::ERRORS {
+            if kind != IoFaultKind::Interrupted {
+                assert_ne!(kind.to_error().kind(), std::io::ErrorKind::Interrupted);
+            }
+        }
+    }
+
+    #[test]
+    fn labels_are_unique() {
+        let mut seen = std::collections::HashSet::new();
+        for kind in IoFaultKind::ALL {
+            assert!(seen.insert(kind.label()), "duplicate label {}", kind.label());
+        }
+    }
+}

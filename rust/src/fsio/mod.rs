@@ -1,0 +1,437 @@
+//! Crash-consistent file I/O behind a swappable filesystem.
+//!
+//! Everything the crate does to a filesystem goes through the [`Vfs`]
+//! trait: [`RealVfs`] maps 1:1 onto `std::fs` (zero-cost), and
+//! [`SimVfs`] is a deterministic in-memory filesystem with a real
+//! durability model plus seeded fault injection — the instrument the
+//! every-syscall crash campaign in `tests/crash_consistency.rs` is
+//! built on.
+//!
+//! # The atomic-write sequence
+//!
+//! [`atomic_write`] / [`atomic_write_with`] publish a file in five
+//! steps:
+//!
+//! 1. **create** `dest.tmp.<pid>.<serial>` with create-new semantics
+//!    (a name collision is a typed `AlreadyExists` error, never two
+//!    writers interleaving into one temp);
+//! 2. **write** the payload into the temp;
+//! 3. **fsync** the temp (data and size);
+//! 4. **rename** the temp onto `dest` — the atomic commit point;
+//! 5. **fsync the parent directory**, making the rename itself
+//!    durable (best-effort: some filesystems reject directory fsync,
+//!    and the commit then rides on the filesystem journal).
+//!
+//! # Crash-consistency contract
+//!
+//! What a power cut leaves at `dest` after "remount", per step ("old"
+//! means the previous contents of `dest`, or no file if there was
+//! none):
+//!
+//! | power cut during      | `dest` after remount     | litter            |
+//! |-----------------------|--------------------------|-------------------|
+//! | steps 1–3 (staging)   | old, bit-exact           | maybe a stale temp|
+//! | step 4 (rename)       | old **or** new, bit-exact, never a blend | maybe a stale temp |
+//! | step 5 (dir sync)     | old or new on strict-POSIX; new once the journal commits | maybe a stale temp |
+//! | after step 5          | new, bit-exact           | none              |
+//!
+//! `dest` is never observable as a prefix, a blend, or garbage: until
+//! the rename commits, readers see only the complete old bytes, and
+//! after it only the complete new bytes. The only residue of a crash
+//! is a stale `*.tmp.*` sibling, which [`sweep_stale_temps`] removes
+//! (`lc scrub` does this automatically). Both remount models —
+//! strict-POSIX and metadata-journaled — are simulated; see
+//! [`CrashStyle`].
+//!
+//! The archive layer builds its recovery guarantees on this contract:
+//! see "The recovery contract (v4)" in [`crate::archive`].
+//!
+//! # Transient-error retry policy
+//!
+//! `ErrorKind::Interrupted` and short transfers are *transient*
+//! signals, not failures. The one crate-wide policy lives here —
+//! [`write_all_retry`], [`read_full_retry`], [`read_exact_at`] — and
+//! is bounded: at most [`MAX_IO_RETRIES`] consecutive zero-progress
+//! attempts before the error is surfaced (a fault, not a spin).
+
+pub mod faults;
+pub mod sim;
+pub mod vfs;
+
+pub use faults::{FaultPlan, IoFaultKind};
+pub use sim::{CrashStyle, OpRecord, SimVfs, TraceOp};
+pub use vfs::{RealVfs, Vfs, VfsFile};
+
+use std::ffi::{OsStr, OsString};
+use std::io;
+use std::path::{Path, PathBuf};
+use std::sync::atomic::{AtomicU64, Ordering};
+
+/// The marker between a destination name and the pid/serial suffix of
+/// its in-flight temp siblings: `dest` stages into
+/// `dest.tmp.<pid>.<serial>`.
+pub const TEMP_INFIX: &str = ".tmp.";
+
+/// Maximum consecutive zero-progress attempts (interrupts, empty
+/// transfers) the retry helpers absorb before surfacing the error.
+pub const MAX_IO_RETRIES: usize = 64;
+
+/// Process-wide serial for temp names: two threads writing the same
+/// destination concurrently get distinct temps (the pid alone was the
+/// collision bug this replaces), and `create_new` turns any remaining
+/// collision into a typed error instead of interleaved writes.
+static TEMP_SERIAL: AtomicU64 = AtomicU64::new(0);
+
+/// The parent directory of `path`, with the empty parent normalized
+/// to `"."` so directory ops always have a real target.
+pub(crate) fn parent_dir(path: &Path) -> PathBuf {
+    match path.parent() {
+        Some(p) if !p.as_os_str().is_empty() => p.to_path_buf(),
+        _ => PathBuf::from("."),
+    }
+}
+
+/// A unique temp sibling for `path`: `<name>.tmp.<pid>.<serial>`.
+fn temp_sibling(path: &Path) -> PathBuf {
+    let serial = TEMP_SERIAL.fetch_add(1, Ordering::Relaxed);
+    let mut name = path
+        .file_name()
+        .map(OsStr::to_os_string)
+        .unwrap_or_else(|| OsString::from("out"));
+    name.push(format!("{TEMP_INFIX}{}.{serial}", std::process::id()));
+    path.with_file_name(name)
+}
+
+/// Write `buf` completely, absorbing interrupts and short writes
+/// (bounded). `Ok(0)` from the writer is a hard `WriteZero` error.
+pub fn write_all_retry<W: io::Write + ?Sized>(w: &mut W, buf: &[u8]) -> io::Result<()> {
+    let mut written = 0usize;
+    let mut stalls = 0usize;
+    while written < buf.len() {
+        // lint: allow(range-index) -- written < buf.len() is the loop guard
+        match w.write(&buf[written..]) {
+            Ok(0) => {
+                return Err(io::Error::new(
+                    io::ErrorKind::WriteZero,
+                    "writer accepted zero bytes",
+                ))
+            }
+            Ok(n) => {
+                written += n;
+                stalls = 0;
+            }
+            Err(e) if e.kind() == io::ErrorKind::Interrupted => {
+                stalls += 1;
+                if stalls > MAX_IO_RETRIES {
+                    return Err(e);
+                }
+            }
+            Err(e) => return Err(e),
+        }
+    }
+    Ok(())
+}
+
+/// Fill `buf` from `r` until full or end-of-input, absorbing
+/// interrupts (bounded). Returns the bytes read; fewer than
+/// `buf.len()` means end-of-input, not an error.
+pub fn read_full_retry<R: io::Read + ?Sized>(r: &mut R, buf: &mut [u8]) -> io::Result<usize> {
+    let mut filled = 0usize;
+    let mut stalls = 0usize;
+    while filled < buf.len() {
+        // lint: allow(range-index) -- filled < buf.len() is the loop guard
+        match r.read(&mut buf[filled..]) {
+            Ok(0) => break,
+            Ok(n) => {
+                filled += n;
+                stalls = 0;
+            }
+            Err(e) if e.kind() == io::ErrorKind::Interrupted => {
+                stalls += 1;
+                if stalls > MAX_IO_RETRIES {
+                    return Err(e);
+                }
+            }
+            Err(e) => return Err(e),
+        }
+    }
+    Ok(filled)
+}
+
+/// Fill `buf` exactly from absolute `offset`, absorbing interrupts and
+/// short reads (bounded). Hitting end-of-file first is a typed
+/// `UnexpectedEof`. This is the positional-read policy the archive
+/// reader's `Source` uses.
+pub fn read_exact_at<F: VfsFile + ?Sized>(
+    f: &mut F,
+    offset: u64,
+    buf: &mut [u8],
+) -> io::Result<()> {
+    let mut filled = 0usize;
+    let mut stalls = 0usize;
+    while filled < buf.len() {
+        let at = offset.saturating_add(filled as u64);
+        // lint: allow(range-index) -- filled < buf.len() is the loop guard
+        match f.read_at(at, &mut buf[filled..]) {
+            Ok(0) => {
+                return Err(io::Error::new(
+                    io::ErrorKind::UnexpectedEof,
+                    "positional read ran off the end of the file",
+                ))
+            }
+            Ok(n) => {
+                filled += n;
+                stalls = 0;
+            }
+            Err(e) if e.kind() == io::ErrorKind::Interrupted => {
+                stalls += 1;
+                if stalls > MAX_IO_RETRIES {
+                    return Err(e);
+                }
+            }
+            Err(e) => return Err(e),
+        }
+    }
+    Ok(())
+}
+
+/// Atomically replace `path` with `bytes` on the real filesystem.
+/// See the module docs for the sequence and its contract.
+pub fn atomic_write(path: &Path, bytes: &[u8]) -> io::Result<()> {
+    atomic_write_in(&RealVfs, path, bytes)
+}
+
+/// [`atomic_write`] over any [`Vfs`].
+pub fn atomic_write_in<V: Vfs>(vfs: &V, path: &Path, bytes: &[u8]) -> io::Result<()> {
+    atomic_write_with_in(vfs, path, |file| write_all_retry(file, bytes))
+}
+
+/// Atomically replace `path` with whatever `fill` writes into the temp
+/// file, on the real filesystem. Streaming callers wrap the handle in
+/// a `BufWriter` (and must flush it before returning).
+pub fn atomic_write_with<F>(path: &Path, fill: F) -> io::Result<()>
+where
+    F: FnOnce(&mut std::fs::File) -> io::Result<()>,
+{
+    atomic_write_with_in(&RealVfs, path, fill)
+}
+
+/// [`atomic_write_with`] over any [`Vfs`].
+pub fn atomic_write_with_in<V, F>(vfs: &V, path: &Path, fill: F) -> io::Result<()>
+where
+    V: Vfs,
+    F: FnOnce(&mut V::File) -> io::Result<()>,
+{
+    let tmp = temp_sibling(path);
+    // A create collision propagates as-is: the temp belongs to some
+    // other writer, so there is nothing of ours to clean up.
+    let mut file = vfs.create_new(&tmp)?;
+    let staged = fill(&mut file).and_then(|()| file.sync_data());
+    drop(file);
+    let committed = staged.and_then(|()| vfs.rename(&tmp, path));
+    match committed {
+        Ok(()) => {
+            // Step 5 is best-effort (see the module docs): a
+            // filesystem that rejects directory fsync still commits
+            // the rename through its journal.
+            let _ = vfs.sync_dir(&parent_dir(path));
+            Ok(())
+        }
+        Err(e) => {
+            let _ = vfs.remove(&tmp);
+            Err(e)
+        }
+    }
+}
+
+/// Remove stale `<dest>.tmp.*` siblings left behind by crashed runs.
+/// Returns the paths removed. Callers must hold exclusive access to
+/// `dest` (as `lc scrub` does): a *live* writer's temp matches the
+/// same pattern.
+pub fn sweep_stale_temps(dest: &Path) -> io::Result<Vec<PathBuf>> {
+    sweep_stale_temps_in(&RealVfs, dest)
+}
+
+/// [`sweep_stale_temps`] over any [`Vfs`].
+pub fn sweep_stale_temps_in<V: Vfs>(vfs: &V, dest: &Path) -> io::Result<Vec<PathBuf>> {
+    let dir = parent_dir(dest);
+    let name = dest.file_name().ok_or_else(|| {
+        io::Error::new(
+            io::ErrorKind::InvalidInput,
+            format!("destination has no file name: {}", dest.display()),
+        )
+    })?;
+    let mut prefix = name.to_os_string();
+    prefix.push(TEMP_INFIX);
+    let mut swept = Vec::new();
+    for entry in vfs.read_dir(&dir)? {
+        if entry.as_encoded_bytes().starts_with(prefix.as_encoded_bytes()) {
+            let victim = dir.join(&entry);
+            vfs.remove(&victim)?;
+            swept.push(victim);
+        }
+    }
+    Ok(swept)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use std::path::Path;
+
+    /// A unique real-FS scratch dir per test (removed on drop).
+    struct Scratch(PathBuf);
+
+    impl Scratch {
+        fn new(tag: &str) -> Scratch {
+            let dir = std::env::temp_dir().join(format!(
+                "lc_fsio_{}_{}_{}",
+                tag,
+                std::process::id(),
+                TEMP_SERIAL.fetch_add(1, Ordering::Relaxed)
+            ));
+            std::fs::create_dir_all(&dir).unwrap();
+            Scratch(dir)
+        }
+        fn path(&self, name: &str) -> PathBuf {
+            self.0.join(name)
+        }
+    }
+
+    impl Drop for Scratch {
+        fn drop(&mut self) {
+            let _ = std::fs::remove_dir_all(&self.0);
+        }
+    }
+
+    #[test]
+    fn atomic_write_roundtrips() {
+        let s = Scratch::new("roundtrip");
+        let dest = s.path("out.bin");
+        atomic_write(&dest, b"first").unwrap();
+        assert_eq!(std::fs::read(&dest).unwrap(), b"first");
+        atomic_write(&dest, b"second, longer payload").unwrap();
+        assert_eq!(std::fs::read(&dest).unwrap(), b"second, longer payload");
+    }
+
+    #[test]
+    fn failed_fill_leaves_destination_untouched_and_no_temp() {
+        let s = Scratch::new("failfill");
+        let dest = s.path("out.bin");
+        atomic_write(&dest, b"precious").unwrap();
+        let err = atomic_write_with(&dest, |_f| {
+            Err(io::Error::other("synthetic fill failure"))
+        })
+        .unwrap_err();
+        assert!(err.to_string().contains("synthetic"));
+        assert_eq!(std::fs::read(&dest).unwrap(), b"precious");
+        for entry in std::fs::read_dir(&s.0).unwrap() {
+            let name = entry.unwrap().file_name();
+            assert!(
+                !name.to_string_lossy().contains(TEMP_INFIX),
+                "stale temp left behind: {name:?}"
+            );
+        }
+    }
+
+    #[test]
+    fn temp_siblings_are_unique_within_a_process() {
+        let a = temp_sibling(Path::new("d/out.bin"));
+        let b = temp_sibling(Path::new("d/out.bin"));
+        assert_ne!(a, b, "two temps for one destination must not collide");
+        let name = a.file_name().unwrap().to_string_lossy().into_owned();
+        assert!(name.starts_with("out.bin.tmp."), "{name}");
+    }
+
+    #[test]
+    fn sweep_removes_only_matching_stale_temps() {
+        let s = Scratch::new("sweep");
+        let dest = s.path("arc.lc");
+        std::fs::write(&dest, b"archive").unwrap();
+        std::fs::write(s.path("arc.lc.tmp.1234.0"), b"stale").unwrap();
+        std::fs::write(s.path("arc.lc.tmp.1234.7"), b"stale").unwrap();
+        std::fs::write(s.path("other.lc.tmp.1234.0"), b"not ours").unwrap();
+        let swept = sweep_stale_temps(&dest).unwrap();
+        assert_eq!(swept.len(), 2);
+        assert_eq!(std::fs::read(&dest).unwrap(), b"archive");
+        assert!(s.path("other.lc.tmp.1234.0").exists());
+        assert!(!s.path("arc.lc.tmp.1234.0").exists());
+        assert!(!s.path("arc.lc.tmp.1234.7").exists());
+    }
+
+    /// An io::Write that interrupts every other call.
+    struct Flaky {
+        inner: Vec<u8>,
+        calls: usize,
+    }
+
+    impl io::Write for Flaky {
+        fn write(&mut self, buf: &[u8]) -> io::Result<usize> {
+            self.calls += 1;
+            if self.calls % 2 == 1 {
+                return Err(io::Error::new(io::ErrorKind::Interrupted, "EINTR"));
+            }
+            let n = buf.len().min(3);
+            self.inner.extend_from_slice(&buf[..n]);
+            Ok(n)
+        }
+        fn flush(&mut self) -> io::Result<()> {
+            Ok(())
+        }
+    }
+
+    #[test]
+    fn write_all_retry_absorbs_interrupts_and_short_writes() {
+        let mut w = Flaky {
+            inner: Vec::new(),
+            calls: 0,
+        };
+        write_all_retry(&mut w, b"0123456789").unwrap();
+        assert_eq!(w.inner, b"0123456789");
+    }
+
+    #[test]
+    fn write_all_retry_gives_up_after_bounded_interrupts() {
+        struct AlwaysEintr;
+        impl io::Write for AlwaysEintr {
+            fn write(&mut self, _buf: &[u8]) -> io::Result<usize> {
+                Err(io::Error::new(io::ErrorKind::Interrupted, "EINTR"))
+            }
+            fn flush(&mut self) -> io::Result<()> {
+                Ok(())
+            }
+        }
+        let err = write_all_retry(&mut AlwaysEintr, b"x").unwrap_err();
+        assert_eq!(err.kind(), io::ErrorKind::Interrupted);
+    }
+
+    #[test]
+    fn read_exact_at_retries_short_reads_on_the_sim() {
+        let vfs = SimVfs::new();
+        vfs.install(Path::new("f"), b"abcdefgh").unwrap();
+        let mut f = vfs.open(Path::new("f")).unwrap();
+        // Short-read the first positional read; the retry completes it.
+        vfs.set_plan(FaultPlan::single(vfs.op_count(), IoFaultKind::ShortRead));
+        let mut buf = [0u8; 8];
+        read_exact_at(&mut f, 0, &mut buf).unwrap();
+        assert_eq!(&buf, b"abcdefgh");
+        // Past EOF is a typed UnexpectedEof.
+        let mut beyond = [0u8; 4];
+        let err = read_exact_at(&mut f, 6, &mut beyond).unwrap_err();
+        assert_eq!(err.kind(), io::ErrorKind::UnexpectedEof);
+    }
+
+    #[test]
+    fn atomic_write_in_on_the_sim_publishes_durably() {
+        let vfs = SimVfs::new();
+        let dest = Path::new("data/out.lc");
+        vfs.install(dest, b"old").unwrap();
+        atomic_write_in(&vfs, dest, b"new contents").unwrap();
+        assert_eq!(vfs.peek(dest).unwrap(), b"new contents");
+        // Fully synced: survives even a strict-POSIX power cycle.
+        vfs.remount(CrashStyle::DropUnsynced);
+        assert_eq!(vfs.peek(dest).unwrap(), b"new contents");
+        // And no temp litter remains.
+        assert_eq!(vfs.list(Path::new("data")).len(), 1);
+    }
+}

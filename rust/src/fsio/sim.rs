@@ -1,0 +1,658 @@
+//! `SimVfs`: a deterministic in-memory filesystem with a real
+//! durability model, an operation trace, and seeded fault injection.
+//!
+//! # Durability model
+//!
+//! Each inode keeps **two** byte buffers: `data` (what reads observe
+//! now) and `synced` (what stable storage holds — updated only by
+//! `sync_data`). Each directory keeps **two** entry maps: `current`
+//! (what lookups observe now) and `durable` (what stable storage
+//! holds — updated only by `sync_dir`). [`SimVfs::crash`] powers the
+//! filesystem down; [`SimVfs::remount`] brings it back with only the
+//! durable state:
+//!
+//! * [`CrashStyle::DropUnsynced`] — strict POSIX: unsynced file bytes
+//!   *and* unsynced directory entries are gone. A rename that was
+//!   never followed by a parent-directory sync is rolled back.
+//! * [`CrashStyle::KeepEntries`] — a metadata-journaling filesystem:
+//!   entry operations survive as ordered, but file contents still
+//!   revert to their last-synced bytes. This is the mode that leaves
+//!   stale `*.tmp.*` siblings behind for `lc scrub` to sweep.
+//!
+//! Handles from before a crash are invalidated (a generation check),
+//! so a test cannot accidentally keep writing "across" the power cut.
+//!
+//! # Faults and the trace
+//!
+//! Every operation — including each individual `write`/`read_at` call
+//! — increments a global op counter, appends an [`OpRecord`] to the
+//! trace, and consults the [`FaultPlan`]. That makes the every-index
+//! crash-point campaign in `tests/crash_consistency.rs` exhaustive by
+//! construction: record a clean trace, then re-run once per op index
+//! with a fault planted there.
+
+use std::collections::{BTreeMap, HashMap};
+use std::ffi::OsString;
+use std::io;
+use std::path::{Path, PathBuf};
+use std::sync::{Arc, Mutex, MutexGuard, PoisonError};
+
+use super::faults::{FaultPlan, IoFaultKind};
+use super::parent_dir;
+use super::vfs::{Vfs, VfsFile};
+
+/// One traced filesystem operation (the op shape, not its outcome).
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub enum TraceOp {
+    /// Create-new of a file.
+    CreateNew(PathBuf),
+    /// Open of an existing file.
+    Open(PathBuf),
+    /// One `write` call on a handle (`len` = bytes offered).
+    Write {
+        /// Path the handle was opened with.
+        path: PathBuf,
+        /// Bytes offered to this write call.
+        len: usize,
+    },
+    /// Data sync on a handle.
+    SyncData(PathBuf),
+    /// One positional read on a handle.
+    ReadAt {
+        /// Path the handle was opened with.
+        path: PathBuf,
+        /// Absolute read offset.
+        offset: u64,
+        /// Bytes requested.
+        len: usize,
+    },
+    /// Length query on a handle.
+    Len(PathBuf),
+    /// Atomic rename.
+    Rename {
+        /// Source path.
+        from: PathBuf,
+        /// Destination path (replaced if present).
+        to: PathBuf,
+    },
+    /// File removal.
+    Remove(PathBuf),
+    /// Directory entry sync.
+    SyncDir(PathBuf),
+    /// Directory listing.
+    ReadDir(PathBuf),
+}
+
+/// One entry of the recorded operation trace.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct OpRecord {
+    /// Position in the global op sequence (0-based).
+    pub index: u64,
+    /// The operation attempted.
+    pub op: TraceOp,
+    /// The fault injected at this index, if any.
+    pub fault: Option<IoFaultKind>,
+}
+
+/// What kind of filesystem the machine comes back up with after a
+/// power cut. See the module docs for the two models.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum CrashStyle {
+    /// Strict POSIX: unsynced data and unsynced entries are lost.
+    DropUnsynced,
+    /// Metadata-journaled: entries survive, file data reverts to the
+    /// last-synced bytes.
+    KeepEntries,
+}
+
+#[derive(Debug, Default)]
+struct Inode {
+    data: Vec<u8>,
+    synced: Vec<u8>,
+}
+
+#[derive(Debug, Default)]
+struct DirNode {
+    current: BTreeMap<OsString, u64>,
+    durable: BTreeMap<OsString, u64>,
+}
+
+#[derive(Debug, Default)]
+struct State {
+    dirs: HashMap<PathBuf, DirNode>,
+    inodes: HashMap<u64, Inode>,
+    next_inode: u64,
+    next_op: u64,
+    generation: u64,
+    crashed: bool,
+    plan: FaultPlan,
+    trace: Vec<OpRecord>,
+}
+
+fn lock(state: &Mutex<State>) -> MutexGuard<'_, State> {
+    // The sim has no invariant a poisoning panic can half-apply that
+    // matters more than letting the harness inspect the wreckage.
+    state.lock().unwrap_or_else(PoisonError::into_inner)
+}
+
+fn power_down_error() -> io::Error {
+    io::Error::other("simfs: power is out (remount to continue)")
+}
+
+fn not_found(path: &Path) -> io::Error {
+    io::Error::new(
+        io::ErrorKind::NotFound,
+        format!("simfs: no such file: {}", path.display()),
+    )
+}
+
+fn split(path: &Path) -> io::Result<(PathBuf, OsString)> {
+    let name = path.file_name().ok_or_else(|| {
+        io::Error::new(
+            io::ErrorKind::InvalidInput,
+            format!("simfs: path has no file name: {}", path.display()),
+        )
+    })?;
+    Ok((parent_dir(path), name.to_os_string()))
+}
+
+/// A partial-transfer fault kind landing on an op with no transfer to
+/// shorten degrades to a transient interrupt.
+fn degrade_partial(fault: Option<IoFaultKind>) -> io::Result<()> {
+    match fault {
+        Some(_) => Err(IoFaultKind::Interrupted.to_error()),
+        None => Ok(()),
+    }
+}
+
+impl State {
+    /// Count, trace, and fault-check one operation attempt. Returns
+    /// the fault kind only for the partial-transfer kinds (the op
+    /// handler applies those); error kinds are returned as errors
+    /// here, and a power cut additionally downs the filesystem.
+    fn begin(&mut self, op: TraceOp) -> io::Result<Option<IoFaultKind>> {
+        if self.crashed {
+            return Err(power_down_error());
+        }
+        let index = self.next_op;
+        self.next_op += 1;
+        let fault = self.plan.get(index);
+        self.trace.push(OpRecord { index, op, fault });
+        match fault {
+            None => Ok(None),
+            Some(IoFaultKind::PowerCut) => {
+                self.crashed = true;
+                Err(io::Error::other("simfs: simulated power cut"))
+            }
+            Some(kind @ (IoFaultKind::ShortWrite | IoFaultKind::ShortRead)) => Ok(Some(kind)),
+            Some(kind) => Err(kind.to_error()),
+        }
+    }
+
+    fn resolve(&self, dir: &Path, name: &OsString) -> Option<u64> {
+        self.dirs.get(dir).and_then(|d| d.current.get(name)).copied()
+    }
+}
+
+/// The simulated filesystem. Cloning shares the same volume.
+#[derive(Debug, Clone, Default)]
+pub struct SimVfs {
+    state: Arc<Mutex<State>>,
+}
+
+impl SimVfs {
+    /// An empty volume with no faults planned.
+    pub fn new() -> SimVfs {
+        SimVfs::default()
+    }
+
+    /// An empty volume with `plan` armed.
+    pub fn with_plan(plan: FaultPlan) -> SimVfs {
+        let vfs = SimVfs::new();
+        vfs.set_plan(plan);
+        vfs
+    }
+
+    /// Arm a fault plan (replacing any previous one). Indices are
+    /// matched against the op counter, which keeps counting across
+    /// plan swaps.
+    pub fn set_plan(&self, plan: FaultPlan) {
+        lock(&self.state).plan = plan;
+    }
+
+    /// Install a fully durable file (contents synced, entry synced),
+    /// bypassing the op counter, trace, and fault plan. This is the
+    /// "state of the disk before the run" test fixture.
+    pub fn install(&self, path: &Path, bytes: &[u8]) -> io::Result<()> {
+        let (dir, name) = split(path)?;
+        let mut st = lock(&self.state);
+        let id = st.next_inode;
+        st.next_inode += 1;
+        st.inodes.insert(
+            id,
+            Inode {
+                data: bytes.to_vec(),
+                synced: bytes.to_vec(),
+            },
+        );
+        let node = st.dirs.entry(dir).or_default();
+        node.current.insert(name.clone(), id);
+        node.durable.insert(name, id);
+        Ok(())
+    }
+
+    /// The current (post-crash: remounted) contents of `path`, without
+    /// counting as an operation. `None` if the entry does not exist.
+    pub fn peek(&self, path: &Path) -> Option<Vec<u8>> {
+        let (dir, name) = split(path).ok()?;
+        let st = lock(&self.state);
+        let id = st.resolve(&dir, &name)?;
+        st.inodes.get(&id).map(|inode| inode.data.clone())
+    }
+
+    /// Does `path` currently have a directory entry? (Untraced.)
+    pub fn exists(&self, path: &Path) -> bool {
+        self.peek(path).is_some()
+    }
+
+    /// Current entry names under `dir`, sorted. (Untraced.)
+    pub fn list(&self, dir: &Path) -> Vec<OsString> {
+        let st = lock(&self.state);
+        st.dirs
+            .get(dir)
+            .map(|d| d.current.keys().cloned().collect())
+            .unwrap_or_default()
+    }
+
+    /// A copy of the recorded operation trace.
+    pub fn trace(&self) -> Vec<OpRecord> {
+        lock(&self.state).trace.clone()
+    }
+
+    /// Total operations attempted so far.
+    pub fn op_count(&self) -> u64 {
+        lock(&self.state).next_op
+    }
+
+    /// Is the power currently out?
+    pub fn crashed(&self) -> bool {
+        lock(&self.state).crashed
+    }
+
+    /// Cut the power now. Every operation fails until
+    /// [`SimVfs::remount`]; unsynced state is lost at remount time.
+    pub fn crash(&self) {
+        lock(&self.state).crashed = true;
+    }
+
+    /// Bring the volume back up after a crash, keeping only what the
+    /// durability model says survived. Outstanding handles from before
+    /// the crash are invalidated. Also callable without a preceding
+    /// [`SimVfs::crash`] to model an instantaneous power cycle.
+    pub fn remount(&self, style: CrashStyle) {
+        let mut st = lock(&self.state);
+        for node in st.dirs.values_mut() {
+            match style {
+                CrashStyle::DropUnsynced => node.current = node.durable.clone(),
+                CrashStyle::KeepEntries => node.durable = node.current.clone(),
+            }
+        }
+        for inode in st.inodes.values_mut() {
+            inode.data = inode.synced.clone();
+        }
+        st.crashed = false;
+        st.generation += 1;
+    }
+}
+
+/// A handle into a [`SimVfs`] volume.
+#[derive(Debug)]
+pub struct SimFile {
+    state: Arc<Mutex<State>>,
+    inode: u64,
+    generation: u64,
+    path: PathBuf,
+}
+
+impl SimFile {
+    /// Run one traced, faultable op against this handle's inode.
+    fn with_inode<T>(
+        &self,
+        op: TraceOp,
+        body: impl FnOnce(&mut Inode, Option<IoFaultKind>) -> io::Result<T>,
+    ) -> io::Result<T> {
+        let mut st = lock(&self.state);
+        if st.generation != self.generation {
+            return Err(io::Error::other(
+                "simfs: stale file handle (volume was remounted)",
+            ));
+        }
+        let fault = st.begin(op)?;
+        let inode = st
+            .inodes
+            .get_mut(&self.inode)
+            .ok_or_else(|| io::Error::other("simfs: handle to a reclaimed inode"))?;
+        body(inode, fault)
+    }
+}
+
+impl io::Write for SimFile {
+    fn write(&mut self, buf: &[u8]) -> io::Result<usize> {
+        let op = TraceOp::Write {
+            path: self.path.clone(),
+            len: buf.len(),
+        };
+        self.with_inode(op, |inode, fault| {
+            let n = match fault {
+                Some(IoFaultKind::ShortWrite) => (buf.len() / 2).clamp(1, buf.len().max(1)),
+                Some(_) => return Err(IoFaultKind::Interrupted.to_error()),
+                None => buf.len(),
+            };
+            let accepted = buf
+                .get(..n.min(buf.len()))
+                .ok_or_else(|| io::Error::other("simfs: internal slice error"))?;
+            inode.data.extend_from_slice(accepted);
+            Ok(accepted.len())
+        })
+    }
+
+    fn flush(&mut self) -> io::Result<()> {
+        // Userspace flush: nothing buffered in the handle itself, and
+        // no durability is implied (that is what sync_data is for), so
+        // this is not a counted filesystem operation.
+        Ok(())
+    }
+}
+
+impl VfsFile for SimFile {
+    fn sync_data(&mut self) -> io::Result<()> {
+        self.with_inode(TraceOp::SyncData(self.path.clone()), |inode, fault| {
+            degrade_partial(fault)?;
+            inode.synced = inode.data.clone();
+            Ok(())
+        })
+    }
+
+    fn read_at(&mut self, offset: u64, buf: &mut [u8]) -> io::Result<usize> {
+        let op = TraceOp::ReadAt {
+            path: self.path.clone(),
+            offset,
+            len: buf.len(),
+        };
+        self.with_inode(op, |inode, fault| {
+            let start = usize::try_from(offset)
+                .map_err(|_| io::Error::other("simfs: read offset overflows usize"))?;
+            if start >= inode.data.len() || buf.is_empty() {
+                // EOF (or an empty destination): a fault kind landing
+                // here has no transfer to shorten.
+                degrade_partial(fault)?;
+                return Ok(0);
+            }
+            let avail = inode.data.len() - start;
+            let full = avail.min(buf.len());
+            let n = match fault {
+                Some(IoFaultKind::ShortRead) => (full / 2).clamp(1, full),
+                Some(_) => return Err(IoFaultKind::Interrupted.to_error()),
+                None => full,
+            };
+            let src = inode
+                .data
+                .get(start..start + n)
+                .ok_or_else(|| io::Error::other("simfs: internal slice error"))?;
+            let dst = buf
+                .get_mut(..n)
+                .ok_or_else(|| io::Error::other("simfs: internal slice error"))?;
+            dst.copy_from_slice(src);
+            Ok(n)
+        })
+    }
+
+    fn len(&mut self) -> io::Result<u64> {
+        self.with_inode(TraceOp::Len(self.path.clone()), |inode, fault| {
+            degrade_partial(fault)?;
+            Ok(inode.data.len() as u64)
+        })
+    }
+}
+
+impl Vfs for SimVfs {
+    type File = SimFile;
+
+    fn create_new(&self, path: &Path) -> io::Result<SimFile> {
+        let (dir, name) = split(path)?;
+        let mut st = lock(&self.state);
+        let fault = st.begin(TraceOp::CreateNew(path.to_path_buf()))?;
+        degrade_partial(fault)?;
+        if st.resolve(&dir, &name).is_some() {
+            return Err(io::Error::new(
+                io::ErrorKind::AlreadyExists,
+                format!("simfs: already exists: {}", path.display()),
+            ));
+        }
+        let id = st.next_inode;
+        st.next_inode += 1;
+        st.inodes.insert(id, Inode::default());
+        st.dirs.entry(dir).or_default().current.insert(name, id);
+        Ok(SimFile {
+            state: Arc::clone(&self.state),
+            inode: id,
+            generation: st.generation,
+            path: path.to_path_buf(),
+        })
+    }
+
+    fn open(&self, path: &Path) -> io::Result<SimFile> {
+        let (dir, name) = split(path)?;
+        let mut st = lock(&self.state);
+        let fault = st.begin(TraceOp::Open(path.to_path_buf()))?;
+        degrade_partial(fault)?;
+        let id = st.resolve(&dir, &name).ok_or_else(|| not_found(path))?;
+        Ok(SimFile {
+            state: Arc::clone(&self.state),
+            inode: id,
+            generation: st.generation,
+            path: path.to_path_buf(),
+        })
+    }
+
+    fn rename(&self, from: &Path, to: &Path) -> io::Result<()> {
+        let (from_dir, from_name) = split(from)?;
+        let (to_dir, to_name) = split(to)?;
+        let mut st = lock(&self.state);
+        let fault = st.begin(TraceOp::Rename {
+            from: from.to_path_buf(),
+            to: to.to_path_buf(),
+        })?;
+        degrade_partial(fault)?;
+        let id = st
+            .dirs
+            .get_mut(&from_dir)
+            .and_then(|d| d.current.remove(&from_name))
+            .ok_or_else(|| not_found(from))?;
+        // One locked mutation: the destination entry flips from its
+        // old target to the new inode with no observable in-between —
+        // the rename atomicity the crash campaign leans on.
+        st.dirs.entry(to_dir).or_default().current.insert(to_name, id);
+        Ok(())
+    }
+
+    fn remove(&self, path: &Path) -> io::Result<()> {
+        let (dir, name) = split(path)?;
+        let mut st = lock(&self.state);
+        let fault = st.begin(TraceOp::Remove(path.to_path_buf()))?;
+        degrade_partial(fault)?;
+        st.dirs
+            .get_mut(&dir)
+            .and_then(|d| d.current.remove(&name))
+            .ok_or_else(|| not_found(path))?;
+        Ok(())
+    }
+
+    fn sync_dir(&self, dir: &Path) -> io::Result<()> {
+        let mut st = lock(&self.state);
+        let fault = st.begin(TraceOp::SyncDir(dir.to_path_buf()))?;
+        degrade_partial(fault)?;
+        let node = st.dirs.entry(dir.to_path_buf()).or_default();
+        node.durable = node.current.clone();
+        Ok(())
+    }
+
+    fn read_dir(&self, dir: &Path) -> io::Result<Vec<OsString>> {
+        let mut st = lock(&self.state);
+        let fault = st.begin(TraceOp::ReadDir(dir.to_path_buf()))?;
+        degrade_partial(fault)?;
+        Ok(st
+            .dirs
+            .get(dir)
+            .map(|d| d.current.keys().cloned().collect())
+            .unwrap_or_default())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use std::io::Write as _;
+    use std::path::Path;
+
+    fn p(s: &str) -> &Path {
+        Path::new(s)
+    }
+
+    #[test]
+    fn unsynced_data_is_lost_at_remount() {
+        let vfs = SimVfs::new();
+        let mut f = vfs.create_new(p("a/file")).unwrap();
+        f.write_all(b"hello").unwrap();
+        f.sync_data().unwrap();
+        f.write_all(b" world").unwrap();
+        drop(f);
+        vfs.sync_dir(p("a")).unwrap();
+        assert_eq!(vfs.peek(p("a/file")).unwrap(), b"hello world");
+        vfs.remount(CrashStyle::DropUnsynced);
+        assert_eq!(vfs.peek(p("a/file")).unwrap(), b"hello");
+    }
+
+    #[test]
+    fn entries_are_durable_only_after_dir_sync_in_strict_mode() {
+        let vfs = SimVfs::new();
+        let mut f = vfs.create_new(p("a/file")).unwrap();
+        f.write_all(b"x").unwrap();
+        f.sync_data().unwrap();
+        drop(f);
+        // Data synced, entry not: strict remount loses the file,
+        // journaled remount keeps it.
+        vfs.remount(CrashStyle::DropUnsynced);
+        assert!(!vfs.exists(p("a/file")));
+
+        let vfs = SimVfs::new();
+        let mut f = vfs.create_new(p("a/file")).unwrap();
+        f.write_all(b"x").unwrap();
+        f.sync_data().unwrap();
+        drop(f);
+        vfs.remount(CrashStyle::KeepEntries);
+        assert_eq!(vfs.peek(p("a/file")).unwrap(), b"x");
+    }
+
+    #[test]
+    fn unsynced_rename_rolls_back_in_strict_mode() {
+        let vfs = SimVfs::new();
+        vfs.install(p("d/old"), b"old bytes").unwrap();
+        let mut f = vfs.create_new(p("d/new")).unwrap();
+        f.write_all(b"new bytes").unwrap();
+        f.sync_data().unwrap();
+        drop(f);
+        vfs.rename(p("d/new"), p("d/old")).unwrap();
+        assert_eq!(vfs.peek(p("d/old")).unwrap(), b"new bytes");
+        // No dir sync: strict POSIX forgets the rename entirely.
+        vfs.remount(CrashStyle::DropUnsynced);
+        assert_eq!(vfs.peek(p("d/old")).unwrap(), b"old bytes");
+        assert!(!vfs.exists(p("d/new")));
+    }
+
+    #[test]
+    fn create_new_collision_is_a_typed_error() {
+        let vfs = SimVfs::new();
+        vfs.install(p("x"), b"taken").unwrap();
+        let err = vfs.create_new(p("x")).unwrap_err();
+        assert_eq!(err.kind(), std::io::ErrorKind::AlreadyExists);
+        assert_eq!(vfs.peek(p("x")).unwrap(), b"taken");
+    }
+
+    #[test]
+    fn handles_do_not_survive_a_remount() {
+        let vfs = SimVfs::new();
+        let mut f = vfs.create_new(p("f")).unwrap();
+        f.write_all(b"abc").unwrap();
+        vfs.crash();
+        assert!(vfs.crashed());
+        // Power is out: new ops fail.
+        assert!(vfs.open(p("f")).is_err());
+        vfs.remount(CrashStyle::KeepEntries);
+        assert!(!vfs.crashed());
+        // The pre-crash handle is dead even though power is back.
+        assert!(f.write_all(b"zzz").is_err());
+    }
+
+    #[test]
+    fn planned_power_cut_downs_the_volume_at_the_exact_index() {
+        let vfs = SimVfs::with_plan(FaultPlan::single(2, IoFaultKind::PowerCut));
+        let mut f = vfs.create_new(p("f")).unwrap(); // op 0
+        f.write_all(b"aa").unwrap(); // op 1
+        let err = f.write_all(b"bb").unwrap_err(); // op 2: cut
+        assert!(err.to_string().contains("power cut"), "{err}");
+        assert!(vfs.crashed());
+        let trace = vfs.trace();
+        assert_eq!(trace.len(), 3);
+        assert_eq!(trace[2].fault, Some(IoFaultKind::PowerCut));
+    }
+
+    #[test]
+    fn short_write_reports_partial_progress_honestly() {
+        let vfs = SimVfs::with_plan(FaultPlan::single(1, IoFaultKind::ShortWrite));
+        let mut f = vfs.create_new(p("f")).unwrap(); // op 0
+        let n = std::io::Write::write(&mut f, b"abcdefgh").unwrap(); // op 1
+        assert_eq!(n, 4);
+        // The retry (a fresh op index) completes the buffer.
+        f.write_all(b"efgh").unwrap();
+        f.sync_data().unwrap();
+        assert_eq!(vfs.peek(p("f")).unwrap(), b"abcdefgh");
+    }
+
+    #[test]
+    fn short_read_and_eof_behave_like_pread() {
+        let vfs = SimVfs::new();
+        vfs.install(p("f"), b"0123456789").unwrap();
+        let mut f = vfs.open(p("f")).unwrap();
+        let mut buf = [0u8; 4];
+        assert_eq!(f.read_at(6, &mut buf).unwrap(), 4);
+        assert_eq!(&buf, b"6789");
+        assert_eq!(f.read_at(10, &mut buf).unwrap(), 0, "reads at EOF return 0");
+        vfs.set_plan(FaultPlan::single(vfs.op_count(), IoFaultKind::ShortRead));
+        assert_eq!(f.read_at(0, &mut buf).unwrap(), 2, "short read fills half");
+    }
+
+    #[test]
+    fn trace_records_every_op_in_order() {
+        let vfs = SimVfs::new();
+        let mut f = vfs.create_new(p("d/t")).unwrap();
+        f.write_all(b"z").unwrap();
+        f.sync_data().unwrap();
+        drop(f);
+        vfs.rename(p("d/t"), p("d/final")).unwrap();
+        vfs.sync_dir(p("d")).unwrap();
+        let kinds: Vec<&'static str> = vfs
+            .trace()
+            .iter()
+            .map(|r| match r.op {
+                TraceOp::CreateNew(_) => "create",
+                TraceOp::Write { .. } => "write",
+                TraceOp::SyncData(_) => "sync_data",
+                TraceOp::Rename { .. } => "rename",
+                TraceOp::SyncDir(_) => "sync_dir",
+                _ => "other",
+            })
+            .collect();
+        assert_eq!(kinds, ["create", "write", "sync_data", "rename", "sync_dir"]);
+    }
+}

@@ -1,0 +1,153 @@
+//! The virtual-filesystem trait pair ([`Vfs`] / [`VfsFile`]) and the
+//! zero-cost real implementation ([`RealVfs`]).
+//!
+//! The trait surface is deliberately tiny: exactly the operations the
+//! crash-consistency contract in [`crate::fsio`] reasons about
+//! (create-new / open / write / sync / positional read / rename /
+//! remove / directory sync / directory listing). Everything the crate
+//! does to a filesystem goes through these ops, so the simulated
+//! filesystem ([`crate::fsio::SimVfs`]) can observe, fault, and crash
+//! every single one of them deterministically.
+
+use std::ffi::OsString;
+use std::io;
+use std::path::Path;
+
+/// An open file handle behind a [`Vfs`].
+///
+/// Writes go through the [`io::Write`] supertrait so existing
+/// `Write`-taking code (buffered writers, the streaming coordinator)
+/// composes unchanged; the extra methods are the durability and
+/// positional-read ops the archive layer needs.
+#[allow(clippy::len_without_is_empty)]
+pub trait VfsFile: io::Write + Send {
+    /// Flush buffered file data (and, for the real filesystem, file
+    /// metadata too) to stable storage. After this returns `Ok`, the
+    /// bytes written so far survive a power cut.
+    fn sync_data(&mut self) -> io::Result<()>;
+
+    /// Read up to `buf.len()` bytes at absolute `offset`, returning
+    /// the count read (0 means end-of-file). Like `pread`, this does
+    /// not disturb any notional cursor. May return short; callers that
+    /// need an exact fill use [`crate::fsio::read_exact_at`].
+    fn read_at(&mut self, offset: u64, buf: &mut [u8]) -> io::Result<usize>;
+
+    /// Current length of the file in bytes.
+    fn len(&mut self) -> io::Result<u64>;
+}
+
+/// A filesystem: the real one ([`RealVfs`]) or a simulation
+/// ([`crate::fsio::SimVfs`]).
+///
+/// The associated `File` type keeps the fast path monomorphized and
+/// zero-cost; code that needs dynamic dispatch (the archive reader's
+/// [`crate::archive::Source`]) boxes the handle as `dyn VfsFile`.
+pub trait Vfs: Send + Sync {
+    /// The handle type returned by [`Vfs::create_new`] / [`Vfs::open`].
+    type File: VfsFile + 'static;
+
+    /// Create `path` for writing; a typed `AlreadyExists` error if the
+    /// name is taken (never silent truncation of someone else's file).
+    fn create_new(&self, path: &Path) -> io::Result<Self::File>;
+
+    /// Open an existing file for reading.
+    fn open(&self, path: &Path) -> io::Result<Self::File>;
+
+    /// Atomically rename `from` onto `to`, replacing `to` if present.
+    fn rename(&self, from: &Path, to: &Path) -> io::Result<()>;
+
+    /// Remove a file.
+    fn remove(&self, path: &Path) -> io::Result<()>;
+
+    /// Sync a directory so that entry changes (creates, renames,
+    /// removes) inside it survive a power cut. See the step-5
+    /// discussion in the [`crate::fsio`] module docs.
+    fn sync_dir(&self, dir: &Path) -> io::Result<()>;
+
+    /// List the entry names in a directory, sorted.
+    fn read_dir(&self, dir: &Path) -> io::Result<Vec<OsString>>;
+
+    /// Read a whole file through the handle ops (open + len +
+    /// positional reads), with the shared transient-retry policy.
+    fn read(&self, path: &Path) -> io::Result<Vec<u8>> {
+        let mut file = self.open(path)?;
+        let len = file.len()?;
+        let len = usize::try_from(len)
+            .map_err(|_| io::Error::other("file too large for an in-memory read"))?;
+        let mut buf = vec![0u8; len];
+        super::read_exact_at(&mut file, 0, &mut buf)?;
+        Ok(buf)
+    }
+}
+
+/// The real filesystem: every op maps 1:1 onto `std::fs`, so going
+/// through the trait costs nothing over calling `std::fs` directly.
+#[derive(Debug, Clone, Copy, Default)]
+pub struct RealVfs;
+
+impl VfsFile for std::fs::File {
+    fn sync_data(&mut self) -> io::Result<()> {
+        // Full-strength fsync (metadata included): the atomic-write
+        // sequence needs the file *size* durable too, not just the
+        // data blocks, so this is sync_all rather than sync_data.
+        std::fs::File::sync_all(self)
+    }
+
+    fn read_at(&mut self, offset: u64, buf: &mut [u8]) -> io::Result<usize> {
+        #[cfg(unix)]
+        {
+            std::os::unix::fs::FileExt::read_at(self, buf, offset)
+        }
+        #[cfg(not(unix))]
+        {
+            use std::io::{Read, Seek, SeekFrom};
+            self.seek(SeekFrom::Start(offset))?;
+            self.read(buf)
+        }
+    }
+
+    fn len(&mut self) -> io::Result<u64> {
+        Ok(self.metadata()?.len())
+    }
+}
+
+impl Vfs for RealVfs {
+    type File = std::fs::File;
+
+    fn create_new(&self, path: &Path) -> io::Result<Self::File> {
+        std::fs::File::create_new(path)
+    }
+
+    fn open(&self, path: &Path) -> io::Result<Self::File> {
+        std::fs::File::open(path)
+    }
+
+    fn rename(&self, from: &Path, to: &Path) -> io::Result<()> {
+        std::fs::rename(from, to)
+    }
+
+    fn remove(&self, path: &Path) -> io::Result<()> {
+        std::fs::remove_file(path)
+    }
+
+    fn sync_dir(&self, dir: &Path) -> io::Result<()> {
+        #[cfg(unix)]
+        {
+            std::fs::File::open(dir)?.sync_all()
+        }
+        #[cfg(not(unix))]
+        {
+            let _ = dir;
+            Ok(())
+        }
+    }
+
+    fn read_dir(&self, dir: &Path) -> io::Result<Vec<OsString>> {
+        let mut names = Vec::new();
+        for entry in std::fs::read_dir(dir)? {
+            names.push(entry?.file_name());
+        }
+        names.sort();
+        Ok(names)
+    }
+}

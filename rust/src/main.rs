@@ -67,7 +67,9 @@ USAGE:
   lc scrub      <file.lcz> [--dry-run]  (verify a v4 container; rebuild
                 any single corrupt frame per parity group from XOR
                 parity, re-validate the whole image, and atomically
-                rewrite it in place; --dry-run reports without writing)
+                rewrite it in place; also sweeps stale <file>.tmp.*
+                siblings left by crashed writers; --dry-run reports
+                without writing or sweeping)
   lc salvage    <in.lcz> <out.f32> [--report]  (best-effort decode of a
                 damaged or truncated archive: CRC-proven runs only,
                 written concatenated; --report prints the hole map —
@@ -94,7 +96,9 @@ USAGE:
 
 Suites: CESM EXAALT HACC NYX QMCPACK SCALE ISABEL
 Artifacts are loaded from $LC_ARTIFACT_DIR or ./artifacts (PJRT device).
-File outputs are crash-consistent: temp sibling + fsync + atomic rename.
+File outputs are crash-consistent: temp sibling + fsync + atomic rename +
+parent-dir sync. A crash can leave a stale <out>.tmp.<pid>.<serial> sibling
+(never a partial output); `lc scrub` sweeps them, or delete them by hand.
 ";
 
 struct Opts {
@@ -505,8 +509,21 @@ fn run(args: Vec<String>) -> Result<()> {
             let [inp] = o.positional.as_slice() else {
                 bail!("scrub wants <file.lcz> [--dry-run]");
             };
-            let bytes = std::fs::read(inp).with_context(|| format!("reading {inp}"))?;
-            let report = lc::archive::scrub(&bytes).map_err(|e| anyhow!(e))?;
+            let dry_run = o.flag("dry-run").is_some();
+            let (report, swept) = if dry_run {
+                // Dry run is strictly read-only: no rewrite, and no
+                // stale-temp sweep either.
+                let bytes = std::fs::read(inp).with_context(|| format!("reading {inp}"))?;
+                let report = lc::archive::scrub(&bytes).map_err(|e| anyhow!(e))?;
+                (report, Vec::new())
+            } else {
+                let outcome = lc::archive::scrub_path(std::path::Path::new(inp))
+                    .map_err(|e| anyhow!(e))?;
+                (outcome.report, outcome.swept_temps)
+            };
+            for stale in &swept {
+                println!("swept stale temp {}", stale.display());
+            }
             match &report.patched {
                 None => println!("{inp}: clean, no repairs needed"),
                 Some(patched) => {
@@ -527,11 +544,9 @@ fn run(args: Vec<String>) -> Result<()> {
                     if report.repaired_chunks.is_empty() && report.rebuilt_parity.is_empty() {
                         println!("{inp}: repaired file metadata (CRC/tail)");
                     }
-                    if o.flag("dry-run").is_some() {
+                    if dry_run {
                         println!("dry run: {inp} left untouched");
                     } else {
-                        lc::fsio::atomic_write(std::path::Path::new(inp), patched)
-                            .with_context(|| format!("rewriting {inp}"))?;
                         println!(
                             "rewrote {inp} atomically ({} bytes, fully re-validated)",
                             patched.len()

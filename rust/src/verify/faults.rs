@@ -18,13 +18,20 @@
 //! * [`XorShift64`] is the seeded generator: same seed, same faults,
 //!   forever — a failing case in CI replays locally from its region
 //!   label and seed alone.
+//! * [`io_sweep`] is the *in-flight* counterpart: from a recorded
+//!   [`crate::fsio::SimVfs`] syscall trace it derives one labeled
+//!   [`FaultPlan`] per operation index per [`IoFaultKind`] (ENOSPC,
+//!   EIO, interrupts, short transfers, power cuts) — the raw material
+//!   of the every-syscall crash campaign.
 //!
-//! The campaign itself lives in `rust/tests/fault_injection.rs`.
+//! The at-rest campaign lives in `rust/tests/fault_injection.rs`; the
+//! in-flight one in `rust/tests/crash_consistency.rs`.
 
 use crate::archive::Reader;
 use crate::container::{
     ContainerVersion, Header, ParityFrame, PARITY_FRAME_FIXED,
 };
+use crate::fsio::{FaultPlan, IoFaultKind};
 
 /// Minimal xorshift64 PRNG: deterministic, seedable, dependency-free.
 /// (The crate's `data::prng` xoshiro is for value generation; this one
@@ -255,6 +262,41 @@ pub fn sweep(map: &RegionMap, seed: u64) -> Vec<(String, Fault)> {
             garbage,
         },
     ));
+    out
+}
+
+/// The in-flight counterpart of [`sweep`]: derive, from a recorded
+/// [`crate::fsio::SimVfs`] trace of `n_ops` operations, one labeled
+/// [`FaultPlan`] per (operation index × fault kind) — every ENOSPC,
+/// EIO, interrupt, short transfer, and power cut the filesystem could
+/// have injected anywhere in the run. Deriving the sweep from the
+/// recorded trace length keeps the campaign exhaustive by
+/// construction: a new syscall in the sequence widens it automatically.
+pub fn io_sweep(n_ops: u64) -> Vec<(String, FaultPlan)> {
+    let mut out = Vec::new();
+    for index in 0..n_ops {
+        for kind in IoFaultKind::ALL {
+            out.push((
+                format!("op{index}/{}", kind.label()),
+                FaultPlan::single(index, kind),
+            ));
+        }
+    }
+    out
+}
+
+/// [`io_sweep`] restricted to a subset of fault kinds (e.g. only the
+/// hard error kinds for an all-or-nothing pin).
+pub fn io_sweep_kinds(n_ops: u64, kinds: &[IoFaultKind]) -> Vec<(String, FaultPlan)> {
+    let mut out = Vec::new();
+    for index in 0..n_ops {
+        for &kind in kinds {
+            out.push((
+                format!("op{index}/{}", kind.label()),
+                FaultPlan::single(index, kind),
+            ));
+        }
+    }
     out
 }
 

@@ -69,9 +69,10 @@
 //!   `wire-consts` duplicate scan. `delims` and `safety-comment`
 //!   apply everywhere.
 //! * The designated `panic-free` / `range-index` fault surface:
-//!   everything under `container/`, `archive/{reader,repair,index}.rs`,
-//!   `coordinator/stream.rs`, `codec/{rle,huffman}.rs`, and
-//!   `server/{conn,proto}.rs`.
+//!   everything under `container/` and `fsio/` (the crash-consistent
+//!   write path and its fault-injecting simulation),
+//!   `archive/{reader,repair,index}.rs`, `coordinator/stream.rs`,
+//!   `codec/{rle,huffman}.rs`, and `server/{conn,proto}.rs`.
 //! * The `float-cast` domain: everything under `quantizer/` and
 //!   `simd/`.
 //! * The doc-table cross-checks anchor on the file that defines the
@@ -306,7 +307,7 @@ pub(crate) fn is_designated(path: &str) -> bool {
     let segs = path_segments(path);
     let has_dir = |d: &str| segs.iter().rev().skip(1).any(|s| *s == d);
     let file = segs.last().copied().unwrap_or("");
-    if has_dir("container") {
+    if has_dir("container") || has_dir("fsio") {
         return true;
     }
     (has_dir("archive") && matches!(file, "reader.rs" | "repair.rs" | "index.rs"))
@@ -329,6 +330,9 @@ mod tests {
     fn scope_rules_match_by_suffix() {
         assert!(is_designated("rust/src/container/mod.rs"));
         assert!(is_designated("container/crc.rs"));
+        assert!(is_designated("src/fsio/mod.rs"));
+        assert!(is_designated("src/fsio/sim.rs"));
+        assert!(is_designated("rust/src/fsio/vfs.rs"));
         assert!(is_designated("src/archive/reader.rs"));
         assert!(!is_designated("src/archive/stats.rs"));
         assert!(is_designated("src/coordinator/stream.rs"));

@@ -19,15 +19,17 @@
 //! the same seed regenerates the exact same faulted image.
 
 use std::io::Cursor;
+use std::path::Path;
 
-use lc::archive::{salvage, scrub, ArchiveError, Reader};
+use lc::archive::{salvage, scrub, scrub_path_in, ArchiveError, Reader};
 use lc::container::Container;
 use lc::coordinator::{
     compress, decompress, decompress_stream, EngineConfig, DEFAULT_QUEUE_DEPTH,
 };
 use lc::data::Suite;
+use lc::fsio::{IoFaultKind, SimVfs};
 use lc::types::ErrorBound;
-use lc::verify::faults::{map_v4, sweep};
+use lc::verify::faults::{io_sweep_kinds, map_v4, sweep};
 
 /// Build a v4 archive and its golden decode.
 fn golden(n: usize, chunk_size: usize, k: u32) -> (Vec<u8>, Vec<f32>) {
@@ -250,4 +252,51 @@ fn two_corrupt_frames_in_one_group_are_typed_with_the_group_index() {
     let r = Reader::from_bytes(bad).expect("open survives: footer and tail intact");
     let z = r.decode_range(4096..10_000).expect("undamaged groups decode");
     assert_eq!(bits(&z), bits(&y[4096..10_000]));
+}
+
+#[test]
+fn enospc_and_eio_mid_scrub_leave_the_archive_byte_identical() {
+    // The in-flight counterpart of the at-rest sweep above: a hard
+    // device error at *every* operation index of the scrub rewrite.
+    // `scrub_path` is all-or-nothing — a failed run must leave the
+    // damaged archive bit-exactly as it found it (still repairable by
+    // the next run), and a surviving run must have fully repaired it.
+    let (bytes, _) = golden(12_000, 1024, 4);
+    let r = Reader::from_bytes(bytes.clone()).expect("open");
+    let e = r.entries()[1];
+    let off = e.offset as usize + 20;
+    let mut damaged = bytes.clone();
+    for b in &mut damaged[off..off + 6] {
+        *b ^= 0x5A;
+    }
+
+    // Clean run on the simulated volume: learns the op-trace length
+    // that makes the sweep exhaustive, and pins the repaired image.
+    let dest = Path::new("vol/archive.lcz");
+    let probe = SimVfs::new();
+    probe.install(dest, &damaged).unwrap();
+    let outcome = scrub_path_in(&probe, dest).expect("clean scrub");
+    assert!(outcome.rewritten, "the damage must require a rewrite");
+    assert_eq!(probe.peek(dest).unwrap(), bytes);
+    let n_ops = probe.op_count();
+
+    let kinds = [IoFaultKind::Enospc, IoFaultKind::Eio];
+    for (label, plan) in io_sweep_kinds(n_ops, &kinds) {
+        let vfs = SimVfs::with_plan(plan);
+        vfs.install(dest, &damaged).unwrap();
+        match scrub_path_in(&vfs, dest) {
+            Ok(outcome) => {
+                // Only reachable when the fault landed on the
+                // best-effort parent-dir sync: the rewrite committed.
+                assert!(outcome.rewritten, "{label}");
+                assert_eq!(vfs.peek(dest).unwrap(), bytes, "{label}");
+            }
+            Err(_) => assert_eq!(
+                vfs.peek(dest).unwrap(),
+                damaged,
+                "{label}: a failed scrub must be all-or-nothing"
+            ),
+        }
+        assert!(!vfs.crashed(), "{label}: hard errors must not down the volume");
+    }
 }

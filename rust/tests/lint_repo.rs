@@ -75,6 +75,21 @@ fn panic_free_fires_on_designated_surface() {
 }
 
 #[test]
+fn panic_free_covers_the_fsio_crash_surface() {
+    // The crash-consistent write path and the simulated filesystem are
+    // designated panic-free: a panic mid-publish is exactly the kind
+    // of torn state the atomic sequence exists to rule out.
+    let text = "fn f(x: Option<u32>) -> u32 {\n    x.unwrap()\n}\n";
+    for path in ["src/fsio/mod.rs", "src/fsio/sim.rs", "rust/src/fsio/vfs.rs"] {
+        let r = lint_one(path, text);
+        assert!(has(&r, Check::PanicFree, 2), "{path}: {:?}", r.diagnostics);
+    }
+    let slice = "fn f(buf: &[u8]) -> &[u8] {\n    &buf[1..4]\n}\n";
+    let r = lint_one("src/fsio/faults.rs", slice);
+    assert!(has(&r, Check::RangeIndex, 2), "{:?}", r.diagnostics);
+}
+
+#[test]
 fn panic_free_ignores_undesignated_modules() {
     let text = "fn f(x: Option<u32>) -> u32 {\n    x.unwrap()\n}\n";
     let r = lint_one("src/tables/report.rs", text);
