@@ -372,6 +372,76 @@ fn main() {
         eprintln!("failed to write {json_path}: {e}");
     }
 
+    // ---- hotpath.predict: the closed-loop residual path (container
+    // v5, Auto predictor selection) vs the plain value-quantizer path
+    // (v4) on a SMOOTH field — the workload prediction exists for. The
+    // acceptance metrics are the compression-ratio gain and the encode
+    // throughput cost of reconstruct-then-predict.
+    let smooth = Suite::Cesm.generate(1, n);
+    let mut cfg_value = EngineConfig::native(ErrorBound::Abs(1e-3));
+    cfg_value.container_version = lc::container::ContainerVersion::V4;
+    let mut cfg_predict = cfg_value.clone();
+    cfg_predict.container_version = lc::container::ContainerVersion::V5;
+    let qc_smooth = QuantizerConfig::resolve(
+        cfg_value.bound,
+        cfg_value.variant,
+        cfg_value.protection,
+        &smooth,
+    );
+    let m_value = measure(1, reps, || {
+        let mut total = 0usize;
+        for chunk in smooth.chunks(CHUNK_ELEMS) {
+            let (rec, _) =
+                encode_chunk_record(&cfg_value, &qc_smooth, chunk, &mut scratch).unwrap();
+            total += rec.payload.len();
+        }
+        std::hint::black_box(total);
+    });
+    let m_predict = measure(1, reps, || {
+        let mut total = 0usize;
+        for chunk in smooth.chunks(CHUNK_ELEMS) {
+            let (rec, _) =
+                encode_chunk_record(&cfg_predict, &qc_smooth, chunk, &mut scratch).unwrap();
+            total += rec.payload.len();
+        }
+        std::hint::black_box(total);
+    });
+    let (c_value, _) = lc::coordinator::compress(&cfg_value, &smooth).unwrap();
+    let (c_predict, _) = lc::coordinator::compress(&cfg_predict, &smooth).unwrap();
+    let (bytes_value, bytes_predict) =
+        (c_value.to_bytes().len(), c_predict.to_bytes().len());
+    let predicted_chunks = c_predict
+        .chunks
+        .iter()
+        .filter(|c| c.predictor != 0)
+        .count();
+    let hot_predict = vec![
+        ("predict_value_eps".to_string(), m_value.eps(n)),
+        ("predict_residual_eps".to_string(), m_predict.eps(n)),
+        (
+            "predict_encode_cost".to_string(),
+            m_predict.eps(n) / m_value.eps(n).max(1.0),
+        ),
+        (
+            "predict_ratio_gain".to_string(),
+            bytes_value as f64 / (bytes_predict as f64).max(1.0),
+        ),
+        ("predict_chunks".to_string(), predicted_chunks as f64),
+        ("predict_chunks_total".to_string(), c_predict.chunks.len() as f64),
+    ];
+    println!(
+        "json hotpath predict (smooth): {:.0} -> {:.0} elem/s ({:.2}x), \
+         v5/v4 size ratio gain {:.4}, {predicted_chunks}/{} chunks predicted",
+        m_value.eps(n),
+        m_predict.eps(n),
+        m_predict.eps(n) / m_value.eps(n).max(1.0),
+        bytes_value as f64 / (bytes_predict as f64).max(1.0),
+        c_predict.chunks.len()
+    );
+    if let Err(e) = update_bench_json(&json_path, "hotpath", &hot_predict) {
+        eprintln!("failed to write {json_path}: {e}");
+    }
+
     // ---- hotpath.decode: full container decode, seed shape vs the
     // scratch path — per-chunk allocating decode + fresh decode table
     // ("before") against the cached-table, preallocated-output decode

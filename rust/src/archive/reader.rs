@@ -8,8 +8,8 @@ use std::sync::Mutex;
 use crate::codec::Pipeline;
 use crate::container::{
     chunk_frame_crc_ok, crc::crc32, parse_chunk_frame_header, ChunkRecord, ContainerVersion,
-    Header, ParityFrame, CHUNK_FRAME_HEADER_LEN, CHUNK_FRAME_HEADER_LEN_V2, FINALIZE_MARKER,
-    HEADER_FIXED_LEN,
+    Header, ParityFrame, CHUNK_FRAME_HEADER_LEN, CHUNK_FRAME_HEADER_LEN_V2,
+    CHUNK_FRAME_HEADER_LEN_V5, FINALIZE_MARKER, HEADER_FIXED_LEN,
 };
 use crate::coordinator::engine::{decode_chunk_record_into, quantizer_from_header};
 use crate::coordinator::EngineConfig;
@@ -150,13 +150,13 @@ impl ChunkHandle {
     }
 }
 
-/// A v3/v4 container opened for random access (see the module docs of
-/// [`crate::archive`] for the contract).
+/// A v3/v4/v5 container opened for random access (see the module docs
+/// of [`crate::archive`] for the contract).
 pub struct Reader {
     source: Source,
     header: Header,
     index: Index,
-    /// v4 parity entries, one per group (empty for v3).
+    /// v4/v5 parity entries, one per group (empty for v3).
     parity: Vec<index::ParityEntry>,
     cfg: EngineConfig,
     qc: QuantizerConfig,
@@ -166,12 +166,12 @@ pub struct Reader {
 }
 
 impl Reader {
-    /// Open an indexed (v3/v4) container from any [`Source`]. v1/v2
+    /// Open an indexed (v3/v4/v5) container from any [`Source`]. v1/v2
     /// containers return [`ArchiveError::NotIndexed`] — they remain
     /// fully decodable through the linear-scan paths, just not
     /// randomly addressable. Validates the trailer, footer CRC, and
     /// the whole index layout against hostile input before returning;
-    /// chunk frames themselves are not read here. A v4 file without
+    /// chunk frames themselves are not read here. A v4/v5 file without
     /// its finalization marker is the typed
     /// [`ArchiveError::Unfinalized`].
     pub fn open_indexed(source: Source) -> Result<Reader, ArchiveError> {
@@ -226,8 +226,8 @@ impl Reader {
                     .map_err(ArchiveError::BadIndex)?;
                 (index, Vec::new())
             }
-            ContainerVersion::V4 => {
-                // v4 tail: trailer, file CRC, finalization marker.
+            ContainerVersion::V4 | ContainerVersion::V5 => {
+                // v4/v5 tail: trailer, file CRC, finalization marker.
                 let tail_len = (index::TRAILER_LEN_V4 + 4 + FINALIZE_MARKER.len()) as u64;
                 if file_len < header_len + tail_len {
                     return Err(ArchiveError::Truncated);
@@ -429,13 +429,17 @@ impl Reader {
             let frame = buf
                 .get(lo..lo + e.frame_len as usize)
                 .ok_or_else(|| ArchiveError::BadIndex("frame slice out of bounds".into()))?;
-            let rec = match parse_frame_against_entry(first + k, frame, e) {
+            let rec = match parse_frame_against_entry(first + k, frame, e, self.header.version)
+            {
                 Ok(rec) => rec,
-                // v4: a frame that fails its CRC (or disagrees with
+                // v4/v5: a frame that fails its CRC (or disagrees with
                 // its entry) is a located erasure — rebuild it from
                 // the group's parity before giving up.
                 Err(ArchiveError::ChunkCrc { .. } | ArchiveError::ChunkMismatch { .. })
-                    if self.header.version == ContainerVersion::V4 =>
+                    if matches!(
+                        self.header.version,
+                        ContainerVersion::V4 | ContainerVersion::V5
+                    ) =>
                 {
                     self.repair_chunk_record(first + k)?
                 }
@@ -557,7 +561,7 @@ impl Reader {
     }
 
     /// Rebuild chunk `chunk_idx`'s frame from its group's XOR parity
-    /// (v4 only). The group's member frames and its parity frame are
+    /// (v4/v5). The group's member frames and its parity frame are
     /// one contiguous byte span; per-frame CRC checks against the
     /// index locate the erasures. Exactly one erased member (this one)
     /// repairs bit-exactly — the rebuilt frame must verify its own
@@ -565,7 +569,11 @@ impl Reader {
     /// [`ArchiveError::Unrecoverable`] naming the group.
     fn repair_chunk_record(&self, chunk_idx: usize) -> Result<ChunkRecord, ArchiveError> {
         let k = self.header.parity_group as usize;
-        if self.header.version != ContainerVersion::V4 || k == 0 {
+        if !matches!(
+            self.header.version,
+            ContainerVersion::V4 | ContainerVersion::V5
+        ) || k == 0
+        {
             return Err(ArchiveError::ChunkCrc { index: chunk_idx });
         }
         let g = chunk_idx / k;
@@ -643,7 +651,7 @@ impl Reader {
         // The rebuilt frame is self-validating: parse_frame_against_
         // entry re-checks every redundant field AND the internal chunk
         // CRC, so a wrong rebuild can never be returned as data.
-        parse_frame_against_entry(chunk_idx, &rebuilt, &members[mi])
+        parse_frame_against_entry(chunk_idx, &rebuilt, &members[mi], self.header.version)
             .map_err(|_| ArchiveError::Unrecoverable { group: g })
     }
 
@@ -677,14 +685,19 @@ impl Reader {
             let fetched: Result<(ChunkRecord, bool), ArchiveError> = self
                 .source
                 .span(e.offset, e.frame_len as usize)
-                .and_then(|frame| match parse_frame_against_entry(i, &frame, e) {
-                    Ok(rec) => Ok((rec, false)),
-                    Err(ArchiveError::ChunkCrc { .. } | ArchiveError::ChunkMismatch { .. })
-                        if self.header.version == ContainerVersion::V4 =>
-                    {
-                        self.repair_chunk_record(i).map(|rec| (rec, true))
+                .and_then(|frame| {
+                    match parse_frame_against_entry(i, &frame, e, self.header.version) {
+                        Ok(rec) => Ok((rec, false)),
+                        Err(ArchiveError::ChunkCrc { .. } | ArchiveError::ChunkMismatch { .. })
+                            if matches!(
+                                self.header.version,
+                                ContainerVersion::V4 | ContainerVersion::V5
+                            ) =>
+                        {
+                            self.repair_chunk_record(i).map(|rec| (rec, true))
+                        }
+                        Err(err) => Err(err),
                     }
-                    Err(err) => Err(err),
                 });
             match fetched {
                 Ok((rec, repaired)) => {
@@ -736,13 +749,21 @@ impl Reader {
 
 /// Parse one chunk frame out of the fetched byte span and cross-check
 /// every redundant field against its index entry (count, plan, CRC,
-/// body lengths), then verify the body CRC.
+/// body lengths), then verify the body CRC. v3/v4 frames are v2-shaped
+/// (16-byte head + plan byte); v5 frames carry one more byte, the
+/// predictor tag, which is validated here so a forged tag is a typed
+/// error at this boundary too.
 fn parse_frame_against_entry(
     index: usize,
     frame: &[u8],
     e: &IndexEntry,
+    version: ContainerVersion,
 ) -> Result<ChunkRecord, ArchiveError> {
-    let head_len = CHUNK_FRAME_HEADER_LEN_V2; // v3 frames are v2-shaped
+    let head_len = if version == ContainerVersion::V5 {
+        CHUNK_FRAME_HEADER_LEN_V5
+    } else {
+        CHUNK_FRAME_HEADER_LEN_V2
+    };
     if frame.len() < head_len {
         return Err(ArchiveError::ChunkMismatch {
             index,
@@ -753,8 +774,17 @@ fn parse_frame_against_entry(
         .first_chunk::<CHUNK_FRAME_HEADER_LEN>()
         .ok_or(ArchiveError::Truncated)?;
     let (n, ob, pb, want_crc) = parse_chunk_frame_header(fixed);
-    let plan = frame[head_len - 1];
+    let plan = frame[CHUNK_FRAME_HEADER_LEN_V2 - 1];
     let mismatch = |detail: String| ArchiveError::ChunkMismatch { index, detail };
+    let predictor = if version == ContainerVersion::V5 {
+        let p = frame[CHUNK_FRAME_HEADER_LEN_V5 - 1];
+        if crate::predict::PredictorKind::from_tag(p).is_none() {
+            return Err(mismatch(format!("frame has unknown predictor tag {p}")));
+        }
+        p
+    } else {
+        0
+    };
     if n != e.n_values {
         return Err(mismatch(format!("frame says {n} values, index {}", e.n_values)));
     }
@@ -782,11 +812,12 @@ fn parse_frame_against_entry(
     let rec = ChunkRecord {
         n_values: n,
         plan,
+        predictor,
         outlier_bytes,
         payload,
         stats: e.stats,
     };
-    if rec.crc32(ContainerVersion::V3) != want_crc {
+    if rec.crc32(version) != want_crc {
         return Err(ArchiveError::ChunkCrc { index });
     }
     Ok(rec)
@@ -956,6 +987,42 @@ mod tests {
         assert_eq!(s.report.holes[0].chunks, 1..3);
         assert_eq!(s.report.holes[0].elems, 1024..3072);
         assert_eq!(s.report.recovered, vec![0..1024, 3072..10_000]);
+    }
+
+    #[test]
+    fn v5_single_frame_corruption_repairs_bit_exactly() {
+        // Same campaign as the v4 test, on a v5 container with live
+        // predictor bytes: corrupt a whole stretch of a frame
+        // (predictor byte included) and the parity rebuild must
+        // restore it bit for bit.
+        let x = Suite::Cesm.generate(9, 10_000);
+        let mut cfg = EngineConfig::native(ErrorBound::Abs(1e-3));
+        cfg.chunk_size = 1024;
+        cfg.container_version = ContainerVersion::V5;
+        cfg.parity_group = 4;
+        let (container, _) = compress(&cfg, &x).unwrap();
+        assert!(
+            container.chunks.iter().any(|c| c.predictor != 0),
+            "smooth CESM data should select a predictor somewhere"
+        );
+        let bytes = container.to_bytes();
+        let (golden, _) = crate::coordinator::decompress(&cfg, &container).unwrap();
+        let r = Reader::from_bytes(bytes.clone()).unwrap();
+        let e = r.entries()[2];
+        let mut bad = bytes.clone();
+        // Clobber from the frame head onward: plan, predictor, body.
+        let off = e.offset as usize + 16;
+        for b in &mut bad[off..off + 8] {
+            *b ^= 0x5A;
+        }
+        let r2 = Reader::from_bytes(bad).unwrap();
+        let y = r2.decode_range(0..10_000).unwrap();
+        for (a, b) in y.iter().zip(&golden) {
+            assert_eq!(a.to_bits(), b.to_bits());
+        }
+        let s = r2.decode_salvage().unwrap();
+        assert_eq!(s.report.repaired_chunks, vec![2]);
+        assert!(s.report.holes.is_empty());
     }
 
     #[test]

@@ -138,7 +138,7 @@ pub struct ScrubReport {
 
 /// Verify a container and repair it in place where parity allows.
 ///
-/// A clean container returns `patched: None`. A v4 container with
+/// A clean container returns `patched: None`. A v4/v5 container with
 /// damage returns a patched image that has passed the *full* container
 /// parse (frames, parity XOR verification, footer, file CRC, marker) —
 /// scrub never blesses residual corruption. Damage beyond repair is
@@ -154,9 +154,12 @@ pub fn scrub(data: &[u8]) -> Result<ScrubReport, ArchiveError> {
         });
     }
     let r = Reader::from_bytes(data.to_vec())?;
-    if r.header().version != ContainerVersion::V4 {
+    if !matches!(
+        r.header().version,
+        ContainerVersion::V4 | ContainerVersion::V5
+    ) {
         return Err(ArchiveError::Container(
-            "scrub can only repair v4 containers (earlier versions have no parity)".into(),
+            "scrub can only repair v4/v5 containers (earlier versions have no parity)".into(),
         ));
     }
     let k = r.header().parity_group as usize;
@@ -339,7 +342,15 @@ fn parse_scan_frame(
     full_plan: u8,
     max_body: u64,
 ) -> Option<(ChunkRecord, usize)> {
-    if bytes.len() < CHUNK_FRAME_HEADER_LEN_V2 {
+    // v2–v4 frames: 16-byte head + plan byte. v5 appends the predictor
+    // byte; an out-of-range tag disqualifies the resync candidate just
+    // like a bad plan bit does.
+    let head_len = if header.version == ContainerVersion::V5 {
+        crate::container::CHUNK_FRAME_HEADER_LEN_V5
+    } else {
+        CHUNK_FRAME_HEADER_LEN_V2
+    };
+    if bytes.len() < head_len {
         return None;
     }
     let le32 = |off: usize| wire::le_u32_at(bytes, off);
@@ -354,12 +365,17 @@ fn parse_scan_frame(
     if plan & !full_plan != 0 {
         return None;
     }
+    let predictor = if header.version == ContainerVersion::V5 {
+        let p = bytes[17];
+        crate::predict::PredictorKind::from_tag(p)?;
+        p
+    } else {
+        0
+    };
     if ob as u64 + pb as u64 > max_body {
         return None;
     }
-    let total = CHUNK_FRAME_HEADER_LEN_V2
-        .checked_add(ob)?
-        .checked_add(pb)?;
+    let total = head_len.checked_add(ob)?.checked_add(pb)?;
     if bytes.len() < total {
         return None;
     }
@@ -371,10 +387,9 @@ fn parse_scan_frame(
         ChunkRecord {
             n_values: n,
             plan,
-            outlier_bytes: frame
-                .get(CHUNK_FRAME_HEADER_LEN_V2..CHUNK_FRAME_HEADER_LEN_V2 + ob)?
-                .to_vec(),
-            payload: frame.get(CHUNK_FRAME_HEADER_LEN_V2 + ob..)?.to_vec(),
+            predictor,
+            outlier_bytes: frame.get(head_len..head_len + ob)?.to_vec(),
+            payload: frame.get(head_len + ob..)?.to_vec(),
             stats: ChunkStats::EMPTY,
         },
         total,
@@ -725,6 +740,38 @@ mod tests {
         let covered: u64 = s.report.recovered.iter().map(|r| r.end - r.start).sum();
         let lost: u64 = s.report.holes.iter().map(|h| h.elems.end - h.elems.start).sum();
         assert_eq!(covered + lost, 10_000);
+    }
+
+    #[test]
+    fn v5_scrub_and_salvage_scan_handle_predictor_frames() {
+        // v5 container with live predictor bytes: scrub repairs a
+        // corrupt frame back to the original bytes, and the resync
+        // scan recovers everything when the tail is gone.
+        let x = Suite::Cesm.generate(13, 10_000);
+        let mut cfg = EngineConfig::native(ErrorBound::Abs(1e-3));
+        cfg.chunk_size = 1000;
+        cfg.container_version = ContainerVersion::V5;
+        cfg.parity_group = 3;
+        let (container, _) = compress(&cfg, &x).unwrap();
+        assert!(container.chunks.iter().any(|c| c.predictor != 0));
+        let bytes = container.to_bytes();
+        let (golden, _) = decompress(&cfg, &container).unwrap();
+        let r = Reader::from_bytes(bytes.clone()).unwrap();
+
+        let e = r.entries()[3];
+        let mut bad = bytes.clone();
+        bad[e.offset as usize + 17] ^= 0xA5; // the predictor byte
+        let rep = scrub(&bad).unwrap();
+        assert_eq!(rep.repaired_chunks, vec![3]);
+        assert_eq!(rep.patched.unwrap(), bytes);
+
+        let pe = *r.parity_entries().last().unwrap();
+        let cut = (pe.offset + pe.frame_len as u64) as usize;
+        let s = salvage(&bytes[..cut]).unwrap();
+        assert!(s.report.used_resync);
+        assert!(s.report.holes.is_empty(), "{:?}", s.report.holes);
+        assert_eq!(s.report.recovered, vec![0..10_000]);
+        assert_bits(&s.segments[0].values, &golden, 0);
     }
 
     #[test]

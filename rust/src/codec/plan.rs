@@ -157,6 +157,19 @@ pub fn choose(stages: &[Stage], words: &[u32], outlier_count: usize) -> u8 {
     analyze(words, outlier_count).plan(stages)
 }
 
+/// Choose a chunk's predictor (container v5's predictor byte) — the
+/// prediction-layer sibling of [`choose`], shared by the engine, the
+/// streaming encoder, and the `lc::reference` oracle so all three
+/// produce bit-identical containers. Samples the chunk prefix under
+/// the same [`SAMPLE_WORDS`] budget as the stage analyzer; see
+/// [`crate::predict::select`] for the cost model.
+pub fn choose_predictor(
+    qc: &crate::quantizer::QuantizerConfig,
+    values: &[f32],
+) -> crate::predict::PredictorKind {
+    crate::predict::select::choose(qc, values)
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;

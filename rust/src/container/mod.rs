@@ -1,4 +1,4 @@
-//! The `.lcz` container format — versions 1 through 4.
+//! The `.lcz` container format — versions 1 through 5.
 //!
 //! # v1 layout (magic `LCZ1`; all integers little-endian)
 //!
@@ -122,14 +122,46 @@
 //! mistaken for a shorter-but-valid file. v3 readers see unknown magic
 //! and fail typed, never silently.
 //!
+//! # v5 layout (magic `LCZ5`): the prediction-aware container
+//!
+//! Identical to v4 except each chunk frame carries a **predictor
+//! byte** immediately after the plan byte, and the chunk CRC covers
+//! it (`plan || predictor || outlier bytes || payload`):
+//!
+//! ```text
+//! per chunk:
+//!   [n_values u32] [outlier_bytes u32] [payload_bytes u32] [crc32 u32]
+//!   [plan u8] [predictor u8] [outlier bitmap bytes] [payload bytes]
+//! ```
+//!
+//! The fixed frame head grows by one byte
+//! ([`CHUNK_FRAME_HEADER_LEN_V5`] = 18 bytes); the CRC word stays at
+//! frame offset 12, so the erasure-location predicate
+//! ([`chunk_frame_crc_ok`]) and every piece of the v4 parity /
+//! salvage / scrub machinery carry over byte-oriented and unchanged.
+//! The predictor byte is a [`crate::predict::PredictorKind`] wire tag:
+//!
+//! | predictor | meaning                                             |
+//! |-----------|-----------------------------------------------------|
+//! | `0`       | none — plain value-quantizer words (a v4 chunk body)|
+//! | `1`       | order-1 previous-value residuals (`prev`)           |
+//! | `2`       | order-2 Lorenzo/linear residuals (`lorenzo1d`)      |
+//!
+//! Unknown tags are rejected at parse time with a typed error (future
+//! predictors bump the version or claim a new tag — never recycle).
+//! The tail is exactly v4's: the same 29-byte footer entries (the
+//! predictor lives only in-frame), `LCPF` parity frames, the `LCX4`
+//! trailer, and the finalization marker.
+//!
 //! The outlier bitmap travels with each chunk ("in-line", Section 3.1),
 //! compressed as part of the integrity-checked chunk record. The
 //! effective epsilon records the NOA->ABS resolution so the decoder
-//! needs no second pass over the data. v1/v2/v3 containers remain
+//! needs no second pass over the data. v1/v2/v3/v4 containers remain
 //! fully readable and writable, byte-identical to what earlier
-//! writers produced (a v1 frame parses to the full-chain plan); the
-//! writer chooses the version via [`Header::version`]
-//! (`lc compress --container-version {1,2,3,4}`, default 4).
+//! writers produced (a v1 frame parses to the full-chain plan; a
+//! v1–v4 frame parses to predictor 0); the writer chooses the version
+//! via [`Header::version`]
+//! (`lc compress --container-version {1,2,3,4,5}`, default 5).
 
 pub mod crc;
 
@@ -150,6 +182,8 @@ pub const MAGIC_V2: &[u8; 4] = b"LCZ2";
 pub const MAGIC_V3: &[u8; 4] = b"LCZ3";
 /// v4 magic (v3 layout + interleaved XOR parity frames).
 pub const MAGIC_V4: &[u8; 4] = b"LCZ4";
+/// v5 magic (v4 layout + per-chunk predictor bytes).
+pub const MAGIC_V5: &[u8; 4] = b"LCZ5";
 /// Parity frame magic (v4, interleaved between chunk-frame groups).
 /// As a little-endian u32 this is far above any plausible chunk
 /// `n_values`, so a 4-byte peek cleanly separates parity frames from
@@ -171,15 +205,17 @@ pub const UNFINALIZED_DETAIL: &str =
 /// Container format version. v2 adds the per-chunk plan byte that
 /// records the adaptive stage selection; v3 keeps the v2 frames and
 /// appends the seekable index footer; v4 keeps the v3 layout and
-/// interleaves XOR parity frames for single-erasure repair (see the
-/// module docs).
+/// interleaves XOR parity frames for single-erasure repair; v5 keeps
+/// the v4 layout and adds the per-chunk predictor byte that records
+/// the closed-loop residual quantization (see the module docs).
 #[derive(Debug, Clone, Copy, PartialEq, Eq, Default)]
 pub enum ContainerVersion {
     V1,
     V2,
     V3,
-    #[default]
     V4,
+    #[default]
+    V5,
 }
 
 impl ContainerVersion {
@@ -190,6 +226,7 @@ impl ContainerVersion {
             ContainerVersion::V2 | ContainerVersion::V3 | ContainerVersion::V4 => {
                 CHUNK_FRAME_HEADER_LEN_V2
             }
+            ContainerVersion::V5 => CHUNK_FRAME_HEADER_LEN_V5,
         }
     }
 
@@ -199,6 +236,7 @@ impl ContainerVersion {
             ContainerVersion::V2 => MAGIC_V2,
             ContainerVersion::V3 => MAGIC_V3,
             ContainerVersion::V4 => MAGIC_V4,
+            ContainerVersion::V5 => MAGIC_V5,
         }
     }
 
@@ -211,6 +249,8 @@ impl ContainerVersion {
             Some(ContainerVersion::V3)
         } else if m == MAGIC_V4 {
             Some(ContainerVersion::V4)
+        } else if m == MAGIC_V5 {
+            Some(ContainerVersion::V5)
         } else {
             None
         }
@@ -247,6 +287,11 @@ pub struct ChunkRecord {
     /// Stage-selection mask for this chunk's payload (bit `i` applies
     /// header stage `i`). v1 frames always carry the full-chain mask.
     pub plan: u8,
+    /// Closed-loop predictor wire tag
+    /// ([`crate::predict::PredictorKind::tag`]): 0 = plain
+    /// value-quantizer words. Serialized (and CRC-covered) in v5
+    /// frames only; v1–v4 frames always parse to 0.
+    pub predictor: u8,
     pub outlier_bytes: Vec<u8>,
     pub payload: Vec<u8>,
     /// Min/max summary of the reconstructed values — serialized into
@@ -282,8 +327,12 @@ fn protection_tag(p: Protection) -> u8 {
 pub const CHUNK_FRAME_HEADER_LEN: usize = 16;
 
 /// Serialized length of a v2 chunk frame header (v1 plus the plan
-/// byte).
+/// byte). v3 and v4 frames share it.
 pub const CHUNK_FRAME_HEADER_LEN_V2: usize = CHUNK_FRAME_HEADER_LEN + 1;
+
+/// Serialized length of a v5 chunk frame header (v2 plus the
+/// predictor byte).
+pub const CHUNK_FRAME_HEADER_LEN_V5: usize = CHUNK_FRAME_HEADER_LEN_V2 + 1;
 
 impl Header {
     /// Serialize the header — everything that precedes the chunk
@@ -331,7 +380,7 @@ impl Header {
     /// no parity and always resolve to 0.
     pub fn parity_group_effective(&self) -> u32 {
         match self.version {
-            ContainerVersion::V4 => {
+            ContainerVersion::V4 | ContainerVersion::V5 => {
                 if self.parity_group == 0 {
                     DEFAULT_PARITY_GROUP
                 } else {
@@ -349,7 +398,7 @@ pub const HEADER_FIXED_LEN: usize = 29;
 
 fn parse_header(r: &mut Reader) -> Result<Header, String> {
     let version = ContainerVersion::from_magic(r.take(4)?)
-        .ok_or("bad magic (not an LCZ1/LCZ2/LCZ3/LCZ4 file)")?;
+        .ok_or("bad magic (not an LCZ1/LCZ2/LCZ3/LCZ4/LCZ5 file)")?;
     let _flags = r.u8()?;
     let eb_kind = r.u8()?;
     let variant = match r.u8()? {
@@ -399,13 +448,16 @@ fn parse_header(r: &mut Reader) -> Result<Header, String> {
 
 impl ChunkRecord {
     /// CRC over the record's integrity-checked bytes — the word stored
-    /// in the chunk frame. v1 covers `outlier || payload`; v2 and v3
-    /// also cover the plan byte (prepended), so a flipped plan fails
-    /// fast.
+    /// in the chunk frame. v1 covers `outlier || payload`; v2/v3/v4
+    /// also cover the plan byte (prepended), and v5 the predictor byte
+    /// after it, so a flipped plan or predictor fails fast.
     pub fn crc32(&self, version: ContainerVersion) -> u32 {
         let mut crc = Crc32::new();
         if version != ContainerVersion::V1 {
             crc.update(&[self.plan]);
+        }
+        if version == ContainerVersion::V5 {
+            crc.update(&[self.predictor]);
         }
         crc.update(&self.outlier_bytes);
         crc.update(&self.payload);
@@ -428,6 +480,9 @@ impl ChunkRecord {
         out.extend_from_slice(&crc.to_le_bytes());
         if version != ContainerVersion::V1 {
             out.push(self.plan);
+        }
+        if version == ContainerVersion::V5 {
+            out.push(self.predictor);
         }
         out.extend_from_slice(&self.outlier_bytes);
         out.extend_from_slice(&self.payload);
@@ -461,11 +516,13 @@ pub fn xor_fold(dst: &mut [u8], src: &[u8]) {
     }
 }
 
-/// Does `frame` hold an intact v2/v3/v4 chunk frame whose chunk CRC is
-/// `want`? Used to *locate* erasures inside a parity group: the stored
-/// CRC word must match the expected one and the body
-/// (`plan || outlier || payload`, i.e. everything after the 16-byte
-/// fixed head) must hash to it.
+/// Does `frame` hold an intact v2/v3/v4/v5 chunk frame whose chunk CRC
+/// is `want`? Used to *locate* erasures inside a parity group: the
+/// stored CRC word must match the expected one and the body
+/// (`plan || outlier || payload` — with the predictor byte after the
+/// plan in v5 — i.e. everything after the 16-byte fixed head) must
+/// hash to it. Version-agnostic because the CRC word sits at frame
+/// offset 12 in every version and covers everything after offset 16.
 pub fn chunk_frame_crc_ok(frame: &[u8], want: u32) -> bool {
     frame.len() >= CHUNK_FRAME_HEADER_LEN_V2
         && wire::le_u32_at(frame, 12) == want
@@ -680,7 +737,11 @@ impl Container {
         header.n_chunks = self.chunks.len() as u32;
         let parity_group = header.parity_group_effective();
         let mut out = header.to_bytes();
-        let indexed = matches!(version, ContainerVersion::V3 | ContainerVersion::V4);
+        let indexed = matches!(
+            version,
+            ContainerVersion::V3 | ContainerVersion::V4 | ContainerVersion::V5
+        );
+        let parity_on = matches!(version, ContainerVersion::V4 | ContainerVersion::V5);
         let mut entries: Vec<IndexEntry> = Vec::new();
         let mut parity: Vec<index::ParityEntry> = Vec::new();
         // Members of the open parity group: (offset, frame_len).
@@ -700,7 +761,7 @@ impl Container {
                     stats: c.stats,
                 });
             }
-            if version == ContainerVersion::V4 {
+            if parity_on {
                 group.push((offset, frame_len));
                 let last = i + 1 == self.chunks.len();
                 if group.len() == parity_group as usize || last {
@@ -719,14 +780,14 @@ impl Container {
         }
         match version {
             ContainerVersion::V3 => index::write_footer(&entries, &mut out),
-            ContainerVersion::V4 => {
+            ContainerVersion::V4 | ContainerVersion::V5 => {
                 index::write_footer_v4(&entries, &parity, parity_group, &mut out)
             }
             _ => {}
         }
         let file_crc = crc32(&out);
         out.extend_from_slice(&file_crc.to_le_bytes());
-        if version == ContainerVersion::V4 {
+        if parity_on {
             out.extend_from_slice(FINALIZE_MARKER);
         }
         out
@@ -752,12 +813,13 @@ impl Container {
         let version = header.version;
         let full_plan = header.full_plan();
         let n_chunks = header.n_chunks;
-        // v4: validate the tail (finalization marker + trailer) up
+        // v4/v5: validate the tail (finalization marker + trailer) up
         // front — a torn tail must surface as the typed "unfinalized"
         // detail, not as whatever frame-level error the forward walk
         // happens to hit first. The frame loop then knows the parity
         // group size before the first group closes.
-        let trailer_v4 = if version == ContainerVersion::V4 {
+        let parity_on = matches!(version, ContainerVersion::V4 | ContainerVersion::V5);
+        let trailer_v4 = if parity_on {
             let tail = index::TRAILER_LEN_V4 + 4 + FINALIZE_MARKER.len();
             if data.len() < r.pos + tail {
                 if data.len() >= FINALIZE_MARKER.len() && !data.ends_with(FINALIZE_MARKER) {
@@ -812,7 +874,10 @@ impl Container {
             let want_crc = r.u32()?;
             let plan = match version {
                 ContainerVersion::V1 => full_plan,
-                ContainerVersion::V2 | ContainerVersion::V3 | ContainerVersion::V4 => {
+                ContainerVersion::V2
+                | ContainerVersion::V3
+                | ContainerVersion::V4
+                | ContainerVersion::V5 => {
                     let p = r.u8()?;
                     if p & !full_plan != 0 {
                         return Err(format!(
@@ -823,11 +888,21 @@ impl Container {
                     p
                 }
             };
+            let predictor = if version == ContainerVersion::V5 {
+                let p = r.u8()?;
+                if crate::predict::PredictorKind::from_tag(p).is_none() {
+                    return Err(format!("chunk {i} has unknown predictor tag {p}"));
+                }
+                p
+            } else {
+                0
+            };
             let outlier_bytes = r.take(ob)?.to_vec();
             let payload = r.take(pb)?.to_vec();
             let rec = ChunkRecord {
                 n_values: n,
                 plan,
+                predictor,
                 outlier_bytes,
                 payload,
                 stats: ChunkStats::EMPTY,
@@ -836,7 +911,10 @@ impl Container {
                 return Err(format!("chunk {i} CRC mismatch"));
             }
             let frame_len = (r.pos as u64 - frame_start) as u32;
-            if matches!(version, ContainerVersion::V3 | ContainerVersion::V4) {
+            if matches!(
+                version,
+                ContainerVersion::V3 | ContainerVersion::V4 | ContainerVersion::V5
+            ) {
                 observed.push((frame_start, frame_len, want_crc));
             }
             chunks.push(rec);
@@ -909,7 +987,7 @@ impl Container {
                 }
                 cross_validate_entries(&entries, &observed, &mut chunks)?;
             }
-            (ContainerVersion::V4, Some(t)) => {
+            (ContainerVersion::V4 | ContainerVersion::V5, Some(t)) => {
                 let footer_offset = r.pos as u64;
                 if t.footer_offset != footer_offset {
                     return Err(format!(
@@ -952,7 +1030,7 @@ impl Container {
         if crc32(data.get(..body_end).unwrap_or_default()) != file_crc {
             return Err("file CRC mismatch".into());
         }
-        if version == ContainerVersion::V4 {
+        if parity_on {
             // Already validated against the tail; consuming it here
             // keeps the trailing-garbage check exact.
             let m = r.take(FINALIZE_MARKER.len())?;
@@ -1057,19 +1135,23 @@ impl<'a> Reader<'a> {
 mod tests {
     use super::*;
 
-    const ALL_VERSIONS: [ContainerVersion; 4] = [
+    const ALL_VERSIONS: [ContainerVersion; 5] = [
         ContainerVersion::V1,
         ContainerVersion::V2,
         ContainerVersion::V3,
         ContainerVersion::V4,
+        ContainerVersion::V5,
     ];
 
     fn sample_versioned(version: ContainerVersion) -> Container {
         let full = full_mask_for(4);
-        // v3/v4 serialize the stats into the footer; keep v1/v2
-        // records at the EMPTY placeholder so parse roundtrips compare
-        // equal.
-        let v3 = matches!(version, ContainerVersion::V3 | ContainerVersion::V4);
+        // v3+ serialize the stats into the footer; keep v1/v2 records
+        // at the EMPTY placeholder so parse roundtrips compare equal.
+        let v3 = matches!(
+            version,
+            ContainerVersion::V3 | ContainerVersion::V4 | ContainerVersion::V5
+        );
+        let parity_on = matches!(version, ContainerVersion::V4 | ContainerVersion::V5);
         Container {
             header: Header {
                 version,
@@ -1081,15 +1163,16 @@ mod tests {
                 chunk_size: 100,
                 stages: vec![Stage::Delta, Stage::BitShuffle, Stage::Rle0, Stage::Huffman],
                 n_chunks: 2,
-                // k=1 for v4: two chunks land in two parity groups, so
-                // the sample exercises multi-group layout and the
+                // k=1 for v4/v5: two chunks land in two parity groups,
+                // so the sample exercises multi-group layout and the
                 // short-last-group path stays trivial.
-                parity_group: if version == ContainerVersion::V4 { 1 } else { 0 },
+                parity_group: if parity_on { 1 } else { 0 },
             },
             chunks: vec![
                 ChunkRecord {
                     n_values: 100,
                     plan: full,
+                    predictor: 0,
                     outlier_bytes: vec![0xAA; 13],
                     payload: vec![1, 2, 3, 4, 5],
                     stats: if v3 {
@@ -1105,6 +1188,8 @@ mod tests {
                     n_values: 50,
                     // v1 frames can only record the full chain.
                     plan: if version == ContainerVersion::V1 { full } else { 0b1011 },
+                    // Only v5 frames can record a predictor.
+                    predictor: if version == ContainerVersion::V5 { 2 } else { 0 },
                     outlier_bytes: vec![0x00; 7],
                     payload: vec![9; 40],
                     stats: if v3 {
@@ -1306,6 +1391,56 @@ mod tests {
         assert_eq!(&v4[..4], MAGIC_V4);
         assert_eq!(&v4[header_len..header_len + 4], &v3[header_len..header_len + 4]);
         assert_eq!(&v4[header_len + frames_len..header_len + frames_len + 4], PARITY_MAGIC);
+    }
+
+    #[test]
+    fn v5_roundtrips_predictor_bytes_after_the_plan() {
+        let c5 = sample_versioned(ContainerVersion::V5);
+        let bytes = c5.to_bytes();
+        let back = Container::from_bytes(&bytes).unwrap();
+        assert_eq!(back, c5);
+        assert_eq!(back.chunks[0].predictor, 0);
+        assert_eq!(back.chunks[1].predictor, 2);
+        // Byte-level: plan at frame offset 16, predictor at 17, body
+        // after the 18-byte head — first frame starts right after the
+        // header.
+        let header_len = c5.header.to_bytes().len();
+        assert_eq!(&bytes[..4], MAGIC_V5);
+        assert_eq!(bytes[header_len + 16], full_mask_for(4));
+        assert_eq!(bytes[header_len + 17], 0);
+        assert_eq!(bytes[header_len + 18], 0xAA);
+        assert_eq!(ContainerVersion::V5.chunk_frame_header_len(), 18);
+    }
+
+    #[test]
+    fn v5_rejects_unknown_predictor_tags_typed() {
+        let mut c = sample_versioned(ContainerVersion::V5);
+        c.chunks[1].predictor = 7; // a future tag this parser must refuse
+        let err = String::from(Container::from_bytes(&c.to_bytes()).unwrap_err());
+        assert!(err.contains("unknown predictor tag 7"), "{err}");
+    }
+
+    #[test]
+    fn v5_predictor_byte_flip_fails_chunk_crc() {
+        let c = sample_versioned(ContainerVersion::V5);
+        let bytes = c.to_bytes();
+        let pred_off = c.header.to_bytes().len() + 17;
+        assert_eq!(bytes[pred_off], 0);
+        let mut bad = bytes.clone();
+        bad[pred_off] = 1; // a *valid* but wrong predictor tag
+        let err = String::from(Container::from_bytes(&bad).unwrap_err());
+        assert!(err.contains("CRC"), "{err}");
+    }
+
+    #[test]
+    fn v5_tail_reuses_the_v4_finalization_machinery() {
+        let bytes = sample_versioned(ContainerVersion::V5).to_bytes();
+        assert_eq!(&bytes[bytes.len() - 8..], FINALIZE_MARKER);
+        let cut = &bytes[..bytes.len() - FINALIZE_MARKER.len()];
+        let err = String::from(Container::from_bytes(cut).unwrap_err());
+        assert!(err.contains("unfinalized"), "{err}");
+        let back = Container::from_bytes(&bytes).unwrap();
+        assert_eq!(back.header.parity_group, 1);
     }
 
     #[test]

@@ -32,6 +32,7 @@ use crate::archive::stats::ChunkStats;
 use crate::codec::{plan, Pipeline};
 use crate::container::{ChunkRecord, Container, ContainerVersion, Header};
 use crate::error::LcError;
+use crate::predict::{self, PredictorChoice, PredictorKind};
 use crate::quantizer::QuantizerConfig;
 use crate::runtime::PjrtHandle;
 use crate::scratch::Scratch;
@@ -52,18 +53,26 @@ pub struct EngineConfig {
     /// Values per chunk. Must equal CHUNK_ELEMS when device == Pjrt
     /// (the AOT artifacts have a fixed shape).
     pub chunk_size: usize,
-    /// Container format to write. V4 (default) = V3 plus one XOR
-    /// parity frame per `parity_group` chunks (single-erasure repair,
-    /// see [`crate::archive::repair`]) and a torn-write finalization
-    /// marker; V3 = V2's adaptive per-chunk stage selection plus the
-    /// seekable index footer ([`crate::archive`]); V2 enables adaptive
-    /// stage selection without the index; V1 reproduces the seed's
-    /// format byte-for-byte (every chunk uses the full stage chain).
+    /// Container format to write. V5 (default) = V4 plus the per-chunk
+    /// closed-loop predictor byte ([`crate::predict`]); V4 = V3 plus
+    /// one XOR parity frame per `parity_group` chunks (single-erasure
+    /// repair, see [`crate::archive::repair`]) and a torn-write
+    /// finalization marker; V3 = V2's adaptive per-chunk stage
+    /// selection plus the seekable index footer ([`crate::archive`]);
+    /// V2 enables adaptive stage selection without the index; V1
+    /// reproduces the seed's format byte-for-byte (every chunk uses
+    /// the full stage chain).
     pub container_version: ContainerVersion,
-    /// Chunk frames per XOR parity frame (v4 only; smaller = more
+    /// Chunk frames per XOR parity frame (v4/v5 only; smaller = more
     /// repair capacity, more overhead). Must be nonzero when writing
-    /// v4; ignored by earlier versions.
+    /// v4/v5; ignored by earlier versions.
     pub parity_group: u32,
+    /// Closed-loop predictor policy (v5 native encodes only): `Auto`
+    /// samples each chunk and keeps the cheapest of
+    /// none/prev/lorenzo1d; `Fixed` forces one predictor everywhere.
+    /// Earlier container versions ignore `Auto` (they cannot record a
+    /// predictor) and reject a fixed non-`None` choice at validate.
+    pub predictor: PredictorChoice,
     /// PJRT handle, required when device == Pjrt.
     pub pjrt: Option<PjrtHandle>,
 }
@@ -80,6 +89,7 @@ impl EngineConfig {
             chunk_size: CHUNK_ELEMS,
             container_version: ContainerVersion::default(),
             parity_group: crate::container::DEFAULT_PARITY_GROUP,
+            predictor: PredictorChoice::Auto,
             pjrt: None,
         }
     }
@@ -107,8 +117,30 @@ impl EngineConfig {
         if self.chunk_size == 0 {
             return Err(anyhow!("chunk_size must be positive"));
         }
-        if self.container_version == ContainerVersion::V4 && self.parity_group == 0 {
-            return Err(anyhow!("v4 containers need parity_group >= 1"));
+        if matches!(
+            self.container_version,
+            ContainerVersion::V4 | ContainerVersion::V5
+        ) && self.parity_group == 0
+        {
+            return Err(anyhow!("v4/v5 containers need parity_group >= 1"));
+        }
+        if let PredictorChoice::Fixed(k) = self.predictor {
+            if k != PredictorKind::None {
+                if self.container_version != ContainerVersion::V5 {
+                    return Err(anyhow!(
+                        "--predictor {} needs a v5 container (only v5 frames record a \
+                         predictor byte)",
+                        k.name()
+                    ));
+                }
+                if self.device == Device::Pjrt {
+                    return Err(anyhow!(
+                        "--predictor {} is native-only (the closed-loop residual \
+                         quantizer has no AOT artifact)",
+                        k.name()
+                    ));
+                }
+            }
         }
         if self.device == Device::Pjrt {
             if self.chunk_size != CHUNK_ELEMS {
@@ -181,21 +213,47 @@ fn quantize_into_scratch(
 /// in-memory engine and the streaming pipeline; the only allocations
 /// are the record's owned bytes.
 ///
-/// Under containers v2 and v3 a cheap per-chunk analysis (outlier
-/// density from the quantizer bitmap, sampled byte entropy, sampled
-/// zero-run fraction — see [`crate::codec::plan`]) picks the stage
-/// subset for this chunk's payload and records it as the frame's plan
-/// byte; v1 always applies the full header chain. Under v3 the record
+/// Under containers v2+ a cheap per-chunk analysis (outlier density
+/// from the quantizer bitmap, sampled byte entropy, sampled zero-run
+/// fraction — see [`crate::codec::plan`]) picks the stage subset for
+/// this chunk's payload and records it as the frame's plan byte; v1
+/// always applies the full header chain. Under v3+ the record
 /// additionally carries the min/max summary of the chunk's **native
 /// reconstruction** (dequantized through the scratch arena), destined
 /// for the index footer that [`crate::archive::Reader`] prunes on.
+/// Under v5 native encodes the chunk's words may be closed-loop
+/// prediction residuals instead of value bins
+/// ([`crate::predict::encode_chunk`]), recorded in the frame's
+/// predictor byte; the per-value check inside the residual quantizer
+/// keeps the error bound exact regardless of which predictor won.
 pub fn encode_chunk_record(
     cfg: &EngineConfig,
     qc: &QuantizerConfig,
     values: &[f32],
     s: &mut Scratch,
 ) -> Result<(ChunkRecord, usize), LcError> {
-    quantize_into_scratch(cfg, qc, values, s)?;
+    // Only a (v5, native) encode can record a predictor; everything
+    // else quantizes values directly, exactly as before.
+    let kind = if cfg.container_version == ContainerVersion::V5 && cfg.device == Device::Native
+    {
+        match cfg.predictor {
+            PredictorChoice::Auto => plan::choose_predictor(qc, values),
+            PredictorChoice::Fixed(k) => k,
+        }
+    } else {
+        PredictorKind::None
+    };
+    if kind == PredictorKind::None {
+        quantize_into_scratch(cfg, qc, values, s)?;
+    } else {
+        predict::encode_chunk(
+            kind,
+            predict::residual_bound(qc),
+            values,
+            &mut s.qwords,
+            &mut s.obits,
+        );
+    }
     let outliers: usize = s.obits.iter().map(|w| w.count_ones() as usize).sum();
     // RLE keeps the (almost always zero) bitmap from capping the ratio
     // at 32x.
@@ -204,20 +262,32 @@ pub fn encode_chunk_record(
     crate::codec::rle::encode_into(&s.bitmap, &mut outlier_bytes);
     let chunk_plan = match cfg.container_version {
         ContainerVersion::V1 => cfg.pipeline.full_mask(),
-        ContainerVersion::V2 | ContainerVersion::V3 | ContainerVersion::V4 => {
-            plan::choose(cfg.pipeline.stages(), &s.qwords, outliers)
-        }
+        ContainerVersion::V2
+        | ContainerVersion::V3
+        | ContainerVersion::V4
+        | ContainerVersion::V5 => plan::choose(cfg.pipeline.stages(), &s.qwords, outliers),
     };
     let stats = match cfg.container_version {
-        ContainerVersion::V3 | ContainerVersion::V4 => {
+        ContainerVersion::V3 | ContainerVersion::V4 | ContainerVersion::V5 => {
             // Summarize what a reader will decode, not the input: the
             // reconstruction is what an independent index rebuild can
             // reproduce, and what range queries actually see. Bare
-            // resize (no clear + zero-fill): the dequantize kernel
-            // overwrites every element.
+            // resize (no clear + zero-fill): the decode kernels
+            // overwrite every element.
             s.values.resize(values.len(), 0.0);
-            qc.dequantize_native_slice(&s.qwords, &s.obits, &mut s.values)
+            if kind == PredictorKind::None {
+                qc.dequantize_native_slice(&s.qwords, &s.obits, &mut s.values)
+                    .map_err(|e| LcError::Quantizer(String::from(e)))?;
+            } else {
+                predict::decode_chunk(
+                    kind,
+                    predict::residual_bound(qc),
+                    &s.qwords,
+                    &s.obits,
+                    &mut s.values,
+                )
                 .map_err(|e| LcError::Quantizer(String::from(e)))?;
+            }
             ChunkStats::from_values(&s.values)
         }
         _ => ChunkStats::EMPTY,
@@ -229,6 +299,7 @@ pub fn encode_chunk_record(
         ChunkRecord {
             n_values: values.len() as u32,
             plan: chunk_plan,
+            predictor: kind.tag(),
             outlier_bytes,
             payload,
             stats,
@@ -245,7 +316,10 @@ pub fn encode_chunk_record(
 /// table is cached in the scratch, every intermediate buffer is
 /// reused, and the output is caller-preallocated. The record's plan
 /// mask (container v2) selects the stage subset to undo; v1 records
-/// carry the full-chain mask.
+/// carry the full-chain mask. A v5 record's predictor tag routes the
+/// words through the closed-loop residual decoder
+/// ([`crate::predict::decode_chunk`]); unknown tags are a typed
+/// container error.
 pub fn decode_chunk_record_into(
     cfg: &EngineConfig,
     qc: &QuantizerConfig,
@@ -267,6 +341,23 @@ pub fn decode_chunk_record_into(
     crate::codec::rle::decode_into(&rec.outlier_bytes, n.div_ceil(8), &mut s.bitmap)
         .map_err(|e| LcError::Codec(String::from(e)))?;
     crate::bitvec::bytes_to_bits_into(&s.bitmap, n, &mut s.obits).map_err(LcError::Codec)?;
+    let kind = PredictorKind::from_tag(rec.predictor).ok_or_else(|| {
+        LcError::Container(format!("chunk has unknown predictor tag {}", rec.predictor))
+    })?;
+    if kind != PredictorKind::None {
+        // Predictor chunks decode natively on every device: the
+        // closed-loop residual walk is scalar f64 arithmetic with no
+        // AOT artifact, and it is bit-exact by construction.
+        predict::decode_chunk(
+            kind,
+            predict::residual_bound(qc),
+            &s.codec.words_a,
+            &s.obits,
+            out,
+        )
+        .map_err(|e| LcError::Quantizer(String::from(e)))?;
+        return Ok(());
+    }
     match cfg.device {
         Device::Native => {
             // The decode boundary validates the bitmap length so a
@@ -397,7 +488,10 @@ pub fn compress(cfg: &EngineConfig, data: &[f32]) -> Result<(Container, RunStats
             chunk_size: cfg.chunk_size as u32,
             stages: cfg.pipeline.stages().to_vec(),
             n_chunks: n_chunks as u32,
-            parity_group: if cfg.container_version == ContainerVersion::V4 {
+            parity_group: if matches!(
+                cfg.container_version,
+                ContainerVersion::V4 | ContainerVersion::V5
+            ) {
                 cfg.parity_group
             } else {
                 0
@@ -586,8 +680,82 @@ mod tests {
         cfg.device = Device::Pjrt; // no handle
         assert!(compress(&cfg, &[1.0]).is_err());
         cfg = EngineConfig::native(ErrorBound::Abs(1e-3));
-        cfg.parity_group = 0; // v4 needs a nonzero group size
+        cfg.parity_group = 0; // v4/v5 need a nonzero group size
         assert!(compress(&cfg, &[1.0]).is_err());
+        // A forced predictor needs a v5 container...
+        cfg = EngineConfig::native(ErrorBound::Abs(1e-3));
+        cfg.container_version = ContainerVersion::V4;
+        cfg.predictor = PredictorChoice::Fixed(PredictorKind::Prev);
+        assert!(compress(&cfg, &[1.0]).is_err());
+        // ...but a forced `none` (or Auto) is fine on any version.
+        cfg.predictor = PredictorChoice::Fixed(PredictorKind::None);
+        assert!(compress(&cfg, &[1.0]).is_ok());
+    }
+
+    #[test]
+    fn v5_roundtrips_under_every_predictor_policy() {
+        let x = Suite::Cesm.generate(3, CHUNK_ELEMS * 2 + 321);
+        let policies = [
+            PredictorChoice::Auto,
+            PredictorChoice::Fixed(PredictorKind::None),
+            PredictorChoice::Fixed(PredictorKind::Prev),
+            PredictorChoice::Fixed(PredictorKind::Lorenzo1D),
+        ];
+        for policy in policies {
+            let mut cfg = EngineConfig::native(ErrorBound::Abs(1e-3));
+            cfg.predictor = policy;
+            let y = roundtrip_cfg(&cfg, &x);
+            assert_eq!(
+                crate::verify::metrics::abs_violations(&x, &y, 1e-3),
+                0,
+                "{policy:?}"
+            );
+        }
+    }
+
+    #[test]
+    fn v5_auto_records_predictors_on_smooth_data() {
+        // A steep smooth ramp far from zero: value bins blow past the
+        // residual cost, so Auto must pick a predictor somewhere.
+        let x: Vec<f32> = (0..CHUNK_ELEMS * 2)
+            .map(|i| 5000.0 + i as f32 * 0.25)
+            .collect();
+        let cfg = EngineConfig::native(ErrorBound::Abs(1e-3));
+        let (container, _) = compress(&cfg, &x).unwrap();
+        assert!(
+            container.chunks.iter().any(|c| c.predictor != 0),
+            "auto selection never chose a predictor on a linear ramp"
+        );
+        let (y, _) = decompress(&cfg, &container).unwrap();
+        assert_eq!(crate::verify::metrics::abs_violations(&x, &y, 1e-3), 0);
+    }
+
+    #[test]
+    fn pre_v5_versions_never_record_predictors() {
+        let x = Suite::Cesm.generate(4, 20_000);
+        for version in [
+            ContainerVersion::V1,
+            ContainerVersion::V2,
+            ContainerVersion::V3,
+            ContainerVersion::V4,
+        ] {
+            let mut cfg = EngineConfig::native(ErrorBound::Abs(1e-3));
+            cfg.container_version = version;
+            let (container, _) = compress(&cfg, &x).unwrap();
+            assert!(container.chunks.iter().all(|c| c.predictor == 0), "{version:?}");
+            let y = roundtrip_cfg(&cfg, &x);
+            assert_eq!(crate::verify::metrics::abs_violations(&x, &y, 1e-3), 0);
+        }
+    }
+
+    #[test]
+    fn unknown_predictor_tag_is_a_typed_decode_error() {
+        let x = Suite::Cesm.generate(5, 5000);
+        let cfg = EngineConfig::native(ErrorBound::Abs(1e-3));
+        let (mut container, _) = compress(&cfg, &x).unwrap();
+        container.chunks[0].predictor = 9;
+        let err = decompress(&cfg, &container).unwrap_err().to_string();
+        assert!(err.contains("unknown predictor tag"), "{err}");
     }
 
     #[test]

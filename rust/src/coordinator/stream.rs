@@ -35,7 +35,7 @@ use crate::archive::stats::ChunkStats;
 use crate::container::{
     crc::{crc32, Crc32},
     parse_chunk_frame_header, ChunkRecord, ContainerVersion, Header, ParityFrame,
-    CHUNK_FRAME_HEADER_LEN_V2, FINALIZE_MARKER, HEADER_FIXED_LEN, PARITY_FRAME_FIXED,
+    CHUNK_FRAME_HEADER_LEN_V5, FINALIZE_MARKER, HEADER_FIXED_LEN, PARITY_FRAME_FIXED,
     PARITY_MAGIC, UNFINALIZED_DETAIL,
 };
 use crate::quantizer::QuantizerConfig;
@@ -62,13 +62,16 @@ struct DoneItem {
 /// Compress a byte stream of little-endian f32 values into a container
 /// written to `out`. Returns run statistics.
 ///
-/// Under containers v3 and v4 (the default) the emitted container
-/// carries the seekable index footer: each worker's [`ChunkRecord`]
-/// already includes its min/max summary, so the index costs this
-/// pipeline only the per-chunk entry bookkeeping the serializer keeps
-/// anyway — no chunk data is re-read or re-buffered to build it. v4
-/// additionally interleaves XOR parity frames and ends with a
-/// finalization marker (see [`crate::archive::repair`]).
+/// Under containers v3 through v5 (v5 is the default) the emitted
+/// container carries the seekable index footer: each worker's
+/// [`ChunkRecord`] already includes its min/max summary, so the index
+/// costs this pipeline only the per-chunk entry bookkeeping the
+/// serializer keeps anyway — no chunk data is re-read or re-buffered
+/// to build it. v4 and v5 additionally interleave XOR parity frames
+/// and end with a finalization marker (see [`crate::archive::repair`]);
+/// v5 workers also resolve each chunk's predictor (see
+/// [`crate::predict`]) exactly as the in-memory engine does, so the
+/// streamed bytes stay bit-identical to [`super::engine::compress`].
 pub fn compress_stream<R: Read, W: Write>(
     cfg: &EngineConfig,
     queue_depth: usize,
@@ -79,8 +82,30 @@ pub fn compress_stream<R: Read, W: Write>(
         bail!("NOA needs a two-pass range scan; use coordinator::engine::compress");
     }
     cfg.bound.validate().map_err(|e| anyhow!(e))?;
-    if cfg.container_version == ContainerVersion::V4 && cfg.parity_group == 0 {
-        bail!("v4 containers need parity_group >= 1");
+    if matches!(
+        cfg.container_version,
+        ContainerVersion::V4 | ContainerVersion::V5
+    ) && cfg.parity_group == 0
+    {
+        bail!("v4/v5 containers need parity_group >= 1");
+    }
+    if let crate::predict::PredictorChoice::Fixed(k) = cfg.predictor {
+        if k != crate::predict::PredictorKind::None {
+            if cfg.container_version != ContainerVersion::V5 {
+                bail!(
+                    "--predictor {} needs a v5 container (only v5 frames record a \
+                     predictor byte)",
+                    k.name()
+                );
+            }
+            if cfg.device == Device::Pjrt {
+                bail!(
+                    "--predictor {} is native-only (the closed-loop residual \
+                     quantizer has no AOT artifact)",
+                    k.name()
+                );
+            }
+        }
     }
     let t0 = Instant::now();
     let qc = QuantizerConfig::resolve(cfg.bound, cfg.variant, cfg.protection, &[]);
@@ -233,7 +258,10 @@ pub fn compress_stream<R: Read, W: Write>(
             chunk_size: cfg.chunk_size as u32,
             stages: cfg.pipeline.stages().to_vec(),
             n_chunks: records.len() as u32,
-            parity_group: if cfg.container_version == ContainerVersion::V4 {
+            parity_group: if matches!(
+                cfg.container_version,
+                ContainerVersion::V4 | ContainerVersion::V5
+            ) {
                 cfg.parity_group
             } else {
                 0
@@ -530,9 +558,10 @@ pub fn decompress_stream<R: Read, W: Write + Send>(
 
         // Reader (this thread): frame one chunk at a time under
         // backpressure from the bounded work queue. The frame header is
-        // 16 bytes (v1) or 17 (the trailing plan byte of v2 and v3).
+        // 16 bytes (v1), 17 (the trailing plan byte of v2–v4), or 18
+        // (v5 appends the predictor byte after the plan).
         let fh_len = version.chunk_frame_header_len();
-        let mut frame_head = [0u8; CHUNK_FRAME_HEADER_LEN_V2];
+        let mut frame_head = [0u8; CHUNK_FRAME_HEADER_LEN_V5];
         let mut values_seen = 0u64;
         // v3/v4: (offset, frame_len, crc, n_values, plan) per frame,
         // to cross-validate the index footer after the last chunk.
@@ -565,7 +594,7 @@ pub fn decompress_stream<R: Read, W: Write + Send>(
             // The v4 lookahead may already hold this frame's first 4
             // bytes (they were read — and CRC-tracked — while peeking
             // for a parity frame).
-            // lint: allow(range-index) -- frame_head is a fixed 17-byte array and fh_len is 16 or 17
+            // lint: allow(range-index) -- frame_head is a fixed 18-byte array and fh_len is 16, 17, or 18
             let head_read = if let Some(first4) = pending.take() {
                 frame_head[..4].copy_from_slice(&first4);
                 read_exact_tracked(
@@ -588,14 +617,26 @@ pub fn decompress_stream<R: Read, W: Write + Send>(
                 bail!("truncated container at chunk {index}");
             }
             let frame_start = compressed_bytes - fh_len as u64;
-            // frame_head is 17 bytes, so first_chunk::<16> always succeeds.
+            // frame_head is 18 bytes, so first_chunk::<16> always succeeds.
             let fixed = *frame_head.first_chunk::<16>().unwrap_or(&[0u8; 16]);
             let (n, ob, pb, want_crc) = parse_chunk_frame_header(&fixed);
             let chunk_plan = match version {
                 ContainerVersion::V1 => full_plan,
-                ContainerVersion::V2 | ContainerVersion::V3 | ContainerVersion::V4 => {
-                    frame_head[16]
+                ContainerVersion::V2
+                | ContainerVersion::V3
+                | ContainerVersion::V4
+                | ContainerVersion::V5 => frame_head[16],
+            };
+            let predictor = if version == ContainerVersion::V5 {
+                let p = frame_head[17];
+                if crate::predict::PredictorKind::from_tag(p).is_none() {
+                    drop(work_tx);
+                    let _ = collector.join();
+                    bail!("chunk {index} has unknown predictor tag {p}");
                 }
+                p
+            } else {
+                0
             };
             if chunk_plan & !full_plan != 0 {
                 drop(work_tx);
@@ -633,7 +674,10 @@ pub fn decompress_stream<R: Read, W: Write + Send>(
                 let _ = collector.join();
                 bail!("truncated container at chunk {index}");
             }
-            if matches!(version, ContainerVersion::V3 | ContainerVersion::V4) {
+            if matches!(
+                version,
+                ContainerVersion::V3 | ContainerVersion::V4 | ContainerVersion::V5
+            ) {
                 observed_frames.push((
                     frame_start,
                     (compressed_bytes - frame_start) as u32,
@@ -642,11 +686,11 @@ pub fn decompress_stream<R: Read, W: Write + Send>(
                     chunk_plan,
                 ));
             }
-            if version == ContainerVersion::V4 {
+            if matches!(version, ContainerVersion::V4 | ContainerVersion::V5) {
                 // Fold this frame's image into the group accumulator
                 // as its pieces sit in hand — no frame is re-read or
                 // re-buffered for parity verification.
-                // lint: allow(range-index) -- frame_head is a fixed 17-byte array and fh_len is 16 or 17
+                // lint: allow(range-index) -- frame_head is a fixed 18-byte array and fh_len is 16, 17, or 18
                 xor_at(&mut acc, 0, &frame_head[..fh_len]);
                 xor_at(&mut acc, fh_len, &outlier_bytes);
                 xor_at(&mut acc, fh_len + ob as usize, &payload);
@@ -701,7 +745,7 @@ pub fn decompress_stream<R: Read, W: Write + Send>(
                 } else if index + 1 == n_chunks {
                     drop(work_tx);
                     let _ = collector.join();
-                    bail!("v4 container is missing its final parity frame");
+                    bail!("parity-protected container is missing its final parity frame");
                 } else {
                     pending = Some(la);
                 }
@@ -711,6 +755,7 @@ pub fn decompress_stream<R: Read, W: Write + Send>(
                 record: ChunkRecord {
                     n_values: n as u32,
                     plan: chunk_plan,
+                    predictor,
                     outlier_bytes,
                     payload,
                     stats: ChunkStats::EMPTY,
@@ -776,10 +821,10 @@ pub fn decompress_stream<R: Read, W: Write + Send>(
                 }
             }
         }
-        // v4: same footer cross-check, plus parity entries and the
+        // v4/v5: same footer cross-check, plus parity entries and the
         // richer trailer (which finally confirms the group size the
         // parity frames advertised mid-stream).
-        if version == ContainerVersion::V4 {
+        if matches!(version, ContainerVersion::V4 | ContainerVersion::V5) {
             let footer_offset = compressed_bytes;
             let n_groups = observed_parity.len();
             let mut block = vec![
@@ -854,10 +899,10 @@ pub fn decompress_stream<R: Read, W: Write + Send>(
         if crc.finalize() != u32::from_le_bytes(trail) {
             bail!("file CRC mismatch");
         }
-        // v4: the finalization marker is the writer's very last write
-        // and is NOT covered by the file CRC; a missing or mangled
-        // marker is the typed torn-write signal.
-        if version == ContainerVersion::V4 {
+        // v4/v5: the finalization marker is the writer's very last
+        // write and is NOT covered by the file CRC; a missing or
+        // mangled marker is the typed torn-write signal.
+        if matches!(version, ContainerVersion::V4 | ContainerVersion::V5) {
             let mut marker = [0u8; FINALIZE_MARKER.len()];
             if input.read_exact(&mut marker).is_err() || marker != *FINALIZE_MARKER {
                 bail!("{UNFINALIZED_DETAIL}");
@@ -1030,6 +1075,49 @@ mod tests {
             .map(|c| f32::from_le_bytes(c.try_into().unwrap()))
             .collect();
         assert_eq!(crate::verify::metrics::abs_violations(&x, &y, 1e-2), 0);
+    }
+
+    #[test]
+    fn streaming_matches_engine_under_fixed_predictors() {
+        use crate::predict::{PredictorChoice, PredictorKind};
+        let x = Suite::Cesm.generate(7, CHUNK_ELEMS * 2 + 321);
+        for kind in [PredictorKind::Prev, PredictorKind::Lorenzo1D] {
+            let mut cfg = EngineConfig::native(ErrorBound::Abs(1e-3));
+            cfg.predictor = PredictorChoice::Fixed(kind);
+            let (streamed, _) = compress_slice_streaming(&cfg, &x).unwrap();
+            let (mem, _) = super::super::engine::compress(&cfg, &x).unwrap();
+            assert_eq!(streamed, mem.to_bytes(), "{}", kind.name());
+            let (y, _) = decompress_slice_streaming(&cfg, &streamed).unwrap();
+            assert_eq!(crate::verify::metrics::abs_violations(&x, &y, 1e-3), 0);
+        }
+        // A fixed predictor on a pre-v5 container is rejected up front.
+        let mut cfg = EngineConfig::native(ErrorBound::Abs(1e-3));
+        cfg.container_version = ContainerVersion::V4;
+        cfg.predictor = PredictorChoice::Fixed(PredictorKind::Prev);
+        assert!(compress_slice_streaming(&cfg, &x).is_err());
+    }
+
+    #[test]
+    fn streaming_decode_rejects_unknown_predictor_tag() {
+        let x = Suite::Cesm.generate(8, 20_000);
+        let cfg = EngineConfig::native(ErrorBound::Abs(1e-3));
+        let (bytes, _) = compress_slice_streaming(&cfg, &x).unwrap();
+        // Default container is v5: the first chunk frame's predictor
+        // byte sits right after its plan byte. Forge an out-of-range
+        // tag; the streaming decoder must reject it with a typed
+        // message before any chunk is handed to a worker.
+        let header_len = {
+            let (h, used) = crate::container::Header::parse_prefix(&bytes).unwrap();
+            assert_eq!(h.version, ContainerVersion::V5);
+            used
+        };
+        let mut bad = bytes.clone();
+        bad[header_len + 17] = 9;
+        let err = decompress_slice_streaming(&cfg, &bad).unwrap_err();
+        assert!(
+            format!("{err:#}").contains("unknown predictor tag 9"),
+            "{err:#}"
+        );
     }
 
     #[test]

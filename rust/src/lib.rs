@@ -33,6 +33,7 @@ pub mod coordinator;
 pub mod data;
 pub mod error;
 pub mod fsio;
+pub mod predict;
 pub mod quantizer;
 pub mod reference;
 pub mod runtime;

@@ -4,7 +4,7 @@
 //!   compress / decompress / verify     file operations (.f32 <-> .lcz)
 //!   inspect                            header + chunk index/stats table
 //!   extract                            random-access element-range decode
-//!   scrub                              verify + parity-repair a v4
+//!   scrub                              verify + parity-repair a v4/v5
 //!                                      container in place
 //!   salvage                            best-effort decode of a damaged
 //!                                      or truncated archive
@@ -51,20 +51,25 @@ USAGE:
   lc compress   <in.f32> <out.lcz> [--eb-type abs|rel|noa] [--eb EPS]
                 [--variant approx|native] [--unprotected]
                 [--device native|pjrt] [--workers N]
-                [--container-version 1|2|3|4]  (4 = v3 plus XOR parity
-                frames, crash marker, and in-place repair, the default;
+                [--container-version 1|2|3|4|5]  (5 = v4 plus a per-chunk
+                closed-loop predictor byte, the default; 4 = v3 plus XOR
+                parity frames, crash marker, and in-place repair;
                 3 = seekable index footer + adaptive per-chunk stages;
                 2 = adaptive without the index; 1 = seed format)
-                [--parity-group K]  (v4 only: chunk frames per XOR
+                [--predictor auto|none|prev|lorenzo1d]  (v5 native only:
+                prediction-residual quantization; auto samples each
+                chunk and picks the cheapest predictor, the default)
+                [--parity-group K]  (v4/v5 only: chunk frames per XOR
                 parity frame, default 16; each group survives one
                 corrupt frame, so smaller K = more repair capacity)
   lc decompress <in.lcz> <out.f32> [--device native|pjrt] [--workers N]
-  lc inspect    <in.lcz>           (header + per-chunk table; v3/v4 add
-                the index footer's offsets and min/max stats)
+  lc inspect    <in.lcz>           (header + per-chunk table; v3/v4/v5
+                add the index footer's offsets and min/max stats, v5
+                adds each chunk's predictor)
   lc extract    <in.lcz> <out.f32> [--range A..B]  (decode elements
-                A..B, end-exclusive; random access on v3/v4 containers,
-                explicit full-decode fallback on v1/v2)
-  lc scrub      <file.lcz> [--dry-run]  (verify a v4 container; rebuild
+                A..B, end-exclusive; random access on v3/v4/v5
+                containers, explicit full-decode fallback on v1/v2)
+  lc scrub      <file.lcz> [--dry-run]  (verify a v4/v5 container; rebuild
                 any single corrupt frame per parity group from XOR
                 parity, re-validate the whole image, and atomically
                 rewrite it in place; also sweeps stale <file>.tmp.*
@@ -169,13 +174,19 @@ fn engine_config(o: &Opts, service: &mut Option<PjrtService>) -> Result<EngineCo
     if o.flag("unprotected").is_some() {
         cfg.protection = Protection::Unprotected;
     }
-    cfg.container_version = match o.flag("container-version").unwrap_or("4") {
+    cfg.container_version = match o.flag("container-version").unwrap_or("5") {
         "1" => lc::container::ContainerVersion::V1,
         "2" => lc::container::ContainerVersion::V2,
         "3" => lc::container::ContainerVersion::V3,
         "4" => lc::container::ContainerVersion::V4,
-        v => bail!("invalid --container-version {v:?} (expected 1, 2, 3, or 4)"),
+        "5" => lc::container::ContainerVersion::V5,
+        v => bail!("invalid --container-version {v:?} (expected 1, 2, 3, 4, or 5)"),
     };
+    if let Some(p) = o.flag("predictor") {
+        cfg.predictor = lc::predict::PredictorChoice::parse(p).ok_or_else(|| {
+            anyhow!("unknown --predictor {p} (expected auto, none, prev, or lorenzo1d)")
+        })?;
+    }
     cfg.parity_group =
         o.usize_flag("parity-group", lc::container::DEFAULT_PARITY_GROUP as usize)? as u32;
     cfg.workers = o.usize_flag("workers", 0)?;
@@ -405,10 +416,16 @@ fn run(args: Vec<String>) -> Result<()> {
             };
             let bytes = std::fs::read(inp).with_context(|| format!("reading {inp}"))?;
             let indexed = bytes.get(..4) == Some(lc::container::MAGIC_V3.as_slice())
-                || bytes.get(..4) == Some(lc::container::MAGIC_V4.as_slice());
+                || bytes.get(..4) == Some(lc::container::MAGIC_V4.as_slice())
+                || bytes.get(..4) == Some(lc::container::MAGIC_V5.as_slice());
             if indexed {
-                let r = lc::archive::Reader::from_bytes(bytes).map_err(|e| anyhow!(e))?;
+                // The reader takes ownership of a copy; the original
+                // stays around so the v5 predictor byte (frame offset
+                // 17, not mirrored in the index footer) can be peeked
+                // per chunk without re-reading the file.
+                let r = lc::archive::Reader::from_bytes(bytes.clone()).map_err(|e| anyhow!(e))?;
                 let h = r.header();
+                let v5 = h.version == lc::container::ContainerVersion::V5;
                 let plan_w = h.stages.len().max(1);
                 print_container_header(h);
                 if !r.parity_entries().is_empty() {
@@ -420,12 +437,28 @@ fn run(args: Vec<String>) -> Result<()> {
                     );
                 }
                 println!(
-                    "{:>6}  {:>12}  {:>10}  {:>8}  {:>8}  {:>10}  {:>13}  {:>13}",
-                    "chunk", "offset", "bytes", "values", "plan", "crc32", "min", "max"
+                    "{:>6}  {:>12}  {:>10}  {:>8}  {:>8}  {:>9}  {:>10}  {:>13}  {:>13}",
+                    "chunk", "offset", "bytes", "values", "plan", "pred", "crc32", "min", "max"
                 );
                 for (i, e) in r.entries().iter().enumerate() {
+                    // Unknown future predictor tags render as `?N`
+                    // instead of failing: inspect is a diagnostic tool
+                    // and must describe hostile bytes, not choke on
+                    // them.
+                    let pred = if v5 {
+                        match bytes.get(e.offset as usize + 17).copied() {
+                            Some(tag) => match lc::predict::PredictorKind::from_tag(tag) {
+                                Some(k) => k.name().to_string(),
+                                None => format!("?{tag}"),
+                            },
+                            None => "?".to_string(),
+                        }
+                    } else {
+                        "-".to_string()
+                    };
                     println!(
-                        "{i:>6}  {:>12}  {:>10}  {:>8}  {:>8}  {:>10x}  {:>13.5e}  {:>13.5e}",
+                        "{i:>6}  {:>12}  {:>10}  {:>8}  {:>8}  {pred:>9}  {:>10x}  \
+                         {:>13.5e}  {:>13.5e}",
                         e.offset,
                         e.frame_len,
                         e.n_values,
@@ -467,7 +500,8 @@ fn run(args: Vec<String>) -> Result<()> {
             };
             let bytes = std::fs::read(inp).with_context(|| format!("reading {inp}"))?;
             let indexed = bytes.get(..4) == Some(lc::container::MAGIC_V3.as_slice())
-                || bytes.get(..4) == Some(lc::container::MAGIC_V4.as_slice());
+                || bytes.get(..4) == Some(lc::container::MAGIC_V4.as_slice())
+                || bytes.get(..4) == Some(lc::container::MAGIC_V5.as_slice());
             if indexed {
                 let r = lc::archive::Reader::from_bytes(bytes).map_err(|e| anyhow!(e))?;
                 let range = parse_elem_range(o.flag("range"), r.n_values())?;

@@ -1,0 +1,79 @@
+//! Order-2 one-dimensional Lorenzo predictor (linear extrapolation).
+//!
+//! Predicts `2a - b` from the last two *reconstructed* values `a`
+//! (newer) and `b` (older) — exact on any locally linear field, which
+//! is what smooth scientific time series and scan-line-ordered fields
+//! look like up close. The expression is evaluated in f64 where both
+//! f32 operands are exact and `2*a` is exact (power-of-two scale), so
+//! `2a - b` incurs at most one rounding — and, critically, the SAME
+//! one on the encode and decode sides.
+
+use super::Predictor;
+
+/// Lorenzo/linear predictor state: the last two reconstructed values,
+/// both `0.0` at a chunk boundary. After one push it degrades to
+/// `2a - 0 = 2a`; the closed-loop per-value check makes that a ratio
+/// question, never a correctness one.
+#[derive(Debug, Clone, Copy, Default)]
+pub struct Lorenzo1D {
+    /// Most recent reconstruction.
+    a: f32,
+    /// Second most recent reconstruction.
+    b: f32,
+}
+
+impl Lorenzo1D {
+    pub fn new() -> Lorenzo1D {
+        Lorenzo1D { a: 0.0, b: 0.0 }
+    }
+}
+
+impl Predictor for Lorenzo1D {
+    #[inline]
+    fn predict(&self) -> f64 {
+        2.0 * (self.a as f64) - (self.b as f64)
+    }
+
+    #[inline]
+    fn push(&mut self, recon: f32) {
+        self.b = self.a;
+        self.a = recon;
+    }
+
+    #[inline]
+    fn reset(&mut self) {
+        self.a = 0.0;
+        self.b = 0.0;
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn extrapolates_linearly() {
+        let mut p = Lorenzo1D::new();
+        assert_eq!(p.predict(), 0.0);
+        p.push(1.0);
+        assert_eq!(p.predict(), 2.0); // 2*1 - 0
+        p.push(2.0);
+        assert_eq!(p.predict(), 3.0); // 2*2 - 1
+        p.push(3.0);
+        assert_eq!(p.predict(), 4.0);
+        p.reset();
+        assert_eq!(p.predict(), 0.0);
+    }
+
+    #[test]
+    fn exact_on_linear_ramps() {
+        let mut p = Lorenzo1D::new();
+        p.push(10.0);
+        p.push(10.5);
+        for i in 2..100 {
+            let expect = 10.0 + 0.5 * i as f64;
+            assert_eq!(p.predict(), expect, "i={i}");
+            p.push(expect as f32);
+        }
+    }
+}

@@ -1,0 +1,498 @@
+//! `lc::predict` — closed-loop prediction-residual quantization.
+//!
+//! The survey (arXiv 2404.02840) and cuSZ (arXiv 2007.09625) both show
+//! that residual quantization against a predictor — not value
+//! quantization — is what delivers high ratios on smooth scientific
+//! fields. The paper's warning applies doubly here: a predictor chain
+//! is exactly the "reconstruction and prediction interact" site where
+//! error bounds silently die. This module keeps the repo's guarantee
+//! discipline by construction.
+//!
+//! # The closed-loop contract
+//!
+//! The encoder and decoder run the *same* predictor over the *same*
+//! inputs: the decoder's reconstructed values, never the originals
+//! (the SZ3 `LinearQuantizer` pattern). Per value `v`:
+//!
+//! 1. `pred` = predictor's estimate from previously *reconstructed*
+//!    values (f64; exact for both shipped predictors);
+//! 2. the residual `v - pred` is quantized to a signed bin against the
+//!    step `2*eb` (ABS) or `2*eb*max(|pred|, REL_MIN_MAG)` (REL);
+//! 3. the reconstruction `x' = pred + bin*step` is computed **on the
+//!    encode side**, exactly as the decoder will;
+//! 4. **the check is the guarantee**: the value is accepted only if
+//!    the bin is in range AND `|v - x'| <= eb` (ABS) /
+//!    `|v - x'| <= eb*|v|` (REL) holds for that very reconstruction —
+//!    the bin math is only a heuristic. Otherwise the raw IEEE-754
+//!    bits are stored losslessly (outlier bitmap bit set), which also
+//!    catches NaN/±Inf and any step underflow/overflow;
+//! 5. the accepted reconstruction (or the raw outlier value) is fed
+//!    back into the predictor state, so encoder and decoder states
+//!    stay bit-identical.
+//!
+//! Non-finite values feed `0.0` into the predictor state on BOTH sides
+//! (the feed guard below): a NaN outlier must not poison every later
+//! prediction, and a hostile container must not be able to drive the
+//! decoder's predictor chain through non-finite arithmetic.
+//!
+//! Consequently `|x - x'| <= eb` holds *exactly* for every finite
+//! input, for every predictor, by construction — there is no analysis
+//! to trust, only the per-value check. Predictor chunks are always
+//! protected: [`crate::types::Protection::Unprotected`] applies to the
+//! plain value quantizer only.
+//!
+//! Predictor state resets at every chunk boundary so container chunks
+//! stay independently decodable (random access, salvage, parity
+//! repair all carry over from v4 unchanged).
+//!
+//! All arithmetic is plain f64 multiply-add written as separate
+//! operations; rustc does not contract `a + b * c` into an FMA, and
+//! the repo already relies on that (see the double-check discussion in
+//! `quantizer/abs.rs`).
+
+pub mod lorenzo;
+pub mod prev;
+pub mod select;
+
+use crate::quantizer::{check_bitmap_len, unzigzag, zigzag, BitmapLengthError, QuantizerConfig};
+use crate::types::{MAXBIN_ABS, REL_MIN_MAG};
+
+/// Which predictor a chunk was encoded with — the container v5
+/// chunk-frame predictor byte ([`PredictorKind::tag`]).
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash, Default)]
+pub enum PredictorKind {
+    /// No prediction: the chunk holds plain value-quantizer words
+    /// (bit-identical to a v4 chunk body). Tag 0.
+    #[default]
+    None,
+    /// Order-1 previous-value predictor ([`prev::PrevValue`]). Tag 1.
+    Prev,
+    /// Order-2 linear extrapolation ([`lorenzo::Lorenzo1D`]). Tag 2.
+    Lorenzo1D,
+}
+
+/// Every kind, in tag order — the iteration set for selection and for
+/// the exhaustive differential tests.
+pub const ALL_PREDICTORS: [PredictorKind; 3] =
+    [PredictorKind::None, PredictorKind::Prev, PredictorKind::Lorenzo1D];
+
+impl PredictorKind {
+    /// The wire tag stored in the v5 chunk-frame predictor byte.
+    pub fn tag(self) -> u8 {
+        match self {
+            PredictorKind::None => 0,
+            PredictorKind::Prev => 1,
+            PredictorKind::Lorenzo1D => 2,
+        }
+    }
+
+    /// Parse a wire tag. Unknown tags return `None` so every decode
+    /// boundary surfaces a typed error, never a panic or a silent
+    /// misdecode.
+    pub fn from_tag(tag: u8) -> Option<PredictorKind> {
+        match tag {
+            0 => Some(PredictorKind::None),
+            1 => Some(PredictorKind::Prev),
+            2 => Some(PredictorKind::Lorenzo1D),
+            _ => None,
+        }
+    }
+
+    /// Stable lowercase name (CLI `--predictor` values, `inspect`
+    /// output).
+    pub fn name(self) -> &'static str {
+        match self {
+            PredictorKind::None => "none",
+            PredictorKind::Prev => "prev",
+            PredictorKind::Lorenzo1D => "lorenzo1d",
+        }
+    }
+}
+
+/// Encoder-side predictor policy (`lc compress --predictor`):
+/// `Auto` runs the sampled per-chunk selection
+/// ([`crate::codec::plan::choose_predictor`]) on v5 native encodes
+/// and resolves to [`PredictorKind::None`] everywhere else; `Fixed`
+/// forces one predictor for every chunk (v5 + native only — the
+/// engine's validate rejects anything else).
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Default)]
+pub enum PredictorChoice {
+    #[default]
+    Auto,
+    Fixed(PredictorKind),
+}
+
+impl PredictorChoice {
+    /// Parse a CLI `--predictor` value. Unknown names return `None`.
+    pub fn parse(s: &str) -> Option<PredictorChoice> {
+        match s {
+            "auto" => Some(PredictorChoice::Auto),
+            "none" => Some(PredictorChoice::Fixed(PredictorKind::None)),
+            "prev" => Some(PredictorChoice::Fixed(PredictorKind::Prev)),
+            "lorenzo1d" => Some(PredictorChoice::Fixed(PredictorKind::Lorenzo1D)),
+            _ => None,
+        }
+    }
+}
+
+/// The residual quantizer's error-bound mode, derived from the
+/// session's [`QuantizerConfig`] by [`residual_bound`]. NOA has
+/// already been resolved to ABS by then (`effective_epsilon`), so two
+/// modes cover everything.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub enum ResidualBound {
+    /// `|x - x'| <= eb`.
+    Abs { eb: f32 },
+    /// `|x - x'| <= eb * |x|`.
+    Rel { eb: f32 },
+}
+
+impl ResidualBound {
+    /// The full bin width (`2*eb` worth of tolerance) at a given
+    /// prediction. For REL the step is anchored on the *prediction*
+    /// magnitude — available to both sides — and the per-value check
+    /// against `|x|` below is what actually guarantees the bound.
+    #[inline]
+    fn step2(self, pred: f64) -> f64 {
+        match self {
+            ResidualBound::Abs { eb } => 2.0 * eb as f64,
+            ResidualBound::Rel { eb } => {
+                2.0 * (eb as f64) * pred.abs().max(REL_MIN_MAG as f64)
+            }
+        }
+    }
+
+    /// THE guarantee: does this exact reconstruction satisfy the
+    /// bound for this exact value? Evaluated in f64 (exact for f32
+    /// inputs); any NaN/±Inf on either side makes the comparison
+    /// false, which routes the value to lossless outlier storage.
+    #[inline]
+    fn holds(self, v: f32, recon: f32) -> bool {
+        let diff = ((v as f64) - (recon as f64)).abs();
+        match self {
+            ResidualBound::Abs { eb } => diff <= eb as f64,
+            ResidualBound::Rel { eb } => diff <= (eb as f64) * (v.abs() as f64),
+        }
+    }
+}
+
+/// Derive the residual bound from the resolved quantizer config.
+pub fn residual_bound(qc: &QuantizerConfig) -> ResidualBound {
+    match *qc {
+        QuantizerConfig::Abs(p, _) => ResidualBound::Abs { eb: p.eb },
+        QuantizerConfig::Rel(p, _, _) => ResidualBound::Rel { eb: p.eb },
+    }
+}
+
+/// A closed-loop predictor: a small state machine over reconstructed
+/// values. Implementations must be deterministic and exact (both
+/// shipped predictors evaluate in f64, where f32 inputs are exact), so
+/// encoder and decoder states match bit for bit.
+pub trait Predictor {
+    /// Estimate the next value from the reconstructions seen so far.
+    fn predict(&self) -> f64;
+    /// Feed the value the *decoder* will hold at this position (the
+    /// accepted reconstruction, or the raw outlier after the feed
+    /// guard).
+    fn push(&mut self, recon: f32);
+    /// Return to the initial (chunk-boundary) state.
+    fn reset(&mut self);
+}
+
+/// The feed guard: predictor state only ever holds finite values.
+/// Non-finite outliers (and any hostile decoded word) feed `0.0`.
+#[inline]
+fn feed_guard(v: f32) -> f32 {
+    if v.is_finite() {
+        v
+    } else {
+        0.0
+    }
+}
+
+/// Monomorphized predictor state for the encode/decode drivers.
+/// `PredictorKind::None` degrades to a constant zero prediction (the
+/// coordinator routes tag-0 chunks to the plain value quantizer and
+/// never calls these drivers with it, but the functions stay total).
+enum PredState {
+    Zero,
+    Prev(prev::PrevValue),
+    Lorenzo(lorenzo::Lorenzo1D),
+}
+
+impl PredState {
+    fn new(kind: PredictorKind) -> PredState {
+        match kind {
+            PredictorKind::None => PredState::Zero,
+            PredictorKind::Prev => PredState::Prev(prev::PrevValue::new()),
+            PredictorKind::Lorenzo1D => PredState::Lorenzo(lorenzo::Lorenzo1D::new()),
+        }
+    }
+
+    #[inline]
+    fn predict(&self) -> f64 {
+        match self {
+            PredState::Zero => 0.0,
+            PredState::Prev(p) => p.predict(),
+            PredState::Lorenzo(p) => p.predict(),
+        }
+    }
+
+    #[inline]
+    fn push(&mut self, recon: f32) {
+        match self {
+            PredState::Zero => {}
+            PredState::Prev(p) => p.push(recon),
+            PredState::Lorenzo(p) => p.push(recon),
+        }
+    }
+}
+
+/// Encode one chunk with the closed-loop residual quantizer into
+/// caller-provided buffers (cleared first — same calling convention as
+/// [`QuantizerConfig::quantize_native_into`]). `obits` receives the
+/// outlier bitmap as packed u64 words ([`crate::bitvec::BitVec`]
+/// layout).
+pub fn encode_chunk(
+    kind: PredictorKind,
+    bound: ResidualBound,
+    values: &[f32],
+    words: &mut Vec<u32>,
+    obits: &mut Vec<u64>,
+) {
+    words.clear();
+    words.reserve(values.len());
+    obits.clear();
+    obits.resize(values.len().div_ceil(64), 0);
+    let mut state = PredState::new(kind);
+    for (i, &v) in values.iter().enumerate() {
+        let pred = state.predict();
+        let step2 = bound.step2(pred);
+        // NaN residual or zero/overflowed step makes `binf` NaN/±Inf;
+        // both comparisons below then read false, forcing the outlier
+        // path — no special-casing needed.
+        let binf = ((v as f64 - pred) / step2).round_ties_even();
+        let in_range = binf < MAXBIN_ABS as f64 && binf > -(MAXBIN_ABS as f64);
+        let bin = if in_range { binf as i32 } else { 0 };
+        // The decoder's exact expression, replayed on the encode side.
+        let recon = (pred + (bin as f64) * step2) as f32;
+        if in_range && bound.holds(v, recon) {
+            words.push(zigzag(bin) as u32);
+            state.push(feed_guard(recon));
+        } else {
+            words.push(v.to_bits());
+            obits[i >> 6] |= 1u64 << (i & 63);
+            state.push(feed_guard(v));
+        }
+    }
+}
+
+/// Decode one chunk: the inverse of [`encode_chunk`], running the same
+/// predictor over the same reconstructions. Validates the outlier
+/// bitmap length up front so a malformed container returns a typed
+/// error instead of panicking (decode paths are on the `lc lint`
+/// panic-free surface). Writes `min(words.len(), out.len())` values;
+/// callers size `out` to `words.len()`.
+pub fn decode_chunk(
+    kind: PredictorKind,
+    bound: ResidualBound,
+    words: &[u32],
+    obits: &[u64],
+    out: &mut [f32],
+) -> Result<(), BitmapLengthError> {
+    check_bitmap_len(words.len(), obits)?;
+    let mut state = PredState::new(kind);
+    for (i, (&w, slot)) in words.iter().zip(out.iter_mut()).enumerate() {
+        // In bounds: `i < words.len()` and the bitmap check above
+        // guarantees `obits.len() >= ceil(words.len()/64)`.
+        let outlier = (obits[i >> 6] >> (i & 63)) & 1 == 1;
+        let v = if outlier {
+            f32::from_bits(w)
+        } else {
+            let pred = state.predict();
+            let step2 = bound.step2(pred);
+            let bin = unzigzag(w);
+            (pred + (bin as f64) * step2) as f32
+        };
+        *slot = v;
+        state.push(feed_guard(v));
+    }
+    Ok(())
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::types::Protection;
+
+    fn abs_bound(eb: f32) -> ResidualBound {
+        ResidualBound::Abs { eb }
+    }
+
+    fn roundtrip(kind: PredictorKind, bound: ResidualBound, x: &[f32]) -> Vec<f32> {
+        let mut words = Vec::new();
+        let mut obits = Vec::new();
+        encode_chunk(kind, bound, x, &mut words, &mut obits);
+        assert_eq!(words.len(), x.len());
+        let mut out = vec![0.0f32; x.len()];
+        decode_chunk(kind, bound, &words, &obits, &mut out).unwrap();
+        out
+    }
+
+    #[test]
+    fn tags_roundtrip_and_unknown_tags_reject() {
+        for k in ALL_PREDICTORS {
+            assert_eq!(PredictorKind::from_tag(k.tag()), Some(k));
+        }
+        for t in 3u8..=255 {
+            assert_eq!(PredictorKind::from_tag(t), None, "tag {t}");
+        }
+    }
+
+    #[test]
+    fn bound_holds_on_smooth_ramp_for_every_predictor() {
+        let x: Vec<f32> = (0..5000).map(|i| (i as f32 * 0.01).sin() * 40.0).collect();
+        for kind in ALL_PREDICTORS {
+            for eb in [1e-1f32, 1e-3, 1e-6] {
+                let y = roundtrip(kind, abs_bound(eb), &x);
+                for (i, (&a, &b)) in x.iter().zip(y.iter()).enumerate() {
+                    let diff = ((a as f64) - (b as f64)).abs();
+                    assert!(
+                        diff <= eb as f64,
+                        "{kind:?} eb={eb} i={i}: |{a} - {b}| = {diff}"
+                    );
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn rel_bound_holds_across_magnitudes() {
+        let x: Vec<f32> = (0..4000)
+            .map(|i| ((i as f32 * 0.37).cos() + 1.5) * 10f32.powi((i % 9) as i32 - 4))
+            .collect();
+        for kind in ALL_PREDICTORS {
+            for eb in [1e-2f32, 1e-4] {
+                let y = roundtrip(kind, ResidualBound::Rel { eb }, &x);
+                for (i, (&a, &b)) in x.iter().zip(y.iter()).enumerate() {
+                    let diff = ((a as f64) - (b as f64)).abs();
+                    assert!(
+                        diff <= (eb as f64) * (a.abs() as f64),
+                        "{kind:?} eb={eb} i={i}: |{a} - {b}| = {diff}"
+                    );
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn non_finite_values_go_lossless_and_do_not_poison_the_chain() {
+        let mut x: Vec<f32> = (0..200).map(|i| i as f32 * 0.5).collect();
+        x[7] = f32::NAN;
+        x[8] = f32::INFINITY;
+        x[9] = f32::NEG_INFINITY;
+        for kind in [PredictorKind::Prev, PredictorKind::Lorenzo1D] {
+            let y = roundtrip(kind, abs_bound(1e-2), &x);
+            assert!(y[7].is_nan() && x[7].to_bits() == y[7].to_bits());
+            assert_eq!(y[8], f32::INFINITY);
+            assert_eq!(y[9], f32::NEG_INFINITY);
+            for (i, (&a, &b)) in x.iter().zip(y.iter()).enumerate() {
+                if a.is_finite() {
+                    assert!(
+                        ((a as f64) - (b as f64)).abs() <= 1e-2,
+                        "{kind:?} i={i}: {a} vs {b}"
+                    );
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn denormals_zeros_and_extremes_respect_the_bound() {
+        let x = [
+            0.0f32,
+            -0.0,
+            f32::MIN_POSITIVE,
+            -f32::MIN_POSITIVE,
+            f32::from_bits(1),          // smallest positive denormal
+            -f32::from_bits(1),
+            f32::MAX,
+            f32::MIN,
+            1.0,
+            -1.0,
+        ];
+        for kind in ALL_PREDICTORS {
+            for bound in [abs_bound(1e-3), ResidualBound::Rel { eb: 1e-3 }] {
+                let y = roundtrip(kind, bound, &x);
+                for (i, (&a, &b)) in x.iter().zip(y.iter()).enumerate() {
+                    assert!(bound.holds(a, b), "{kind:?} {bound:?} i={i}: {a} vs {b}");
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn zero_epsilon_degrades_to_lossless() {
+        // eb = 0 makes the step 0 (ABS) and every check an equality:
+        // everything must land in the outlier path, bit-exactly.
+        let x: Vec<f32> = (0..100).map(|i| (i as f32).sqrt()).collect();
+        let y = roundtrip(PredictorKind::Prev, abs_bound(0.0), &x);
+        for (&a, &b) in x.iter().zip(y.iter()) {
+            assert_eq!(a.to_bits(), b.to_bits());
+        }
+    }
+
+    #[test]
+    fn decode_rejects_short_bitmap() {
+        let words = vec![0u32; 100];
+        let obits = vec![0u64; 1]; // needs 2
+        let mut out = vec![0.0f32; 100];
+        let err = decode_chunk(
+            PredictorKind::Prev,
+            abs_bound(1e-3),
+            &words,
+            &obits,
+            &mut out,
+        );
+        assert!(err.is_err());
+    }
+
+    #[test]
+    fn residual_bound_derives_from_config() {
+        let x = [1.0f32, 2.0, 3.0];
+        let abs = QuantizerConfig::resolve(
+            crate::types::ErrorBound::Abs(1e-3),
+            crate::types::FnVariant::Native,
+            Protection::Protected,
+            &x,
+        );
+        assert_eq!(residual_bound(&abs), ResidualBound::Abs { eb: 1e-3 });
+        let rel = QuantizerConfig::resolve(
+            crate::types::ErrorBound::Rel(1e-2),
+            crate::types::FnVariant::Native,
+            Protection::Protected,
+            &x,
+        );
+        assert_eq!(residual_bound(&rel), ResidualBound::Rel { eb: 1e-2 });
+        let noa = QuantizerConfig::resolve(
+            crate::types::ErrorBound::Noa(1e-2),
+            crate::types::FnVariant::Native,
+            Protection::Protected,
+            &x,
+        );
+        assert!(matches!(residual_bound(&noa), ResidualBound::Abs { .. }));
+    }
+
+    #[test]
+    fn smooth_field_produces_small_bins() {
+        // The point of prediction: a smooth ramp's residual words must
+        // be far smaller than its value-quantized words.
+        let x: Vec<f32> = (0..4096).map(|i| 100.0 + i as f32 * 0.01).collect();
+        let mut words = Vec::new();
+        let mut obits = Vec::new();
+        encode_chunk(PredictorKind::Prev, abs_bound(1e-4), &x, &mut words, &mut obits);
+        assert_eq!(obits.iter().map(|w| w.count_ones()).sum::<u32>(), 0);
+        let max_word = words.iter().skip(1).copied().max().unwrap_or(0);
+        assert!(max_word <= 128, "residual words should be tiny, max {max_word}");
+    }
+}

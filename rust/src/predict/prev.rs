@@ -1,0 +1,66 @@
+//! Order-1 previous-value predictor.
+//!
+//! Predicts each value as the previous *reconstructed* value (the
+//! SZ-family "constant" / order-1 Lorenzo predictor). The f32 state is
+//! widened to f64 at predict time, which is exact, so the encoder and
+//! decoder replay identical arithmetic.
+
+use super::Predictor;
+
+/// Previous-value predictor state: the last reconstructed value, `0.0`
+/// at a chunk boundary (so the first value's residual is the value
+/// itself — same as no prediction).
+#[derive(Debug, Clone, Copy, Default)]
+pub struct PrevValue {
+    last: f32,
+}
+
+impl PrevValue {
+    pub fn new() -> PrevValue {
+        PrevValue { last: 0.0 }
+    }
+}
+
+impl Predictor for PrevValue {
+    #[inline]
+    fn predict(&self) -> f64 {
+        self.last as f64
+    }
+
+    #[inline]
+    fn push(&mut self, recon: f32) {
+        self.last = recon;
+    }
+
+    #[inline]
+    fn reset(&mut self) {
+        self.last = 0.0;
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn predicts_the_previous_value() {
+        let mut p = PrevValue::new();
+        assert_eq!(p.predict(), 0.0);
+        p.push(3.5);
+        assert_eq!(p.predict(), 3.5);
+        p.push(-1.25);
+        assert_eq!(p.predict(), -1.25);
+        p.reset();
+        assert_eq!(p.predict(), 0.0);
+    }
+
+    #[test]
+    fn constant_field_predicts_exactly() {
+        let mut p = PrevValue::new();
+        p.push(7.0);
+        for _ in 0..100 {
+            assert_eq!(p.predict(), 7.0);
+            p.push(7.0);
+        }
+    }
+}

@@ -1,0 +1,129 @@
+//! Per-chunk predictor selection by sampled cost, the
+//! prediction-layer analogue of the [`crate::codec::plan`] stage
+//! analyzer: try every candidate on the chunk's prefix sample, keep
+//! the cheapest. A wrong estimate can only cost ratio — decode
+//! correctness never depends on the selection (the per-value check in
+//! [`super::encode_chunk`] is the guarantee regardless of which
+//! predictor won).
+
+use super::{encode_chunk, residual_bound, PredictorKind};
+use crate::codec::plan::SAMPLE_WORDS;
+use crate::quantizer::QuantizerConfig;
+
+/// Per-outlier cost in the proxy: 32 raw bits, the bitmap bit, and a
+/// penalty reflecting that raw IEEE-754 bit patterns resist every
+/// later lossless stage.
+const OUTLIER_COST_BITS: u64 = 48;
+
+/// Choose the cheapest predictor for one chunk by encoding its prefix
+/// sample (at most [`SAMPLE_WORDS`] values, the same budget as the
+/// stage analyzer) under every candidate and scoring the words with a
+/// significant-bits proxy. Strict `<` comparison keeps the tie-break
+/// order `None < Prev < Lorenzo1D`, so a predictor must actually win
+/// to displace the simpler choice — and an empty chunk is `None`.
+pub fn choose(qc: &QuantizerConfig, values: &[f32]) -> PredictorKind {
+    let sample_len = values.len().min(SAMPLE_WORDS);
+    let sample = match values.get(..sample_len) {
+        Some(s) if !s.is_empty() => s,
+        _ => return PredictorKind::None,
+    };
+    let mut words = Vec::with_capacity(sample.len());
+    let mut obits = Vec::new();
+    // Baseline: the plain value quantizer (what a tag-0 chunk stores).
+    qc.quantize_native_into(sample, &mut words, &mut obits);
+    let mut best_kind = PredictorKind::None;
+    let mut best_cost = cost(&words, &obits);
+    let bound = residual_bound(qc);
+    for kind in [PredictorKind::Prev, PredictorKind::Lorenzo1D] {
+        encode_chunk(kind, bound, sample, &mut words, &mut obits);
+        let c = cost(&words, &obits);
+        if c < best_cost {
+            best_cost = c;
+            best_kind = kind;
+        }
+    }
+    best_kind
+}
+
+/// Bit-cost proxy for a candidate encoding: outliers cost
+/// [`OUTLIER_COST_BITS`]; a residual/bin word costs its significant
+/// bits plus two (entropy coding overhead floor). Deterministic
+/// integer arithmetic so engine and reference agree exactly.
+fn cost(words: &[u32], obits: &[u64]) -> u64 {
+    let mut total = 0u64;
+    for (i, &w) in words.iter().enumerate() {
+        let outlier = obits
+            .get(i >> 6)
+            .is_some_and(|&b| (b >> (i & 63)) & 1 == 1);
+        total += if outlier {
+            OUTLIER_COST_BITS
+        } else {
+            (32 - w.leading_zeros()) as u64 + 2
+        };
+    }
+    total
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::types::{ErrorBound, FnVariant, Protection};
+
+    fn abs_config(eb: f32) -> QuantizerConfig {
+        QuantizerConfig::resolve(
+            ErrorBound::Abs(eb),
+            FnVariant::Native,
+            Protection::Protected,
+            &[0.0],
+        )
+    }
+
+    #[test]
+    fn empty_chunk_selects_none() {
+        assert_eq!(choose(&abs_config(1e-3), &[]), PredictorKind::None);
+    }
+
+    #[test]
+    fn linear_ramp_prefers_a_predictor() {
+        // A steep ramp far from zero: value bins are huge, prev
+        // residuals are constant, lorenzo residuals are zero.
+        let x: Vec<f32> = (0..4096).map(|i| 1000.0 + i as f32 * 0.37).collect();
+        let k = choose(&abs_config(1e-3), &x);
+        assert_ne!(k, PredictorKind::None, "ramp must not pick the value quantizer");
+    }
+
+    #[test]
+    fn noise_keeps_the_value_quantizer() {
+        // White noise around zero at a loose bound: prediction buys
+        // nothing, and the tie-break must fall back to None.
+        let mut s = 0x9E37_79B9u64;
+        let x: Vec<f32> = (0..4096)
+            .map(|_| {
+                s ^= s << 13;
+                s ^= s >> 7;
+                s ^= s << 17;
+                ((s as u32) as f32 / u32::MAX as f32) - 0.5
+            })
+            .collect();
+        assert_eq!(choose(&abs_config(0.25), &x), PredictorKind::None);
+    }
+
+    #[test]
+    fn cost_counts_outliers_and_bits() {
+        // word 0: bin word 1 -> 1 significant bit + 2; word 1:
+        // outlier -> 48; word 2: zero word -> 0 + 2.
+        let words = [1u32, 0xDEAD_BEEF, 0];
+        let obits = [0b010u64];
+        assert_eq!(cost(&words, &obits), 3 + OUTLIER_COST_BITS + 2);
+    }
+
+    #[test]
+    fn selection_is_prefix_sampled_and_deterministic() {
+        let mut x: Vec<f32> = (0..SAMPLE_WORDS).map(|i| 500.0 + i as f32).collect();
+        // Tail noise past the sample must not change the choice.
+        let k1 = choose(&abs_config(1e-3), &x);
+        x.extend((0..1000).map(|i| ((i * 2654435761u64 % 1000) as f32) - 500.0));
+        let k2 = choose(&abs_config(1e-3), &x);
+        assert_eq!(k1, k2);
+    }
+}

@@ -24,6 +24,7 @@ use crate::bitvec::BitVec;
 use crate::codec::{Pipeline, Stage};
 use crate::container::{ChunkRecord, Container, ContainerVersion, Header};
 use crate::coordinator::EngineConfig;
+use crate::predict::{PredictorChoice, PredictorKind};
 use crate::quantizer::abs::AbsParams;
 use crate::quantizer::approx::{log2approxf, pow2approx_from_bins};
 use crate::quantizer::rel::RelParams;
@@ -153,6 +154,106 @@ pub fn dequantize_rel(chunk: &QuantizedChunk, p: RelParams, variant: FnVariant) 
         }
     }
     out
+}
+
+/// Naive closed-loop residual quantizer — the differential oracle for
+/// [`crate::predict::encode_chunk`]. A `Vec<f32>` history stands in
+/// for the production predictor state machines: the prediction is
+/// recomputed from the trailing reconstructions on every element, the
+/// residual is binned, the decoder's reconstruction is replayed, and
+/// the value is accepted only if the bound check passes on that exact
+/// reconstruction (non-finite history entries are fed as `0.0`, the
+/// same feed guard as production). Shares no code with `lc::predict`
+/// beyond the [`PredictorKind`] config enum.
+pub fn predict_quantize(kind: PredictorKind, qc: &QuantizerConfig, x: &[f32]) -> QuantizedChunk {
+    let (rel, eb) = match *qc {
+        QuantizerConfig::Abs(p, _) => (false, p.eb),
+        QuantizerConfig::Rel(p, _, _) => (true, p.eb),
+    };
+    let n = x.len();
+    let mut words: Vec<u32> = Vec::with_capacity(n);
+    let mut bits = vec![0u64; n.div_ceil(64)];
+    let mut hist: Vec<f32> = Vec::with_capacity(n);
+    for (i, &v) in x.iter().enumerate() {
+        let pred = naive_predict(kind, &hist);
+        let step2 = if rel {
+            2.0 * (eb as f64) * pred.abs().max(REL_MIN_MAG as f64)
+        } else {
+            2.0 * eb as f64
+        };
+        let binf = ((v as f64 - pred) / step2).round_ties_even();
+        let in_range = binf < MAXBIN_ABS as f64 && binf > -(MAXBIN_ABS as f64);
+        let bin = if in_range { binf as i32 } else { 0 };
+        let recon = (pred + (bin as f64) * step2) as f32;
+        let diff = ((v as f64) - (recon as f64)).abs();
+        let ok = if rel {
+            diff <= (eb as f64) * (v.abs() as f64)
+        } else {
+            diff <= eb as f64
+        };
+        let fed = if in_range && ok {
+            words.push(zigzag(bin) as u32);
+            recon
+        } else {
+            words.push(v.to_bits());
+            bits[i >> 6] |= 1u64 << (i & 63);
+            v
+        };
+        hist.push(if fed.is_finite() { fed } else { 0.0 });
+    }
+    QuantizedChunk {
+        words,
+        outliers: BitVec::from_raw(bits, n),
+    }
+}
+
+/// Naive closed-loop residual dequantizer — the decode mirror of
+/// [`predict_quantize`] and the oracle for
+/// [`crate::predict::decode_chunk`].
+pub fn predict_dequantize(
+    kind: PredictorKind,
+    qc: &QuantizerConfig,
+    chunk: &QuantizedChunk,
+) -> Vec<f32> {
+    let (rel, eb) = match *qc {
+        QuantizerConfig::Abs(p, _) => (false, p.eb),
+        QuantizerConfig::Rel(p, _, _) => (true, p.eb),
+    };
+    let mut out: Vec<f32> = Vec::with_capacity(chunk.words.len());
+    let mut hist: Vec<f32> = Vec::with_capacity(chunk.words.len());
+    for (i, &w) in chunk.words.iter().enumerate() {
+        let v = if chunk.outliers.get(i) {
+            f32::from_bits(w)
+        } else {
+            let pred = naive_predict(kind, &hist);
+            let step2 = if rel {
+                2.0 * (eb as f64) * pred.abs().max(REL_MIN_MAG as f64)
+            } else {
+                2.0 * eb as f64
+            };
+            (pred + (unzigzag(w) as f64) * step2) as f32
+        };
+        out.push(v);
+        hist.push(if v.is_finite() { v } else { 0.0 });
+    }
+    out
+}
+
+/// The naive predictor: recompute the estimate from the trailing
+/// history instead of carrying incremental state.
+fn naive_predict(kind: PredictorKind, hist: &[f32]) -> f64 {
+    let back = |k: usize| -> f64 {
+        hist.len()
+            .checked_sub(k)
+            .and_then(|i| hist.get(i))
+            .copied()
+            .unwrap_or(0.0) as f64
+    };
+    match kind {
+        PredictorKind::None => 0.0,
+        PredictorKind::Prev => back(1),
+        PredictorKind::Lorenzo1D => 2.0 * back(1) - back(2),
+    }
 }
 
 // ---------------------------------------------------------------------
@@ -621,23 +722,46 @@ pub fn compress(cfg: &EngineConfig, data: &[f32]) -> Result<Container, String> {
     let qc = QuantizerConfig::resolve(cfg.bound, cfg.variant, cfg.protection, data);
     let mut chunks = Vec::new();
     for chunk in data.chunks(cfg.chunk_size) {
-        let q = match qc {
-            QuantizerConfig::Abs(p, prot) => quantize_abs(chunk, p, prot),
-            QuantizerConfig::Rel(p, v, prot) => quantize_rel(chunk, p, v, prot),
+        // v5: resolve the chunk's predictor exactly as the engine does
+        // (the sampled chooser is shared analysis, like `plan::choose`);
+        // the quantization itself goes through the naive closed-loop
+        // oracle, not `lc::predict`.
+        let predictor = if cfg.container_version == ContainerVersion::V5 {
+            match cfg.predictor {
+                PredictorChoice::Auto => crate::codec::plan::choose_predictor(&qc, chunk),
+                PredictorChoice::Fixed(k) => k,
+            }
+        } else {
+            PredictorKind::None
+        };
+        let q = if predictor != PredictorKind::None {
+            predict_quantize(predictor, &qc, chunk)
+        } else {
+            match qc {
+                QuantizerConfig::Abs(p, prot) => quantize_abs(chunk, p, prot),
+                QuantizerConfig::Rel(p, v, prot) => quantize_rel(chunk, p, v, prot),
+            }
         };
         let plan = match cfg.container_version {
             ContainerVersion::V1 => cfg.pipeline.full_mask(),
-            ContainerVersion::V2 | ContainerVersion::V3 | ContainerVersion::V4 => {
+            ContainerVersion::V2
+            | ContainerVersion::V3
+            | ContainerVersion::V4
+            | ContainerVersion::V5 => {
                 crate::codec::plan::choose(cfg.pipeline.stages(), &q.words, q.outlier_count())
             }
         };
-        // v3/v4: the footer summary over the naive reconstruction —
+        // v3+: the footer summary over the naive reconstruction —
         // per-element dequantize + a naive fold, this module's style.
         let stats = match cfg.container_version {
-            ContainerVersion::V3 | ContainerVersion::V4 => {
-                let y = match qc {
-                    QuantizerConfig::Abs(p, _) => dequantize_abs(&q, p),
-                    QuantizerConfig::Rel(p, v, _) => dequantize_rel(&q, p, v),
+            ContainerVersion::V3 | ContainerVersion::V4 | ContainerVersion::V5 => {
+                let y = if predictor != PredictorKind::None {
+                    predict_dequantize(predictor, &qc, &q)
+                } else {
+                    match qc {
+                        QuantizerConfig::Abs(p, _) => dequantize_abs(&q, p),
+                        QuantizerConfig::Rel(p, v, _) => dequantize_rel(&q, p, v),
+                    }
                 };
                 naive_min_max(&y)
             }
@@ -647,6 +771,7 @@ pub fn compress(cfg: &EngineConfig, data: &[f32]) -> Result<Container, String> {
         chunks.push(ChunkRecord {
             n_values: chunk.len() as u32,
             plan,
+            predictor: predictor.tag(),
             outlier_bytes: rle_encode(&q.outliers.to_bytes()),
             payload: encode_pipeline(&sub, &q.words),
             stats,
@@ -663,7 +788,10 @@ pub fn compress(cfg: &EngineConfig, data: &[f32]) -> Result<Container, String> {
             chunk_size: cfg.chunk_size as u32,
             stages: cfg.pipeline.stages().to_vec(),
             n_chunks: chunks.len() as u32,
-            parity_group: if cfg.container_version == ContainerVersion::V4 {
+            parity_group: if matches!(
+                cfg.container_version,
+                ContainerVersion::V4 | ContainerVersion::V5
+            ) {
                 cfg.parity_group
             } else {
                 0
@@ -701,9 +829,12 @@ fn naive_min_max(values: &[f32]) -> ChunkStats {
 /// differential pin that keeps the engine's footer honest.
 pub fn rebuild_index(container: &Container) -> Result<Vec<IndexEntry>, String> {
     let h = &container.header;
-    if !matches!(h.version, ContainerVersion::V3 | ContainerVersion::V4) {
+    if !matches!(
+        h.version,
+        ContainerVersion::V3 | ContainerVersion::V4 | ContainerVersion::V5
+    ) {
         return Err(format!(
-            "rebuild_index wants a v3/v4 container, got {:?}",
+            "rebuild_index wants a v3/v4/v5 container, got {:?}",
             h.version
         ));
     }
@@ -714,7 +845,7 @@ pub fn rebuild_index(container: &Container) -> Result<Vec<IndexEntry>, String> {
         ErrorBound::Rel(e) => QuantizerConfig::Rel(RelParams::new(e), h.variant, h.protection),
     };
     let frame_head = h.version.chunk_frame_header_len() as u64;
-    let k = if h.version == ContainerVersion::V4 {
+    let k = if matches!(h.version, ContainerVersion::V4 | ContainerVersion::V5) {
         h.parity_group_effective() as usize
     } else {
         0
@@ -729,9 +860,15 @@ pub fn rebuild_index(container: &Container) -> Result<Vec<IndexEntry>, String> {
         let bitmap = rle_decode(&rec.outlier_bytes, n.div_ceil(8))?;
         let outliers = BitVec::from_bytes(&bitmap, n)?;
         let chunk = QuantizedChunk { words, outliers };
-        let y = match qc {
-            QuantizerConfig::Abs(pp, _) => dequantize_abs(&chunk, pp),
-            QuantizerConfig::Rel(pp, v, _) => dequantize_rel(&chunk, pp, v),
+        let kind = PredictorKind::from_tag(rec.predictor)
+            .ok_or_else(|| format!("chunk {i} has unknown predictor tag {}", rec.predictor))?;
+        let y = if kind != PredictorKind::None {
+            predict_dequantize(kind, &qc, &chunk)
+        } else {
+            match qc {
+                QuantizerConfig::Abs(pp, _) => dequantize_abs(&chunk, pp),
+                QuantizerConfig::Rel(pp, v, _) => dequantize_rel(&chunk, pp, v),
+            }
         };
         let frame_len = frame_head + rec.outlier_bytes.len() as u64 + rec.payload.len() as u64;
         entries.push(IndexEntry {
@@ -758,24 +895,24 @@ pub fn rebuild_index(container: &Container) -> Result<Vec<IndexEntry>, String> {
     Ok(entries)
 }
 
-/// Independently rebuild a v4 container's parity frames from its chunk
-/// records alone: naive re-serialization of each member frame image, a
-/// byte-wise XOR fold zero-padded to the group's longest member, and a
-/// hand-rolled serialization of the parity frame layout — sharing no
-/// code with [`crate::container::ParityFrame`]. The writer's
-/// interleaved parity frames must match these images bit for bit — the
-/// differential pin that keeps the parity writer honest.
+/// Independently rebuild a v4/v5 container's parity frames from its
+/// chunk records alone: naive re-serialization of each member frame
+/// image, a byte-wise XOR fold zero-padded to the group's longest
+/// member, and a hand-rolled serialization of the parity frame layout
+/// — sharing no code with [`crate::container::ParityFrame`]. The
+/// writer's interleaved parity frames must match these images bit for
+/// bit — the differential pin that keeps the parity writer honest.
 pub fn rebuild_parity(container: &Container) -> Result<Vec<Vec<u8>>, String> {
     let h = &container.header;
-    if h.version != ContainerVersion::V4 {
+    if !matches!(h.version, ContainerVersion::V4 | ContainerVersion::V5) {
         return Err(format!(
-            "rebuild_parity wants a v4 container, got {:?}",
+            "rebuild_parity wants a v4/v5 container, got {:?}",
             h.version
         ));
     }
     let k = h.parity_group_effective() as usize;
     if k == 0 {
-        return Err("v4 header has a zero parity group size".into());
+        return Err("v4/v5 header has a zero parity group size".into());
     }
     let mut offset = h.to_bytes().len() as u64;
     let mut group: Vec<Vec<u8>> = Vec::new();
@@ -783,10 +920,13 @@ pub fn rebuild_parity(container: &Container) -> Result<Vec<Vec<u8>>, String> {
     let mut out: Vec<Vec<u8>> = Vec::new();
     for (i, rec) in container.chunks.iter().enumerate() {
         // Hand-rolled v2+ chunk frame image: 16-byte fixed head, plan
-        // byte, outlier bytes, payload; the chunk CRC covers
-        // `plan || outlier || payload`.
-        let mut body = Vec::with_capacity(1 + rec.outlier_bytes.len() + rec.payload.len());
+        // byte, (v5) predictor byte, outlier bytes, payload; the chunk
+        // CRC covers everything after the fixed head.
+        let mut body = Vec::with_capacity(2 + rec.outlier_bytes.len() + rec.payload.len());
         body.push(rec.plan);
+        if h.version == ContainerVersion::V5 {
+            body.push(rec.predictor);
+        }
         body.extend_from_slice(&rec.outlier_bytes);
         body.extend_from_slice(&rec.payload);
         let mut f = Vec::with_capacity(16 + body.len());
@@ -847,16 +987,22 @@ pub fn decompress(container: &Container) -> Result<Vec<f32>, String> {
         ErrorBound::Rel(e) => QuantizerConfig::Rel(RelParams::new(e), h.variant, h.protection),
     };
     let mut out = Vec::with_capacity(h.n_values as usize);
-    for rec in &container.chunks {
+    for (i, rec) in container.chunks.iter().enumerate() {
         let n = rec.n_values as usize;
         let p = masked_pipeline(&h.stages, rec.plan)?;
         let words = decode_pipeline(&p, &rec.payload, n)?;
         let bitmap = rle_decode(&rec.outlier_bytes, n.div_ceil(8))?;
         let outliers = BitVec::from_bytes(&bitmap, n)?;
         let chunk = QuantizedChunk { words, outliers };
-        let y = match qc {
-            QuantizerConfig::Abs(pp, _) => dequantize_abs(&chunk, pp),
-            QuantizerConfig::Rel(pp, v, _) => dequantize_rel(&chunk, pp, v),
+        let kind = PredictorKind::from_tag(rec.predictor)
+            .ok_or_else(|| format!("chunk {i} has unknown predictor tag {}", rec.predictor))?;
+        let y = if kind != PredictorKind::None {
+            predict_dequantize(kind, &qc, &chunk)
+        } else {
+            match qc {
+                QuantizerConfig::Abs(pp, _) => dequantize_abs(&chunk, pp),
+                QuantizerConfig::Rel(pp, v, _) => dequantize_rel(&chunk, pp, v),
+            }
         };
         out.extend_from_slice(&y);
     }
@@ -913,6 +1059,40 @@ mod tests {
         assert_eq!(huffman_encode(&bytes), crate::codec::huffman::encode(&bytes));
         let p = Pipeline::default_chain();
         assert_eq!(encode_pipeline(&p, &words), p.encode(&words));
+    }
+
+    #[test]
+    fn naive_predictor_oracle_agrees_with_production() {
+        let mut x: Vec<f32> = (0..3000)
+            .map(|i| 50.0 + (i as f32 * 0.01).sin() * (i as f32 * 0.003).cos() * 20.0)
+            .collect();
+        x[100] = f32::NAN;
+        x[101] = f32::INFINITY;
+        for bound in [
+            crate::types::ErrorBound::Abs(1e-3),
+            crate::types::ErrorBound::Rel(1e-2),
+        ] {
+            let qc = QuantizerConfig::resolve(
+                bound,
+                FnVariant::Native,
+                Protection::Protected,
+                &x,
+            );
+            let rb = crate::predict::residual_bound(&qc);
+            for kind in [PredictorKind::Prev, PredictorKind::Lorenzo1D] {
+                let naive = predict_quantize(kind, &qc, &x);
+                let mut words = Vec::new();
+                let mut obits = Vec::new();
+                crate::predict::encode_chunk(kind, rb, &x, &mut words, &mut obits);
+                assert_eq!(naive.words, words, "{kind:?} {bound:?}");
+                let mut prod = vec![0.0f32; x.len()];
+                crate::predict::decode_chunk(kind, rb, &words, &obits, &mut prod).unwrap();
+                let y = predict_dequantize(kind, &qc, &naive);
+                for (i, (a, b)) in y.iter().zip(&prod).enumerate() {
+                    assert_eq!(a.to_bits(), b.to_bits(), "{kind:?} {bound:?} i={i}");
+                }
+            }
+        }
     }
 
     #[test]

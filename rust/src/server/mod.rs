@@ -519,7 +519,10 @@ fn handle_compress(
             chunk_size: cfg.chunk_size as u32,
             stages: cfg.pipeline.stages().to_vec(),
             n_chunks: records.len() as u32,
-            parity_group: if params.version == crate::container::ContainerVersion::V4 {
+            parity_group: if matches!(
+                params.version,
+                crate::container::ContainerVersion::V4 | crate::container::ContainerVersion::V5
+            ) {
                 cfg.parity_group
             } else {
                 0

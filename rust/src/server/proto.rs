@@ -44,8 +44,9 @@
 //! [epsilon f32]` with the container header's tag encodings
 //! (eb_kind 0 = ABS, 1 = REL, 2 = NOA; variant 0 = approx,
 //! 1 = native; protection 0 = protected, 1 = unprotected; version
-//! 1 | 2 | 3). Range bounds are element indices, end-exclusive, over a
-//! **v3** container (v1/v2 answer with `ERR_NOT_INDEXED`).
+//! 1 | 2 | 3 | 4 | 5). Range bounds are element indices,
+//! end-exclusive, over an indexed **v3/v4/v5** container (v1/v2 answer
+//! with `ERR_NOT_INDEXED`).
 //!
 //! # Reply types (server -> client)
 //!
@@ -309,14 +310,14 @@ pub struct CompressParams {
 }
 
 impl CompressParams {
-    /// ABS bound, protected, approx variant, v4 container — the
+    /// ABS bound, protected, approx variant, v5 container — the
     /// server-side defaults of `lc compress`.
     pub fn abs(epsilon: f32) -> CompressParams {
         CompressParams {
             bound: ErrorBound::Abs(epsilon),
             variant: FnVariant::Approx,
             protection: Protection::Protected,
-            version: ContainerVersion::V4,
+            version: ContainerVersion::V5,
         }
     }
 }
@@ -341,6 +342,7 @@ fn version_tag(v: ContainerVersion) -> u8 {
         ContainerVersion::V2 => 2,
         ContainerVersion::V3 => 3,
         ContainerVersion::V4 => 4,
+        ContainerVersion::V5 => 5,
     }
 }
 
@@ -403,6 +405,7 @@ pub fn parse_compress_tail(b: &[u8]) -> Result<(CompressParams, &[u8]), String> 
         2 => ContainerVersion::V2,
         3 => ContainerVersion::V3,
         4 => ContainerVersion::V4,
+        5 => ContainerVersion::V5,
         t => return Err(format!("bad container version tag {t}")),
     };
     let data = b.get(COMPRESS_PARAMS_LEN..).unwrap_or_default();

@@ -116,19 +116,24 @@ pub struct RegionMap {
     pub file_len: usize,
 }
 
-/// Label every structural region of a serialized **v4** container. The
-/// regions come from the archive's own index (opened through the real
-/// reader), so the map stays correct by construction as the layout
-/// evolves.
+/// Label every structural region of a serialized **v4 or v5**
+/// container. The regions come from the archive's own index (opened
+/// through the real reader), so the map stays correct by construction
+/// as the layout evolves. v5 frames get one extra region per chunk:
+/// the predictor byte between the plan byte and the body.
 pub fn map_v4(bytes: &[u8]) -> Result<RegionMap, String> {
     let (_, header_len) = Header::parse_prefix(bytes)?;
     let r = Reader::from_bytes(bytes.to_vec()).map_err(|e| e.to_string())?;
-    if r.header().version != ContainerVersion::V4 {
+    if !matches!(
+        r.header().version,
+        ContainerVersion::V4 | ContainerVersion::V5
+    ) {
         return Err(format!(
-            "fault map wants a v4 container, got {:?}",
+            "fault map wants a v4/v5 container, got {:?}",
             r.header().version
         ));
     }
+    let v5 = r.header().version == ContainerVersion::V5;
     let mut regions = vec![Region {
         name: "header".into(),
         start: 0,
@@ -146,9 +151,19 @@ pub fn map_v4(bytes: &[u8]) -> Result<RegionMap, String> {
             start: o + 16,
             end: o + 17,
         });
+        let body_start = if v5 {
+            regions.push(Region {
+                name: format!("predictor.{i}"),
+                start: o + 17,
+                end: o + 18,
+            });
+            o + 18
+        } else {
+            o + 17
+        };
         regions.push(Region {
             name: format!("body.{i}"),
-            start: o + 17,
+            start: body_start,
             end: o + e.frame_len as usize,
         });
     }
@@ -375,8 +390,11 @@ mod tests {
         for w in rs.windows(2) {
             assert_eq!(w[0].end, w[1].start, "{} -> {}", w[0].name, w[1].name);
         }
-        for want in ["header", "frame_head.0", "plan.4", "body.2", "parity_head.1",
-                     "parity_data.2", "footer", "trailer", "file_crc", "marker"] {
+        // EngineConfig::native defaults to v5, so the per-chunk
+        // predictor byte must surface as its own region.
+        for want in ["header", "frame_head.0", "plan.4", "predictor.1", "body.2",
+                     "parity_head.1", "parity_data.2", "footer", "trailer",
+                     "file_crc", "marker"] {
             assert!(map.regions.iter().any(|r| r.name == want), "{want}");
         }
     }

@@ -13,12 +13,12 @@ use super::{Check, Diagnostic};
 
 /// Byte-literal magics that must be written out exactly once, in their
 /// defining const.
-const WATCHED_MAGICS: [&str; 9] = [
-    "LCZ1", "LCZ2", "LCZ3", "LCZ4", "LCPF", "LCS1", "LCX3", "LCX4", "LCZ4FIN\n",
+const WATCHED_MAGICS: [&str; 10] = [
+    "LCZ1", "LCZ2", "LCZ3", "LCZ4", "LCZ5", "LCPF", "LCS1", "LCX3", "LCX4", "LCZ4FIN\n",
 ];
 
 /// Layout constants that must have exactly one definition repo-wide.
-const WATCHED_CONSTS: [&str; 12] = [
+const WATCHED_CONSTS: [&str; 13] = [
     "FRAME_HEADER_LEN",
     "REQUEST_PREFIX_LEN",
     "COMPRESS_PARAMS_LEN",
@@ -29,6 +29,7 @@ const WATCHED_CONSTS: [&str; 12] = [
     "PARITY_FRAME_FIXED",
     "CHUNK_FRAME_HEADER_LEN",
     "CHUNK_FRAME_HEADER_LEN_V2",
+    "CHUNK_FRAME_HEADER_LEN_V5",
     "HEADER_FIXED_LEN",
     "DEFAULT_PARITY_GROUP",
 ];
@@ -336,8 +337,9 @@ fn check_proto_docs(
     }
 }
 
-/// The container doc anchors: v1 header, chunk frame header, footer
-/// entry table, parity frame fixed head, parity entry, v4 trailer.
+/// The container doc anchors: v1 header, chunk frame header, v5 frame
+/// head, footer entry table, parity frame fixed head, parity entry,
+/// v4 trailer.
 fn check_container_docs(
     sf: &mut ScannedFile,
     diags: &mut Vec<Diagnostic>,
@@ -373,6 +375,34 @@ fn check_container_docs(
     }
     if !any_cfh {
         emit(sf, diags, 0, "missing doc anchor: chunk frame header layout".into());
+    }
+
+    // "[`CHUNK_FRAME_HEADER_LEN_V5`] = NN bytes" — the v5 frame head
+    // is the v1 head plus the plan and predictor bytes.
+    match docs
+        .iter()
+        .find(|(_, t)| t.contains("CHUNK_FRAME_HEADER_LEN_V5") && t.contains(" bytes"))
+    {
+        Some((ln, t)) => {
+            if let (Some(doc), Some(base)) =
+                (int_before(t, " bytes"), value_of("CHUNK_FRAME_HEADER_LEN"))
+            {
+                if doc != base + 2 {
+                    let msg = format!(
+                        "v5 frame head documented as {doc} bytes; CHUNK_FRAME_HEADER_LEN \
+                         plus the plan and predictor bytes is {}",
+                        base + 2
+                    );
+                    emit(sf, diags, *ln, msg);
+                }
+            }
+        }
+        None => emit(
+            sf,
+            diags,
+            0,
+            "missing doc anchor: CHUNK_FRAME_HEADER_LEN_V5 size phrase".into(),
+        ),
     }
 
     // "Each NN-byte footer entry" + the | field | type | table.

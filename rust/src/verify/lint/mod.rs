@@ -69,8 +69,10 @@
 //!   `wire-consts` duplicate scan. `delims` and `safety-comment`
 //!   apply everywhere.
 //! * The designated `panic-free` / `range-index` fault surface:
-//!   everything under `container/` and `fsio/` (the crash-consistent
-//!   write path and its fault-injecting simulation),
+//!   everything under `container/`, `fsio/` (the crash-consistent
+//!   write path and its fault-injecting simulation), and `predict/`
+//!   (the closed-loop residual quantizer, which must hold its error
+//!   bound without panicking on any input),
 //!   `archive/{reader,repair,index}.rs`, `coordinator/stream.rs`,
 //!   `codec/{rle,huffman}.rs`, and `server/{conn,proto}.rs`.
 //! * The `float-cast` domain: everything under `quantizer/` and
@@ -307,7 +309,7 @@ pub(crate) fn is_designated(path: &str) -> bool {
     let segs = path_segments(path);
     let has_dir = |d: &str| segs.iter().rev().skip(1).any(|s| *s == d);
     let file = segs.last().copied().unwrap_or("");
-    if has_dir("container") || has_dir("fsio") {
+    if has_dir("container") || has_dir("fsio") || has_dir("predict") {
         return true;
     }
     (has_dir("archive") && matches!(file, "reader.rs" | "repair.rs" | "index.rs"))
@@ -341,6 +343,8 @@ mod tests {
         assert!(!is_designated("src/codec/bitshuffle.rs"));
         assert!(is_designated("src/server/proto.rs"));
         assert!(!is_designated("src/server/drain.rs"));
+        assert!(is_designated("rust/src/predict/mod.rs"));
+        assert!(is_designated("src/predict/lorenzo.rs"));
         assert!(is_float_domain("rust/src/quantizer/abs.rs"));
         assert!(is_float_domain("src/simd/rel.rs"));
         assert!(!is_float_domain("src/codec/rle.rs"));

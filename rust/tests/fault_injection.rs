@@ -1,4 +1,7 @@
-//! Deterministic fault-injection campaign over container v4.
+//! Deterministic fault-injection campaign over container v5 (the
+//! default write format: the full v4 parity/salvage machinery plus the
+//! per-chunk closed-loop predictor byte, which gets its own fault
+//! region).
 //!
 //! The invariant under test, for every fault in the seeded sweep
 //! (bit flips, smears, truncations, and torn tails over every
@@ -31,7 +34,7 @@ use lc::fsio::{IoFaultKind, SimVfs};
 use lc::types::ErrorBound;
 use lc::verify::faults::{io_sweep_kinds, map_v4, sweep};
 
-/// Build a v4 archive and its golden decode.
+/// Build an archive in the default (v5) format and its golden decode.
 fn golden(n: usize, chunk_size: usize, k: u32) -> (Vec<u8>, Vec<f32>) {
     let x = Suite::Cesm.generate(3, n);
     let mut cfg = EngineConfig::native(ErrorBound::Abs(1e-3));
@@ -53,7 +56,19 @@ fn le_bytes(v: &[f32]) -> Vec<u8> {
 #[test]
 fn every_fault_yields_bit_exact_data_or_a_typed_error() {
     let (bytes, y) = golden(20_000, 1024, 4);
+    // The default engine writes v5; make sure the campaign covers
+    // actual prediction-residual chunks, not just tag-0 bodies, and
+    // that the predictor byte is a faulted region of its own.
+    let c = Container::from_bytes(&bytes).expect("golden parses");
+    assert!(
+        c.chunks.iter().any(|ch| ch.predictor != 0),
+        "golden archive never picked a predictor"
+    );
     let map = map_v4(&bytes).expect("region map");
+    assert!(
+        map.regions.iter().any(|r| r.name.starts_with("predictor.")),
+        "v5 region map is missing the predictor byte regions"
+    );
     let plan = sweep(&map, 0xC0FFEE);
     assert!(plan.len() > 100, "sweep too small: {}", plan.len());
     let golden_le = le_bytes(&y);

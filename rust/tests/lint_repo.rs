@@ -90,6 +90,21 @@ fn panic_free_covers_the_fsio_crash_surface() {
 }
 
 #[test]
+fn panic_free_covers_the_predict_surface() {
+    // The closed-loop residual quantizer is designated: it must keep
+    // the error bound on every input (NaN, ±Inf, hostile tags) by
+    // returning typed errors or falling back, never by panicking.
+    let text = "fn f(x: Option<u32>) -> u32 {\n    x.unwrap()\n}\n";
+    for path in ["src/predict/mod.rs", "rust/src/predict/select.rs"] {
+        let r = lint_one(path, text);
+        assert!(has(&r, Check::PanicFree, 2), "{path}: {:?}", r.diagnostics);
+    }
+    let slice = "fn f(b: &[u8]) -> &[u8] {\n    &b[2..6]\n}\n";
+    let r = lint_one("src/predict/lorenzo.rs", slice);
+    assert!(has(&r, Check::RangeIndex, 2), "{:?}", r.diagnostics);
+}
+
+#[test]
 fn panic_free_ignores_undesignated_modules() {
     let text = "fn f(x: Option<u32>) -> u32 {\n    x.unwrap()\n}\n";
     let r = lint_one("src/tables/report.rs", text);

@@ -257,6 +257,7 @@ fn prop_scratch_engine_matches_reference_containers() {
                         ContainerVersion::V2,
                         ContainerVersion::V3,
                         ContainerVersion::V4,
+                        ContainerVersion::V5,
                     ] {
                         let mut cfg = EngineConfig::native(bound);
                         cfg.protection = protection;
@@ -305,6 +306,7 @@ fn prop_decode_paths_match_reference_bit_for_bit() {
                     ContainerVersion::V2,
                     ContainerVersion::V3,
                     ContainerVersion::V4,
+                    ContainerVersion::V5,
                 ] {
                     let mut cfg = EngineConfig::native(bound);
                     cfg.variant = variant;
@@ -841,6 +843,139 @@ fn prop_v4_reference_parity_rebuild_matches_writer() {
                 lc::coordinator::stream::compress_slice_streaming(&cfg, &x).unwrap();
             assert_eq!(streamed, bytes, "{bound:?} streaming bytes");
         }
+    }
+}
+
+/// PROPERTY (closed-loop prediction, the v5 guarantee): under EVERY
+/// predictor policy — Auto and each fixed kind — and for ABS and REL
+/// bounds, the error bound holds EXACTLY on every finite value of
+/// adversarial data (NaN, ±Inf, denormals, ±0, full exponent range —
+/// which forces residual-bin overflow and the per-value outlier
+/// fallback), constant and ramp fields (boundary bins: residuals sit
+/// exactly on bin edges), and a smooth suite; specials survive
+/// bit-for-bit; and the engine, the streaming writer/reader, and the
+/// naive `lc::reference` oracle agree byte-for-byte in both
+/// directions. This is the paper's guarantee extended to prediction:
+/// the predictor can only change the ratio, never the bound.
+#[test]
+fn prop_predictor_error_bound_holds() {
+    use lc::data::Suite;
+    use lc::predict::{PredictorChoice, ALL_PREDICTORS};
+    let mut rng = Rng::new(0x5EED_C10D);
+    let adversarial: Vec<f32> = (0..20_000).map(|_| arb_f32(&mut rng)).collect();
+    let constant = vec![-7.5f32; 12_000];
+    let ramp: Vec<f32> = (0..12_000).map(|i| i as f32 * 0.125 - 500.0).collect();
+    let smooth = Suite::Cesm.generate(3, 20_000);
+    let datasets = [
+        ("adversarial", &adversarial),
+        ("constant", &constant),
+        ("ramp", &ramp),
+        ("smooth", &smooth),
+    ];
+    let mut policies = vec![PredictorChoice::Auto];
+    policies.extend(ALL_PREDICTORS.iter().map(|&k| PredictorChoice::Fixed(k)));
+    for (name, x) in datasets {
+        for bound in [ErrorBound::Abs(1e-3), ErrorBound::Rel(1e-2)] {
+            for &policy in &policies {
+                let mut cfg = EngineConfig::native(bound);
+                cfg.container_version = ContainerVersion::V5;
+                cfg.chunk_size = 4096;
+                cfg.workers = 3;
+                cfg.predictor = policy;
+                let (container, _) = compress(&cfg, x).unwrap();
+                let bytes = container.to_bytes();
+                let (y, _) = decompress(&cfg, &container).unwrap();
+                let violations = match bound {
+                    ErrorBound::Rel(e) => lc::verify::metrics::rel_violations(x, &y, e),
+                    _ => lc::verify::metrics::abs_violations(
+                        x,
+                        &y,
+                        container.header.effective_epsilon,
+                    ),
+                };
+                assert_eq!(violations, 0, "{name} {bound:?} {policy:?}");
+                for (i, (&a, &b)) in x.iter().zip(&y).enumerate() {
+                    if !a.is_finite() {
+                        assert_eq!(
+                            a.to_bits(),
+                            b.to_bits(),
+                            "{name} {bound:?} {policy:?}: special at {i} not preserved"
+                        );
+                    }
+                }
+                // The naive oracle writes the identical container and
+                // decodes it to the identical bits.
+                let reference_c = lc::reference::compress(&cfg, x).unwrap();
+                assert_eq!(
+                    bytes,
+                    reference_c.to_bytes(),
+                    "{name} {bound:?} {policy:?}: reference bytes"
+                );
+                let ry = lc::reference::decompress(&container).unwrap();
+                let yb: Vec<u32> = y.iter().map(|v| v.to_bits()).collect();
+                let rb: Vec<u32> = ry.iter().map(|v| v.to_bits()).collect();
+                assert_eq!(yb, rb, "{name} {bound:?} {policy:?}: reference decode");
+                // So does the streaming path, in both directions.
+                let (streamed, _) =
+                    lc::coordinator::stream::compress_slice_streaming(&cfg, x).unwrap();
+                assert_eq!(streamed, bytes, "{name} {bound:?} {policy:?}: streamed bytes");
+                let (sy, _) =
+                    lc::coordinator::decompress_slice_streaming(&cfg, &bytes).unwrap();
+                let sb: Vec<u32> = sy.iter().map(|v| v.to_bits()).collect();
+                assert_eq!(sb, yb, "{name} {bound:?} {policy:?}: streamed decode");
+            }
+        }
+    }
+}
+
+/// PROPERTY (v5 archive): the reference oracle's independently rebuilt
+/// index and parity frames — which must account for the predictor byte
+/// in every chunk frame image — match the v5 writer byte-for-byte, and
+/// random access through the reader agrees with the full decode.
+#[test]
+fn prop_v5_reference_parity_and_index_rebuild_matches_writer() {
+    use lc::archive::Reader;
+    use lc::data::Suite;
+    use lc::predict::{PredictorChoice, PredictorKind};
+    let policies = [
+        PredictorChoice::Auto,
+        PredictorChoice::Fixed(PredictorKind::Prev),
+        PredictorChoice::Fixed(PredictorKind::Lorenzo1D),
+    ];
+    for (pi, policy) in policies.into_iter().enumerate() {
+        let x = Suite::Cesm.generate(pi, 30_000 + pi * 777);
+        let mut cfg = EngineConfig::native(ErrorBound::Abs(1e-3));
+        cfg.container_version = ContainerVersion::V5;
+        cfg.chunk_size = 4096;
+        cfg.parity_group = 3; // 8 chunks -> groups of 3,3,2
+        cfg.workers = 3;
+        cfg.predictor = policy;
+        let (container, _) = compress(&cfg, &x).unwrap();
+        let bytes = container.to_bytes();
+        let r = Reader::from_bytes(bytes.clone()).unwrap();
+        let rebuilt = lc::reference::rebuild_index(&container).unwrap();
+        assert_eq!(r.entries(), rebuilt.as_slice(), "{policy:?} v5 index");
+        let oracle = lc::reference::rebuild_parity(&container).unwrap();
+        assert_eq!(oracle.len(), r.parity_entries().len(), "{policy:?}");
+        for (g, (img, pe)) in oracle.iter().zip(r.parity_entries()).enumerate() {
+            assert_eq!(pe.frame_len as usize, img.len(), "{policy:?} group {g}");
+            let o = pe.offset as usize;
+            assert_eq!(
+                &bytes[o..o + img.len()],
+                &img[..],
+                "{policy:?} group {g}: oracle and writer parity bytes differ"
+            );
+        }
+        // Random access must route residual chunks through the same
+        // predictor-aware decode as the full paths.
+        let (full, _) = decompress(&cfg, &container).unwrap();
+        let slice = r.decode_range(5_000..17_000).unwrap();
+        let fb: Vec<u32> = full[5_000..17_000].iter().map(|v| v.to_bits()).collect();
+        let sb: Vec<u32> = slice.iter().map(|v| v.to_bits()).collect();
+        assert_eq!(fb, sb, "{policy:?} random access");
+        let (streamed, _) =
+            lc::coordinator::stream::compress_slice_streaming(&cfg, &x).unwrap();
+        assert_eq!(streamed, bytes, "{policy:?} streaming bytes");
     }
 }
 

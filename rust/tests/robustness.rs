@@ -52,6 +52,7 @@ fn truncated_containers_error_cleanly() {
         ContainerVersion::V2,
         ContainerVersion::V3,
         ContainerVersion::V4,
+        ContainerVersion::V5,
     ] {
         let (cfg, bytes, _) = sample_container_versioned(10_000, version);
         // Dense near the front (header framing), strided through the
@@ -91,6 +92,7 @@ fn short_outlier_bitmap_errors_cleanly() {
         ContainerVersion::V2,
         ContainerVersion::V3,
         ContainerVersion::V4,
+        ContainerVersion::V5,
     ] {
         let (cfg, bytes, _) = sample_container_versioned(10_000, version);
         let mut container = Container::from_bytes(&bytes).unwrap();
@@ -518,4 +520,42 @@ fn v4_two_corrupt_frames_in_one_group_are_unrecoverable_but_contained() {
     assert_eq!(bits(&a), bits(&golden[..3 * 1024]));
     let b = r.decode_range(6 * 1024..12_000).unwrap();
     assert_eq!(bits(&b), bits(&golden[6 * 1024..]));
+}
+
+/// v5 hostile bytes: an unknown predictor tag — with every CRC
+/// recomputed so the framing itself is valid — is a typed error on the
+/// strict-parse, streaming, and indexed decode paths, and the
+/// diagnostic surfaces (`plan_histogram`, the `lc inspect` predictor
+/// rendering) describe unknown future bits instead of panicking.
+#[test]
+fn v5_unknown_predictor_tag_is_typed_on_every_path() {
+    let (cfg, bytes, _) = sample_container_versioned(10_000, ContainerVersion::V5);
+    let mut container = Container::from_bytes(&bytes).unwrap();
+    container.chunks[1].predictor = 9; // claimed by no PredictorKind
+    let evil = container.to_bytes(); // chunk/file CRCs recomputed
+    let err = Container::from_bytes(&evil).unwrap_err();
+    assert!(err.contains("unknown predictor tag"), "{err}");
+    let e = decompress_slice_streaming(&cfg, &evil).unwrap_err();
+    assert!(
+        format!("{e:#}").contains("unknown predictor tag"),
+        "streaming: {e:#}"
+    );
+    // The indexed path: the footer parses (it carries no predictor),
+    // but decoding the poisoned chunk must fail typed — parity
+    // "repair" XORs back the same hostile frame, so the tag check is
+    // the last line of defense.
+    if let Ok(r) = lc::archive::Reader::from_bytes(evil.clone()) {
+        assert!(
+            r.decode_range(0..r.n_values()).is_err(),
+            "indexed decode accepted an unknown predictor tag"
+        );
+    }
+    // Diagnostics stay total over hostile bytes: the plan histogram
+    // covers all 256 plan values, and the inspect rendering's tag
+    // lookup refuses (rather than misnames) unknown predictors.
+    container.chunks[0].plan = 0xAB;
+    let hist = container.plan_histogram();
+    assert!(hist[0xAB] >= 1);
+    assert_eq!(hist.iter().sum::<usize>(), container.chunks.len());
+    assert!(lc::predict::PredictorKind::from_tag(9).is_none());
 }
